@@ -1,0 +1,48 @@
+//! Multi-partitioning over a 4-platform chain (paper §V-C): two
+//! Eyeriss-like platforms near the sensor, two Simba-like platforms
+//! towards the central unit, all linked by Gigabit Ethernet — e.g. the
+//! automotive zonal-gateway topology the paper motivates.
+//!
+//!     cargo run --release --example multi_platform [model]
+//!
+//! Prints the NSGA-II Pareto front and the Table II partition histogram
+//! for the chosen model (default: efficientnet_b0, the paper's largest
+//! beneficiary of >2 partitions).
+
+use partir::config::SystemConfig;
+use partir::explorer::multi::{explore_chain, partition_histogram};
+use partir::report;
+use partir::zoo;
+
+fn main() {
+    let model = std::env::args().nth(1).unwrap_or_else(|| "efficientnet_b0".into());
+    let graph = zoo::build(&model).unwrap_or_else(|| {
+        eprintln!("unknown model {model}; available: {:?}", zoo::names());
+        std::process::exit(2);
+    });
+    println!("{}\n", graph.summary());
+
+    let system = SystemConfig::paper_four_platform();
+    println!(
+        "chain: {} over {}, Pareto metrics: {:?}\n",
+        system
+            .platforms
+            .iter()
+            .map(|p| format!("{}({})", p.name, p.accelerator.name))
+            .collect::<Vec<_>>()
+            .join(" -> "),
+        system.link.name,
+        system.pareto_metrics.iter().map(|m| m.name()).collect::<Vec<_>>(),
+    );
+
+    let ex = explore_chain(&graph, &system);
+    print!("{}", report::render_exploration(&ex, &system));
+
+    let hist = partition_histogram(&ex, system.platforms.len());
+    println!("\nTable II row for {model}:");
+    println!("  1 partition: {}   2: {}   3: {}   4: {}", hist[0], hist[1], hist[2], hist[3]);
+    let multi: usize = hist[1..].iter().sum();
+    if multi > 0 {
+        println!("  -> {multi} of {} near-optimal schedules split the network", ex.pareto.len());
+    }
+}

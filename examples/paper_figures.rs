@@ -1,0 +1,15 @@
+//! Regenerate every table and figure of the paper's evaluation (§V)
+//! into `reports/`:
+//!
+//!     cargo run --release --example paper_figures [--fast]
+//!
+//! Fig 2(a–f) per-model partitioning series, Fig 3 memory analysis,
+//! Table II partition histogram. See DESIGN.md's per-experiment index
+//! and EXPERIMENTS.md for measured-vs-paper comparisons.
+
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    let fast = std::env::args().any(|a| a == "--fast");
+    partir::report::paper::generate_all(Path::new("reports"), fast)
+}

@@ -1,0 +1,44 @@
+//! Quickstart: partition a small CNN over the paper's two-platform
+//! system (Eyeriss-like "EYR" → Gigabit Ethernet → Simba-like "SMB")
+//! and print the Pareto-optimal partitioning points.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! This exercises the whole public DSE API in ~30 lines: build a model
+//! graph, describe the system, explore, inspect the result.
+
+use partir::config::SystemConfig;
+use partir::explorer::explore_two_platform;
+use partir::report;
+use partir::zoo;
+
+fn main() {
+    // 1. The workload: any zoo model works; the tiny CNN also has real
+    //    AOT artifacts (see the pipeline_serving example).
+    let graph = zoo::build("squeezenet1_1").expect("zoo model");
+    println!("{}\n", graph.summary());
+
+    // 2. The system: platform A (EYR, 16-bit) feeds platform B (SMB,
+    //    8-bit) over Gigabit Ethernet — the paper's §V-A setup.
+    let system = SystemConfig::paper_two_platform();
+
+    // 3. Explore: enumerate Definition-1 partitioning points, filter on
+    //    memory/link constraints, evaluate latency/energy/throughput/
+    //    accuracy per point, and run NSGA-II for the Pareto front.
+    let exploration = explore_two_platform(&graph, &system);
+
+    // 4. Inspect.
+    print!("{}", report::render_exploration(&exploration, &system));
+    if let Some((label, gain)) = report::throughput_gain(&exploration) {
+        println!("\npipelining at {label} beats the best single platform by {gain:.1}%");
+    }
+    let favorite = exploration.favorite_metrics().expect("feasible candidate");
+    println!(
+        "chosen point: {} — {:.2} ms, {:.2} mJ, {:.1} inf/s, top-1 {:.2}%",
+        favorite.label,
+        favorite.latency_s * 1e3,
+        favorite.energy_j * 1e3,
+        favorite.throughput,
+        favorite.top1
+    );
+}

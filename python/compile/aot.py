@@ -1,0 +1,237 @@
+"""AOT bridge: train the tiny CNN, quantize it, and export every
+partition segment as HLO **text** for the Rust PJRT runtime.
+
+Run once by `make artifacts` (python never executes on the request
+path):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Interchange format is HLO text, not serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published `xla` crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. Trained weights are baked into
+the HLO as constants, so each artifact is a single-input function.
+
+Exports, per batch size in {1, 8}:
+  * `full_fp32`                    — whole network
+  * `stageA_fp32_bd{1,2,3}`        — blocks [0, b) (platform A side)
+  * `stageB_fp32_bd{1,2,3}`        — blocks [b, 4) (platform B side)
+  * `stageA_q16_bd{b}` / `stageB_q8_bd{b}` — the EYR(16b)/SMB(8b)
+    mixed-precision assignment of the paper's two-platform system
+  * `full_q8`, `full_q16`          — single-platform quantized references
+plus `manifest.json`, the held-out test set (`testset_*.bin`) and the
+training/accuracy metadata the Rust side reports against.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels import ref
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def export_fn(fn, example, path):
+    lowered = jax.jit(fn).lower(example)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return os.path.getsize(path)
+
+
+def segment_fn(params, start, stop, bits, scales):
+    """Close over trained params: single-input segment function.
+
+    The export path routes convs through the L1 Pallas kernel so the
+    hot-spot's lowering lands in the artifact HLO.
+    """
+
+    def fn(x):
+        return (
+            model.forward_blocks(
+                params,
+                x,
+                start=start,
+                stop=stop,
+                bits=bits,
+                scales=scales,
+                use_pallas=True,
+            ),
+        )
+
+    return fn
+
+
+def self_check(params, scales8, data):
+    """Refuse to export if the Pallas path diverges from the reference."""
+    x = data[0][:4]
+    for bits, scales in ((None, None), (8, scales8)):
+        a = model.forward(params, x, bits=bits, scales=scales, use_pallas=True)
+        b = model.forward(params, x, bits=bits, scales=scales, use_pallas=False)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+    # Stage composition == full network.
+    for bd in (1, 2, 3):
+        h = model.forward_blocks(params, x, 0, bd, use_pallas=True)
+        y = model.forward_blocks(params, h, bd, model.NUM_BLOCKS, use_pallas=True)
+        full = model.forward(params, x, use_pallas=True)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(full), rtol=2e-4, atol=2e-4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--train-steps", type=int, default=400)
+    ap.add_argument("--qat-steps", type=int, default=150)
+    ap.add_argument("--quick", action="store_true", help="tiny training run for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    if args.quick:
+        args.train_steps, args.qat_steps = 40, 20
+
+    os.makedirs(args.out, exist_ok=True)
+    t0 = time.time()
+
+    # ---- train ---------------------------------------------------------
+    train_data, test_data = model.make_dataset(4096, 1024, seed=args.seed)
+    params = model.init_params(jax.random.PRNGKey(args.seed))
+    params, losses = model.train(params, train_data, steps=args.train_steps)
+    acc_fp32 = model.evaluate(params, test_data)
+    print(f"[aot] fp32 trained: loss {losses[0]:.3f}->{losses[-1]:.4f} "
+          f"top1 {acc_fp32:.2f}% ({time.time()-t0:.0f}s)", flush=True)
+
+    # ---- calibrate + PTQ + QAT ----------------------------------------
+    calib = train_data[0][:256]
+    scales8 = model.calibrate(params, calib, 8)
+    scales16 = model.calibrate(params, calib, 16)
+    acc_ptq8 = model.evaluate(params, test_data, bits=8, scales=scales8)
+    acc_ptq16 = model.evaluate(params, test_data, bits=16, scales=scales16)
+    qat_params, _ = model.train(
+        dict(params), train_data, steps=args.qat_steps, bits=8, scales=scales8, lr=2e-4
+    )
+    acc_qat8 = model.evaluate(qat_params, test_data, bits=8, scales=scales8)
+    print(f"[aot] ptq8 {acc_ptq8:.2f}% ptq16 {acc_ptq16:.2f}% qat8 {acc_qat8:.2f}%",
+          flush=True)
+
+    self_check(params, scales8, train_data)
+
+    # ---- export --------------------------------------------------------
+    artifacts = []
+
+    def emit(name, fn, batch, in_shape, out_shape, **meta):
+        path = f"{name}.hlo.txt"
+        example = jax.ShapeDtypeStruct((batch, *in_shape), jnp.float32)
+        size = export_fn(fn, example, os.path.join(args.out, path))
+        artifacts.append(
+            {
+                "name": name,
+                "path": path,
+                "batch": batch,
+                "input_shape": list(in_shape),
+                "output_shape": list(out_shape),
+                "bytes": size,
+                **meta,
+            }
+        )
+        print(f"[aot]   wrote {path} ({size//1024} KiB)", flush=True)
+
+    in_shape = model.INPUT_SHAPE
+    out_shape = (model.NUM_CLASSES,)
+    for batch in (1, 8):
+        emit(
+            f"full_fp32_n{batch}",
+            segment_fn(params, 0, model.NUM_BLOCKS, None, None),
+            batch, in_shape, out_shape, role="full", bits=None, boundary=None,
+        )
+        emit(
+            f"full_q8_n{batch}",
+            segment_fn(qat_params, 0, model.NUM_BLOCKS, 8, scales8),
+            batch, in_shape, out_shape, role="full", bits=8, boundary=None,
+        )
+        emit(
+            f"full_q16_n{batch}",
+            segment_fn(params, 0, model.NUM_BLOCKS, 16, scales16),
+            batch, in_shape, out_shape, role="full", bits=16, boundary=None,
+        )
+        for bd in (1, 2, 3):
+            mid = model.BOUNDARY_SHAPES[bd]
+            emit(
+                f"stageA_fp32_bd{bd}_n{batch}",
+                segment_fn(params, 0, bd, None, None),
+                batch, in_shape, mid, role="stageA", bits=None, boundary=bd,
+            )
+            emit(
+                f"stageB_fp32_bd{bd}_n{batch}",
+                segment_fn(params, bd, model.NUM_BLOCKS, None, None),
+                batch, mid, out_shape, role="stageB", bits=None, boundary=bd,
+            )
+            emit(
+                f"stageA_q16_bd{bd}_n{batch}",
+                segment_fn(params, 0, bd, 16, scales16),
+                batch, in_shape, mid, role="stageA", bits=16, boundary=bd,
+            )
+            emit(
+                f"stageB_q8_bd{bd}_n{batch}",
+                segment_fn(qat_params, bd, model.NUM_BLOCKS, 8, scales8),
+                batch, mid, out_shape, role="stageB", bits=8, boundary=bd,
+            )
+
+    # ---- test set ------------------------------------------------------
+    x_test, y_test = test_data
+    np.asarray(x_test, dtype=np.float32).tofile(os.path.join(args.out, "testset_images.bin"))
+    np.asarray(y_test, dtype=np.uint8).tofile(os.path.join(args.out, "testset_labels.bin"))
+
+    manifest = {
+        "model": "tiny_cnn",
+        "input_shape": list(in_shape),
+        "classes": model.NUM_CLASSES,
+        "param_count": model.param_count(params),
+        "boundaries": {
+            str(b): {"position": model.BOUNDARY_POSITIONS[b],
+                     "shape": list(model.BOUNDARY_SHAPES[b])}
+            for b in (1, 2, 3)
+        },
+        "accuracy": {
+            "fp32": acc_fp32,
+            "ptq8": acc_ptq8,
+            "ptq16": acc_ptq16,
+            "qat8": acc_qat8,
+        },
+        "train": {
+            "steps": args.train_steps,
+            "qat_steps": args.qat_steps,
+            "seed": args.seed,
+            "final_loss": losses[-1],
+        },
+        "testset": {
+            "images": "testset_images.bin",
+            "labels": "testset_labels.bin",
+            "count": int(x_test.shape[0]),
+            "image_shape": list(in_shape),
+        },
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] done: {len(artifacts)} artifacts in {args.out} "
+          f"({time.time()-t0:.0f}s total)", flush=True)
+
+
+if __name__ == "__main__":
+    main()

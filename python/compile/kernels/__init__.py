@@ -1,0 +1,17 @@
+"""L1: Pallas kernels for the partitioned-inference compute hot-spot.
+
+`quant_matmul` / `conv2d_im2col` / `fake_quant` are the Pallas
+implementations (interpret=True, CPU-executable HLO); `ref` holds the
+pure-jnp oracles pytest checks them against.
+"""
+
+from . import ref
+from .quant_matmul import conv2d_im2col, fake_quant, quant_matmul, vmem_report
+
+__all__ = [
+    "ref",
+    "conv2d_im2col",
+    "fake_quant",
+    "quant_matmul",
+    "vmem_report",
+]

@@ -1,0 +1,139 @@
+"""L1 Pallas kernels: tiled matmul with fused bias + fake quantization.
+
+The inference hot-spot of the partitioned CNN is convolution lowered to
+an im2col matmul. The Pallas kernel tiles the (M, K) x (K, N) product
+into VMEM-resident blocks, accumulates over the K grid axis in the
+output tile, and fuses the bias add and the symmetric fake-quantization
+of the output (the operation the embedded accelerators of the paper
+perform in their quantized datapaths).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): block shapes default to
+(128, 128, 128) — MXU-aligned (multiples of (8, 128) for f32) — and the
+grid walks K innermost so the output tile stays resident in VMEM while
+partial products accumulate (the VMEM analogue of the accelerators'
+output-stationary register-file accumulation). `interpret=True`
+everywhere: the CPU PJRT client cannot execute Mosaic custom-calls, and
+the AOT bridge requires plain-HLO lowering.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _quant_matmul_kernel(x_ref, w_ref, b_ref, o_ref, *, nsteps, bits, scale):
+    """One (bm, bn) output tile; grid axis 2 runs over K blocks."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += x_ref[...] @ w_ref[...]
+
+    @pl.when(k == nsteps - 1)
+    def _finish():
+        y = o_ref[...] + b_ref[...]
+        if bits is not None:
+            lo = -(2.0 ** (bits - 1))
+            hi = 2.0 ** (bits - 1) - 1.0
+            y = jnp.clip(jnp.round(y / scale), lo, hi) * scale
+        o_ref[...] = y
+
+
+def _pad_to(x, rows, cols):
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, cols - x.shape[1])))
+
+
+@functools.partial(
+    jax.jit, static_argnames=("scale", "bits", "block_m", "block_n", "block_k")
+)
+def quant_matmul(x, w, b, scale=1.0, bits=None, block_m=128, block_n=128, block_k=128):
+    """(M, K) @ (K, N) + b with optional fused fake quantization.
+
+    Shapes are padded up to block multiples; the valid region is sliced
+    back out, so arbitrary M/K/N are supported.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims {k} != {k2}"
+    assert b.shape == (n,), f"bias shape {b.shape}"
+
+    bm, bn, bk = (min(block_m, m), min(block_n, n), min(block_k, k))
+    mp, np_, kp = (-m % bm + m, -n % bn + n, -k % bk + k)
+    xp = _pad_to(x, mp, kp)
+    wp = _pad_to(w, kp, np_)
+    bp = jnp.pad(b, (0, np_ - n))[None, :]
+
+    nsteps = kp // bk
+    grid = (mp // bm, np_ // bn, nsteps)
+    out = pl.pallas_call(
+        functools.partial(
+            _quant_matmul_kernel, nsteps=nsteps, bits=bits, scale=scale
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), x.dtype),
+        interpret=True,
+    )(xp, wp, bp)
+    return out[:m, :n]
+
+
+def _fake_quant_kernel(x_ref, o_ref, *, bits, scale):
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    o_ref[...] = jnp.clip(jnp.round(x_ref[...] / scale), lo, hi) * scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "scale", "block"))
+def fake_quant(x, bits, scale, block=1024):
+    """Elementwise symmetric fake quantization as a Pallas kernel."""
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    bs = min(block, n)
+    npad = -n % bs + n
+    xp = jnp.pad(flat, (0, npad - n)).reshape(npad // bs, bs)
+    out = pl.pallas_call(
+        functools.partial(_fake_quant_kernel, bits=bits, scale=scale),
+        grid=(npad // bs,),
+        in_specs=[pl.BlockSpec((1, bs), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((1, bs), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((npad // bs, bs), x.dtype),
+        interpret=True,
+    )(xp)
+    return out.reshape(-1)[:n].reshape(x.shape)
+
+
+def conv2d_im2col(x, w, b, stride=1, padding=1, bits=None, scale=1.0):
+    """Convolution via im2col + the Pallas quant-matmul hot-spot.
+
+    x: (N, C, H, W); w: (O, I, KH, KW); b: (O,). Returns (N, O, OH, OW).
+    """
+    n = x.shape[0]
+    o, _, kh, kw = w.shape
+    cols, (oh, ow) = ref.im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(o, -1).T  # (C*KH*KW, O)
+    y = quant_matmul(cols, wmat, b, scale=scale, bits=bits)
+    return y.reshape(n, oh, ow, o).transpose(0, 3, 1, 2)
+
+
+def vmem_report(m, k, n, block_m=128, block_n=128, block_k=128, dtype_bytes=4):
+    """Static VMEM footprint estimate for one grid step (§Perf, L1).
+
+    Returns (bytes_per_step, mxu_utilization_estimate) for the chosen
+    blocking on a 128x128 MXU.
+    """
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    tiles = (bm * bk + bk * bn + bm * bn + bn) * dtype_bytes
+    # MXU issue efficiency: fraction of the 128-lane systolic array used.
+    mxu = min(bm, 128) / 128.0 * min(bn, 128) / 128.0 * min(bk, 128) / 128.0
+    return tiles, mxu

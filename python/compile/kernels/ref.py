@@ -1,0 +1,79 @@
+"""Pure-jnp reference oracle for the Pallas kernels (L1 correctness).
+
+Every kernel in this package has a reference implementation here built
+only from documented jax.numpy / lax primitives. pytest (and hypothesis)
+assert allclose between kernel and reference across shapes and bit
+widths; the AOT path refuses to export if the self-check fails.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def fake_quant(x, bits, scale):
+    """Symmetric per-tensor fake quantization.
+
+    q = clip(round(x / scale), -2^(b-1), 2^(b-1) - 1) * scale
+    """
+    lo = -(2.0 ** (bits - 1))
+    hi = 2.0 ** (bits - 1) - 1.0
+    q = jnp.clip(jnp.round(x / scale), lo, hi)
+    return q * scale
+
+
+def calibrate_scale(x, bits):
+    """Max-abs calibration: scale so the observed range maps onto the grid."""
+    hi = 2.0 ** (bits - 1) - 1.0
+    amax = jnp.maximum(jnp.max(jnp.abs(x)), 1e-8)
+    return amax / hi
+
+
+def matmul(a, b):
+    """Plain f32 matmul, (M, K) @ (K, N) -> (M, N)."""
+    return jnp.matmul(a, b)
+
+
+def matmul_bias_quant(a, b, bias, bits, scale):
+    """The fused hot-spot: matmul + bias + fake-quantized output."""
+    y = jnp.matmul(a, b) + bias[None, :]
+    return fake_quant(y, bits, scale)
+
+
+def conv2d(x, w, b, stride=1, padding=1):
+    """NCHW conv with OIHW weights + bias. Reference for the im2col path."""
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return y + b[None, :, None, None]
+
+
+def maxpool2(x):
+    """2x2/2 max pooling, NCHW."""
+    return jax.lax.reduce_window(
+        x,
+        -jnp.inf,
+        jax.lax.max,
+        window_dimensions=(1, 1, 2, 2),
+        window_strides=(1, 1, 2, 2),
+        padding="VALID",
+    )
+
+
+def im2col(x, kh, kw, stride=1, padding=1):
+    """Extract conv patches: (N, C, H, W) -> (N*OH*OW, C*KH*KW)."""
+    n = x.shape[0]
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )  # (N, C*KH*KW, OH, OW)
+    ckk = patches.shape[1]
+    oh, ow = patches.shape[2], patches.shape[3]
+    cols = patches.transpose(0, 2, 3, 1).reshape(n * oh * ow, ckk)
+    return cols, (oh, ow)

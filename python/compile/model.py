@@ -1,0 +1,264 @@
+"""L2: the executable tiny CNN in JAX (build-time only).
+
+Layer-for-layer mirror of `rust/src/zoo/tiny.rs` — 3×32×32 input, three
+conv(3x3, pad 1) → ReLU → maxpool(2) blocks with 16/32/64 channels, then
+flatten → linear(10). The forward pass is segmentable at the block
+boundaries, which map onto the Rust explorer's schedule positions
+(3, 6, 9); `python/compile/aot.py` exports each segment as an HLO
+artifact that the Rust runtime loads.
+
+The export path routes every convolution through the L1 Pallas
+`conv2d_im2col` kernel so the hot-spot lowers into the artifact HLO; the
+training path uses the jnp reference ops (pallas interpret mode is too
+slow to train through) — pytest asserts both paths agree.
+
+Quantization: symmetric per-tensor fake quant on weights and
+activations, max-abs calibrated; QAT uses a straight-through estimator.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv2d_im2col, ref
+
+CHANNELS = (16, 32, 64)
+INPUT_SHAPE = (3, 32, 32)
+NUM_CLASSES = 10
+NUM_BLOCKS = 4  # three conv blocks + classifier block
+# Rust schedule positions of the block boundaries (after each MaxPool).
+BOUNDARY_POSITIONS = {1: 3, 2: 6, 3: 9}
+# Feature-map shape at each boundary.
+BOUNDARY_SHAPES = {1: (16, 16, 16), 2: (32, 8, 8), 3: (64, 4, 4)}
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(key):
+    """He-initialized parameters, a dict of {w, b} leaves per layer."""
+    keys = jax.random.split(key, 4)
+    params = {}
+    c_in = INPUT_SHAPE[0]
+    for i, c_out in enumerate(CHANNELS):
+        fan_in = c_in * 9
+        params[f"conv{i}"] = {
+            "w": jax.random.normal(keys[i], (c_out, c_in, 3, 3), jnp.float32)
+            * jnp.sqrt(2.0 / fan_in),
+            "b": jnp.zeros((c_out,), jnp.float32),
+        }
+        c_in = c_out
+    feat = CHANNELS[-1] * 4 * 4
+    params["fc"] = {
+        "w": jax.random.normal(keys[3], (feat, NUM_CLASSES), jnp.float32)
+        * jnp.sqrt(1.0 / feat),
+        "b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+    return params
+
+
+def param_count(params):
+    return sum(int(np.prod(v.shape)) for layer in params.values() for v in layer.values())
+
+
+# --------------------------------------------------------------------------
+# Quantization helpers
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def ste_fake_quant(x, bits, scale):
+    """Fake quantization with a straight-through gradient (QAT)."""
+    return ref.fake_quant(x, bits, scale)
+
+
+def _ste_fwd(x, bits, scale):
+    return ref.fake_quant(x, bits, scale), None
+
+
+def _ste_bwd(bits, scale, _res, g):
+    return (g,)
+
+
+ste_fake_quant.defvjp(_ste_fwd, _ste_bwd)
+
+
+def calibrate(params, x, bits):
+    """Max-abs activation/weight scales from a calibration batch.
+
+    Returns {site: scale} for weight sites `conv{i}.w`, `fc.w` and
+    activation sites `act{block}` (block outputs) plus `input`.
+    """
+    scales = {"input": float(ref.calibrate_scale(x, bits))}
+    for i in range(3):
+        scales[f"conv{i}.w"] = float(ref.calibrate_scale(params[f"conv{i}"]["w"], bits))
+    scales["fc.w"] = float(ref.calibrate_scale(params["fc"]["w"], bits))
+    h = x
+    for i in range(3):
+        h = ref.conv2d(h, params[f"conv{i}"]["w"], params[f"conv{i}"]["b"])
+        h = jax.nn.relu(h)
+        h = ref.maxpool2(h)
+        scales[f"act{i}"] = float(ref.calibrate_scale(h, bits))
+    logits = h.reshape(h.shape[0], -1) @ params["fc"]["w"] + params["fc"]["b"]
+    scales["act3"] = float(ref.calibrate_scale(logits, bits))
+    return scales
+
+
+# --------------------------------------------------------------------------
+# Forward (segmentable)
+# --------------------------------------------------------------------------
+
+def _quant(x, bits, scale, ste):
+    if bits is None:
+        return x
+    if ste:
+        return ste_fake_quant(x, bits, scale)
+    return ref.fake_quant(x, bits, scale)
+
+
+def forward_blocks(
+    params,
+    x,
+    start=0,
+    stop=NUM_BLOCKS,
+    bits=None,
+    scales=None,
+    use_pallas=False,
+    ste=False,
+):
+    """Run blocks [start, stop). Block i<3 = conv→relu→pool; block 3 =
+    flatten→fc. `bits`/`scales` enable fake quantization of weights and
+    block outputs; `use_pallas` routes convs through the L1 kernel."""
+    assert 0 <= start < stop <= NUM_BLOCKS
+    h = x
+    if bits is not None and start == 0:
+        h = _quant(h, bits, scales["input"], ste)
+    for i in range(start, min(stop, 3)):
+        w = params[f"conv{i}"]["w"]
+        b = params[f"conv{i}"]["b"]
+        if bits is not None:
+            w = _quant(w, bits, scales[f"conv{i}.w"], ste)
+        if use_pallas:
+            h = conv2d_im2col(h, w, b)
+        else:
+            h = ref.conv2d(h, w, b)
+        h = jax.nn.relu(h)
+        h = ref.maxpool2(h)
+        if bits is not None:
+            h = _quant(h, bits, scales[f"act{i}"], ste)
+    if stop == NUM_BLOCKS:
+        w = params["fc"]["w"]
+        if bits is not None:
+            w = _quant(w, bits, scales["fc.w"], ste)
+        h = h.reshape(h.shape[0], -1) @ w + params["fc"]["b"]
+    return h
+
+
+def forward(params, x, bits=None, scales=None, use_pallas=False, ste=False):
+    return forward_blocks(params, x, 0, NUM_BLOCKS, bits, scales, use_pallas, ste)
+
+
+# --------------------------------------------------------------------------
+# Synthetic dataset (ImageNet stand-in; see DESIGN.md substitutions)
+# --------------------------------------------------------------------------
+
+def make_dataset(n_train, n_test, seed=0):
+    """10-class textured-blob images: class template + noise, normalized.
+
+    Deterministic in `seed`. Hard enough that an untrained net scores
+    ~10% and the trained tiny CNN reaches ≳90%, with a measurable
+    quantization gap — the properties the accuracy explorer needs.
+    """
+    rng = np.random.default_rng(seed)
+    templates = rng.normal(size=(NUM_CLASSES, *INPUT_SHAPE)).astype(np.float32)
+    # Low-pass the templates so conv features are learnable.
+    for c in range(NUM_CLASSES):
+        for ch in range(INPUT_SHAPE[0]):
+            t = templates[c, ch]
+            t = 0.25 * (np.roll(t, 1, 0) + np.roll(t, -1, 0) + np.roll(t, 1, 1) + np.roll(t, -1, 1))
+            templates[c, ch] = t
+
+    def gen(n):
+        labels = rng.integers(0, NUM_CLASSES, size=n)
+        noise = rng.normal(scale=2.2, size=(n, *INPUT_SHAPE)).astype(np.float32)
+        # Random per-image gain/offset plus rare outlier pixels: makes
+        # max-abs calibration imperfect, so quantization actually costs
+        # accuracy (as it does on ImageNet).
+        gain = rng.uniform(0.6, 1.4, size=(n, 1, 1, 1)).astype(np.float32)
+        imgs = templates[labels] * gain + noise
+        outliers = rng.random(size=imgs.shape) < 0.002
+        imgs = np.where(outliers, imgs * 8.0, imgs).astype(np.float32)
+        imgs = (imgs - imgs.mean()) / (imgs.std() + 1e-6)
+        return jnp.asarray(imgs), jnp.asarray(labels)
+
+    return gen(n_train), gen(n_test)
+
+
+# --------------------------------------------------------------------------
+# Training (hand-rolled Adam; no optax in this environment)
+# --------------------------------------------------------------------------
+
+def loss_fn(params, x, y, bits=None, scales=None):
+    logits = forward(params, x, bits=bits, scales=scales, ste=bits is not None)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+
+def adam_init(params):
+    zeros = jax.tree.map(jnp.zeros_like, params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, params), "t": 0}
+
+
+def adam_step(params, state, grads, lr=1e-3, b1=0.9, b2=0.999, eps=1e-8):
+    t = state["t"] + 1
+    m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g, state["m"], grads)
+    v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g, state["v"], grads)
+    mhat_scale = 1.0 / (1 - b1**t)
+    vhat_scale = 1.0 / (1 - b2**t)
+    params = jax.tree.map(
+        lambda p, m_, v_: p - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + eps),
+        params,
+        m,
+        v,
+    )
+    return params, {"m": m, "v": v, "t": t}
+
+
+def train(params, data, steps, batch=128, lr=1e-3, bits=None, scales=None, seed=1):
+    """Adam training loop; with `bits` set this is QAT (STE gradients)."""
+    x_all, y_all = data
+    n = x_all.shape[0]
+    state = adam_init(params)
+
+    @jax.jit
+    def step(params, state, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, x, y, bits=bits, scales=scales)
+        )(params)
+        params, state = adam_step(params, state, grads, lr=lr)
+        return params, state, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    for _ in range(steps):
+        idx = rng.integers(0, n, size=batch)
+        params, state, loss = step(params, state, x_all[idx], y_all[idx])
+        losses.append(float(loss))
+    return params, losses
+
+
+def evaluate(params, data, bits=None, scales=None, batch=256):
+    """Top-1 accuracy in percent."""
+    x_all, y_all = data
+    correct = 0
+
+    @jax.jit
+    def predict(x):
+        return jnp.argmax(forward(params, x, bits=bits, scales=scales), axis=1)
+
+    for i in range(0, x_all.shape[0], batch):
+        pred = predict(x_all[i : i + batch])
+        correct += int(jnp.sum(pred == y_all[i : i + batch]))
+    return 100.0 * correct / x_all.shape[0]

@@ -1,0 +1,77 @@
+"""§Perf analysis for L1 (Pallas kernel) and L2 (JAX graph).
+
+L1: static VMEM footprint + MXU-utilization estimates per conv layer of
+the executable model under the kernel's blocking (interpret=True gives
+CPU-numpy wallclock only, which is *not* a TPU proxy — the structural
+estimate is the optimization target, per DESIGN.md).
+
+L2: HLO op histograms of the exported artifacts — checks that lowering
+fused the quant arithmetic (no stray transposes/copies beyond the
+expected im2col data movement) and reports artifact sizes.
+
+    cd python && python -m compile.perf [--artifacts ../artifacts]
+"""
+
+import argparse
+import collections
+import os
+import re
+
+from . import model
+from .kernels import vmem_report
+
+
+def l1_report(block=128):
+    print(f"[L1] quant_matmul blocking {block}^3, f32 (per grid step)")
+    print(f"{'conv':<8} {'M':>7} {'K':>6} {'N':>5} {'vmem':>10} {'mxu est':>8}")
+    h = w = model.INPUT_SHAPE[1]
+    c_in = model.INPUT_SHAPE[0]
+    for i, c_out in enumerate(model.CHANNELS):
+        m_dim = h * w  # batch 1: one patch row per output pixel
+        k_dim = c_in * 9
+        bytes_, mxu = vmem_report(m_dim, k_dim, c_out, block, block, block)
+        print(f"conv{i:<4} {m_dim:>7} {k_dim:>6} {c_out:>5} {bytes_/1024:>8.1f}KB {mxu:>8.3f}")
+        h //= 2
+        w //= 2
+        c_in = c_out
+    total_vmem, _ = vmem_report(1024, 1024, 1024, block, block, block)
+    print(f"[L1] upper-bound step footprint {total_vmem/1024:.0f} KiB "
+          f"(16 MiB VMEM budget -> {100*total_vmem/(16<<20):.1f}% used)")
+
+
+def l2_report(artifacts_dir):
+    if not os.path.isdir(artifacts_dir):
+        print(f"[L2] no artifacts at {artifacts_dir}; run `make artifacts`")
+        return
+    op_re = re.compile(r"^\s+\S+ = \S+ ([a-z0-9-]+)\(")
+    for name in ("full_fp32_n1", "full_q8_n1", "stageA_q16_bd2_n8"):
+        path = os.path.join(artifacts_dir, f"{name}.hlo.txt")
+        if not os.path.exists(path):
+            continue
+        ops = collections.Counter()
+        with open(path) as f:
+            for line in f:
+                mm = op_re.match(line)
+                if mm:
+                    ops[mm.group(1)] += 1
+        size = os.path.getsize(path)
+        top = ", ".join(f"{k}x{v}" for k, v in ops.most_common(8))
+        print(f"[L2] {name}: {size//1024} KiB, {sum(ops.values())} ops ({top})")
+        # Fusion sanity: interpret-mode pallas introduces loop scaffolding
+        # (while/dynamic-update-slice); the quant math itself must appear
+        # as plain elementwise ops, not custom calls.
+        assert ops.get("custom-call", 0) == 0, f"{name}: custom-call leaked into HLO"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    ap.add_argument("--block", type=int, default=128)
+    args = ap.parse_args()
+    l1_report(args.block)
+    print()
+    l2_report(args.artifacts)
+
+
+if __name__ == "__main__":
+    main()

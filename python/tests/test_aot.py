@@ -1,0 +1,94 @@
+"""AOT bridge tests: HLO text emission and manifest contract.
+
+The full `python -m compile.aot` run (training included) is exercised by
+`make artifacts`; these tests cover the export machinery itself on
+untrained parameters so they stay fast.
+"""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+def test_to_hlo_text_basic():
+    def fn(x):
+        return (jnp.tanh(x) * 2.0,)
+
+    lowered = jax.jit(fn).lower(jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered)
+    assert "ENTRY" in text
+    assert "f32[4,4]" in text
+
+
+def test_export_fn_writes_file(tmp_path, params):
+    fn = aot.segment_fn(params, 0, 1, None, None)
+    path = tmp_path / "seg.hlo.txt"
+    size = aot.export_fn(fn, jax.ShapeDtypeStruct((1, *model.INPUT_SHAPE), jnp.float32), str(path))
+    assert size > 1000
+    text = path.read_text()
+    assert "ENTRY" in text
+    # Weights are baked in as constants: the entry computation takes the
+    # input tensor only. (Nested reduce/fusion regions have their own
+    # parameter numbering, so check the entry layout signature.)
+    assert "entry_computation_layout={(f32[1,3,32,32]{3,2,1,0})->" in text
+
+
+def test_segment_fn_output_shape(params):
+    fn = aot.segment_fn(params, 0, 2, None, None)
+    x = jnp.zeros((2, *model.INPUT_SHAPE))
+    (y,) = fn(x)
+    assert y.shape == (2, *model.BOUNDARY_SHAPES[2])
+
+
+def test_segment_fn_quantized(params):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, *model.INPUT_SHAPE)).astype(np.float32))
+    scales = model.calibrate(params, x, 8)
+    fn = aot.segment_fn(params, 0, model.NUM_BLOCKS, 8, scales)
+    (y,) = fn(x)
+    yr = model.forward(params, x, bits=8, scales=scales)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-4, atol=2e-4)
+
+
+def test_self_check_passes_on_consistent_params(params):
+    data = model.make_dataset(16, 8, seed=2)[0]
+    scales = model.calibrate(params, data[0][:8], 8)
+    aot.self_check(params, scales, data)
+
+
+def test_manifest_exists_after_make_artifacts():
+    """If `make artifacts` ran, its manifest must satisfy the contract
+    the Rust runtime depends on."""
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built yet")
+    with open(path) as f:
+        m = json.load(f)
+    assert m["model"] == "tiny_cnn"
+    assert m["classes"] == model.NUM_CLASSES
+    assert set(m["boundaries"]) == {"1", "2", "3"}
+    roles = {a["role"] for a in m["artifacts"]}
+    assert roles == {"full", "stageA", "stageB"}
+    for a in m["artifacts"]:
+        f = os.path.join(os.path.dirname(path), a["path"])
+        assert os.path.exists(f), a["path"]
+    # Stage pairs exist for every boundary and batch.
+    for bd in (1, 2, 3):
+        for batch in (1, 8):
+            assert any(
+                a["role"] == "stageA" and a["boundary"] == bd and a["batch"] == batch
+                for a in m["artifacts"]
+            )
+    ts = m["testset"]
+    imgs = os.path.join(os.path.dirname(path), ts["images"])
+    assert os.path.getsize(imgs) == ts["count"] * int(np.prod(ts["image_shape"])) * 4

@@ -1,0 +1,214 @@
+"""L1 kernel correctness: Pallas vs pure-jnp reference (pytest + hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_im2col, fake_quant, quant_matmul, ref, vmem_report
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape):
+    return jnp.asarray(RNG.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+class TestQuantMatmul:
+    def test_plain_matmul_matches_ref(self):
+        a, b, bias = randn(64, 48), randn(48, 32), randn(32)
+        y = quant_matmul(a, b, bias, block_m=32, block_n=16, block_k=16)
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.matmul(a, b) + bias[None, :]),
+                            rtol=1e-5, atol=1e-5)
+
+    def test_fused_quant_matches_ref(self):
+        a, b, bias = randn(33, 29), randn(29, 17), randn(17)
+        yr = ref.matmul(a, b) + bias[None, :]
+        s = float(ref.calibrate_scale(yr, 8))
+        y = quant_matmul(a, b, bias, scale=s, bits=8, block_m=16, block_n=16, block_k=16)
+        npt.assert_allclose(np.asarray(y),
+                            np.asarray(ref.matmul_bias_quant(a, b, bias, 8, s)),
+                            rtol=1e-5, atol=1e-5)
+
+    def test_single_block(self):
+        a, b, bias = randn(8, 8), randn(8, 8), randn(8)
+        y = quant_matmul(a, b, bias, block_m=128, block_n=128, block_k=128)
+        npt.assert_allclose(np.asarray(y), np.asarray(a @ b + bias[None, :]),
+                            rtol=1e-5, atol=1e-5)
+
+    def test_quantized_output_is_on_grid(self):
+        a, b, bias = randn(16, 16), randn(16, 16), randn(16)
+        s = 0.125
+        y = np.asarray(quant_matmul(a, b, bias, scale=s, bits=8,
+                                    block_m=8, block_n=8, block_k=8))
+        q = y / s
+        npt.assert_allclose(q, np.round(q), atol=1e-4)
+        assert q.max() <= 127.0 and q.min() >= -128.0
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 70),
+        n=st.integers(1, 70),
+        bm=st.sampled_from([8, 16, 32]),
+        bk=st.sampled_from([8, 16, 32]),
+        bn=st.sampled_from([8, 16, 32]),
+    )
+    def test_hypothesis_shapes(self, m, k, n, bm, bk, bn):
+        rng = np.random.default_rng(m * 10007 + k * 101 + n)
+        a = jnp.asarray(rng.normal(size=(m, k)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(k, n)).astype(np.float32))
+        bias = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        y = quant_matmul(a, b, bias, block_m=bm, block_n=bn, block_k=bk)
+        npt.assert_allclose(np.asarray(y), np.asarray(a @ b) + np.asarray(bias)[None, :],
+                            rtol=2e-4, atol=2e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bits=st.sampled_from([4, 6, 8, 16]))
+    def test_hypothesis_bit_widths(self, bits):
+        a, b, bias = randn(24, 24), randn(24, 24), randn(24)
+        yr = ref.matmul(a, b) + bias[None, :]
+        s = float(ref.calibrate_scale(yr, bits))
+        y = quant_matmul(a, b, bias, scale=s, bits=bits, block_m=8, block_n=8, block_k=8)
+        npt.assert_allclose(np.asarray(y),
+                            np.asarray(ref.fake_quant(yr, bits, s)), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# fake_quant
+# ---------------------------------------------------------------------------
+
+class TestFakeQuant:
+    def test_matches_ref(self):
+        x = randn(37, 13)
+        y = fake_quant(x, 8, 0.05)
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.fake_quant(x, 8, 0.05)),
+                            rtol=1e-6, atol=1e-6)
+
+    def test_idempotent(self):
+        x = randn(100)
+        once = fake_quant(x, 8, 0.1)
+        twice = fake_quant(once, 8, 0.1)
+        npt.assert_allclose(np.asarray(once), np.asarray(twice), atol=1e-6)
+
+    def test_16bit_nearly_identity(self):
+        x = randn(64, 64)
+        s = float(ref.calibrate_scale(x, 16))
+        y = fake_quant(x, 16, s)
+        npt.assert_allclose(np.asarray(y), np.asarray(x), atol=2 * s)
+
+    def test_clipping_at_range(self):
+        x = jnp.asarray(np.array([10.0, -10.0, 0.0], np.float32))
+        y = np.asarray(fake_quant(x, 8, 0.01))
+        assert y[0] == pytest.approx(127 * 0.01)
+        assert y[1] == pytest.approx(-128 * 0.01)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        n=st.integers(1, 3000),
+        bits=st.sampled_from([4, 8, 16]),
+        block=st.sampled_from([64, 256, 1024]),
+    )
+    def test_hypothesis_sizes(self, n, bits, block):
+        rng = np.random.default_rng(n)
+        x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+        s = float(ref.calibrate_scale(x, bits))
+        y = fake_quant(x, bits, s, block=block)
+        # Values landing exactly on a .5 grid tie may round differently
+        # between the two lowering paths (1-ULP f32 effects): allow one
+        # quantization step of absolute difference.
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.fake_quant(x, bits, s)),
+                            rtol=1e-5, atol=1.01 * s)
+
+
+# ---------------------------------------------------------------------------
+# conv2d_im2col
+# ---------------------------------------------------------------------------
+
+class TestConvIm2col:
+    def test_matches_lax_conv(self):
+        x, w, b = randn(2, 3, 16, 16), randn(8, 3, 3, 3), randn(8)
+        y = conv2d_im2col(x, w, b)
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.conv2d(x, w, b)),
+                            rtol=1e-4, atol=1e-4)
+
+    def test_stride_2(self):
+        x, w, b = randn(1, 4, 17, 17), randn(6, 4, 3, 3), randn(6)
+        y = conv2d_im2col(x, w, b, stride=2, padding=1)
+        yr = ref.conv2d(x, w, b, stride=2, padding=1)
+        assert y.shape == yr.shape == (1, 6, 9, 9)
+        npt.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-4)
+
+    def test_quantized_conv(self):
+        x, w, b = randn(1, 3, 8, 8), randn(4, 3, 3, 3), randn(4)
+        yr = ref.conv2d(x, w, b)
+        s = float(ref.calibrate_scale(yr, 8))
+        y = conv2d_im2col(x, w, b, bits=8, scale=s)
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.fake_quant(yr, 8, s)),
+                            rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        n=st.integers(1, 3),
+        c=st.integers(1, 5),
+        o=st.integers(1, 6),
+        hw=st.integers(4, 12),
+        k=st.sampled_from([1, 3, 5]),
+    )
+    def test_hypothesis_conv_shapes(self, n, c, o, hw, k):
+        rng = np.random.default_rng(n * 1000 + c * 100 + o * 10 + hw + k)
+        pad = (k - 1) // 2
+        x = jnp.asarray(rng.normal(size=(n, c, hw, hw)).astype(np.float32))
+        w = jnp.asarray(rng.normal(size=(o, c, k, k)).astype(np.float32))
+        b = jnp.asarray(rng.normal(size=(o,)).astype(np.float32))
+        y = conv2d_im2col(x, w, b, padding=pad)
+        npt.assert_allclose(np.asarray(y), np.asarray(ref.conv2d(x, w, b, padding=pad)),
+                            rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# structural / §Perf helpers
+# ---------------------------------------------------------------------------
+
+class TestVmemReport:
+    def test_default_blocking_fits_vmem(self):
+        # One step of the default 128^3 blocking must fit in 16 MiB VMEM.
+        bytes_, mxu = vmem_report(1024, 1024, 1024)
+        assert bytes_ < 16 * 1024 * 1024
+        assert mxu == 1.0
+
+    def test_small_problem_underutilizes(self):
+        _, mxu = vmem_report(8, 8, 8)
+        assert mxu < 0.01
+
+    def test_footprint_scales_with_blocks(self):
+        small, _ = vmem_report(1024, 1024, 1024, 32, 32, 32)
+        big, _ = vmem_report(1024, 1024, 1024, 256, 256, 256)
+        assert big > small
+
+
+class TestLoweringToHlo:
+    def test_pallas_kernel_lowers_to_plain_hlo(self):
+        """The AOT contract: interpret-mode Pallas lowers to HLO the CPU
+        PJRT client can execute (no Mosaic custom-calls)."""
+        from jax._src.lib import xla_client as xc
+
+        def fn(a, b, bias):
+            return (quant_matmul(a, b, bias, block_m=8, block_n=8, block_k=8),)
+
+        spec = jax.ShapeDtypeStruct((16, 16), jnp.float32)
+        bspec = jax.ShapeDtypeStruct((16,), jnp.float32)
+        lowered = jax.jit(fn).lower(spec, spec, bspec)
+        mlir_mod = lowered.compiler_ir("stablehlo")
+        comp = xc._xla.mlir.mlir_module_to_xla_computation(
+            str(mlir_mod), use_tuple_args=False, return_tuple=True
+        )
+        text = comp.as_hlo_text()
+        assert "custom-call" not in text.lower() or "Mosaic" not in text
+        assert "ENTRY" in text

@@ -1,0 +1,111 @@
+"""L2 model tests: shapes, segment composition, quantization, training."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import numpy.testing as npt
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(KEY)
+
+
+@pytest.fixture(scope="module")
+def data():
+    return model.make_dataset(256, 128, seed=3)
+
+
+def test_param_count_matches_rust_zoo(params):
+    # rust/src/zoo/tiny.rs asserts the same total.
+    assert model.param_count(params) == 448 + 4640 + 18496 + 10250
+
+
+def test_forward_shapes(params):
+    x = jnp.zeros((5, *model.INPUT_SHAPE))
+    y = model.forward(params, x)
+    assert y.shape == (5, model.NUM_CLASSES)
+
+
+def test_boundary_shapes(params):
+    x = jnp.zeros((2, *model.INPUT_SHAPE))
+    for bd, shape in model.BOUNDARY_SHAPES.items():
+        h = model.forward_blocks(params, x, 0, bd)
+        assert h.shape == (2, *shape), f"boundary {bd}"
+
+
+def test_segment_composition_equals_full(params):
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(3, *model.INPUT_SHAPE)).astype(np.float32))
+    full = model.forward(params, x)
+    for bd in (1, 2, 3):
+        h = model.forward_blocks(params, x, 0, bd)
+        y = model.forward_blocks(params, h, bd, model.NUM_BLOCKS)
+        npt.assert_allclose(np.asarray(y), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_pallas_path_matches_ref_path(params):
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, *model.INPUT_SHAPE)).astype(np.float32))
+    a = model.forward(params, x, use_pallas=True)
+    b = model.forward(params, x, use_pallas=False)
+    npt.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+def test_quantized_forward_differs_but_correlates(params, data):
+    (x, _), _ = data
+    x = x[:16]
+    scales = model.calibrate(params, x, 8)
+    y = model.forward(params, x)
+    yq = model.forward(params, x, bits=8, scales=scales)
+    assert not np.allclose(np.asarray(y), np.asarray(yq))
+    # Predictions mostly agree at 8 bits.
+    agree = np.mean(np.argmax(np.asarray(y), 1) == np.argmax(np.asarray(yq), 1))
+    assert agree > 0.7
+
+
+def test_calibration_covers_all_sites(params, data):
+    (x, _), _ = data
+    scales = model.calibrate(params, x[:32], 8)
+    expected = {"input", "conv0.w", "conv1.w", "conv2.w", "fc.w", "act0", "act1", "act2", "act3"}
+    assert set(scales) == expected
+    assert all(s > 0 for s in scales.values())
+
+
+def test_ste_gradient_passes_through():
+    x = jnp.asarray([0.3, -0.7, 1.2])
+    g = jax.grad(lambda t: jnp.sum(model.ste_fake_quant(t, 8, 0.1)))(x)
+    npt.assert_allclose(np.asarray(g), np.ones(3))
+
+
+def test_training_reduces_loss(data):
+    train, _ = data
+    p = model.init_params(jax.random.PRNGKey(7))
+    p, losses = model.train(p, train, steps=30, batch=64)
+    assert losses[-1] < losses[0]
+
+
+def test_dataset_determinism():
+    a = model.make_dataset(64, 32, seed=5)
+    b = model.make_dataset(64, 32, seed=5)
+    npt.assert_array_equal(np.asarray(a[0][0]), np.asarray(b[0][0]))
+    npt.assert_array_equal(np.asarray(a[1][1]), np.asarray(b[1][1]))
+    c = model.make_dataset(64, 32, seed=6)
+    assert not np.allclose(np.asarray(a[0][0]), np.asarray(c[0][0]))
+
+
+def test_dataset_is_balanced_enough():
+    (_, y), _ = model.make_dataset(2000, 10, seed=0)
+    counts = np.bincount(np.asarray(y), minlength=10)
+    assert counts.min() > 100
+
+
+def test_evaluate_untrained_is_chance_level(data):
+    _, test = data
+    p = model.init_params(jax.random.PRNGKey(9))
+    acc = model.evaluate(p, test)
+    assert acc < 35.0  # 10 classes, untrained

@@ -1,0 +1,52 @@
+//! Bench: baseline-scheduler comparison — the quantitative version of
+//! the paper's related-work argument (§II, Table I; §V-B: "This shows
+//! the advantages of our approach over AxoNN and CNNParted, which do not
+//! explicitly include throughput in their search").
+//!
+//!     cargo bench --bench baselines
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::config::SystemConfig;
+use partir::explorer::{baselines, explore_two_platform};
+use partir::zoo;
+
+fn main() {
+    let mut sys = SystemConfig::paper_two_platform();
+    if common::fast_mode() {
+        sys.search.victory = 15;
+        sys.search.max_samples = 150;
+    }
+    for model in ["resnet50", "efficientnet_b0", "squeezenet1_1"] {
+        common::section(&format!("{model}: what each strategy's choice costs"));
+        let g = zoo::build(model).unwrap();
+        let ex = explore_two_platform(&g, &sys);
+        let rows = baselines::compare_all(&ex);
+        println!(
+            "{:<20} {:<16} {:>10} {:>11} {:>13} {:>7}",
+            "strategy", "chosen point", "latency", "energy", "throughput", "top-1"
+        );
+        let ours_tput = rows
+            .iter()
+            .find(|r| r.name == "ours(throughput)")
+            .map(|r| r.throughput)
+            .unwrap_or(0.0);
+        for r in &rows {
+            let loss = if ours_tput > 0.0 {
+                format!("{:+.0}%", 100.0 * (r.throughput - ours_tput) / ours_tput)
+            } else {
+                "-".into()
+            };
+            println!(
+                "{:<20} {:<16} {:>10} {:>11} {:>9.1} i/s {:>6.2}%  (tput vs ours {loss})",
+                r.name,
+                r.label,
+                common::fmt(r.latency_s),
+                partir::util::units::fmt_energy_j(r.energy_j),
+                r.throughput,
+                r.top1,
+            );
+        }
+    }
+}

@@ -1,0 +1,46 @@
+//! Shared mini bench harness (criterion substitute for this offline
+//! build): warmup + timed iterations, mean/min/MAD reporting, and a
+//! tabular printer used by every bench target.
+
+use std::time::Instant;
+
+/// Time `f` over `iters` iterations after `warmup` runs; returns
+/// per-iteration seconds (mean, min, mad).
+pub fn bench<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let min = samples.iter().cloned().fold(f64::INFINITY, f64::min);
+    let mad = partir::util::stats::mad(&samples);
+    (mean, min, mad)
+}
+
+/// Row printer: `name  mean ± mad  (min)`.
+pub fn report(name: &str, mean: f64, min: f64, mad: f64) {
+    println!(
+        "{name:<44} {:>12} ± {:<10} (min {})",
+        fmt(mean),
+        fmt(mad),
+        fmt(min)
+    );
+}
+
+pub fn fmt(s: f64) -> String {
+    partir::util::units::fmt_time_s(s)
+}
+
+/// `PARTIR_BENCH_FAST=1` trims budgets for CI smoke runs.
+pub fn fast_mode() -> bool {
+    std::env::var("PARTIR_BENCH_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

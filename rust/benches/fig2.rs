@@ -1,0 +1,34 @@
+//! Bench: regenerate Fig 2 (a–f) — the per-model two-platform
+//! partitioning series — and report exploration wall time per model
+//! plus the paper's headline throughput gains.
+//!
+//!     cargo bench --bench fig2
+//!
+//! Outputs: reports/fig2*.csv (same files as `partir report`).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::report::paper;
+use std::path::Path;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let fast = common::fast_mode();
+    common::section("Fig 2: two-platform exploration per model (EYR -> GbE -> SMB)");
+    let t0 = Instant::now();
+    let gains = paper::fig2(Path::new("reports"), fast)?;
+    println!("\ntotal fig2 regeneration: {}", common::fmt(t0.elapsed().as_secs_f64()));
+
+    common::section("headline: pipelined throughput gain over best single platform");
+    println!("{:<18} {:>8}  paper reference", "model", "gain");
+    for (model, gain) in &gains {
+        let paper_ref = match model.as_str() {
+            "resnet50" => "+29% (Fig 2b, ReLu_11)",
+            "efficientnet_b0" => "+47.5% (Fig 2e, Conv_45)",
+            _ => "-",
+        };
+        println!("{model:<18} {gain:>+7.1}%  {paper_ref}");
+    }
+    Ok(())
+}

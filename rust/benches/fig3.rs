@@ -1,0 +1,54 @@
+//! Bench: Fig 3 — EfficientNet-B0 per-platform memory demand over all
+//! partitioning points on two 16-bit platforms, plus timing of the
+//! Definition-3 estimator itself.
+//!
+//!     cargo bench --bench fig3
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::graph::topo::{topo_sort, TieBreak};
+use partir::memory;
+use partir::report::paper;
+use partir::zoo;
+use std::path::Path;
+
+fn main() -> anyhow::Result<()> {
+    common::section("Fig 3: EfficientNet-B0 memory vs partition point (two 16-bit platforms)");
+    paper::fig3(Path::new("reports"))?;
+
+    // The paper's reading: memory grows with later partitioning; knees
+    // near Conv_56 / Conv_79. Print the series' key points.
+    let g = zoo::efficientnet_b0(1000);
+    let order = topo_sort(&g, TieBreak::Deterministic);
+    let total = g.len();
+    println!("\n{:<12} {:>10} {:>10}", "cut", "mem A", "mem B");
+    for frac in [0.1, 0.3, 0.5, 0.7, 0.9] {
+        let pos = ((total as f64 * frac) as usize).min(total - 2);
+        let ma = memory::segment_memory_bytes(&g, &order, 0..pos + 1, 16);
+        let mb = memory::segment_memory_bytes(&g, &order, pos + 1..total, 16);
+        println!(
+            "{:<12} {:>10} {:>10}",
+            g.node(order[pos]).name,
+            partir::util::units::fmt_bytes(ma),
+            partir::util::units::fmt_bytes(mb)
+        );
+    }
+
+    common::section("Definition-3 estimator micro-bench");
+    for name in ["squeezenet1_1", "resnet50", "efficientnet_b0"] {
+        let g = zoo::build(name).unwrap();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let mid = g.len() / 2;
+        let (mean, min, mad) = common::bench(3, if common::fast_mode() { 20 } else { 200 }, || {
+            std::hint::black_box(memory::segment_memory_bytes(
+                &g,
+                &order,
+                0..mid,
+                16,
+            ));
+        });
+        common::report(&format!("segment_memory_bytes({name})"), mean, min, mad);
+    }
+    Ok(())
+}

@@ -1,0 +1,71 @@
+//! Bench: the Timeloop-like mapping search (the DSE's hot path) plus the
+//! victory-condition ablation called out in DESIGN.md — how search budget
+//! trades mapping quality (EDP) against wall time, mirroring the paper's
+//! Timeloop setting of "linear-pruned search, victory condition 100".
+//!
+//!     cargo bench --bench mapper
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::hw::{mapper, presets, ConvWorkload, SearchCfg};
+use partir::zoo;
+
+fn workloads() -> Vec<(String, ConvWorkload)> {
+    let mut out = Vec::new();
+    for (model, layer) in [
+        ("resnet50", "Conv_0"),   // 7x7 stem, large spatial
+        ("resnet50", "Conv_10"),  // 1x1 bottleneck
+        ("vgg16", "Conv_5"),      // 3x3 256-ch, reuse-rich
+        ("efficientnet_b0", "Conv_1"), // depthwise
+        ("resnet50", "Gemm_0"),   // FC, memory-bound
+    ] {
+        let g = zoo::build(model).unwrap();
+        let node = g.by_name(layer).unwrap();
+        out.push((
+            format!("{model}/{layer}"),
+            ConvWorkload::from_node(&g, node).unwrap(),
+        ));
+    }
+    out
+}
+
+fn main() {
+    let iters = if common::fast_mode() { 3 } else { 15 };
+    common::section("map_layer search time (victory=100, max_samples=4000)");
+    let cfg = SearchCfg::default();
+    for (name, wl) in workloads() {
+        for acc in [presets::eyeriss_like(), presets::simba_like()] {
+            let (mean, min, mad) = common::bench(1, iters, || {
+                std::hint::black_box(mapper::map_layer(&acc, &wl, &cfg));
+            });
+            common::report(&format!("{name} on {}", acc.name), mean, min, mad);
+        }
+    }
+
+    common::section("victory-condition ablation (EYR, vgg16/Conv_5)");
+    let g = zoo::vgg16(1000);
+    let wl = ConvWorkload::from_node(&g, g.by_name("Conv_5").unwrap()).unwrap();
+    let acc = presets::eyeriss_like();
+    println!(
+        "{:>8} {:>12} {:>12} {:>14} {:>10}",
+        "victory", "latency", "energy", "EDP", "time"
+    );
+    let mut base_edp = None;
+    for victory in [10usize, 25, 50, 100, 200, 400] {
+        let cfg = SearchCfg { victory, max_samples: 20_000, ..Default::default() };
+        let t = std::time::Instant::now();
+        let cost = mapper::map_layer(&acc, &wl, &cfg);
+        let dt = t.elapsed().as_secs_f64();
+        let edp = cost.latency_s * cost.energy_j;
+        let rel = base_edp.get_or_insert(edp);
+        println!(
+            "{victory:>8} {:>12} {:>12} {:>13.3}x {:>10}",
+            common::fmt(cost.latency_s),
+            partir::util::units::fmt_energy_j(cost.energy_j),
+            edp / *rel,
+            common::fmt(dt)
+        );
+    }
+    println!("(EDP relative to victory=10; diminishing returns justify the paper's 100)");
+}

@@ -1,0 +1,118 @@
+//! Bench: the L3 pipeline coordinator — batching sweep, backpressure,
+//! link-simulation overhead, and (when artifacts exist) the real
+//! two-stage AOT pipeline measured against its Definition-4 prediction.
+//!
+//!     cargo bench --bench pipeline
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::runtime::Manifest;
+use std::path::Path;
+use std::time::Duration;
+
+fn sim_stage(name: &str, per_item_us: u64) -> StageSpec {
+    StageSpec {
+        name: name.into(),
+        compute: StageComputeSpec::Simulated {
+            base: Duration::from_micros(100),
+            per_item: Duration::from_micros(per_item_us),
+            out_elems: 64,
+            fail_every: None,
+        },
+        out_bytes_per_item: 2048,
+    }
+}
+
+fn main() {
+    let n = if common::fast_mode() { 64 } else { 256 };
+    common::section(format!("batch-size sweep, 2 simulated stages, {n} requests").as_str());
+    println!("{:>6} {:>14} {:>12} {:>12}", "batch", "throughput", "p50", "p99");
+    for batch in [1usize, 2, 4, 8, 16] {
+        let cfg = PipelineCfg {
+            max_batch: batch,
+            batch_wait: Duration::from_micros(500),
+            simulate_link: true,
+            ..Default::default()
+        };
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; 64]).collect();
+        let r = run_pipeline(vec![sim_stage("a", 300), sim_stage("b", 300)], &cfg, inputs);
+        println!(
+            "{batch:>6} {:>10.1} i/s {:>12} {:>12}",
+            r.throughput(),
+            common::fmt(r.latency_percentile(50.0)),
+            common::fmt(r.latency_percentile(99.0))
+        );
+    }
+
+    common::section("queue-depth (backpressure) sweep");
+    println!("{:>6} {:>14} {:>12}", "depth", "throughput", "p99");
+    for depth in [1usize, 4, 16, 64] {
+        let cfg = PipelineCfg {
+            max_batch: 8,
+            batch_wait: Duration::from_micros(500),
+            queue_depth: depth,
+            simulate_link: true,
+            ..Default::default()
+        };
+        let inputs: Vec<Vec<f32>> = (0..n).map(|_| vec![0.0; 64]).collect();
+        let r = run_pipeline(vec![sim_stage("a", 200), sim_stage("b", 400)], &cfg, inputs);
+        println!(
+            "{depth:>6} {:>10.1} i/s {:>12}",
+            r.throughput(),
+            common::fmt(r.latency_percentile(99.0))
+        );
+    }
+
+    // Real artifacts, if built.
+    let dir = Path::new("artifacts");
+    let Ok(m) = Manifest::load(dir) else {
+        println!("\n(artifacts not built; skipping the real AOT pipeline — run `make artifacts`)");
+        return;
+    };
+    common::section("real AOT pipeline (boundary sweep, quantized 16b/8b)");
+    let ts = m.load_testset().unwrap();
+    let reqs = if common::fast_mode() { 32 } else { 128 };
+    let inputs: Vec<Vec<f32>> = (0..reqs).map(|i| ts.image(i % ts.count).to_vec()).collect();
+    println!(
+        "{:>9} {:>14} {:>12} {:>12} {:>10}",
+        "boundary", "throughput", "p50", "p99", "fill A"
+    );
+    for bd in 1..=3usize {
+        let mid: usize = m.boundaries[&bd].shape.iter().product();
+        let pick = |role: &str, bits: Option<u32>| {
+            vec![
+                m.find(role, bits, Some(bd), 1).unwrap().clone(),
+                m.find(role, bits, Some(bd), 8).unwrap().clone(),
+            ]
+        };
+        let stages = vec![
+            StageSpec {
+                name: "A".into(),
+                compute: StageComputeSpec::Artifacts {
+                    dir: dir.to_path_buf(),
+                    metas: pick("stageA", Some(16)),
+                },
+                out_bytes_per_item: (mid * 2) as u64,
+            },
+            StageSpec {
+                name: "B".into(),
+                compute: StageComputeSpec::Artifacts {
+                    dir: dir.to_path_buf(),
+                    metas: pick("stageB", Some(8)),
+                },
+                out_bytes_per_item: 0,
+            },
+        ];
+        let cfg = PipelineCfg { batch_wait: Duration::from_millis(1), ..Default::default() };
+        let r = run_pipeline(stages, &cfg, inputs.clone());
+        println!(
+            "{bd:>9} {:>10.1} i/s {:>12} {:>12} {:>10.2}",
+            r.throughput(),
+            common::fmt(r.latency_percentile(50.0)),
+            common::fmt(r.latency_percentile(99.0)),
+            r.stages[0].mean_batch()
+        );
+    }
+}

@@ -1,0 +1,59 @@
+//! Bench: Table II — number of partitions in near-optimal schedules for
+//! a 4-accelerator chain (EYR, EYR, SMB, SMB over GbE), all six models,
+//! Pareto over latency / energy / link bandwidth.
+//!
+//!     cargo bench --bench table2
+//!
+//! Outputs: reports/table2.csv, reports/table2.md.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::report::{paper, table2_markdown};
+use std::path::Path;
+use std::time::Instant;
+
+/// The paper's Table II, for shape comparison.
+const PAPER_ROWS: [(&str, [usize; 4]); 6] = [
+    ("squeezenet1_1", [1, 5, 7, 1]),
+    ("vgg16", [2, 8, 8, 2]),
+    ("googlenet", [2, 14, 8, 2]),
+    ("resnet50", [2, 10, 10, 5]),
+    ("regnet_x_400mf", [2, 6, 12, 13]),
+    ("efficientnet_b0", [2, 11, 18, 19]),
+];
+
+fn main() -> anyhow::Result<()> {
+    common::section("Table II: partition histogram over a 4-platform chain");
+    let t0 = Instant::now();
+    let rows = paper::table2(Path::new("reports"), common::fast_mode())?;
+    println!("\nmeasured:\n{}", table2_markdown(&rows));
+    println!("paper:");
+    for (model, counts) in PAPER_ROWS {
+        println!("| {model} | {} | {} | {} | {} |", counts[0], counts[1], counts[2], counts[3]);
+    }
+
+    // Shape comparison: fraction of near-optimal schedules that use >= 2
+    // partitions, and the multi-partition mass shift for large nets.
+    common::section("shape check: multi-partition share of the front");
+    println!("{:<18} {:>10} {:>10}", "model", "measured", "paper");
+    for (model, counts) in &rows {
+        let measured = share(counts);
+        let paper = PAPER_ROWS
+            .iter()
+            .find(|(m, _)| m == model)
+            .map(|(_, c)| share(&c.to_vec()))
+            .unwrap_or(0.0);
+        println!("{model:<18} {measured:>9.0}% {paper:>9.0}%");
+    }
+    println!("\ntotal table2 regeneration: {}", common::fmt(t0.elapsed().as_secs_f64()));
+    Ok(())
+}
+
+fn share(counts: &Vec<usize>) -> f64 {
+    let total: usize = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    100.0 * counts[1..].iter().sum::<usize>() as f64 / total as f64
+}

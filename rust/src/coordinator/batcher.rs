@@ -1,0 +1,103 @@
+//! Dynamic batching: collect requests from a channel up to a batch-size
+//! or time budget — the standard serving-system batcher, applied here to
+//! the inference pipeline's stage inputs.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// Outcome of one batch collection.
+pub enum Batch<T> {
+    /// One or more items (≤ max_batch).
+    Items(Vec<T>),
+    /// Upstream disconnected and drained.
+    Closed,
+}
+
+/// Block for the first item, then drain greedily until `max_batch` items
+/// or `max_wait` elapsed (whichever first). Never returns an empty batch.
+pub fn collect<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Batch<T> {
+    assert!(max_batch >= 1);
+    let first = match rx.recv() {
+        Ok(item) => item,
+        Err(_) => return Batch::Closed,
+    };
+    let mut items = vec![first];
+    let deadline = Instant::now() + max_wait;
+    while items.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            // Deadline passed: take whatever is already queued, no waiting.
+            match rx.try_recv() {
+                Ok(item) => items.push(item),
+                Err(_) => break,
+            }
+            continue;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(item) => items.push(item),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    Batch::Items(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::thread;
+
+    #[test]
+    fn collects_up_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        match collect(&rx, 4, Duration::from_millis(5)) {
+            Batch::Items(items) => assert_eq!(items, vec![0, 1, 2, 3]),
+            Batch::Closed => panic!("closed"),
+        }
+        match collect(&rx, 100, Duration::from_millis(5)) {
+            Batch::Items(items) => assert_eq!(items.len(), 6),
+            Batch::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    fn returns_closed_on_disconnect() {
+        let (tx, rx) = mpsc::channel::<u32>();
+        drop(tx);
+        assert!(matches!(collect(&rx, 4, Duration::from_millis(1)), Batch::Closed));
+    }
+
+    #[test]
+    fn partial_batch_after_timeout() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(1u32).unwrap();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(50));
+            let _ = tx.send(2);
+        });
+        // Wait budget is 5 ms: the second item (at 50 ms) must miss it.
+        match collect(&rx, 4, Duration::from_millis(5)) {
+            Batch::Items(items) => assert_eq!(items, vec![1]),
+            Batch::Closed => panic!("closed"),
+        }
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn blocks_for_first_item() {
+        let (tx, rx) = mpsc::channel();
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            tx.send(42u32).unwrap();
+        });
+        match collect(&rx, 4, Duration::from_millis(1)) {
+            Batch::Items(items) => assert_eq!(items, vec![42]),
+            Batch::Closed => panic!("closed"),
+        }
+        t.join().unwrap();
+    }
+}

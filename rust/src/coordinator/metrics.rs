@@ -1,0 +1,160 @@
+//! Pipeline measurement: per-request latency, per-stage busy/link time,
+//! end-to-end throughput — the quantities Definition 4 predicts and the
+//! benches compare against the analytical model.
+
+use crate::util::stats::{percentile, Summary};
+use std::time::Duration;
+
+/// One finished request.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub latency: Duration,
+    pub ok: bool,
+    /// argmax of the final logits (classifier pipelines).
+    pub prediction: Option<usize>,
+}
+
+/// Per-stage accounting filled in by the stage threads.
+#[derive(Debug, Clone, Default)]
+pub struct StageStats {
+    pub name: String,
+    pub batches: u64,
+    pub items: u64,
+    pub busy: Duration,
+    pub link: Duration,
+    pub failures: u64,
+}
+
+impl StageStats {
+    pub fn mean_batch(&self) -> f64 {
+        if self.batches == 0 {
+            0.0
+        } else {
+            self.items as f64 / self.batches as f64
+        }
+    }
+}
+
+/// Full pipeline run report.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    pub completions: Vec<Completion>,
+    pub wall: Duration,
+    pub stages: Vec<StageStats>,
+}
+
+impl PipelineReport {
+    pub fn completed(&self) -> usize {
+        self.completions.iter().filter(|c| c.ok).count()
+    }
+
+    pub fn failed(&self) -> usize {
+        self.completions.len() - self.completed()
+    }
+
+    /// End-to-end throughput over the wall clock (inferences/s).
+    pub fn throughput(&self) -> f64 {
+        self.completed() as f64 / self.wall.as_secs_f64()
+    }
+
+    pub fn latency_summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for c in self.completions.iter().filter(|c| c.ok) {
+            s.add(c.latency.as_secs_f64());
+        }
+        s
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        let xs: Vec<f64> = self
+            .completions
+            .iter()
+            .filter(|c| c.ok)
+            .map(|c| c.latency.as_secs_f64())
+            .collect();
+        percentile(&xs, p)
+    }
+
+    /// Pretty table for CLI/bench output.
+    pub fn render(&self) -> String {
+        use crate::util::units::{fmt_throughput, fmt_time_s};
+        let lat = self.latency_summary();
+        let mut out = String::new();
+        out.push_str(&format!(
+            "requests: {} ok, {} failed, wall {}\n",
+            self.completed(),
+            self.failed(),
+            fmt_time_s(self.wall.as_secs_f64())
+        ));
+        out.push_str(&format!(
+            "throughput: {}   latency mean {} p50 {} p99 {}\n",
+            fmt_throughput(self.throughput()),
+            fmt_time_s(lat.mean()),
+            fmt_time_s(self.latency_percentile(50.0)),
+            fmt_time_s(self.latency_percentile(99.0)),
+        ));
+        for s in &self.stages {
+            out.push_str(&format!(
+                "  stage {:<10} batches {:>5} (mean fill {:.2}) busy {} link {}\n",
+                s.name,
+                s.batches,
+                s.mean_batch(),
+                fmt_time_s(s.busy.as_secs_f64()),
+                fmt_time_s(s.link.as_secs_f64()),
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn report() -> PipelineReport {
+        PipelineReport {
+            completions: (0..10)
+                .map(|i| Completion {
+                    id: i,
+                    latency: Duration::from_millis(10 + i),
+                    ok: i != 3,
+                    prediction: Some(i as usize % 10),
+                })
+                .collect(),
+            wall: Duration::from_millis(100),
+            stages: vec![StageStats {
+                name: "A".into(),
+                batches: 5,
+                items: 10,
+                busy: Duration::from_millis(60),
+                link: Duration::from_millis(10),
+                failures: 1,
+            }],
+        }
+    }
+
+    #[test]
+    fn counts_and_throughput() {
+        let r = report();
+        assert_eq!(r.completed(), 9);
+        assert_eq!(r.failed(), 1);
+        assert!((r.throughput() - 90.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn latency_stats_exclude_failures() {
+        let r = report();
+        assert_eq!(r.latency_summary().count(), 9);
+        let p50 = r.latency_percentile(50.0);
+        assert!(p50 >= 0.010 && p50 <= 0.019);
+    }
+
+    #[test]
+    fn render_contains_key_fields() {
+        let s = report().render();
+        assert!(s.contains("9 ok"));
+        assert!(s.contains("stage A"));
+        assert!(s.contains("mean fill 2.00"));
+    }
+}

@@ -1,0 +1,455 @@
+//! Pipeline coordinator: execute a partitioned inference schedule as an
+//! asynchronous pipeline of platform workers connected by a (simulated)
+//! link — the runtime counterpart of Definition 4.
+//!
+//! Each platform is a stage thread with a bounded input queue
+//! (backpressure), a dynamic batcher, and a compute body: either real
+//! AOT artifacts executed via PJRT, or a simulated stage (deterministic
+//! latency per item) used by tests and latency-model ablations. The link
+//! between stages is simulated by sleeping the modelled transfer time —
+//! platforms in the paper's system are physically distinct, so
+//! wall-clock sleep reproduces the pipelining behaviour faithfully.
+//!
+//! PJRT note: the `xla` crate's client is `Rc`-based and not `Send`, so
+//! each stage thread builds its own `Engine` and compiles its artifacts
+//! in-thread; nothing PJRT-related crosses a thread boundary.
+
+pub mod batcher;
+pub mod metrics;
+
+pub use metrics::{Completion, PipelineReport, StageStats};
+
+use crate::link::LinkModel;
+use crate::runtime::{ArtifactMeta, Engine, Executable};
+use anyhow::Result;
+use batcher::Batch;
+use std::path::PathBuf;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// What a stage runs. Must be `Send` (constructed before the thread
+/// spawns, realized inside it).
+#[derive(Debug, Clone)]
+pub enum StageComputeSpec {
+    /// Compile these artifacts (same segment, different batch sizes) on
+    /// the stage's own PJRT client.
+    Artifacts { dir: PathBuf, metas: Vec<ArtifactMeta> },
+    /// Deterministic fake compute: `base + per_item × n` latency,
+    /// `out_elems` outputs per item (copied from the input, truncated or
+    /// zero-padded). `fail_every` injects an error on every n-th batch.
+    Simulated {
+        base: Duration,
+        per_item: Duration,
+        out_elems: usize,
+        fail_every: Option<u64>,
+    },
+}
+
+/// One pipeline stage (= one platform of the chain).
+#[derive(Debug, Clone)]
+pub struct StageSpec {
+    pub name: String,
+    pub compute: StageComputeSpec,
+    /// Payload bytes per item sent to the next stage (for link timing).
+    pub out_bytes_per_item: u64,
+}
+
+/// Pipeline-wide configuration.
+#[derive(Debug, Clone)]
+pub struct PipelineCfg {
+    pub link: LinkModel,
+    pub max_batch: usize,
+    pub batch_wait: Duration,
+    /// Bounded queue depth between stages (backpressure).
+    pub queue_depth: usize,
+    /// Sleep the modelled link time (true for end-to-end measurements;
+    /// false for pure compute benchmarks).
+    pub simulate_link: bool,
+}
+
+impl Default for PipelineCfg {
+    fn default() -> Self {
+        Self {
+            link: LinkModel::gigabit_ethernet(),
+            max_batch: 8,
+            batch_wait: Duration::from_millis(2),
+            queue_depth: 32,
+            simulate_link: true,
+        }
+    }
+}
+
+/// A request travelling through the pipeline.
+#[derive(Debug)]
+struct Item {
+    id: u64,
+    data: Vec<f32>,
+    submitted: Instant,
+    ok: bool,
+}
+
+enum StageBody {
+    Real(Vec<Executable>),
+    Sim { base: Duration, per_item: Duration, out_elems: usize, fail_every: Option<u64> },
+}
+
+impl StageBody {
+    fn realize(spec: &StageComputeSpec) -> Result<Self> {
+        match spec {
+            StageComputeSpec::Artifacts { dir, metas } => {
+                let engine = Engine::cpu()?;
+                let mut exes: Vec<Executable> =
+                    metas.iter().map(|m| engine.load(dir, m)).collect::<Result<_>>()?;
+                exes.sort_by_key(|e| e.meta.batch);
+                anyhow::ensure!(!exes.is_empty(), "stage has no artifacts");
+                Ok(StageBody::Real(exes))
+            }
+            StageComputeSpec::Simulated { base, per_item, out_elems, fail_every } => {
+                Ok(StageBody::Sim {
+                    base: *base,
+                    per_item: *per_item,
+                    out_elems: *out_elems,
+                    fail_every: *fail_every,
+                })
+            }
+        }
+    }
+
+    /// Run a batch; returns per-item outputs (empty on failure).
+    fn run(&self, batch_no: u64, items: &[Item]) -> Result<Vec<Vec<f32>>> {
+        match self {
+            StageBody::Real(exes) => {
+                let n = items.len();
+                // Smallest artifact whose batch covers n; else chunk by
+                // the largest.
+                let exe = exes
+                    .iter()
+                    .find(|e| e.meta.batch >= n)
+                    .unwrap_or_else(|| exes.last().unwrap());
+                let chunk = exe.meta.batch;
+                let mut outs = Vec::with_capacity(n);
+                let mut i = 0;
+                while i < n {
+                    let take = chunk.min(n - i);
+                    let mut flat = Vec::with_capacity(take * exe.input_elems());
+                    for item in &items[i..i + take] {
+                        flat.extend_from_slice(&item.data);
+                    }
+                    let out = exe.run_padded(&flat, take)?;
+                    let per = exe.output_elems();
+                    for j in 0..take {
+                        outs.push(out[j * per..(j + 1) * per].to_vec());
+                    }
+                    i += take;
+                }
+                Ok(outs)
+            }
+            StageBody::Sim { base, per_item, out_elems, fail_every } => {
+                if let Some(k) = fail_every {
+                    if *k > 0 && batch_no % k == k - 1 {
+                        anyhow::bail!("injected failure on batch {batch_no}");
+                    }
+                }
+                thread::sleep(*base + per_item.mul_f64(items.len() as f64));
+                Ok(items
+                    .iter()
+                    .map(|it| {
+                        let mut v = it.data.clone();
+                        v.resize(*out_elems, 0.0);
+                        v
+                    })
+                    .collect())
+            }
+        }
+    }
+}
+
+fn stage_thread(
+    spec: StageSpec,
+    cfg: PipelineCfg,
+    rx: Receiver<Item>,
+    tx: SyncSender<Item>,
+    is_last: bool,
+    ready: std::sync::Arc<std::sync::Barrier>,
+) -> StageStats {
+    let mut stats = StageStats { name: spec.name.clone(), ..Default::default() };
+    let body = StageBody::realize(&spec.compute);
+    // Artifact compilation happens above; the run clock starts once every
+    // stage reaches this barrier, so setup cost is excluded from the
+    // measured throughput (platforms in the modelled system are already
+    // flashed before serving starts).
+    ready.wait();
+    let body = match body {
+        Ok(b) => b,
+        Err(e) => {
+            // Cannot realize the stage: fail every item through.
+            eprintln!("stage {}: {e:#}", spec.name);
+            while let Ok(mut item) = rx.recv() {
+                item.ok = false;
+                if tx.send(item).is_err() {
+                    break;
+                }
+            }
+            return stats;
+        }
+    };
+    let mut batch_no = 0u64;
+    loop {
+        let items = match batcher::collect(&rx, cfg.max_batch, cfg.batch_wait) {
+            Batch::Items(items) => items,
+            Batch::Closed => break,
+        };
+        // Failed items pass through untouched; live ones get computed.
+        let (mut failed, live): (Vec<Item>, Vec<Item>) =
+            items.into_iter().partition(|i| !i.ok);
+        let mut processed: Vec<Item> = Vec::with_capacity(live.len());
+        if !live.is_empty() {
+            let t0 = Instant::now();
+            match body.run(batch_no, &live) {
+                Ok(outs) => {
+                    stats.batches += 1;
+                    stats.items += live.len() as u64;
+                    for (mut item, out) in live.into_iter().zip(outs) {
+                        item.data = out;
+                        processed.push(item);
+                    }
+                }
+                Err(_) => {
+                    stats.failures += live.len() as u64;
+                    for mut item in live {
+                        item.ok = false;
+                        item.data.clear();
+                        processed.push(item);
+                    }
+                }
+            }
+            stats.busy += t0.elapsed();
+        }
+        batch_no += 1;
+        // Link transfer to the next stage (once per batch of payloads).
+        if !is_last && cfg.simulate_link {
+            let live_count = processed.iter().filter(|i| i.ok).count() as u64;
+            let bytes = live_count * spec.out_bytes_per_item;
+            if bytes > 0 {
+                let d = Duration::from_secs_f64(cfg.link.latency_s(bytes));
+                thread::sleep(d);
+                stats.link += d;
+            }
+        }
+        for item in processed.into_iter().chain(failed.drain(..)) {
+            if tx.send(item).is_err() {
+                return stats;
+            }
+        }
+    }
+    stats
+}
+
+/// Run `inputs` through the staged pipeline; blocks until every request
+/// completes (or fails) and returns the full report.
+pub fn run_pipeline(
+    stages: Vec<StageSpec>,
+    cfg: &PipelineCfg,
+    inputs: Vec<Vec<f32>>,
+) -> PipelineReport {
+    assert!(!stages.is_empty(), "pipeline needs at least one stage");
+    let n_stages = stages.len();
+    let ready = std::sync::Arc::new(std::sync::Barrier::new(n_stages + 1));
+
+    // Channel chain: injector -> s0 -> s1 -> ... -> collector.
+    let mut senders: Vec<SyncSender<Item>> = Vec::with_capacity(n_stages + 1);
+    let mut receivers: Vec<Receiver<Item>> = Vec::with_capacity(n_stages + 1);
+    for _ in 0..=n_stages {
+        let (tx, rx) = sync_channel::<Item>(cfg.queue_depth.max(1));
+        senders.push(tx);
+        receivers.push(rx);
+    }
+    // receivers[0] feeds stage 0; receivers[n] is the collector.
+    let collector_rx = receivers.pop().unwrap();
+
+    let mut handles = Vec::with_capacity(n_stages);
+    // Iterate stages in reverse so each thread takes its own rx/tx pair.
+    let mut rx_iter = receivers.into_iter();
+    let mut tx_iter = senders.clone().into_iter().skip(1);
+    for (idx, spec) in stages.into_iter().enumerate() {
+        let rx = rx_iter.next().unwrap();
+        let tx = tx_iter.next().unwrap();
+        let cfg = cfg.clone();
+        let is_last = idx == n_stages - 1;
+        let ready = ready.clone();
+        handles.push(
+            thread::Builder::new()
+                .name(format!("stage-{}", spec.name))
+                .spawn(move || stage_thread(spec, cfg, rx, tx, is_last, ready))
+                .expect("spawn stage thread"),
+        );
+    }
+    // Wait for every stage to finish compiling before starting the clock.
+    ready.wait();
+    let start = Instant::now();
+    // Drop our copies of the inter-stage senders so channels close when
+    // the upstream stage finishes.
+    let injector = senders.remove(0);
+    drop(senders);
+
+    let total = inputs.len();
+    let feeder = thread::spawn(move || {
+        for (id, data) in inputs.into_iter().enumerate() {
+            let item = Item { id: id as u64, data, submitted: Instant::now(), ok: true };
+            if injector.send(item).is_err() {
+                break;
+            }
+        }
+        // Dropping the injector closes stage 0's input.
+    });
+
+    let mut completions = Vec::with_capacity(total);
+    while let Ok(item) = collector_rx.recv() {
+        let prediction = if item.ok && !item.data.is_empty() {
+            Some(
+                item.data
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .map(|(i, _)| i)
+                    .unwrap(),
+            )
+        } else {
+            None
+        };
+        completions.push(Completion {
+            id: item.id,
+            latency: item.submitted.elapsed(),
+            ok: item.ok,
+            prediction,
+        });
+        if completions.len() == total {
+            break;
+        }
+    }
+    feeder.join().expect("feeder panicked");
+    let stages_stats: Vec<StageStats> =
+        handles.into_iter().map(|h| h.join().expect("stage panicked")).collect();
+    completions.sort_by_key(|c| c.id);
+    PipelineReport { completions, wall: start.elapsed(), stages: stages_stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{property, Gen};
+
+    fn sim_stage(name: &str, per_item_us: u64, out_elems: usize) -> StageSpec {
+        StageSpec {
+            name: name.into(),
+            compute: StageComputeSpec::Simulated {
+                base: Duration::from_micros(50),
+                per_item: Duration::from_micros(per_item_us),
+                out_elems,
+                fail_every: None,
+            },
+            out_bytes_per_item: 64,
+        }
+    }
+
+    fn fast_cfg() -> PipelineCfg {
+        PipelineCfg {
+            batch_wait: Duration::from_micros(200),
+            queue_depth: 8,
+            simulate_link: false,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn every_request_completes_exactly_once() {
+        let inputs: Vec<Vec<f32>> = (0..40).map(|i| vec![i as f32; 8]).collect();
+        let report = run_pipeline(
+            vec![sim_stage("a", 20, 8), sim_stage("b", 20, 4)],
+            &fast_cfg(),
+            inputs,
+        );
+        assert_eq!(report.completions.len(), 40);
+        assert_eq!(report.completed(), 40);
+        let ids: Vec<u64> = report.completions.iter().map(|c| c.id).collect();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn failure_injection_marks_requests_failed() {
+        let mut stage_b = sim_stage("b", 10, 4);
+        stage_b.compute = StageComputeSpec::Simulated {
+            base: Duration::from_micros(10),
+            per_item: Duration::from_micros(10),
+            out_elems: 4,
+            fail_every: Some(2), // every 2nd batch fails
+        };
+        let inputs: Vec<Vec<f32>> = (0..30).map(|_| vec![0.0; 8]).collect();
+        let report =
+            run_pipeline(vec![sim_stage("a", 10, 8), stage_b], &fast_cfg(), inputs);
+        assert_eq!(report.completions.len(), 30);
+        assert!(report.failed() > 0, "no failures despite injection");
+        assert!(report.completed() > 0, "everything failed");
+        // Failed requests have no prediction.
+        for c in &report.completions {
+            assert_eq!(c.ok, c.prediction.is_some());
+        }
+    }
+
+    #[test]
+    fn pipelining_overlaps_stages() {
+        // Two stages of ~2 ms per item, 24 items, batch 1: sequential
+        // execution would need >= 96 ms; a pipeline should stay well
+        // under 1.5x the single-stage total.
+        let mut cfg = fast_cfg();
+        cfg.max_batch = 1;
+        let inputs: Vec<Vec<f32>> = (0..24).map(|_| vec![0.0; 4]).collect();
+        let report = run_pipeline(
+            vec![sim_stage("a", 2000, 4), sim_stage("b", 2000, 4)],
+            &cfg,
+            inputs,
+        );
+        let wall = report.wall.as_secs_f64();
+        assert!(wall < 0.096, "no pipeline overlap: wall {wall}");
+    }
+
+    #[test]
+    fn link_simulation_adds_time() {
+        let mut with_link = fast_cfg();
+        with_link.simulate_link = true;
+        with_link.link.base_latency_s = 3e-3;
+        let inputs: Vec<Vec<f32>> = (0..8).map(|_| vec![0.0; 4]).collect();
+        let spec = || vec![sim_stage("a", 10, 4), sim_stage("b", 10, 4)];
+        let fast = run_pipeline(spec(), &fast_cfg(), inputs.clone());
+        let slow = run_pipeline(spec(), &with_link, inputs);
+        assert!(slow.wall > fast.wall);
+        assert!(slow.stages[0].link > Duration::ZERO);
+        assert_eq!(slow.stages[1].link, Duration::ZERO, "last stage has no link");
+    }
+
+    #[test]
+    fn single_stage_pipeline_works() {
+        let inputs: Vec<Vec<f32>> = (0..5).map(|i| vec![i as f32; 4]).collect();
+        let report = run_pipeline(vec![sim_stage("only", 10, 4)], &fast_cfg(), inputs);
+        assert_eq!(report.completed(), 5);
+    }
+
+    #[test]
+    fn property_conservation_under_random_topologies() {
+        property("pipeline conserves requests", 12, |rng| {
+            let n_stages = Gen::usize_in(rng, 1..4);
+            let n_req = Gen::usize_in(rng, 1..30);
+            let stages: Vec<StageSpec> = (0..n_stages)
+                .map(|s| sim_stage(&format!("s{s}"), Gen::usize_in(rng, 1..50) as u64, 4))
+                .collect();
+            let mut cfg = fast_cfg();
+            cfg.max_batch = Gen::usize_in(rng, 1..9);
+            cfg.queue_depth = Gen::usize_in(rng, 1..6);
+            let inputs: Vec<Vec<f32>> = (0..n_req).map(|_| vec![1.0; 4]).collect();
+            let report = run_pipeline(stages, &cfg, inputs);
+            assert_eq!(report.completions.len(), n_req);
+            assert_eq!(report.completed(), n_req);
+        });
+    }
+}

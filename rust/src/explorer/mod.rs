@@ -1,0 +1,781 @@
+//! The partitioning design-space explorer — the paper's Fig. 1 pipeline:
+//!
+//! 1. graph analysis (topological schedule, candidate partitioning points)
+//! 2. filtering on memory and link constraints
+//! 3. accuracy exploration under platform bit widths (optional QAT)
+//! 4. hardware evaluation (per-layer Timeloop/Accelergy-like costs)
+//! 5. NSGA-II multi-objective optimization → Pareto set
+//! 6. favorite-point selection by the Definition-2 weighted sum
+//!
+//! The implementation exploits that per-layer costs are independent of
+//! the partitioning: each layer is mapped once per platform, then any
+//! candidate's metrics are prefix-sum lookups.
+
+pub mod baselines;
+pub mod multi;
+
+use crate::accuracy::{self, ModelAccuracy};
+use crate::config::{Metric, SystemConfig};
+use crate::graph::partition::{all_cuts, Cut};
+use crate::graph::topo::{self, TieBreak};
+use crate::graph::{Graph, NodeId};
+use crate::hw::{prefix_costs, HwEvaluator, SegmentCost};
+use crate::link::LinkModel;
+use crate::memory;
+use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::ops::Range;
+use std::time::Instant;
+
+/// Metrics of one candidate schedule (a set of cut positions over the
+/// linear order, possibly empty = single platform).
+#[derive(Debug, Clone)]
+pub struct CandidateMetrics {
+    /// Cut positions into the schedule (sorted). `positions.len() + 1`
+    /// chain slots; duplicate/edge positions leave platforms idle.
+    pub positions: Vec<usize>,
+    /// Human-readable label: boundary layer names, or `all-on-X`.
+    pub label: String,
+    pub latency_s: f64,
+    pub energy_j: f64,
+    /// Definition-4 pipelined throughput (inferences/s).
+    pub throughput: f64,
+    pub top1: f64,
+    /// Per-platform memory demand in bytes (0 for idle platforms).
+    pub memory_bytes: Vec<u64>,
+    /// Total link payload per inference across all hops.
+    pub link_bytes: u64,
+    /// Number of platforms that execute at least one layer.
+    pub partitions: usize,
+    /// Constraint-violation magnitude; 0 = feasible.
+    pub violation: f64,
+    pub violations: Vec<String>,
+}
+
+impl CandidateMetrics {
+    pub fn feasible(&self) -> bool {
+        self.violation == 0.0
+    }
+
+    /// Metric accessor in *minimization* orientation (maximized metrics
+    /// negated) — what NSGA-II and Pareto filtering consume.
+    pub fn objective(&self, m: Metric) -> f64 {
+        match m {
+            Metric::Latency => self.latency_s,
+            Metric::Energy => self.energy_j,
+            Metric::Throughput => -self.throughput,
+            Metric::Top1 => -self.top1,
+            Metric::LinkBytes => self.link_bytes as f64,
+            Metric::Memory => self.memory_bytes.iter().copied().max().unwrap_or(0) as f64,
+        }
+    }
+
+    /// Raw (report-friendly) metric value.
+    pub fn value(&self, m: Metric) -> f64 {
+        match m {
+            Metric::Throughput => self.throughput,
+            Metric::Top1 => self.top1,
+            _ => self.objective(m),
+        }
+    }
+}
+
+/// Wall-time breakdown of an exploration (§V-B reports this).
+#[derive(Debug, Clone, Default)]
+pub struct ExplorationTiming {
+    pub graph_s: f64,
+    pub hw_eval_s: f64,
+    pub candidates_s: f64,
+    pub nsga_s: f64,
+    pub total_s: f64,
+}
+
+/// Result of a full exploration.
+#[derive(Debug, Clone)]
+pub struct Exploration {
+    pub model: String,
+    /// All evaluated candidates (feasible and not).
+    pub candidates: Vec<CandidateMetrics>,
+    /// Indices of the exhaustive Pareto front over feasible candidates
+    /// (ground truth; only computable when the space is enumerable).
+    pub pareto: Vec<usize>,
+    /// Indices of the NSGA-II front (⊆ candidate list by position match).
+    pub nsga_front: Vec<usize>,
+    /// Definition-2 favorite among feasible candidates.
+    pub favorite: Option<usize>,
+    pub timing: ExplorationTiming,
+}
+
+impl Exploration {
+    pub fn favorite_metrics(&self) -> Option<&CandidateMetrics> {
+        self.favorite.map(|i| &self.candidates[i])
+    }
+}
+
+/// Precomputed per-platform costs for a fixed schedule; evaluates any
+/// cut-position vector in O(segments · log) plus a memo-cached memory
+/// walk.
+pub struct ChainEvaluator<'a> {
+    pub g: &'a Graph,
+    pub sys: &'a SystemConfig,
+    pub order: Vec<NodeId>,
+    pub cuts: Vec<Cut>,
+    prefix: Vec<Vec<SegmentCost>>,
+    mem_memo: RefCell<HashMap<(usize, usize, u32), u64>>,
+    // O(1)-lookup arrays for prefix/suffix segments (§Perf: these turn
+    // the candidate sweep from O(L²) memory walks into O(L)).
+    params_prefix: Vec<u64>,
+    macs_prefix: Vec<u64>,
+    peak_prefix: Vec<u64>,
+    peak_suffix: Vec<u64>,
+    /// Schedule position of the first layer that performs work; cuts
+    /// before it ship the raw input, not a feature map.
+    first_compute_pos: usize,
+    model_acc: ModelAccuracy,
+    pub hw_eval_s: f64,
+}
+
+impl<'a> ChainEvaluator<'a> {
+    pub fn new(g: &'a Graph, sys: &'a SystemConfig) -> Self {
+        // §IV-A graph analysis: linear schedule. The min-memory branch
+        // search would also be valid here; the deterministic order keeps
+        // candidate labels stable across runs (the search is exercised by
+        // the memory module's own tests and the `zoo` CLI).
+        let order = topo::topo_sort(g, TieBreak::Deterministic);
+        let cuts = all_cuts(g, &order);
+        let t0 = Instant::now();
+        let mut ev = HwEvaluator::new(sys.search.clone());
+        let prefix = sys
+            .platforms
+            .iter()
+            .map(|p| prefix_costs(&ev.schedule_costs(&p.accelerator, g, &order)))
+            .collect();
+        let hw_eval_s = t0.elapsed().as_secs_f64();
+        let model_acc = accuracy::model_accuracy(&g.name)
+            .cloned()
+            .unwrap_or(ModelAccuracy { name: "unknown", fp32_top1: 75.0, ptq8_drop: 1.0 });
+        let mut params_prefix = vec![0u64; g.len() + 1];
+        let mut macs_prefix = vec![0u64; g.len() + 1];
+        for (i, &v) in order.iter().enumerate() {
+            params_prefix[i + 1] = params_prefix[i] + g.node(v).params;
+            macs_prefix[i + 1] = macs_prefix[i] + g.node(v).macs;
+        }
+        let peak_prefix = memory::prefix_peaks(g, &order);
+        let peak_suffix = memory::suffix_peaks(g, &order);
+        let first_compute_pos = order
+            .iter()
+            .position(|&v| {
+                let n = g.node(v);
+                n.macs > 0 || n.ops > 0 || n.params > 0
+            })
+            .unwrap_or(0);
+        Self {
+            g,
+            sys,
+            order,
+            cuts,
+            prefix,
+            mem_memo: RefCell::new(HashMap::new()),
+            params_prefix,
+            macs_prefix,
+            peak_prefix,
+            peak_suffix,
+            first_compute_pos,
+            model_acc,
+            hw_eval_s,
+        }
+    }
+
+    fn segment_cost(&self, platform: usize, r: &Range<usize>) -> SegmentCost {
+        let p = &self.prefix[platform];
+        SegmentCost {
+            latency_s: p[r.end].latency_s - p[r.start].latency_s,
+            energy_j: p[r.end].energy_j - p[r.start].energy_j,
+            macs: p[r.end].macs - p[r.start].macs,
+            dram_bytes: p[r.end].dram_bytes - p[r.start].dram_bytes,
+        }
+    }
+
+    fn segment_memory(&self, r: &Range<usize>, bits: u32) -> u64 {
+        if r.is_empty() {
+            return 0;
+        }
+        let params = self.params_prefix[r.end] - self.params_prefix[r.start];
+        // Prefix/suffix segments (all that a two-platform system ever
+        // asks for, and two of every chain's segments) have O(1) peaks.
+        let peak = if r.start == 0 {
+            Some(self.peak_prefix[r.end - 1])
+        } else if r.end == self.order.len() {
+            Some(self.peak_suffix[r.start])
+        } else {
+            None
+        };
+        if let Some(peak) = peak {
+            return ((params + peak) * bits as u64).div_ceil(8);
+        }
+        // Interior chain segments: memoized reference walk.
+        let key = (r.start, r.end, bits);
+        if let Some(&m) = self.mem_memo.borrow().get(&key) {
+            return m;
+        }
+        let m = memory::segment_memory_bytes(self.g, &self.order, r.clone(), bits);
+        self.mem_memo.borrow_mut().insert(key, m);
+        m
+    }
+
+    /// MAC-weighted quantization noise via prefix sums (the fast path of
+    /// [`accuracy::aggregate_noise`]).
+    fn aggregate_noise(&self, segs: &[(Range<usize>, u32)]) -> f64 {
+        let total = *self.macs_prefix.last().unwrap() as f64;
+        if total == 0.0 {
+            return 0.0;
+        }
+        segs.iter()
+            .map(|(r, bits)| {
+                let macs = (self.macs_prefix[r.end] - self.macs_prefix[r.start]) as f64;
+                macs / total * accuracy::noise_weight(*bits)
+            })
+            .sum()
+    }
+
+    /// Bytes crossing the schedule after position `pos`, quantized at the
+    /// sender's bit width and shrunk by the configured lossy compression
+    /// (Yao [7] / Ko [8]-style encoding at the cut). `pos == len-1` means
+    /// "after the last layer": the final network output is shipped to the
+    /// consumer (uncompressed — it is the result, not a feature map).
+    fn cut_bytes(&self, pos: usize, sender_bits: u32) -> u64 {
+        if pos + 1 >= self.order.len() {
+            let out_elems: usize =
+                self.g.outputs().iter().map(|&o| self.g.node(o).out_shape.numel()).sum();
+            return (out_elems as u64 * sender_bits as u64).div_ceil(8);
+        }
+        let raw = self.cuts[pos].bytes(sender_bits);
+        // Compression applies to *intermediate feature maps*: a cut with
+        // no compute upstream ships the raw sensor input instead.
+        let is_feature_map = pos >= self.first_compute_pos;
+        match self.sys.compression {
+            Some(c) if is_feature_map => ((raw as f64 * c.ratio).ceil() as u64).max(1),
+            _ => raw,
+        }
+    }
+
+    /// Evaluate a cut-position vector. Length must be
+    /// `platforms.len() - 1`; entries in `0..=len-1` (an entry of
+    /// `len-1` pushes all later platforms idle — "everything on earlier
+    /// platforms"). Duplicate entries leave the platform between them
+    /// idle.
+    pub fn evaluate(&self, positions: &[usize]) -> CandidateMetrics {
+        let k = self.sys.platforms.len();
+        assert_eq!(positions.len(), k - 1, "need one cut per platform boundary");
+        let len = self.order.len();
+
+        // Per-platform segment ranges (empty = idle platform).
+        let mut segs: Vec<Range<usize>> = Vec::with_capacity(k);
+        let mut prev = 0usize;
+        for &p in positions {
+            let end = (p + 1).clamp(prev, len);
+            segs.push(prev..end);
+            prev = end;
+        }
+        segs.push(prev..len);
+
+        let mut latency = 0.0f64;
+        let mut energy = 0.0f64;
+        let mut rates: Vec<f64> = Vec::new();
+        let mut memory_bytes = vec![0u64; k];
+        let mut violations: Vec<String> = Vec::new();
+        let mut violation = 0.0f64;
+
+        for (j, r) in segs.iter().enumerate() {
+            if r.is_empty() {
+                continue;
+            }
+            let c = self.segment_cost(j, r);
+            latency += c.latency_s;
+            energy += c.energy_j;
+            if c.latency_s > 0.0 {
+                rates.push(1.0 / c.latency_s);
+            }
+            let bits = self.sys.platforms[j].accelerator.bits;
+            let m = self.segment_memory(r, bits);
+            memory_bytes[j] = m;
+            let cap = self.sys.platforms[j].memory_bytes;
+            if m > cap {
+                violations.push(format!(
+                    "platform {} memory {} > {}",
+                    self.sys.platforms[j].name, m, cap
+                ));
+                violation += (m - cap) as f64 / cap as f64;
+            }
+        }
+
+        // Link hops between consecutive used platforms (idle platforms
+        // forward the data, paying their hop).
+        let used: Vec<usize> = (0..k).filter(|&j| !segs[j].is_empty()).collect();
+        let mut link_bytes = 0u64;
+        let link = &self.sys.link;
+        for w in used.windows(2) {
+            let (j1, j2) = (w[0], w[1]);
+            let cut_pos = segs[j1].end - 1;
+            let bits = self.sys.platforms[j1].accelerator.bits;
+            let bytes = self.cut_bytes(cut_pos, bits);
+            let hops = (j2 - j1) as u64;
+            latency += hops as f64 * link.latency_s(bytes);
+            energy += hops as f64 * link.energy_j(bytes);
+            link_bytes += hops * bytes;
+            if bytes > 0 {
+                rates.push(link.throughput_ceiling(bytes));
+            }
+        }
+        // Everything-on-prefix schedules still deliver the final output
+        // over the remaining hops to the chain's tail consumer.
+        if let Some(&last_used) = used.last() {
+            if last_used < k - 1 {
+                let bits = self.sys.platforms[last_used].accelerator.bits;
+                let bytes = self.cut_bytes(len - 1, bits);
+                let hops = (k - 1 - last_used) as u64;
+                latency += hops as f64 * link.latency_s(bytes);
+                energy += hops as f64 * link.energy_j(bytes);
+                link_bytes += hops * bytes;
+                if bytes > 0 {
+                    rates.push(link.throughput_ceiling(bytes));
+                }
+            }
+        }
+
+        let throughput = rates.iter().copied().fold(f64::INFINITY, f64::min);
+        let throughput = if throughput.is_finite() { throughput } else { 0.0 };
+
+        // Accuracy under the per-segment bit widths.
+        let seg_bits: Vec<(Range<usize>, u32)> = segs
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.is_empty())
+            .map(|(j, r)| (r.clone(), self.sys.platforms[j].accelerator.bits))
+            .collect();
+        let mut top1 =
+            accuracy::top1_from_noise(&self.model_acc, self.aggregate_noise(&seg_bits), self.sys.qat);
+        // Lossy feature-map compression costs accuracy once per cut
+        // between *compute* platforms (raw-input and final-output
+        // shipping are lossless).
+        if let Some(c) = self.sys.compression {
+            let compute_cuts: usize = used
+                .windows(2)
+                .filter(|w| {
+                    let cut_pos = segs[w[0]].end - 1;
+                    cut_pos >= self.first_compute_pos
+                })
+                .count();
+            top1 = (top1 - c.top1_penalty * compute_cuts as f64).max(0.0);
+        }
+
+        // Remaining hard constraints.
+        let c = &self.sys.constraints;
+        if let Some(maxl) = c.max_latency_s {
+            if latency > maxl {
+                violations.push(format!("latency {latency:.4} > {maxl}"));
+                violation += (latency - maxl) / maxl;
+            }
+        }
+        if let Some(maxe) = c.max_energy_j {
+            if energy > maxe {
+                violations.push(format!("energy {energy:.4} > {maxe}"));
+                violation += (energy - maxe) / maxe;
+            }
+        }
+        if let Some(mint) = c.min_top1 {
+            if top1 < mint {
+                violations.push(format!("top1 {top1:.2} < {mint}"));
+                violation += (mint - top1) / mint;
+            }
+        }
+        if let Some(minr) = c.min_throughput {
+            if throughput < minr {
+                violations.push(format!("throughput {throughput:.2} < {minr}"));
+                violation += (minr - throughput) / minr;
+            }
+        }
+        if let Some(maxb) = c.max_link_bytes {
+            if link_bytes > maxb {
+                violations.push(format!("link bytes {link_bytes} > {maxb}"));
+                violation += (link_bytes - maxb) as f64 / maxb as f64;
+            }
+        }
+        if let Some(rate) = c.target_rate {
+            let req = LinkModel::required_bps(link_bytes, rate);
+            if req > link.bandwidth_bps {
+                violations.push(format!(
+                    "required bw {:.1} Mbit/s > link {:.1}",
+                    req / 1e6,
+                    link.bandwidth_bps / 1e6
+                ));
+                violation += (req - link.bandwidth_bps) / link.bandwidth_bps;
+            }
+        }
+
+        // A platform whose segment holds only free placeholder layers
+        // (Input/Flatten/Dropout: no MACs, ops or parameters) does no
+        // compute: it does not count as a partition. The cut-after-Input
+        // schedule is exactly the paper's "inference completely on B"
+        // square (the sensor ships the raw input).
+        let computes = |r: &Range<usize>| {
+            r.clone().any(|p| {
+                let n = self.g.node(self.order[p]);
+                n.macs > 0 || n.ops > 0 || n.params > 0
+            })
+        };
+        let used_compute: Vec<usize> =
+            used.iter().copied().filter(|&j| computes(&segs[j])).collect();
+        let partitions = used_compute.len().max(1);
+        let label = self.label_for(&segs, &used_compute);
+        CandidateMetrics {
+            positions: positions.to_vec(),
+            label,
+            latency_s: latency,
+            energy_j: energy,
+            throughput,
+            top1,
+            memory_bytes,
+            link_bytes,
+            partitions,
+            violation,
+            violations,
+        }
+    }
+
+    fn label_for(&self, segs: &[Range<usize>], used: &[usize]) -> String {
+        if used.is_empty() {
+            return "empty".to_string();
+        }
+        if used.len() == 1 {
+            return format!("all-on-{}", self.sys.platforms[used[0]].name);
+        }
+        used.iter()
+            .take(used.len() - 1)
+            .map(|&j| self.g.node(self.order[segs[j].end - 1]).name.clone())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// Definition-2 favorite: weighted sum of min-normalized metrics over
+/// feasible candidates.
+pub fn pick_favorite(
+    candidates: &[CandidateMetrics],
+    weights: &[(Metric, f64)],
+) -> Option<usize> {
+    let feasible: Vec<usize> =
+        (0..candidates.len()).filter(|&i| candidates[i].feasible()).collect();
+    if feasible.is_empty() {
+        return None;
+    }
+    // Normalizers: best (minimum-orientation) value per metric.
+    let mut best_score = f64::INFINITY;
+    let mut best_idx = None;
+    let norms: Vec<(Metric, f64, f64)> = weights
+        .iter()
+        .map(|&(m, w)| {
+            let best = feasible
+                .iter()
+                .map(|&i| candidates[i].objective(m))
+                .fold(f64::INFINITY, f64::min);
+            (m, w, best)
+        })
+        .collect();
+    for &i in &feasible {
+        let mut score = 0.0;
+        for &(m, w, best) in &norms {
+            let v = candidates[i].objective(m);
+            // Shift-normalize so metrics with negative orientation
+            // (maximized, stored negative) still normalize sanely.
+            let norm = if best.abs() > 1e-30 { (v - best) / best.abs() } else { v - best };
+            score += w * norm;
+        }
+        if score < best_score {
+            best_score = score;
+            best_idx = Some(i);
+        }
+    }
+    best_idx
+}
+
+/// Exhaustive Pareto front over feasible candidates for the configured
+/// metrics (ground truth when the candidate set is enumerable).
+pub fn exhaustive_pareto(candidates: &[CandidateMetrics], metrics: &[Metric]) -> Vec<usize> {
+    let evals: Vec<Eval> = candidates
+        .iter()
+        .map(|c| {
+            if c.feasible() {
+                Eval::feasible(metrics.iter().map(|&m| c.objective(m)).collect())
+            } else {
+                Eval::infeasible(metrics.len(), c.violation)
+            }
+        })
+        .collect();
+    let mut front: Vec<usize> = (0..candidates.len())
+        .filter(|&i| {
+            candidates[i].feasible()
+                && !(0..candidates.len())
+                    .any(|j| j != i && nsga2::dominates(&evals[j], &evals[i]))
+        })
+        .collect();
+    front.sort_unstable();
+    front
+}
+
+/// NSGA-II problem over the two-platform candidate index space.
+struct TwoPlatformProblem<'a, 'b> {
+    ev: &'a ChainEvaluator<'b>,
+    /// Candidate cut positions (clean cuts + the all-on-A sentinel).
+    space: Vec<usize>,
+    metrics: Vec<Metric>,
+}
+
+impl Problem for TwoPlatformProblem<'_, '_> {
+    fn num_vars(&self) -> usize {
+        1
+    }
+    fn num_objectives(&self) -> usize {
+        self.metrics.len()
+    }
+    fn bounds(&self, _: usize) -> (i64, i64) {
+        (0, self.space.len() as i64 - 1)
+    }
+    fn evaluate(&self, vars: &[i64]) -> Eval {
+        let pos = self.space[vars[0] as usize];
+        let m = self.ev.evaluate(&[pos]);
+        if m.feasible() {
+            Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
+        } else {
+            Eval::infeasible(self.metrics.len(), m.violation)
+        }
+    }
+}
+
+/// Full two-platform exploration (paper §V-B setting).
+pub fn explore_two_platform(g: &Graph, sys: &SystemConfig) -> Exploration {
+    assert_eq!(sys.platforms.len(), 2, "explore_two_platform needs 2 platforms");
+    let total0 = Instant::now();
+
+    let t0 = Instant::now();
+    let ev = ChainEvaluator::new(g, sys);
+    let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
+
+    // Candidate space: Definition-1 (single-tensor) cuts plus the two
+    // single-platform references. Cut at `len-1` = everything on A.
+    let t1 = Instant::now();
+    let len = ev.order.len();
+    let mut space: Vec<usize> = ev
+        .cuts
+        .iter()
+        .filter(|c| c.is_clean())
+        .map(|c| c.pos)
+        .collect();
+    space.push(len - 1); // all on A
+    // position 0 (cut after Input) = all on B; ensure present.
+    if !space.contains(&0) {
+        space.insert(0, 0);
+    }
+    let mut candidates: Vec<CandidateMetrics> =
+        space.iter().map(|&p| ev.evaluate(&[p])).collect();
+    // A cut that leaves only placeholder layers (Flatten/Dropout/Input)
+    // on one platform is the same schedule as the single-platform
+    // reference: keep the first occurrence of each single-platform label.
+    let mut seen_single = std::collections::BTreeSet::new();
+    let mut keep_mask: Vec<bool> = Vec::with_capacity(candidates.len());
+    for c in &candidates {
+        let keep = c.partitions > 1 || seen_single.insert(c.label.clone());
+        keep_mask.push(keep);
+    }
+    let mut it = keep_mask.iter();
+    space.retain(|_| *it.next().unwrap());
+    let mut it = keep_mask.iter();
+    candidates.retain(|_| *it.next().unwrap());
+    let candidates_s = t1.elapsed().as_secs_f64();
+
+    let pareto = exhaustive_pareto(&candidates, &sys.pareto_metrics);
+    let favorite = pick_favorite(&candidates, &sys.favorite.weights);
+
+    // NSGA-II per the paper (validated against the exhaustive front).
+    let t2 = Instant::now();
+    let problem = TwoPlatformProblem { ev: &ev, space: space.clone(), metrics: sys.pareto_metrics.clone() };
+    let front = nsga2::optimize(&problem, &Nsga2Cfg::for_layers(g.len(), sys.seed));
+    let mut nsga_front: Vec<usize> = front
+        .iter()
+        .map(|s| s.vars[0] as usize)
+        .collect();
+    nsga_front.sort_unstable();
+    nsga_front.dedup();
+    let nsga_s = t2.elapsed().as_secs_f64();
+
+    Exploration {
+        model: g.name.clone(),
+        candidates,
+        pareto,
+        nsga_front,
+        favorite,
+        timing: ExplorationTiming {
+            graph_s,
+            hw_eval_s: ev.hw_eval_s,
+            candidates_s,
+            nsga_s,
+            total_s: total0.elapsed().as_secs_f64(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::zoo;
+
+    fn quick_sys() -> SystemConfig {
+        let mut sys = SystemConfig::paper_two_platform();
+        sys.search.victory = 15;
+        sys.search.max_samples = 150;
+        sys
+    }
+
+    #[test]
+    fn two_platform_exploration_runs() {
+        let g = zoo::squeezenet1_1(1000);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        assert!(!ex.candidates.is_empty());
+        assert!(!ex.pareto.is_empty());
+        assert!(ex.favorite.is_some());
+        // All candidates have 1 or 2 partitions.
+        for c in &ex.candidates {
+            assert!((1..=2).contains(&c.partitions), "{:?}", c.label);
+            assert!(c.latency_s > 0.0 && c.energy_j > 0.0);
+            assert!(c.throughput > 0.0);
+            assert!((0.0..=100.0).contains(&c.top1));
+        }
+    }
+
+    #[test]
+    fn single_platform_references_present() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        let labels: Vec<&str> = ex.candidates.iter().map(|c| c.label.as_str()).collect();
+        assert!(labels.contains(&"all-on-A"), "{labels:?}");
+        assert!(labels.contains(&"all-on-B"), "{labels:?}");
+    }
+
+    #[test]
+    fn nsga_front_subset_of_exhaustive() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        // Map NSGA space indices to candidate indices: they share the
+        // ordering (both built from `space`).
+        for &i in &ex.nsga_front {
+            assert!(
+                ex.pareto.contains(&i),
+                "NSGA-II front member {i} ({}) not on the exhaustive front",
+                ex.candidates[i].label
+            );
+        }
+    }
+
+    #[test]
+    fn pipelining_beats_both_single_platforms_for_throughput() {
+        // Definition 4: a balanced split must beat single-platform
+        // throughput for a compute-heavy net.
+        let g = zoo::resnet50(1000);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        let single_best = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 1)
+            .map(|c| c.throughput)
+            .fold(0.0, f64::max);
+        let split_best = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 2)
+            .map(|c| c.throughput)
+            .fold(0.0, f64::max);
+        assert!(
+            split_best > single_best,
+            "pipelined {split_best} <= single {single_best}"
+        );
+    }
+
+    #[test]
+    fn memory_constraint_filters() {
+        let g = zoo::vgg16(1000); // 138M params @16b = 276 MB on A
+        let mut sys = quick_sys();
+        sys.platforms[0].memory_bytes = 1 << 20; // 1 MiB: nothing fits on A
+        sys.platforms[1].memory_bytes = 1 << 30;
+        let ex = explore_two_platform(&g, &sys);
+        // all-on-B (cut at position 0) keeps platform A empty -> feasible.
+        let feasible: Vec<&CandidateMetrics> =
+            ex.candidates.iter().filter(|c| c.feasible()).collect();
+        assert!(!feasible.is_empty());
+        for c in feasible {
+            assert!(
+                c.memory_bytes[0] <= 1 << 20,
+                "{} violates A memory but marked feasible",
+                c.label
+            );
+        }
+    }
+
+    #[test]
+    fn favorite_is_feasible_and_on_reasonable_score() {
+        let g = zoo::googlenet(1000);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        let fav = ex.favorite_metrics().unwrap();
+        assert!(fav.feasible());
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let a = explore_two_platform(&g, &sys);
+        let b = explore_two_platform(&g, &sys);
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.favorite, b.favorite);
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.latency_s, y.latency_s);
+            assert_eq!(x.energy_j, y.energy_j);
+        }
+    }
+
+    #[test]
+    fn compression_trades_bandwidth_for_accuracy() {
+        // Yao [7]/Ko [8]-style lossy encoding: 4x smaller feature maps
+        // over the wire, a fixed top-1 penalty per cut.
+        let g = zoo::resnet50(1000);
+        let base_sys = quick_sys();
+        let base = explore_two_platform(&g, &base_sys);
+        let mut comp_sys = quick_sys();
+        comp_sys.compression =
+            Some(crate::config::Compression { ratio: 0.25, top1_penalty: 0.8 });
+        let comp = explore_two_platform(&g, &comp_sys);
+        for (a, b) in base.candidates.iter().zip(&comp.candidates) {
+            assert_eq!(a.label, b.label);
+            if a.partitions == 2 {
+                assert!(b.link_bytes < a.link_bytes, "{}: no compression", a.label);
+                assert!(
+                    (b.link_bytes as f64 / a.link_bytes as f64 - 0.25).abs() < 0.01,
+                    "{}: ratio off",
+                    a.label
+                );
+                assert!(b.latency_s < a.latency_s, "{}: latency not reduced", a.label);
+                assert!((a.top1 - b.top1 - 0.8).abs() < 1e-9, "{}: penalty off", a.label);
+            } else {
+                // Single-platform candidates ship only the final output,
+                // which is never compressed or penalized.
+                assert_eq!(a.top1, b.top1, "{}", a.label);
+            }
+        }
+    }
+}

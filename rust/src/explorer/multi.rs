@@ -1,0 +1,171 @@
+//! Multi-point partitioning over a chain of N platforms (§V-C).
+//!
+//! With more than two platforms the candidate space is the set of sorted
+//! cut-position vectors — far too large to enumerate (|cuts|^(N-1)), so
+//! NSGA-II is the primary search here, exactly as in the paper. The
+//! genome is one integer per platform boundary; `repair` sorts it, and
+//! duplicate positions naturally express idle platforms (fewer
+//! partitions than platforms).
+
+use super::{exhaustive_pareto, ChainEvaluator, CandidateMetrics, Exploration, ExplorationTiming};
+use crate::config::{Metric, SystemConfig};
+use crate::graph::Graph;
+use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use std::time::Instant;
+
+struct ChainProblem<'a, 'b> {
+    ev: &'a ChainEvaluator<'b>,
+    metrics: Vec<Metric>,
+    num_cuts: usize,
+    max_pos: usize,
+}
+
+impl Problem for ChainProblem<'_, '_> {
+    fn num_vars(&self) -> usize {
+        self.num_cuts
+    }
+    fn num_objectives(&self) -> usize {
+        self.metrics.len()
+    }
+    fn bounds(&self, _: usize) -> (i64, i64) {
+        (0, self.max_pos as i64)
+    }
+    fn repair(&self, vars: &mut [i64]) {
+        vars.sort_unstable();
+    }
+    fn evaluate(&self, vars: &[i64]) -> Eval {
+        let positions: Vec<usize> = vars.iter().map(|&v| v as usize).collect();
+        let m = self.ev.evaluate(&positions);
+        if m.feasible() {
+            Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
+        } else {
+            Eval::infeasible(self.metrics.len(), m.violation)
+        }
+    }
+}
+
+/// Explore an N-platform chain with NSGA-II. Returns the deduplicated
+/// front as an [`Exploration`] whose `candidates` are the front members
+/// themselves (the space is not enumerable).
+pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
+    let total0 = Instant::now();
+    assert!(sys.platforms.len() >= 2, "need at least two platforms");
+    let ev = ChainEvaluator::new(g, sys);
+    let len = ev.order.len();
+
+    let t2 = Instant::now();
+    let problem = ChainProblem {
+        ev: &ev,
+        metrics: sys.pareto_metrics.clone(),
+        num_cuts: sys.platforms.len() - 1,
+        max_pos: len - 1,
+    };
+    // Scale the GA budget with both depth and chain length.
+    let mut cfg = Nsga2Cfg::for_layers(g.len() * sys.platforms.len() / 2, sys.seed);
+    cfg.mutation_p = 0.3; // cut vectors benefit from more exploration
+    let front = nsga2::optimize(&problem, &cfg);
+    let nsga_s = t2.elapsed().as_secs_f64();
+
+    // Materialize metrics for the front; dedup by *used-segment*
+    // signature (different genomes can express the same schedule).
+    let mut candidates: Vec<CandidateMetrics> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for s in &front {
+        let positions: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
+        let m = ev.evaluate(&positions);
+        let sig = (m.label.clone(), m.partitions);
+        if seen.insert(sig) {
+            candidates.push(m);
+        }
+    }
+    let pareto = exhaustive_pareto(&candidates, &sys.pareto_metrics);
+    let favorite = super::pick_favorite(&candidates, &sys.favorite.weights);
+    let nsga_front: Vec<usize> = (0..candidates.len()).collect();
+
+    Exploration {
+        model: g.name.clone(),
+        candidates,
+        pareto,
+        nsga_front,
+        favorite,
+        timing: ExplorationTiming {
+            graph_s: 0.0,
+            hw_eval_s: ev.hw_eval_s,
+            candidates_s: 0.0,
+            nsga_s,
+            total_s: total0.elapsed().as_secs_f64(),
+        },
+    }
+}
+
+/// Table II: histogram of partition counts among near-optimal schedules.
+/// `counts[p-1]` = number of Pareto schedules using exactly `p`
+/// partitions, for `p` in `1..=platforms`.
+pub fn partition_histogram(ex: &Exploration, num_platforms: usize) -> Vec<usize> {
+    let mut counts = vec![0usize; num_platforms];
+    for &i in &ex.pareto {
+        let p = ex.candidates[i].partitions;
+        if (1..=num_platforms).contains(&p) {
+            counts[p - 1] += 1;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::zoo;
+
+    fn quick_four() -> SystemConfig {
+        let mut sys = SystemConfig::paper_four_platform();
+        sys.search.victory = 10;
+        sys.search.max_samples = 100;
+        sys
+    }
+
+    #[test]
+    fn four_platform_chain_explores() {
+        let g = zoo::squeezenet1_1(1000);
+        let sys = quick_four();
+        let ex = explore_chain(&g, &sys);
+        assert!(!ex.candidates.is_empty());
+        for c in &ex.candidates {
+            assert!((1..=4).contains(&c.partitions));
+            assert_eq!(c.positions.len(), 3);
+            assert!(c.positions.windows(2).all(|w| w[0] <= w[1]), "unsorted cuts");
+        }
+    }
+
+    #[test]
+    fn histogram_sums_to_front_size() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_four();
+        let ex = explore_chain(&g, &sys);
+        let h = partition_histogram(&ex, 4);
+        assert_eq!(h.iter().sum::<usize>(), ex.pareto.len());
+    }
+
+    #[test]
+    fn front_contains_multi_partition_schedules() {
+        // With latency/energy/bandwidth objectives the front should not
+        // collapse to single-platform execution only.
+        let g = zoo::googlenet(1000);
+        let sys = quick_four();
+        let ex = explore_chain(&g, &sys);
+        let h = partition_histogram(&ex, 4);
+        let multi: usize = h[1..].iter().sum();
+        assert!(multi > 0, "no multi-partition schedule on the front: {h:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_four();
+        let a = explore_chain(&g, &sys);
+        let b = explore_chain(&g, &sys);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert_eq!(partition_histogram(&a, 4), partition_histogram(&b, 4));
+    }
+}

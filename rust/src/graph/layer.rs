@@ -1,0 +1,511 @@
+//! Layer kinds, tensor shapes, and the per-layer parameter/MAC arithmetic.
+//!
+//! The DSE framework never executes these layers — it reasons about their
+//! shapes, parameter counts and MAC counts (the same information an ONNX
+//! graph carries). The executable tiny-CNN path goes through the AOT
+//! artifacts instead.
+
+use std::fmt;
+
+/// Tensor shape as seen between layers. Batch size is always 1 for the
+/// embedded-inference setting of the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Shape {
+    /// Channels × height × width feature map.
+    Chw { c: usize, h: usize, w: usize },
+    /// Flattened vector (after `Flatten` / before classifiers).
+    Flat { n: usize },
+}
+
+impl Shape {
+    pub fn chw(c: usize, h: usize, w: usize) -> Self {
+        Shape::Chw { c, h, w }
+    }
+
+    pub fn numel(&self) -> usize {
+        match *self {
+            Shape::Chw { c, h, w } => c * h * w,
+            Shape::Flat { n } => n,
+        }
+    }
+
+    pub fn channels(&self) -> usize {
+        match *self {
+            Shape::Chw { c, .. } => c,
+            Shape::Flat { n } => n,
+        }
+    }
+
+    pub fn spatial(&self) -> (usize, usize) {
+        match *self {
+            Shape::Chw { h, w, .. } => (h, w),
+            Shape::Flat { .. } => (1, 1),
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Shape::Chw { c, h, w } => write!(f, "{c}x{h}x{w}"),
+            Shape::Flat { n } => write!(f, "{n}"),
+        }
+    }
+}
+
+/// Elementwise activation functions (zero parameters).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Act {
+    Relu,
+    Relu6,
+    Silu,
+    Sigmoid,
+    Softmax,
+}
+
+impl Act {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Act::Relu => "Relu",
+            Act::Relu6 => "Relu6",
+            Act::Silu => "Silu",
+            Act::Sigmoid => "Sigmoid",
+            Act::Softmax => "Softmax",
+        }
+    }
+}
+
+/// 2-D pooling hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Pool2d {
+    pub kernel: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// torchvision GoogLeNet uses `ceil_mode=True` pools.
+    pub ceil: bool,
+}
+
+/// All layer operator kinds the zoo uses (the ONNX subset that the six
+/// paper CNNs plus the executable tiny CNN are built from).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum LayerKind {
+    /// Graph input placeholder.
+    Input,
+    Conv2d {
+        out_c: usize,
+        kernel: (usize, usize),
+        stride: (usize, usize),
+        pad: (usize, usize),
+        groups: usize,
+        bias: bool,
+    },
+    Linear {
+        out_features: usize,
+        bias: bool,
+    },
+    /// Inference-mode batch normalisation (learnable γ/β counted as
+    /// parameters; running stats are buffers and excluded, matching the
+    /// parameter counts torchvision reports).
+    BatchNorm,
+    Activation(Act),
+    MaxPool(Pool2d),
+    AvgPool(Pool2d),
+    GlobalAvgPool,
+    /// Elementwise sum of all inputs (residual connections).
+    Add,
+    /// Elementwise product; supports `(c,1,1) × (c,h,w)` broadcast for
+    /// squeeze-and-excitation gates.
+    Mul,
+    /// Channel-dimension concatenation (Inception / Fire modules).
+    Concat,
+    Flatten,
+    /// Identity at inference time; kept so graph indices match training
+    /// topologies.
+    Dropout,
+}
+
+impl LayerKind {
+    /// Short operator name used to derive ONNX-style node names
+    /// (`Conv_12`, `Relu_3`, ...), matching how the paper labels
+    /// partitioning points.
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            LayerKind::Input => "Input",
+            LayerKind::Conv2d { .. } => "Conv",
+            LayerKind::Linear { .. } => "Gemm",
+            LayerKind::BatchNorm => "BatchNorm",
+            LayerKind::Activation(a) => a.name(),
+            LayerKind::MaxPool(_) => "MaxPool",
+            LayerKind::AvgPool(_) => "AvgPool",
+            LayerKind::GlobalAvgPool => "GlobalAvgPool",
+            LayerKind::Add => "Add",
+            LayerKind::Mul => "Mul",
+            LayerKind::Concat => "Concat",
+            LayerKind::Flatten => "Flatten",
+            LayerKind::Dropout => "Dropout",
+        }
+    }
+
+    /// Whether the layer performs MAC-array-shaped compute (i.e. is worth
+    /// mapping onto the accelerator's PE array rather than the vector
+    /// post-processing path).
+    pub fn is_mac_layer(&self) -> bool {
+        matches!(self, LayerKind::Conv2d { .. } | LayerKind::Linear { .. })
+    }
+}
+
+/// Output shape of a layer given its input shapes.
+///
+/// Returns an error string for shape mismatches; the zoo builders unwrap
+/// (topology bugs should fail loudly at graph construction).
+pub fn infer_shape(kind: &LayerKind, inputs: &[Shape]) -> Result<Shape, String> {
+    let one = |name: &str| -> Result<Shape, String> {
+        if inputs.len() == 1 {
+            Ok(inputs[0])
+        } else {
+            Err(format!("{name} expects exactly one input, got {}", inputs.len()))
+        }
+    };
+    match kind {
+        LayerKind::Input => {
+            if inputs.is_empty() {
+                Err("Input shape must be provided by the builder".into())
+            } else {
+                Ok(inputs[0])
+            }
+        }
+        LayerKind::Conv2d { out_c, kernel, stride, pad, groups, .. } => {
+            let s = one("Conv2d")?;
+            match s {
+                Shape::Chw { c, h, w } => {
+                    if c % groups != 0 {
+                        return Err(format!("Conv2d: {c} channels not divisible by {groups} groups"));
+                    }
+                    if out_c % groups != 0 {
+                        return Err(format!(
+                            "Conv2d: {out_c} out-channels not divisible by {groups} groups"
+                        ));
+                    }
+                    let oh = conv_out(h, kernel.0, stride.0, pad.0)?;
+                    let ow = conv_out(w, kernel.1, stride.1, pad.1)?;
+                    Ok(Shape::chw(*out_c, oh, ow))
+                }
+                Shape::Flat { .. } => Err("Conv2d on flat tensor".into()),
+            }
+        }
+        LayerKind::Linear { out_features, .. } => {
+            let s = one("Linear")?;
+            match s {
+                Shape::Flat { .. } => Ok(Shape::Flat { n: *out_features }),
+                Shape::Chw { h: 1, w: 1, .. } => Ok(Shape::Flat { n: *out_features }),
+                _ => Err("Linear expects a flat (or 1x1 spatial) input".into()),
+            }
+        }
+        LayerKind::BatchNorm
+        | LayerKind::Activation(_)
+        | LayerKind::Dropout => one(kind.op_name()),
+        LayerKind::MaxPool(p) | LayerKind::AvgPool(p) => {
+            let s = one("Pool")?;
+            match s {
+                Shape::Chw { c, h, w } => {
+                    let oh = pool_out(h, p.kernel, p.stride, p.pad, p.ceil)?;
+                    let ow = pool_out(w, p.kernel, p.stride, p.pad, p.ceil)?;
+                    Ok(Shape::chw(c, oh, ow))
+                }
+                Shape::Flat { .. } => Err("Pool on flat tensor".into()),
+            }
+        }
+        LayerKind::GlobalAvgPool => {
+            let s = one("GlobalAvgPool")?;
+            match s {
+                Shape::Chw { c, .. } => Ok(Shape::chw(c, 1, 1)),
+                Shape::Flat { .. } => Err("GlobalAvgPool on flat tensor".into()),
+            }
+        }
+        LayerKind::Add => {
+            if inputs.len() < 2 {
+                return Err("Add expects >= 2 inputs".into());
+            }
+            if inputs.iter().any(|s| *s != inputs[0]) {
+                return Err(format!("Add shape mismatch: {inputs:?}"));
+            }
+            Ok(inputs[0])
+        }
+        LayerKind::Mul => {
+            if inputs.len() != 2 {
+                return Err("Mul expects exactly 2 inputs".into());
+            }
+            match (inputs[0], inputs[1]) {
+                (a, b) if a == b => Ok(a),
+                // SE gate broadcast: (c,h,w) * (c,1,1) in either order.
+                (Shape::Chw { c, h, w }, Shape::Chw { c: c2, h: 1, w: 1 }) if c == c2 => {
+                    Ok(Shape::chw(c, h, w))
+                }
+                (Shape::Chw { c: c2, h: 1, w: 1 }, Shape::Chw { c, h, w }) if c == c2 => {
+                    Ok(Shape::chw(c, h, w))
+                }
+                (a, b) => Err(format!("Mul shape mismatch: {a} vs {b}")),
+            }
+        }
+        LayerKind::Concat => {
+            if inputs.is_empty() {
+                return Err("Concat expects >= 1 input".into());
+            }
+            let (h0, w0) = inputs[0].spatial();
+            let mut c_sum = 0;
+            for s in inputs {
+                match *s {
+                    Shape::Chw { c, h, w } if (h, w) == (h0, w0) => c_sum += c,
+                    _ => return Err(format!("Concat spatial mismatch: {inputs:?}")),
+                }
+            }
+            Ok(Shape::chw(c_sum, h0, w0))
+        }
+        LayerKind::Flatten => {
+            let s = one("Flatten")?;
+            Ok(Shape::Flat { n: s.numel() })
+        }
+    }
+}
+
+/// Learnable parameter count for a layer (weights + optional bias;
+/// BatchNorm counts γ and β, matching torchvision's reported totals).
+pub fn param_count(kind: &LayerKind, inputs: &[Shape]) -> u64 {
+    match kind {
+        LayerKind::Conv2d { out_c, kernel, groups, bias, .. } => {
+            let in_c = inputs[0].channels();
+            let w = (*out_c as u64) * (in_c / groups) as u64 * kernel.0 as u64 * kernel.1 as u64;
+            w + if *bias { *out_c as u64 } else { 0 }
+        }
+        LayerKind::Linear { out_features, bias } => {
+            let in_f = inputs[0].numel() as u64;
+            in_f * *out_features as u64 + if *bias { *out_features as u64 } else { 0 }
+        }
+        LayerKind::BatchNorm => 2 * inputs[0].channels() as u64,
+        _ => 0,
+    }
+}
+
+/// Multiply-accumulate count (the figure-of-merit the HW mapper consumes).
+/// Elementwise/pool layers report 0 MACs but a nonzero [`op_count`].
+pub fn mac_count(kind: &LayerKind, inputs: &[Shape], out: Shape) -> u64 {
+    match kind {
+        LayerKind::Conv2d { kernel, groups, .. } => {
+            let in_c = inputs[0].channels();
+            let (oh, ow) = out.spatial();
+            out.channels() as u64
+                * oh as u64
+                * ow as u64
+                * (in_c / groups) as u64
+                * kernel.0 as u64
+                * kernel.1 as u64
+        }
+        LayerKind::Linear { out_features, .. } => {
+            inputs[0].numel() as u64 * *out_features as u64
+        }
+        _ => 0,
+    }
+}
+
+/// Scalar-op count for non-MAC layers (used by the vector-unit latency
+/// model and for roofline sanity checks).
+pub fn op_count(kind: &LayerKind, inputs: &[Shape], out: Shape) -> u64 {
+    match kind {
+        LayerKind::Conv2d { .. } | LayerKind::Linear { .. } => 0,
+        LayerKind::Input | LayerKind::Dropout | LayerKind::Flatten => 0,
+        LayerKind::BatchNorm => 2 * out.numel() as u64, // scale + shift
+        LayerKind::Activation(a) => {
+            let n = out.numel() as u64;
+            match a {
+                Act::Relu | Act::Relu6 => n,
+                Act::Silu | Act::Sigmoid => 4 * n, // exp approximations
+                Act::Softmax => 5 * n,
+            }
+        }
+        LayerKind::MaxPool(p) | LayerKind::AvgPool(p) => {
+            out.numel() as u64 * (p.kernel * p.kernel) as u64
+        }
+        LayerKind::GlobalAvgPool => inputs[0].numel() as u64,
+        LayerKind::Add => (inputs.len() as u64 - 1) * out.numel() as u64,
+        LayerKind::Mul => out.numel() as u64,
+        LayerKind::Concat => 0, // pure data movement
+    }
+}
+
+fn conv_out(size: usize, k: usize, s: usize, p: usize) -> Result<usize, String> {
+    let padded = size + 2 * p;
+    if padded < k {
+        return Err(format!("conv kernel {k} larger than padded input {padded}"));
+    }
+    Ok((padded - k) / s + 1)
+}
+
+fn pool_out(size: usize, k: usize, s: usize, p: usize, ceil: bool) -> Result<usize, String> {
+    let padded = size + 2 * p;
+    if padded < k {
+        return Err(format!("pool kernel {k} larger than padded input {padded}"));
+    }
+    let num = padded - k;
+    let out = if ceil { num.div_ceil(s) + 1 } else { num / s + 1 };
+    // PyTorch rule: the last ceil-mode window must start inside the
+    // (left-)padded input, otherwise it is dropped.
+    if ceil && p > 0 && (out - 1) * s >= size + p {
+        return Ok(out - 1);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn conv(out_c: usize, k: usize, s: usize, p: usize) -> LayerKind {
+        LayerKind::Conv2d {
+            out_c,
+            kernel: (k, k),
+            stride: (s, s),
+            pad: (p, p),
+            groups: 1,
+            bias: true,
+        }
+    }
+
+    #[test]
+    fn conv_shape_vgg_first() {
+        let out = infer_shape(&conv(64, 3, 1, 1), &[Shape::chw(3, 224, 224)]).unwrap();
+        assert_eq!(out, Shape::chw(64, 224, 224));
+    }
+
+    #[test]
+    fn conv_shape_stride2() {
+        // ResNet stem: 7x7/2 pad 3 on 224 -> 112.
+        let out = infer_shape(&conv(64, 7, 2, 3), &[Shape::chw(3, 224, 224)]).unwrap();
+        assert_eq!(out, Shape::chw(64, 112, 112));
+    }
+
+    #[test]
+    fn depthwise_conv_params_and_macs() {
+        let k = LayerKind::Conv2d {
+            out_c: 32,
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+            groups: 32,
+            bias: false,
+        };
+        let input = [Shape::chw(32, 112, 112)];
+        let out = infer_shape(&k, &input).unwrap();
+        assert_eq!(out, Shape::chw(32, 112, 112));
+        assert_eq!(param_count(&k, &input), 32 * 9);
+        assert_eq!(mac_count(&k, &input, out), 32 * 112 * 112 * 9);
+    }
+
+    #[test]
+    fn conv_group_mismatch_rejected() {
+        let k = LayerKind::Conv2d {
+            out_c: 30,
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+            groups: 4,
+            bias: false,
+        };
+        assert!(infer_shape(&k, &[Shape::chw(32, 8, 8)]).is_err()); // 30 % 4 != 0
+        let k2 = LayerKind::Conv2d {
+            out_c: 32,
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+            groups: 3,
+            bias: false,
+        };
+        assert!(infer_shape(&k2, &[Shape::chw(32, 8, 8)]).is_err()); // 32 % 3 != 0
+    }
+
+    #[test]
+    fn pool_floor_vs_ceil() {
+        // 112 -> 56 (floor, pad 1 k3 s2) as in ResNet.
+        let p = Pool2d { kernel: 3, stride: 2, pad: 1, ceil: false };
+        let out = infer_shape(&LayerKind::MaxPool(p), &[Shape::chw(64, 112, 112)]).unwrap();
+        assert_eq!(out, Shape::chw(64, 56, 56));
+        // GoogLeNet: 224 -conv7/2-> 112 -pool3/2 ceil-> 56, then 56 -> 28.
+        let p = Pool2d { kernel: 3, stride: 2, pad: 0, ceil: true };
+        let out = infer_shape(&LayerKind::MaxPool(p), &[Shape::chw(64, 112, 112)]).unwrap();
+        assert_eq!(out, Shape::chw(64, 56, 56));
+        let out = infer_shape(&LayerKind::MaxPool(p), &[Shape::chw(192, 56, 56)]).unwrap();
+        assert_eq!(out, Shape::chw(192, 28, 28));
+        // SqueezeNet 1.1: 111 -pool3/2 ceil-> 55? torch: floor((111-3)/2)+1 = 55
+        // with ceil: ceil((111-3)/2)+1 = 55 too.
+        let out = infer_shape(&LayerKind::MaxPool(Pool2d { kernel: 3, stride: 2, pad: 0, ceil: true }),
+                              &[Shape::chw(64, 111, 111)]).unwrap();
+        assert_eq!(out, Shape::chw(64, 55, 55));
+    }
+
+    #[test]
+    fn linear_params() {
+        let k = LayerKind::Linear { out_features: 1000, bias: true };
+        let input = [Shape::Flat { n: 2048 }];
+        assert_eq!(param_count(&k, &input), 2048 * 1000 + 1000);
+        assert_eq!(
+            mac_count(&k, &input, Shape::Flat { n: 1000 }),
+            2048 * 1000
+        );
+    }
+
+    #[test]
+    fn add_requires_matching_shapes() {
+        let a = Shape::chw(64, 56, 56);
+        let b = Shape::chw(64, 28, 28);
+        assert!(infer_shape(&LayerKind::Add, &[a, a]).is_ok());
+        assert!(infer_shape(&LayerKind::Add, &[a, b]).is_err());
+        assert!(infer_shape(&LayerKind::Add, &[a]).is_err());
+    }
+
+    #[test]
+    fn mul_broadcast_se_gate() {
+        let fm = Shape::chw(96, 56, 56);
+        let gate = Shape::chw(96, 1, 1);
+        assert_eq!(infer_shape(&LayerKind::Mul, &[fm, gate]).unwrap(), fm);
+        assert_eq!(infer_shape(&LayerKind::Mul, &[gate, fm]).unwrap(), fm);
+        let bad = Shape::chw(48, 1, 1);
+        assert!(infer_shape(&LayerKind::Mul, &[fm, bad]).is_err());
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let a = Shape::chw(64, 28, 28);
+        let b = Shape::chw(32, 28, 28);
+        assert_eq!(
+            infer_shape(&LayerKind::Concat, &[a, b]).unwrap(),
+            Shape::chw(96, 28, 28)
+        );
+        let bad = Shape::chw(32, 14, 14);
+        assert!(infer_shape(&LayerKind::Concat, &[a, bad]).is_err());
+    }
+
+    #[test]
+    fn flatten_and_gap() {
+        let s = Shape::chw(512, 7, 7);
+        assert_eq!(
+            infer_shape(&LayerKind::Flatten, &[s]).unwrap(),
+            Shape::Flat { n: 512 * 49 }
+        );
+        assert_eq!(
+            infer_shape(&LayerKind::GlobalAvgPool, &[s]).unwrap(),
+            Shape::chw(512, 1, 1)
+        );
+    }
+
+    #[test]
+    fn batchnorm_params_are_2c() {
+        assert_eq!(param_count(&LayerKind::BatchNorm, &[Shape::chw(64, 8, 8)]), 128);
+    }
+
+    #[test]
+    fn op_counts_nonzero_for_elementwise() {
+        let s = Shape::chw(8, 4, 4);
+        assert_eq!(op_count(&LayerKind::Activation(Act::Relu), &[s], s), 128);
+        assert_eq!(op_count(&LayerKind::Add, &[s, s], s), 128);
+        assert_eq!(op_count(&LayerKind::Concat, &[s, s], Shape::chw(16, 4, 4)), 0);
+    }
+}

@@ -1,0 +1,337 @@
+//! DNN graph intermediate representation.
+//!
+//! The framework's front end (§IV-A of the paper) converts an ONNX model
+//! into a DAG of layers. We build the same DAG programmatically in
+//! [`crate::zoo`]: each node carries its operator kind, output shape,
+//! learnable-parameter count and MAC count — exactly the information the
+//! partitioning DSE consumes.
+
+pub mod layer;
+pub mod partition;
+pub mod topo;
+
+pub use layer::{Act, LayerKind, Pool2d, Shape};
+
+use layer::{infer_shape, mac_count, op_count, param_count};
+use std::collections::BTreeMap;
+
+/// Node identifier — index into [`Graph::nodes`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub usize);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "n{}", self.0)
+    }
+}
+
+/// One layer in the DAG.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    /// ONNX-style name: `<Op>_<per-op-counter>`, e.g. `Conv_45`, `Relu_11`
+    /// — the naming the paper uses to label partitioning points.
+    pub name: String,
+    pub kind: LayerKind,
+    pub inputs: Vec<NodeId>,
+    pub out_shape: Shape,
+    /// Learnable parameters (count, not bytes — bytes depend on the
+    /// platform's quantized bit width, applied by the memory model).
+    pub params: u64,
+    /// Multiply-accumulates per inference.
+    pub macs: u64,
+    /// Scalar ops for non-MAC layers (vector unit work).
+    pub ops: u64,
+}
+
+impl Node {
+    /// Sum of input feature-map elements (all inputs).
+    pub fn fmap_in(&self, g: &Graph) -> usize {
+        self.inputs.iter().map(|&i| g.node(i).out_shape.numel()).sum()
+    }
+
+    /// Output feature-map elements.
+    pub fn fmap_out(&self) -> usize {
+        self.out_shape.numel()
+    }
+}
+
+/// The DNN as a DAG. Nodes are stored in insertion order; edges point from
+/// producer to consumer via `Node::inputs`.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    pub name: String,
+    pub nodes: Vec<Node>,
+    /// Per-operator counters used for ONNX-style naming.
+    op_counters: BTreeMap<&'static str, usize>,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Self {
+        Self { name: name.to_string(), nodes: Vec::new(), op_counters: BTreeMap::new() }
+    }
+
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id.0]
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Add the graph input. Must be the first node.
+    pub fn input(&mut self, c: usize, h: usize, w: usize) -> NodeId {
+        assert!(self.nodes.is_empty(), "input must be the first node");
+        self.push_node("Input".to_string(), LayerKind::Input, vec![], Shape::chw(c, h, w))
+    }
+
+    /// Add a layer; shape/params/MACs are inferred. Panics on topology
+    /// errors (zoo construction bugs should fail loudly).
+    pub fn add(&mut self, kind: LayerKind, inputs: &[NodeId]) -> NodeId {
+        for &i in inputs {
+            assert!(i.0 < self.nodes.len(), "input {i} does not exist");
+        }
+        let in_shapes: Vec<Shape> = inputs.iter().map(|&i| self.node(i).out_shape).collect();
+        let out = infer_shape(&kind, &in_shapes)
+            .unwrap_or_else(|e| panic!("{}: cannot add {:?}: {e}", self.name, kind));
+        let counter = self.op_counters.entry(kind.op_name()).or_insert(0);
+        let name = format!("{}_{}", kind.op_name(), *counter);
+        *counter += 1;
+        let id = NodeId(self.nodes.len());
+        let params = param_count(&kind, &in_shapes);
+        let macs = mac_count(&kind, &in_shapes, out);
+        let ops = op_count(&kind, &in_shapes, out);
+        self.nodes.push(Node {
+            id,
+            name,
+            kind,
+            inputs: inputs.to_vec(),
+            out_shape: out,
+            params,
+            macs,
+            ops,
+        });
+        id
+    }
+
+    fn push_node(
+        &mut self,
+        name: String,
+        kind: LayerKind,
+        inputs: Vec<NodeId>,
+        out_shape: Shape,
+    ) -> NodeId {
+        let id = NodeId(self.nodes.len());
+        self.nodes.push(Node {
+            id,
+            name,
+            kind,
+            inputs,
+            out_shape,
+            params: 0,
+            macs: 0,
+            ops: 0,
+        });
+        id
+    }
+
+    /// Look up a node by its ONNX-style name.
+    pub fn by_name(&self, name: &str) -> Option<&Node> {
+        self.nodes.iter().find(|n| n.name == name)
+    }
+
+    /// Successor lists (computed; edges are stored on the consumer side).
+    pub fn successors(&self) -> Vec<Vec<NodeId>> {
+        let mut succ = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                succ[i.0].push(n.id);
+            }
+        }
+        succ
+    }
+
+    /// Nodes with no consumers (normally exactly one: the classifier).
+    pub fn outputs(&self) -> Vec<NodeId> {
+        let succ = self.successors();
+        self.nodes
+            .iter()
+            .filter(|n| succ[n.id.0].is_empty())
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Total learnable parameters.
+    pub fn total_params(&self) -> u64 {
+        self.nodes.iter().map(|n| n.params).sum()
+    }
+
+    /// Total MACs per inference.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(|n| n.macs).sum()
+    }
+
+    /// Structural validation: inputs exist and precede their consumers
+    /// in id order (the builders emit nodes in a valid order), exactly one
+    /// Input node at index 0, at least one output, all shapes consistent.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.nodes.is_empty() {
+            return Err("empty graph".into());
+        }
+        if !matches!(self.nodes[0].kind, LayerKind::Input) {
+            return Err("first node must be Input".into());
+        }
+        for n in &self.nodes[1..] {
+            if matches!(n.kind, LayerKind::Input) {
+                return Err(format!("{}: extra Input node", n.name));
+            }
+            if n.inputs.is_empty() {
+                return Err(format!("{}: non-input node without inputs", n.name));
+            }
+            for &i in &n.inputs {
+                if i.0 >= n.id.0 {
+                    return Err(format!("{}: input {} does not precede node", n.name, i));
+                }
+            }
+            let in_shapes: Vec<Shape> =
+                n.inputs.iter().map(|&i| self.node(i).out_shape).collect();
+            let expect = infer_shape(&n.kind, &in_shapes)?;
+            if expect != n.out_shape {
+                return Err(format!(
+                    "{}: stored shape {} != inferred {}",
+                    n.name, n.out_shape, expect
+                ));
+            }
+        }
+        if self.outputs().is_empty() {
+            return Err("graph has no output".into());
+        }
+        Ok(())
+    }
+
+    /// One-line summary for the CLI's `zoo` command.
+    pub fn summary(&self) -> String {
+        use crate::util::units::fmt_count;
+        let convs = self
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Conv2d { .. }))
+            .count();
+        format!(
+            "{:<18} {:>4} nodes  {:>4} convs  params {:>9}  MACs {:>9}",
+            self.name,
+            self.len(),
+            convs,
+            fmt_count(self.total_params()),
+            fmt_count(self.total_macs()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// conv-bn-relu chain with a residual add.
+    fn tiny_residual() -> Graph {
+        let mut g = Graph::new("tiny-res");
+        let x = g.input(3, 8, 8);
+        let c1 = g.add(
+            LayerKind::Conv2d {
+                out_c: 8,
+                kernel: (3, 3),
+                stride: (1, 1),
+                pad: (1, 1),
+                groups: 1,
+                bias: false,
+            },
+            &[x],
+        );
+        let b1 = g.add(LayerKind::BatchNorm, &[c1]);
+        let r1 = g.add(LayerKind::Activation(Act::Relu), &[b1]);
+        let c2 = g.add(
+            LayerKind::Conv2d {
+                out_c: 8,
+                kernel: (3, 3),
+                stride: (1, 1),
+                pad: (1, 1),
+                groups: 1,
+                bias: false,
+            },
+            &[r1],
+        );
+        let add = g.add(LayerKind::Add, &[r1, c2]);
+        let gap = g.add(LayerKind::GlobalAvgPool, &[add]);
+        let fl = g.add(LayerKind::Flatten, &[gap]);
+        g.add(LayerKind::Linear { out_features: 10, bias: true }, &[fl]);
+        g
+    }
+
+    #[test]
+    fn builder_names_are_onnx_style() {
+        let g = tiny_residual();
+        assert!(g.by_name("Conv_0").is_some());
+        assert!(g.by_name("Conv_1").is_some());
+        assert!(g.by_name("Relu_0").is_some());
+        assert!(g.by_name("Gemm_0").is_some());
+        assert!(g.by_name("Conv_2").is_none());
+    }
+
+    #[test]
+    fn validate_accepts_good_graph() {
+        let g = tiny_residual();
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn outputs_and_successors() {
+        let g = tiny_residual();
+        let outs = g.outputs();
+        assert_eq!(outs.len(), 1);
+        assert_eq!(g.node(outs[0]).name, "Gemm_0");
+        let succ = g.successors();
+        // relu feeds both conv2 and the residual add.
+        let relu = g.by_name("Relu_0").unwrap().id;
+        assert_eq!(succ[relu.0].len(), 2);
+    }
+
+    #[test]
+    fn totals_add_up() {
+        let g = tiny_residual();
+        // conv1 3->8 3x3 no bias = 216, bn = 16, conv2 8->8 3x3 = 576,
+        // linear 8->10 +bias = 90.
+        assert_eq!(g.total_params(), 216 + 16 + 576 + 90);
+        // conv1: 8*8*8*3*9 = 13824, conv2: 8*8*8*8*9 = 36864, fc: 80.
+        assert_eq!(g.total_macs(), 13824 + 36864 + 80);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot add")]
+    fn shape_mismatch_panics_at_build() {
+        let mut g = Graph::new("bad");
+        let x = g.input(3, 8, 8);
+        let c = g.add(
+            LayerKind::Conv2d {
+                out_c: 8,
+                kernel: (3, 3),
+                stride: (2, 2),
+                pad: (1, 1),
+                groups: 1,
+                bias: false,
+            },
+            &[x],
+        );
+        g.add(LayerKind::Add, &[x, c]); // 3x8x8 + 8x4x4 mismatch
+    }
+
+    #[test]
+    fn validate_catches_extra_input() {
+        let mut g = tiny_residual();
+        g.nodes[3].kind = LayerKind::Input;
+        assert!(g.validate().is_err());
+    }
+}

@@ -1,0 +1,278 @@
+//! Partitioning-point enumeration over a linear schedule (§III Def 1).
+//!
+//! Given a topological order, a cut after schedule position `p` splits the
+//! network into a prefix (platform A) and a suffix (platform B). The
+//! tensors that must travel over the link are the outputs of scheduled
+//! layers that still have unscheduled consumers. Cuts crossed by exactly
+//! one tensor correspond to the paper's Definition 1 ("the intermediate
+//! feature map f_p of l_p is transmitted"); wider cuts are supported for
+//! completeness and carry the full set of live tensors.
+
+use super::{Graph, NodeId};
+use std::ops::Range;
+
+/// One candidate cut in a linear schedule.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Cut {
+    /// Prefix is `order[0..=pos]`.
+    pub pos: usize,
+    /// `order[pos]` — the layer `l_p` after which the network is split.
+    pub boundary: NodeId,
+    /// Producers whose output tensors cross the cut (deduplicated,
+    /// ascending by node id).
+    pub tensors: Vec<NodeId>,
+    /// Total elements crossing the cut.
+    pub elems: usize,
+}
+
+impl Cut {
+    /// Definition-1 cut: exactly one feature map crosses.
+    pub fn is_clean(&self) -> bool {
+        self.tensors.len() == 1
+    }
+
+    /// Bytes on the wire for a given transmission bit width.
+    pub fn bytes(&self, bits: u32) -> u64 {
+        (self.elems as u64 * bits as u64).div_ceil(8)
+    }
+}
+
+/// For every node, the schedule position of its last consumer
+/// (its own position if it has none — i.e. it is a graph output).
+fn last_use_positions(g: &Graph, order: &[NodeId]) -> Vec<usize> {
+    let pos = super::topo::positions(order, g.len());
+    let mut last = vec![0usize; g.len()];
+    for (i, &v) in order.iter().enumerate() {
+        last[v.0] = i; // at least its own position
+    }
+    for n in &g.nodes {
+        for &inp in &n.inputs {
+            last[inp.0] = last[inp.0].max(pos[n.id.0]);
+        }
+    }
+    last
+}
+
+/// Enumerate all cuts at positions `0..len-1` of the schedule.
+///
+/// Runs in O(V + E) total using a sweep: a producer crosses cut `p` iff
+/// `pos[u] <= p < last_use[u]`.
+pub fn all_cuts(g: &Graph, order: &[NodeId]) -> Vec<Cut> {
+    assert_eq!(order.len(), g.len(), "schedule must cover the whole graph");
+    let n = g.len();
+    if n < 2 {
+        return Vec::new();
+    }
+    let last = last_use_positions(g, order);
+    // Diff arrays: at cut p, live set gains u at pos[u], loses u at last[u].
+    let mut gain: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    let mut lose: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    let pos = super::topo::positions(order, n);
+    for node in &g.nodes {
+        let p = pos[node.id.0];
+        let l = last[node.id.0];
+        if l > p {
+            gain[p].push(node.id);
+            lose[l].push(node.id);
+        }
+    }
+    let mut live: Vec<NodeId> = Vec::new();
+    let mut out = Vec::with_capacity(n - 1);
+    for p in 0..n - 1 {
+        for &u in &gain[p] {
+            live.push(u);
+        }
+        live.retain(|u| last[u.0] > p);
+        let mut tensors = live.clone();
+        tensors.sort_unstable();
+        let elems = tensors.iter().map(|&u| g.node(u).out_shape.numel()).sum();
+        out.push(Cut { pos: p, boundary: order[p], tensors, elems });
+    }
+    out
+}
+
+/// Only the Definition-1 cuts (single crossing tensor).
+pub fn clean_cuts(g: &Graph, order: &[NodeId]) -> Vec<Cut> {
+    all_cuts(g, order).into_iter().filter(Cut::is_clean).collect()
+}
+
+/// Split the schedule into `k+1` contiguous segments at the given cut
+/// positions (each segment is a half-open range into `order`).
+/// Positions must be strictly increasing and `< order.len() - 1`.
+pub fn segments(order_len: usize, cut_positions: &[usize]) -> Vec<Range<usize>> {
+    let mut prev = 0usize;
+    let mut out = Vec::with_capacity(cut_positions.len() + 1);
+    let mut last_seen = None;
+    for &p in cut_positions {
+        assert!(
+            last_seen.map_or(true, |l| p >= l),
+            "cut positions must be non-decreasing"
+        );
+        assert!(p + 1 < order_len, "cut position {p} out of range");
+        last_seen = Some(p);
+        if p + 1 <= prev {
+            // Duplicate position: the platform between the two identical
+            // cuts receives no layers (NSGA-II may propose this; it means
+            // the platform is skipped).
+            continue;
+        }
+        out.push(prev..p + 1);
+        prev = p + 1;
+    }
+    out.push(prev..order_len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::{topo_sort, TieBreak};
+    use crate::graph::{Act, LayerKind};
+    use crate::testkit::{property, Gen};
+    use crate::util::rng::Pcg32;
+
+    fn chain(n_layers: usize) -> Graph {
+        let mut g = Graph::new("chain");
+        let mut prev = g.input(4, 8, 8);
+        for _ in 0..n_layers {
+            prev = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+        }
+        g
+    }
+
+    fn residual() -> Graph {
+        // input -> c1 -> r1 -> c2 -> add(r1, c2) -> gap
+        let mut g = Graph::new("res");
+        let x = g.input(4, 8, 8);
+        let conv = LayerKind::Conv2d {
+            out_c: 4,
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+            groups: 1,
+            bias: false,
+        };
+        let c1 = g.add(conv.clone(), &[x]);
+        let r1 = g.add(LayerKind::Activation(Act::Relu), &[c1]);
+        let c2 = g.add(conv, &[r1]);
+        let add = g.add(LayerKind::Add, &[r1, c2]);
+        g.add(LayerKind::GlobalAvgPool, &[add]);
+        g
+    }
+
+    #[test]
+    fn chain_cuts_are_all_clean() {
+        let g = chain(5);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let cuts = all_cuts(&g, &order);
+        assert_eq!(cuts.len(), g.len() - 1);
+        for c in &cuts {
+            assert!(c.is_clean(), "chain cut at {} not clean", c.pos);
+            assert_eq!(c.tensors, vec![c.boundary]);
+            assert_eq!(c.elems, 4 * 8 * 8);
+        }
+    }
+
+    #[test]
+    fn residual_cut_width() {
+        let g = residual();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let cuts = all_cuts(&g, &order);
+        // After relu (pos 2): relu output feeds both c2 and add -> 1 tensor.
+        assert!(cuts[2].is_clean());
+        // After c2 (pos 3): both r1 and c2 outputs are live -> 2 tensors.
+        assert_eq!(cuts[3].tensors.len(), 2);
+        assert_eq!(cuts[3].elems, 2 * 4 * 8 * 8);
+        // Clean cuts: after input, c1, r1, add (not after c2).
+        let clean = clean_cuts(&g, &order);
+        assert_eq!(clean.len(), 4);
+    }
+
+    #[test]
+    fn cut_bytes_respects_bitwidth() {
+        let g = chain(2);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let cuts = all_cuts(&g, &order);
+        let c = &cuts[1];
+        assert_eq!(c.bytes(16), (4 * 8 * 8 * 2) as u64);
+        assert_eq!(c.bytes(8), (4 * 8 * 8) as u64);
+        // Sub-byte widths round up.
+        assert_eq!(c.bytes(4), (4 * 8 * 8 / 2) as u64);
+    }
+
+    #[test]
+    fn segments_split_schedule() {
+        let segs = segments(10, &[2, 5]);
+        assert_eq!(segs, vec![0..3, 3..6, 6..10]);
+        // Duplicate cut position -> empty middle segment dropped.
+        let segs = segments(10, &[4, 4]);
+        assert_eq!(segs, vec![0..5, 5..10]);
+        // No cuts -> one segment.
+        assert_eq!(segments(7, &[]), vec![0..7]);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn segment_cut_at_last_position_rejected() {
+        segments(5, &[4]);
+    }
+
+    #[test]
+    fn property_cuts_match_naive_computation() {
+        property("sweep cuts == naive cuts", 100, |rng| {
+            let n = Gen::usize_in(rng, 2..40);
+            let preds = Gen::dag(rng, n, 0.15);
+            let mut g = Graph::new("prop");
+            let x = g.input(2, 4, 4);
+            let mut ids = vec![x];
+            for v in 1..n {
+                let inputs: Vec<NodeId> = preds[v].iter().map(|&p| ids[p]).collect();
+                let id = if inputs.len() >= 2 {
+                    g.add(LayerKind::Add, &inputs)
+                } else {
+                    g.add(LayerKind::Activation(Act::Relu), &inputs)
+                };
+                ids.push(id);
+            }
+            let mut r = Pcg32::seeded(11);
+            let order = topo_sort(&g, TieBreak::Random(&mut r));
+            let fast = all_cuts(&g, &order);
+            let pos = crate::graph::topo::positions(&order, g.len());
+            for cut in &fast {
+                // Naive: u crosses iff scheduled and has a consumer after p.
+                let mut naive: Vec<NodeId> = g
+                    .nodes
+                    .iter()
+                    .filter(|u| {
+                        pos[u.id.0] <= cut.pos
+                            && g.nodes.iter().any(|v| {
+                                v.inputs.contains(&u.id) && pos[v.id.0] > cut.pos
+                            })
+                    })
+                    .map(|u| u.id)
+                    .collect();
+                naive.sort_unstable();
+                assert_eq!(cut.tensors, naive, "mismatch at pos {}", cut.pos);
+            }
+        });
+    }
+
+    #[test]
+    fn property_every_layer_in_exactly_one_segment() {
+        property("partition completeness", 100, |rng| {
+            let len = Gen::usize_in(rng, 2..80);
+            let k = Gen::usize_in(rng, 0..4.min(len - 1));
+            let mut cuts: Vec<usize> =
+                (0..k).map(|_| Gen::usize_in(rng, 0..len - 1)).collect();
+            cuts.sort_unstable();
+            let segs = segments(len, &cuts);
+            let mut seen = vec![0u8; len];
+            for s in &segs {
+                for i in s.clone() {
+                    seen[i] += 1;
+                }
+            }
+            assert!(seen.iter().all(|&c| c == 1), "layer scheduled != once");
+        });
+    }
+}

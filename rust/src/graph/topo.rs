@@ -1,0 +1,177 @@
+//! Topological scheduling of the layer DAG (§IV-A).
+//!
+//! The paper: "our framework first performs a topological sort of the DAG
+//! to find a linear ordering of its vertices. [...] In case there are
+//! parallel branches, the algorithm randomly selects one of the
+//! unscheduled layers as the next node to be added to the linear
+//! sequence." We implement Kahn's algorithm with a pluggable tie-break:
+//! deterministic (lowest node id — reproducible default) or seeded-random
+//! (the paper's variant, used by the min-memory branch-order search).
+
+use super::{Graph, NodeId};
+use crate::util::rng::Pcg32;
+
+/// Tie-break policy when several nodes are simultaneously schedulable.
+pub enum TieBreak<'a> {
+    /// Always pick the lowest node id (stable, reproducible).
+    Deterministic,
+    /// Pick uniformly at random among ready nodes (paper §IV-A).
+    Random(&'a mut Pcg32),
+}
+
+/// Kahn topological sort; returns a linear schedule of all nodes.
+pub fn topo_sort(g: &Graph, mut tie: TieBreak) -> Vec<NodeId> {
+    let n = g.len();
+    let mut indeg = vec![0usize; n];
+    for node in &g.nodes {
+        indeg[node.id.0] = node.inputs.len();
+    }
+    let succ = g.successors();
+    // `ready` kept sorted so Deterministic picks the minimum in O(1) and
+    // Random can index uniformly.
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut order = Vec::with_capacity(n);
+    while !ready.is_empty() {
+        let pick_idx = match &mut tie {
+            TieBreak::Deterministic => 0,
+            TieBreak::Random(rng) => rng.gen_usize(0, ready.len()),
+        };
+        let v = ready.remove(pick_idx);
+        order.push(NodeId(v));
+        for &s in &succ[v] {
+            indeg[s.0] -= 1;
+            if indeg[s.0] == 0 {
+                // Insert keeping `ready` sorted.
+                let pos = ready.partition_point(|&r| r < s.0);
+                ready.insert(pos, s.0);
+            }
+        }
+    }
+    assert_eq!(order.len(), n, "graph has a cycle (builder bug)");
+    order
+}
+
+/// Check that `order` is a valid topological order of `g`.
+pub fn is_topo_order(g: &Graph, order: &[NodeId]) -> bool {
+    if order.len() != g.len() {
+        return false;
+    }
+    let mut pos = vec![usize::MAX; g.len()];
+    for (i, &v) in order.iter().enumerate() {
+        if pos[v.0] != usize::MAX {
+            return false; // duplicate
+        }
+        pos[v.0] = i;
+    }
+    g.nodes
+        .iter()
+        .all(|n| n.inputs.iter().all(|&i| pos[i.0] < pos[n.id.0]))
+}
+
+/// Position lookup: `pos[node.0]` = index of node in `order`.
+pub fn positions(order: &[NodeId], n: usize) -> Vec<usize> {
+    let mut pos = vec![usize::MAX; n];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v.0] = i;
+    }
+    pos
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Act, LayerKind};
+    use crate::testkit::{property, Gen};
+
+    fn branching_graph() -> Graph {
+        // input -> conv -> {branch1: relu -> conv, branch2: conv} -> concat
+        let mut g = Graph::new("branchy");
+        let x = g.input(3, 16, 16);
+        let conv = |g: &mut Graph, inp, out_c| {
+            g.add(
+                LayerKind::Conv2d {
+                    out_c,
+                    kernel: (3, 3),
+                    stride: (1, 1),
+                    pad: (1, 1),
+                    groups: 1,
+                    bias: false,
+                },
+                &[inp],
+            )
+        };
+        let stem = conv(&mut g, x, 8);
+        let r = g.add(LayerKind::Activation(Act::Relu), &[stem]);
+        let b1 = conv(&mut g, r, 8);
+        let b2 = conv(&mut g, stem, 4);
+        g.add(LayerKind::Concat, &[b1, b2]);
+        g
+    }
+
+    #[test]
+    fn deterministic_sort_is_valid_and_stable() {
+        let g = branching_graph();
+        let o1 = topo_sort(&g, TieBreak::Deterministic);
+        let o2 = topo_sort(&g, TieBreak::Deterministic);
+        assert_eq!(o1, o2);
+        assert!(is_topo_order(&g, &o1));
+    }
+
+    #[test]
+    fn random_sort_is_valid_for_any_seed() {
+        let g = branching_graph();
+        for seed in 0..50 {
+            let mut rng = Pcg32::seeded(seed);
+            let o = topo_sort(&g, TieBreak::Random(&mut rng));
+            assert!(is_topo_order(&g, &o), "seed {seed} gave invalid order");
+        }
+    }
+
+    #[test]
+    fn random_sort_explores_different_orders() {
+        let g = branching_graph();
+        let mut distinct = std::collections::BTreeSet::new();
+        for seed in 0..30 {
+            let mut rng = Pcg32::seeded(seed);
+            distinct.insert(topo_sort(&g, TieBreak::Random(&mut rng)));
+        }
+        assert!(distinct.len() > 1, "random tie-break never diverged");
+    }
+
+    #[test]
+    fn property_random_dags_sort_validly() {
+        property("topo sort valid on random DAGs", 150, |rng| {
+            let n = Gen::usize_in(rng, 2..60);
+            let preds = Gen::dag(rng, n, 0.1);
+            // Build a Graph whose shapes all match (use Add-friendly
+            // single shape everywhere; Concat would change channels).
+            let mut g = Graph::new("prop");
+            let x = g.input(4, 4, 4);
+            let mut ids = vec![x];
+            for v in 1..n {
+                let inputs: Vec<NodeId> = preds[v].iter().map(|&p| ids[p]).collect();
+                let id = if inputs.len() >= 2 {
+                    g.add(LayerKind::Add, &inputs)
+                } else {
+                    g.add(LayerKind::Activation(Act::Relu), &inputs)
+                };
+                ids.push(id);
+            }
+            let o = topo_sort(&g, TieBreak::Deterministic);
+            assert!(is_topo_order(&g, &o));
+            let mut r = Pcg32::seeded(7);
+            let o = topo_sort(&g, TieBreak::Random(&mut r));
+            assert!(is_topo_order(&g, &o));
+        });
+    }
+
+    #[test]
+    fn positions_inverts_order() {
+        let g = branching_graph();
+        let o = topo_sort(&g, TieBreak::Deterministic);
+        let pos = positions(&o, g.len());
+        for (i, &v) in o.iter().enumerate() {
+            assert_eq!(pos[v.0], i);
+        }
+    }
+}

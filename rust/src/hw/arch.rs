@@ -1,0 +1,172 @@
+//! Parametric spatial-accelerator architecture description.
+//!
+//! Mirrors Timeloop's architecture spec at the granularity this DSE
+//! needs: a rows×cols PE array (one MAC per PE per cycle), a per-PE
+//! register file, a shared global buffer, an off-chip DRAM channel, and a
+//! vector post-processing unit for non-MAC layers. The dataflow fixes
+//! which loop dimensions are spatialized and the temporal loop order at
+//! each memory level; the mapper searches tile sizes within it.
+
+use super::energy::EnergyTable;
+use super::workload::Dim;
+
+/// Dataflow: spatial dim assignment plus fixed per-level loop orders.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Dataflow {
+    pub name: &'static str,
+    /// Dims spatialized across array rows (factors multiply; product
+    /// bounded by `pe_rows`).
+    pub row_dims: [Dim; 2],
+    /// Dims spatialized across array columns.
+    pub col_dims: [Dim; 2],
+    /// Temporal loop order at the GLB level, outermost → innermost.
+    pub glb_order: [Dim; 6],
+    /// Temporal loop order at the DRAM level, outermost → innermost.
+    pub dram_order: [Dim; 6],
+}
+
+impl Dataflow {
+    /// Eyeriss-style row stationary: filter rows × channels across array
+    /// rows, output rows × output channels across columns; weights enjoy
+    /// temporal reuse across the innermost P/Q loops.
+    pub fn row_stationary() -> Self {
+        use Dim::*;
+        Dataflow {
+            name: "row-stationary",
+            row_dims: [R, C],
+            col_dims: [P, K],
+            glb_order: [K, C, R, S, P, Q],
+            dram_order: [K, C, R, S, P, Q],
+        }
+    }
+
+    /// Simba-style weight stationary: output × input channels across the
+    /// array; weights resident in the PEs while P/Q stream.
+    pub fn weight_stationary() -> Self {
+        use Dim::*;
+        Dataflow {
+            name: "weight-stationary",
+            row_dims: [K, R],
+            col_dims: [C, S],
+            glb_order: [R, S, K, C, P, Q],
+            dram_order: [K, C, R, S, P, Q],
+        }
+    }
+
+    /// Output stationary (ablation baseline): psums pinned in the PEs.
+    pub fn output_stationary() -> Self {
+        use Dim::*;
+        Dataflow {
+            name: "output-stationary",
+            row_dims: [P, K],
+            col_dims: [Q, C],
+            glb_order: [P, Q, K, C, R, S],
+            dram_order: [K, P, Q, C, R, S],
+        }
+    }
+}
+
+/// One accelerator (the paper's "hardware platform" compute side).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Accelerator {
+    pub name: String,
+    /// Datapath / storage precision in bits (16 for EYR, 8 for SMB).
+    pub bits: u32,
+    pub clock_hz: f64,
+    pub pe_rows: usize,
+    pub pe_cols: usize,
+    /// Register file bytes per PE (holds W/I/O tiles).
+    pub rf_bytes: u64,
+    /// Shared global buffer bytes.
+    pub glb_bytes: u64,
+    /// DRAM bandwidth, bytes per cycle.
+    pub dram_bw: f64,
+    /// GLB bandwidth (array side), bytes per cycle.
+    pub glb_bw: f64,
+    /// Vector-unit scalar ops per cycle (non-MAC layers).
+    pub vector_lanes: f64,
+    pub dataflow: Dataflow,
+    pub energy: EnergyTable,
+}
+
+impl Accelerator {
+    pub fn num_pes(&self) -> usize {
+        self.pe_rows * self.pe_cols
+    }
+
+    /// Bytes per element at this accelerator's precision.
+    pub fn elem_bytes(&self) -> f64 {
+        self.bits as f64 / 8.0
+    }
+
+    /// Peak MACs/s — the roofline the mapper's utilization is judged
+    /// against.
+    pub fn peak_macs_per_s(&self) -> f64 {
+        self.num_pes() as f64 * self.clock_hz
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bits == 0 || self.bits > 64 {
+            return Err(format!("{}: bad bit width {}", self.name, self.bits));
+        }
+        if self.num_pes() == 0 {
+            return Err(format!("{}: empty PE array", self.name));
+        }
+        if self.rf_bytes < 2 * self.elem_bytes() as u64 {
+            return Err(format!("{}: RF cannot hold two elements", self.name));
+        }
+        if self.glb_bytes < self.rf_bytes {
+            return Err(format!("{}: GLB smaller than one RF", self.name));
+        }
+        if !(self.clock_hz > 0.0) || !(self.dram_bw > 0.0) || !(self.glb_bw > 0.0) {
+            return Err(format!("{}: non-positive rate", self.name));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+
+    #[test]
+    fn presets_validate() {
+        presets::eyeriss_like().validate().unwrap();
+        presets::simba_like().validate().unwrap();
+    }
+
+    #[test]
+    fn validate_catches_bad_configs() {
+        let mut a = presets::eyeriss_like();
+        a.pe_rows = 0;
+        assert!(a.validate().is_err());
+        let mut a = presets::eyeriss_like();
+        a.bits = 0;
+        assert!(a.validate().is_err());
+        let mut a = presets::eyeriss_like();
+        a.glb_bytes = 1;
+        assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn peak_roofline() {
+        let a = presets::eyeriss_like();
+        assert_eq!(a.peak_macs_per_s(), 168.0 * 200e6);
+    }
+
+    #[test]
+    fn dataflow_orders_are_permutations() {
+        for df in [
+            Dataflow::row_stationary(),
+            Dataflow::weight_stationary(),
+            Dataflow::output_stationary(),
+        ] {
+            for order in [df.glb_order, df.dram_order] {
+                let mut idx: Vec<usize> = order.iter().map(|d| d.idx()).collect();
+                idx.sort_unstable();
+                assert_eq!(idx, vec![0, 1, 2, 3, 4, 5], "{} order not a permutation", df.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Per-action energy tables (the Accelergy role).
+//!
+//! Accelergy estimates component energies from technology models; we use
+//! published per-action numbers instead and scale them with operand bit
+//! width. Baseline 16-bit values (45 nm class, normalized to the numbers
+//! reported by Horowitz ISSCC'14 and the Eyeriss/Simba papers):
+//!
+//! | action                | energy    |
+//! |-----------------------|-----------|
+//! | 16-bit MAC            | ~2.2 pJ   |
+//! | RF access (0.5 KiB)   | ~1.0 pJ   |
+//! | NoC hop (array)       | ~2.0 pJ   |
+//! | GLB access (100 KiB)  | ~12 pJ    |
+//! | DRAM access           | ~200 pJ   |
+//!
+//! Memory access energy scales ~linearly with word width; multiplier
+//! energy roughly quadratically (we use exponent 1.7, between the ideal
+//! quadratic multiplier and the linear adder/register overhead).
+//!
+//! The DSE consumes *relative* costs — which platform is cheaper for
+//! which layer — so consistent scaling matters more than absolute pJ.
+
+/// Energy per action, in picojoules per element unless noted.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyTable {
+    pub mac_pj: f64,
+    /// Per-element register-file access inside a PE.
+    pub rf_pj: f64,
+    /// Per-element hop over the array interconnect (GLB→PE delivery).
+    pub noc_pj: f64,
+    /// Per-element global-buffer (shared SRAM) access.
+    pub glb_pj: f64,
+    /// Per-element off-chip DRAM access.
+    pub dram_pj: f64,
+    /// Per-scalar-op energy in the vector/post-processing unit.
+    pub vector_pj: f64,
+    /// Static (leakage + clock tree) power in watts, charged for the
+    /// layer's wall-clock latency.
+    pub static_w: f64,
+}
+
+/// 16-bit reference point (see module docs).
+pub fn baseline_16b() -> EnergyTable {
+    EnergyTable {
+        mac_pj: 2.2,
+        rf_pj: 1.0,
+        noc_pj: 2.0,
+        glb_pj: 12.0,
+        dram_pj: 200.0,
+        vector_pj: 0.6,
+        static_w: 0.05,
+    }
+}
+
+/// Scale the 16-bit baseline to a different operand width.
+pub fn scaled(bits: u32) -> EnergyTable {
+    let b = baseline_16b();
+    let lin = bits as f64 / 16.0;
+    let mul = lin.powf(1.7);
+    EnergyTable {
+        mac_pj: b.mac_pj * mul,
+        rf_pj: b.rf_pj * lin,
+        noc_pj: b.noc_pj * lin,
+        glb_pj: b.glb_pj * lin,
+        dram_pj: b.dram_pj * lin,
+        vector_pj: b.vector_pj * lin,
+        static_w: b.static_w, // leakage dominated by area, not datapath width
+    }
+}
+
+pub const PJ: f64 = 1e-12;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_hierarchy_ordering() {
+        let e = baseline_16b();
+        assert!(e.rf_pj < e.noc_pj);
+        assert!(e.noc_pj < e.glb_pj);
+        assert!(e.glb_pj < e.dram_pj);
+        // DRAM ≫ MAC: the "memory wall" the dataflows exist to avoid.
+        assert!(e.dram_pj / e.mac_pj > 50.0);
+    }
+
+    #[test]
+    fn eight_bit_is_cheaper() {
+        let e16 = scaled(16);
+        let e8 = scaled(8);
+        assert!((e8.dram_pj / e16.dram_pj - 0.5).abs() < 1e-9);
+        assert!(e8.mac_pj < 0.5 * e16.mac_pj, "MAC should scale super-linearly");
+        assert!(e8.mac_pj > 0.2 * e16.mac_pj);
+        assert_eq!(e8.static_w, e16.static_w);
+    }
+
+    #[test]
+    fn scaled_16_is_identity() {
+        assert_eq!(scaled(16), baseline_16b());
+    }
+}

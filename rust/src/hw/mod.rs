@@ -1,0 +1,206 @@
+//! Hardware evaluation (§IV "HW Evaluation"): per-layer latency/energy on
+//! each accelerator via a Timeloop-like mapping search plus an
+//! Accelergy-like energy table, with a cost cache so repeated layer
+//! shapes (ResNet blocks, inception branches) are mapped once.
+//!
+//! The key property the explorer exploits: **layer costs are independent
+//! of the partition point**, so a whole exploration needs exactly
+//! `layers × platforms` mapper runs, after which every candidate
+//! partitioning is a prefix-sum lookup.
+
+pub mod arch;
+pub mod energy;
+pub mod mapper;
+pub mod presets;
+pub mod vector;
+pub mod workload;
+
+pub use arch::{Accelerator, Dataflow};
+pub use mapper::{LayerCost, Objective, SearchCfg};
+pub use workload::{ConvWorkload, Dataspace, Dim};
+
+use crate::graph::{Graph, Node, NodeId};
+use std::collections::HashMap;
+use std::ops::Range;
+
+/// Aggregate cost of a schedule segment on one accelerator (sequential
+/// layer execution: latencies and energies add).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SegmentCost {
+    pub latency_s: f64,
+    pub energy_j: f64,
+    pub macs: u64,
+    pub dram_bytes: u64,
+}
+
+impl SegmentCost {
+    pub fn add(&mut self, c: &LayerCost) {
+        self.latency_s += c.latency_s;
+        self.energy_j += c.energy_j;
+        self.macs += c.macs;
+        self.dram_bytes += c.dram_bytes;
+    }
+}
+
+/// Cache key: accelerator name + structural layer signature.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+enum CostKey {
+    Mac(String, [usize; 6], usize, (usize, usize)),
+    Vector(String, &'static str, usize, usize, u64),
+}
+
+/// Memoizing per-layer evaluator.
+pub struct HwEvaluator {
+    pub cfg: SearchCfg,
+    cache: HashMap<CostKey, LayerCost>,
+    /// Mapper invocations that missed the cache (for §Perf reporting).
+    pub mapper_runs: usize,
+}
+
+impl HwEvaluator {
+    pub fn new(cfg: SearchCfg) -> Self {
+        Self { cfg, cache: HashMap::new(), mapper_runs: 0 }
+    }
+
+    /// Cost of one layer on one accelerator (cached).
+    pub fn layer_cost(&mut self, acc: &Accelerator, g: &Graph, node: &Node) -> LayerCost {
+        let key = match ConvWorkload::from_node(g, node) {
+            Some(wl) => {
+                let (b, grp, st) = wl.signature();
+                CostKey::Mac(acc.name.clone(), b, grp, st)
+            }
+            None => CostKey::Vector(
+                acc.name.clone(),
+                node.kind.op_name(),
+                node.fmap_in(g),
+                node.fmap_out(),
+                node.ops,
+            ),
+        };
+        if let Some(c) = self.cache.get(&key) {
+            return c.clone();
+        }
+        let cost = match ConvWorkload::from_node(g, node) {
+            Some(wl) => {
+                self.mapper_runs += 1;
+                mapper::map_layer(acc, &wl, &self.cfg)
+            }
+            None => vector::vector_layer_cost(acc, g, node),
+        };
+        self.cache.insert(key, cost.clone());
+        cost
+    }
+
+    /// Per-layer costs for a whole schedule, in schedule order.
+    pub fn schedule_costs(
+        &mut self,
+        acc: &Accelerator,
+        g: &Graph,
+        order: &[NodeId],
+    ) -> Vec<LayerCost> {
+        order.iter().map(|&id| self.layer_cost(acc, g, g.node(id))).collect()
+    }
+
+    /// Aggregate cost of `order[range]`.
+    pub fn segment_cost(
+        &mut self,
+        acc: &Accelerator,
+        g: &Graph,
+        order: &[NodeId],
+        range: Range<usize>,
+    ) -> SegmentCost {
+        let mut total = SegmentCost::default();
+        for p in range {
+            let c = self.layer_cost(acc, g, g.node(order[p]));
+            total.add(&c);
+        }
+        total
+    }
+
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+/// Prefix sums over per-layer costs: `prefix[i]` = cost of layers
+/// `order[0..i]`. Any segment cost is then `prefix[b] - prefix[a]`.
+pub fn prefix_costs(costs: &[LayerCost]) -> Vec<SegmentCost> {
+    let mut out = Vec::with_capacity(costs.len() + 1);
+    let mut acc = SegmentCost::default();
+    out.push(acc);
+    for c in costs {
+        acc.add(c);
+        out.push(acc);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::{topo_sort, TieBreak};
+    use crate::zoo;
+
+    #[test]
+    fn cache_dedupes_repeated_blocks() {
+        let g = zoo::resnet50(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::eyeriss_like();
+        let mut ev = HwEvaluator::new(SearchCfg {
+            victory: 20,
+            max_samples: 200,
+            ..Default::default()
+        });
+        let costs = ev.schedule_costs(&acc, &g, &order);
+        assert_eq!(costs.len(), g.len());
+        // ResNet-50 has 53 convs + 1 fc but far fewer distinct shapes.
+        assert!(ev.mapper_runs < 30, "mapper ran {} times", ev.mapper_runs);
+    }
+
+    #[test]
+    fn prefix_sums_match_segment_costs() {
+        let g = zoo::squeezenet1_1(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::simba_like();
+        let mut ev = HwEvaluator::new(SearchCfg {
+            victory: 10,
+            max_samples: 100,
+            ..Default::default()
+        });
+        let costs = ev.schedule_costs(&acc, &g, &order);
+        let prefix = prefix_costs(&costs);
+        let seg = ev.segment_cost(&acc, &g, &order, 3..10);
+        let diff_lat = prefix[10].latency_s - prefix[3].latency_s;
+        let diff_en = prefix[10].energy_j - prefix[3].energy_j;
+        assert!((seg.latency_s - diff_lat).abs() < 1e-12);
+        assert!((seg.energy_j - diff_en).abs() < 1e-12);
+    }
+
+    #[test]
+    fn whole_network_latency_plausible() {
+        // ResNet-50 at ~34-51 GMAC/s peak should take tens to hundreds
+        // of ms per inference on these embedded design points.
+        let g = zoo::resnet50(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        for acc in [presets::eyeriss_like(), presets::simba_like()] {
+            let mut ev = HwEvaluator::new(SearchCfg {
+                victory: 30,
+                max_samples: 400,
+                ..Default::default()
+            });
+            let total = ev.segment_cost(&acc, &g, &order, 0..g.len());
+            assert!(
+                (0.02..2.0).contains(&total.latency_s),
+                "{} latency {}",
+                acc.name,
+                total.latency_s
+            );
+            assert!(
+                (0.001..5.0).contains(&total.energy_j),
+                "{} energy {}",
+                acc.name,
+                total.energy_j
+            );
+        }
+    }
+}

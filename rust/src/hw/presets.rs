@@ -1,0 +1,90 @@
+//! The two accelerator design points the paper evaluates (§V-A):
+//! a 16-bit Eyeriss-like architecture (EYR) and an 8-bit Simba-like
+//! architecture (SMB), both at 200 MHz.
+
+use super::arch::{Accelerator, Dataflow};
+use super::energy;
+
+/// Platform A: Eyeriss-like, 16-bit, 200 MHz. 12×14 PE array (168 PEs,
+/// as Eyeriss v1), row-stationary dataflow, 512 B register file per PE,
+/// 108 KiB global buffer. Modest LPDDR channel (8 B/cycle ≈ 1.6 GB/s).
+pub fn eyeriss_like() -> Accelerator {
+    Accelerator {
+        name: "EYR".to_string(),
+        bits: 16,
+        clock_hz: 200e6,
+        pe_rows: 12,
+        pe_cols: 14,
+        rf_bytes: 512,
+        glb_bytes: 108 * 1024,
+        dram_bw: 8.0,
+        glb_bw: 32.0,
+        vector_lanes: 16.0,
+        dataflow: Dataflow::row_stationary(),
+        energy: energy::scaled(16),
+    }
+}
+
+/// Platform B: Simba-like, 8-bit, 200 MHz. 16×16 MAC array (256 MACs,
+/// one Simba chiplet's worth), weight-stationary dataflow, 256 B weight
+/// RF per PE, 64 KiB global buffer, same DRAM channel as EYR.
+pub fn simba_like() -> Accelerator {
+    Accelerator {
+        name: "SMB".to_string(),
+        bits: 8,
+        clock_hz: 200e6,
+        pe_rows: 16,
+        pe_cols: 16,
+        rf_bytes: 256,
+        glb_bytes: 64 * 1024,
+        dram_bw: 8.0,
+        glb_bw: 64.0,
+        vector_lanes: 32.0,
+        dataflow: Dataflow::weight_stationary(),
+        energy: energy::scaled(8),
+    }
+}
+
+/// Look up a preset by name (used by the TOML config loader).
+pub fn by_name(name: &str) -> Option<Accelerator> {
+    match name.to_ascii_uppercase().as_str() {
+        "EYR" | "EYERISS" => Some(eyeriss_like()),
+        "SMB" | "SIMBA" => Some(simba_like()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(by_name("eyr").unwrap().name, "EYR");
+        assert_eq!(by_name("Simba").unwrap().name, "SMB");
+        assert!(by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn paper_clock_and_widths() {
+        let e = eyeriss_like();
+        let s = simba_like();
+        assert_eq!(e.clock_hz, 200e6);
+        assert_eq!(s.clock_hz, 200e6);
+        assert_eq!(e.bits, 16);
+        assert_eq!(s.bits, 8);
+    }
+
+    #[test]
+    fn platforms_are_comparable_but_distinct() {
+        let e = eyeriss_like();
+        let s = simba_like();
+        // SMB has more, cheaper MACs; EYR more on-chip reuse capacity.
+        assert!(s.num_pes() > e.num_pes());
+        assert!(s.energy.mac_pj < e.energy.mac_pj);
+        assert!(e.glb_bytes > s.glb_bytes);
+        // Peak throughputs within ~2x so pipelining can balance (Def 4).
+        let ratio = s.peak_macs_per_s() / e.peak_macs_per_s();
+        assert!((1.0..2.0).contains(&ratio), "peak ratio {ratio}");
+    }
+}

@@ -1,0 +1,91 @@
+//! Cost model for non-MAC layers (activation, pooling, BN, elementwise
+//! add/mul, concat, GAP) on the accelerator's vector post-processing
+//! unit. These layers are bandwidth-dominated: the model takes the max of
+//! the vector-lane compute time and DRAM streaming time for all operand
+//! bytes, mirroring how Timeloop users handle "everything that is not a
+//! convolution".
+
+use super::arch::Accelerator;
+use super::energy::PJ;
+use super::mapper::LayerCost;
+use crate::graph::{Graph, LayerKind, Node};
+
+/// Cost of a non-MAC layer. Input/Flatten/Dropout are free (pure view
+/// changes); Concat pays the copy.
+pub fn vector_layer_cost(acc: &Accelerator, g: &Graph, node: &Node) -> LayerCost {
+    match node.kind {
+        LayerKind::Input | LayerKind::Flatten | LayerKind::Dropout => LayerCost::zero(),
+        _ => {
+            let in_elems = node.fmap_in(g) as f64;
+            let out_elems = node.fmap_out() as f64;
+            // Concat is a pure copy: read inputs, write output, no ops.
+            let ops = node.ops as f64;
+            let eb = acc.elem_bytes();
+            let bytes = (in_elems + out_elems) * eb;
+            let compute_cycles = ops / acc.vector_lanes;
+            let mem_cycles = bytes / acc.dram_bw;
+            let latency_cycles = compute_cycles.max(mem_cycles);
+            let latency_s = latency_cycles / acc.clock_hz;
+            let e = &acc.energy;
+            let energy_j = (ops * e.vector_pj + (in_elems + out_elems) * e.dram_pj) * PJ
+                + e.static_w * latency_s;
+            LayerCost {
+                latency_s,
+                energy_j,
+                utilization: 0.0,
+                macs: 0,
+                dram_bytes: bytes as u64,
+                mapping_desc: format!("vector[{}]", node.kind.op_name()),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hw::presets;
+    use crate::zoo;
+
+    #[test]
+    fn relu_is_bandwidth_bound() {
+        let acc = presets::eyeriss_like();
+        let g = zoo::resnet50(1000);
+        let relu = g.by_name("Relu_0").unwrap(); // 64x112x112
+        let c = vector_layer_cost(&acc, &g, relu);
+        let elems = 64.0 * 112.0 * 112.0;
+        let expected = 2.0 * elems * 2.0 / 8.0 / 200e6; // bytes / bw / clk
+        assert!((c.latency_s - expected).abs() / expected < 1e-9);
+        assert!(c.energy_j > 0.0);
+    }
+
+    #[test]
+    fn free_layers() {
+        let acc = presets::simba_like();
+        let g = zoo::vgg16(1000);
+        let flat = g.by_name("Flatten_0").unwrap();
+        let c = vector_layer_cost(&acc, &g, flat);
+        assert_eq!(c.latency_s, 0.0);
+        assert_eq!(c.energy_j, 0.0);
+        let drop = g.by_name("Dropout_0").unwrap();
+        assert_eq!(vector_layer_cost(&acc, &g, drop).latency_s, 0.0);
+    }
+
+    #[test]
+    fn concat_pays_copy_but_no_ops() {
+        let acc = presets::eyeriss_like();
+        let g = zoo::googlenet(1000);
+        let cat = g.by_name("Concat_0").unwrap();
+        let c = vector_layer_cost(&acc, &g, cat);
+        assert!(c.latency_s > 0.0, "concat must pay the copy");
+    }
+
+    #[test]
+    fn eight_bit_halves_relu_latency() {
+        let g = zoo::resnet50(1000);
+        let relu = g.by_name("Relu_0").unwrap();
+        let e = vector_layer_cost(&presets::eyeriss_like(), &g, relu);
+        let s = vector_layer_cost(&presets::simba_like(), &g, relu);
+        assert!(s.latency_s < e.latency_s, "8-bit streams fewer bytes");
+    }
+}

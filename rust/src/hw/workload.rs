@@ -1,0 +1,219 @@
+//! Convolution loop-nest workload abstraction.
+//!
+//! Every MAC layer (Conv2d incl. grouped/depthwise, Linear) is expressed
+//! as the canonical 6-dimensional loop nest over
+//! `K` (output channels), `C` (input channels), `R`,`S` (filter height/
+//! width), `P`,`Q` (output height/width), per filter group. This is the
+//! same abstraction Timeloop uses ("problem shape"), and everything the
+//! mapper needs to reason about tiling, reuse and buffer footprints.
+
+use crate::graph::{Graph, LayerKind, Node};
+
+/// Loop-nest dimension. Order matters: it is the canonical index into
+/// `[usize; 6]` bound arrays.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dim {
+    K = 0,
+    C = 1,
+    R = 2,
+    S = 3,
+    P = 4,
+    Q = 5,
+}
+
+pub const DIMS: [Dim; 6] = [Dim::K, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q];
+
+impl Dim {
+    pub fn idx(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::K => "K",
+            Dim::C => "C",
+            Dim::R => "R",
+            Dim::S => "S",
+            Dim::P => "P",
+            Dim::Q => "Q",
+        }
+    }
+}
+
+/// The three operand tensors of a MAC loop nest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataspace {
+    Weights,
+    Inputs,
+    Outputs,
+}
+
+pub const DATASPACES: [Dataspace; 3] = [Dataspace::Weights, Dataspace::Inputs, Dataspace::Outputs];
+
+impl Dataspace {
+    /// Which loop dimensions index this dataspace (input height/width are
+    /// induced by P+R / Q+S, so Inputs is relevant to all of C,R,S,P,Q).
+    pub fn relevant(self, d: Dim) -> bool {
+        match self {
+            Dataspace::Weights => matches!(d, Dim::K | Dim::C | Dim::R | Dim::S),
+            Dataspace::Inputs => !matches!(d, Dim::K),
+            Dataspace::Outputs => matches!(d, Dim::K | Dim::P | Dim::Q),
+        }
+    }
+}
+
+/// One MAC layer as a (possibly grouped) loop nest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConvWorkload {
+    pub layer_name: String,
+    /// Per-group bounds `[K, C, R, S, P, Q]`.
+    pub bounds: [usize; 6],
+    /// Filter groups; the mapper evaluates one group and scales by this.
+    pub groups: usize,
+    pub stride: (usize, usize),
+}
+
+impl ConvWorkload {
+    /// Extract the workload from a graph node; `None` for non-MAC layers.
+    pub fn from_node(g: &Graph, node: &Node) -> Option<Self> {
+        match &node.kind {
+            LayerKind::Conv2d { out_c, kernel, stride, groups, .. } => {
+                let in_c = g.node(node.inputs[0]).out_shape.channels();
+                let (p, q) = node.out_shape.spatial();
+                Some(Self {
+                    layer_name: node.name.clone(),
+                    bounds: [out_c / groups, in_c / groups, kernel.0, kernel.1, p, q],
+                    groups: *groups,
+                    stride: *stride,
+                })
+            }
+            LayerKind::Linear { out_features, .. } => {
+                let in_f = g.node(node.inputs[0]).out_shape.numel();
+                Some(Self {
+                    layer_name: node.name.clone(),
+                    bounds: [*out_features, in_f, 1, 1, 1, 1],
+                    groups: 1,
+                    stride: (1, 1),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    pub fn bound(&self, d: Dim) -> usize {
+        self.bounds[d.idx()]
+    }
+
+    /// Total MACs (all groups).
+    pub fn macs(&self) -> u64 {
+        self.bounds.iter().map(|&b| b as u64).product::<u64>() * self.groups as u64
+    }
+
+    /// Unique elements of a dataspace per group, for tile extents
+    /// `t = [K, C, R, S, P, Q]` (input halo accounted via stride).
+    pub fn footprint(&self, ds: Dataspace, t: &[usize; 6]) -> u64 {
+        let k = t[0] as u64;
+        let c = t[1] as u64;
+        let r = t[2] as u64;
+        let s = t[3] as u64;
+        let p = t[4] as u64;
+        let q = t[5] as u64;
+        match ds {
+            Dataspace::Weights => k * c * r * s,
+            Dataspace::Inputs => {
+                let h = (p - 1) * self.stride.0 as u64 + r;
+                let w = (q - 1) * self.stride.1 as u64 + s;
+                c * h * w
+            }
+            Dataspace::Outputs => k * p * q,
+        }
+    }
+
+    /// Unique elements of a dataspace over the full per-group workload.
+    pub fn total_footprint(&self, ds: Dataspace) -> u64 {
+        self.footprint(ds, &self.bounds)
+    }
+
+    /// Structural signature for cost caching: layers with identical
+    /// bounds/groups/stride cost the same on a given accelerator.
+    pub fn signature(&self) -> ([usize; 6], usize, (usize, usize)) {
+        (self.bounds, self.groups, self.stride)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    #[test]
+    fn resnet_stem_workload() {
+        let g = zoo::resnet50(1000);
+        let stem = g.by_name("Conv_0").unwrap();
+        let w = ConvWorkload::from_node(&g, stem).unwrap();
+        assert_eq!(w.bounds, [64, 3, 7, 7, 112, 112]);
+        assert_eq!(w.groups, 1);
+        assert_eq!(w.stride, (2, 2));
+        assert_eq!(w.macs(), stem.macs);
+    }
+
+    #[test]
+    fn depthwise_workload_groups() {
+        let g = zoo::efficientnet_b0(1000);
+        // First depthwise: Conv_1 (stem is Conv_0), 32 groups 3x3 on 112.
+        let dw = g.by_name("Conv_1").unwrap();
+        let w = ConvWorkload::from_node(&g, dw).unwrap();
+        assert_eq!(w.groups, 32);
+        assert_eq!(w.bounds, [1, 1, 3, 3, 112, 112]);
+        assert_eq!(w.macs(), dw.macs);
+    }
+
+    #[test]
+    fn linear_workload() {
+        let g = zoo::resnet50(1000);
+        let fc = g.by_name("Gemm_0").unwrap();
+        let w = ConvWorkload::from_node(&g, fc).unwrap();
+        assert_eq!(w.bounds, [1000, 2048, 1, 1, 1, 1]);
+        assert_eq!(w.macs(), 2_048_000);
+    }
+
+    #[test]
+    fn non_mac_layers_have_no_workload() {
+        let g = zoo::resnet50(1000);
+        let relu = g.by_name("Relu_0").unwrap();
+        assert!(ConvWorkload::from_node(&g, relu).is_none());
+    }
+
+    #[test]
+    fn input_footprint_includes_halo() {
+        let g = zoo::resnet50(1000);
+        let stem = g.by_name("Conv_0").unwrap();
+        let w = ConvWorkload::from_node(&g, stem).unwrap();
+        // Tile of 1x1 output with 7x7 kernel at stride 2 needs 7x7 input.
+        let fp = w.footprint(Dataspace::Inputs, &[1, 3, 7, 7, 1, 1]);
+        assert_eq!(fp, 3 * 7 * 7);
+        // 2 output columns: width = 1*2 + 7 = 9.
+        let fp = w.footprint(Dataspace::Inputs, &[1, 3, 7, 7, 1, 2]);
+        assert_eq!(fp, 3 * 7 * 9);
+    }
+
+    #[test]
+    fn relevance_table() {
+        use Dataspace::*;
+        assert!(Weights.relevant(Dim::K) && Weights.relevant(Dim::R));
+        assert!(!Weights.relevant(Dim::P));
+        assert!(Inputs.relevant(Dim::P) && !Inputs.relevant(Dim::K));
+        assert!(Outputs.relevant(Dim::Q) && !Outputs.relevant(Dim::C));
+    }
+
+    #[test]
+    fn total_footprints_match_tensor_sizes() {
+        let g = zoo::vgg16(1000);
+        let c1 = g.by_name("Conv_1").unwrap(); // 64->64 3x3 on 224
+        let w = ConvWorkload::from_node(&g, c1).unwrap();
+        assert_eq!(w.total_footprint(Dataspace::Weights), 64 * 64 * 9);
+        assert_eq!(w.total_footprint(Dataspace::Outputs), 64 * 224 * 224);
+        // Input halo: (224-1)*1+3 = 226 per side.
+        assert_eq!(w.total_footprint(Dataspace::Inputs), 64 * 226 * 226);
+    }
+}

@@ -1,0 +1,31 @@
+//! # partir — automated DNN inference partitioning for distributed embedded systems
+//!
+//! A reproduction of Kreß et al. (2024): a hardware-aware design-space
+//! exploration framework that finds Pareto-optimal partitioning points for
+//! DNN inference over a chain of embedded accelerator platforms, plus a
+//! runtime that executes the chosen partitioning as an asynchronous
+//! pipeline via AOT-compiled XLA artifacts.
+//!
+//! Architecture (three layers):
+//! * **L3 — this crate**: graph analysis, memory/link/accuracy/hardware
+//!   models, NSGA-II, the explorer, and the pipeline coordinator.
+//! * **L2 — `python/compile/model.py`**: JAX model (build time only).
+//! * **L1 — `python/compile/kernels/`**: Pallas kernels (build time only).
+//!
+//! See `DESIGN.md` for the full system inventory and the per-experiment
+//! index mapping every paper table/figure to a bench target.
+
+pub mod accuracy;
+pub mod config;
+pub mod explorer;
+pub mod graph;
+pub mod hw;
+pub mod coordinator;
+pub mod nsga2;
+pub mod report;
+pub mod runtime;
+pub mod link;
+pub mod memory;
+pub mod zoo;
+pub mod testkit;
+pub mod util;

@@ -1,0 +1,184 @@
+//! Transmission-link model (latency + energy of moving intermediate
+//! feature maps between platforms).
+//!
+//! The paper connects platforms via Gigabit Ethernet and uses the
+//! open-source link model from CNNParted [9]. We implement the same
+//! functional form: a fixed per-message base latency (stack + propagation),
+//! per-packet overhead, payload serialization at the effective bandwidth,
+//! and energy proportional to bytes on the wire plus per-packet framing
+//! cost. All coefficients are configurable through `configs/*.toml`.
+
+/// Parametric point-to-point link.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkModel {
+    pub name: String,
+    /// Effective payload bandwidth in bits/s (GbE ≈ 941 Mbit/s after
+    /// TCP/IP + Ethernet framing overhead).
+    pub bandwidth_bps: f64,
+    /// Payload bytes per packet (1460 for TCP over Ethernet).
+    pub mtu_payload: u64,
+    /// Fixed software/propagation latency per transfer, seconds.
+    pub base_latency_s: f64,
+    /// Additional per-packet processing latency, seconds.
+    pub per_packet_s: f64,
+    /// Transmission + reception energy per payload byte, joules.
+    pub energy_per_byte_j: f64,
+    /// Per-packet framing/processing energy, joules.
+    pub energy_per_packet_j: f64,
+}
+
+impl LinkModel {
+    /// Gigabit Ethernet with CNNParted-style coefficients:
+    /// 941 Mbit/s effective, 1460 B payload per frame, ~150 µs base
+    /// latency (embedded TCP stack), 2 µs per-packet processing, and
+    /// ~2 W combined TX+RX NIC power at line rate → ≈17 nJ/byte, with
+    /// ~1 µJ per-packet framing energy.
+    pub fn gigabit_ethernet() -> Self {
+        Self {
+            name: "gbe".to_string(),
+            bandwidth_bps: 941e6,
+            mtu_payload: 1460,
+            base_latency_s: 150e-6,
+            per_packet_s: 2e-6,
+            energy_per_byte_j: 17e-9,
+            energy_per_packet_j: 1e-6,
+        }
+    }
+
+    /// An ideal infinite link (used by tests and as an ablation baseline).
+    pub fn ideal() -> Self {
+        Self {
+            name: "ideal".to_string(),
+            bandwidth_bps: f64::INFINITY,
+            mtu_payload: u64::MAX,
+            base_latency_s: 0.0,
+            per_packet_s: 0.0,
+            energy_per_byte_j: 0.0,
+            energy_per_packet_j: 0.0,
+        }
+    }
+
+    /// Number of packets for a payload.
+    pub fn packets(&self, bytes: u64) -> u64 {
+        if bytes == 0 {
+            0
+        } else {
+            bytes.div_ceil(self.mtu_payload)
+        }
+    }
+
+    /// Transfer latency in seconds for `bytes` of payload. Zero bytes
+    /// means no transfer (single-platform schedule) and costs nothing.
+    pub fn latency_s(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        let serialization = (bytes as f64 * 8.0) / self.bandwidth_bps;
+        self.base_latency_s + self.packets(bytes) as f64 * self.per_packet_s + serialization
+    }
+
+    /// Transfer energy in joules for `bytes` of payload.
+    pub fn energy_j(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return 0.0;
+        }
+        bytes as f64 * self.energy_per_byte_j
+            + self.packets(bytes) as f64 * self.energy_per_packet_j
+    }
+
+    /// Sustained throughput ceiling imposed by the link for a repeating
+    /// transfer of `bytes` (inferences/s) — the `1/d_link` term of
+    /// Definition 4. In a pipelined system the base latency overlaps with
+    /// the next transfer, so only serialization + packet processing
+    /// bound the rate.
+    pub fn throughput_ceiling(&self, bytes: u64) -> f64 {
+        if bytes == 0 {
+            return f64::INFINITY;
+        }
+        let occupancy =
+            (bytes as f64 * 8.0) / self.bandwidth_bps + self.packets(bytes) as f64 * self.per_packet_s;
+        1.0 / occupancy
+    }
+
+    /// Bandwidth required (bits/s) to sustain `rate` transfers of
+    /// `bytes` per second — the quantity checked against link capacity
+    /// when filtering candidate partitioning points.
+    pub fn required_bps(bytes: u64, rate: f64) -> f64 {
+        bytes as f64 * 8.0 * rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_bytes_is_free() {
+        let l = LinkModel::gigabit_ethernet();
+        assert_eq!(l.latency_s(0), 0.0);
+        assert_eq!(l.energy_j(0), 0.0);
+        assert_eq!(l.packets(0), 0);
+        assert!(l.throughput_ceiling(0).is_infinite());
+    }
+
+    #[test]
+    fn latency_monotonic_in_bytes() {
+        let l = LinkModel::gigabit_ethernet();
+        let mut prev = 0.0;
+        for bytes in [1u64, 100, 1460, 1461, 10_000, 1_000_000] {
+            let d = l.latency_s(bytes);
+            assert!(d > prev, "latency not monotonic at {bytes}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn gbe_order_of_magnitude() {
+        let l = LinkModel::gigabit_ethernet();
+        // 1 MB payload: serialization ≈ 8.5 ms dominates.
+        let d = l.latency_s(1_000_000);
+        assert!((0.008..0.015).contains(&d), "1 MB GbE latency {d}");
+        // VGG-16 conv1 fmap @16b = 64*224*224*2 B ≈ 6.4 MB ≈ 57 ms.
+        let d = l.latency_s(64 * 224 * 224 * 2);
+        assert!((0.04..0.08).contains(&d), "conv1 fmap latency {d}");
+    }
+
+    #[test]
+    fn packet_boundary() {
+        let l = LinkModel::gigabit_ethernet();
+        assert_eq!(l.packets(1460), 1);
+        assert_eq!(l.packets(1461), 2);
+        assert_eq!(l.packets(14600), 10);
+    }
+
+    #[test]
+    fn energy_scales_linearly_in_payload() {
+        let l = LinkModel::gigabit_ethernet();
+        let e1 = l.energy_j(1460 * 100);
+        let e2 = l.energy_j(1460 * 200);
+        assert!((e2 / e1 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pipelined_ceiling_exceeds_one_shot_rate() {
+        let l = LinkModel::gigabit_ethernet();
+        let bytes = 500_000;
+        let one_shot = 1.0 / l.latency_s(bytes);
+        let ceiling = l.throughput_ceiling(bytes);
+        assert!(ceiling > one_shot);
+    }
+
+    #[test]
+    fn ideal_link_is_free() {
+        let l = LinkModel::ideal();
+        assert_eq!(l.latency_s(123456), 0.0);
+        assert_eq!(l.energy_j(123456), 0.0);
+    }
+
+    #[test]
+    fn required_bandwidth() {
+        // 100 KB at 30 inf/s = 24 Mbit/s.
+        let bps = LinkModel::required_bps(100_000, 30.0);
+        assert!((bps - 24e6).abs() < 1.0);
+    }
+}

@@ -1,0 +1,350 @@
+//! `partir` CLI — the leader entrypoint of the framework.
+//!
+//! Subcommands:
+//!   * `zoo`       — list the model zoo with parameter/MAC totals
+//!   * `explore`   — two-platform partitioning DSE (paper §V-B)
+//!   * `chain`     — N-platform chain DSE via NSGA-II (paper §V-C)
+//!   * `evaluate`  — per-layer hardware costs on each platform
+//!   * `pipeline`  — execute a partitioned schedule on real AOT
+//!                   artifacts over the simulated link (Definition 4)
+//!   * `report`    — regenerate every paper figure/table into reports/
+
+use partir::config::SystemConfig;
+use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::explorer::{explore_two_platform, multi};
+use partir::graph::topo::{topo_sort, TieBreak};
+use partir::hw::HwEvaluator;
+use partir::report;
+use partir::runtime::Manifest;
+use partir::util::cli::{Args, Command};
+use partir::util::units::{fmt_count, fmt_energy_j, fmt_time_s};
+use partir::zoo;
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let code = match argv.first().map(|s| s.as_str()) {
+        Some("zoo") => cmd_zoo(),
+        Some("explore") => dispatch(explore_cmd(), &argv[1..], cmd_explore),
+        Some("chain") => dispatch(chain_cmd(), &argv[1..], cmd_chain),
+        Some("evaluate") => dispatch(evaluate_cmd(), &argv[1..], cmd_evaluate),
+        Some("pipeline") => dispatch(pipeline_cmd(), &argv[1..], cmd_pipeline),
+        Some("report") => dispatch(report_cmd(), &argv[1..], cmd_report),
+        Some("--help") | Some("-h") | None => {
+            print_usage();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n");
+            print_usage();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_usage() {
+    println!(
+        "partir — automated DNN inference partitioning for distributed embedded systems\n\n\
+         USAGE: partir <COMMAND> [OPTIONS]\n\n\
+         COMMANDS:\n\
+         \x20 zoo        list models (params, MACs, layer counts)\n\
+         \x20 explore    two-platform partitioning exploration\n\
+         \x20 chain      N-platform chain exploration (NSGA-II)\n\
+         \x20 evaluate   per-layer hardware costs for a model\n\
+         \x20 pipeline   run partitioned inference on AOT artifacts\n\
+         \x20 report     regenerate all paper figures into reports/\n\n\
+         Run `partir <COMMAND> --help` for options."
+    );
+}
+
+fn dispatch(cmd: Command, raw: &[String], f: fn(&Args) -> anyhow::Result<()>) -> i32 {
+    match cmd.parse(raw) {
+        Ok(args) => match f(&args) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("error: {e:#}");
+                1
+            }
+        },
+        Err(help_or_err) => {
+            println!("{help_or_err}");
+            2
+        }
+    }
+}
+
+fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
+    let mut sys = match args.get("config") {
+        Some(path) => SystemConfig::from_toml_file(Path::new(path))
+            .map_err(|e| anyhow::anyhow!("config: {e}"))?,
+        None => SystemConfig::paper_two_platform(),
+    };
+    if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+        sys.seed = seed;
+    }
+    if args.flag("qat") {
+        sys.qat = true;
+    }
+    if args.flag("fast") {
+        sys.search.victory = 20;
+        sys.search.max_samples = 200;
+    }
+    Ok(sys)
+}
+
+fn build_model(args: &Args) -> anyhow::Result<partir::graph::Graph> {
+    let name = args.get("model").unwrap_or("resnet50");
+    zoo::build(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'; try one of {:?}", zoo::names()))
+}
+
+// ---------------------------------------------------------------------
+// zoo
+// ---------------------------------------------------------------------
+
+fn cmd_zoo() -> i32 {
+    for name in zoo::names() {
+        let g = zoo::build(name).unwrap();
+        println!("{}", g.summary());
+    }
+    0
+}
+
+// ---------------------------------------------------------------------
+// explore
+// ---------------------------------------------------------------------
+
+fn explore_cmd() -> Command {
+    Command::new("explore", "two-platform partitioning DSE (paper §V-B)")
+        .opt("model", Some("resnet50"), "zoo model name")
+        .opt("config", None, "system TOML (default: paper EYR+SMB over GbE)")
+        .opt("seed", None, "override exploration seed")
+        .opt("out", None, "write fig2-style CSV to this path")
+        .flag("qat", "apply QAT accuracy recovery")
+        .flag("fast", "smaller mapper search budget")
+}
+
+fn cmd_explore(args: &Args) -> anyhow::Result<()> {
+    let g = build_model(args)?;
+    let sys = load_sys(args)?;
+    anyhow::ensure!(
+        sys.platforms.len() == 2,
+        "explore needs a 2-platform config; use `chain` for longer chains"
+    );
+    let ex = explore_two_platform(&g, &sys);
+    print!("{}", report::render_exploration(&ex, &sys));
+    if let Some((label, gain)) = report::throughput_gain(&ex) {
+        println!("best pipelined throughput: {label} (+{gain:.1}% over best single platform)");
+    }
+    if let Some(out) = args.get("out") {
+        report::fig2_csv(&ex).write_file(Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// chain
+// ---------------------------------------------------------------------
+
+fn chain_cmd() -> Command {
+    Command::new("chain", "N-platform chain DSE via NSGA-II (paper §V-C)")
+        .opt("model", Some("resnet50"), "zoo model name")
+        .opt("config", None, "system TOML (default: paper EYR,EYR,SMB,SMB)")
+        .opt("seed", None, "override exploration seed")
+        .opt("out", None, "write Pareto-front CSV to this path")
+        .flag("qat", "apply QAT accuracy recovery")
+        .flag("fast", "smaller mapper search budget")
+}
+
+fn cmd_chain(args: &Args) -> anyhow::Result<()> {
+    let g = build_model(args)?;
+    let sys = if args.get("config").is_some() {
+        load_sys(args)?
+    } else {
+        let mut sys = SystemConfig::paper_four_platform();
+        if args.flag("fast") {
+            sys.search.victory = 20;
+            sys.search.max_samples = 200;
+        }
+        if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
+            sys.seed = seed;
+        }
+        if args.flag("qat") {
+            sys.qat = true;
+        }
+        sys
+    };
+    let ex = multi::explore_chain(&g, &sys);
+    print!("{}", report::render_exploration(&ex, &sys));
+    let hist = multi::partition_histogram(&ex, sys.platforms.len());
+    println!("\npartition histogram (Table II row): {hist:?}");
+    if let Some(out) = args.get("out") {
+        report::front_csv(&ex, &sys.pareto_metrics).write_file(Path::new(out))?;
+        println!("wrote {out}");
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// evaluate
+// ---------------------------------------------------------------------
+
+fn evaluate_cmd() -> Command {
+    Command::new("evaluate", "per-layer hardware costs on each platform")
+        .opt("model", Some("resnet50"), "zoo model name")
+        .opt("config", None, "system TOML")
+        .opt("top", Some("15"), "show the N most expensive layers")
+        .flag("fast", "smaller mapper search budget")
+}
+
+fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
+    let g = build_model(args)?;
+    let sys = load_sys(args)?;
+    let order = topo_sort(&g, TieBreak::Deterministic);
+    let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(15);
+    for p in &sys.platforms {
+        let mut ev = HwEvaluator::new(sys.search.clone());
+        let costs = ev.schedule_costs(&p.accelerator, &g, &order);
+        let total_lat: f64 = costs.iter().map(|c| c.latency_s).sum();
+        let total_en: f64 = costs.iter().map(|c| c.energy_j).sum();
+        println!(
+            "\nplatform {} ({}, {} bits): total {} / {} — {} mapper runs",
+            p.name,
+            p.accelerator.name,
+            p.accelerator.bits,
+            fmt_time_s(total_lat),
+            fmt_energy_j(total_en),
+            ev.mapper_runs,
+        );
+        let mut idx: Vec<usize> = (0..costs.len()).collect();
+        idx.sort_by(|&a, &b| costs[b].latency_s.partial_cmp(&costs[a].latency_s).unwrap());
+        println!(
+            "{:<14} {:>10} {:>11} {:>7} {:>10}  mapping",
+            "layer", "latency", "energy", "util", "MACs"
+        );
+        for &i in idx.iter().take(top) {
+            let c = &costs[i];
+            let node = g.node(order[i]);
+            println!(
+                "{:<14} {:>10} {:>11} {:>6.1}% {:>10}  {}",
+                node.name,
+                fmt_time_s(c.latency_s),
+                fmt_energy_j(c.energy_j),
+                c.utilization * 100.0,
+                fmt_count(c.macs),
+                c.mapping_desc
+            );
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// pipeline
+// ---------------------------------------------------------------------
+
+fn pipeline_cmd() -> Command {
+    Command::new("pipeline", "run partitioned inference on AOT artifacts (Definition 4)")
+        .opt("artifacts", Some("artifacts"), "artifact directory (make artifacts)")
+        .opt("boundary", Some("2"), "partition boundary 1..3, or 0 = unpartitioned")
+        .opt("requests", Some("64"), "number of inference requests")
+        .opt("batch", Some("8"), "max dynamic batch size")
+        .flag("quant", "use the quantized (EYR 16b / SMB 8b) artifacts")
+        .flag("no-link", "disable link simulation")
+}
+
+fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    let dir = PathBuf::from(args.get("artifacts").unwrap());
+    let m = Manifest::load(&dir)?;
+    let boundary = args.get_usize("boundary").map_err(anyhow::Error::msg)?.unwrap_or(2);
+    let n = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(64);
+    let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?.unwrap_or(8);
+    let quant = args.flag("quant");
+    let ts = m.load_testset()?;
+    let inputs: Vec<Vec<f32>> = (0..n).map(|i| ts.image(i % ts.count).to_vec()).collect();
+
+    let pick = |role: &str, bits: Option<u32>, bd: Option<usize>| -> anyhow::Result<Vec<_>> {
+        [1usize, 8]
+            .iter()
+            .map(|&b| {
+                m.find(role, bits, bd, b).cloned().ok_or_else(|| {
+                    anyhow::anyhow!("missing artifact {role} bits={bits:?} bd={bd:?} n{b}")
+                })
+            })
+            .collect()
+    };
+
+    let stages = if boundary == 0 {
+        let bits = if quant { Some(8) } else { None };
+        vec![StageSpec {
+            name: "single".into(),
+            compute: StageComputeSpec::Artifacts {
+                dir: dir.clone(),
+                metas: pick("full", bits, None)?,
+            },
+            out_bytes_per_item: 0,
+        }]
+    } else {
+        anyhow::ensure!((1..=3).contains(&boundary), "boundary must be 0..=3");
+        let mid_elems: usize = m.boundaries[&boundary].shape.iter().product();
+        let (bits_a, bits_b) = if quant { (Some(16), Some(8)) } else { (None, None) };
+        let wire_bytes = mid_elems as u64 * if quant { 2 } else { 4 };
+        vec![
+            StageSpec {
+                name: "A".into(),
+                compute: StageComputeSpec::Artifacts {
+                    dir: dir.clone(),
+                    metas: pick("stageA", bits_a, Some(boundary))?,
+                },
+                out_bytes_per_item: wire_bytes,
+            },
+            StageSpec {
+                name: "B".into(),
+                compute: StageComputeSpec::Artifacts {
+                    dir: dir.clone(),
+                    metas: pick("stageB", bits_b, Some(boundary))?,
+                },
+                out_bytes_per_item: 0,
+            },
+        ]
+    };
+
+    let cfg = PipelineCfg {
+        max_batch: batch,
+        batch_wait: Duration::from_millis(1),
+        simulate_link: !args.flag("no-link"),
+        ..Default::default()
+    };
+    let rpt = run_pipeline(stages, &cfg, inputs);
+    print!("{}", rpt.render());
+    let correct = rpt
+        .completions
+        .iter()
+        .filter(|c| c.prediction == Some(ts.labels[c.id as usize % ts.count] as usize))
+        .count();
+    println!(
+        "top-1 over served requests: {:.2}% (build-time fp32 {:.2}%, ptq8 {:.2}%)",
+        100.0 * correct as f64 / rpt.completions.len() as f64,
+        m.accuracy.fp32,
+        m.accuracy.ptq8
+    );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------
+
+fn report_cmd() -> Command {
+    Command::new("report", "regenerate all paper figures/tables into a directory")
+        .opt("out", Some("reports"), "output directory")
+        .flag("fast", "smaller search budgets (CI smoke)")
+}
+
+fn cmd_report(args: &Args) -> anyhow::Result<()> {
+    let out = PathBuf::from(args.get("out").unwrap());
+    report::paper::generate_all(&out, args.flag("fast"))
+}

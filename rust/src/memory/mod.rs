@@ -1,0 +1,410 @@
+//! Memory-size estimation (§IV-B, Definition 3).
+//!
+//! The memory required to execute a schedule segment on a platform is the
+//! sum of all parameters resident in that segment plus the peak of live
+//! activation data, scaled by the platform's quantized bit width:
+//!
+//! ```text
+//! m_A(l_n, l_m) = (Σ s_i + max(a_n..a_m)) · b_A,   a_j = f_in,j + f_out,j
+//! ```
+//!
+//! Definition 3 is stated for branch-free sequences; with branches the
+//! `a_j` term generalizes to the live-tensor peak of the chosen schedule
+//! (skip connections held across other layers count). The paper searches
+//! branch orders for the minimum-memory schedule; [`min_memory_order`]
+//! implements that search (greedy live-set heuristic + seeded random
+//! restarts over topological tie-breaks).
+
+use crate::graph::topo::{self, TieBreak};
+use crate::graph::{Graph, NodeId};
+use crate::util::rng::Pcg32;
+use std::ops::Range;
+
+/// Bytes for `elems` values at `bits` width.
+fn elem_bytes(elems: u64, bits: u32) -> u64 {
+    (elems * bits as u64).div_ceil(8)
+}
+
+/// Peak live activation elements while executing `order[range]`.
+///
+/// Live tensors at step `j` are: (a) outputs of earlier segment nodes (or
+/// of nodes outside the segment — i.e. tensors received over the link)
+/// that some node at position ≥ j inside the segment still consumes, and
+/// (b) the output being produced at step `j`. For a branch-free chain this
+/// reduces exactly to Definition 3's `max(f_in + f_out)`.
+pub fn peak_activation_elems(g: &Graph, order: &[NodeId], range: Range<usize>) -> u64 {
+    if range.is_empty() {
+        return 0;
+    }
+    let pos = topo::positions(order, g.len());
+    let in_seg = |id: NodeId| range.contains(&pos[id.0]);
+
+    // For each tensor consumed inside the segment: last position (within
+    // the segment) that uses it. Tensors that are also consumed *after*
+    // the segment (or are graph outputs) must stay buffered for egress
+    // and are never freed inside the segment (NEVER sentinel).
+    const NEVER: usize = usize::MAX - 1;
+    let mut last_use = vec![usize::MAX; g.len()]; // usize::MAX = not used in segment
+    for p in range.clone() {
+        let node = g.node(order[p]);
+        for &inp in &node.inputs {
+            last_use[inp.0] = if last_use[inp.0] == usize::MAX {
+                p
+            } else {
+                last_use[inp.0].max(p)
+            };
+        }
+    }
+    let outputs = g.outputs();
+    for id in 0..g.len() {
+        if last_use[id] == usize::MAX {
+            continue;
+        }
+        let external = outputs.contains(&NodeId(id))
+            || g
+                .nodes
+                .iter()
+                .any(|n| n.inputs.contains(&NodeId(id)) && pos[n.id.0] >= range.end);
+        if external {
+            last_use[id] = NEVER;
+        }
+    }
+
+    let mut peak = 0u64;
+    let mut live = 0u64;
+    // Tensors entering the segment from outside are live from the start.
+    for id in 0..g.len() {
+        if last_use[id] != usize::MAX && !in_seg(NodeId(id)) {
+            live += g.nodes[id].out_shape.numel() as u64;
+        }
+    }
+    for p in range.clone() {
+        let node = g.node(order[p]);
+        let out = node.out_shape.numel() as u64;
+        // While computing node p, inputs and output coexist.
+        peak = peak.max(live + out);
+        // Output becomes live if consumed later in the segment, or if it
+        // leaves the segment (it must be buffered for the link/result
+        // until the segment finishes; we count it as live to be
+        // conservative about the egress buffer).
+        let needed_later = last_use[node.id.0] != usize::MAX && last_use[node.id.0] > p;
+        let leaves_segment = {
+            let succ_outside = g
+                .nodes
+                .iter()
+                .any(|n| n.inputs.contains(&node.id) && !in_seg(n.id));
+            succ_outside || g.outputs().contains(&node.id)
+        };
+        if needed_later || leaves_segment {
+            live += out;
+        }
+        // Free tensors whose last use inside the segment was this step.
+        for &inp in &node.inputs {
+            if last_use[inp.0] == p {
+                live -= g.node(inp).out_shape.numel() as u64;
+            }
+        }
+        peak = peak.max(live);
+    }
+    peak
+}
+
+/// Total parameters stored for `order[range]`.
+pub fn segment_params(g: &Graph, order: &[NodeId], range: Range<usize>) -> u64 {
+    range.map(|p| g.node(order[p]).params).sum()
+}
+
+/// Definition 3: memory bytes to execute `order[range]` on a platform
+/// with quantized bit width `bits`.
+pub fn segment_memory_bytes(g: &Graph, order: &[NodeId], range: Range<usize>, bits: u32) -> u64 {
+    let params = segment_params(g, order, range.clone());
+    let act = peak_activation_elems(g, order, range);
+    elem_bytes(params + act, bits)
+}
+
+/// Per-step transient activation peaks over the whole schedule.
+///
+/// `step_peaks[j]` is the live-tensor footprint while executing
+/// `order[j]`, under the rule "a tensor lives from its production until
+/// its last consumer (graph outputs live to the end)". Key property
+/// (exploited by the explorer's O(1) memory lookups, and verified by a
+/// property test against the segment walk): this per-step value is
+/// *cut-independent*, so
+///
+/// ```text
+/// peak(0..=p)  = max(step_peaks[0..=p])
+/// peak(s..len) = max(step_peaks[s..])
+/// ```
+///
+/// exactly match [`peak_activation_elems`] for prefix and suffix
+/// segments — a tensor crossing a cut is counted on both sides (egress
+/// buffer on the producer, ingress on the consumer), just as the
+/// per-step rule does.
+pub fn step_peaks(g: &Graph, order: &[NodeId]) -> Vec<u64> {
+    let n = g.len();
+    let pos = topo::positions(order, n);
+    let mut last_use = vec![0usize; n];
+    for (i, &v) in order.iter().enumerate() {
+        last_use[v.0] = i;
+    }
+    for node in &g.nodes {
+        for &inp in &node.inputs {
+            last_use[inp.0] = last_use[inp.0].max(pos[node.id.0]);
+        }
+    }
+    // Graph outputs are buffered until the end of the schedule.
+    for out in g.outputs() {
+        last_use[out.0] = n;
+    }
+    let mut peaks = Vec::with_capacity(n);
+    let mut live = 0u64;
+    for (j, &v) in order.iter().enumerate() {
+        let out = g.node(v).out_shape.numel() as u64;
+        // While executing j: inputs (still live) + the output buffer.
+        peaks.push(live + out);
+        if last_use[v.0] > j {
+            live += out;
+        }
+        for &inp in &g.node(v).inputs {
+            if last_use[inp.0] == j {
+                live -= g.node(inp).out_shape.numel() as u64;
+            }
+        }
+    }
+    peaks
+}
+
+/// Running maxima of [`step_peaks`]: `prefix[p]` = peak of `0..=p`.
+pub fn prefix_peaks(g: &Graph, order: &[NodeId]) -> Vec<u64> {
+    let mut peaks = step_peaks(g, order);
+    for i in 1..peaks.len() {
+        peaks[i] = peaks[i].max(peaks[i - 1]);
+    }
+    peaks
+}
+
+/// Suffix maxima of [`step_peaks`]: `suffix[s]` = peak of `s..len`.
+///
+/// Graph outputs produced *before* position `s` contribute a constant
+/// `Σ numel(outputs with pos < s)` to every step peak at `j ≥ s` (they
+/// stay live to the end under the step rule) but are not held by the
+/// suffix platform — that constant is subtracted per position.
+pub fn suffix_peaks(g: &Graph, order: &[NodeId]) -> Vec<u64> {
+    let mut peaks = step_peaks(g, order);
+    for i in (0..peaks.len().saturating_sub(1)).rev() {
+        peaks[i] = peaks[i].max(peaks[i + 1]);
+    }
+    let outputs = g.outputs();
+    let mut outs_before = 0u64;
+    for (s, &v) in order.iter().enumerate() {
+        peaks[s] -= outs_before;
+        if outputs.contains(&v) {
+            outs_before += g.node(v).out_shape.numel() as u64;
+        }
+    }
+    peaks
+}
+
+/// Search for a whole-graph schedule minimizing the peak live-activation
+/// footprint: `restarts` random-tie-break topological sorts plus the
+/// deterministic one; returns the best order found.
+///
+/// This implements the paper's "builds subgraphs for these parallel
+/// branches to find the schedule with minimum memory requirements" —
+/// branch-free regions are order-invariant, so only the branch
+/// interleavings (the tie-breaks) matter.
+pub fn min_memory_order(g: &Graph, seed: u64, restarts: usize) -> Vec<NodeId> {
+    let full = 0..g.len();
+    let mut best = topo::topo_sort(g, TieBreak::Deterministic);
+    let mut best_peak = peak_activation_elems(g, &best, full.clone());
+    let mut rng = Pcg32::new(seed, MEM_STREAM);
+    for _ in 0..restarts {
+        let mut r = Pcg32::seeded(rng.next_u64());
+        let cand = topo::topo_sort(g, TieBreak::Random(&mut r));
+        let peak = peak_activation_elems(g, &cand, full.clone());
+        if peak < best_peak {
+            best_peak = peak;
+            best = cand;
+        }
+    }
+    best
+}
+
+/// RNG stream id for the memory-schedule search ("mem" in ASCII).
+const MEM_STREAM: u64 = 0x6d65_6d;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::topo::{topo_sort, TieBreak};
+    use crate::graph::{Act, LayerKind};
+    use crate::testkit::{property, Gen};
+    use crate::zoo;
+
+    fn chain() -> Graph {
+        let mut g = Graph::new("chain");
+        let x = g.input(4, 8, 8); // 256 elems
+        let c = g.add(
+            LayerKind::Conv2d {
+                out_c: 8,
+                kernel: (3, 3),
+                stride: (1, 1),
+                pad: (1, 1),
+                groups: 1,
+                bias: false,
+            },
+            &[x],
+        ); // 512 elems out
+        let r = g.add(LayerKind::Activation(Act::Relu), &[c]);
+        g.add(LayerKind::GlobalAvgPool, &[r]); // 8 elems
+        g
+    }
+
+    #[test]
+    fn branch_free_matches_definition3() {
+        let g = chain();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        // Full graph: a_j per node: input (0+256 — no in-edges), conv
+        // (256+512=768), relu (512+512=1024... but in-place? Def 3 counts
+        // f_in + f_out), gap (512+8).
+        let peak = peak_activation_elems(&g, &order, 0..g.len());
+        assert_eq!(peak, 512 + 512);
+    }
+
+    #[test]
+    fn segment_memory_scales_with_bits() {
+        let g = chain();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let m16 = segment_memory_bytes(&g, &order, 0..g.len(), 16);
+        let m8 = segment_memory_bytes(&g, &order, 0..g.len(), 8);
+        assert_eq!(m16, 2 * m8);
+    }
+
+    #[test]
+    fn incoming_link_tensor_counts() {
+        let g = chain();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        // Segment = relu onward: conv output (512) enters over the link.
+        let peak = peak_activation_elems(&g, &order, 2..g.len());
+        assert!(peak >= 512 + 512, "peak {peak} must hold link input + relu output");
+    }
+
+    #[test]
+    fn params_partition_exactly() {
+        let g = zoo::resnet50(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let total = g.total_params();
+        for cut in [10, 50, 100] {
+            let a = segment_params(&g, &order, 0..cut);
+            let b = segment_params(&g, &order, cut..g.len());
+            assert_eq!(a + b, total);
+        }
+    }
+
+    #[test]
+    fn min_memory_order_never_worse_than_deterministic() {
+        for name in ["googlenet", "resnet50", "efficientnet_b0"] {
+            let g = zoo::build(name).unwrap();
+            let det = topo_sort(&g, TieBreak::Deterministic);
+            let det_peak = peak_activation_elems(&g, &det, 0..g.len());
+            let best = min_memory_order(&g, 42, 20);
+            let best_peak = peak_activation_elems(&g, &best, 0..g.len());
+            assert!(
+                best_peak <= det_peak,
+                "{name}: search peak {best_peak} > deterministic {det_peak}"
+            );
+            assert!(crate::graph::topo::is_topo_order(&g, &best));
+        }
+    }
+
+    #[test]
+    fn property_peak_bounds() {
+        property("peak bounds on random DAGs", 80, |rng| {
+            let n = Gen::usize_in(rng, 2..40);
+            let preds = Gen::dag(rng, n, 0.15);
+            let mut g = Graph::new("prop");
+            let x = g.input(2, 4, 4); // all tensors 32 elems
+            let mut ids = vec![x];
+            for v in 1..n {
+                let inputs: Vec<NodeId> = preds[v].iter().map(|&p| ids[p]).collect();
+                let id = if inputs.len() >= 2 {
+                    g.add(LayerKind::Add, &inputs)
+                } else {
+                    g.add(LayerKind::Activation(Act::Relu), &inputs)
+                };
+                ids.push(id);
+            }
+            let order = topo_sort(&g, TieBreak::Deterministic);
+            let peak = peak_activation_elems(&g, &order, 0..g.len());
+            // Lower bound: one output being produced; upper bound: every
+            // tensor live at once.
+            assert!(peak >= 32);
+            assert!(peak <= 32 * n as u64);
+        });
+    }
+
+    #[test]
+    fn property_step_peaks_match_segment_walk() {
+        // The O(1)-lookup arrays must agree exactly with the segment
+        // walk for every prefix and suffix, on every zoo topology and on
+        // random DAGs.
+        for name in ["squeezenet1_1", "googlenet", "resnet50", "efficientnet_b0"] {
+            let g = zoo::build(name).unwrap();
+            let order = topo_sort(&g, TieBreak::Deterministic);
+            let pre = prefix_peaks(&g, &order);
+            let suf = suffix_peaks(&g, &order);
+            for p in (0..g.len()).step_by(7) {
+                assert_eq!(
+                    pre[p],
+                    peak_activation_elems(&g, &order, 0..p + 1),
+                    "{name}: prefix peak mismatch at {p}"
+                );
+                assert_eq!(
+                    suf[p],
+                    peak_activation_elems(&g, &order, p..g.len()),
+                    "{name}: suffix peak mismatch at {p}"
+                );
+            }
+        }
+        property("step peaks on random DAGs", 60, |rng| {
+            let n = Gen::usize_in(rng, 2..40);
+            let preds = Gen::dag(rng, n, 0.15);
+            let mut g = Graph::new("prop");
+            let x = g.input(2, 4, 4);
+            let mut ids = vec![x];
+            for v in 1..n {
+                let inputs: Vec<NodeId> = preds[v].iter().map(|&p| ids[p]).collect();
+                let id = if inputs.len() >= 2 {
+                    g.add(LayerKind::Add, &inputs)
+                } else {
+                    g.add(LayerKind::Activation(Act::Relu), &inputs)
+                };
+                ids.push(id);
+            }
+            let order = topo_sort(&g, TieBreak::Deterministic);
+            let pre = prefix_peaks(&g, &order);
+            let suf = suffix_peaks(&g, &order);
+            for p in 0..g.len() {
+                assert_eq!(pre[p], peak_activation_elems(&g, &order, 0..p + 1));
+                assert_eq!(suf[p], peak_activation_elems(&g, &order, p..g.len()));
+            }
+        });
+    }
+
+    #[test]
+    fn property_subsegment_peak_le_whole() {
+        // Peak of the whole schedule bounds each segment's activation
+        // peak from above only when the segment has no extra link-held
+        // inputs; here we just check segments are internally consistent:
+        // non-empty segments have nonzero peak, empty segments zero.
+        property("segment peaks consistent", 60, |rng| {
+            let g = zoo::squeezenet1_1(10);
+            let order = topo_sort(&g, TieBreak::Deterministic);
+            let cut = Gen::usize_in(rng, 1..g.len() - 1);
+            let a = peak_activation_elems(&g, &order, 0..cut);
+            let b = peak_activation_elems(&g, &order, cut..g.len());
+            assert!(a > 0 && b > 0);
+            assert_eq!(peak_activation_elems(&g, &order, 5..5), 0);
+        });
+    }
+}

@@ -1,0 +1,466 @@
+//! NSGA-II multi-objective genetic algorithm (Deb et al. 2002) over
+//! integer decision vectors — the optimizer the paper uses (via pymoo) to
+//! find Pareto-optimal partitioning points (§IV: "we use the NSGA-II to
+//! determine Pareto-optimal points [...] the partitioning point serves as
+//! variable of the partitioning problem. Since the complexity of a DNN
+//! varies significantly, the population size as well as the number of
+//! generations is set depending on the number of layers").
+//!
+//! Implements fast non-dominated sorting, crowding distance, binary
+//! tournament selection with constrained domination (feasible solutions
+//! dominate infeasible ones; infeasible ones compare by violation), and
+//! integer crossover/mutation operators.
+
+use crate::util::rng::Pcg32;
+
+/// Evaluation of one candidate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Eval {
+    /// Objective values, all minimized.
+    pub objectives: Vec<f64>,
+    /// Constraint violation; 0.0 = feasible.
+    pub violation: f64,
+}
+
+impl Eval {
+    pub fn feasible(objectives: Vec<f64>) -> Self {
+        Self { objectives, violation: 0.0 }
+    }
+
+    pub fn infeasible(num_objectives: usize, violation: f64) -> Self {
+        Self { objectives: vec![f64::INFINITY; num_objectives], violation: violation.max(f64::MIN_POSITIVE) }
+    }
+
+    pub fn is_feasible(&self) -> bool {
+        self.violation == 0.0
+    }
+}
+
+/// Problem definition over integer decision variables.
+pub trait Problem {
+    fn num_vars(&self) -> usize;
+    fn num_objectives(&self) -> usize;
+    /// Inclusive bounds for variable `i`.
+    fn bounds(&self, i: usize) -> (i64, i64);
+    /// Normalize a genome in place (e.g. sort partition points).
+    fn repair(&self, _vars: &mut [i64]) {}
+    fn evaluate(&self, vars: &[i64]) -> Eval;
+}
+
+/// Algorithm configuration.
+#[derive(Debug, Clone)]
+pub struct Nsga2Cfg {
+    pub population: usize,
+    pub generations: usize,
+    pub crossover_p: f64,
+    pub mutation_p: f64,
+    pub seed: u64,
+}
+
+impl Nsga2Cfg {
+    /// The paper scales population/generations with network depth; this
+    /// mirrors pymoo-style defaults: pop ≈ 4·√L bounded to [20, 120],
+    /// gens ≈ L/2 bounded to [30, 150].
+    pub fn for_layers(layers: usize, seed: u64) -> Self {
+        let pop = ((4.0 * (layers as f64).sqrt()) as usize).clamp(20, 120);
+        let pop = pop + pop % 2; // even for pairwise crossover
+        let generations = (layers / 2).clamp(30, 150);
+        Self { population: pop, generations, crossover_p: 0.9, mutation_p: 0.2, seed }
+    }
+}
+
+/// One individual of the final population.
+#[derive(Debug, Clone)]
+pub struct Solution {
+    pub vars: Vec<i64>,
+    pub eval: Eval,
+}
+
+/// `a` constrained-dominates `b`.
+pub fn dominates(a: &Eval, b: &Eval) -> bool {
+    match (a.is_feasible(), b.is_feasible()) {
+        (true, false) => true,
+        (false, true) => false,
+        (false, false) => a.violation < b.violation,
+        (true, true) => {
+            let mut strictly = false;
+            for (x, y) in a.objectives.iter().zip(&b.objectives) {
+                if x > y {
+                    return false;
+                }
+                if x < y {
+                    strictly = true;
+                }
+            }
+            strictly
+        }
+    }
+}
+
+/// Fast non-dominated sort; returns fronts of indices (front 0 = best).
+pub fn non_dominated_sort(evals: &[Eval]) -> Vec<Vec<usize>> {
+    let n = evals.len();
+    let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
+    let mut counts = vec![0usize; n]; // number dominating i
+    for i in 0..n {
+        for j in 0..n {
+            if i == j {
+                continue;
+            }
+            if dominates(&evals[i], &evals[j]) {
+                dominated_by[i].push(j);
+            } else if dominates(&evals[j], &evals[i]) {
+                counts[i] += 1;
+            }
+        }
+    }
+    let mut fronts = Vec::new();
+    let mut current: Vec<usize> = (0..n).filter(|&i| counts[i] == 0).collect();
+    while !current.is_empty() {
+        let mut next = Vec::new();
+        for &i in &current {
+            for &j in &dominated_by[i] {
+                counts[j] -= 1;
+                if counts[j] == 0 {
+                    next.push(j);
+                }
+            }
+        }
+        fronts.push(std::mem::take(&mut current));
+        current = next;
+    }
+    fronts
+}
+
+/// Crowding distance of each member of a front (boundaries = ∞).
+pub fn crowding_distance(front: &[usize], evals: &[Eval]) -> Vec<f64> {
+    let n = front.len();
+    let mut dist = vec![0.0f64; n];
+    if n <= 2 {
+        return vec![f64::INFINITY; n];
+    }
+    let m = evals[front[0]].objectives.len();
+    for obj in 0..m {
+        let mut idx: Vec<usize> = (0..n).collect();
+        idx.sort_by(|&a, &b| {
+            evals[front[a]].objectives[obj]
+                .partial_cmp(&evals[front[b]].objectives[obj])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        dist[idx[0]] = f64::INFINITY;
+        dist[idx[n - 1]] = f64::INFINITY;
+        let lo = evals[front[idx[0]]].objectives[obj];
+        let hi = evals[front[idx[n - 1]]].objectives[obj];
+        let span = hi - lo;
+        if span <= 0.0 || !span.is_finite() {
+            continue;
+        }
+        for k in 1..n - 1 {
+            let prev = evals[front[idx[k - 1]]].objectives[obj];
+            let next = evals[front[idx[k + 1]]].objectives[obj];
+            dist[idx[k]] += (next - prev) / span;
+        }
+    }
+    dist
+}
+
+struct Individual {
+    vars: Vec<i64>,
+    eval: Eval,
+    rank: usize,
+    crowding: f64,
+}
+
+fn random_genome<P: Problem>(p: &P, rng: &mut Pcg32) -> Vec<i64> {
+    let mut v: Vec<i64> = (0..p.num_vars())
+        .map(|i| {
+            let (lo, hi) = p.bounds(i);
+            lo + rng.gen_range((hi - lo + 1) as u32) as i64
+        })
+        .collect();
+    p.repair(&mut v);
+    v
+}
+
+/// Uniform crossover + creep/reset mutation, then repair.
+fn make_child<P: Problem>(p: &P, a: &[i64], b: &[i64], cfg: &Nsga2Cfg, rng: &mut Pcg32) -> Vec<i64> {
+    let mut child: Vec<i64> = if rng.gen_bool(cfg.crossover_p) {
+        a.iter().zip(b).map(|(&x, &y)| if rng.gen_bool(0.5) { x } else { y }).collect()
+    } else {
+        a.to_vec()
+    };
+    for i in 0..child.len() {
+        if rng.gen_bool(cfg.mutation_p) {
+            let (lo, hi) = p.bounds(i);
+            if rng.gen_bool(0.5) {
+                // Creep: small step, good for partition points on a chain.
+                let span = ((hi - lo) / 10).max(1);
+                let step = 1 + rng.gen_range(span as u32) as i64;
+                child[i] = (child[i] + if rng.gen_bool(0.5) { step } else { -step }).clamp(lo, hi);
+            } else {
+                child[i] = lo + rng.gen_range((hi - lo + 1) as u32) as i64;
+            }
+        }
+    }
+    p.repair(&mut child);
+    child
+}
+
+/// Binary tournament by (rank, crowding).
+fn tournament<'a>(pop: &'a [Individual], rng: &mut Pcg32) -> &'a Individual {
+    let a = &pop[rng.gen_usize(0, pop.len())];
+    let b = &pop[rng.gen_usize(0, pop.len())];
+    if a.rank < b.rank || (a.rank == b.rank && a.crowding > b.crowding) {
+        a
+    } else {
+        b
+    }
+}
+
+fn rank_population(pop: &mut Vec<Individual>, keep: usize) {
+    let evals: Vec<Eval> = pop.iter().map(|i| i.eval.clone()).collect();
+    let fronts = non_dominated_sort(&evals);
+    let mut selected: Vec<Individual> = Vec::with_capacity(keep);
+    let mut old: Vec<Option<Individual>> = std::mem::take(pop).into_iter().map(Some).collect();
+    for (rank, front) in fronts.iter().enumerate() {
+        let dist = crowding_distance(front, &evals);
+        let mut members: Vec<(usize, f64)> = front.iter().copied().zip(dist).collect();
+        // Fill whole fronts while they fit; sort the straddling front by
+        // descending crowding distance.
+        if selected.len() + members.len() > keep {
+            members.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap_or(std::cmp::Ordering::Equal));
+        }
+        for (idx, crowd) in members {
+            if selected.len() >= keep {
+                break;
+            }
+            let mut ind = old[idx].take().expect("front indices unique");
+            ind.rank = rank;
+            ind.crowding = crowd;
+            selected.push(ind);
+        }
+        if selected.len() >= keep {
+            break;
+        }
+    }
+    *pop = selected;
+}
+
+/// Run NSGA-II; returns the final population's first non-dominated front
+/// (deduplicated by genome).
+pub fn optimize<P: Problem>(problem: &P, cfg: &Nsga2Cfg) -> Vec<Solution> {
+    assert!(cfg.population >= 4, "population too small");
+    let mut rng = Pcg32::new(cfg.seed, 0x6e73_6761); // "nsga"
+    let mut pop: Vec<Individual> = (0..cfg.population)
+        .map(|_| {
+            let vars = random_genome(problem, &mut rng);
+            let eval = problem.evaluate(&vars);
+            Individual { vars, eval, rank: 0, crowding: 0.0 }
+        })
+        .collect();
+    rank_population(&mut pop, cfg.population);
+
+    for _ in 0..cfg.generations {
+        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
+        while offspring.len() < cfg.population {
+            let a = tournament(&pop, &mut rng);
+            let b = tournament(&pop, &mut rng);
+            let vars = make_child(problem, &a.vars, &b.vars, cfg, &mut rng);
+            let eval = problem.evaluate(&vars);
+            offspring.push(Individual { vars, eval, rank: 0, crowding: 0.0 });
+        }
+        pop.extend(offspring);
+        rank_population(&mut pop, cfg.population);
+    }
+
+    // Final front 0, deduplicated by genome.
+    let mut out: Vec<Solution> = pop
+        .into_iter()
+        .filter(|i| i.rank == 0)
+        .map(|i| Solution { vars: i.vars, eval: i.eval })
+        .collect();
+    out.sort_by(|a, b| a.vars.cmp(&b.vars));
+    out.dedup_by(|a, b| a.vars == b.vars);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::{property, Gen};
+
+    /// Schaffer's problem N.1: minimize [x², (x-2)²]; Pareto set x∈[0,2].
+    struct Schaffer;
+
+    impl Problem for Schaffer {
+        fn num_vars(&self) -> usize {
+            1
+        }
+        fn num_objectives(&self) -> usize {
+            2
+        }
+        fn bounds(&self, _: usize) -> (i64, i64) {
+            (-1000, 1000)
+        }
+        fn evaluate(&self, v: &[i64]) -> Eval {
+            let x = v[0] as f64 / 100.0;
+            Eval::feasible(vec![x * x, (x - 2.0) * (x - 2.0)])
+        }
+    }
+
+    #[test]
+    fn schaffer_front_found() {
+        let front = optimize(&Schaffer, &Nsga2Cfg::for_layers(60, 42));
+        assert!(front.len() >= 10, "front too sparse: {}", front.len());
+        for s in &front {
+            let x = s.vars[0] as f64 / 100.0;
+            assert!((-0.05..=2.05).contains(&x), "x={x} off the Pareto set");
+        }
+        // Coverage: both extremes approached.
+        let xs: Vec<f64> = front.iter().map(|s| s.vars[0] as f64 / 100.0).collect();
+        assert!(xs.iter().cloned().fold(f64::INFINITY, f64::min) < 0.3);
+        assert!(xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max) > 1.7);
+    }
+
+    /// Constrained problem: x ≥ 300 infeasible.
+    struct Constrained;
+
+    impl Problem for Constrained {
+        fn num_vars(&self) -> usize {
+            1
+        }
+        fn num_objectives(&self) -> usize {
+            2
+        }
+        fn bounds(&self, _: usize) -> (i64, i64) {
+            (0, 1000)
+        }
+        fn evaluate(&self, v: &[i64]) -> Eval {
+            if v[0] >= 300 {
+                return Eval::infeasible(2, (v[0] - 299) as f64);
+            }
+            let x = v[0] as f64;
+            Eval::feasible(vec![x, 299.0 - x])
+        }
+    }
+
+    #[test]
+    fn constraints_respected() {
+        let front = optimize(&Constrained, &Nsga2Cfg::for_layers(40, 7));
+        assert!(!front.is_empty());
+        for s in &front {
+            assert!(s.eval.is_feasible(), "infeasible solution in front: {:?}", s.vars);
+            assert!(s.vars[0] < 300);
+        }
+    }
+
+    #[test]
+    fn dominates_rules() {
+        let a = Eval::feasible(vec![1.0, 2.0]);
+        let b = Eval::feasible(vec![2.0, 3.0]);
+        let c = Eval::feasible(vec![2.0, 1.0]);
+        let inf = Eval::infeasible(2, 5.0);
+        let inf2 = Eval::infeasible(2, 1.0);
+        assert!(dominates(&a, &b));
+        assert!(!dominates(&b, &a));
+        assert!(!dominates(&a, &c) && !dominates(&c, &a)); // incomparable
+        assert!(!dominates(&a, &a)); // not strict
+        assert!(dominates(&a, &inf));
+        assert!(dominates(&inf2, &inf));
+        assert!(!dominates(&inf, &a));
+    }
+
+    #[test]
+    fn property_front0_is_truly_nondominated() {
+        property("front 0 non-dominated", 60, |rng| {
+            let n = Gen::usize_in(rng, 1..40);
+            let evals: Vec<Eval> = (0..n)
+                .map(|_| {
+                    Eval::feasible(vec![
+                        Gen::f64_in(rng, 0.0, 10.0),
+                        Gen::f64_in(rng, 0.0, 10.0),
+                    ])
+                })
+                .collect();
+            let fronts = non_dominated_sort(&evals);
+            // Every index appears exactly once.
+            let total: usize = fronts.iter().map(|f| f.len()).sum();
+            assert_eq!(total, n);
+            // Nothing in front 0 is dominated by anything.
+            for &i in &fronts[0] {
+                for (j, e) in evals.iter().enumerate() {
+                    if i != j {
+                        assert!(!dominates(e, &evals[i]), "front-0 member dominated");
+                    }
+                }
+            }
+            // Each member of front k>0 is dominated by someone in front k-1.
+            for k in 1..fronts.len() {
+                for &i in &fronts[k] {
+                    assert!(
+                        fronts[k - 1].iter().any(|&j| dominates(&evals[j], &evals[i])),
+                        "front {k} member not dominated by front {}",
+                        k - 1
+                    );
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn crowding_boundaries_infinite() {
+        let evals = vec![
+            Eval::feasible(vec![0.0, 4.0]),
+            Eval::feasible(vec![1.0, 2.0]),
+            Eval::feasible(vec![2.0, 1.0]),
+            Eval::feasible(vec![4.0, 0.0]),
+        ];
+        let front: Vec<usize> = vec![0, 1, 2, 3];
+        let d = crowding_distance(&front, &evals);
+        assert!(d[0].is_infinite() && d[3].is_infinite());
+        assert!(d[1].is_finite() && d[1] > 0.0);
+    }
+
+    #[test]
+    fn adaptive_config_scales() {
+        let small = Nsga2Cfg::for_layers(10, 0);
+        let big = Nsga2Cfg::for_layers(300, 0);
+        assert!(small.population <= big.population);
+        assert!(small.generations <= big.generations);
+        assert_eq!(big.population % 2, 0);
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let a = optimize(&Schaffer, &Nsga2Cfg::for_layers(30, 123));
+        let b = optimize(&Schaffer, &Nsga2Cfg::for_layers(30, 123));
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.vars, y.vars);
+        }
+    }
+
+    #[test]
+    fn repair_is_applied() {
+        struct Sorted;
+        impl Problem for Sorted {
+            fn num_vars(&self) -> usize {
+                3
+            }
+            fn num_objectives(&self) -> usize {
+                2
+            }
+            fn bounds(&self, _: usize) -> (i64, i64) {
+                (0, 50)
+            }
+            fn repair(&self, v: &mut [i64]) {
+                v.sort_unstable();
+            }
+            fn evaluate(&self, v: &[i64]) -> Eval {
+                assert!(v.windows(2).all(|w| w[0] <= w[1]), "repair not applied");
+                Eval::feasible(vec![v[0] as f64, -(v[2] as f64)])
+            }
+        }
+        optimize(&Sorted, &Nsga2Cfg { population: 20, generations: 10, crossover_p: 0.9, mutation_p: 0.3, seed: 5 });
+    }
+}

@@ -1,0 +1,255 @@
+//! Report emitters: turn explorations into the series/tables the paper's
+//! figures show (CSV for plotting, aligned text for the CLI).
+
+pub mod paper;
+
+use crate::config::{Metric, SystemConfig};
+use crate::explorer::Exploration;
+use crate::graph::Graph;
+use crate::graph::topo::{topo_sort, TieBreak};
+use crate::memory;
+use crate::util::csv::{num, Csv};
+use crate::util::units::{fmt_bytes, fmt_energy_j, fmt_throughput, fmt_time_s};
+
+/// Fig 2-style series: one row per candidate partitioning point with
+/// every §III metric, plus Pareto/favorite membership flags.
+pub fn fig2_csv(ex: &Exploration) -> Csv {
+    let mut csv = Csv::new(&[
+        "label",
+        "cut_pos",
+        "latency_ms",
+        "energy_mj",
+        "throughput_ips",
+        "top1_pct",
+        "link_kb",
+        "mem_a_mb",
+        "mem_b_mb",
+        "partitions",
+        "feasible",
+        "pareto",
+        "favorite",
+    ]);
+    for (i, c) in ex.candidates.iter().enumerate() {
+        csv.row(&[
+            c.label.clone(),
+            c.positions.first().map(|p| p.to_string()).unwrap_or_default(),
+            num(c.latency_s * 1e3),
+            num(c.energy_j * 1e3),
+            num(c.throughput),
+            num(c.top1),
+            num(c.link_bytes as f64 / 1024.0),
+            num(c.memory_bytes.first().copied().unwrap_or(0) as f64 / (1 << 20) as f64),
+            num(c.memory_bytes.get(1).copied().unwrap_or(0) as f64 / (1 << 20) as f64),
+            c.partitions.to_string(),
+            c.feasible().to_string(),
+            ex.pareto.contains(&i).to_string(),
+            (ex.favorite == Some(i)).to_string(),
+        ]);
+    }
+    csv
+}
+
+/// Fig 3: per-platform Definition-3 memory demand for every candidate
+/// cut position (two platforms, both at `bits` width, as in the paper's
+/// "two 16-bit platform architectures" figure).
+pub fn fig3_csv(g: &Graph, bits_a: u32, bits_b: u32) -> Csv {
+    let order = topo_sort(g, TieBreak::Deterministic);
+    let cuts = crate::graph::partition::clean_cuts(g, &order);
+    let mut csv = Csv::new(&["label", "cut_pos", "mem_a_mb", "mem_b_mb"]);
+    for c in &cuts {
+        let ma = memory::segment_memory_bytes(g, &order, 0..c.pos + 1, bits_a);
+        let mb = memory::segment_memory_bytes(g, &order, c.pos + 1..g.len(), bits_b);
+        csv.row(&[
+            g.node(c.boundary).name.clone(),
+            c.pos.to_string(),
+            num(ma as f64 / (1 << 20) as f64),
+            num(mb as f64 / (1 << 20) as f64),
+        ]);
+    }
+    csv
+}
+
+/// Table II: partition-count histogram rows per model.
+pub fn table2_csv(rows: &[(String, Vec<usize>)]) -> Csv {
+    let mut csv = Csv::new(&["model", "1_partition", "2_partitions", "3_partitions", "4_partitions"]);
+    for (model, counts) in rows {
+        let mut cells = vec![model.clone()];
+        for i in 0..4 {
+            cells.push(counts.get(i).copied().unwrap_or(0).to_string());
+        }
+        csv.row(&cells);
+    }
+    csv
+}
+
+/// Markdown rendering of Table II (matches the paper's layout).
+pub fn table2_markdown(rows: &[(String, Vec<usize>)]) -> String {
+    let mut s = String::from(
+        "| Model | 1 Partition | 2 Partitions | 3 Partitions | 4 Partitions |\n|---|---|---|---|---|\n",
+    );
+    for (model, counts) in rows {
+        s.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            model,
+            counts.first().unwrap_or(&0),
+            counts.get(1).unwrap_or(&0),
+            counts.get(2).unwrap_or(&0),
+            counts.get(3).unwrap_or(&0)
+        ));
+    }
+    s
+}
+
+/// Human-readable exploration summary for the CLI.
+pub fn render_exploration(ex: &Exploration, sys: &SystemConfig) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "model {} — {} candidates, {} on the Pareto front (metrics: {})\n",
+        ex.model,
+        ex.candidates.len(),
+        ex.pareto.len(),
+        sys.pareto_metrics.iter().map(|m| m.name()).collect::<Vec<_>>().join(", ")
+    ));
+    out.push_str(&format!(
+        "timing: hw-eval {} candidates {} nsga {} total {}\n\n",
+        fmt_time_s(ex.timing.hw_eval_s),
+        fmt_time_s(ex.timing.candidates_s),
+        fmt_time_s(ex.timing.nsga_s),
+        fmt_time_s(ex.timing.total_s)
+    ));
+    out.push_str(&format!(
+        "{:<16} {:>11} {:>11} {:>13} {:>7} {:>10} {:>6}\n",
+        "point", "latency", "energy", "throughput", "top-1", "link", "flags"
+    ));
+    for (i, c) in ex.candidates.iter().enumerate() {
+        let mut flags = String::new();
+        if ex.pareto.contains(&i) {
+            flags.push('P');
+        }
+        if ex.favorite == Some(i) {
+            flags.push('*');
+        }
+        if !c.feasible() {
+            flags.push('!');
+        }
+        out.push_str(&format!(
+            "{:<16} {:>11} {:>11} {:>13} {:>6.2}% {:>10} {:>6}\n",
+            c.label,
+            fmt_time_s(c.latency_s),
+            fmt_energy_j(c.energy_j),
+            fmt_throughput(c.throughput),
+            c.top1,
+            fmt_bytes(c.link_bytes),
+            flags
+        ));
+    }
+    if let Some(f) = ex.favorite_metrics() {
+        out.push_str(&format!(
+            "\nfavorite ({}-weighted): {}\n",
+            sys.favorite
+                .weights
+                .iter()
+                .map(|(m, _)| m.name())
+                .collect::<Vec<_>>()
+                .join("+"),
+            f.label
+        ));
+    }
+    out
+}
+
+/// Throughput-focused headline: best split vs best single platform
+/// (the paper's "47.5% throughput increase" claim shape).
+pub fn throughput_gain(ex: &Exploration) -> Option<(String, f64)> {
+    let single = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 1 && c.feasible())
+        .map(|c| c.throughput)
+        .fold(0.0f64, f64::max);
+    let best = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions >= 2 && c.feasible())
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())?;
+    if single <= 0.0 {
+        return None;
+    }
+    Some((best.label.clone(), 100.0 * (best.throughput - single) / single))
+}
+
+/// Pareto metric columns used when exporting fronts of arbitrary metric
+/// sets (Table II runs use latency/energy/link-bytes).
+pub fn front_csv(ex: &Exploration, metrics: &[Metric]) -> Csv {
+    let mut header = vec!["label".to_string(), "partitions".to_string()];
+    header.extend(metrics.iter().map(|m| m.name().to_string()));
+    let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut csv = Csv::new(&hdr);
+    for &i in &ex.pareto {
+        let c = &ex.candidates[i];
+        let mut cells = vec![c.label.clone(), c.partitions.to_string()];
+        cells.extend(metrics.iter().map(|&m| num(c.value(m))));
+        csv.row(&cells);
+    }
+    csv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::explorer::explore_two_platform;
+    use crate::zoo;
+
+    fn quick_ex() -> (Exploration, SystemConfig) {
+        let mut sys = SystemConfig::paper_two_platform();
+        sys.search.victory = 10;
+        sys.search.max_samples = 80;
+        let g = zoo::tiny_cnn(10);
+        (explore_two_platform(&g, &sys), sys)
+    }
+
+    #[test]
+    fn fig2_csv_has_row_per_candidate() {
+        let (ex, _) = quick_ex();
+        let csv = fig2_csv(&ex);
+        assert_eq!(csv.len(), ex.candidates.len());
+        let text = csv.to_string();
+        assert!(text.starts_with("label,cut_pos"));
+        assert!(text.contains("all-on-A"));
+    }
+
+    #[test]
+    fn fig3_memory_monotone_params() {
+        let g = zoo::vgg16(1000);
+        let csv = fig3_csv(&g, 16, 16);
+        assert!(csv.len() > 10);
+    }
+
+    #[test]
+    fn table2_markdown_shape() {
+        let rows = vec![
+            ("squeezenet1_1".to_string(), vec![1, 5, 7, 1]),
+            ("vgg16".to_string(), vec![2, 8, 8, 2]),
+        ];
+        let md = table2_markdown(&rows);
+        assert!(md.contains("| squeezenet1_1 | 1 | 5 | 7 | 1 |"));
+        let csv = table2_csv(&rows);
+        assert_eq!(csv.len(), 2);
+    }
+
+    #[test]
+    fn render_exploration_mentions_favorite() {
+        let (ex, sys) = quick_ex();
+        let text = render_exploration(&ex, &sys);
+        assert!(text.contains("favorite"));
+        assert!(text.contains("Pareto front"));
+    }
+
+    #[test]
+    fn throughput_gain_positive_for_tiny() {
+        let (ex, _) = quick_ex();
+        let (label, _gain) = throughput_gain(&ex).unwrap();
+        assert!(!label.is_empty());
+    }
+}

@@ -1,0 +1,141 @@
+//! One-stop regeneration of every table and figure in the paper's
+//! evaluation section (§V). Shared by `partir report`, the
+//! `paper_figures` example and the criterion-style benches, so every
+//! entry point produces identical artifacts.
+//!
+//! | Paper item | Output file |
+//! |---|---|
+//! | Fig 2(a) VGG-16 energy/latency        | `fig2a_vgg16.csv` |
+//! | Fig 2(b) ResNet-50 throughput         | `fig2b_resnet50.csv` |
+//! | Fig 2(c) ResNet-50 top-1              | `fig2c_resnet50.csv` (same rows) |
+//! | Fig 2(d) SqueezeNet energy/latency    | `fig2d_squeezenet1_1.csv` |
+//! | Fig 2(e) EfficientNet-B0 throughput   | `fig2e_efficientnet_b0.csv` |
+//! | Fig 2(f) EfficientNet-B0 top-1        | `fig2f_efficientnet_b0.csv` (same rows) |
+//! | (extra) GoogLeNet / RegNetX series    | `fig2x_{googlenet,regnet_x_400mf}.csv` |
+//! | Fig 3 EfficientNet-B0 memory          | `fig3_memory_efficientnet_b0.csv` |
+//! | Table II partition histogram          | `table2.csv`, `table2.md` |
+
+use super::{fig2_csv, fig3_csv, table2_csv, table2_markdown, throughput_gain};
+use crate::config::SystemConfig;
+use crate::explorer::{explore_two_platform, multi, Exploration};
+use crate::zoo;
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// Per-figure model → output-file mapping (paper subfigure labels).
+const FIG2_FILES: [(&str, &str); 6] = [
+    ("vgg16", "fig2a_vgg16.csv"),
+    ("resnet50", "fig2b_resnet50.csv"),
+    ("squeezenet1_1", "fig2d_squeezenet1_1.csv"),
+    ("efficientnet_b0", "fig2e_efficientnet_b0.csv"),
+    ("googlenet", "fig2x_googlenet.csv"),
+    ("regnet_x_400mf", "fig2x_regnet_x_400mf.csv"),
+];
+
+/// System config used by the Fig 2 experiments; `fast` trims the mapper
+/// search budget (CI smoke), full mode uses the paper's victory=100.
+pub fn fig2_system(fast: bool) -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    if fast {
+        sys.search.victory = 15;
+        sys.search.max_samples = 150;
+    }
+    sys
+}
+
+/// Run the two-platform exploration for one Fig 2 model.
+pub fn fig2_exploration(model: &str, fast: bool) -> (Exploration, SystemConfig) {
+    let g = zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}"));
+    let sys = fig2_system(fast);
+    (explore_two_platform(&g, &sys), sys)
+}
+
+/// Fig 2: all six CNN series. Returns (model, headline throughput gain).
+pub fn fig2(out: &Path, fast: bool) -> Result<Vec<(String, f64)>> {
+    std::fs::create_dir_all(out)?;
+    let mut gains = Vec::new();
+    for (model, file) in FIG2_FILES {
+        let (ex, _sys) = fig2_exploration(model, fast);
+        fig2_csv(&ex)
+            .write_file(&out.join(file))
+            .with_context(|| format!("writing {file}"))?;
+        // Fig 2(c)/(f) share the rows (top1 column) with (b)/(e): emit
+        // aliases so each paper subfigure has its named file.
+        match model {
+            "resnet50" => fig2_csv(&ex).write_file(&out.join("fig2c_resnet50.csv"))?,
+            "efficientnet_b0" => {
+                fig2_csv(&ex).write_file(&out.join("fig2f_efficientnet_b0.csv"))?
+            }
+            _ => {}
+        }
+        let gain = throughput_gain(&ex).map(|(_, g)| g).unwrap_or(0.0);
+        println!(
+            "[fig2] {model:<16} candidates {:>3} pareto {:>2} best-split throughput +{gain:.1}%",
+            ex.candidates.len(),
+            ex.pareto.len()
+        );
+        gains.push((model.to_string(), gain));
+    }
+    Ok(gains)
+}
+
+/// Fig 3: EfficientNet-B0 per-platform memory over all cut positions on
+/// two 16-bit platforms (the paper's setting for this figure).
+pub fn fig3(out: &Path) -> Result<()> {
+    std::fs::create_dir_all(out)?;
+    let g = zoo::efficientnet_b0(1000);
+    fig3_csv(&g, 16, 16).write_file(&out.join("fig3_memory_efficientnet_b0.csv"))?;
+    println!("[fig3] efficientnet_b0 memory series written");
+    Ok(())
+}
+
+/// Table II: 4-platform chain (EYR, EYR, SMB, SMB over GbE), Pareto over
+/// latency/energy/link-bandwidth, histogram of partition counts.
+pub fn table2(out: &Path, fast: bool) -> Result<Vec<(String, Vec<usize>)>> {
+    std::fs::create_dir_all(out)?;
+    let mut sys = SystemConfig::paper_four_platform();
+    if fast {
+        sys.search.victory = 15;
+        sys.search.max_samples = 150;
+    }
+    let mut rows = Vec::new();
+    for model in zoo::PAPER_MODELS {
+        let g = zoo::build(model).unwrap();
+        let ex = multi::explore_chain(&g, &sys);
+        let hist = multi::partition_histogram(&ex, sys.platforms.len());
+        println!("[table2] {model:<16} {hist:?}");
+        rows.push((model.to_string(), hist));
+    }
+    table2_csv(&rows).write_file(&out.join("table2.csv"))?;
+    std::fs::write(out.join("table2.md"), table2_markdown(&rows))?;
+    Ok(rows)
+}
+
+/// Everything (§V): Fig 2 a–f, Fig 3, Table II.
+pub fn generate_all(out: &Path, fast: bool) -> Result<()> {
+    let t0 = std::time::Instant::now();
+    fig2(out, fast)?;
+    fig3(out)?;
+    table2(out, fast)?;
+    println!(
+        "[report] all figures/tables regenerated into {} in {:.1}s",
+        out.display(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_writes_csv() {
+        let dir = std::env::temp_dir().join(format!("partir_fig3_{}", std::process::id()));
+        fig3(&dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("fig3_memory_efficientnet_b0.csv")).unwrap();
+        assert!(text.lines().count() > 50);
+        assert!(text.starts_with("label,cut_pos,mem_a_mb,mem_b_mb"));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,260 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and
+//! the Rust runtime (`artifacts/manifest.json`).
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// One exported HLO artifact.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub path: String,
+    pub batch: usize,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    /// Quantization bit width (None = fp32).
+    pub bits: Option<u32>,
+    /// Partition boundary (1..=3) for stage artifacts, None for `full`.
+    pub boundary: Option<usize>,
+    /// "full" | "stageA" | "stageB".
+    pub role: String,
+}
+
+/// Partition boundary metadata: rust schedule position + fmap shape.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoundaryMeta {
+    pub position: usize,
+    pub shape: Vec<usize>,
+}
+
+/// Accuracy numbers measured at build time by the python side.
+#[derive(Debug, Clone, Default)]
+pub struct BuildAccuracy {
+    pub fp32: f64,
+    pub ptq8: f64,
+    pub ptq16: f64,
+    pub qat8: f64,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: String,
+    pub classes: usize,
+    pub input_shape: Vec<usize>,
+    pub param_count: u64,
+    pub boundaries: BTreeMap<usize, BoundaryMeta>,
+    pub accuracy: BuildAccuracy,
+    pub artifacts: Vec<ArtifactMeta>,
+    pub testset_images: String,
+    pub testset_labels: String,
+    pub testset_count: usize,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let doc = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+
+        let shapes = |j: &Json| -> Result<Vec<usize>> {
+            j.as_arr()
+                .ok_or_else(|| anyhow!("expected shape array"))?
+                .iter()
+                .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad shape entry")))
+                .collect()
+        };
+
+        let mut boundaries = BTreeMap::new();
+        if let Some(obj) = doc.get("boundaries").as_obj() {
+            for (k, v) in obj {
+                boundaries.insert(
+                    k.parse::<usize>().map_err(|_| anyhow!("bad boundary key {k}"))?,
+                    BoundaryMeta {
+                        position: v
+                            .get("position")
+                            .as_usize()
+                            .ok_or_else(|| anyhow!("boundary {k}: missing position"))?,
+                        shape: shapes(v.get("shape"))?,
+                    },
+                );
+            }
+        }
+
+        let acc = doc.get("accuracy");
+        let accuracy = BuildAccuracy {
+            fp32: acc.get("fp32").as_f64().unwrap_or(0.0),
+            ptq8: acc.get("ptq8").as_f64().unwrap_or(0.0),
+            ptq16: acc.get("ptq16").as_f64().unwrap_or(0.0),
+            qat8: acc.get("qat8").as_f64().unwrap_or(0.0),
+        };
+
+        let artifacts = doc
+            .get("artifacts")
+            .as_arr()
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?
+            .iter()
+            .map(|a| -> Result<ArtifactMeta> {
+                Ok(ArtifactMeta {
+                    name: a
+                        .get("name")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact missing name"))?
+                        .to_string(),
+                    path: a
+                        .get("path")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact missing path"))?
+                        .to_string(),
+                    batch: a.get("batch").as_usize().ok_or_else(|| anyhow!("missing batch"))?,
+                    input_shape: shapes(a.get("input_shape"))?,
+                    output_shape: shapes(a.get("output_shape"))?,
+                    bits: a.get("bits").as_u64().map(|b| b as u32),
+                    boundary: a.get("boundary").as_usize(),
+                    role: a
+                        .get("role")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("artifact missing role"))?
+                        .to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        let ts = doc.get("testset");
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model: doc.get("model").as_str().unwrap_or("unknown").to_string(),
+            classes: doc.get("classes").as_usize().unwrap_or(0),
+            input_shape: shapes(doc.get("input_shape"))?,
+            param_count: doc.get("param_count").as_u64().unwrap_or(0),
+            boundaries,
+            accuracy,
+            artifacts,
+            testset_images: ts.get("images").as_str().unwrap_or("").to_string(),
+            testset_labels: ts.get("labels").as_str().unwrap_or("").to_string(),
+            testset_count: ts.get("count").as_usize().unwrap_or(0),
+        })
+    }
+
+    /// Find an artifact by role / bits / boundary / batch.
+    pub fn find(
+        &self,
+        role: &str,
+        bits: Option<u32>,
+        boundary: Option<usize>,
+        batch: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| {
+            a.role == role && a.bits == bits && a.boundary == boundary && a.batch == batch
+        })
+    }
+
+    pub fn load_testset(&self) -> Result<TestSet> {
+        TestSet::load(self)
+    }
+}
+
+/// Held-out test set exported by the build (f32 images + u8 labels).
+#[derive(Debug, Clone)]
+pub struct TestSet {
+    pub images: Vec<f32>,
+    pub labels: Vec<u8>,
+    pub count: usize,
+    pub image_shape: Vec<usize>,
+}
+
+impl TestSet {
+    pub fn load(m: &Manifest) -> Result<Self> {
+        let img_path = m.dir.join(&m.testset_images);
+        let raw = std::fs::read(&img_path)
+            .with_context(|| format!("reading {}", img_path.display()))?;
+        let images: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let labels = std::fs::read(m.dir.join(&m.testset_labels))
+            .with_context(|| format!("reading {}", m.testset_labels))?;
+        let elems: usize = m.input_shape.iter().product();
+        if images.len() != m.testset_count * elems {
+            return Err(anyhow!(
+                "test set has {} floats, expected {}",
+                images.len(),
+                m.testset_count * elems
+            ));
+        }
+        if labels.len() != m.testset_count {
+            return Err(anyhow!("test set has {} labels, expected {}", labels.len(), m.testset_count));
+        }
+        Ok(TestSet { images, labels, count: m.testset_count, image_shape: m.input_shape.clone() })
+    }
+
+    pub fn image_elems(&self) -> usize {
+        self.image_shape.iter().product()
+    }
+
+    /// Borrow image `i` as a flat slice.
+    pub fn image(&self, i: usize) -> &[f32] {
+        let n = self.image_elems();
+        &self.images[i * n..(i + 1) * n]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fake_manifest(dir: &Path) {
+        let manifest = r#"{
+  "model": "tiny_cnn", "classes": 10, "input_shape": [3, 32, 32],
+  "param_count": 33834,
+  "boundaries": {"1": {"position": 3, "shape": [16, 16, 16]}},
+  "accuracy": {"fp32": 90.0, "ptq8": 89.0, "ptq16": 90.0, "qat8": 89.5},
+  "testset": {"images": "ti.bin", "labels": "tl.bin", "count": 2, "image_shape": [3, 32, 32]},
+  "artifacts": [
+    {"name": "full_fp32_n1", "path": "f.hlo.txt", "batch": 1,
+     "input_shape": [3, 32, 32], "output_shape": [10],
+     "bytes": 1, "role": "full", "bits": null, "boundary": null},
+    {"name": "stageA_q16_bd1_n8", "path": "a.hlo.txt", "batch": 8,
+     "input_shape": [3, 32, 32], "output_shape": [16, 16, 16],
+     "bytes": 1, "role": "stageA", "bits": 16, "boundary": 1}
+  ]
+}"#;
+        std::fs::write(dir.join("manifest.json"), manifest).unwrap();
+        let img: Vec<u8> = vec![0u8; 2 * 3 * 32 * 32 * 4];
+        std::fs::write(dir.join("ti.bin"), img).unwrap();
+        std::fs::write(dir.join("tl.bin"), vec![1u8, 2u8]).unwrap();
+    }
+
+    #[test]
+    fn parses_manifest_and_testset() {
+        let dir = std::env::temp_dir().join(format!("partir_manifest_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_fake_manifest(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model, "tiny_cnn");
+        assert_eq!(m.classes, 10);
+        assert_eq!(m.param_count, 33834);
+        assert_eq!(m.boundaries[&1].position, 3);
+        assert_eq!(m.accuracy.fp32, 90.0);
+        let a = m.find("stageA", Some(16), Some(1), 8).unwrap();
+        assert_eq!(a.name, "stageA_q16_bd1_n8");
+        assert!(m.find("stageA", Some(8), Some(1), 8).is_none());
+        let full = m.find("full", None, None, 1).unwrap();
+        assert_eq!(full.output_shape, vec![10]);
+        let ts = m.load_testset().unwrap();
+        assert_eq!(ts.count, 2);
+        assert_eq!(ts.image(1).len(), 3 * 32 * 32);
+        assert_eq!(ts.labels, vec![1, 2]);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_errors() {
+        let dir = std::env::temp_dir().join("partir_no_such_dir_xyz");
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

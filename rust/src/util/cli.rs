@@ -1,0 +1,231 @@
+//! Minimal declarative CLI argument parser (clap substitute).
+//!
+//! Supports subcommands, `--flag`, `--key value` / `--key=value` options
+//! with defaults, and positional arguments, plus generated `--help` text.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// A parsed argument set for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<f64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected a number, got '{s}'")),
+        }
+    }
+
+    pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<usize>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| format!("--{name}: expected an integer, got '{s}'")),
+        }
+    }
+}
+
+/// Command definition: options + expected positionals.
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub opts: Vec<OptSpec>,
+    pub positional_help: &'static str,
+}
+
+impl Command {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Self { name, about, opts: Vec::new(), positional_help: "" }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default, is_flag: false });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.opts.push(OptSpec { name, help, default: None, is_flag: true });
+        self
+    }
+
+    pub fn positionals(mut self, help: &'static str) -> Self {
+        self.positional_help = help;
+        self
+    }
+
+    /// Parse raw args (after the subcommand name).
+    pub fn parse(&self, raw: &[String]) -> Result<Args, String> {
+        let mut values = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positionals = Vec::new();
+        // Seed defaults.
+        for o in &self.opts {
+            if let Some(d) = o.default {
+                values.insert(o.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 0;
+        while i < raw.len() {
+            let a = &raw[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help_text());
+            }
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline_val) = match body.split_once('=') {
+                    Some((k, v)) => (k, Some(v.to_string())),
+                    None => (body, None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == key)
+                    .ok_or_else(|| format!("unknown option --{key}\n\n{}", self.help_text()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        return Err(format!("--{key} is a flag and takes no value"));
+                    }
+                    flags.push(key.to_string());
+                } else {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            raw.get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{key} requires a value"))?
+                        }
+                    };
+                    values.insert(key.to_string(), val);
+                }
+            } else {
+                positionals.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Args { values, flags, positionals })
+    }
+
+    pub fn help_text(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.name, self.about);
+        let _ = writeln!(s, "\nUSAGE:\n  partir {} [OPTIONS] {}", self.name, self.positional_help);
+        if !self.opts.is_empty() {
+            let _ = writeln!(s, "\nOPTIONS:");
+            for o in &self.opts {
+                let head = if o.is_flag {
+                    format!("--{}", o.name)
+                } else {
+                    format!("--{} <value>", o.name)
+                };
+                let def = o.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+                let _ = writeln!(s, "  {head:<28} {}{def}", o.help);
+            }
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cmd() -> Command {
+        Command::new("explore", "run DSE")
+            .opt("model", Some("resnet50"), "model name")
+            .opt("seed", Some("42"), "rng seed")
+            .flag("verbose", "chatty output")
+            .positionals("[CONFIG]")
+    }
+
+    fn strs(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cmd().parse(&[]).unwrap();
+        assert_eq!(a.get("model"), Some("resnet50"));
+        assert_eq!(a.get_u64("seed").unwrap(), Some(42));
+        assert!(!a.flag("verbose"));
+    }
+
+    #[test]
+    fn space_and_equals_forms() {
+        let a = cmd().parse(&strs(&["--model", "vgg16", "--seed=7"])).unwrap();
+        assert_eq!(a.get("model"), Some("vgg16"));
+        assert_eq!(a.get("seed"), Some("7"));
+    }
+
+    #[test]
+    fn flags_and_positionals() {
+        let a = cmd().parse(&strs(&["--verbose", "sys.toml"])).unwrap();
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positionals, vec!["sys.toml"]);
+    }
+
+    #[test]
+    fn unknown_option_is_error() {
+        assert!(cmd().parse(&strs(&["--bogus"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(cmd().parse(&strs(&["--model"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reports_option() {
+        let a = cmd().parse(&strs(&["--seed", "abc"])).unwrap();
+        let e = a.get_u64("seed").unwrap_err();
+        assert!(e.contains("--seed"));
+    }
+
+    #[test]
+    fn help_lists_options() {
+        let h = cmd().help_text();
+        assert!(h.contains("--model"));
+        assert!(h.contains("--verbose"));
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny CSV writer used by the report emitters and benches.
+
+use std::io::Write;
+use std::path::Path;
+
+/// In-memory CSV table with a fixed header.
+#[derive(Debug, Clone)]
+pub struct Csv {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Csv {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row; panics if the arity does not match the header
+    /// (catching that early beats writing a ragged file).
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "CSV row arity {} != header arity {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&escape_row(&self.header));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&escape_row(r));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_string().as_bytes())
+    }
+}
+
+/// Format a float cell with enough precision for plotting but stable output.
+pub fn num(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 1e6 || v.abs() < 1e-4 {
+        format!("{v:.6e}")
+    } else {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    }
+}
+
+fn escape_row(cells: &[String]) -> String {
+    cells
+        .iter()
+        .map(|c| {
+            if c.contains(',') || c.contains('"') || c.contains('\n') {
+                format!("\"{}\"", c.replace('"', "\"\""))
+            } else {
+                c.clone()
+            }
+        })
+        .collect::<Vec<_>>()
+        .join(",")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn writes_header_and_rows() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["1".into(), "2".into()]);
+        assert_eq!(c.to_string(), "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn escapes_special_cells() {
+        let mut c = Csv::new(&["x"]);
+        c.row(&["a,b".into()]);
+        c.row(&["q\"uote".into()]);
+        assert_eq!(c.to_string(), "x\n\"a,b\"\n\"q\"\"uote\"\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn panics_on_ragged_row() {
+        let mut c = Csv::new(&["a", "b"]);
+        c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn num_formatting() {
+        assert_eq!(num(0.0), "0");
+        assert_eq!(num(1.5), "1.5");
+        assert_eq!(num(2.0), "2");
+        assert!(num(1.0e-7).contains('e'));
+        assert!(num(3.2e7).contains('e'));
+    }
+}

@@ -1,0 +1,12 @@
+//! Small self-contained substrates replacing crates that are unavailable in
+//! this offline build (rand, serde/serde_json, toml, csv, clap).
+//!
+//! Each submodule is dependency-free and covered by its own unit tests.
+
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod tomlite;
+pub mod units;

@@ -1,0 +1,287 @@
+//! Minimal TOML-subset parser (toml-crate substitute) for config files.
+//!
+//! Supported grammar — everything the `configs/*.toml` shipped with this
+//! repo use:
+//!   * `[table]` and `[table.subtable]` headers
+//!   * `[[array-of-tables]]` headers
+//!   * `key = value` with string / integer / float / bool / array values
+//!   * `#` comments, blank lines
+//!
+//! Values are exposed through the same [`Json`] tree the rest of the code
+//! uses, so config handling and report emission share one value type.
+
+use super::json::{Json, JsonError};
+use std::collections::BTreeMap;
+
+#[derive(Debug)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl std::fmt::Display for TomlError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TOML error on line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse TOML text into a `Json::Obj` tree.
+pub fn parse(text: &str) -> Result<Json, TomlError> {
+    let mut root = BTreeMap::new();
+    // Path of the currently open table, e.g. ["link"] or ["platforms", "3"].
+    let mut current: Vec<String> = Vec::new();
+    // Whether `current` addresses the last element of an array-of-tables.
+    let mut current_is_aot = false;
+
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        let err = |msg: &str| TomlError { line: lineno + 1, msg: msg.to_string() };
+
+        if let Some(inner) = line.strip_prefix("[[").and_then(|s| s.strip_suffix("]]")) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table name"));
+            }
+            push_array_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+            current_is_aot = true;
+        } else if let Some(inner) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+            let path: Vec<String> = inner.split('.').map(|s| s.trim().to_string()).collect();
+            if path.iter().any(|p| p.is_empty()) {
+                return Err(err("empty table name"));
+            }
+            ensure_table(&mut root, &path).map_err(|m| err(&m))?;
+            current = path;
+            current_is_aot = false;
+        } else if let Some(eq) = find_top_level_eq(line) {
+            let key = line[..eq].trim();
+            let val = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(err("empty key"));
+            }
+            let key = key.trim_matches('"').to_string();
+            let value = parse_value(val).map_err(|m| err(&m))?;
+            let table = open_table(&mut root, &current, current_is_aot).map_err(|m| err(&m))?;
+            if table.insert(key.clone(), value).is_some() {
+                return Err(err(&format!("duplicate key '{key}'")));
+            }
+        } else {
+            return Err(err(&format!("cannot parse line: '{line}'")));
+        }
+    }
+    Ok(Json::Obj(root))
+}
+
+/// Parse a TOML file from disk.
+pub fn parse_file(path: &std::path::Path) -> Result<Json, String> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("cannot read {}: {e}", path.display()))?;
+    parse(&text).map_err(|e| format!("{}: {e}", path.display()))
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn find_top_level_eq(line: &str) -> Option<usize> {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '=' if !in_str => return Some(i),
+            _ => {}
+        }
+    }
+    None
+}
+
+fn ensure_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    let mut cur = root;
+    for part in path {
+        let entry = cur
+            .entry(part.clone())
+            .or_insert_with(|| Json::Obj(BTreeMap::new()));
+        cur = match entry {
+            Json::Obj(o) => o,
+            Json::Arr(a) => match a.last_mut() {
+                Some(Json::Obj(o)) => o,
+                _ => return Err(format!("'{part}' is not a table")),
+            },
+            _ => return Err(format!("'{part}' is not a table")),
+        };
+    }
+    Ok(cur)
+}
+
+fn push_array_table(root: &mut BTreeMap<String, Json>, path: &[String]) -> Result<(), String> {
+    let (last, parents) = path.split_last().unwrap();
+    let parent = ensure_table(root, parents)?;
+    let entry = parent
+        .entry(last.clone())
+        .or_insert_with(|| Json::Arr(Vec::new()));
+    match entry {
+        Json::Arr(a) => {
+            a.push(Json::Obj(BTreeMap::new()));
+            Ok(())
+        }
+        _ => Err(format!("'{last}' is not an array of tables")),
+    }
+}
+
+fn open_table<'a>(
+    root: &'a mut BTreeMap<String, Json>,
+    path: &[String],
+    _is_aot: bool,
+) -> Result<&'a mut BTreeMap<String, Json>, String> {
+    ensure_table(root, path)
+}
+
+fn parse_value(s: &str) -> Result<Json, String> {
+    let s = s.trim();
+    if s.is_empty() {
+        return Err("missing value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|t| t.strip_suffix('"')) {
+        // Reuse the JSON string parser for escapes.
+        return Json::parse(&format!("\"{inner}\""))
+            .map_err(|e: JsonError| format!("bad string: {e}"));
+    }
+    if s == "true" {
+        return Ok(Json::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Json::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|t| t.strip_suffix(']')) {
+        let mut items = Vec::new();
+        for part in split_array_items(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                items.push(parse_value(part)?);
+            }
+        }
+        return Ok(Json::Arr(items));
+    }
+    // Numbers; TOML allows '_' separators.
+    let cleaned: String = s.chars().filter(|&c| c != '_').collect();
+    cleaned
+        .parse::<f64>()
+        .map(Json::Num)
+        .map_err(|_| format!("cannot parse value '{s}'"))
+}
+
+fn split_array_items(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut in_str = false;
+    let mut cur = String::new();
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth = depth.saturating_sub(1);
+                cur.push(c);
+            }
+            ',' if !in_str && depth == 0 => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_flat_keys() {
+        let j = parse("a = 1\nb = \"x\"\nc = true\nd = 2.5\n").unwrap();
+        assert_eq!(j.get("a").as_u64(), Some(1));
+        assert_eq!(j.get("b").as_str(), Some("x"));
+        assert_eq!(j.get("c").as_bool(), Some(true));
+        assert_eq!(j.get("d").as_f64(), Some(2.5));
+    }
+
+    #[test]
+    fn parses_tables_and_subtables() {
+        let j = parse("[link]\nbandwidth_gbps = 1.0\n[hw.eyeriss]\npes = 168\n").unwrap();
+        assert_eq!(j.get("link").get("bandwidth_gbps").as_f64(), Some(1.0));
+        assert_eq!(j.get("hw").get("eyeriss").get("pes").as_u64(), Some(168));
+    }
+
+    #[test]
+    fn parses_array_of_tables() {
+        let text = "[[platforms]]\nname = \"A\"\n[[platforms]]\nname = \"B\"\n";
+        let j = parse(text).unwrap();
+        let ps = j.get("platforms").as_arr().unwrap();
+        assert_eq!(ps.len(), 2);
+        assert_eq!(ps[0].get("name").as_str(), Some("A"));
+        assert_eq!(ps[1].get("name").as_str(), Some("B"));
+    }
+
+    #[test]
+    fn keys_after_array_table_go_to_last_element() {
+        let text = "[[p]]\nx = 1\n[[p]]\nx = 2\ny = 3\n";
+        let j = parse(text).unwrap();
+        let ps = j.get("p").as_arr().unwrap();
+        assert_eq!(ps[0].get("x").as_u64(), Some(1));
+        assert_eq!(ps[1].get("y").as_u64(), Some(3));
+    }
+
+    #[test]
+    fn arrays_and_comments() {
+        let j = parse("# top\nxs = [1, 2, 3] # tail\nss = [\"a\", \"b#c\"]\n").unwrap();
+        assert_eq!(j.get("xs").as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("ss").as_arr().unwrap()[1].as_str(), Some("b#c"));
+    }
+
+    #[test]
+    fn numeric_underscores() {
+        let j = parse("mem = 1_048_576\n").unwrap();
+        assert_eq!(j.get("mem").as_u64(), Some(1_048_576));
+    }
+
+    #[test]
+    fn errors_carry_line_numbers() {
+        let e = parse("a = 1\nbogus line\n").unwrap_err();
+        assert_eq!(e.line, 2);
+        let e = parse("a = 1\na = 2\n").unwrap_err();
+        assert_eq!(e.line, 2);
+    }
+
+    #[test]
+    fn nested_arrays() {
+        let j = parse("m = [[1, 2], [3, 4]]\n").unwrap();
+        let m = j.get("m").as_arr().unwrap();
+        assert_eq!(m[1].as_arr().unwrap()[0].as_u64(), Some(3));
+    }
+}

@@ -1,0 +1,101 @@
+//! Human-readable unit formatting for reports and CLI output.
+
+/// Seconds → adaptive "µs/ms/s" string.
+pub fn fmt_time_s(seconds: f64) -> String {
+    let s = seconds.abs();
+    if s == 0.0 {
+        "0 s".to_string()
+    } else if s < 1e-3 {
+        format!("{:.2} µs", seconds * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2} ms", seconds * 1e3)
+    } else {
+        format!("{:.2} s", seconds)
+    }
+}
+
+/// Joules → adaptive "µJ/mJ/J".
+pub fn fmt_energy_j(joules: f64) -> String {
+    let j = joules.abs();
+    if j == 0.0 {
+        "0 J".to_string()
+    } else if j < 1e-3 {
+        format!("{:.2} µJ", joules * 1e6)
+    } else if j < 1.0 {
+        format!("{:.2} mJ", joules * 1e3)
+    } else {
+        format!("{:.2} J", joules)
+    }
+}
+
+/// Bytes → adaptive "B/KiB/MiB/GiB".
+pub fn fmt_bytes(bytes: u64) -> String {
+    const K: f64 = 1024.0;
+    let b = bytes as f64;
+    if b < K {
+        format!("{bytes} B")
+    } else if b < K * K {
+        format!("{:.2} KiB", b / K)
+    } else if b < K * K * K {
+        format!("{:.2} MiB", b / K / K)
+    } else {
+        format!("{:.2} GiB", b / K / K / K)
+    }
+}
+
+/// Count → adaptive "K/M/G" (decimal), for MACs/params.
+pub fn fmt_count(n: u64) -> String {
+    let f = n as f64;
+    if f < 1e3 {
+        format!("{n}")
+    } else if f < 1e6 {
+        format!("{:.2} K", f / 1e3)
+    } else if f < 1e9 {
+        format!("{:.2} M", f / 1e6)
+    } else {
+        format!("{:.2} G", f / 1e9)
+    }
+}
+
+/// Inferences/second.
+pub fn fmt_throughput(ips: f64) -> String {
+    if ips >= 1000.0 {
+        format!("{:.0} inf/s", ips)
+    } else {
+        format!("{:.2} inf/s", ips)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_scales() {
+        assert_eq!(fmt_time_s(0.0), "0 s");
+        assert_eq!(fmt_time_s(2.5e-6), "2.50 µs");
+        assert_eq!(fmt_time_s(3.0e-3), "3.00 ms");
+        assert_eq!(fmt_time_s(1.25), "1.25 s");
+    }
+
+    #[test]
+    fn energy_scales() {
+        assert_eq!(fmt_energy_j(5.0e-7), "0.50 µJ");
+        assert_eq!(fmt_energy_j(0.02), "20.00 mJ");
+        assert_eq!(fmt_energy_j(3.1), "3.10 J");
+    }
+
+    #[test]
+    fn byte_scales() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert_eq!(fmt_bytes(2048), "2.00 KiB");
+        assert_eq!(fmt_bytes(5 * 1024 * 1024), "5.00 MiB");
+    }
+
+    #[test]
+    fn count_scales() {
+        assert_eq!(fmt_count(950), "950");
+        assert_eq!(fmt_count(5_300_000), "5.30 M");
+        assert_eq!(fmt_count(4_100_000_000), "4.10 G");
+    }
+}

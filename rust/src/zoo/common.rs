@@ -1,0 +1,127 @@
+//! Shared building blocks for the zoo's graph constructors.
+
+use crate::graph::{Act, Graph, LayerKind, NodeId, Pool2d};
+
+/// Plain convolution (optionally biased).
+pub fn conv(
+    g: &mut Graph,
+    inp: NodeId,
+    out_c: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    bias: bool,
+) -> NodeId {
+    g.add(
+        LayerKind::Conv2d {
+            out_c,
+            kernel: (k, k),
+            stride: (s, s),
+            pad: (p, p),
+            groups: 1,
+            bias,
+        },
+        &[inp],
+    )
+}
+
+/// Grouped convolution (RegNet) / depthwise when `groups == in_c`.
+pub fn gconv(
+    g: &mut Graph,
+    inp: NodeId,
+    out_c: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    groups: usize,
+) -> NodeId {
+    g.add(
+        LayerKind::Conv2d {
+            out_c,
+            kernel: (k, k),
+            stride: (s, s),
+            pad: (p, p),
+            groups,
+            bias: false,
+        },
+        &[inp],
+    )
+}
+
+/// conv → BN (no activation), the torchvision `BasicConv2d`-minus-ReLU.
+pub fn conv_bn(g: &mut Graph, inp: NodeId, out_c: usize, k: usize, s: usize, p: usize) -> NodeId {
+    let c = conv(g, inp, out_c, k, s, p, false);
+    g.add(LayerKind::BatchNorm, &[c])
+}
+
+/// conv → BN → activation.
+pub fn conv_bn_act(
+    g: &mut Graph,
+    inp: NodeId,
+    out_c: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    act: Act,
+) -> NodeId {
+    let b = conv_bn(g, inp, out_c, k, s, p);
+    g.add(LayerKind::Activation(act), &[b])
+}
+
+/// Grouped conv → BN → activation.
+pub fn gconv_bn_act(
+    g: &mut Graph,
+    inp: NodeId,
+    out_c: usize,
+    k: usize,
+    s: usize,
+    p: usize,
+    groups: usize,
+    act: Act,
+) -> NodeId {
+    let c = gconv(g, inp, out_c, k, s, p, groups);
+    let b = g.add(LayerKind::BatchNorm, &[c]);
+    g.add(LayerKind::Activation(act), &[b])
+}
+
+pub fn relu(g: &mut Graph, inp: NodeId) -> NodeId {
+    g.add(LayerKind::Activation(Act::Relu), &[inp])
+}
+
+pub fn maxpool(g: &mut Graph, inp: NodeId, k: usize, s: usize, p: usize, ceil: bool) -> NodeId {
+    g.add(LayerKind::MaxPool(Pool2d { kernel: k, stride: s, pad: p, ceil }), &[inp])
+}
+
+pub fn gap(g: &mut Graph, inp: NodeId) -> NodeId {
+    g.add(LayerKind::GlobalAvgPool, &[inp])
+}
+
+/// GAP → Flatten → (Dropout) → Linear classifier tail.
+pub fn classifier(
+    g: &mut Graph,
+    inp: NodeId,
+    classes: usize,
+    dropout: bool,
+) -> NodeId {
+    let p = gap(g, inp);
+    let f = g.add(LayerKind::Flatten, &[p]);
+    let f = if dropout { g.add(LayerKind::Dropout, &[f]) } else { f };
+    g.add(LayerKind::Linear { out_features: classes, bias: true }, &[f])
+}
+
+/// Squeeze-and-excitation gate on `inp` (torchvision layout):
+/// GAP → conv1x1(se_c, bias) → act → conv1x1(c, bias) → Sigmoid → Mul.
+pub fn squeeze_excite(
+    g: &mut Graph,
+    inp: NodeId,
+    se_c: usize,
+    act: Act,
+) -> NodeId {
+    let c = g.node(inp).out_shape.channels();
+    let pooled = gap(g, inp);
+    let fc1 = conv(g, pooled, se_c, 1, 1, 0, true);
+    let a = g.add(LayerKind::Activation(act), &[fc1]);
+    let fc2 = conv(g, a, c, 1, 1, 0, true);
+    let gate = g.add(LayerKind::Activation(Act::Sigmoid), &[fc2]);
+    g.add(LayerKind::Mul, &[inp, gate])
+}

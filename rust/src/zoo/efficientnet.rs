@@ -1,0 +1,130 @@
+//! EfficientNet-B0 (Tan & Le 2019), torchvision `efficientnet_b0`:
+//! MBConv blocks with squeeze-and-excitation, SiLU activations, BN,
+//! 1280-wide head. Published parameter count: 5,288,548.
+
+use super::common::{classifier, conv_bn, conv_bn_act, squeeze_excite};
+use crate::graph::{Act, Graph, LayerKind, NodeId};
+
+struct StageCfg {
+    expand: usize,
+    kernel: usize,
+    stride: usize,
+    out_c: usize,
+    layers: usize,
+}
+
+const STAGES: &[StageCfg] = &[
+    StageCfg { expand: 1, kernel: 3, stride: 1, out_c: 16, layers: 1 },
+    StageCfg { expand: 6, kernel: 3, stride: 2, out_c: 24, layers: 2 },
+    StageCfg { expand: 6, kernel: 5, stride: 2, out_c: 40, layers: 2 },
+    StageCfg { expand: 6, kernel: 3, stride: 2, out_c: 80, layers: 3 },
+    StageCfg { expand: 6, kernel: 5, stride: 1, out_c: 112, layers: 3 },
+    StageCfg { expand: 6, kernel: 5, stride: 2, out_c: 192, layers: 4 },
+    StageCfg { expand: 6, kernel: 3, stride: 1, out_c: 320, layers: 1 },
+];
+
+/// MBConv: expand 1×1 (skipped when ratio 1) → depthwise k×k → SE →
+/// project 1×1, residual when stride 1 and channels match.
+/// SE squeeze width is `in_c / 4` (relative to the block *input*,
+/// torchvision convention).
+fn mbconv(
+    g: &mut Graph,
+    inp: NodeId,
+    expand: usize,
+    kernel: usize,
+    stride: usize,
+    out_c: usize,
+) -> NodeId {
+    let in_c = g.node(inp).out_shape.channels();
+    let exp_c = in_c * expand;
+    let mut x = inp;
+    if expand != 1 {
+        x = conv_bn_act(g, x, exp_c, 1, 1, 0, Act::Silu);
+    }
+    // Depthwise.
+    let pad = (kernel - 1) / 2;
+    let dw = g.add(
+        LayerKind::Conv2d {
+            out_c: exp_c,
+            kernel: (kernel, kernel),
+            stride: (stride, stride),
+            pad: (pad, pad),
+            groups: exp_c,
+            bias: false,
+        },
+        &[x],
+    );
+    let bn = g.add(LayerKind::BatchNorm, &[dw]);
+    let act = g.add(LayerKind::Activation(Act::Silu), &[bn]);
+    let se = squeeze_excite(g, act, (in_c / 4).max(1), Act::Silu);
+    let proj = conv_bn(g, se, out_c, 1, 1, 0);
+    if stride == 1 && in_c == out_c {
+        g.add(LayerKind::Add, &[inp, proj])
+    } else {
+        proj
+    }
+}
+
+pub fn efficientnet_b0(classes: usize) -> Graph {
+    let mut g = Graph::new("efficientnet_b0");
+    let x = g.input(3, 224, 224);
+    let mut cur = conv_bn_act(&mut g, x, 32, 3, 2, 1, Act::Silu); // -> 112
+    for s in STAGES {
+        cur = mbconv(&mut g, cur, s.expand, s.kernel, s.stride, s.out_c);
+        for _ in 1..s.layers {
+            cur = mbconv(&mut g, cur, s.expand, s.kernel, 1, s.out_c);
+        }
+    }
+    let head = conv_bn_act(&mut g, cur, 1280, 1, 1, 0, Act::Silu);
+    classifier(&mut g, head, classes, true);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = efficientnet_b0(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 5_288_548);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~0.39 GMACs at 224x224.
+        let g = efficientnet_b0(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((0.36..0.43).contains(&gmacs), "EfficientNet-B0 GMACs {gmacs}");
+    }
+
+    #[test]
+    fn conv_count_covers_paper_points() {
+        // Paper cites partition points Conv_45, Conv_56, Conv_79: the
+        // graph must have at least 80 convolutions.
+        let g = efficientnet_b0(1000);
+        let convs = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Conv2d { .. })).count();
+        assert!(convs >= 80, "only {convs} convs");
+        assert!(g.by_name("Conv_45").is_some());
+        assert!(g.by_name("Conv_56").is_some());
+        assert!(g.by_name("Conv_79").is_some());
+    }
+
+    #[test]
+    fn head_shape() {
+        let g = efficientnet_b0(1000);
+        let gap_node = g.by_name("GlobalAvgPool_16").unwrap(); // 16 SE gaps before it
+        let pre = g.node(gap_node.inputs[0]);
+        assert_eq!(pre.out_shape, Shape::chw(1280, 7, 7));
+    }
+
+    #[test]
+    fn sixteen_mbconv_blocks() {
+        let g = efficientnet_b0(1000);
+        // Each MBConv has exactly one SE gate (one Mul).
+        let muls = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Mul)).count();
+        assert_eq!(muls, 16);
+    }
+}

@@ -1,0 +1,105 @@
+//! GoogLeNet (Szegedy et al. 2015), torchvision `googlenet` layout with
+//! batch norm, no auxiliary classifiers, and the well-known torchvision
+//! quirk that the "5×5" inception branch actually uses a 3×3 kernel.
+//! Published parameter count: 6,624,904.
+
+use super::common::{classifier, conv_bn_act, maxpool};
+use crate::graph::{Act, Graph, LayerKind, NodeId, Pool2d};
+
+struct InceptionCfg {
+    ch1x1: usize,
+    ch3x3red: usize,
+    ch3x3: usize,
+    ch5x5red: usize,
+    ch5x5: usize,
+    pool_proj: usize,
+}
+
+fn inception(g: &mut Graph, inp: NodeId, cfg: &InceptionCfg) -> NodeId {
+    let b1 = conv_bn_act(g, inp, cfg.ch1x1, 1, 1, 0, Act::Relu);
+    let b2a = conv_bn_act(g, inp, cfg.ch3x3red, 1, 1, 0, Act::Relu);
+    let b2 = conv_bn_act(g, b2a, cfg.ch3x3, 3, 1, 1, Act::Relu);
+    let b3a = conv_bn_act(g, inp, cfg.ch5x5red, 1, 1, 0, Act::Relu);
+    // torchvision uses kernel 3 (padding 1) here despite the name.
+    let b3 = conv_bn_act(g, b3a, cfg.ch5x5, 3, 1, 1, Act::Relu);
+    let pool = g.add(
+        LayerKind::MaxPool(Pool2d { kernel: 3, stride: 1, pad: 1, ceil: true }),
+        &[inp],
+    );
+    let b4 = conv_bn_act(g, pool, cfg.pool_proj, 1, 1, 0, Act::Relu);
+    g.add(LayerKind::Concat, &[b1, b2, b3, b4])
+}
+
+const CFGS: &[InceptionCfg] = &[
+    // 3a, 3b
+    InceptionCfg { ch1x1: 64, ch3x3red: 96, ch3x3: 128, ch5x5red: 16, ch5x5: 32, pool_proj: 32 },
+    InceptionCfg { ch1x1: 128, ch3x3red: 128, ch3x3: 192, ch5x5red: 32, ch5x5: 96, pool_proj: 64 },
+    // 4a..4e
+    InceptionCfg { ch1x1: 192, ch3x3red: 96, ch3x3: 208, ch5x5red: 16, ch5x5: 48, pool_proj: 64 },
+    InceptionCfg { ch1x1: 160, ch3x3red: 112, ch3x3: 224, ch5x5red: 24, ch5x5: 64, pool_proj: 64 },
+    InceptionCfg { ch1x1: 128, ch3x3red: 128, ch3x3: 256, ch5x5red: 24, ch5x5: 64, pool_proj: 64 },
+    InceptionCfg { ch1x1: 112, ch3x3red: 144, ch3x3: 288, ch5x5red: 32, ch5x5: 64, pool_proj: 64 },
+    InceptionCfg { ch1x1: 256, ch3x3red: 160, ch3x3: 320, ch5x5red: 32, ch5x5: 128, pool_proj: 128 },
+    // 5a, 5b
+    InceptionCfg { ch1x1: 256, ch3x3red: 160, ch3x3: 320, ch5x5red: 32, ch5x5: 128, pool_proj: 128 },
+    InceptionCfg { ch1x1: 384, ch3x3red: 192, ch3x3: 384, ch5x5red: 48, ch5x5: 128, pool_proj: 128 },
+];
+
+pub fn googlenet(classes: usize) -> Graph {
+    let mut g = Graph::new("googlenet");
+    let x = g.input(3, 224, 224);
+    let c1 = conv_bn_act(&mut g, x, 64, 7, 2, 3, Act::Relu); // -> 112
+    let p1 = maxpool(&mut g, c1, 3, 2, 0, true); // -> 56
+    let c2 = conv_bn_act(&mut g, p1, 64, 1, 1, 0, Act::Relu);
+    let c3 = conv_bn_act(&mut g, c2, 192, 3, 1, 1, Act::Relu);
+    let p2 = maxpool(&mut g, c3, 3, 2, 0, true); // -> 28
+    let i3a = inception(&mut g, p2, &CFGS[0]);
+    let i3b = inception(&mut g, i3a, &CFGS[1]);
+    let p3 = maxpool(&mut g, i3b, 3, 2, 0, true); // -> 14
+    let mut x4 = p3;
+    for cfg in &CFGS[2..7] {
+        x4 = inception(&mut g, x4, cfg);
+    }
+    let p4 = maxpool(&mut g, x4, 2, 2, 0, true); // -> 7
+    let i5a = inception(&mut g, p4, &CFGS[7]);
+    let i5b = inception(&mut g, i5a, &CFGS[8]);
+    classifier(&mut g, i5b, classes, true);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = googlenet(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 6_624_904);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~1.5 GMACs at 224x224.
+        let g = googlenet(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((1.35..1.65).contains(&gmacs), "GoogLeNet GMACs {gmacs}");
+    }
+
+    #[test]
+    fn inception_output_channels() {
+        let g = googlenet(1000);
+        // 3a: 64+128+32+32 = 256 at 28x28.
+        assert_eq!(g.by_name("Concat_0").unwrap().out_shape, Shape::chw(256, 28, 28));
+        // 5b: 384+384+128+128 = 1024 at 7x7.
+        assert_eq!(g.by_name("Concat_8").unwrap().out_shape, Shape::chw(1024, 7, 7));
+    }
+
+    #[test]
+    fn nine_inception_modules() {
+        let g = googlenet(1000);
+        let concats = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Concat)).count();
+        assert_eq!(concats, 9);
+    }
+}

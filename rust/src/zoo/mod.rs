@@ -1,0 +1,95 @@
+//! Model zoo: programmatic graph constructors for the six CNNs the paper
+//! evaluates (§V-A) plus the executable tiny CNN.
+//!
+//! The paper ingests ONNX files exported from torchvision; we construct
+//! structurally identical layer DAGs directly (same operator sequence,
+//! shapes, parameter and MAC counts — validated against the published
+//! totals in each module's tests). The DSE only consumes this structural
+//! information, never the weights.
+
+pub mod common;
+pub mod efficientnet;
+pub mod googlenet;
+pub mod regnet;
+pub mod resnet;
+pub mod squeezenet;
+pub mod tiny;
+pub mod vgg;
+
+use crate::graph::Graph;
+
+pub use efficientnet::efficientnet_b0;
+pub use googlenet::googlenet;
+pub use regnet::regnet_x_400mf;
+pub use resnet::resnet50;
+pub use squeezenet::squeezenet1_1;
+pub use tiny::tiny_cnn;
+pub use vgg::vgg16;
+
+/// Names of the six paper workloads, in the order Table II lists them.
+pub const PAPER_MODELS: [&str; 6] = [
+    "squeezenet1_1",
+    "vgg16",
+    "googlenet",
+    "resnet50",
+    "regnet_x_400mf",
+    "efficientnet_b0",
+];
+
+/// Build a zoo model by name (1000 ImageNet classes for the paper models,
+/// 10 classes for the executable tiny CNN).
+pub fn build(name: &str) -> Option<Graph> {
+    match name {
+        "vgg16" => Some(vgg16(1000)),
+        "resnet50" => Some(resnet50(1000)),
+        "googlenet" => Some(googlenet(1000)),
+        "squeezenet1_1" => Some(squeezenet1_1(1000)),
+        "regnet_x_400mf" => Some(regnet_x_400mf(1000)),
+        "efficientnet_b0" => Some(efficientnet_b0(1000)),
+        "tiny_cnn" => Some(tiny_cnn(tiny::TINY_CLASSES)),
+        _ => None,
+    }
+}
+
+/// All model names `build` accepts.
+pub fn names() -> Vec<&'static str> {
+    let mut v = PAPER_MODELS.to_vec();
+    v.push("tiny_cnn");
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn build_accepts_all_names() {
+        for name in names() {
+            let g = build(name).unwrap_or_else(|| panic!("{name} missing"));
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(g.name, name);
+        }
+        assert!(build("alexnet").is_none());
+    }
+
+    #[test]
+    fn every_paper_model_has_single_output() {
+        for name in PAPER_MODELS {
+            let g = build(name).unwrap();
+            assert_eq!(g.outputs().len(), 1, "{name} output count");
+        }
+    }
+
+    #[test]
+    fn paper_models_sorted_by_size_sanity() {
+        // SqueezeNet is the smallest, VGG-16 the largest by parameters.
+        let params: Vec<u64> = PAPER_MODELS
+            .iter()
+            .map(|n| build(n).unwrap().total_params())
+            .collect();
+        let min = *params.iter().min().unwrap();
+        let max = *params.iter().max().unwrap();
+        assert_eq!(params[0], min); // squeezenet
+        assert_eq!(params[1], max); // vgg16
+    }
+}

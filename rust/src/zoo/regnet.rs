@@ -1,0 +1,79 @@
+//! RegNetX-400MF (Radosavovic et al. 2020), torchvision `regnet_x_400mf`:
+//! depths [1, 2, 7, 12], widths [32, 64, 160, 400], group width 16,
+//! simple stem of width 32. X-blocks (no SE), ReLU + BN everywhere.
+//! Published parameter count: 5,495,976.
+
+use super::common::{classifier, conv_bn, conv_bn_act, gconv_bn_act, relu};
+use crate::graph::{Act, Graph, LayerKind, NodeId};
+
+const DEPTHS: [usize; 4] = [1, 2, 7, 12];
+const WIDTHS: [usize; 4] = [32, 64, 160, 400];
+const GROUP_WIDTH: usize = 16;
+
+/// RegNet X block: 1×1 → 3×3 grouped (stride) → 1×1, residual, ReLU.
+/// Bottleneck ratio is 1.0 for RegNetX, so the inner width equals w_out.
+fn x_block(g: &mut Graph, inp: NodeId, w_out: usize, stride: usize) -> NodeId {
+    let w_in = g.node(inp).out_shape.channels();
+    let groups = w_out / GROUP_WIDTH;
+    let a = conv_bn_act(g, inp, w_out, 1, 1, 0, Act::Relu);
+    let b = gconv_bn_act(g, a, w_out, 3, stride, 1, groups, Act::Relu);
+    let c = conv_bn(g, b, w_out, 1, 1, 0);
+    let identity = if stride != 1 || w_in != w_out {
+        conv_bn(g, inp, w_out, 1, stride, 0)
+    } else {
+        inp
+    };
+    let sum = g.add(LayerKind::Add, &[identity, c]);
+    relu(g, sum)
+}
+
+pub fn regnet_x_400mf(classes: usize) -> Graph {
+    let mut g = Graph::new("regnet_x_400mf");
+    let x = g.input(3, 224, 224);
+    // Stem: 3x3/2 width 32.
+    let mut cur = conv_bn_act(&mut g, x, 32, 3, 2, 1, Act::Relu); // -> 112
+    for (d, w) in DEPTHS.iter().zip(WIDTHS.iter()) {
+        cur = x_block(&mut g, cur, *w, 2);
+        for _ in 1..*d {
+            cur = x_block(&mut g, cur, *w, 1);
+        }
+    }
+    classifier(&mut g, cur, classes, false);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = regnet_x_400mf(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 5_495_976);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~0.41 GMACs at 224x224.
+        let g = regnet_x_400mf(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((0.35..0.48).contains(&gmacs), "RegNetX-400MF GMACs {gmacs}");
+    }
+
+    #[test]
+    fn final_width_400_at_7x7() {
+        let g = regnet_x_400mf(1000);
+        let gap_node = g.by_name("GlobalAvgPool_0").unwrap();
+        let pre = g.node(gap_node.inputs[0]);
+        assert_eq!(pre.out_shape, Shape::chw(400, 7, 7));
+    }
+
+    #[test]
+    fn block_count() {
+        let g = regnet_x_400mf(1000);
+        let adds = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Add)).count();
+        assert_eq!(adds, DEPTHS.iter().sum::<usize>());
+    }
+}

@@ -1,0 +1,101 @@
+//! ResNet-50 (He et al. 2016), torchvision `resnet50`: bottleneck blocks,
+//! unbiased convs + BN, stride on the 3×3 (v1.5 variant).
+//! Published parameter count: 25,557,032.
+
+use super::common::{conv_bn, conv_bn_act, maxpool, relu};
+use crate::graph::{Act, Graph, LayerKind, NodeId};
+
+/// Bottleneck: 1×1 reduce → 3×3 (stride here, v1.5) → 1×1 expand ×4,
+/// residual add, ReLU. `downsample` projects the identity when shape or
+/// stride changes.
+fn bottleneck(
+    g: &mut Graph,
+    inp: NodeId,
+    width: usize,
+    stride: usize,
+    downsample: bool,
+) -> NodeId {
+    let out_c = width * 4;
+    let a = conv_bn_act(g, inp, width, 1, 1, 0, Act::Relu);
+    let b = conv_bn_act(g, a, width, 3, stride, 1, Act::Relu);
+    let c = conv_bn(g, b, out_c, 1, 1, 0);
+    let identity = if downsample {
+        conv_bn(g, inp, out_c, 1, stride, 0)
+    } else {
+        inp
+    };
+    let sum = g.add(LayerKind::Add, &[identity, c]);
+    relu(g, sum)
+}
+
+fn stage(g: &mut Graph, mut x: NodeId, width: usize, blocks: usize, stride: usize) -> NodeId {
+    x = bottleneck(g, x, width, stride, true);
+    for _ in 1..blocks {
+        x = bottleneck(g, x, width, 1, false);
+    }
+    x
+}
+
+pub fn resnet50(classes: usize) -> Graph {
+    let mut g = Graph::new("resnet50");
+    let x = g.input(3, 224, 224);
+    let stem = conv_bn_act(&mut g, x, 64, 7, 2, 3, Act::Relu); // -> 112
+    let p = maxpool(&mut g, stem, 3, 2, 1, false); // -> 56
+    let s1 = stage(&mut g, p, 64, 3, 1); // 256 x 56
+    let s2 = stage(&mut g, s1, 128, 4, 2); // 512 x 28
+    let s3 = stage(&mut g, s2, 256, 6, 2); // 1024 x 14
+    let s4 = stage(&mut g, s3, 512, 3, 2); // 2048 x 7
+    super::common::classifier(&mut g, s4, classes, false);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = resnet50(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 25_557_032);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~4.09 GMACs at 224x224 (v1.5 stride placement: 4.11).
+        let g = resnet50(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((3.95..4.25).contains(&gmacs), "ResNet-50 GMACs {gmacs}");
+    }
+
+    #[test]
+    fn stage_shapes() {
+        let g = resnet50(1000);
+        let gap_node = g.by_name("GlobalAvgPool_0").unwrap();
+        let pre = g.node(gap_node.inputs[0]);
+        assert_eq!(pre.out_shape, Shape::chw(2048, 7, 7));
+    }
+
+    #[test]
+    fn relu_count_and_paper_point() {
+        let g = resnet50(1000);
+        let relus = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, LayerKind::Activation(Act::Relu)))
+            .count();
+        // stem + 16 blocks x 3 = 49.
+        assert_eq!(relus, 49);
+        // Fig 2(b) picks "ReLu_11" as the max-throughput point.
+        assert!(g.by_name("Relu_11").is_some());
+    }
+
+    #[test]
+    fn conv_count() {
+        let g = resnet50(1000);
+        let convs = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Conv2d { .. })).count();
+        // 1 stem + 16 blocks x 3 + 4 downsamples = 53.
+        assert_eq!(convs, 53);
+    }
+}

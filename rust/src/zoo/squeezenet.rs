@@ -1,0 +1,86 @@
+//! SqueezeNet v1.1 (Iandola et al. 2016), torchvision `squeezenet1_1`:
+//! biased convs, ceil-mode maxpools, conv classifier.
+//! Published parameter count: 1,235,496.
+
+use super::common::{conv, gap, maxpool, relu};
+use crate::graph::{Graph, LayerKind, NodeId};
+
+/// Fire module: squeeze 1×1 → (expand 1×1 ∥ expand 3×3) → concat.
+fn fire(g: &mut Graph, inp: NodeId, squeeze_c: usize, expand_c: usize) -> NodeId {
+    let s = conv(g, inp, squeeze_c, 1, 1, 0, true);
+    let s = relu(g, s);
+    let e1 = conv(g, s, expand_c, 1, 1, 0, true);
+    let e1 = relu(g, e1);
+    let e3 = conv(g, s, expand_c, 3, 1, 1, true);
+    let e3 = relu(g, e3);
+    g.add(LayerKind::Concat, &[e1, e3])
+}
+
+pub fn squeezenet1_1(classes: usize) -> Graph {
+    let mut g = Graph::new("squeezenet1_1");
+    let x = g.input(3, 224, 224);
+    let c1 = conv(&mut g, x, 64, 3, 2, 0, true); // 224 -> 111
+    let r1 = relu(&mut g, c1);
+    let p1 = maxpool(&mut g, r1, 3, 2, 0, true); // -> 55
+    let f2 = fire(&mut g, p1, 16, 64);
+    let f3 = fire(&mut g, f2, 16, 64);
+    let p2 = maxpool(&mut g, f3, 3, 2, 0, true); // -> 27
+    let f4 = fire(&mut g, p2, 32, 128);
+    let f5 = fire(&mut g, f4, 32, 128);
+    let p3 = maxpool(&mut g, f5, 3, 2, 0, true); // -> 13
+    let f6 = fire(&mut g, p3, 48, 192);
+    let f7 = fire(&mut g, f6, 48, 192);
+    let f8 = fire(&mut g, f7, 64, 256);
+    let f9 = fire(&mut g, f8, 64, 256);
+    // Classifier: dropout → conv1x1 → relu → GAP.
+    let d = g.add(LayerKind::Dropout, &[f9]);
+    let cc = conv(&mut g, d, classes, 1, 1, 0, true);
+    let rc = relu(&mut g, cc);
+    let p = gap(&mut g, rc);
+    g.add(LayerKind::Flatten, &[p]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = squeezenet1_1(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 1_235_496);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~0.35 GMACs at 224x224.
+        let g = squeezenet1_1(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 0.35).abs() < 0.05, "SqueezeNet GMACs {gmacs}");
+    }
+
+    #[test]
+    fn spatial_schedule() {
+        let g = squeezenet1_1(1000);
+        // Stem conv: 224 -> 111; final fire output: 512 x 13 x 13.
+        assert_eq!(g.by_name("Conv_0").unwrap().out_shape, Shape::chw(64, 111, 111));
+        let last_fire = g.by_name("Concat_7").unwrap();
+        assert_eq!(last_fire.out_shape, Shape::chw(512, 13, 13));
+    }
+
+    #[test]
+    fn paper_partition_point_exists() {
+        // Fig 2(d) picks "ReLu_2" — the first fire module's squeeze relu.
+        let g = squeezenet1_1(1000);
+        assert!(g.by_name("Relu_2").is_some());
+    }
+
+    #[test]
+    fn eight_fire_modules() {
+        let g = squeezenet1_1(1000);
+        let concats = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Concat)).count();
+        assert_eq!(concats, 8);
+    }
+}

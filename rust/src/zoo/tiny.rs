@@ -1,0 +1,62 @@
+//! The executable tiny CNN — the model the AOT artifacts implement.
+//!
+//! Its topology mirrors `python/compile/model.py` layer-for-layer so that
+//! the explorer's partition decisions map one-to-one onto the exported
+//! HLO segment artifacts. 3×32×32 input, three conv-relu-pool blocks,
+//! linear classifier — ~100 K parameters, small enough to AOT-compile and
+//! serve on the CPU PJRT client in seconds.
+
+use super::common::{conv, maxpool, relu};
+use crate::graph::{Graph, LayerKind};
+
+/// Channel plan shared with the python model.
+pub const TINY_CHANNELS: [usize; 3] = [16, 32, 64];
+pub const TINY_INPUT: (usize, usize, usize) = (3, 32, 32);
+pub const TINY_CLASSES: usize = 10;
+
+pub fn tiny_cnn(classes: usize) -> Graph {
+    let mut g = Graph::new("tiny_cnn");
+    let (c, h, w) = TINY_INPUT;
+    let mut x = g.input(c, h, w);
+    for &width in &TINY_CHANNELS {
+        x = conv(&mut g, x, width, 3, 1, 1, true);
+        x = relu(&mut g, x);
+        x = maxpool(&mut g, x, 2, 2, 0, false);
+    }
+    let f = g.add(LayerKind::Flatten, &[x]);
+    g.add(LayerKind::Linear { out_features: classes, bias: true }, &[f]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn structure() {
+        let g = tiny_cnn(TINY_CLASSES);
+        g.validate().unwrap();
+        // 3 conv blocks + flatten + fc.
+        let flat = g.by_name("Flatten_0").unwrap();
+        let pre = g.node(flat.inputs[0]);
+        assert_eq!(pre.out_shape, Shape::chw(64, 4, 4));
+    }
+
+    #[test]
+    fn params_match_python_model() {
+        let g = tiny_cnn(TINY_CLASSES);
+        // conv1: 16*3*9+16 = 448; conv2: 32*16*9+32 = 4640;
+        // conv3: 64*32*9+64 = 18496; fc: 1024*10+10 = 10250.
+        assert_eq!(g.total_params(), 448 + 4640 + 18496 + 10250);
+    }
+
+    #[test]
+    fn partitionable_between_blocks() {
+        let g = tiny_cnn(TINY_CLASSES);
+        let order = crate::graph::topo::topo_sort(&g, crate::graph::topo::TieBreak::Deterministic);
+        let cuts = crate::graph::partition::clean_cuts(&g, &order);
+        // Chain topology: every inter-layer position is a clean cut.
+        assert_eq!(cuts.len(), g.len() - 1);
+    }
+}

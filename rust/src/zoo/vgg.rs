@@ -1,0 +1,72 @@
+//! VGG-16 (Simonyan & Zisserman 2015), torchvision `vgg16` layout:
+//! biased 3×3 convolutions, no batch norm, three-layer classifier.
+//! Published parameter count: 138,357,544.
+
+use super::common::{conv, maxpool, relu};
+use crate::graph::{Graph, LayerKind};
+
+/// Configuration "D": channel widths per block, `M` = maxpool.
+const CFG_D: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
+
+pub fn vgg16(classes: usize) -> Graph {
+    let mut g = Graph::new("vgg16");
+    let mut x = g.input(3, 224, 224);
+    for block in CFG_D {
+        for &width in *block {
+            x = conv(&mut g, x, width, 3, 1, 1, true);
+            x = relu(&mut g, x);
+        }
+        x = maxpool(&mut g, x, 2, 2, 0, false);
+    }
+    // torchvision inserts AdaptiveAvgPool2d(7) which is identity at 7x7.
+    let f = g.add(LayerKind::Flatten, &[x]);
+    let fc1 = g.add(LayerKind::Linear { out_features: 4096, bias: true }, &[f]);
+    let r1 = relu(&mut g, fc1);
+    let d1 = g.add(LayerKind::Dropout, &[r1]);
+    let fc2 = g.add(LayerKind::Linear { out_features: 4096, bias: true }, &[d1]);
+    let r2 = relu(&mut g, fc2);
+    let d2 = g.add(LayerKind::Dropout, &[r2]);
+    g.add(LayerKind::Linear { out_features: classes, bias: true }, &[d2]);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn param_count_matches_torchvision() {
+        let g = vgg16(1000);
+        g.validate().unwrap();
+        assert_eq!(g.total_params(), 138_357_544);
+    }
+
+    #[test]
+    fn mac_count_close_to_published() {
+        // ~15.47 GMACs for 224x224 inference.
+        let g = vgg16(1000);
+        let gmacs = g.total_macs() as f64 / 1e9;
+        assert!((gmacs - 15.47).abs() < 0.1, "VGG-16 GMACs {gmacs}");
+    }
+
+    #[test]
+    fn final_feature_map_is_7x7x512() {
+        let g = vgg16(1000);
+        let flat = g.by_name("Flatten_0").unwrap();
+        let pre = g.node(flat.inputs[0]);
+        assert_eq!(pre.out_shape, Shape::chw(512, 7, 7));
+    }
+
+    #[test]
+    fn has_thirteen_convs_and_three_gemms() {
+        let g = vgg16(1000);
+        let convs = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Conv2d { .. })).count();
+        let gemms = g.nodes.iter().filter(|n| matches!(n.kind, LayerKind::Linear { .. })).count();
+        assert_eq!(convs, 13);
+        assert_eq!(gemms, 3);
+        // Paper labels early partition points "ReLu 1"/"ReLu 2": they exist.
+        assert!(g.by_name("Relu_1").is_some());
+        assert!(g.by_name("Relu_2").is_some());
+    }
+}

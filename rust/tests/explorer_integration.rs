@@ -1,0 +1,230 @@
+//! Integration tests across the explorer pipeline: graph → memory/link
+//! filters → accuracy → HW eval → NSGA-II → Pareto/favorite, on real zoo
+//! models with the paper's system configs.
+
+use partir::config::{Metric, SystemConfig};
+use partir::explorer::{explore_two_platform, multi};
+use partir::graph::topo::{topo_sort, TieBreak};
+use partir::link::LinkModel;
+use partir::zoo;
+
+fn quick_sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 15;
+    sys.search.max_samples = 150;
+    sys
+}
+
+#[test]
+fn all_paper_models_explore_cleanly() {
+    let sys = quick_sys();
+    for name in zoo::PAPER_MODELS {
+        let g = zoo::build(name).unwrap();
+        let ex = explore_two_platform(&g, &sys);
+        assert!(!ex.pareto.is_empty(), "{name}: empty Pareto front");
+        assert!(ex.favorite.is_some(), "{name}: no favorite");
+        // Single-platform references present exactly once each.
+        let singles: Vec<&str> = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 1)
+            .map(|c| c.label.as_str())
+            .collect();
+        assert_eq!(singles.iter().filter(|l| **l == "all-on-A").count(), 1, "{name}");
+        assert_eq!(singles.iter().filter(|l| **l == "all-on-B").count(), 1, "{name}");
+        // Metrics are finite and positive everywhere.
+        for c in &ex.candidates {
+            assert!(c.latency_s.is_finite() && c.latency_s > 0.0, "{name}/{}", c.label);
+            assert!(c.energy_j.is_finite() && c.energy_j > 0.0, "{name}/{}", c.label);
+            assert!(c.throughput.is_finite() && c.throughput > 0.0, "{name}/{}", c.label);
+            assert!((0.0..=100.0).contains(&c.top1), "{name}/{}", c.label);
+        }
+    }
+}
+
+#[test]
+fn pareto_front_is_internally_consistent() {
+    let g = zoo::googlenet(1000);
+    let sys = quick_sys();
+    let ex = explore_two_platform(&g, &sys);
+    // No front member dominates another on the configured metrics.
+    for &i in &ex.pareto {
+        for &j in &ex.pareto {
+            if i == j {
+                continue;
+            }
+            let a = &ex.candidates[i];
+            let b = &ex.candidates[j];
+            let dominates = sys
+                .pareto_metrics
+                .iter()
+                .all(|&m| a.objective(m) <= b.objective(m))
+                && sys
+                    .pareto_metrics
+                    .iter()
+                    .any(|&m| a.objective(m) < b.objective(m));
+            assert!(!dominates, "{} dominates {} on the front", a.label, b.label);
+        }
+    }
+}
+
+#[test]
+fn accuracy_monotone_in_cut_position_for_16_8_system() {
+    // EYR is 16-bit (platform A): later cuts -> more 16-bit MACs ->
+    // monotonically non-decreasing top-1 (paper Fig 2c/f guideline).
+    let g = zoo::efficientnet_b0(1000);
+    let sys = quick_sys();
+    let ex = explore_two_platform(&g, &sys);
+    let mut by_pos: Vec<(usize, f64)> = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 2)
+        .map(|c| (c.positions[0], c.top1))
+        .collect();
+    by_pos.sort_by_key(|&(p, _)| p);
+    for w in by_pos.windows(2) {
+        assert!(
+            w[1].1 >= w[0].1 - 1e-9,
+            "top1 dropped with a later cut: {:?} -> {:?}",
+            w[0],
+            w[1]
+        );
+    }
+}
+
+#[test]
+fn slow_link_pushes_optimum_to_single_platform() {
+    // Ablation: with a 1 Mbit/s link, transmitting any feature map is
+    // prohibitively slow; the latency-favorite must be single-platform.
+    let g = zoo::squeezenet1_1(1000);
+    let mut sys = quick_sys();
+    sys.link = LinkModel { bandwidth_bps: 1e6, ..LinkModel::gigabit_ethernet() };
+    sys.favorite.weights = vec![(Metric::Latency, 1.0)];
+    let ex = explore_two_platform(&g, &sys);
+    let fav = ex.favorite_metrics().unwrap();
+    assert_eq!(fav.partitions, 1, "favorite {} should be single-platform", fav.label);
+}
+
+#[test]
+fn ideal_link_makes_pipelining_dominate_throughput() {
+    let g = zoo::resnet50(1000);
+    let mut sys = quick_sys();
+    sys.link = LinkModel::ideal();
+    let ex = explore_two_platform(&g, &sys);
+    let best = ex
+        .candidates
+        .iter()
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .unwrap();
+    assert!(best.partitions == 2, "ideal link should favour a split, got {}", best.label);
+}
+
+#[test]
+fn throughput_never_exceeds_sum_of_platform_rates() {
+    // Def 4 sanity: min() of stage rates cannot exceed the sum of the
+    // two single-platform rates.
+    let g = zoo::vgg16(1000);
+    let sys = quick_sys();
+    let ex = explore_two_platform(&g, &sys);
+    let sum: f64 = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 1)
+        .map(|c| c.throughput)
+        .sum();
+    for c in ex.candidates.iter().filter(|c| c.partitions == 2) {
+        assert!(
+            c.throughput <= sum * 1.0001,
+            "{} throughput {} > sum {}",
+            c.label,
+            c.throughput,
+            sum
+        );
+    }
+}
+
+#[test]
+fn memory_reported_matches_standalone_estimator() {
+    let g = zoo::squeezenet1_1(1000);
+    let sys = quick_sys();
+    let ex = explore_two_platform(&g, &sys);
+    let order = topo_sort(&g, TieBreak::Deterministic);
+    for c in ex.candidates.iter().filter(|c| c.partitions == 2) {
+        let p = c.positions[0];
+        let ma = partir::memory::segment_memory_bytes(&g, &order, 0..p + 1, 16);
+        assert_eq!(c.memory_bytes[0], ma, "{}", c.label);
+    }
+}
+
+#[test]
+fn four_platform_chain_respects_memory_caps() {
+    let g = zoo::resnet50(1000);
+    let mut sys = SystemConfig::paper_four_platform();
+    sys.search.victory = 10;
+    sys.search.max_samples = 100;
+    // Tight caps on the two EYR platforms force weight mass to C/D.
+    sys.platforms[0].memory_bytes = 4 << 20;
+    sys.platforms[1].memory_bytes = 4 << 20;
+    let ex = multi::explore_chain(&g, &sys);
+    for &i in &ex.pareto {
+        let c = &ex.candidates[i];
+        assert!(c.feasible());
+        assert!(c.memory_bytes[0] <= 4 << 20, "{}", c.label);
+        assert!(c.memory_bytes[1] <= 4 << 20, "{}", c.label);
+    }
+}
+
+#[test]
+fn qat_flag_raises_top1() {
+    let g = zoo::efficientnet_b0(1000);
+    let mut sys = quick_sys();
+    let without = explore_two_platform(&g, &sys);
+    sys.qat = true;
+    let with = explore_two_platform(&g, &sys);
+    // Same candidate order (deterministic): compare pointwise.
+    for (a, b) in without.candidates.iter().zip(&with.candidates) {
+        assert!(b.top1 >= a.top1, "{}: QAT lowered top1", a.label);
+    }
+}
+
+#[test]
+fn config_round_trip_drives_exploration() {
+    // A custom TOML config (different link + constraints) loads and
+    // changes the outcome vs the default.
+    let toml = r#"
+[[platforms]]
+name = "A"
+accelerator = "EYR"
+memory_mib = 64
+
+[[platforms]]
+name = "B"
+accelerator = "SMB"
+memory_mib = 64
+
+[link]
+bandwidth_mbps = 10.0
+base_latency_us = 2000.0
+
+[constraints]
+min_top1 = 50.0
+"#;
+    let doc = partir::util::tomlite::parse(toml).unwrap();
+    let mut sys = SystemConfig::from_json(&doc).unwrap();
+    sys.search.victory = 10;
+    sys.search.max_samples = 100;
+    let g = zoo::squeezenet1_1(1000);
+    let slow = explore_two_platform(&g, &sys);
+    let fast_ex = explore_two_platform(&g, &quick_sys());
+    // The 10 Mbit/s link must raise every two-partition latency.
+    let avg = |ex: &partir::explorer::Exploration| {
+        let xs: Vec<f64> = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 2)
+            .map(|c| c.latency_s)
+            .collect();
+        xs.iter().sum::<f64>() / xs.len() as f64
+    };
+    assert!(avg(&slow) > 2.0 * avg(&fast_ex));
+}

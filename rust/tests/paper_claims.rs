@@ -1,0 +1,150 @@
+//! Shape assertions for the paper's headline claims (§V). We do not
+//! assert absolute numbers — our substrate is an analytical simulator,
+//! not the authors' Timeloop testbed — but who wins, in which direction,
+//! and by roughly what factor must match. EXPERIMENTS.md records the
+//! exact measured values next to the paper's.
+
+use partir::config::{Metric, SystemConfig};
+use partir::explorer::explore_two_platform;
+use partir::graph::topo::{topo_sort, TieBreak};
+use partir::memory;
+use partir::report::throughput_gain;
+use partir::zoo;
+
+fn sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    // Full-budget search is exercised by `cargo bench`; a mid budget
+    // keeps this suite fast while staying well-converged.
+    sys.search.victory = 40;
+    sys.search.max_samples = 600;
+    sys
+}
+
+/// §V headline: "we can achieve a 47.5% throughput increase for
+/// EfficientNet-B0 inference partitioned onto two platforms".
+#[test]
+fn efficientnet_pipelined_throughput_gain_is_large() {
+    let ex = explore_two_platform(&zoo::efficientnet_b0(1000), &sys());
+    let (_, gain) = throughput_gain(&ex).expect("gain");
+    assert!(
+        (25.0..80.0).contains(&gain),
+        "EfficientNet-B0 gain {gain:.1}% (paper: +47.5%)"
+    );
+}
+
+/// Fig 2(b): ResNet-50 gains ~29% throughput from pipelining.
+#[test]
+fn resnet_pipelined_throughput_gain_is_moderate() {
+    let ex = explore_two_platform(&zoo::resnet50(1000), &sys());
+    let (_, gain) = throughput_gain(&ex).expect("gain");
+    assert!(
+        (15.0..70.0).contains(&gain),
+        "ResNet-50 gain {gain:.1}% (paper: +29%)"
+    );
+}
+
+/// Fig 2(a)/(d): for VGG-16 and SqueezeNet an early-ReLU partition point
+/// beats at least one single-platform reference on BOTH latency and
+/// energy simultaneously.
+#[test]
+fn early_relu_partition_dominates_a_single_platform_reference() {
+    for model in ["vgg16", "squeezenet1_1"] {
+        let ex = explore_two_platform(&zoo::build(model).unwrap(), &sys());
+        let singles: Vec<&partir::explorer::CandidateMetrics> =
+            ex.candidates.iter().filter(|c| c.partitions == 1).collect();
+        let found = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 2 && c.feasible())
+            .any(|c| {
+                singles
+                    .iter()
+                    .any(|s| c.latency_s < s.latency_s && c.energy_j < s.energy_j)
+            });
+        assert!(found, "{model}: no split beats a single platform on latency AND energy");
+    }
+}
+
+/// Fig 2(c)/(f): "the later the partitioning of the network is
+/// performed, the higher the top-1 accuracy" — and single-platform
+/// extremes bound the range.
+#[test]
+fn accuracy_guideline_later_is_better() {
+    for model in ["resnet50", "efficientnet_b0"] {
+        let ex = explore_two_platform(&zoo::build(model).unwrap(), &sys());
+        let splits: Vec<(usize, f64)> = ex
+            .candidates
+            .iter()
+            .filter(|c| c.partitions == 2)
+            .map(|c| (c.positions[0], c.top1))
+            .collect();
+        let earliest = splits.iter().min_by_key(|&&(p, _)| p).unwrap();
+        let latest = splits.iter().max_by_key(|&&(p, _)| p).unwrap();
+        assert!(latest.1 > earliest.1, "{model}: top1 not increasing");
+        let all_on_b = ex.candidates.iter().find(|c| c.label == "all-on-B").unwrap();
+        let all_on_a = ex.candidates.iter().find(|c| c.label == "all-on-A").unwrap();
+        assert!(all_on_a.top1 > all_on_b.top1, "{model}: 16-bit EYR should beat 8-bit SMB");
+    }
+}
+
+/// §V-B: "the throughput can drop significantly if the partitioning
+/// point is not chosen carefully" — the split-point spread is large.
+#[test]
+fn throughput_spread_across_cut_points_is_significant() {
+    let ex = explore_two_platform(&zoo::resnet50(1000), &sys());
+    let tputs: Vec<f64> = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 2)
+        .map(|c| c.throughput)
+        .collect();
+    let best = tputs.iter().cloned().fold(0.0, f64::max);
+    let worst = tputs.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(best / worst > 1.5, "spread {best}/{worst} too small");
+}
+
+/// Fig 3: EfficientNet-B0 platform-A memory grows monotonically with the
+/// cut position and platform-B memory shrinks; total stays within 2x of
+/// the whole-network footprint (paper: "the memory size required for
+/// EfficientNet-B0 increases the later the partitioning is performed").
+#[test]
+fn fig3_memory_growth_shape() {
+    let g = zoo::efficientnet_b0(1000);
+    let order = topo_sort(&g, TieBreak::Deterministic);
+    let cuts = partir::graph::partition::clean_cuts(&g, &order);
+    let mut prev_a = 0u64;
+    let whole = memory::segment_memory_bytes(&g, &order, 0..g.len(), 16);
+    for c in &cuts {
+        let ma = memory::segment_memory_bytes(&g, &order, 0..c.pos + 1, 16);
+        let mb = memory::segment_memory_bytes(&g, &order, c.pos + 1..g.len(), 16);
+        assert!(ma + mb <= 2 * whole, "memory blow-up at {}", c.pos);
+        // Parameter mass is monotone; the activation peak adds at most
+        // its own bounded term, so A-memory should never shrink by more
+        // than the largest feature map (few MB).
+        assert!(ma + (4 << 20) >= prev_a, "A memory collapsed at {}", c.pos);
+        prev_a = ma;
+    }
+    // The early-cut memory must be far below the late-cut memory.
+    let first = memory::segment_memory_bytes(&g, &order, 0..cuts[2].pos + 1, 16);
+    let last = memory::segment_memory_bytes(&g, &order, 0..cuts[cuts.len() - 1].pos + 1, 16);
+    assert!(last > 4 * first, "no growth: first {first} last {last}");
+}
+
+/// Table I row for "Our Proposal": the framework covers all six
+/// optimization metrics — every candidate carries them.
+#[test]
+fn all_six_metrics_are_reported() {
+    let ex = explore_two_platform(&zoo::googlenet(1000), &sys());
+    let c = ex.favorite_metrics().unwrap();
+    for m in [
+        Metric::Latency,
+        Metric::Energy,
+        Metric::Throughput,
+        Metric::Top1,
+        Metric::LinkBytes,
+        Metric::Memory,
+    ] {
+        let v = c.value(m);
+        assert!(v.is_finite(), "{:?} missing", m);
+    }
+}

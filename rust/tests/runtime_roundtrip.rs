@@ -1,0 +1,141 @@
+//! Integration: load the real AOT artifacts (built by `make artifacts`)
+//! and execute them on the PJRT CPU client — the python→rust bridge.
+//!
+//! Skipped (with a message) when artifacts have not been built.
+
+use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::runtime::{evaluate_top1, Engine, Manifest};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn full_model_runs_and_classifies() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let meta = m.find("full", None, None, 1).expect("full_fp32_n1 artifact");
+    let exe = engine.load(&dir, meta).unwrap();
+    let ts = m.load_testset().unwrap();
+    let out = exe.run(ts.image(0)).unwrap();
+    assert_eq!(out.len(), m.classes);
+    assert!(out.iter().all(|v| v.is_finite()));
+}
+
+#[test]
+fn batched_artifact_matches_single() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let e1 = engine.load(&dir, m.find("full", None, None, 1).unwrap()).unwrap();
+    let e8 = engine.load(&dir, m.find("full", None, None, 8).unwrap()).unwrap();
+    let ts = m.load_testset().unwrap();
+    // Run 3 images through the batch-8 artifact (padded) and singly.
+    let mut flat = Vec::new();
+    for i in 0..3 {
+        flat.extend_from_slice(ts.image(i));
+    }
+    let batched = e8.run_padded(&flat, 3).unwrap();
+    for i in 0..3 {
+        let single = e1.run(ts.image(i)).unwrap();
+        let b = &batched[i * m.classes..(i + 1) * m.classes];
+        for (x, y) in single.iter().zip(b) {
+            assert!((x - y).abs() < 1e-4, "batch mismatch at image {i}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn stage_composition_matches_full_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let full = engine.load(&dir, m.find("full", None, None, 1).unwrap()).unwrap();
+    let ts = m.load_testset().unwrap();
+    for bd in 1..=3 {
+        let a = engine.load(&dir, m.find("stageA", None, Some(bd), 1).unwrap()).unwrap();
+        let b = engine.load(&dir, m.find("stageB", None, Some(bd), 1).unwrap()).unwrap();
+        let mid = a.run(ts.image(0)).unwrap();
+        assert_eq!(mid.len(), m.boundaries[&bd].shape.iter().product::<usize>());
+        let out = b.run(&mid).unwrap();
+        let direct = full.run(ts.image(0)).unwrap();
+        for (x, y) in out.iter().zip(&direct) {
+            assert!((x - y).abs() < 1e-3, "boundary {bd}: {x} vs {y}");
+        }
+    }
+}
+
+#[test]
+fn measured_top1_matches_build_accuracy() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let engine = Engine::cpu().unwrap();
+    let ts = m.load_testset().unwrap();
+    let fp32 = engine.load(&dir, m.find("full", None, None, 8).unwrap()).unwrap();
+    let acc = evaluate_top1(&fp32, &ts).unwrap();
+    assert!(
+        (acc - m.accuracy.fp32).abs() < 0.5,
+        "rust-measured fp32 top1 {acc} != python {}",
+        m.accuracy.fp32
+    );
+    // Quantized variants exist and stay within a few points of fp32.
+    let q8 = engine.load(&dir, m.find("full", Some(8), None, 8).unwrap()).unwrap();
+    let acc8 = evaluate_top1(&q8, &ts).unwrap();
+    assert!(acc8 > 20.0, "q8 accuracy collapsed: {acc8}");
+}
+
+#[test]
+fn mixed_precision_pipeline_over_simulated_link() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    let bd = 2usize;
+    let mid_elems: usize = m.boundaries[&bd].shape.iter().product();
+    let stage_a = StageSpec {
+        name: "A-eyr16".into(),
+        compute: StageComputeSpec::Artifacts {
+            dir: dir.clone(),
+            metas: vec![
+                m.find("stageA", Some(16), Some(bd), 1).unwrap().clone(),
+                m.find("stageA", Some(16), Some(bd), 8).unwrap().clone(),
+            ],
+        },
+        out_bytes_per_item: (mid_elems * 2) as u64, // 16-bit on the wire
+    };
+    let stage_b = StageSpec {
+        name: "B-smb8".into(),
+        compute: StageComputeSpec::Artifacts {
+            dir: dir.clone(),
+            metas: vec![
+                m.find("stageB", Some(8), Some(bd), 1).unwrap().clone(),
+                m.find("stageB", Some(8), Some(bd), 8).unwrap().clone(),
+            ],
+        },
+        out_bytes_per_item: 0,
+    };
+    let ts = m.load_testset().unwrap();
+    let n = 32.min(ts.count);
+    let inputs: Vec<Vec<f32>> = (0..n).map(|i| ts.image(i).to_vec()).collect();
+    let cfg = PipelineCfg { batch_wait: Duration::from_millis(1), ..Default::default() };
+    let report = run_pipeline(vec![stage_a, stage_b], &cfg, inputs);
+    assert_eq!(report.completed(), n);
+    // Predictions should be mostly correct (quantized model, easy set).
+    let correct = report
+        .completions
+        .iter()
+        .filter(|c| c.prediction == Some(ts.labels[c.id as usize] as usize))
+        .count();
+    assert!(
+        correct as f64 / n as f64 > 0.5,
+        "pipeline top1 {correct}/{n} too low"
+    );
+    assert!(report.stages[0].link > Duration::ZERO, "link not simulated");
+}

@@ -11,5 +11,6 @@ use std::path::Path;
 
 fn main() -> anyhow::Result<()> {
     let fast = std::env::args().any(|a| a == "--fast");
-    partir::report::paper::generate_all(Path::new("reports"), fast)
+    let jobs = partir::util::parallel::default_jobs();
+    partir::report::paper::generate_all(Path::new("reports"), fast, jobs)
 }

@@ -1,7 +1,9 @@
 //! Bench: §V-B framework runtime — the paper reports "graph analysis and
 //! hardware evaluation together take approx. 40 min for EfficientNet-B0"
 //! on a 64-core EPYC (running real Timeloop). This bench reports the
-//! same breakdown for our analytical substrate, per model.
+//! same breakdown for our analytical substrate, per model, and compares
+//! the serial (`jobs = 1`) against the multi-core exploration path
+//! (which must be bit-identical, only faster).
 //!
 //!     cargo bench --bench exploration_speed
 
@@ -9,33 +11,70 @@
 mod common;
 
 use partir::config::SystemConfig;
-use partir::explorer::explore_two_platform;
+use partir::explorer::{explore_two_platform, multi};
+use partir::graph::Graph;
+use partir::util::parallel::default_jobs;
 use partir::zoo;
+use std::time::Instant;
 
 fn main() {
-    common::section("exploration wall-time breakdown per model (two-platform DSE)");
+    let jobs = default_jobs();
     let mut sys = SystemConfig::paper_two_platform();
     if common::fast_mode() {
         sys.search.victory = 15;
         sys.search.max_samples = 150;
     }
+    let mut serial = sys.clone();
+    serial.jobs = 1;
+    let mut par = sys.clone();
+    par.jobs = jobs;
+
+    common::section("exploration wall-time breakdown per model (two-platform DSE)");
     println!(
-        "{:<18} {:>8} {:>10} {:>12} {:>10} {:>10}",
-        "model", "layers", "hw-eval", "candidates", "nsga-ii", "total"
+        "{:<18} {:>8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>8}",
+        "model", "layers", "hw-eval", "candidates", "nsga-ii", "serial", "par", "speedup"
     );
     for name in zoo::PAPER_MODELS {
         let g = zoo::build(name).unwrap();
-        let ex = explore_two_platform(&g, &sys);
+        let ex_serial = explore_two_platform(&g, &serial);
+        let ex_par = explore_two_platform(&g, &par);
+        // Parallel runs must be byte-identical to serial — fail loudly
+        // here rather than publish a speedup for a different answer.
+        assert_eq!(ex_serial.pareto, ex_par.pareto, "{name}: parallel run diverged");
+        assert_eq!(ex_serial.favorite, ex_par.favorite, "{name}: parallel run diverged");
         println!(
-            "{:<18} {:>8} {:>10} {:>12} {:>10} {:>10}",
+            "{:<18} {:>8} {:>10} {:>12} {:>10} {:>10} {:>10} {:>7.2}x",
             name,
             g.len(),
-            common::fmt(ex.timing.hw_eval_s),
-            common::fmt(ex.timing.candidates_s),
-            common::fmt(ex.timing.nsga_s),
-            common::fmt(ex.timing.total_s)
+            common::fmt(ex_par.timing.hw_eval_s),
+            common::fmt(ex_par.timing.candidates_s),
+            common::fmt(ex_par.timing.nsga_s),
+            common::fmt(ex_serial.timing.total_s),
+            common::fmt(ex_par.timing.total_s),
+            ex_serial.timing.total_s / ex_par.timing.total_s.max(1e-12),
         );
     }
+
+    common::section(format!(
+        "full PAPER_MODELS sweep: serial loop vs shared-pool explore_many ({jobs} jobs)"
+    )
+    .as_str());
+    let graphs: Vec<Graph> = zoo::PAPER_MODELS.iter().map(|m| zoo::build(m).unwrap()).collect();
+    let t0 = Instant::now();
+    for g in &graphs {
+        std::hint::black_box(explore_two_platform(g, &serial));
+    }
+    let serial_s = t0.elapsed().as_secs_f64();
+    let t1 = Instant::now();
+    std::hint::black_box(multi::explore_many(&graphs, &par));
+    let par_s = t1.elapsed().as_secs_f64();
+    println!("{:<28} {:>10}", "serial loop", common::fmt(serial_s));
+    println!("{:<28} {:>10}", "explore_many (shared cache)", common::fmt(par_s));
+    println!(
+        "sweep speedup: {:.2}x on {jobs} hardware threads (acceptance target: >= 1.8x on 4 cores)",
+        serial_s / par_s.max(1e-12)
+    );
+
     println!(
         "\npaper reference: graph analysis + HW evaluation ~ 40 min for \
          EfficientNet-B0 (real Timeloop); retraining ~ 1 h per point when enabled.\n\

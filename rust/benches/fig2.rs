@@ -17,7 +17,7 @@ fn main() -> anyhow::Result<()> {
     let fast = common::fast_mode();
     common::section("Fig 2: two-platform exploration per model (EYR -> GbE -> SMB)");
     let t0 = Instant::now();
-    let gains = paper::fig2(Path::new("reports"), fast)?;
+    let gains = paper::fig2(Path::new("reports"), fast, partir::util::parallel::default_jobs())?;
     println!("\ntotal fig2 regeneration: {}", common::fmt(t0.elapsed().as_secs_f64()));
 
     common::section("headline: pipelined throughput gain over best single platform");

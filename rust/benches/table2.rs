@@ -26,7 +26,11 @@ const PAPER_ROWS: [(&str, [usize; 4]); 6] = [
 fn main() -> anyhow::Result<()> {
     common::section("Table II: partition histogram over a 4-platform chain");
     let t0 = Instant::now();
-    let rows = paper::table2(Path::new("reports"), common::fast_mode())?;
+    let rows = paper::table2(
+        Path::new("reports"),
+        common::fast_mode(),
+        partir::util::parallel::default_jobs(),
+    )?;
     println!("\nmeasured:\n{}", table2_markdown(&rows));
     println!("paper:");
     for (model, counts) in PAPER_ROWS {

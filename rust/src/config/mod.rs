@@ -131,6 +131,10 @@ pub struct SystemConfig {
     /// Run accuracy with QAT recovery.
     pub qat: bool,
     pub seed: u64,
+    /// Worker threads for hardware evaluation, candidate enumeration and
+    /// NSGA-II population evaluation (1 = serial; results are
+    /// bit-identical for every value — see `util::parallel`).
+    pub jobs: usize,
 }
 
 impl SystemConfig {
@@ -164,6 +168,7 @@ impl SystemConfig {
             search: SearchCfg::default(),
             qat: false,
             seed: DSE_SEED,
+            jobs: 1,
         }
     }
 
@@ -283,6 +288,9 @@ impl SystemConfig {
         if let Some(s) = doc.get("seed").as_u64() {
             cfg.seed = s;
         }
+        if let Some(j) = doc.get("jobs").as_u64() {
+            cfg.jobs = (j as usize).max(1);
+        }
         Ok(cfg)
     }
 }
@@ -355,6 +363,7 @@ mod tests {
     fn paper_defaults() {
         let cfg = SystemConfig::paper_two_platform();
         assert_eq!(cfg.platforms.len(), 2);
+        assert_eq!(cfg.jobs, 1, "library default stays serial; the CLI opts in");
         assert_eq!(cfg.platforms[0].accelerator.name, "EYR");
         assert_eq!(cfg.platforms[1].accelerator.name, "SMB");
         assert_eq!(cfg.link.name, "gbe");
@@ -373,6 +382,7 @@ mod tests {
         let text = r#"
 seed = 7
 qat = true
+jobs = 3
 pareto_metrics = ["latency", "energy"]
 
 [link]
@@ -404,6 +414,7 @@ weight = 2.0
         let cfg = SystemConfig::from_json(&doc).unwrap();
         assert_eq!(cfg.seed, 7);
         assert!(cfg.qat);
+        assert_eq!(cfg.jobs, 3);
         assert_eq!(cfg.platforms[0].name, "edge");
         assert_eq!(cfg.platforms[0].memory_bytes, 8 << 20);
         assert_eq!(cfg.platforms[1].memory_bytes, 512 << 20);

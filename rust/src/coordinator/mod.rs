@@ -12,7 +12,10 @@
 //!
 //! PJRT note: the `xla` crate's client is `Rc`-based and not `Send`, so
 //! each stage thread builds its own `Engine` and compiles its artifacts
-//! in-thread; nothing PJRT-related crosses a thread boundary.
+//! in-thread; nothing PJRT-related crosses a thread boundary. Real
+//! artifact execution requires the `xla` cargo feature; without it,
+//! artifact stages fail cleanly at realization time and every request
+//! routed through them is marked failed (simulated stages always work).
 
 pub mod batcher;
 pub mod metrics;
@@ -20,7 +23,9 @@ pub mod metrics;
 pub use metrics::{Completion, PipelineReport, StageStats};
 
 use crate::link::LinkModel;
-use crate::runtime::{ArtifactMeta, Engine, Executable};
+use crate::runtime::ArtifactMeta;
+#[cfg(feature = "xla")]
+use crate::runtime::{Engine, Executable};
 use anyhow::Result;
 use batcher::Batch;
 use std::path::PathBuf;
@@ -90,6 +95,7 @@ struct Item {
 }
 
 enum StageBody {
+    #[cfg(feature = "xla")]
     Real(Vec<Executable>),
     Sim { base: Duration, per_item: Duration, out_elems: usize, fail_every: Option<u64> },
 }
@@ -97,6 +103,7 @@ enum StageBody {
 impl StageBody {
     fn realize(spec: &StageComputeSpec) -> Result<Self> {
         match spec {
+            #[cfg(feature = "xla")]
             StageComputeSpec::Artifacts { dir, metas } => {
                 let engine = Engine::cpu()?;
                 let mut exes: Vec<Executable> =
@@ -105,6 +112,10 @@ impl StageBody {
                 anyhow::ensure!(!exes.is_empty(), "stage has no artifacts");
                 Ok(StageBody::Real(exes))
             }
+            #[cfg(not(feature = "xla"))]
+            StageComputeSpec::Artifacts { .. } => anyhow::bail!(
+                "AOT artifact stages need the `xla` feature (cargo build --features xla)"
+            ),
             StageComputeSpec::Simulated { base, per_item, out_elems, fail_every } => {
                 Ok(StageBody::Sim {
                     base: *base,
@@ -119,6 +130,7 @@ impl StageBody {
     /// Run a batch; returns per-item outputs (empty on failure).
     fn run(&self, batch_no: u64, items: &[Item]) -> Result<Vec<Vec<f32>>> {
         match self {
+            #[cfg(feature = "xla")]
             StageBody::Real(exes) => {
                 let n = items.len();
                 // Smallest artifact whose batch covers n; else chunk by

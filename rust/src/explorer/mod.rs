@@ -10,6 +10,13 @@
 //! The implementation exploits that per-layer costs are independent of
 //! the partitioning: each layer is mapped once per platform, then any
 //! candidate's metrics are prefix-sum lookups.
+//!
+//! Concurrency: `SystemConfig::jobs` selects the worker count; hardware
+//! evaluation, candidate enumeration and NSGA-II population evaluation
+//! all shard across `std::thread::scope` workers, and layer costs flow
+//! through a [`CostCache`] that can be shared across models and platform
+//! pairs (see [`multi::explore_many`]). Results are bit-identical to the
+//! serial run for any `jobs` value.
 
 pub mod baselines;
 pub mod multi;
@@ -19,13 +26,14 @@ use crate::config::{Metric, SystemConfig};
 use crate::graph::partition::{all_cuts, Cut};
 use crate::graph::topo::{self, TieBreak};
 use crate::graph::{Graph, NodeId};
-use crate::hw::{prefix_costs, HwEvaluator, SegmentCost};
+use crate::hw::{prefix_costs, CostCache, HwEvaluator, SegmentCost};
 use crate::link::LinkModel;
 use crate::memory;
 use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
-use std::cell::RefCell;
+use crate::util::parallel::par_map;
 use std::collections::HashMap;
 use std::ops::Range;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Metrics of one candidate schedule (a set of cut positions over the
@@ -115,14 +123,14 @@ impl Exploration {
 
 /// Precomputed per-platform costs for a fixed schedule; evaluates any
 /// cut-position vector in O(segments · log) plus a memo-cached memory
-/// walk.
+/// walk. `Sync`: candidates can be evaluated concurrently.
 pub struct ChainEvaluator<'a> {
     pub g: &'a Graph,
     pub sys: &'a SystemConfig,
     pub order: Vec<NodeId>,
     pub cuts: Vec<Cut>,
     prefix: Vec<Vec<SegmentCost>>,
-    mem_memo: RefCell<HashMap<(usize, usize, u32), u64>>,
+    mem_memo: Mutex<HashMap<(usize, usize, u32), u64>>,
     // O(1)-lookup arrays for prefix/suffix segments (§Perf: these turn
     // the candidate sweep from O(L²) memory walks into O(L)).
     params_prefix: Vec<u64>,
@@ -138,18 +146,25 @@ pub struct ChainEvaluator<'a> {
 
 impl<'a> ChainEvaluator<'a> {
     pub fn new(g: &'a Graph, sys: &'a SystemConfig) -> Self {
+        Self::with_cache(g, sys, Arc::new(CostCache::new()))
+    }
+
+    /// Build against a shared layer-cost cache; mapper runs for shapes
+    /// already present (from other models or platform pairs) are reused.
+    pub fn with_cache(g: &'a Graph, sys: &'a SystemConfig, cache: Arc<CostCache>) -> Self {
         // §IV-A graph analysis: linear schedule. The min-memory branch
         // search would also be valid here; the deterministic order keeps
         // candidate labels stable across runs (the search is exercised by
         // the memory module's own tests and the `zoo` CLI).
         let order = topo::topo_sort(g, TieBreak::Deterministic);
         let cuts = all_cuts(g, &order);
+        let jobs = sys.jobs.max(1);
         let t0 = Instant::now();
-        let mut ev = HwEvaluator::new(sys.search.clone());
+        let ev = HwEvaluator::with_cache(sys.search.clone(), cache);
         let prefix = sys
             .platforms
             .iter()
-            .map(|p| prefix_costs(&ev.schedule_costs(&p.accelerator, g, &order)))
+            .map(|p| prefix_costs(&ev.schedule_costs_par(&p.accelerator, g, &order, jobs)))
             .collect();
         let hw_eval_s = t0.elapsed().as_secs_f64();
         let model_acc = accuracy::model_accuracy(&g.name)
@@ -176,7 +191,7 @@ impl<'a> ChainEvaluator<'a> {
             order,
             cuts,
             prefix,
-            mem_memo: RefCell::new(HashMap::new()),
+            mem_memo: Mutex::new(HashMap::new()),
             params_prefix,
             macs_prefix,
             peak_prefix,
@@ -216,11 +231,11 @@ impl<'a> ChainEvaluator<'a> {
         }
         // Interior chain segments: memoized reference walk.
         let key = (r.start, r.end, bits);
-        if let Some(&m) = self.mem_memo.borrow().get(&key) {
+        if let Some(&m) = self.mem_memo.lock().unwrap().get(&key) {
             return m;
         }
         let m = memory::segment_memory_bytes(self.g, &self.order, r.clone(), bits);
-        self.mem_memo.borrow_mut().insert(key, m);
+        self.mem_memo.lock().unwrap().insert(key, m);
         m
     }
 
@@ -555,11 +570,22 @@ impl Problem for TwoPlatformProblem<'_, '_> {
 
 /// Full two-platform exploration (paper §V-B setting).
 pub fn explore_two_platform(g: &Graph, sys: &SystemConfig) -> Exploration {
+    explore_two_platform_cached(g, sys, Arc::new(CostCache::new()))
+}
+
+/// [`explore_two_platform`] against a shared layer-cost cache, so sweeps
+/// over many models (or platform pairs) amortize mapper work.
+pub fn explore_two_platform_cached(
+    g: &Graph,
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Exploration {
     assert_eq!(sys.platforms.len(), 2, "explore_two_platform needs 2 platforms");
+    let jobs = sys.jobs.max(1);
     let total0 = Instant::now();
 
     let t0 = Instant::now();
-    let ev = ChainEvaluator::new(g, sys);
+    let ev = ChainEvaluator::with_cache(g, sys, cache);
     let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
 
     // Candidate space: Definition-1 (single-tensor) cuts plus the two
@@ -577,8 +603,7 @@ pub fn explore_two_platform(g: &Graph, sys: &SystemConfig) -> Exploration {
     if !space.contains(&0) {
         space.insert(0, 0);
     }
-    let mut candidates: Vec<CandidateMetrics> =
-        space.iter().map(|&p| ev.evaluate(&[p])).collect();
+    let mut candidates: Vec<CandidateMetrics> = par_map(jobs, &space, |&p| ev.evaluate(&[p]));
     // A cut that leaves only placeholder layers (Flatten/Dropout/Input)
     // on one platform is the same schedule as the single-platform
     // reference: keep the first occurrence of each single-platform label.
@@ -600,7 +625,7 @@ pub fn explore_two_platform(g: &Graph, sys: &SystemConfig) -> Exploration {
     // NSGA-II per the paper (validated against the exhaustive front).
     let t2 = Instant::now();
     let problem = TwoPlatformProblem { ev: &ev, space: space.clone(), metrics: sys.pareto_metrics.clone() };
-    let front = nsga2::optimize(&problem, &Nsga2Cfg::for_layers(g.len(), sys.seed));
+    let front = nsga2::optimize_par(&problem, &Nsga2Cfg::for_layers(g.len(), sys.seed), jobs);
     let mut nsga_front: Vec<usize> = front
         .iter()
         .map(|s| s.vars[0] as usize)
@@ -747,6 +772,20 @@ mod tests {
             assert_eq!(x.latency_s, y.latency_s);
             assert_eq!(x.energy_j, y.energy_j);
         }
+    }
+
+    #[test]
+    fn worker_count_does_not_change_results() {
+        let g = zoo::tiny_cnn(10);
+        let mut serial = quick_sys();
+        serial.jobs = 1;
+        let mut par = quick_sys();
+        par.jobs = 4;
+        let a = explore_two_platform(&g, &serial);
+        let b = explore_two_platform(&g, &par);
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.nsga_front, b.nsga_front);
+        assert_eq!(a.favorite, b.favorite);
     }
 
     #[test]

@@ -10,7 +10,10 @@
 use super::{exhaustive_pareto, ChainEvaluator, CandidateMetrics, Exploration, ExplorationTiming};
 use crate::config::{Metric, SystemConfig};
 use crate::graph::Graph;
+use crate::hw::CostCache;
 use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use crate::util::parallel::par_map;
+use std::sync::Arc;
 use std::time::Instant;
 
 struct ChainProblem<'a, 'b> {
@@ -48,9 +51,16 @@ impl Problem for ChainProblem<'_, '_> {
 /// front as an [`Exploration`] whose `candidates` are the front members
 /// themselves (the space is not enumerable).
 pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
+    explore_chain_cached(g, sys, Arc::new(CostCache::new()))
+}
+
+/// [`explore_chain`] against a shared layer-cost cache (see
+/// [`explore_chain_many`]).
+pub fn explore_chain_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
     let total0 = Instant::now();
     assert!(sys.platforms.len() >= 2, "need at least two platforms");
-    let ev = ChainEvaluator::new(g, sys);
+    let jobs = sys.jobs.max(1);
+    let ev = ChainEvaluator::with_cache(g, sys, cache);
     let len = ev.order.len();
 
     let t2 = Instant::now();
@@ -63,7 +73,7 @@ pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
     // Scale the GA budget with both depth and chain length.
     let mut cfg = Nsga2Cfg::for_layers(g.len() * sys.platforms.len() / 2, sys.seed);
     cfg.mutation_p = 0.3; // cut vectors benefit from more exploration
-    let front = nsga2::optimize(&problem, &cfg);
+    let front = nsga2::optimize_par(&problem, &cfg, jobs);
     let nsga_s = t2.elapsed().as_secs_f64();
 
     // Materialize metrics for the front; dedup by *used-segment*
@@ -96,6 +106,36 @@ pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
             total_s: total0.elapsed().as_secs_f64(),
         },
     }
+}
+
+/// Explore several models' two-platform DSEs concurrently on one worker
+/// pool, sharing a single layer-cost cache across all of them — the
+/// `zoo::PAPER_MODELS` sweep path. Per-model explorations are
+/// independent and deterministic, so the result vector is element-wise
+/// identical to running [`super::explore_two_platform`] serially.
+pub fn explore_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
+    explore_pool(graphs, sys, super::explore_two_platform_cached)
+}
+
+/// [`explore_many`] for N-platform chains ([`explore_chain`] per model).
+pub fn explore_chain_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
+    explore_pool(graphs, sys, explore_chain_cached)
+}
+
+fn explore_pool(
+    graphs: &[Graph],
+    sys: &SystemConfig,
+    explore: fn(&Graph, &SystemConfig, Arc<CostCache>) -> Exploration,
+) -> Vec<Exploration> {
+    let jobs = sys.jobs.max(1);
+    let cache = Arc::new(CostCache::new());
+    // Outer parallelism over models; hand the leftover worker budget to
+    // each model's inner stages (ceiling division, so e.g. 8 jobs over 6
+    // models gives every model 2 inner workers rather than idling the
+    // remainder — mild oversubscription beats idle cores on stragglers).
+    let mut per_model = sys.clone();
+    per_model.jobs = jobs.div_ceil(graphs.len().max(1));
+    par_map(jobs, graphs, |g| explore(g, &per_model, Arc::clone(&cache)))
 }
 
 /// Table II: histogram of partition counts among near-optimal schedules.
@@ -167,5 +207,50 @@ mod tests {
         let b = explore_chain(&g, &sys);
         assert_eq!(a.candidates.len(), b.candidates.len());
         assert_eq!(partition_histogram(&a, 4), partition_histogram(&b, 4));
+    }
+
+    #[test]
+    fn chain_worker_count_does_not_change_results() {
+        let g = zoo::tiny_cnn(10);
+        let mut serial = quick_four();
+        serial.jobs = 1;
+        let mut par = quick_four();
+        par.jobs = 4;
+        let a = explore_chain(&g, &serial);
+        let b = explore_chain(&g, &par);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.positions, y.positions);
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+        assert_eq!(partition_histogram(&a, 4), partition_histogram(&b, 4));
+    }
+
+    #[test]
+    fn explore_many_matches_individual_runs() {
+        let graphs = vec![zoo::tiny_cnn(10), zoo::squeezenet1_1(1000)];
+        let mut sys = crate::config::SystemConfig::paper_two_platform();
+        sys.search.victory = 10;
+        sys.search.max_samples = 100;
+        sys.jobs = 4;
+        let pooled = explore_many(&graphs, &sys);
+        assert_eq!(pooled.len(), graphs.len());
+        let mut serial = sys.clone();
+        serial.jobs = 1;
+        for (g, ex) in graphs.iter().zip(&pooled) {
+            let lone = crate::explorer::explore_two_platform(g, &serial);
+            assert_eq!(ex.model, lone.model);
+            assert_eq!(ex.pareto, lone.pareto);
+            assert_eq!(ex.favorite, lone.favorite);
+            assert_eq!(ex.candidates.len(), lone.candidates.len());
+            for (x, y) in ex.candidates.iter().zip(&lone.candidates) {
+                assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+                assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+                assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
+                assert_eq!(x.top1.to_bits(), y.top1.to_bits());
+            }
+        }
     }
 }

@@ -7,6 +7,15 @@
 //! of the partition point**, so a whole exploration needs exactly
 //! `layers × platforms` mapper runs, after which every candidate
 //! partitioning is a prefix-sum lookup.
+//!
+//! Concurrency: [`CostCache`] is a sharded concurrent map shared across
+//! an entire run — across threads, models and platform pairs (the key
+//! embeds the accelerator name plus the structural layer signature, so
+//! identical shapes from different models share one mapper run).
+//! [`HwEvaluator`] is `Send + Sync`; [`map_layer`](mapper::map_layer) is
+//! deterministic per workload (its RNG stream is keyed by the workload,
+//! not by evaluation order), so concurrent evaluation is bit-identical
+//! to serial.
 
 pub mod arch;
 pub mod energy;
@@ -20,8 +29,12 @@ pub use mapper::{LayerCost, Objective, SearchCfg};
 pub use workload::{ConvWorkload, Dataspace, Dim};
 
 use crate::graph::{Graph, Node, NodeId};
-use std::collections::HashMap;
+use crate::util::parallel::par_map;
+use std::collections::{HashMap, HashSet};
+use std::hash::{Hash, Hasher};
 use std::ops::Range;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Aggregate cost of a schedule segment on one accelerator (sequential
 /// layer execution: latencies and energies add).
@@ -49,40 +62,97 @@ enum CostKey {
     Vector(String, &'static str, usize, usize, u64),
 }
 
-/// Memoizing per-layer evaluator.
+fn cost_key(acc: &Accelerator, g: &Graph, node: &Node) -> CostKey {
+    match ConvWorkload::from_node(g, node) {
+        Some(wl) => {
+            let (bounds, groups, stride) = wl.signature();
+            CostKey::Mac(acc.name.clone(), bounds, groups, stride)
+        }
+        None => CostKey::Vector(
+            acc.name.clone(),
+            node.kind.op_name(),
+            node.fmap_in(g),
+            node.fmap_out(),
+            node.ops,
+        ),
+    }
+}
+
+const CACHE_SHARDS: usize = 16;
+
+/// Sharded concurrent layer-cost cache, shared across a whole run via
+/// `Arc`. Sharding keeps lock hold times to a single `HashMap` probe and
+/// spreads contention across independent mutexes; values are immutable
+/// once inserted, and because the mapper is deterministic per workload a
+/// racing double-compute inserts the identical value — first or second
+/// write, the cache content is the same.
+pub struct CostCache {
+    shards: Vec<Mutex<HashMap<CostKey, LayerCost>>>,
+}
+
+impl CostCache {
+    pub fn new() -> Self {
+        Self { shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn shard(&self, key: &CostKey) -> &Mutex<HashMap<CostKey, LayerCost>> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[h.finish() as usize % CACHE_SHARDS]
+    }
+
+    fn get(&self, key: &CostKey) -> Option<LayerCost> {
+        self.shard(key).lock().unwrap().get(key).cloned()
+    }
+
+    fn insert(&self, key: CostKey, cost: LayerCost) {
+        self.shard(&key).lock().unwrap().insert(key, cost);
+    }
+
+    /// Number of distinct (accelerator, layer-shape) entries.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl Default for CostCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Memoizing per-layer evaluator. `Send + Sync`: share one instance (or
+/// one [`CostCache`]) across `std::thread::scope` workers.
 pub struct HwEvaluator {
     pub cfg: SearchCfg,
-    cache: HashMap<CostKey, LayerCost>,
+    cache: Arc<CostCache>,
     /// Mapper invocations that missed the cache (for §Perf reporting).
-    pub mapper_runs: usize,
+    mapper_runs: AtomicUsize,
 }
 
 impl HwEvaluator {
     pub fn new(cfg: SearchCfg) -> Self {
-        Self { cfg, cache: HashMap::new(), mapper_runs: 0 }
+        Self::with_cache(cfg, Arc::new(CostCache::new()))
+    }
+
+    /// Evaluator backed by a shared (possibly pre-warmed) cost cache.
+    pub fn with_cache(cfg: SearchCfg, cache: Arc<CostCache>) -> Self {
+        Self { cfg, cache, mapper_runs: AtomicUsize::new(0) }
     }
 
     /// Cost of one layer on one accelerator (cached).
-    pub fn layer_cost(&mut self, acc: &Accelerator, g: &Graph, node: &Node) -> LayerCost {
-        let key = match ConvWorkload::from_node(g, node) {
-            Some(wl) => {
-                let (b, grp, st) = wl.signature();
-                CostKey::Mac(acc.name.clone(), b, grp, st)
-            }
-            None => CostKey::Vector(
-                acc.name.clone(),
-                node.kind.op_name(),
-                node.fmap_in(g),
-                node.fmap_out(),
-                node.ops,
-            ),
-        };
+    pub fn layer_cost(&self, acc: &Accelerator, g: &Graph, node: &Node) -> LayerCost {
+        let key = cost_key(acc, g, node);
         if let Some(c) = self.cache.get(&key) {
-            return c.clone();
+            return c;
         }
         let cost = match ConvWorkload::from_node(g, node) {
             Some(wl) => {
-                self.mapper_runs += 1;
+                self.mapper_runs.fetch_add(1, Ordering::Relaxed);
                 mapper::map_layer(acc, &wl, &self.cfg)
             }
             None => vector::vector_layer_cost(acc, g, node),
@@ -92,18 +162,37 @@ impl HwEvaluator {
     }
 
     /// Per-layer costs for a whole schedule, in schedule order.
-    pub fn schedule_costs(
-        &mut self,
+    pub fn schedule_costs(&self, acc: &Accelerator, g: &Graph, order: &[NodeId]) -> Vec<LayerCost> {
+        order.iter().map(|&id| self.layer_cost(acc, g, g.node(id))).collect()
+    }
+
+    /// [`Self::schedule_costs`] with the mapper runs for *distinct* layer
+    /// shapes fanned out over `jobs` scoped workers. Results are
+    /// bit-identical to the serial path: the warm-up pass covers each
+    /// cache key exactly once (no duplicated mapper work), and the final
+    /// ordered pass reads pure cache hits.
+    pub fn schedule_costs_par(
+        &self,
         acc: &Accelerator,
         g: &Graph,
         order: &[NodeId],
+        jobs: usize,
     ) -> Vec<LayerCost> {
-        order.iter().map(|&id| self.layer_cost(acc, g, g.node(id))).collect()
+        if jobs > 1 {
+            let mut seen = HashSet::new();
+            let reps: Vec<NodeId> = order
+                .iter()
+                .copied()
+                .filter(|&id| seen.insert(cost_key(acc, g, g.node(id))))
+                .collect();
+            par_map(jobs, &reps, |&id| self.layer_cost(acc, g, g.node(id)));
+        }
+        self.schedule_costs(acc, g, order)
     }
 
     /// Aggregate cost of `order[range]`.
     pub fn segment_cost(
-        &mut self,
+        &self,
         acc: &Accelerator,
         g: &Graph,
         order: &[NodeId],
@@ -117,8 +206,18 @@ impl HwEvaluator {
         total
     }
 
+    /// Mapper invocations that missed the cache so far.
+    pub fn mapper_runs(&self) -> usize {
+        self.mapper_runs.load(Ordering::Relaxed)
+    }
+
     pub fn cache_len(&self) -> usize {
         self.cache.len()
+    }
+
+    /// The shared cache handle (to hand to further evaluators).
+    pub fn cache(&self) -> Arc<CostCache> {
+        Arc::clone(&self.cache)
     }
 }
 
@@ -146,7 +245,7 @@ mod tests {
         let g = zoo::resnet50(1000);
         let order = topo_sort(&g, TieBreak::Deterministic);
         let acc = presets::eyeriss_like();
-        let mut ev = HwEvaluator::new(SearchCfg {
+        let ev = HwEvaluator::new(SearchCfg {
             victory: 20,
             max_samples: 200,
             ..Default::default()
@@ -154,7 +253,7 @@ mod tests {
         let costs = ev.schedule_costs(&acc, &g, &order);
         assert_eq!(costs.len(), g.len());
         // ResNet-50 has 53 convs + 1 fc but far fewer distinct shapes.
-        assert!(ev.mapper_runs < 30, "mapper ran {} times", ev.mapper_runs);
+        assert!(ev.mapper_runs() < 30, "mapper ran {} times", ev.mapper_runs());
     }
 
     #[test]
@@ -162,7 +261,7 @@ mod tests {
         let g = zoo::squeezenet1_1(1000);
         let order = topo_sort(&g, TieBreak::Deterministic);
         let acc = presets::simba_like();
-        let mut ev = HwEvaluator::new(SearchCfg {
+        let ev = HwEvaluator::new(SearchCfg {
             victory: 10,
             max_samples: 100,
             ..Default::default()
@@ -183,7 +282,7 @@ mod tests {
         let g = zoo::resnet50(1000);
         let order = topo_sort(&g, TieBreak::Deterministic);
         for acc in [presets::eyeriss_like(), presets::simba_like()] {
-            let mut ev = HwEvaluator::new(SearchCfg {
+            let ev = HwEvaluator::new(SearchCfg {
                 victory: 30,
                 max_samples: 400,
                 ..Default::default()
@@ -201,6 +300,59 @@ mod tests {
                 acc.name,
                 total.energy_j
             );
+        }
+    }
+
+    #[test]
+    fn parallel_schedule_costs_bit_identical_to_serial() {
+        let g = zoo::resnet50(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::eyeriss_like();
+        let cfg = SearchCfg { victory: 10, max_samples: 100, ..Default::default() };
+        let serial = HwEvaluator::new(cfg.clone()).schedule_costs(&acc, &g, &order);
+        let par = HwEvaluator::new(cfg).schedule_costs_par(&acc, &g, &order, 4);
+        assert_eq!(serial.len(), par.len());
+        for (a, b) in serial.iter().zip(&par) {
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.dram_bytes, b.dram_bytes);
+            assert_eq!(a.mapping_desc, b.mapping_desc);
+        }
+    }
+
+    #[test]
+    fn shared_cache_spans_models_and_evaluators() {
+        // SqueezeNet twice under one shared cache: the second evaluator
+        // must not re-run the mapper at all.
+        let g = zoo::squeezenet1_1(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::simba_like();
+        let cfg = SearchCfg { victory: 10, max_samples: 100, ..Default::default() };
+        let first = HwEvaluator::new(cfg.clone());
+        first.schedule_costs(&acc, &g, &order);
+        assert!(first.mapper_runs() > 0);
+        let second = HwEvaluator::with_cache(cfg, first.cache());
+        let costs = second.schedule_costs(&acc, &g, &order);
+        assert_eq!(costs.len(), g.len());
+        assert_eq!(second.mapper_runs(), 0, "shared cache missed");
+    }
+
+    #[test]
+    fn concurrent_layer_cost_lookups_are_safe_and_consistent() {
+        let g = zoo::googlenet(1000);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::eyeriss_like();
+        let cfg = SearchCfg { victory: 5, max_samples: 50, ..Default::default() };
+        let ev = HwEvaluator::new(cfg.clone());
+        // Hammer the same schedule from 8 threads at once.
+        let all: Vec<Vec<LayerCost>> =
+            par_map(8, &[(); 8], |_| ev.schedule_costs(&acc, &g, &order));
+        let reference = HwEvaluator::new(cfg).schedule_costs(&acc, &g, &order);
+        for costs in &all {
+            for (a, b) in costs.iter().zip(&reference) {
+                assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            }
         }
     }
 }

@@ -17,6 +17,7 @@ use partir::hw::HwEvaluator;
 use partir::report;
 use partir::runtime::Manifest;
 use partir::util::cli::{Args, Command};
+use partir::util::parallel::default_jobs;
 use partir::util::units::{fmt_count, fmt_energy_j, fmt_time_s};
 use partir::zoo;
 use std::path::{Path, PathBuf};
@@ -91,7 +92,27 @@ fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
         sys.search.victory = 20;
         sys.search.max_samples = 200;
     }
+    // Worker precedence: --jobs beats the config file's `jobs`; with
+    // neither, use every hardware thread. A config file without a
+    // `jobs` key stays at its parsed value (serial) — explicit configs
+    // keep explicit control over shared machines.
+    if let Some(j) = args.get_usize("jobs").map_err(anyhow::Error::msg)? {
+        sys.jobs = j.max(1);
+    } else if args.get("config").is_none() {
+        sys.jobs = default_jobs();
+    }
     Ok(sys)
+}
+
+/// `--jobs N` for subcommands without a config file (chain's built-in
+/// system, report): worker threads for the DSE, defaulting to every
+/// hardware thread. Results are bit-identical to `--jobs 1`.
+fn jobs_arg(args: &Args) -> anyhow::Result<usize> {
+    Ok(args
+        .get_usize("jobs")
+        .map_err(anyhow::Error::msg)?
+        .unwrap_or_else(default_jobs)
+        .max(1))
 }
 
 fn build_model(args: &Args) -> anyhow::Result<partir::graph::Graph> {
@@ -122,6 +143,7 @@ fn explore_cmd() -> Command {
         .opt("config", None, "system TOML (default: paper EYR+SMB over GbE)")
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write fig2-style CSV to this path")
+        .opt("jobs", None, "worker threads (default: all hardware threads)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -155,6 +177,7 @@ fn chain_cmd() -> Command {
         .opt("config", None, "system TOML (default: paper EYR,EYR,SMB,SMB)")
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write Pareto-front CSV to this path")
+        .opt("jobs", None, "worker threads (default: all hardware threads)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -175,6 +198,7 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
         if args.flag("qat") {
             sys.qat = true;
         }
+        sys.jobs = jobs_arg(args)?;
         sys
     };
     let ex = multi::explore_chain(&g, &sys);
@@ -197,6 +221,7 @@ fn evaluate_cmd() -> Command {
         .opt("model", Some("resnet50"), "zoo model name")
         .opt("config", None, "system TOML")
         .opt("top", Some("15"), "show the N most expensive layers")
+        .opt("jobs", None, "worker threads (default: all hardware threads)")
         .flag("fast", "smaller mapper search budget")
 }
 
@@ -205,9 +230,13 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let sys = load_sys(args)?;
     let order = topo_sort(&g, TieBreak::Deterministic);
     let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(15);
+    // One evaluator for every platform: the cost cache is keyed by
+    // accelerator name, so sharing it is safe and reuses vector-layer
+    // entries where platforms coincide.
+    let ev = HwEvaluator::new(sys.search.clone());
     for p in &sys.platforms {
-        let mut ev = HwEvaluator::new(sys.search.clone());
-        let costs = ev.schedule_costs(&p.accelerator, &g, &order);
+        let runs_before = ev.mapper_runs();
+        let costs = ev.schedule_costs_par(&p.accelerator, &g, &order, sys.jobs);
         let total_lat: f64 = costs.iter().map(|c| c.latency_s).sum();
         let total_en: f64 = costs.iter().map(|c| c.energy_j).sum();
         println!(
@@ -217,7 +246,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
             p.accelerator.bits,
             fmt_time_s(total_lat),
             fmt_energy_j(total_en),
-            ev.mapper_runs,
+            ev.mapper_runs() - runs_before,
         );
         let mut idx: Vec<usize> = (0..costs.len()).collect();
         idx.sort_by(|&a, &b| costs[b].latency_s.partial_cmp(&costs[a].latency_s).unwrap());
@@ -341,10 +370,11 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
 fn report_cmd() -> Command {
     Command::new("report", "regenerate all paper figures/tables into a directory")
         .opt("out", Some("reports"), "output directory")
+        .opt("jobs", None, "worker threads (default: all hardware threads)")
         .flag("fast", "smaller search budgets (CI smoke)")
 }
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.get("out").unwrap());
-    report::paper::generate_all(&out, args.flag("fast"))
+    report::paper::generate_all(&out, args.flag("fast"), jobs_arg(args)?)
 }

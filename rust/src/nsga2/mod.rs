@@ -10,7 +10,15 @@
 //! tournament selection with constrained domination (feasible solutions
 //! dominate infeasible ones; infeasible ones compare by violation), and
 //! integer crossover/mutation operators.
+//!
+//! Parallelism: candidate evaluation is the dominant cost in the DSE, so
+//! [`optimize_par`] shards each generation's evaluations across scoped
+//! workers. Genome construction (every RNG draw) stays on the
+//! coordinator thread and fitness evaluation consumes no randomness, so
+//! the evolution — and therefore the final front — is bit-identical for
+//! every worker count.
 
+use crate::util::parallel::par_map;
 use crate::util::rng::Pcg32;
 
 /// Evaluation of one candidate.
@@ -246,29 +254,47 @@ fn rank_population(pop: &mut Vec<Individual>, keep: usize) {
     *pop = selected;
 }
 
+/// Evaluate a batch of genomes (in parallel for `jobs > 1`) and wrap
+/// them as unranked individuals, preserving genome order.
+fn evaluate_batch<P: Problem + Sync>(
+    problem: &P,
+    genomes: Vec<Vec<i64>>,
+    jobs: usize,
+) -> Vec<Individual> {
+    let evals = par_map(jobs, &genomes, |vars| problem.evaluate(vars));
+    genomes
+        .into_iter()
+        .zip(evals)
+        .map(|(vars, eval)| Individual { vars, eval, rank: 0, crowding: 0.0 })
+        .collect()
+}
+
 /// Run NSGA-II; returns the final population's first non-dominated front
 /// (deduplicated by genome).
-pub fn optimize<P: Problem>(problem: &P, cfg: &Nsga2Cfg) -> Vec<Solution> {
+pub fn optimize<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg) -> Vec<Solution> {
+    optimize_par(problem, cfg, 1)
+}
+
+/// [`optimize`] with population evaluation sharded over `jobs` scoped
+/// workers. Bit-identical to the serial run: all genome construction
+/// happens on this thread in a fixed RNG sequence, and `evaluate` is a
+/// pure function of the genome.
+pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize) -> Vec<Solution> {
     assert!(cfg.population >= 4, "population too small");
     let mut rng = Pcg32::new(cfg.seed, 0x6e73_6761); // "nsga"
-    let mut pop: Vec<Individual> = (0..cfg.population)
-        .map(|_| {
-            let vars = random_genome(problem, &mut rng);
-            let eval = problem.evaluate(&vars);
-            Individual { vars, eval, rank: 0, crowding: 0.0 }
-        })
-        .collect();
+    let genomes: Vec<Vec<i64>> =
+        (0..cfg.population).map(|_| random_genome(problem, &mut rng)).collect();
+    let mut pop = evaluate_batch(problem, genomes, jobs);
     rank_population(&mut pop, cfg.population);
 
     for _ in 0..cfg.generations {
-        let mut offspring: Vec<Individual> = Vec::with_capacity(cfg.population);
-        while offspring.len() < cfg.population {
+        let mut children: Vec<Vec<i64>> = Vec::with_capacity(cfg.population);
+        while children.len() < cfg.population {
             let a = tournament(&pop, &mut rng);
             let b = tournament(&pop, &mut rng);
-            let vars = make_child(problem, &a.vars, &b.vars, cfg, &mut rng);
-            let eval = problem.evaluate(&vars);
-            offspring.push(Individual { vars, eval, rank: 0, crowding: 0.0 });
+            children.push(make_child(problem, &a.vars, &b.vars, cfg, &mut rng));
         }
+        let offspring = evaluate_batch(problem, children, jobs);
         pop.extend(offspring);
         rank_population(&mut pop, cfg.population);
     }
@@ -436,6 +462,27 @@ mod tests {
         let b = optimize(&Schaffer, &Nsga2Cfg::for_layers(30, 123));
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.vars, y.vars);
+        }
+    }
+
+    #[test]
+    fn parallel_evaluation_bit_identical_to_serial() {
+        let cfg = Nsga2Cfg::for_layers(60, 321);
+        let serial = optimize(&Schaffer, &cfg);
+        for jobs in [2, 4, 7] {
+            let par = optimize_par(&Schaffer, &cfg, jobs);
+            assert_eq!(serial.len(), par.len(), "jobs={jobs}");
+            for (x, y) in serial.iter().zip(&par) {
+                assert_eq!(x.vars, y.vars, "jobs={jobs}");
+                assert_eq!(x.eval.objectives, y.eval.objectives, "jobs={jobs}");
+            }
+        }
+        // Constrained problems shard identically too.
+        let c_serial = optimize(&Constrained, &Nsga2Cfg::for_layers(40, 7));
+        let c_par = optimize_par(&Constrained, &Nsga2Cfg::for_layers(40, 7), 4);
+        assert_eq!(c_serial.len(), c_par.len());
+        for (x, y) in c_serial.iter().zip(&c_par) {
             assert_eq!(x.vars, y.vars);
         }
     }

@@ -18,6 +18,7 @@
 use super::{fig2_csv, fig3_csv, table2_csv, table2_markdown, throughput_gain};
 use crate::config::SystemConfig;
 use crate::explorer::{explore_two_platform, multi, Exploration};
+use crate::graph::Graph;
 use crate::zoo;
 use anyhow::{Context, Result};
 use std::path::Path;
@@ -34,8 +35,10 @@ const FIG2_FILES: [(&str, &str); 6] = [
 
 /// System config used by the Fig 2 experiments; `fast` trims the mapper
 /// search budget (CI smoke), full mode uses the paper's victory=100.
-pub fn fig2_system(fast: bool) -> SystemConfig {
+/// `jobs` is the DSE worker count (results are identical for any value).
+pub fn fig2_system(fast: bool, jobs: usize) -> SystemConfig {
     let mut sys = SystemConfig::paper_two_platform();
+    sys.jobs = jobs.max(1);
     if fast {
         sys.search.victory = 15;
         sys.search.max_samples = 150;
@@ -44,31 +47,37 @@ pub fn fig2_system(fast: bool) -> SystemConfig {
 }
 
 /// Run the two-platform exploration for one Fig 2 model.
-pub fn fig2_exploration(model: &str, fast: bool) -> (Exploration, SystemConfig) {
+pub fn fig2_exploration(model: &str, fast: bool, jobs: usize) -> (Exploration, SystemConfig) {
     let g = zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}"));
-    let sys = fig2_system(fast);
+    let sys = fig2_system(fast, jobs);
     (explore_two_platform(&g, &sys), sys)
 }
 
-/// Fig 2: all six CNN series. Returns (model, headline throughput gain).
-pub fn fig2(out: &Path, fast: bool) -> Result<Vec<(String, f64)>> {
+/// Fig 2: all six CNN series, explored concurrently on a shared worker
+/// pool and layer-cost cache. Returns (model, headline throughput gain).
+pub fn fig2(out: &Path, fast: bool, jobs: usize) -> Result<Vec<(String, f64)>> {
     std::fs::create_dir_all(out)?;
+    let sys = fig2_system(fast, jobs);
+    let graphs: Vec<Graph> = FIG2_FILES
+        .iter()
+        .map(|&(model, _)| zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}")))
+        .collect();
+    let explorations = multi::explore_many(&graphs, &sys);
     let mut gains = Vec::new();
-    for (model, file) in FIG2_FILES {
-        let (ex, _sys) = fig2_exploration(model, fast);
-        fig2_csv(&ex)
+    for (&(model, file), ex) in FIG2_FILES.iter().zip(&explorations) {
+        fig2_csv(ex)
             .write_file(&out.join(file))
             .with_context(|| format!("writing {file}"))?;
         // Fig 2(c)/(f) share the rows (top1 column) with (b)/(e): emit
         // aliases so each paper subfigure has its named file.
         match model {
-            "resnet50" => fig2_csv(&ex).write_file(&out.join("fig2c_resnet50.csv"))?,
+            "resnet50" => fig2_csv(ex).write_file(&out.join("fig2c_resnet50.csv"))?,
             "efficientnet_b0" => {
-                fig2_csv(&ex).write_file(&out.join("fig2f_efficientnet_b0.csv"))?
+                fig2_csv(ex).write_file(&out.join("fig2f_efficientnet_b0.csv"))?
             }
             _ => {}
         }
-        let gain = throughput_gain(&ex).map(|(_, g)| g).unwrap_or(0.0);
+        let gain = throughput_gain(ex).map(|(_, g)| g).unwrap_or(0.0);
         println!(
             "[fig2] {model:<16} candidates {:>3} pareto {:>2} best-split throughput +{gain:.1}%",
             ex.candidates.len(),
@@ -91,18 +100,19 @@ pub fn fig3(out: &Path) -> Result<()> {
 
 /// Table II: 4-platform chain (EYR, EYR, SMB, SMB over GbE), Pareto over
 /// latency/energy/link-bandwidth, histogram of partition counts.
-pub fn table2(out: &Path, fast: bool) -> Result<Vec<(String, Vec<usize>)>> {
+pub fn table2(out: &Path, fast: bool, jobs: usize) -> Result<Vec<(String, Vec<usize>)>> {
     std::fs::create_dir_all(out)?;
     let mut sys = SystemConfig::paper_four_platform();
+    sys.jobs = jobs.max(1);
     if fast {
         sys.search.victory = 15;
         sys.search.max_samples = 150;
     }
+    let graphs: Vec<Graph> = zoo::PAPER_MODELS.iter().map(|m| zoo::build(m).unwrap()).collect();
+    let explorations = multi::explore_chain_many(&graphs, &sys);
     let mut rows = Vec::new();
-    for model in zoo::PAPER_MODELS {
-        let g = zoo::build(model).unwrap();
-        let ex = multi::explore_chain(&g, &sys);
-        let hist = multi::partition_histogram(&ex, sys.platforms.len());
+    for (model, ex) in zoo::PAPER_MODELS.iter().zip(&explorations) {
+        let hist = multi::partition_histogram(ex, sys.platforms.len());
         println!("[table2] {model:<16} {hist:?}");
         rows.push((model.to_string(), hist));
     }
@@ -112,11 +122,11 @@ pub fn table2(out: &Path, fast: bool) -> Result<Vec<(String, Vec<usize>)>> {
 }
 
 /// Everything (§V): Fig 2 a–f, Fig 3, Table II.
-pub fn generate_all(out: &Path, fast: bool) -> Result<()> {
+pub fn generate_all(out: &Path, fast: bool, jobs: usize) -> Result<()> {
     let t0 = std::time::Instant::now();
-    fig2(out, fast)?;
+    fig2(out, fast, jobs)?;
     fig3(out)?;
-    table2(out, fast)?;
+    table2(out, fast, jobs)?;
     println!(
         "[report] all figures/tables regenerated into {} in {:.1}s",
         out.display(),

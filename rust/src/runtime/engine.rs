@@ -1,0 +1,156 @@
+//! PJRT execution engine (behind the `xla` feature): compile the AOT
+//! HLO artifacts and run them with concrete buffers on the request path.
+
+use super::{ArtifactMeta, TestSet};
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+/// PJRT client wrapper. One per process; executables borrow it.
+pub struct Engine {
+    client: xla::PjRtClient,
+}
+
+impl Engine {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one artifact (HLO text → loaded executable).
+    pub fn load(&self, dir: &Path, meta: &ArtifactMeta) -> Result<Executable> {
+        let path = dir.join(&meta.path);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-UTF-8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", meta.name))?;
+        Ok(Executable { meta: meta.clone(), exe })
+    }
+}
+
+/// A compiled artifact plus its manifest metadata.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Elements per single input item (without the batch dim).
+    pub fn input_elems(&self) -> usize {
+        self.meta.input_shape.iter().product()
+    }
+
+    /// Elements per single output item.
+    pub fn output_elems(&self) -> usize {
+        self.meta.output_shape.iter().product()
+    }
+
+    /// Execute on a full batch: `data.len()` must equal
+    /// `batch * input_elems`. Returns `batch * output_elems` floats.
+    pub fn run(&self, data: &[f32]) -> Result<Vec<f32>> {
+        let expect = self.meta.batch * self.input_elems();
+        if data.len() != expect {
+            return Err(anyhow!(
+                "{}: input has {} elements, artifact expects {} ({}x{:?})",
+                self.meta.name,
+                data.len(),
+                expect,
+                self.meta.batch,
+                self.meta.input_shape
+            ));
+        }
+        let mut dims: Vec<i64> = vec![self.meta.batch as i64];
+        dims.extend(self.meta.input_shape.iter().map(|&d| d as i64));
+        let lit = xla::Literal::vec1(data)
+            .reshape(&dims)
+            .context("building input literal")?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().context("untupling result")?;
+        let values = out.to_vec::<f32>().context("reading result values")?;
+        let expect_out = self.meta.batch * self.output_elems();
+        if values.len() != expect_out {
+            return Err(anyhow!(
+                "{}: output has {} elements, expected {}",
+                self.meta.name,
+                values.len(),
+                expect_out
+            ));
+        }
+        Ok(values)
+    }
+
+    /// Execute on up to `batch` items, zero-padding the tail; returns
+    /// exactly `items * output_elems` floats.
+    pub fn run_padded(&self, data: &[f32], items: usize) -> Result<Vec<f32>> {
+        if items == 0 {
+            return Ok(Vec::new());
+        }
+        if items > self.meta.batch {
+            return Err(anyhow!(
+                "{}: {items} items exceed artifact batch {}",
+                self.meta.name,
+                self.meta.batch
+            ));
+        }
+        if data.len() != items * self.input_elems() {
+            return Err(anyhow!(
+                "{}: {} elements for {items} items (expected {})",
+                self.meta.name,
+                data.len(),
+                items * self.input_elems()
+            ));
+        }
+        let mut padded = data.to_vec();
+        padded.resize(self.meta.batch * self.input_elems(), 0.0);
+        let mut out = self.run(&padded)?;
+        out.truncate(items * self.output_elems());
+        Ok(out)
+    }
+}
+
+/// Top-1 accuracy of a classifier artifact over the held-out test set
+/// (the executable counterpart of the analytical accuracy model).
+pub fn evaluate_top1(exe: &Executable, testset: &TestSet) -> Result<f64> {
+    let classes = exe.output_elems();
+    let item = exe.input_elems();
+    if item != testset.image_elems() {
+        return Err(anyhow!(
+            "artifact expects {} input elems, test set has {}",
+            item,
+            testset.image_elems()
+        ));
+    }
+    let batch = exe.meta.batch;
+    let mut correct = 0usize;
+    let mut done = 0usize;
+    while done < testset.count {
+        let n = batch.min(testset.count - done);
+        let data = &testset.images[done * item..(done + n) * item];
+        let out = exe.run_padded(data, n)?;
+        for i in 0..n {
+            let logits = &out[i * classes..(i + 1) * classes];
+            let pred = logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if pred == testset.labels[done + i] as usize {
+                correct += 1;
+            }
+        }
+        done += n;
+    }
+    Ok(100.0 * correct as f64 / testset.count as f64)
+}

@@ -2,6 +2,12 @@
 //!
 //! Supports subcommands, `--flag`, `--key value` / `--key=value` options
 //! with defaults, and positional arguments, plus generated `--help` text.
+//!
+//! Shared option convention: every DSE subcommand (`explore`, `chain`,
+//! `evaluate`, `report`) registers `--jobs <N>` — the worker-thread
+//! count for hardware evaluation, candidate enumeration and NSGA-II.
+//! It defaults to all hardware threads and never changes results
+//! (parallel runs are bit-identical to `--jobs 1`; see `util::parallel`).
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

@@ -6,6 +6,7 @@
 pub mod cli;
 pub mod csv;
 pub mod json;
+pub mod parallel;
 pub mod rng;
 pub mod stats;
 pub mod tomlite;

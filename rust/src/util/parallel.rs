@@ -1,0 +1,100 @@
+//! Deterministic fork–join parallelism over `std::thread::scope` — the
+//! worker pool behind the multi-core DSE (rayon substitute for this
+//! offline build).
+//!
+//! Design rule (enforced across the explorer, NSGA-II and the mapper):
+//! workers only ever run **pure, order-independent** closures; every
+//! random draw happens on the coordinator thread or in a stream keyed
+//! by the *work item* (the mapper seeds [`crate::util::rng::Pcg32::new`]
+//! with a workload hash; [`crate::util::rng::Pcg32::split`] exists for
+//! handing out per-item streams if a worker body ever needs its own
+//! draws). Results are written back by item index. Together these make
+//! a run with `jobs = N` bit-identical to a serial run for every `N`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Worker count to use when the user did not pick one: all hardware
+/// threads (the CLI's `--jobs` default).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Parallel map with deterministic output order: `out[i] = f(&items[i])`
+/// regardless of worker count or scheduling. Work is distributed by an
+/// atomic cursor (dynamic load balancing — item costs in the DSE vary by
+/// orders of magnitude). `jobs <= 1` degenerates to a plain serial map
+/// on the calling thread; worker panics propagate to the caller.
+pub fn par_map<I, O, F>(jobs: usize, items: &[I], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    F: Fn(&I) -> O + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    if jobs <= 1 || items.len() <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<O>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let (f, cursor, slots) = (&f, &cursor, &slots);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(move || loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let out = f(&items[i]);
+                *slots[i].lock().unwrap() = Some(out);
+            });
+        }
+    });
+    slots
+        .iter()
+        .map(|slot| slot.lock().unwrap().take().expect("scope joined all workers"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn preserves_item_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(4, &items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn serial_and_parallel_agree_for_any_job_count() {
+        let items: Vec<u64> = (0..100).map(|i| i * 37 % 61).collect();
+        let expect = par_map(1, &items, |&x| x * x + 1);
+        for jobs in [2, 3, 8, 64] {
+            assert_eq!(par_map(jobs, &items, |&x| x * x + 1), expect, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn every_item_runs_exactly_once() {
+        let counts: Vec<AtomicUsize> = (0..50).map(|_| AtomicUsize::new(0)).collect();
+        par_map(8, &(0..50).collect::<Vec<usize>>(), |&i| {
+            counts[i].fetch_add(1, Ordering::Relaxed)
+        });
+        assert!(counts.iter().all(|c| c.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let empty: Vec<u32> = Vec::new();
+        assert!(par_map(4, &empty, |&x| x).is_empty());
+        assert_eq!(par_map(4, &[7u32], |&x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn default_jobs_is_positive() {
+        assert!(default_jobs() >= 1);
+    }
+}

@@ -116,6 +116,19 @@ impl Pcg32 {
     pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
         &xs[self.gen_usize(0, xs.len())]
     }
+
+    /// Split off an independent child generator (advances `self`).
+    /// Children derive from the parent's *sequence*, so splitting N
+    /// times on a coordinator thread yields the same N streams no
+    /// matter how many workers later consume them. The current DSE
+    /// stages keep every draw on the coordinator instead (see
+    /// `util::parallel`); use this when a worker body itself needs
+    /// randomness — split once per work item before fanning out.
+    pub fn split(&mut self) -> Pcg32 {
+        let seed = self.next_u64();
+        let stream = self.next_u64();
+        Pcg32::new(seed, stream)
+    }
 }
 
 #[cfg(test)]
@@ -193,6 +206,23 @@ mod tests {
         let var = s2 / n as f64 - mean * mean;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn split_streams_are_deterministic_and_disjoint() {
+        let mut parent_a = Pcg32::seeded(99);
+        let mut parent_b = Pcg32::seeded(99);
+        let mut c1 = parent_a.split();
+        let mut c2 = parent_a.split();
+        let mut d1 = parent_b.split();
+        // Same parent state -> same child stream.
+        for _ in 0..64 {
+            assert_eq!(c1.next_u32(), d1.next_u32());
+        }
+        // Sibling children are (nearly) disjoint streams.
+        let mut e1 = Pcg32::seeded(99).split(); // fresh copy of child 1
+        let same = (0..64).filter(|_| e1.next_u32() == c2.next_u32()).count();
+        assert!(same < 4, "sibling streams overlap: {same}/64");
     }
 
     #[test]

@@ -43,6 +43,36 @@ fn all_paper_models_explore_cleanly() {
 }
 
 #[test]
+fn parallel_exploration_bit_identical_to_serial() {
+    // Acceptance gate for the multi-core DSE: `--jobs 1` and `--jobs 4`
+    // must produce byte-identical Pareto sets, favorites and metrics.
+    for name in ["tiny_cnn", "squeezenet1_1"] {
+        let g = zoo::build(name).unwrap();
+        let mut serial = quick_sys();
+        serial.jobs = 1;
+        let mut par = quick_sys();
+        par.jobs = 4;
+        let a = explore_two_platform(&g, &serial);
+        let b = explore_two_platform(&g, &par);
+        assert_eq!(a.pareto, b.pareto, "{name}: Pareto sets diverge");
+        assert_eq!(a.nsga_front, b.nsga_front, "{name}: NSGA fronts diverge");
+        assert_eq!(a.favorite, b.favorite, "{name}: favorites diverge");
+        assert_eq!(a.candidates.len(), b.candidates.len(), "{name}");
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.positions, y.positions, "{name}/{}", x.label);
+            assert_eq!(x.label, y.label, "{name}");
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "{name}/{}", x.label);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{name}/{}", x.label);
+            assert_eq!(x.throughput.to_bits(), y.throughput.to_bits(), "{name}/{}", x.label);
+            assert_eq!(x.top1.to_bits(), y.top1.to_bits(), "{name}/{}", x.label);
+            assert_eq!(x.memory_bytes, y.memory_bytes, "{name}/{}", x.label);
+            assert_eq!(x.link_bytes, y.link_bytes, "{name}/{}", x.label);
+            assert_eq!(x.partitions, y.partitions, "{name}/{}", x.label);
+        }
+    }
+}
+
+#[test]
 fn pareto_front_is_internally_consistent() {
     let g = zoo::googlenet(1000);
     let sys = quick_sys();

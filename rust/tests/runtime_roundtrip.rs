@@ -1,7 +1,10 @@
 //! Integration: load the real AOT artifacts (built by `make artifacts`)
 //! and execute them on the PJRT CPU client — the python→rust bridge.
 //!
-//! Skipped (with a message) when artifacts have not been built.
+//! Skipped (with a message) when artifacts have not been built, and
+//! compiled only with the `xla` feature (the PJRT engine is gated so the
+//! default build works on bare toolchains).
+#![cfg(feature = "xla")]
 
 use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
 use partir::runtime::{evaluate_top1, Engine, Manifest};

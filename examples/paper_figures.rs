@@ -1,16 +1,24 @@
 //! Regenerate every table and figure of the paper's evaluation (§V)
 //! into `reports/`:
 //!
-//!     cargo run --release --example paper_figures [--fast]
+//!     cargo run --release --example paper_figures [--fast] [--cache-dir DIR]
 //!
 //! Fig 2(a–f) per-model partitioning series, Fig 3 memory analysis,
 //! Table II partition histogram. See DESIGN.md's per-experiment index
-//! and EXPERIMENTS.md for measured-vs-paper comparisons.
+//! and EXPERIMENTS.md for measured-vs-paper comparisons. With
+//! `--cache-dir`, layer costs persist across invocations and a re-run
+//! skips the mapper entirely.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 fn main() -> anyhow::Result<()> {
-    let fast = std::env::args().any(|a| a == "--fast");
+    let args: Vec<String> = std::env::args().collect();
+    let fast = args.iter().any(|a| a == "--fast");
+    let cache_dir: Option<PathBuf> = args
+        .iter()
+        .position(|a| a == "--cache-dir")
+        .and_then(|i| args.get(i + 1))
+        .map(PathBuf::from);
     let jobs = partir::util::parallel::default_jobs();
-    partir::report::paper::generate_all(Path::new("reports"), fast, jobs)
+    partir::report::paper::generate_all(Path::new("reports"), fast, jobs, cache_dir.as_deref())
 }

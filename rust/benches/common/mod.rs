@@ -1,7 +1,11 @@
 //! Shared mini bench harness (criterion substitute for this offline
-//! build): warmup + timed iterations, mean/min/MAD reporting, and a
-//! tabular printer used by every bench target.
+//! build): warmup + timed iterations, mean/min/MAD reporting, a tabular
+//! printer, and the `BENCH_*.json` emitter used to track the perf
+//! trajectory across PRs. Each bench target compiles its own copy and
+//! uses a subset, hence the allow.
+#![allow(dead_code)]
 
+use partir::util::json::Json;
 use std::time::Instant;
 
 /// Time `f` over `iters` iterations after `warmup` runs; returns
@@ -43,4 +47,15 @@ pub fn fast_mode() -> bool {
 
 pub fn section(title: &str) {
     println!("\n=== {title} ===");
+}
+
+/// Write machine-readable bench results to `BENCH_<name>.json` in the
+/// current directory (`rust/` under `cargo bench`; CI uploads these as
+/// artifacts so the perf trajectory is tracked from PR 2 onward).
+pub fn write_bench_json(name: &str, doc: &Json) {
+    let path = format!("BENCH_{name}.json");
+    match std::fs::write(&path, doc.pretty() + "\n") {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

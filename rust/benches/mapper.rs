@@ -1,7 +1,15 @@
-//! Bench: the Timeloop-like mapping search (the DSE's hot path) plus the
-//! victory-condition ablation called out in DESIGN.md — how search budget
-//! trades mapping quality (EDP) against wall time, mirroring the paper's
-//! Timeloop setting of "linear-pruned search, victory condition 100".
+//! Bench: the Timeloop-like mapping search (the DSE's hot path).
+//!
+//! Three sections:
+//! 1. kernel throughput — the bound-pruned zero-allocation kernel
+//!    (`mapper::map_layer`) against the straight-line reference kernel
+//!    (`mapper::reference::map_layer`), asserting bit-identical chosen
+//!    mappings and reporting samples/s per workload (acceptance: ≥ 3×
+//!    single-thread speedup at identical mappings);
+//! 2. the victory-condition ablation called out in DESIGN.md — how
+//!    search budget trades mapping quality (EDP) against wall time,
+//!    mirroring the paper's "linear-pruned search, victory condition 100";
+//! 3. machine-readable results in `BENCH_mapper.json`.
 //!
 //!     cargo bench --bench mapper
 
@@ -9,6 +17,7 @@
 mod common;
 
 use partir::hw::{mapper, presets, ConvWorkload, SearchCfg};
+use partir::util::json::{obj, Json};
 use partir::zoo;
 
 fn workloads() -> Vec<(String, ConvWorkload)> {
@@ -31,17 +40,90 @@ fn workloads() -> Vec<(String, ConvWorkload)> {
 }
 
 fn main() {
-    let iters = if common::fast_mode() { 3 } else { 15 };
-    common::section("map_layer search time (victory=100, max_samples=4000)");
-    let cfg = SearchCfg::default();
+    let fast = common::fast_mode();
+    let iters = if fast { 3 } else { 15 };
+    let cfg = if fast {
+        SearchCfg { victory: 25, max_samples: 500, ..Default::default() }
+    } else {
+        SearchCfg::default()
+    };
+
+    common::section(&format!(
+        "kernel throughput: bound-pruned zero-alloc vs straight-line reference \
+         (victory={}, max_samples={})",
+        cfg.victory, cfg.max_samples
+    ));
+    println!(
+        "{:<36} {:>8} {:>8} {:>12} {:>12} {:>9}",
+        "workload", "samples", "pruned", "ref smp/s", "fast smp/s", "speedup"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ln_speedups: Vec<f64> = Vec::new();
     for (name, wl) in workloads() {
         for acc in [presets::eyeriss_like(), presets::simba_like()] {
-            let (mean, min, mad) = common::bench(1, iters, || {
+            // Equivalence first: the speedup below is only meaningful at
+            // identical answers.
+            let (fast_cost, stats) = mapper::map_layer_with_stats(&acc, &wl, &cfg);
+            let (ref_cost, ref_stats) = mapper::reference::map_layer_with_stats(&acc, &wl, &cfg);
+            assert_eq!(
+                fast_cost.latency_s.to_bits(),
+                ref_cost.latency_s.to_bits(),
+                "{name} on {}: latency diverged",
+                acc.name
+            );
+            assert_eq!(
+                fast_cost.energy_j.to_bits(),
+                ref_cost.energy_j.to_bits(),
+                "{name} on {}: energy diverged",
+                acc.name
+            );
+            assert_eq!(
+                fast_cost.mapping_desc, ref_cost.mapping_desc,
+                "{name} on {}: chosen mapping diverged",
+                acc.name
+            );
+            assert_eq!(stats.samples, ref_stats.samples, "{name}: RNG streams diverged");
+
+            let (_, ref_min, _) = common::bench(1, iters, || {
+                std::hint::black_box(mapper::reference::map_layer(&acc, &wl, &cfg));
+            });
+            let (_, fast_min, _) = common::bench(1, iters, || {
                 std::hint::black_box(mapper::map_layer(&acc, &wl, &cfg));
             });
-            common::report(&format!("{name} on {}", acc.name), mean, min, mad);
+            let samples = stats.samples as f64;
+            let ref_sps = samples / ref_min.max(1e-12);
+            let fast_sps = samples / fast_min.max(1e-12);
+            let speedup = ref_min / fast_min.max(1e-12);
+            ln_speedups.push(speedup.max(1e-12).ln());
+            println!(
+                "{:<36} {:>8} {:>8} {:>12.0} {:>12.0} {:>8.2}x",
+                format!("{name} on {}", acc.name),
+                stats.samples,
+                stats.pruned,
+                ref_sps,
+                fast_sps,
+                speedup
+            );
+            rows.push(obj(vec![
+                ("workload", Json::from(name.clone())),
+                ("acc", Json::from(acc.name.clone())),
+                ("samples", Json::from(stats.samples)),
+                ("pruned", Json::from(stats.pruned)),
+                ("ref_s", Json::from(ref_min)),
+                ("fast_s", Json::from(fast_min)),
+                ("ref_samples_per_s", Json::from(ref_sps)),
+                ("fast_samples_per_s", Json::from(fast_sps)),
+                ("speedup", Json::from(speedup)),
+                ("identical_mapping", Json::from(true)),
+            ]));
         }
     }
+    let geomean =
+        (ln_speedups.iter().sum::<f64>() / ln_speedups.len().max(1) as f64).exp();
+    println!(
+        "\nkernel speedup geomean: {geomean:.2}x \
+         (acceptance: >= 3x single-thread at identical chosen mappings)"
+    );
 
     common::section("victory-condition ablation (EYR, vgg16/Conv_5)");
     let g = zoo::vgg16(1000);
@@ -52,6 +134,7 @@ fn main() {
         "victory", "latency", "energy", "EDP", "time"
     );
     let mut base_edp = None;
+    let mut ablation: Vec<Json> = Vec::new();
     for victory in [10usize, 25, 50, 100, 200, 400] {
         let cfg = SearchCfg { victory, max_samples: 20_000, ..Default::default() };
         let t = std::time::Instant::now();
@@ -66,6 +149,25 @@ fn main() {
             edp / *rel,
             common::fmt(dt)
         );
+        ablation.push(obj(vec![
+            ("victory", Json::from(victory)),
+            ("edp_rel", Json::from(edp / *rel)),
+            ("time_s", Json::from(dt)),
+        ]));
     }
     println!("(EDP relative to victory=10; diminishing returns justify the paper's 100)");
+
+    common::write_bench_json(
+        "mapper",
+        &obj(vec![
+            ("bench", Json::from("mapper")),
+            ("fast_mode", Json::from(fast)),
+            ("victory", Json::from(cfg.victory)),
+            ("max_samples", Json::from(cfg.max_samples)),
+            ("kernels", Json::Arr(rows)),
+            ("speedup_geomean", Json::from(geomean)),
+            ("identical_mappings", Json::from(true)),
+            ("victory_ablation", Json::Arr(ablation)),
+        ]),
+    );
 }

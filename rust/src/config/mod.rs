@@ -7,7 +7,7 @@ use crate::hw::{presets, Accelerator, Objective, SearchCfg};
 use crate::link::LinkModel;
 use crate::util::json::Json;
 use crate::util::tomlite;
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 /// One platform in the chain: an accelerator plus its local memory
 /// budget (the Def-3 constraint: parameters + peak activations of the
@@ -130,6 +130,11 @@ pub struct SystemConfig {
     pub search: SearchCfg,
     /// Run accuracy with QAT recovery.
     pub qat: bool,
+    /// Directory for the persistent layer-cost cache (`costcache_v1.json`,
+    /// see `hw::CostCache::{save_to, load_from}`). `None` = in-memory
+    /// only. Repeated sweeps under the same search settings become pure
+    /// cache hits; stale/corrupt files are ignored, never fatal.
+    pub cache_dir: Option<PathBuf>,
     pub seed: u64,
     /// Worker threads for hardware evaluation, candidate enumeration and
     /// NSGA-II population evaluation (1 = serial; results are
@@ -167,6 +172,7 @@ impl SystemConfig {
             favorite: ObjectiveWeights::latency_energy(),
             search: SearchCfg::default(),
             qat: false,
+            cache_dir: None,
             seed: DSE_SEED,
             jobs: 1,
         }
@@ -285,6 +291,9 @@ impl SystemConfig {
         if let Some(q) = doc.get("qat").as_bool() {
             cfg.qat = q;
         }
+        if let Some(d) = doc.get("cache_dir").as_str() {
+            cfg.cache_dir = Some(PathBuf::from(d));
+        }
         if let Some(s) = doc.get("seed").as_u64() {
             cfg.seed = s;
         }
@@ -383,6 +392,7 @@ mod tests {
 seed = 7
 qat = true
 jobs = 3
+cache_dir = "/tmp/partir-cache"
 pareto_metrics = ["latency", "energy"]
 
 [link]
@@ -415,6 +425,8 @@ weight = 2.0
         assert_eq!(cfg.seed, 7);
         assert!(cfg.qat);
         assert_eq!(cfg.jobs, 3);
+        assert_eq!(cfg.cache_dir, Some(PathBuf::from("/tmp/partir-cache")));
+        assert!(SystemConfig::paper_two_platform().cache_dir.is_none());
         assert_eq!(cfg.platforms[0].name, "edge");
         assert_eq!(cfg.platforms[0].memory_bytes, 8 << 20);
         assert_eq!(cfg.platforms[1].memory_bytes, 512 << 20);

@@ -114,21 +114,40 @@ pub fn explore_chain_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>
 /// independent and deterministic, so the result vector is element-wise
 /// identical to running [`super::explore_two_platform`] serially.
 pub fn explore_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
-    explore_pool(graphs, sys, super::explore_two_platform_cached)
+    explore_many_cached(graphs, sys, Arc::new(CostCache::new()))
+}
+
+/// [`explore_many`] against an external (possibly pre-warmed, possibly
+/// persisted — see `hw::CostCache::load_from`) layer-cost cache.
+pub fn explore_many_cached(
+    graphs: &[Graph],
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Vec<Exploration> {
+    explore_pool(graphs, sys, cache, super::explore_two_platform_cached)
 }
 
 /// [`explore_many`] for N-platform chains ([`explore_chain`] per model).
 pub fn explore_chain_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
-    explore_pool(graphs, sys, explore_chain_cached)
+    explore_chain_many_cached(graphs, sys, Arc::new(CostCache::new()))
+}
+
+/// [`explore_chain_many`] against an external layer-cost cache.
+pub fn explore_chain_many_cached(
+    graphs: &[Graph],
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Vec<Exploration> {
+    explore_pool(graphs, sys, cache, explore_chain_cached)
 }
 
 fn explore_pool(
     graphs: &[Graph],
     sys: &SystemConfig,
+    cache: Arc<CostCache>,
     explore: fn(&Graph, &SystemConfig, Arc<CostCache>) -> Exploration,
 ) -> Vec<Exploration> {
     let jobs = sys.jobs.max(1);
-    let cache = Arc::new(CostCache::new());
     // Outer parallelism over models; hand the leftover worker budget to
     // each model's inner stages (ceiling division, so e.g. 8 jobs over 6
     // models gives every model 2 inner workers rather than idling the

@@ -9,6 +9,7 @@
 
 use super::energy::EnergyTable;
 use super::workload::Dim;
+use crate::util::hash::Fnv64;
 
 /// Dataflow: spatial dim assignment plus fixed per-level loop orders.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,6 +106,37 @@ impl Accelerator {
         self.num_pes() as f64 * self.clock_hz
     }
 
+    /// Stable structural fingerprint over every cost-relevant field
+    /// (FNV-1a, survives process restarts — see `util::hash`). Keys the
+    /// layer-cost cache, both in memory and on disk, so two accelerators
+    /// that merely share a *name* (e.g. a TOML `bits`/`clock_hz`/`glb_kib`
+    /// override on a preset) can never alias each other's costs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_bytes(self.name.as_bytes());
+        h.write_u64(self.bits as u64);
+        h.write_f64(self.clock_hz);
+        h.write_usize(self.pe_rows);
+        h.write_usize(self.pe_cols);
+        h.write_u64(self.rf_bytes);
+        h.write_u64(self.glb_bytes);
+        h.write_f64(self.dram_bw);
+        h.write_f64(self.glb_bw);
+        h.write_f64(self.vector_lanes);
+        h.write_bytes(self.dataflow.name.as_bytes());
+        for d in self.dataflow.row_dims.iter().chain(&self.dataflow.col_dims) {
+            h.write_usize(d.idx());
+        }
+        for d in self.dataflow.glb_order.iter().chain(&self.dataflow.dram_order) {
+            h.write_usize(d.idx());
+        }
+        let e = &self.energy;
+        for v in [e.mac_pj, e.rf_pj, e.noc_pj, e.glb_pj, e.dram_pj, e.vector_pj, e.static_w] {
+            h.write_f64(v);
+        }
+        h.finish()
+    }
+
     pub fn validate(&self) -> Result<(), String> {
         if self.bits == 0 || self.bits > 64 {
             return Err(format!("{}: bad bit width {}", self.name, self.bits));
@@ -147,6 +179,19 @@ mod tests {
         let mut a = presets::eyeriss_like();
         a.glb_bytes = 1;
         assert!(a.validate().is_err());
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_overrides() {
+        let a = presets::eyeriss_like();
+        let mut b = presets::eyeriss_like();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        b.bits = 8; // same name, different precision: must not alias
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = presets::eyeriss_like();
+        c.glb_bytes += 1024;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+        assert_ne!(a.fingerprint(), presets::simba_like().fingerprint());
     }
 
     #[test]

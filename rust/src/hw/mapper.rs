@@ -16,10 +16,36 @@
 //!   (perfect double buffering);
 //! * energy = MACs·e_mac + 4·MACs·e_rf + Σ level traffic · e_level
 //!   + static power · latency.
+//!
+//! § Perf — the kernel is the DSE's wall-clock bottleneck (thousands of
+//! samples per layer × layers × platforms), so the hot loop is written to
+//! do **zero heap allocation per sample** and to **skip full evaluation
+//! of provably losing samples**:
+//!
+//! * [`MapperCtx`] precomputes, once per `(accelerator, workload)` pair:
+//!   the dataflow's loop-order and spatial-slot tables, the ceil-divisor
+//!   factor tables (shared by sampling, the heuristic seeds and
+//!   `max_leq`), and the constants of the lower bound below.
+//! * Loop structures are fixed-size arrays (`[(Dim, usize); 6]`/`[..12]`)
+//!   instead of per-sample `Vec`s, and the human-readable
+//!   `Mapping::describe` string is built **only for the single winning
+//!   mapping**, not for all ~4000 samples.
+//! * Bound pruning: before full traffic accounting, each sample's
+//!   objective is bounded below by the compute roofline (∏ temporal
+//!   factors · groups cycles) combined with the DRAM floor (every unique
+//!   element touched at least once) and the mapping-independent energy
+//!   terms. The bound uses *the same floating-point operations in the
+//!   same order* as the full model, and IEEE-754 add/mul/div/max are
+//!   monotone, so `bound ≤ true objective` holds bit-for-bit — a sample
+//!   rejected against the incumbent could never have improved on it.
+//!   Results are therefore **bit-identical** to the straight-line kernel,
+//!   which is preserved verbatim in [`reference`] as the equivalence
+//!   oracle (`tests/mapper_equivalence.rs`) and bench baseline.
 
 use super::arch::Accelerator;
 use super::energy::PJ;
 use super::workload::{ConvWorkload, Dataspace, Dim, DATASPACES, DIMS};
+use crate::util::hash::Fnv64;
 use crate::util::rng::Pcg32;
 
 /// Objective minimized by the search.
@@ -29,6 +55,17 @@ pub enum Objective {
     Energy,
     /// Energy–delay product (Timeloop's default figure of merit).
     Edp,
+}
+
+impl Objective {
+    /// Stable tag for fingerprinting (part of the cache-file contract).
+    fn tag(self) -> u64 {
+        match self {
+            Objective::Latency => 0,
+            Objective::Energy => 1,
+            Objective::Edp => 2,
+        }
+    }
 }
 
 /// Search-strategy knobs (paper §V: "linear-pruned search algorithm and a
@@ -47,9 +84,23 @@ impl Default for SearchCfg {
     }
 }
 
+impl SearchCfg {
+    /// Stable fingerprint of every field that changes mapper results.
+    /// A persisted cost cache is only valid under the settings that
+    /// produced it; `hw::CostCache::load_from` checks this.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_usize(self.victory);
+        h.write_usize(self.max_samples);
+        h.write_u64(self.seed);
+        h.write_u64(self.objective.tag());
+        h.finish()
+    }
+}
+
 /// A complete tiling: temporal factors at RF/GLB/DRAM plus spatial
 /// factors for the dataflow's row/col dims.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Mapping {
     pub rf: [usize; 6],
     pub sp_row: [usize; 2],
@@ -140,6 +191,17 @@ impl LayerCost {
     }
 }
 
+/// Counters from one `map_layer` search (for benches and §Perf reports).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MapStats {
+    /// Random samples drawn (identical between kernels: pruning never
+    /// changes the RNG stream or the accept/reject outcome).
+    pub samples: usize,
+    /// Candidates rejected by the lower bound before full evaluation
+    /// (always 0 for the reference kernel).
+    pub pruned: usize,
+}
+
 /// Candidate tile sizes for an extent `n`: the "ceil divisors"
 /// `{ceil(n/k)}` — exactly the factors that minimize padding waste.
 fn candidates(n: usize) -> Vec<usize> {
@@ -157,6 +219,19 @@ struct CandCache(std::collections::HashMap<usize, Vec<usize>>);
 impl CandCache {
     fn get(&mut self, n: usize) -> &[usize] {
         self.0.entry(n).or_insert_with(|| candidates(n))
+    }
+
+    /// Largest candidate factor of `n` that is ≤ `cap` (1 if none).
+    /// Same result as the reference `max_factor_leq`, but against the
+    /// shared factor table instead of a fresh allocation per call.
+    fn max_leq(&mut self, n: usize, cap: usize) -> usize {
+        let cands = self.get(n);
+        let k = cands.partition_point(|&f| f <= cap);
+        if k == 0 {
+            1
+        } else {
+            cands[k - 1]
+        }
     }
 }
 
@@ -176,263 +251,430 @@ fn reloads(loops: &[(Dim, usize)], ds: Dataspace) -> u64 {
     prod
 }
 
-/// Evaluate one mapping. Returns `None` if it violates a capacity
-/// constraint (pruning).
-fn evaluate(acc: &Accelerator, wl: &ConvWorkload, m: &Mapping) -> Option<LayerCost> {
-    let eb = acc.elem_bytes();
+/// The numeric outcome of fully evaluating one mapping; the mapping
+/// string is deferred to the single winner (see [`map_layer`]).
+#[derive(Debug, Clone, Copy)]
+struct EvalNums {
+    latency_s: f64,
+    energy_j: f64,
+    utilization: f64,
+    dram_words: u64,
+}
 
-    // Cumulative tile extents.
-    let mut arr_tile = [0usize; 6]; // rf × spatial (data across the array)
-    let mut glb_tile = [0usize; 6];
-    for d in DIMS {
-        let i = d.idx();
-        arr_tile[i] = m.rf[i] * m.spatial(acc, d);
-        glb_tile[i] = arr_tile[i] * m.glb[i];
-    }
+/// Per-`(accelerator, workload)` precomputation for the hot sampling
+/// loop: dataflow tables, factor tables and lower-bound constants. Built
+/// once per [`map_layer`] call; no per-sample heap allocation remains.
+struct MapperCtx<'a> {
+    acc: &'a Accelerator,
+    wl: &'a ConvWorkload,
+    objective: Objective,
+    eb: f64,
+    groups: u64,
+    macs: u64,
+    /// Spatial slot → dim tables (copied out of the dataflow).
+    row_dims: [Dim; 2],
+    col_dims: [Dim; 2],
+    /// Temporal loop orders, outermost → innermost.
+    glb_order: [Dim; 6],
+    dram_order: [Dim; 6],
+    /// DRAM floor in cycles: every unique element of every dataspace is
+    /// touched at least once. Computed with the same op order as the
+    /// full model's `dram_cycles`, so it is a true f64 lower bound.
+    lb_dram_cycles: f64,
+    /// Mapping-independent energy terms in pJ: MAC + RF energy plus the
+    /// DRAM-floor traffic. Same op order as the full model's prefix.
+    lb_energy_const_pj: f64,
+    /// Shared ceil-divisor factor tables.
+    cands: CandCache,
+}
 
-    // --- capacity constraints ---------------------------------------
-    let rf_fp: f64 = DATASPACES
-        .iter()
-        .map(|&ds| wl.footprint(ds, &m.rf) as f64)
-        .sum::<f64>()
-        * eb;
-    if rf_fp > acc.rf_bytes as f64 {
-        return None;
-    }
-    let glb_fp: f64 = DATASPACES
-        .iter()
-        .map(|&ds| wl.footprint(ds, &glb_tile) as f64)
-        .sum::<f64>()
-        * eb;
-    if glb_fp > acc.glb_bytes as f64 {
-        return None;
-    }
-    // Spatial bounds.
-    if m.sp_row[0] * m.sp_row[1] > acc.pe_rows || m.sp_col[0] * m.sp_col[1] > acc.pe_cols {
-        return None;
-    }
-
-    // --- loop structures ---------------------------------------------
-    let glb_loops: Vec<(Dim, usize)> =
-        acc.dataflow.glb_order.iter().map(|&d| (d, m.glb[d.idx()])).collect();
-    let dram_loops: Vec<(Dim, usize)> =
-        acc.dataflow.dram_order.iter().map(|&d| (d, m.dram[d.idx()])).collect();
-    let above_rf: Vec<(Dim, usize)> =
-        dram_loops.iter().chain(glb_loops.iter()).copied().collect();
-
-    // Reduction split above a level forces psum read-modify-write.
-    let red_above_rf = [Dim::C, Dim::R, Dim::S]
-        .iter()
-        .any(|d| m.glb[d.idx()] > 1 || m.dram[d.idx()] > 1);
-    let red_above_glb =
-        [Dim::C, Dim::R, Dim::S].iter().any(|d| m.dram[d.idx()] > 1);
-
-    // --- traffic -------------------------------------------------------
-    let groups = wl.groups as u64;
-    let mut glb_words = 0u64; // unique words read from GLB (multicast once)
-    let mut noc_words = 0u64; // word-deliveries into PEs
-    let mut dram_words = 0u64;
-    for &ds in &DATASPACES {
-        let refills_rf = reloads(&above_rf, ds);
-        let arr_fp = wl.footprint(ds, &arr_tile);
-        let out_rw = |base: u64, red: bool| if red { base * 2 } else { base };
-        let mut g_traffic = arr_fp * refills_rf;
-        if ds == Dataspace::Outputs {
-            g_traffic = out_rw(g_traffic, red_above_rf);
+impl<'a> MapperCtx<'a> {
+    fn new(acc: &'a Accelerator, wl: &'a ConvWorkload, objective: Objective) -> Self {
+        let eb = acc.elem_bytes();
+        let groups = wl.groups as u64;
+        let macs = wl.macs();
+        let unique_words: u64 = DATASPACES.iter().map(|&ds| wl.total_footprint(ds)).sum();
+        let dram_floor_words = unique_words * groups;
+        let lb_dram_cycles = dram_floor_words as f64 * eb / acc.dram_bw;
+        let e = &acc.energy;
+        let lb_energy_const_pj = macs as f64 * e.mac_pj
+            + 4.0 * macs as f64 * e.rf_pj
+            + dram_floor_words as f64 * e.dram_pj;
+        let mut cands = CandCache::default();
+        for d in DIMS {
+            cands.get(wl.bound(d)); // factor tables for the raw bounds up front
         }
-        glb_words += g_traffic;
-        // Spatial replication across ds-irrelevant spatial dims: each
-        // copy is one NoC delivery (multicast still traverses the wires).
-        let copies: u64 = DIMS
+        Self {
+            acc,
+            wl,
+            objective,
+            eb,
+            groups,
+            macs,
+            row_dims: acc.dataflow.row_dims,
+            col_dims: acc.dataflow.col_dims,
+            glb_order: acc.dataflow.glb_order,
+            dram_order: acc.dataflow.dram_order,
+            lb_dram_cycles,
+            lb_energy_const_pj,
+            cands,
+        }
+    }
+
+    /// Total spatial factor per dim as a flat array (replaces six
+    /// `Mapping::spatial` scans per evaluation with four multiplies).
+    fn spatial_per_dim(&self, m: &Mapping) -> [usize; 6] {
+        let mut s = [1usize; 6];
+        s[self.row_dims[0].idx()] *= m.sp_row[0];
+        s[self.row_dims[1].idx()] *= m.sp_row[1];
+        s[self.col_dims[0].idx()] *= m.sp_col[0];
+        s[self.col_dims[1].idx()] *= m.sp_col[1];
+        s
+    }
+
+    /// Cheap lower bound on the sample's objective: compute roofline vs
+    /// DRAM floor for latency, plus the mapping-independent energy terms.
+    /// Every operation mirrors the full model's op order, and IEEE-754
+    /// arithmetic is monotone, so `bound ≤ true objective` exactly.
+    fn objective_lower_bound(&self, m: &Mapping) -> f64 {
+        let temporal: u64 = DIMS
             .iter()
-            .filter(|d| !ds.relevant(**d))
-            .map(|&d| m.spatial(acc, d) as u64)
+            .map(|&d| (m.rf[d.idx()] * m.glb[d.idx()] * m.dram[d.idx()]) as u64)
             .product();
-        noc_words += g_traffic * copies;
-
-        let refills_glb = reloads(&dram_loops, ds);
-        let glb_fp_ds = wl.footprint(ds, &glb_tile);
-        let mut d_traffic = glb_fp_ds * refills_glb;
-        if ds == Dataspace::Outputs {
-            d_traffic = out_rw(d_traffic, red_above_glb);
+        let compute_cycles = temporal * self.groups;
+        let latency_cycles = (compute_cycles as f64).max(self.lb_dram_cycles);
+        let latency_s = latency_cycles / self.acc.clock_hz;
+        match self.objective {
+            Objective::Latency => latency_s,
+            Objective::Energy | Objective::Edp => {
+                let energy_j =
+                    self.lb_energy_const_pj * PJ + self.acc.energy.static_w * latency_s;
+                if self.objective == Objective::Energy {
+                    energy_j
+                } else {
+                    latency_s * energy_j
+                }
+            }
         }
-        // Floor: every element is touched at least once.
-        d_traffic = d_traffic.max(wl.total_footprint(ds));
-        dram_words += d_traffic;
     }
-    glb_words *= groups;
-    noc_words *= groups;
-    dram_words *= groups;
 
-    // --- cycles --------------------------------------------------------
-    let temporal: u64 = DIMS
-        .iter()
-        .map(|&d| (m.rf[d.idx()] * m.glb[d.idx()] * m.dram[d.idx()]) as u64)
-        .product();
-    let compute_cycles = temporal * groups;
-    let dram_cycles = dram_words as f64 * eb / acc.dram_bw;
-    let glb_cycles = glb_words as f64 * eb / acc.glb_bw;
-    let latency_cycles = (compute_cycles as f64).max(dram_cycles).max(glb_cycles);
-    let latency_s = latency_cycles / acc.clock_hz;
+    /// Full cost model. Bit-identical arithmetic (same operations, same
+    /// order) to [`reference::evaluate`], minus the per-sample `Vec`s and
+    /// the mapping string. Returns the objective alongside the numbers so
+    /// the caller never recomputes it. `None` = capacity violation.
+    fn evaluate(&self, m: &Mapping) -> Option<(f64, EvalNums)> {
+        let (acc, wl, eb) = (self.acc, self.wl, self.eb);
+        let spat = self.spatial_per_dim(m);
 
-    // --- energy --------------------------------------------------------
-    let macs = wl.macs();
-    let e = &acc.energy;
-    let energy_pj = macs as f64 * e.mac_pj
-        + 4.0 * macs as f64 * e.rf_pj
-        + noc_words as f64 * e.noc_pj
-        + glb_words as f64 * e.glb_pj
-        + dram_words as f64 * e.dram_pj;
-    let energy_j = energy_pj * PJ + e.static_w * latency_s;
-
-    let utilization = macs as f64 / (latency_cycles * acc.num_pes() as f64);
-
-    Some(LayerCost {
-        latency_s,
-        energy_j,
-        utilization,
-        macs,
-        dram_bytes: (dram_words as f64 * eb) as u64,
-        mapping_desc: m.describe(acc),
-    })
-}
-
-/// Largest candidate factor of `n` that is ≤ `cap`.
-fn max_factor_leq(n: usize, cap: usize) -> usize {
-    candidates(n).into_iter().filter(|&f| f <= cap).max().unwrap_or(1)
-}
-
-/// Deterministic heuristic seed: fill the spatial array as much as
-/// possible, keep RF tiles minimal, put everything else at the GLB level
-/// (falling back to DRAM when the GLB overflows is handled by sampling).
-fn heuristic_seed(acc: &Accelerator, wl: &ConvWorkload, glb_share: usize) -> Mapping {
-    let df = &acc.dataflow;
-    let mut m = Mapping {
-        rf: [1; 6],
-        sp_row: [1, 1],
-        sp_col: [1, 1],
-        glb: [1; 6],
-        dram: [1; 6],
-    };
-    // Spatial: primary dim takes as much as possible, secondary fills.
-    m.sp_row[0] = max_factor_leq(wl.bound(df.row_dims[0]), acc.pe_rows);
-    m.sp_row[1] = if df.row_dims[1] != df.row_dims[0] {
-        max_factor_leq(wl.bound(df.row_dims[1]), acc.pe_rows / m.sp_row[0])
-    } else {
-        1
-    };
-    m.sp_col[0] = max_factor_leq(wl.bound(df.col_dims[0]), acc.pe_cols);
-    m.sp_col[1] = if df.col_dims[1] != df.col_dims[0] {
-        max_factor_leq(wl.bound(df.col_dims[1]), acc.pe_cols / m.sp_col[0])
-    } else {
-        1
-    };
-    // Temporal: split remainder between GLB and DRAM, giving the GLB a
-    // `1/glb_share` slice per dim (share 1 = everything at GLB).
-    for d in DIMS {
-        let i = d.idx();
-        let rem = wl.bound(d).div_ceil(m.spatial(acc, d));
-        let g = max_factor_leq(rem, (rem / glb_share).max(1));
-        m.glb[i] = g;
-        m.dram[i] = rem.div_ceil(g);
-    }
-    m
-}
-
-/// Random mapping sample.
-fn sample(acc: &Accelerator, wl: &ConvWorkload, rng: &mut Pcg32, cache: &mut CandCache) -> Mapping {
-    let df = &acc.dataflow;
-    let mut m = Mapping {
-        rf: [1; 6],
-        sp_row: [1, 1],
-        sp_col: [1, 1],
-        glb: [1; 6],
-        dram: [1; 6],
-    };
-    let mut pick = |rng: &mut Pcg32, n: usize, cap: usize, bias_max: bool| -> usize {
-        let cands = cache.get(n);
-        // Candidates are sorted ascending: binary-search the cap.
-        let usable = &cands[..cands.partition_point(|&f| f <= cap)];
-        if usable.is_empty() {
-            return 1;
+        // Cumulative tile extents.
+        let mut arr_tile = [0usize; 6]; // rf × spatial (data across the array)
+        let mut glb_tile = [0usize; 6];
+        for d in DIMS {
+            let i = d.idx();
+            arr_tile[i] = m.rf[i] * spat[i];
+            glb_tile[i] = arr_tile[i] * m.glb[i];
         }
-        if bias_max && rng.gen_bool(0.5) {
-            *usable.last().unwrap()
+
+        // --- capacity constraints ---------------------------------------
+        let rf_fp: f64 = DATASPACES
+            .iter()
+            .map(|&ds| wl.footprint(ds, &m.rf) as f64)
+            .sum::<f64>()
+            * eb;
+        if rf_fp > acc.rf_bytes as f64 {
+            return None;
+        }
+        let glb_fp: f64 = DATASPACES
+            .iter()
+            .map(|&ds| wl.footprint(ds, &glb_tile) as f64)
+            .sum::<f64>()
+            * eb;
+        if glb_fp > acc.glb_bytes as f64 {
+            return None;
+        }
+        // Spatial bounds.
+        if m.sp_row[0] * m.sp_row[1] > acc.pe_rows || m.sp_col[0] * m.sp_col[1] > acc.pe_cols {
+            return None;
+        }
+
+        // --- loop structures (stack arrays; DRAM above GLB above RF) ----
+        let mut glb_loops = [(Dim::K, 1usize); 6];
+        for (slot, &d) in self.glb_order.iter().enumerate() {
+            glb_loops[slot] = (d, m.glb[d.idx()]);
+        }
+        let mut dram_loops = [(Dim::K, 1usize); 6];
+        for (slot, &d) in self.dram_order.iter().enumerate() {
+            dram_loops[slot] = (d, m.dram[d.idx()]);
+        }
+        let mut above_rf = [(Dim::K, 1usize); 12];
+        above_rf[..6].copy_from_slice(&dram_loops);
+        above_rf[6..].copy_from_slice(&glb_loops);
+
+        // Reduction split above a level forces psum read-modify-write.
+        let red_above_rf = [Dim::C, Dim::R, Dim::S]
+            .iter()
+            .any(|d| m.glb[d.idx()] > 1 || m.dram[d.idx()] > 1);
+        let red_above_glb =
+            [Dim::C, Dim::R, Dim::S].iter().any(|d| m.dram[d.idx()] > 1);
+
+        // --- traffic -------------------------------------------------------
+        let groups = self.groups;
+        let mut glb_words = 0u64; // unique words read from GLB (multicast once)
+        let mut noc_words = 0u64; // word-deliveries into PEs
+        let mut dram_words = 0u64;
+        for &ds in &DATASPACES {
+            let refills_rf = reloads(&above_rf, ds);
+            let arr_fp = wl.footprint(ds, &arr_tile);
+            let out_rw = |base: u64, red: bool| if red { base * 2 } else { base };
+            let mut g_traffic = arr_fp * refills_rf;
+            if ds == Dataspace::Outputs {
+                g_traffic = out_rw(g_traffic, red_above_rf);
+            }
+            glb_words += g_traffic;
+            // Spatial replication across ds-irrelevant spatial dims: each
+            // copy is one NoC delivery (multicast still traverses the wires).
+            let copies: u64 = DIMS
+                .iter()
+                .filter(|d| !ds.relevant(**d))
+                .map(|&d| spat[d.idx()] as u64)
+                .product();
+            noc_words += g_traffic * copies;
+
+            let refills_glb = reloads(&dram_loops, ds);
+            let glb_fp_ds = wl.footprint(ds, &glb_tile);
+            let mut d_traffic = glb_fp_ds * refills_glb;
+            if ds == Dataspace::Outputs {
+                d_traffic = out_rw(d_traffic, red_above_glb);
+            }
+            // Floor: every element is touched at least once.
+            d_traffic = d_traffic.max(wl.total_footprint(ds));
+            dram_words += d_traffic;
+        }
+        glb_words *= groups;
+        noc_words *= groups;
+        dram_words *= groups;
+
+        // --- cycles --------------------------------------------------------
+        let temporal: u64 = DIMS
+            .iter()
+            .map(|&d| (m.rf[d.idx()] * m.glb[d.idx()] * m.dram[d.idx()]) as u64)
+            .product();
+        let compute_cycles = temporal * groups;
+        let dram_cycles = dram_words as f64 * eb / acc.dram_bw;
+        let glb_cycles = glb_words as f64 * eb / acc.glb_bw;
+        let latency_cycles = (compute_cycles as f64).max(dram_cycles).max(glb_cycles);
+        let latency_s = latency_cycles / acc.clock_hz;
+
+        // --- energy --------------------------------------------------------
+        let macs = self.macs;
+        let e = &acc.energy;
+        let energy_pj = macs as f64 * e.mac_pj
+            + 4.0 * macs as f64 * e.rf_pj
+            + noc_words as f64 * e.noc_pj
+            + glb_words as f64 * e.glb_pj
+            + dram_words as f64 * e.dram_pj;
+        let energy_j = energy_pj * PJ + e.static_w * latency_s;
+
+        let utilization = macs as f64 / (latency_cycles * acc.num_pes() as f64);
+
+        let obj = match self.objective {
+            Objective::Latency => latency_s,
+            Objective::Energy => energy_j,
+            Objective::Edp => latency_s * energy_j,
+        };
+        Some((obj, EvalNums { latency_s, energy_j, utilization, dram_words }))
+    }
+
+    /// Deterministic heuristic seed: fill the spatial array as much as
+    /// possible, keep RF tiles minimal, put everything else at the GLB
+    /// level (falling back to DRAM when the GLB overflows is handled by
+    /// sampling). Same result as the reference, via the factor tables.
+    fn heuristic_seed(&mut self, glb_share: usize) -> Mapping {
+        let mut m = Mapping {
+            rf: [1; 6],
+            sp_row: [1, 1],
+            sp_col: [1, 1],
+            glb: [1; 6],
+            dram: [1; 6],
+        };
+        // Spatial: primary dim takes as much as possible, secondary fills.
+        let (pe_rows, pe_cols) = (self.acc.pe_rows, self.acc.pe_cols);
+        m.sp_row[0] = self.cands.max_leq(self.wl.bound(self.row_dims[0]), pe_rows);
+        m.sp_row[1] = if self.row_dims[1] != self.row_dims[0] {
+            self.cands.max_leq(self.wl.bound(self.row_dims[1]), pe_rows / m.sp_row[0])
         } else {
-            *rng.choose(usable)
+            1
+        };
+        m.sp_col[0] = self.cands.max_leq(self.wl.bound(self.col_dims[0]), pe_cols);
+        m.sp_col[1] = if self.col_dims[1] != self.col_dims[0] {
+            self.cands.max_leq(self.wl.bound(self.col_dims[1]), pe_cols / m.sp_col[0])
+        } else {
+            1
+        };
+        // Temporal: split remainder between GLB and DRAM, giving the GLB a
+        // `1/glb_share` slice per dim (share 1 = everything at GLB).
+        let spat = self.spatial_per_dim(&m);
+        for d in DIMS {
+            let i = d.idx();
+            let rem = self.wl.bound(d).div_ceil(spat[i]);
+            let g = self.cands.max_leq(rem, (rem / glb_share).max(1));
+            m.glb[i] = g;
+            m.dram[i] = rem.div_ceil(g);
         }
-    };
-    m.sp_row[0] = pick(rng, wl.bound(df.row_dims[0]), acc.pe_rows, true);
-    if df.row_dims[1] != df.row_dims[0] {
-        m.sp_row[1] = pick(rng, wl.bound(df.row_dims[1]), acc.pe_rows / m.sp_row[0], true);
+        m
     }
-    m.sp_col[0] = pick(rng, wl.bound(df.col_dims[0]), acc.pe_cols, true);
-    if df.col_dims[1] != df.col_dims[0] {
-        m.sp_col[1] = pick(rng, wl.bound(df.col_dims[1]), acc.pe_cols / m.sp_col[0], true);
+
+    /// Random mapping sample. Identical RNG draw sequence to the
+    /// reference kernel (part of the bit-identical contract).
+    fn sample(&mut self, rng: &mut Pcg32) -> Mapping {
+        fn pick(
+            cands: &mut CandCache,
+            rng: &mut Pcg32,
+            n: usize,
+            cap: usize,
+            bias_max: bool,
+        ) -> usize {
+            let cands = cands.get(n);
+            // Candidates are sorted ascending: binary-search the cap.
+            let usable = &cands[..cands.partition_point(|&f| f <= cap)];
+            if usable.is_empty() {
+                return 1;
+            }
+            if bias_max && rng.gen_bool(0.5) {
+                *usable.last().unwrap()
+            } else {
+                *rng.choose(usable)
+            }
+        }
+        let mut m = Mapping {
+            rf: [1; 6],
+            sp_row: [1, 1],
+            sp_col: [1, 1],
+            glb: [1; 6],
+            dram: [1; 6],
+        };
+        let (pe_rows, pe_cols) = (self.acc.pe_rows, self.acc.pe_cols);
+        m.sp_row[0] = pick(&mut self.cands, rng, self.wl.bound(self.row_dims[0]), pe_rows, true);
+        if self.row_dims[1] != self.row_dims[0] {
+            m.sp_row[1] = pick(
+                &mut self.cands,
+                rng,
+                self.wl.bound(self.row_dims[1]),
+                pe_rows / m.sp_row[0],
+                true,
+            );
+        }
+        m.sp_col[0] = pick(&mut self.cands, rng, self.wl.bound(self.col_dims[0]), pe_cols, true);
+        if self.col_dims[1] != self.col_dims[0] {
+            m.sp_col[1] = pick(
+                &mut self.cands,
+                rng,
+                self.wl.bound(self.col_dims[1]),
+                pe_cols / m.sp_col[0],
+                true,
+            );
+        }
+        let spat = self.spatial_per_dim(&m);
+        for d in DIMS {
+            let i = d.idx();
+            let rem = self.wl.bound(d).div_ceil(spat[i]);
+            m.rf[i] = pick(&mut self.cands, rng, rem, rem, false);
+            let rem2 = rem.div_ceil(m.rf[i]);
+            m.glb[i] = pick(&mut self.cands, rng, rem2, rem2, false);
+            m.dram[i] = rem2.div_ceil(m.glb[i]);
+        }
+        m
     }
-    for d in DIMS {
-        let i = d.idx();
-        let rem = wl.bound(d).div_ceil(m.spatial(acc, d));
-        m.rf[i] = pick(rng, rem, rem, false);
-        let rem2 = rem.div_ceil(m.rf[i]);
-        m.glb[i] = pick(rng, rem2, rem2, false);
-        m.dram[i] = rem2.div_ceil(m.glb[i]);
+}
+
+/// Bound-prune, then fully evaluate; returns true iff `m` improved on
+/// the incumbent (mirrors the reference `consider` exactly: a pruned
+/// sample and a fully-evaluated non-improvement are indistinguishable).
+fn consider(
+    ctx: &MapperCtx,
+    m: &Mapping,
+    best: &mut Option<(f64, Mapping, EvalNums)>,
+    stats: &mut MapStats,
+) -> bool {
+    if let Some((incumbent, _, _)) = best {
+        if ctx.objective_lower_bound(m) >= *incumbent {
+            stats.pruned += 1;
+            return false;
+        }
     }
-    m
+    if let Some((obj, nums)) = ctx.evaluate(m) {
+        let improved = match best {
+            None => true,
+            Some((b, _, _)) => obj < *b,
+        };
+        if improved {
+            *best = Some((obj, *m, nums));
+            return true;
+        }
+    }
+    false
 }
 
 /// Run the mapping search for one layer. Always returns a cost: the
 /// fallback "everything streamed from DRAM, no spatial reuse" mapping is
 /// valid on any architecture that passes `Accelerator::validate`.
 pub fn map_layer(acc: &Accelerator, wl: &ConvWorkload, cfg: &SearchCfg) -> LayerCost {
-    let mut best: Option<(f64, LayerCost)> = None;
-    let consider = |cost: Option<LayerCost>, best: &mut Option<(f64, LayerCost)>| -> bool {
-        if let Some(c) = cost {
-            let obj = c.objective(cfg.objective);
-            if best.as_ref().map_or(true, |(b, _)| obj < *b) {
-                *best = Some((obj, c));
-                return true;
-            }
-        }
-        false
-    };
+    map_layer_with_stats(acc, wl, cfg).0
+}
+
+/// [`map_layer`] plus search counters (sample/prune counts for benches).
+pub fn map_layer_with_stats(
+    acc: &Accelerator,
+    wl: &ConvWorkload,
+    cfg: &SearchCfg,
+) -> (LayerCost, MapStats) {
+    let mut ctx = MapperCtx::new(acc, wl, cfg.objective);
+    let mut best: Option<(f64, Mapping, EvalNums)> = None;
+    let mut stats = MapStats::default();
 
     // Deterministic seeds: all-GLB, half-GLB, quarter-GLB variants of the
     // max-spatial heuristic, plus the trivial streaming mapping.
     for share in [1usize, 2, 4, 8] {
-        let m = heuristic_seed(acc, wl, share);
-        consider(evaluate(acc, wl, &m), &mut best);
+        let m = ctx.heuristic_seed(share);
+        consider(&ctx, &m, &mut best, &mut stats);
     }
     {
-        let mut stream = Mapping {
+        // Minimal spatial use keeps it valid even on tiny arrays.
+        let stream = Mapping {
             rf: [1; 6],
             sp_row: [1, 1],
             sp_col: [1, 1],
             glb: [1; 6],
             dram: wl.bounds,
         };
-        // Minimal spatial use keeps it valid even on tiny arrays.
-        stream.dram = wl.bounds;
-        consider(evaluate(acc, wl, &stream), &mut best);
+        consider(&ctx, &stream, &mut best, &mut stats);
     }
 
     // Pruned random search with victory condition.
     let mut rng = Pcg32::new(cfg.seed, hash_workload(wl));
-    let mut cache = CandCache::default();
     let mut since_improvement = 0usize;
     let mut samples = 0usize;
     while samples < cfg.max_samples && since_improvement < cfg.victory {
         samples += 1;
-        let m = sample(acc, wl, &mut rng, &mut cache);
-        if consider(evaluate(acc, wl, &m), &mut best) {
+        let m = ctx.sample(&mut rng);
+        if consider(&ctx, &m, &mut best, &mut stats) {
             since_improvement = 0;
         } else {
             since_improvement += 1;
         }
     }
+    stats.samples = samples;
 
-    best.map(|(_, c)| c)
-        .expect("streaming fallback mapping must be valid")
+    let (_, m, n) = best.expect("streaming fallback mapping must be valid");
+    let cost = LayerCost {
+        latency_s: n.latency_s,
+        energy_j: n.energy_j,
+        utilization: n.utilization,
+        macs: ctx.macs,
+        dram_bytes: (n.dram_words as f64 * ctx.eb) as u64,
+        mapping_desc: m.describe(acc),
+    };
+    (cost, stats)
 }
 
 /// Stable per-workload RNG stream so layer costs don't depend on
@@ -452,6 +694,291 @@ fn hash_workload(wl: &ConvWorkload) -> u64 {
     h
 }
 
+pub mod reference {
+    //! The pre-optimization straight-line kernel, preserved verbatim as
+    //! the equivalence oracle for the bound-pruned zero-allocation kernel
+    //! (`tests/mapper_equivalence.rs` asserts bit-identical winners) and
+    //! as the baseline in `benches/mapper.rs`. It allocates per sample
+    //! and fully evaluates every candidate — never use it on a hot path.
+
+    use super::*;
+
+    /// Evaluate one mapping. Returns `None` if it violates a capacity
+    /// constraint (pruning).
+    pub fn evaluate(acc: &Accelerator, wl: &ConvWorkload, m: &Mapping) -> Option<LayerCost> {
+        let eb = acc.elem_bytes();
+
+        // Cumulative tile extents.
+        let mut arr_tile = [0usize; 6]; // rf × spatial (data across the array)
+        let mut glb_tile = [0usize; 6];
+        for d in DIMS {
+            let i = d.idx();
+            arr_tile[i] = m.rf[i] * m.spatial(acc, d);
+            glb_tile[i] = arr_tile[i] * m.glb[i];
+        }
+
+        // --- capacity constraints ---------------------------------------
+        let rf_fp: f64 = DATASPACES
+            .iter()
+            .map(|&ds| wl.footprint(ds, &m.rf) as f64)
+            .sum::<f64>()
+            * eb;
+        if rf_fp > acc.rf_bytes as f64 {
+            return None;
+        }
+        let glb_fp: f64 = DATASPACES
+            .iter()
+            .map(|&ds| wl.footprint(ds, &glb_tile) as f64)
+            .sum::<f64>()
+            * eb;
+        if glb_fp > acc.glb_bytes as f64 {
+            return None;
+        }
+        // Spatial bounds.
+        if m.sp_row[0] * m.sp_row[1] > acc.pe_rows || m.sp_col[0] * m.sp_col[1] > acc.pe_cols {
+            return None;
+        }
+
+        // --- loop structures ---------------------------------------------
+        let glb_loops: Vec<(Dim, usize)> =
+            acc.dataflow.glb_order.iter().map(|&d| (d, m.glb[d.idx()])).collect();
+        let dram_loops: Vec<(Dim, usize)> =
+            acc.dataflow.dram_order.iter().map(|&d| (d, m.dram[d.idx()])).collect();
+        let above_rf: Vec<(Dim, usize)> =
+            dram_loops.iter().chain(glb_loops.iter()).copied().collect();
+
+        // Reduction split above a level forces psum read-modify-write.
+        let red_above_rf = [Dim::C, Dim::R, Dim::S]
+            .iter()
+            .any(|d| m.glb[d.idx()] > 1 || m.dram[d.idx()] > 1);
+        let red_above_glb =
+            [Dim::C, Dim::R, Dim::S].iter().any(|d| m.dram[d.idx()] > 1);
+
+        // --- traffic -------------------------------------------------------
+        let groups = wl.groups as u64;
+        let mut glb_words = 0u64; // unique words read from GLB (multicast once)
+        let mut noc_words = 0u64; // word-deliveries into PEs
+        let mut dram_words = 0u64;
+        for &ds in &DATASPACES {
+            let refills_rf = reloads(&above_rf, ds);
+            let arr_fp = wl.footprint(ds, &arr_tile);
+            let out_rw = |base: u64, red: bool| if red { base * 2 } else { base };
+            let mut g_traffic = arr_fp * refills_rf;
+            if ds == Dataspace::Outputs {
+                g_traffic = out_rw(g_traffic, red_above_rf);
+            }
+            glb_words += g_traffic;
+            // Spatial replication across ds-irrelevant spatial dims: each
+            // copy is one NoC delivery (multicast still traverses the wires).
+            let copies: u64 = DIMS
+                .iter()
+                .filter(|d| !ds.relevant(**d))
+                .map(|&d| m.spatial(acc, d) as u64)
+                .product();
+            noc_words += g_traffic * copies;
+
+            let refills_glb = reloads(&dram_loops, ds);
+            let glb_fp_ds = wl.footprint(ds, &glb_tile);
+            let mut d_traffic = glb_fp_ds * refills_glb;
+            if ds == Dataspace::Outputs {
+                d_traffic = out_rw(d_traffic, red_above_glb);
+            }
+            // Floor: every element is touched at least once.
+            d_traffic = d_traffic.max(wl.total_footprint(ds));
+            dram_words += d_traffic;
+        }
+        glb_words *= groups;
+        noc_words *= groups;
+        dram_words *= groups;
+
+        // --- cycles --------------------------------------------------------
+        let temporal: u64 = DIMS
+            .iter()
+            .map(|&d| (m.rf[d.idx()] * m.glb[d.idx()] * m.dram[d.idx()]) as u64)
+            .product();
+        let compute_cycles = temporal * groups;
+        let dram_cycles = dram_words as f64 * eb / acc.dram_bw;
+        let glb_cycles = glb_words as f64 * eb / acc.glb_bw;
+        let latency_cycles = (compute_cycles as f64).max(dram_cycles).max(glb_cycles);
+        let latency_s = latency_cycles / acc.clock_hz;
+
+        // --- energy --------------------------------------------------------
+        let macs = wl.macs();
+        let e = &acc.energy;
+        let energy_pj = macs as f64 * e.mac_pj
+            + 4.0 * macs as f64 * e.rf_pj
+            + noc_words as f64 * e.noc_pj
+            + glb_words as f64 * e.glb_pj
+            + dram_words as f64 * e.dram_pj;
+        let energy_j = energy_pj * PJ + e.static_w * latency_s;
+
+        let utilization = macs as f64 / (latency_cycles * acc.num_pes() as f64);
+
+        Some(LayerCost {
+            latency_s,
+            energy_j,
+            utilization,
+            macs,
+            dram_bytes: (dram_words as f64 * eb) as u64,
+            mapping_desc: m.describe(acc),
+        })
+    }
+
+    /// Largest candidate factor of `n` that is ≤ `cap`.
+    fn max_factor_leq(n: usize, cap: usize) -> usize {
+        candidates(n).into_iter().filter(|&f| f <= cap).max().unwrap_or(1)
+    }
+
+    /// Deterministic heuristic seed (see the fast kernel's doc).
+    fn heuristic_seed(acc: &Accelerator, wl: &ConvWorkload, glb_share: usize) -> Mapping {
+        let df = &acc.dataflow;
+        let mut m = Mapping {
+            rf: [1; 6],
+            sp_row: [1, 1],
+            sp_col: [1, 1],
+            glb: [1; 6],
+            dram: [1; 6],
+        };
+        // Spatial: primary dim takes as much as possible, secondary fills.
+        m.sp_row[0] = max_factor_leq(wl.bound(df.row_dims[0]), acc.pe_rows);
+        m.sp_row[1] = if df.row_dims[1] != df.row_dims[0] {
+            max_factor_leq(wl.bound(df.row_dims[1]), acc.pe_rows / m.sp_row[0])
+        } else {
+            1
+        };
+        m.sp_col[0] = max_factor_leq(wl.bound(df.col_dims[0]), acc.pe_cols);
+        m.sp_col[1] = if df.col_dims[1] != df.col_dims[0] {
+            max_factor_leq(wl.bound(df.col_dims[1]), acc.pe_cols / m.sp_col[0])
+        } else {
+            1
+        };
+        // Temporal: split remainder between GLB and DRAM, giving the GLB a
+        // `1/glb_share` slice per dim (share 1 = everything at GLB).
+        for d in DIMS {
+            let i = d.idx();
+            let rem = wl.bound(d).div_ceil(m.spatial(acc, d));
+            let g = max_factor_leq(rem, (rem / glb_share).max(1));
+            m.glb[i] = g;
+            m.dram[i] = rem.div_ceil(g);
+        }
+        m
+    }
+
+    /// Random mapping sample.
+    fn sample(
+        acc: &Accelerator,
+        wl: &ConvWorkload,
+        rng: &mut Pcg32,
+        cache: &mut CandCache,
+    ) -> Mapping {
+        let df = &acc.dataflow;
+        let mut m = Mapping {
+            rf: [1; 6],
+            sp_row: [1, 1],
+            sp_col: [1, 1],
+            glb: [1; 6],
+            dram: [1; 6],
+        };
+        let mut pick = |rng: &mut Pcg32, n: usize, cap: usize, bias_max: bool| -> usize {
+            let cands = cache.get(n);
+            // Candidates are sorted ascending: binary-search the cap.
+            let usable = &cands[..cands.partition_point(|&f| f <= cap)];
+            if usable.is_empty() {
+                return 1;
+            }
+            if bias_max && rng.gen_bool(0.5) {
+                *usable.last().unwrap()
+            } else {
+                *rng.choose(usable)
+            }
+        };
+        m.sp_row[0] = pick(rng, wl.bound(df.row_dims[0]), acc.pe_rows, true);
+        if df.row_dims[1] != df.row_dims[0] {
+            m.sp_row[1] = pick(rng, wl.bound(df.row_dims[1]), acc.pe_rows / m.sp_row[0], true);
+        }
+        m.sp_col[0] = pick(rng, wl.bound(df.col_dims[0]), acc.pe_cols, true);
+        if df.col_dims[1] != df.col_dims[0] {
+            m.sp_col[1] = pick(rng, wl.bound(df.col_dims[1]), acc.pe_cols / m.sp_col[0], true);
+        }
+        for d in DIMS {
+            let i = d.idx();
+            let rem = wl.bound(d).div_ceil(m.spatial(acc, d));
+            m.rf[i] = pick(rng, rem, rem, false);
+            let rem2 = rem.div_ceil(m.rf[i]);
+            m.glb[i] = pick(rng, rem2, rem2, false);
+            m.dram[i] = rem2.div_ceil(m.glb[i]);
+        }
+        m
+    }
+
+    /// Straight-line search loop (same seeds, same RNG stream, full
+    /// evaluation of every candidate).
+    pub fn map_layer(acc: &Accelerator, wl: &ConvWorkload, cfg: &SearchCfg) -> LayerCost {
+        map_layer_with_stats(acc, wl, cfg).0
+    }
+
+    /// [`map_layer`] plus the sample count (for samples/s benches).
+    pub fn map_layer_with_stats(
+        acc: &Accelerator,
+        wl: &ConvWorkload,
+        cfg: &SearchCfg,
+    ) -> (LayerCost, MapStats) {
+        let mut best: Option<(f64, LayerCost)> = None;
+        let consider = |cost: Option<LayerCost>, best: &mut Option<(f64, LayerCost)>| -> bool {
+            if let Some(c) = cost {
+                let obj = c.objective(cfg.objective);
+                let improved = match best {
+                    None => true,
+                    Some((b, _)) => obj < *b,
+                };
+                if improved {
+                    *best = Some((obj, c));
+                    return true;
+                }
+            }
+            false
+        };
+
+        // Deterministic seeds: all-GLB, half-GLB, quarter-GLB variants of
+        // the max-spatial heuristic, plus the trivial streaming mapping.
+        for share in [1usize, 2, 4, 8] {
+            let m = heuristic_seed(acc, wl, share);
+            consider(evaluate(acc, wl, &m), &mut best);
+        }
+        {
+            // Minimal spatial use keeps it valid even on tiny arrays.
+            let stream = Mapping {
+                rf: [1; 6],
+                sp_row: [1, 1],
+                sp_col: [1, 1],
+                glb: [1; 6],
+                dram: wl.bounds,
+            };
+            consider(evaluate(acc, wl, &stream), &mut best);
+        }
+
+        // Pruned random search with victory condition.
+        let mut rng = Pcg32::new(cfg.seed, hash_workload(wl));
+        let mut cache = CandCache::default();
+        let mut since_improvement = 0usize;
+        let mut samples = 0usize;
+        while samples < cfg.max_samples && since_improvement < cfg.victory {
+            samples += 1;
+            let m = sample(acc, wl, &mut rng, &mut cache);
+            if consider(evaluate(acc, wl, &m), &mut best) {
+                since_improvement = 0;
+            } else {
+                since_improvement += 1;
+            }
+        }
+
+        let cost = best
+            .map(|(_, c)| c)
+            .expect("streaming fallback mapping must be valid");
+        (cost, MapStats { samples, pruned: 0 })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -469,6 +996,19 @@ mod tests {
         assert_eq!(candidates(6), vec![1, 2, 3, 6]);
         assert_eq!(candidates(7), vec![1, 2, 3, 4, 7]);
         assert_eq!(candidates(1), vec![1]);
+    }
+
+    #[test]
+    fn cand_cache_max_leq_matches_filter_max() {
+        let mut c = CandCache::default();
+        for n in [1usize, 6, 7, 12, 112, 224] {
+            for cap in [1usize, 2, 5, 16, 1000] {
+                let expect =
+                    candidates(n).into_iter().filter(|&f| f <= cap).max().unwrap_or(1);
+                assert_eq!(c.max_leq(n, cap), expect, "n={n} cap={cap}");
+            }
+        }
+        assert_eq!(c.max_leq(0, 10), 1);
     }
 
     #[test]
@@ -520,7 +1060,7 @@ mod tests {
                 glb: [1; 6],
                 dram: w.bounds,
             };
-            evaluate(&acc, &w, &m).unwrap()
+            reference::evaluate(&acc, &w, &m).unwrap()
         };
         let c = map_layer(&acc, &w, &SearchCfg::default());
         assert!(
@@ -577,5 +1117,64 @@ mod tests {
         assert!(
             full.latency_s * full.energy_j <= c.latency_s * c.energy_j * 1.0001
         );
+    }
+
+    #[test]
+    fn lower_bound_never_exceeds_true_objective() {
+        // The pruning contract: for every sampled mapping and objective,
+        // bound ≤ fully-evaluated objective (in f64, not just in ℝ).
+        for objective in [Objective::Latency, Objective::Energy, Objective::Edp] {
+            for (model, layer) in
+                [("resnet50", "Conv_0"), ("vgg16", "Conv_5"), ("efficientnet_b0", "Conv_1")]
+            {
+                let w = wl(model, layer);
+                for acc in [presets::eyeriss_like(), presets::simba_like()] {
+                    let mut ctx = MapperCtx::new(&acc, &w, objective);
+                    let mut rng = Pcg32::new(7, hash_workload(&w));
+                    for _ in 0..200 {
+                        let m = ctx.sample(&mut rng);
+                        let lb = ctx.objective_lower_bound(&m);
+                        if let Some((obj, _)) = ctx.evaluate(&m) {
+                            assert!(
+                                lb <= obj,
+                                "bound {lb} > obj {obj} ({model}/{layer} {} {objective:?})",
+                                acc.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_kernel_matches_reference_smoke() {
+        // Full property coverage lives in tests/mapper_equivalence.rs;
+        // this is the in-module smoke check.
+        let cfg = SearchCfg { victory: 30, max_samples: 400, ..Default::default() };
+        for (model, layer) in [("resnet50", "Conv_0"), ("vgg16", "Conv_5")] {
+            let w = wl(model, layer);
+            for acc in [presets::eyeriss_like(), presets::simba_like()] {
+                let (a, sa) = map_layer_with_stats(&acc, &w, &cfg);
+                let (b, sb) = reference::map_layer_with_stats(&acc, &w, &cfg);
+                assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+                assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+                assert_eq!(a.utilization.to_bits(), b.utilization.to_bits());
+                assert_eq!(a.dram_bytes, b.dram_bytes);
+                assert_eq!(a.mapping_desc, b.mapping_desc);
+                assert_eq!(sa.samples, sb.samples, "RNG streams diverged");
+                assert!(sa.pruned > 0, "bound prune never fired on {model}/{layer}");
+            }
+        }
+    }
+
+    #[test]
+    fn search_cfg_fingerprint_tracks_fields() {
+        let base = SearchCfg::default();
+        assert_eq!(base.fingerprint(), SearchCfg::default().fingerprint());
+        let v = SearchCfg { victory: 99, ..Default::default() };
+        assert_ne!(base.fingerprint(), v.fingerprint());
+        let o = SearchCfg { objective: Objective::Latency, ..Default::default() };
+        assert_ne!(base.fingerprint(), o.fingerprint());
     }
 }

@@ -10,12 +10,23 @@
 //!
 //! Concurrency: [`CostCache`] is a sharded concurrent map shared across
 //! an entire run — across threads, models and platform pairs (the key
-//! embeds the accelerator name plus the structural layer signature, so
-//! identical shapes from different models share one mapper run).
+//! embeds the [`Accelerator::fingerprint`] plus the structural layer
+//! signature, so identical shapes from different models share one mapper
+//! run and overridden presets that merely share a *name* never alias).
 //! [`HwEvaluator`] is `Send + Sync`; [`map_layer`](mapper::map_layer) is
 //! deterministic per workload (its RNG stream is keyed by the workload,
 //! not by evaluation order), so concurrent evaluation is bit-identical
 //! to serial.
+//!
+//! Persistence: the cache serializes to a versioned JSON file
+//! (`costcache_v1.json` under `--cache-dir` / `SystemConfig::cache_dir`)
+//! so repeated sweeps — fig2/table2/report regeneration, NSGA-II
+//! restarts — skip the mapper entirely. The file records
+//! [`COST_CACHE_VERSION`] and the [`SearchCfg::fingerprint`] it was
+//! produced under; [`CostCache::load_from`] silently ignores missing,
+//! corrupt, or mismatched files (an ignored cache only costs a re-run,
+//! never correctness). Costs round-trip bit-exactly: the JSON writer
+//! emits shortest-roundtrip f64 literals.
 
 pub mod arch;
 pub mod energy;
@@ -29,11 +40,14 @@ pub use mapper::{LayerCost, Objective, SearchCfg};
 pub use workload::{ConvWorkload, Dataspace, Dim};
 
 use crate::graph::{Graph, Node, NodeId};
+use crate::util::json::{obj, Json};
 use crate::util::parallel::par_map;
+use std::borrow::Cow;
 use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::ops::Range;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Aggregate cost of a schedule segment on one accelerator (sequential
@@ -55,22 +69,28 @@ impl SegmentCost {
     }
 }
 
-/// Cache key: accelerator name + structural layer signature.
-#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+/// Cache key: accelerator fingerprint + structural layer signature.
+/// The vector op name is a `Cow` so in-memory keys borrow the
+/// `&'static` op table (no allocation on the lookup path) while
+/// deserialized keys own their strings.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 enum CostKey {
-    Mac(String, [usize; 6], usize, (usize, usize)),
-    Vector(String, &'static str, usize, usize, u64),
+    Mac(u64, [usize; 6], usize, (usize, usize)),
+    Vector(u64, Cow<'static, str>, usize, usize, u64),
 }
 
-fn cost_key(acc: &Accelerator, g: &Graph, node: &Node) -> CostKey {
+/// `acc_fp` is [`Accelerator::fingerprint`], hoisted by the caller —
+/// it is a pure function of the accelerator, so the schedule-level
+/// entry points compute it once instead of once per layer lookup.
+fn cost_key(acc_fp: u64, g: &Graph, node: &Node) -> CostKey {
     match ConvWorkload::from_node(g, node) {
         Some(wl) => {
             let (bounds, groups, stride) = wl.signature();
-            CostKey::Mac(acc.name.clone(), bounds, groups, stride)
+            CostKey::Mac(acc_fp, bounds, groups, stride)
         }
         None => CostKey::Vector(
-            acc.name.clone(),
-            node.kind.op_name(),
+            acc_fp,
+            Cow::Borrowed(node.kind.op_name()),
             node.fmap_in(g),
             node.fmap_out(),
             node.ops,
@@ -80,6 +100,30 @@ fn cost_key(acc: &Accelerator, g: &Graph, node: &Node) -> CostKey {
 
 const CACHE_SHARDS: usize = 16;
 
+/// Format version of the persisted cache file; bump whenever the cost
+/// model, the key structure, or `util::hash` changes meaning.
+pub const COST_CACHE_VERSION: u64 = 1;
+
+/// File name of the persisted cache inside a `--cache-dir` directory.
+pub const COST_CACHE_FILE: &str = "costcache_v1.json";
+
+/// Why [`CostCache::load_from`] did or did not populate the cache. All
+/// non-`Loaded` outcomes yield an empty cache and are *not* errors:
+/// a stale or corrupt file only costs a re-run, never correctness.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CacheLoad {
+    /// No cache file at the given directory.
+    Missing,
+    /// File exists but is unreadable or not the expected JSON shape.
+    Corrupt,
+    /// File was written by a different `COST_CACHE_VERSION`.
+    VersionMismatch,
+    /// File was produced under different mapper-search settings.
+    SearchMismatch,
+    /// Entries loaded.
+    Loaded(usize),
+}
+
 /// Sharded concurrent layer-cost cache, shared across a whole run via
 /// `Arc`. Sharding keeps lock hold times to a single `HashMap` probe and
 /// spreads contention across independent mutexes; values are immutable
@@ -88,11 +132,17 @@ const CACHE_SHARDS: usize = 16;
 /// write, the cache content is the same.
 pub struct CostCache {
     shards: Vec<Mutex<HashMap<CostKey, LayerCost>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
 }
 
 impl CostCache {
     pub fn new() -> Self {
-        Self { shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+        Self {
+            shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
     }
 
     fn shard(&self, key: &CostKey) -> &Mutex<HashMap<CostKey, LayerCost>> {
@@ -102,7 +152,12 @@ impl CostCache {
     }
 
     fn get(&self, key: &CostKey) -> Option<LayerCost> {
-        self.shard(key).lock().unwrap().get(key).cloned()
+        let found = self.shard(key).lock().unwrap().get(key).cloned();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
     }
 
     fn insert(&self, key: CostKey, cost: LayerCost) {
@@ -116,6 +171,169 @@ impl CostCache {
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found nothing (each triggers one layer evaluation;
+    /// a fully warm run — e.g. after `load_from` — reports 0).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    // ---- persistence ---------------------------------------------------
+
+    /// Serialize every entry (sorted by key, so output is deterministic
+    /// regardless of shard/hash iteration order).
+    pub fn to_json(&self, search: &SearchCfg) -> Json {
+        let mut pairs: Vec<(CostKey, LayerCost)> = Vec::with_capacity(self.len());
+        for shard in &self.shards {
+            let map = shard.lock().unwrap();
+            pairs.extend(map.iter().map(|(k, v)| (k.clone(), v.clone())));
+        }
+        pairs.sort_by(|a, b| a.0.cmp(&b.0));
+        let entries: Vec<Json> = pairs
+            .into_iter()
+            .map(|(key, c)| {
+                let mut fields = match key {
+                    CostKey::Mac(acc, bounds, groups, stride) => vec![
+                        ("kind", Json::from("mac")),
+                        ("acc", Json::from(format!("{acc:016x}"))),
+                        ("bounds", Json::from(bounds.to_vec())),
+                        ("groups", Json::from(groups)),
+                        ("stride", Json::from(vec![stride.0, stride.1])),
+                    ],
+                    CostKey::Vector(acc, op, fin, fout, ops) => vec![
+                        ("kind", Json::from("vector")),
+                        ("acc", Json::from(format!("{acc:016x}"))),
+                        ("op", Json::from(op.into_owned())),
+                        ("fmap_in", Json::from(fin)),
+                        ("fmap_out", Json::from(fout)),
+                        ("ops", Json::from(ops)),
+                    ],
+                };
+                fields.extend([
+                    ("latency_s", Json::from(c.latency_s)),
+                    ("energy_j", Json::from(c.energy_j)),
+                    ("utilization", Json::from(c.utilization)),
+                    ("macs", Json::from(c.macs)),
+                    ("dram_bytes", Json::from(c.dram_bytes)),
+                    ("mapping", Json::from(c.mapping_desc)),
+                ]);
+                obj(fields)
+            })
+            .collect();
+        obj(vec![
+            ("version", Json::from(COST_CACHE_VERSION)),
+            ("search_fingerprint", Json::from(format!("{:016x}", search.fingerprint()))),
+            // Human-readable echo of the settings (informational only;
+            // the fingerprint above is what load_from checks).
+            (
+                "search",
+                obj(vec![
+                    ("victory", Json::from(search.victory)),
+                    ("max_samples", Json::from(search.max_samples)),
+                    ("seed", Json::from(search.seed)),
+                ]),
+            ),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Rebuild a cache from [`Self::to_json`] output; `Err` says why the
+    /// document was rejected (never panics on foreign input).
+    pub fn from_json(doc: &Json, search: &SearchCfg) -> Result<CostCache, CacheLoad> {
+        if doc.get("version").as_u64() != Some(COST_CACHE_VERSION) {
+            return Err(CacheLoad::VersionMismatch);
+        }
+        let expect_fp = format!("{:016x}", search.fingerprint());
+        if doc.get("search_fingerprint").as_str() != Some(expect_fp.as_str()) {
+            return Err(CacheLoad::SearchMismatch);
+        }
+        let entries = doc.get("entries").as_arr().ok_or(CacheLoad::Corrupt)?;
+        let cache = CostCache::new();
+        for e in entries {
+            let acc = e
+                .get("acc")
+                .as_str()
+                .and_then(|s| u64::from_str_radix(s, 16).ok())
+                .ok_or(CacheLoad::Corrupt)?;
+            let key = match e.get("kind").as_str() {
+                Some("mac") => {
+                    let barr = e.get("bounds").as_arr().ok_or(CacheLoad::Corrupt)?;
+                    let bvec: Vec<usize> = barr
+                        .iter()
+                        .map(|b| b.as_usize().ok_or(CacheLoad::Corrupt))
+                        .collect::<Result<_, _>>()?;
+                    let bounds: [usize; 6] =
+                        bvec.try_into().map_err(|_| CacheLoad::Corrupt)?;
+                    let sarr = e.get("stride").as_arr().ok_or(CacheLoad::Corrupt)?;
+                    let (s0, s1) = match sarr {
+                        [a, b] => (
+                            a.as_usize().ok_or(CacheLoad::Corrupt)?,
+                            b.as_usize().ok_or(CacheLoad::Corrupt)?,
+                        ),
+                        _ => return Err(CacheLoad::Corrupt),
+                    };
+                    CostKey::Mac(
+                        acc,
+                        bounds,
+                        e.get("groups").as_usize().ok_or(CacheLoad::Corrupt)?,
+                        (s0, s1),
+                    )
+                }
+                Some("vector") => CostKey::Vector(
+                    acc,
+                    Cow::Owned(e.get("op").as_str().ok_or(CacheLoad::Corrupt)?.to_string()),
+                    e.get("fmap_in").as_usize().ok_or(CacheLoad::Corrupt)?,
+                    e.get("fmap_out").as_usize().ok_or(CacheLoad::Corrupt)?,
+                    e.get("ops").as_u64().ok_or(CacheLoad::Corrupt)?,
+                ),
+                _ => return Err(CacheLoad::Corrupt),
+            };
+            let cost = LayerCost {
+                latency_s: e.get("latency_s").as_f64().ok_or(CacheLoad::Corrupt)?,
+                energy_j: e.get("energy_j").as_f64().ok_or(CacheLoad::Corrupt)?,
+                utilization: e.get("utilization").as_f64().ok_or(CacheLoad::Corrupt)?,
+                macs: e.get("macs").as_u64().ok_or(CacheLoad::Corrupt)?,
+                dram_bytes: e.get("dram_bytes").as_u64().ok_or(CacheLoad::Corrupt)?,
+                mapping_desc: e.get("mapping").as_str().ok_or(CacheLoad::Corrupt)?.to_string(),
+            };
+            cache.insert(key, cost);
+        }
+        Ok(cache)
+    }
+
+    /// Write the cache to `<dir>/costcache_v1.json` (creating `dir`).
+    pub fn save_to(&self, dir: &Path, search: &SearchCfg) -> std::io::Result<PathBuf> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(COST_CACHE_FILE);
+        std::fs::write(&path, self.to_json(search).pretty() + "\n")?;
+        Ok(path)
+    }
+
+    /// Load `<dir>/costcache_v1.json`. Never fails: missing, corrupt,
+    /// or mismatched files yield an empty cache plus the reason.
+    pub fn load_from(dir: &Path, search: &SearchCfg) -> (CostCache, CacheLoad) {
+        let path = dir.join(COST_CACHE_FILE);
+        let text = match std::fs::read_to_string(&path) {
+            Ok(t) => t,
+            Err(_) => return (CostCache::new(), CacheLoad::Missing),
+        };
+        let doc = match Json::parse(&text) {
+            Ok(d) => d,
+            Err(_) => return (CostCache::new(), CacheLoad::Corrupt),
+        };
+        match Self::from_json(&doc, search) {
+            Ok(cache) => {
+                let n = cache.len();
+                (cache, CacheLoad::Loaded(n))
+            }
+            Err(why) => (CostCache::new(), why),
+        }
     }
 }
 
@@ -146,7 +364,19 @@ impl HwEvaluator {
 
     /// Cost of one layer on one accelerator (cached).
     pub fn layer_cost(&self, acc: &Accelerator, g: &Graph, node: &Node) -> LayerCost {
-        let key = cost_key(acc, g, node);
+        self.layer_cost_keyed(acc.fingerprint(), acc, g, node)
+    }
+
+    /// [`Self::layer_cost`] with the accelerator fingerprint hoisted —
+    /// the schedule-level paths compute it once, not once per lookup.
+    fn layer_cost_keyed(
+        &self,
+        acc_fp: u64,
+        acc: &Accelerator,
+        g: &Graph,
+        node: &Node,
+    ) -> LayerCost {
+        let key = cost_key(acc_fp, g, node);
         if let Some(c) = self.cache.get(&key) {
             return c;
         }
@@ -163,7 +393,8 @@ impl HwEvaluator {
 
     /// Per-layer costs for a whole schedule, in schedule order.
     pub fn schedule_costs(&self, acc: &Accelerator, g: &Graph, order: &[NodeId]) -> Vec<LayerCost> {
-        order.iter().map(|&id| self.layer_cost(acc, g, g.node(id))).collect()
+        let acc_fp = acc.fingerprint();
+        order.iter().map(|&id| self.layer_cost_keyed(acc_fp, acc, g, g.node(id))).collect()
     }
 
     /// [`Self::schedule_costs`] with the mapper runs for *distinct* layer
@@ -179,13 +410,14 @@ impl HwEvaluator {
         jobs: usize,
     ) -> Vec<LayerCost> {
         if jobs > 1 {
+            let acc_fp = acc.fingerprint();
             let mut seen = HashSet::new();
             let reps: Vec<NodeId> = order
                 .iter()
                 .copied()
-                .filter(|&id| seen.insert(cost_key(acc, g, g.node(id))))
+                .filter(|&id| seen.insert(cost_key(acc_fp, g, g.node(id))))
                 .collect();
-            par_map(jobs, &reps, |&id| self.layer_cost(acc, g, g.node(id)));
+            par_map(jobs, &reps, |&id| self.layer_cost_keyed(acc_fp, acc, g, g.node(id)));
         }
         self.schedule_costs(acc, g, order)
     }
@@ -198,9 +430,10 @@ impl HwEvaluator {
         order: &[NodeId],
         range: Range<usize>,
     ) -> SegmentCost {
+        let acc_fp = acc.fingerprint();
         let mut total = SegmentCost::default();
         for p in range {
-            let c = self.layer_cost(acc, g, g.node(order[p]));
+            let c = self.layer_cost_keyed(acc_fp, acc, g, g.node(order[p]));
             total.add(&c);
         }
         total
@@ -318,6 +551,68 @@ mod tests {
             assert_eq!(a.dram_bytes, b.dram_bytes);
             assert_eq!(a.mapping_desc, b.mapping_desc);
         }
+    }
+
+    #[test]
+    fn cache_json_roundtrip_is_bit_exact() {
+        // Populate with both MAC and vector entries, round-trip through
+        // the JSON text form, and compare the serialized forms (sorted,
+        // so string equality == entry-wise bit equality).
+        let g = zoo::tiny_cnn(10);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let cfg = SearchCfg { victory: 5, max_samples: 50, ..Default::default() };
+        let ev = HwEvaluator::new(cfg.clone());
+        for acc in [presets::eyeriss_like(), presets::simba_like()] {
+            ev.schedule_costs(&acc, &g, &order);
+        }
+        let cache = ev.cache();
+        assert!(!cache.is_empty());
+        let doc = cache.to_json(&cfg);
+        let text = doc.pretty();
+        let back = CostCache::from_json(&Json::parse(&text).unwrap(), &cfg)
+            .expect("own output must load");
+        assert_eq!(back.len(), cache.len());
+        assert_eq!(back.to_json(&cfg).pretty(), text, "roundtrip changed an entry");
+    }
+
+    #[test]
+    fn cache_load_rejects_version_and_search_mismatch() {
+        let cfg = SearchCfg { victory: 5, max_samples: 50, ..Default::default() };
+        let cache = CostCache::new();
+        let mut doc = cache.to_json(&cfg);
+        // Version bump -> rejected.
+        if let Json::Obj(o) = &mut doc {
+            o.insert("version".into(), Json::Num(999.0));
+        }
+        assert_eq!(
+            CostCache::from_json(&doc, &cfg).err(),
+            Some(CacheLoad::VersionMismatch)
+        );
+        // Different search settings -> rejected.
+        let doc = cache.to_json(&cfg);
+        let other = SearchCfg { victory: 6, max_samples: 50, ..Default::default() };
+        assert_eq!(
+            CostCache::from_json(&doc, &other).err(),
+            Some(CacheLoad::SearchMismatch)
+        );
+    }
+
+    #[test]
+    fn cache_counts_hits_and_misses() {
+        let g = zoo::tiny_cnn(10);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let acc = presets::eyeriss_like();
+        let cfg = SearchCfg { victory: 5, max_samples: 50, ..Default::default() };
+        let ev = HwEvaluator::new(cfg.clone());
+        ev.schedule_costs(&acc, &g, &order);
+        let cache = ev.cache();
+        assert!(cache.misses() > 0);
+        let miss_mark = cache.misses();
+        // A fully warm second pass adds hits only.
+        let second = HwEvaluator::with_cache(cfg, ev.cache());
+        second.schedule_costs(&acc, &g, &order);
+        assert_eq!(cache.misses(), miss_mark, "warm pass must not miss");
+        assert!(cache.hits() >= order.len() as u64);
     }
 
     #[test]

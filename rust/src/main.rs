@@ -11,9 +11,9 @@
 
 use partir::config::SystemConfig;
 use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
-use partir::explorer::{explore_two_platform, multi};
+use partir::explorer::{explore_two_platform_cached, multi};
 use partir::graph::topo::{topo_sort, TieBreak};
-use partir::hw::HwEvaluator;
+use partir::hw::{CacheLoad, CostCache, HwEvaluator};
 use partir::report;
 use partir::runtime::Manifest;
 use partir::util::cli::{Args, Command};
@@ -21,6 +21,7 @@ use partir::util::parallel::default_jobs;
 use partir::util::units::{fmt_count, fmt_energy_j, fmt_time_s};
 use partir::zoo;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 use std::time::Duration;
 
 fn main() {
@@ -101,7 +102,52 @@ fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
     } else if args.get("config").is_none() {
         sys.jobs = default_jobs();
     }
+    // --cache-dir beats the config file's `cache_dir`.
+    if let Some(dir) = args.get("cache-dir") {
+        sys.cache_dir = Some(PathBuf::from(dir));
+    }
     Ok(sys)
+}
+
+/// Open the persistent layer-cost cache named by `cache_dir` (empty
+/// in-memory cache when unset). Stale or unreadable files are reported
+/// and ignored — a cold cache only costs a re-run, never correctness.
+fn open_cache(sys: &SystemConfig) -> Arc<CostCache> {
+    let Some(dir) = &sys.cache_dir else {
+        return Arc::new(CostCache::new());
+    };
+    let (cache, status) = CostCache::load_from(dir, &sys.search);
+    match status {
+        CacheLoad::Loaded(n) => {
+            println!("cost cache: loaded {n} entries from {}", dir.display())
+        }
+        CacheLoad::Missing => {}
+        CacheLoad::Corrupt => eprintln!(
+            "cost cache: ignoring unreadable {} (starting cold)",
+            dir.join(partir::hw::COST_CACHE_FILE).display()
+        ),
+        CacheLoad::VersionMismatch => {
+            eprintln!("cost cache: ignoring {} (format version changed)", dir.display())
+        }
+        CacheLoad::SearchMismatch => eprintln!(
+            "cost cache: ignoring {} (produced under different search settings)",
+            dir.display()
+        ),
+    }
+    Arc::new(cache)
+}
+
+/// Persist the cache back to `cache_dir` (no-op when unset). Save
+/// failures are warnings: results have already been printed.
+fn persist_cache(sys: &SystemConfig, cache: &CostCache) {
+    if let Some(dir) = &sys.cache_dir {
+        match cache.save_to(dir, &sys.search) {
+            Ok(path) => {
+                println!("cost cache: saved {} entries to {}", cache.len(), path.display())
+            }
+            Err(e) => eprintln!("cost cache: save to {} failed: {e}", dir.display()),
+        }
+    }
 }
 
 /// `--jobs N` for subcommands without a config file (chain's built-in
@@ -144,6 +190,7 @@ fn explore_cmd() -> Command {
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write fig2-style CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
+        .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -155,7 +202,9 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         sys.platforms.len() == 2,
         "explore needs a 2-platform config; use `chain` for longer chains"
     );
-    let ex = explore_two_platform(&g, &sys);
+    let cache = open_cache(&sys);
+    let ex = explore_two_platform_cached(&g, &sys, Arc::clone(&cache));
+    persist_cache(&sys, &cache);
     print!("{}", report::render_exploration(&ex, &sys));
     if let Some((label, gain)) = report::throughput_gain(&ex) {
         println!("best pipelined throughput: {label} (+{gain:.1}% over best single platform)");
@@ -178,6 +227,7 @@ fn chain_cmd() -> Command {
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write Pareto-front CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
+        .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -198,10 +248,15 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
         if args.flag("qat") {
             sys.qat = true;
         }
+        if let Some(dir) = args.get("cache-dir") {
+            sys.cache_dir = Some(PathBuf::from(dir));
+        }
         sys.jobs = jobs_arg(args)?;
         sys
     };
-    let ex = multi::explore_chain(&g, &sys);
+    let cache = open_cache(&sys);
+    let ex = multi::explore_chain_cached(&g, &sys, Arc::clone(&cache));
+    persist_cache(&sys, &cache);
     print!("{}", report::render_exploration(&ex, &sys));
     let hist = multi::partition_histogram(&ex, sys.platforms.len());
     println!("\npartition histogram (Table II row): {hist:?}");
@@ -222,6 +277,7 @@ fn evaluate_cmd() -> Command {
         .opt("config", None, "system TOML")
         .opt("top", Some("15"), "show the N most expensive layers")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
+        .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .flag("fast", "smaller mapper search budget")
 }
 
@@ -230,10 +286,10 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
     let sys = load_sys(args)?;
     let order = topo_sort(&g, TieBreak::Deterministic);
     let top = args.get_usize("top").map_err(anyhow::Error::msg)?.unwrap_or(15);
-    // One evaluator for every platform: the cost cache is keyed by
-    // accelerator name, so sharing it is safe and reuses vector-layer
-    // entries where platforms coincide.
-    let ev = HwEvaluator::new(sys.search.clone());
+    // One evaluator for every platform: the cost cache is keyed by the
+    // accelerator fingerprint, so sharing it is safe and reuses entries
+    // wherever platforms coincide structurally.
+    let ev = HwEvaluator::with_cache(sys.search.clone(), open_cache(&sys));
     for p in &sys.platforms {
         let runs_before = ev.mapper_runs();
         let costs = ev.schedule_costs_par(&p.accelerator, &g, &order, sys.jobs);
@@ -268,6 +324,7 @@ fn cmd_evaluate(args: &Args) -> anyhow::Result<()> {
             );
         }
     }
+    persist_cache(&sys, &ev.cache());
     Ok(())
 }
 
@@ -371,10 +428,12 @@ fn report_cmd() -> Command {
     Command::new("report", "regenerate all paper figures/tables into a directory")
         .opt("out", Some("reports"), "output directory")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
+        .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .flag("fast", "smaller search budgets (CI smoke)")
 }
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.get("out").unwrap());
-    report::paper::generate_all(&out, args.flag("fast"), jobs_arg(args)?)
+    let cache_dir = args.get("cache-dir").map(PathBuf::from);
+    report::paper::generate_all(&out, args.flag("fast"), jobs_arg(args)?, cache_dir.as_deref())
 }

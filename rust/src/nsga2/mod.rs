@@ -20,6 +20,7 @@
 
 use crate::util::parallel::par_map;
 use crate::util::rng::Pcg32;
+use std::collections::{HashMap, HashSet};
 
 /// Evaluation of one candidate.
 #[derive(Debug, Clone, PartialEq)]
@@ -105,20 +106,62 @@ pub fn dominates(a: &Eval, b: &Eval) -> bool {
     }
 }
 
+/// Both domination directions in one scan: `Greater` if `a` dominates
+/// `b`, `Less` if `b` dominates `a`, `Equal` if incomparable. Agrees
+/// with [`dominates`] in both directions (tested) but costs one pass
+/// over the objectives instead of up to four.
+fn dom_cmp(a: &Eval, b: &Eval) -> std::cmp::Ordering {
+    use std::cmp::Ordering::*;
+    match (a.is_feasible(), b.is_feasible()) {
+        (true, false) => Greater,
+        (false, true) => Less,
+        (false, false) => {
+            if a.violation < b.violation {
+                Greater
+            } else if b.violation < a.violation {
+                Less
+            } else {
+                Equal
+            }
+        }
+        (true, true) => {
+            let (mut a_better, mut b_better) = (false, false);
+            for (x, y) in a.objectives.iter().zip(&b.objectives) {
+                if x < y {
+                    a_better = true;
+                } else if x > y {
+                    b_better = true;
+                }
+            }
+            match (a_better, b_better) {
+                (true, false) => Greater,
+                (false, true) => Less,
+                _ => Equal,
+            }
+        }
+    }
+}
+
 /// Fast non-dominated sort; returns fronts of indices (front 0 = best).
+/// Single pass over unordered pairs via [`dom_cmp`] — ~4× fewer
+/// objective scans than the naïve `dominates(i,j)`/`dominates(j,i)`
+/// double loop, with identical fronts (same contents, same order).
 pub fn non_dominated_sort(evals: &[Eval]) -> Vec<Vec<usize>> {
     let n = evals.len();
     let mut dominated_by: Vec<Vec<usize>> = vec![Vec::new(); n]; // i dominates these
     let mut counts = vec![0usize; n]; // number dominating i
     for i in 0..n {
-        for j in 0..n {
-            if i == j {
-                continue;
-            }
-            if dominates(&evals[i], &evals[j]) {
-                dominated_by[i].push(j);
-            } else if dominates(&evals[j], &evals[i]) {
-                counts[i] += 1;
+        for j in i + 1..n {
+            match dom_cmp(&evals[i], &evals[j]) {
+                std::cmp::Ordering::Greater => {
+                    dominated_by[i].push(j);
+                    counts[j] += 1;
+                }
+                std::cmp::Ordering::Less => {
+                    dominated_by[j].push(i);
+                    counts[i] += 1;
+                }
+                std::cmp::Ordering::Equal => {}
             }
         }
     }
@@ -256,16 +299,38 @@ fn rank_population(pop: &mut Vec<Individual>, keep: usize) {
 
 /// Evaluate a batch of genomes (in parallel for `jobs > 1`) and wrap
 /// them as unranked individuals, preserving genome order.
+///
+/// `memo` is the run-level genome→Eval cache: crossover/mutation
+/// regenerate the same genomes constantly (especially late in a
+/// converged run), and `Problem::evaluate` is pure, so each distinct
+/// genome is evaluated exactly once per `optimize` call — duplicates
+/// within a batch and across generations are free. Results are
+/// bit-identical to evaluating every genome afresh.
 fn evaluate_batch<P: Problem + Sync>(
     problem: &P,
     genomes: Vec<Vec<i64>>,
     jobs: usize,
+    memo: &mut HashMap<Vec<i64>, Eval>,
 ) -> Vec<Individual> {
-    let evals = par_map(jobs, &genomes, |vars| problem.evaluate(vars));
+    // Unique unseen genomes, in first-appearance order (deterministic).
+    let mut need: Vec<Vec<i64>> = Vec::new();
+    let mut queued: HashSet<&[i64]> = HashSet::new();
+    for g in &genomes {
+        if !memo.contains_key(g) && queued.insert(g.as_slice()) {
+            need.push(g.clone());
+        }
+    }
+    drop(queued);
+    let fresh = par_map(jobs, &need, |vars| problem.evaluate(vars));
+    for (vars, eval) in need.into_iter().zip(fresh) {
+        memo.insert(vars, eval);
+    }
     genomes
         .into_iter()
-        .zip(evals)
-        .map(|(vars, eval)| Individual { vars, eval, rank: 0, crowding: 0.0 })
+        .map(|vars| {
+            let eval = memo[&vars].clone();
+            Individual { vars, eval, rank: 0, crowding: 0.0 }
+        })
         .collect()
 }
 
@@ -282,9 +347,10 @@ pub fn optimize<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg) -> Vec<Solution>
 pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize) -> Vec<Solution> {
     assert!(cfg.population >= 4, "population too small");
     let mut rng = Pcg32::new(cfg.seed, 0x6e73_6761); // "nsga"
+    let mut memo: HashMap<Vec<i64>, Eval> = HashMap::new();
     let genomes: Vec<Vec<i64>> =
         (0..cfg.population).map(|_| random_genome(problem, &mut rng)).collect();
-    let mut pop = evaluate_batch(problem, genomes, jobs);
+    let mut pop = evaluate_batch(problem, genomes, jobs, &mut memo);
     rank_population(&mut pop, cfg.population);
 
     for _ in 0..cfg.generations {
@@ -294,7 +360,7 @@ pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize)
             let b = tournament(&pop, &mut rng);
             children.push(make_child(problem, &a.vars, &b.vars, cfg, &mut rng));
         }
-        let offspring = evaluate_batch(problem, children, jobs);
+        let offspring = evaluate_batch(problem, children, jobs, &mut memo);
         pop.extend(offspring);
         rank_population(&mut pop, cfg.population);
     }
@@ -431,6 +497,69 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn property_dom_cmp_agrees_with_dominates() {
+        use std::cmp::Ordering::*;
+        property("dom_cmp == (dominates, dominates)", 200, |rng| {
+            let gen_eval = |rng: &mut crate::util::rng::Pcg32| {
+                if Gen::f64_in(rng, 0.0, 1.0) < 0.2 {
+                    Eval::infeasible(2, Gen::f64_in(rng, 0.1, 5.0))
+                } else {
+                    // Small integer grid so ties/duplicates are common.
+                    Eval::feasible(vec![
+                        Gen::usize_in(rng, 0..4) as f64,
+                        Gen::usize_in(rng, 0..4) as f64,
+                    ])
+                }
+            };
+            let a = gen_eval(rng);
+            let b = gen_eval(rng);
+            let expect = match (dominates(&a, &b), dominates(&b, &a)) {
+                (true, false) => Greater,
+                (false, true) => Less,
+                (false, false) => Equal,
+                (true, true) => unreachable!("domination is asymmetric"),
+            };
+            assert_eq!(dom_cmp(&a, &b), expect, "a={a:?} b={b:?}");
+        });
+    }
+
+    #[test]
+    fn memo_skips_duplicate_genomes() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // A problem with a tiny genome space: duplicates are guaranteed,
+        // and the memo must collapse them to one evaluation each.
+        struct Counted(AtomicUsize);
+        impl Problem for Counted {
+            fn num_vars(&self) -> usize {
+                1
+            }
+            fn num_objectives(&self) -> usize {
+                2
+            }
+            fn bounds(&self, _: usize) -> (i64, i64) {
+                (0, 9)
+            }
+            fn evaluate(&self, v: &[i64]) -> Eval {
+                self.0.fetch_add(1, Ordering::Relaxed);
+                let x = v[0] as f64;
+                Eval::feasible(vec![x, 9.0 - x])
+            }
+        }
+        let p = Counted(AtomicUsize::new(0));
+        let cfg = Nsga2Cfg {
+            population: 20,
+            generations: 20,
+            crossover_p: 0.9,
+            mutation_p: 0.2,
+            seed: 3,
+        };
+        let front = optimize(&p, &cfg);
+        assert!(!front.is_empty());
+        let evals = p.0.load(Ordering::Relaxed);
+        assert!(evals <= 10, "10 distinct genomes but {evals} evaluations ran");
     }
 
     #[test]

@@ -19,9 +19,11 @@ use super::{fig2_csv, fig3_csv, table2_csv, table2_markdown, throughput_gain};
 use crate::config::SystemConfig;
 use crate::explorer::{explore_two_platform, multi, Exploration};
 use crate::graph::Graph;
+use crate::hw::{CacheLoad, CostCache};
 use crate::zoo;
 use anyhow::{Context, Result};
 use std::path::Path;
+use std::sync::Arc;
 
 /// Per-figure model → output-file mapping (paper subfigure labels).
 const FIG2_FILES: [(&str, &str); 6] = [
@@ -56,13 +58,24 @@ pub fn fig2_exploration(model: &str, fast: bool, jobs: usize) -> (Exploration, S
 /// Fig 2: all six CNN series, explored concurrently on a shared worker
 /// pool and layer-cost cache. Returns (model, headline throughput gain).
 pub fn fig2(out: &Path, fast: bool, jobs: usize) -> Result<Vec<(String, f64)>> {
+    fig2_with_cache(out, fast, jobs, &Arc::new(CostCache::new()))
+}
+
+/// [`fig2`] against an external layer-cost cache (shared with table2 /
+/// persisted under `--cache-dir`, so report re-runs skip the mapper).
+pub fn fig2_with_cache(
+    out: &Path,
+    fast: bool,
+    jobs: usize,
+    cache: &Arc<CostCache>,
+) -> Result<Vec<(String, f64)>> {
     std::fs::create_dir_all(out)?;
     let sys = fig2_system(fast, jobs);
     let graphs: Vec<Graph> = FIG2_FILES
         .iter()
         .map(|&(model, _)| zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}")))
         .collect();
-    let explorations = multi::explore_many(&graphs, &sys);
+    let explorations = multi::explore_many_cached(&graphs, &sys, Arc::clone(cache));
     let mut gains = Vec::new();
     for (&(model, file), ex) in FIG2_FILES.iter().zip(&explorations) {
         fig2_csv(ex)
@@ -101,15 +114,27 @@ pub fn fig3(out: &Path) -> Result<()> {
 /// Table II: 4-platform chain (EYR, EYR, SMB, SMB over GbE), Pareto over
 /// latency/energy/link-bandwidth, histogram of partition counts.
 pub fn table2(out: &Path, fast: bool, jobs: usize) -> Result<Vec<(String, Vec<usize>)>> {
+    table2_with_cache(out, fast, jobs, &Arc::new(CostCache::new()))
+}
+
+/// [`table2`] against an external layer-cost cache. The same two
+/// accelerator design points appear in fig2's platforms, so a shared
+/// cache means the chain DSE re-runs zero mapper searches.
+pub fn table2_with_cache(
+    out: &Path,
+    fast: bool,
+    jobs: usize,
+    cache: &Arc<CostCache>,
+) -> Result<Vec<(String, Vec<usize>)>> {
     std::fs::create_dir_all(out)?;
     let mut sys = SystemConfig::paper_four_platform();
     sys.jobs = jobs.max(1);
-    if fast {
-        sys.search.victory = 15;
-        sys.search.max_samples = 150;
-    }
+    // Same mapper-search settings as fig2, *structurally*: the cache
+    // shared across fig2/table2 (and persisted under one
+    // `search_fingerprint`) is only valid if the two never drift apart.
+    sys.search = fig2_system(fast, jobs).search;
     let graphs: Vec<Graph> = zoo::PAPER_MODELS.iter().map(|m| zoo::build(m).unwrap()).collect();
-    let explorations = multi::explore_chain_many(&graphs, &sys);
+    let explorations = multi::explore_chain_many_cached(&graphs, &sys, Arc::clone(cache));
     let mut rows = Vec::new();
     for (model, ex) in zoo::PAPER_MODELS.iter().zip(&explorations) {
         let hist = multi::partition_histogram(ex, sys.platforms.len());
@@ -121,12 +146,29 @@ pub fn table2(out: &Path, fast: bool, jobs: usize) -> Result<Vec<(String, Vec<us
     Ok(rows)
 }
 
-/// Everything (§V): Fig 2 a–f, Fig 3, Table II.
-pub fn generate_all(out: &Path, fast: bool, jobs: usize) -> Result<()> {
+/// Everything (§V): Fig 2 a–f, Fig 3, Table II. With `cache_dir`, the
+/// layer-cost cache is loaded before and saved after, so a repeated
+/// `partir report` re-runs zero mapper searches.
+pub fn generate_all(out: &Path, fast: bool, jobs: usize, cache_dir: Option<&Path>) -> Result<()> {
     let t0 = std::time::Instant::now();
-    fig2(out, fast, jobs)?;
+    let search = fig2_system(fast, jobs).search;
+    let cache = Arc::new(match cache_dir {
+        Some(dir) => {
+            let (cache, status) = CostCache::load_from(dir, &search);
+            if let CacheLoad::Loaded(n) = status {
+                println!("[report] cost cache: loaded {n} entries from {}", dir.display());
+            }
+            cache
+        }
+        None => CostCache::new(),
+    });
+    fig2_with_cache(out, fast, jobs, &cache)?;
     fig3(out)?;
-    table2(out, fast, jobs)?;
+    table2_with_cache(out, fast, jobs, &cache)?;
+    if let Some(dir) = cache_dir {
+        let path = cache.save_to(dir, &search)?;
+        println!("[report] cost cache: saved {} entries to {}", cache.len(), path.display());
+    }
     println!(
         "[report] all figures/tables regenerated into {} in {:.1}s",
         out.display(),

@@ -8,6 +8,10 @@
 //! count for hardware evaluation, candidate enumeration and NSGA-II.
 //! It defaults to all hardware threads and never changes results
 //! (parallel runs are bit-identical to `--jobs 1`; see `util::parallel`).
+//! The same subcommands register `--cache-dir <DIR>` — the persistent
+//! layer-cost cache location (`hw::CostCache::{load_from, save_to}`):
+//! repeated runs under identical search settings skip the mapper
+//! entirely, and stale/corrupt cache files are ignored, never fatal.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;

@@ -1,0 +1,108 @@
+//! Stable FNV-1a hashing for persisted cache keys and structural
+//! fingerprints.
+//!
+//! `std::collections::hash_map::DefaultHasher` is explicitly *not*
+//! guaranteed stable across Rust releases, so anything written to disk
+//! (the persistent layer-cost cache) must not depend on it. FNV-1a over
+//! 64-bit words is tiny, fast, and fixed forever; collisions are
+//! acceptable for fingerprinting (a collision merely aliases two cache
+//! keys, and the keyed payloads carry enough structure that real
+//! configurations never collide in practice).
+
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+pub const FNV_PRIME: u64 = 0x1000_0000_01b3;
+
+/// Incremental FNV-1a hasher over 64-bit words.
+#[derive(Debug, Clone)]
+pub struct Fnv64 {
+    state: u64,
+}
+
+impl Fnv64 {
+    pub fn new() -> Self {
+        Self { state: FNV_OFFSET }
+    }
+
+    pub fn write_u64(&mut self, v: u64) {
+        self.state ^= v;
+        self.state = self.state.wrapping_mul(FNV_PRIME);
+    }
+
+    pub fn write_usize(&mut self, v: usize) {
+        self.write_u64(v as u64);
+    }
+
+    /// Hash an `f64` by bit pattern (exact, including the sign of zero).
+    pub fn write_f64(&mut self, v: f64) {
+        self.write_u64(v.to_bits());
+    }
+
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        // Length prefix keeps ("ab","c") distinct from ("a","bc").
+        self.write_u64(bytes.len() as u64);
+        for &b in bytes {
+            self.write_u64(b as u64);
+        }
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.state
+    }
+}
+
+impl Default for Fnv64 {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stable_reference_values() {
+        // These values are part of the persisted cache-file contract:
+        // if they change, bump `hw::COST_CACHE_VERSION`.
+        let mut h = Fnv64::new();
+        h.write_u64(0);
+        assert_eq!(h.finish(), 0xaf63_bd4c_8601_b7df);
+        let mut h = Fnv64::new();
+        h.write_u64(0x1234_5678_9abc_def0);
+        h.write_u64(42);
+        assert_eq!(h.finish(), {
+            let mut s = FNV_OFFSET ^ 0x1234_5678_9abc_def0u64;
+            s = s.wrapping_mul(FNV_PRIME);
+            s ^= 42;
+            s.wrapping_mul(FNV_PRIME)
+        });
+    }
+
+    #[test]
+    fn order_and_length_sensitive() {
+        let mut a = Fnv64::new();
+        a.write_u64(1);
+        a.write_u64(2);
+        let mut b = Fnv64::new();
+        b.write_u64(2);
+        b.write_u64(1);
+        assert_ne!(a.finish(), b.finish());
+
+        let mut c = Fnv64::new();
+        c.write_bytes(b"ab");
+        c.write_bytes(b"c");
+        let mut d = Fnv64::new();
+        d.write_bytes(b"a");
+        d.write_bytes(b"bc");
+        assert_ne!(c.finish(), d.finish());
+    }
+
+    #[test]
+    fn f64_is_bit_exact() {
+        let mut a = Fnv64::new();
+        a.write_f64(0.0);
+        let mut b = Fnv64::new();
+        b.write_f64(-0.0);
+        assert_ne!(a.finish(), b.finish(), "sign of zero must distinguish");
+    }
+}

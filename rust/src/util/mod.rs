@@ -5,6 +5,7 @@
 
 pub mod cli;
 pub mod csv;
+pub mod hash;
 pub mod json;
 pub mod parallel;
 pub mod rng;

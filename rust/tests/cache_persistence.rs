@@ -1,0 +1,133 @@
+//! Acceptance gate for cost-cache persistence (PR 2 tentpole): a cache
+//! round-tripped through `--cache-dir` must make the second exploration
+//! run perform **zero** mapper searches while producing bit-identical
+//! fronts, and stale/corrupt cache files must be ignored, never fatal.
+
+use partir::config::SystemConfig;
+use partir::explorer::explore_two_platform_cached;
+use partir::hw::{CacheLoad, CostCache, SearchCfg, COST_CACHE_FILE};
+use partir::zoo;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("partir_cache_{tag}_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+    dir
+}
+
+fn quick_sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 10;
+    sys.search.max_samples = 100;
+    sys.jobs = 2;
+    sys
+}
+
+#[test]
+fn warm_explore_runs_zero_mapper_searches_and_matches_cold_front() {
+    let dir = tmpdir("roundtrip");
+    let g = zoo::squeezenet1_1(1000);
+    let sys = quick_sys();
+
+    // Cold run: populates, then persists.
+    let cold_cache = Arc::new(CostCache::new());
+    let cold = explore_two_platform_cached(&g, &sys, Arc::clone(&cold_cache));
+    assert!(cold_cache.misses() > 0, "cold run must actually evaluate layers");
+    let path = cold_cache.save_to(&dir, &sys.search).unwrap();
+    assert!(path.ends_with(COST_CACHE_FILE));
+
+    // Warm run: every layer cost is a disk-loaded hit.
+    let (warm_cache, status) = CostCache::load_from(&dir, &sys.search);
+    assert_eq!(status, CacheLoad::Loaded(cold_cache.len()));
+    let warm_cache = Arc::new(warm_cache);
+    let warm = explore_two_platform_cached(&g, &sys, Arc::clone(&warm_cache));
+    assert_eq!(
+        warm_cache.misses(),
+        0,
+        "warm exploration performed {} layer evaluations",
+        warm_cache.misses()
+    );
+    assert!(warm_cache.hits() > 0);
+
+    // Bit-identical exploration results.
+    assert_eq!(cold.pareto, warm.pareto);
+    assert_eq!(cold.nsga_front, warm.nsga_front);
+    assert_eq!(cold.favorite, warm.favorite);
+    assert_eq!(cold.candidates.len(), warm.candidates.len());
+    for (a, b) in cold.candidates.iter().zip(&warm.candidates) {
+        assert_eq!(a.label, b.label);
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{}", a.label);
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{}", a.label);
+        assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{}", a.label);
+        assert_eq!(a.top1.to_bits(), b.top1.to_bits(), "{}", a.label);
+        assert_eq!(a.memory_bytes, b.memory_bytes, "{}", a.label);
+        assert_eq!(a.link_bytes, b.link_bytes, "{}", a.label);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_version_mismatched_and_missing_caches_are_ignored() {
+    let search = SearchCfg { victory: 10, max_samples: 100, ..Default::default() };
+
+    // Missing directory.
+    let dir = tmpdir("missing");
+    let (cache, status) = CostCache::load_from(&dir, &search);
+    assert_eq!(status, CacheLoad::Missing);
+    assert!(cache.is_empty());
+
+    // Garbage bytes.
+    let dir = tmpdir("garbage");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join(COST_CACHE_FILE), b"{not json at all").unwrap();
+    let (cache, status) = CostCache::load_from(&dir, &search);
+    assert_eq!(status, CacheLoad::Corrupt);
+    assert!(cache.is_empty());
+
+    // Valid JSON, wrong shape.
+    std::fs::write(dir.join(COST_CACHE_FILE), b"[1, 2, 3]").unwrap();
+    let (cache, status) = CostCache::load_from(&dir, &search);
+    assert_eq!(status, CacheLoad::VersionMismatch);
+    assert!(cache.is_empty());
+
+    // Future format version.
+    std::fs::write(
+        dir.join(COST_CACHE_FILE),
+        br#"{"version": 999, "search_fingerprint": "0", "entries": []}"#,
+    )
+    .unwrap();
+    let (cache, status) = CostCache::load_from(&dir, &search);
+    assert_eq!(status, CacheLoad::VersionMismatch);
+    assert!(cache.is_empty());
+
+    // Same version, different search settings.
+    let dir2 = tmpdir("searchmismatch");
+    CostCache::new().save_to(&dir2, &search).unwrap();
+    let other = SearchCfg { victory: 11, max_samples: 100, ..Default::default() };
+    let (cache, status) = CostCache::load_from(&dir2, &other);
+    assert_eq!(status, CacheLoad::SearchMismatch);
+    assert!(cache.is_empty());
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_dir_all(&dir2).ok();
+}
+
+#[test]
+fn truncated_entry_is_corrupt_not_fatal() {
+    let search = SearchCfg::default();
+    let dir = tmpdir("truncated");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Right version and fingerprint, but an entry missing its cost
+    // fields: the whole file is rejected as corrupt, not panicked on.
+    let text = format!(
+        r#"{{"version": 1, "search_fingerprint": "{:016x}",
+            "entries": [{{"kind": "mac", "acc": "00ff"}}]}}"#,
+        search.fingerprint()
+    );
+    std::fs::write(dir.join(COST_CACHE_FILE), text).unwrap();
+    let (cache, status) = CostCache::load_from(&dir, &search);
+    assert_eq!(status, CacheLoad::Corrupt);
+    assert!(cache.is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}

@@ -1,0 +1,104 @@
+//! Acceptance gate for the mapper-kernel optimization (PR 2 tentpole):
+//! the bound-pruned, allocation-free kernel must pick a **bit-identical**
+//! mapping (latency, energy, utilization, DRAM bytes, mapping string) to
+//! the straight-line reference kernel for every workload, accelerator,
+//! objective and search budget.
+//!
+//! CI runs this test file by name and fails if it is skipped or renamed
+//! (see `.github/workflows/ci.yml`).
+
+use partir::hw::{mapper, presets, Accelerator, ConvWorkload, LayerCost, Objective, SearchCfg};
+use partir::testkit::{property, Gen};
+use partir::zoo;
+
+/// Every distinct MAC workload across all six paper models.
+fn workload_pool() -> Vec<(String, ConvWorkload)> {
+    let mut out: Vec<(String, ConvWorkload)> = Vec::new();
+    for model in zoo::PAPER_MODELS {
+        let g = zoo::build(model).unwrap();
+        for node in &g.nodes {
+            if let Some(wl) = ConvWorkload::from_node(&g, node) {
+                // Dedup structurally identical shapes to keep the pool lean.
+                if !out.iter().any(|(_, w)| w.signature() == wl.signature()) {
+                    out.push((format!("{model}/{}", node.name), wl));
+                }
+            }
+        }
+    }
+    out
+}
+
+fn assert_identical(tag: &str, a: &LayerCost, b: &LayerCost) {
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{tag}: latency diverged");
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{tag}: energy diverged");
+    assert_eq!(
+        a.utilization.to_bits(),
+        b.utilization.to_bits(),
+        "{tag}: utilization diverged"
+    );
+    assert_eq!(a.macs, b.macs, "{tag}: macs diverged");
+    assert_eq!(a.dram_bytes, b.dram_bytes, "{tag}: dram bytes diverged");
+    assert_eq!(a.mapping_desc, b.mapping_desc, "{tag}: chosen mapping diverged");
+}
+
+#[test]
+fn kernel_equivalence_random_workloads_all_models_both_presets() {
+    let pool = workload_pool();
+    assert!(pool.len() > 30, "expected a rich workload pool, got {}", pool.len());
+    let accs: [Accelerator; 2] = [presets::eyeriss_like(), presets::simba_like()];
+    let objectives = [Objective::Edp, Objective::Latency, Objective::Energy];
+    property("bound-pruned kernel bit-identical to reference", 60, |rng| {
+        let (name, wl) = &pool[Gen::usize_in(rng, 0..pool.len())];
+        let acc = &accs[Gen::usize_in(rng, 0..accs.len())];
+        let cfg = SearchCfg {
+            victory: Gen::usize_in(rng, 5..40),
+            max_samples: Gen::usize_in(rng, 50..350),
+            seed: Gen::u32_in(rng, 0..u32::MAX) as u64,
+            objective: objectives[Gen::usize_in(rng, 0..objectives.len())],
+        };
+        let (fast, fast_stats) = mapper::map_layer_with_stats(acc, wl, &cfg);
+        let (reference, ref_stats) = mapper::reference::map_layer_with_stats(acc, wl, &cfg);
+        let tag = format!("{name} on {} ({:?})", acc.name, cfg.objective);
+        assert_identical(&tag, &fast, &reference);
+        // The prune must never perturb the search trajectory: both
+        // kernels draw the same number of samples from the same stream.
+        assert_eq!(fast_stats.samples, ref_stats.samples, "{tag}: RNG streams diverged");
+    });
+}
+
+#[test]
+fn kernel_equivalence_full_default_budget() {
+    // The paper's actual setting (victory=100, max_samples=4000) on a
+    // reuse-rich conv, a depthwise conv and an FC layer.
+    let cfg = SearchCfg::default();
+    for (model, layer) in
+        [("vgg16", "Conv_5"), ("efficientnet_b0", "Conv_1"), ("resnet50", "Gemm_0")]
+    {
+        let g = zoo::build(model).unwrap();
+        let wl = ConvWorkload::from_node(&g, g.by_name(layer).unwrap()).unwrap();
+        for acc in [presets::eyeriss_like(), presets::simba_like()] {
+            let fast = mapper::map_layer(&acc, &wl, &cfg);
+            let reference = mapper::reference::map_layer(&acc, &wl, &cfg);
+            assert_identical(&format!("{model}/{layer} on {}", acc.name), &fast, &reference);
+        }
+    }
+}
+
+#[test]
+fn pruning_actually_fires() {
+    // Guard against the bound silently degenerating to -inf (which would
+    // keep equivalence but lose the speedup): on a standard workload a
+    // healthy fraction of samples must be rejected without full
+    // evaluation.
+    let g = zoo::vgg16(1000);
+    let wl = ConvWorkload::from_node(&g, g.by_name("Conv_5").unwrap()).unwrap();
+    let acc = presets::eyeriss_like();
+    let (_, stats) = mapper::map_layer_with_stats(&acc, &wl, &SearchCfg::default());
+    assert!(stats.samples > 0);
+    assert!(
+        stats.pruned * 10 >= stats.samples,
+        "bound prune fired on only {}/{} samples",
+        stats.pruned,
+        stats.samples
+    );
+}

@@ -14,7 +14,7 @@
 //!     make artifacts && cargo run --release --example pipeline_serving
 
 use partir::config::SystemConfig;
-use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
 use partir::explorer::explore_two_platform;
 use partir::runtime::Manifest;
 use partir::zoo;
@@ -59,8 +59,7 @@ fn main() -> anyhow::Result<()> {
     let inputs: Vec<Vec<f32>> =
         (0..REQUESTS).map(|i| testset.image(i % testset.count).to_vec()).collect();
     let cfg = PipelineCfg {
-        max_batch: 8,
-        batch_wait: Duration::from_millis(1),
+        batch: BatchPolicy::new(8, Duration::from_millis(1)),
         ..Default::default()
     };
 
@@ -125,7 +124,8 @@ fn main() -> anyhow::Result<()> {
             f64::INFINITY
         }
     };
-    let link_rate = cfg.link.throughput_ceiling((mid_elems * 2) as u64) * cfg.max_batch as f64;
+    let link_rate =
+        cfg.link.throughput_ceiling((mid_elems * 2) as u64) * cfg.batch.max_batch as f64;
     let predicted = rate(&part.stages[0]).min(rate(&part.stages[1])).min(link_rate);
     println!(
         "Definition 4 check: min(1/d_A, 1/d_link, 1/d_B) = {predicted:.1} inf/s, measured {:.1} inf/s",

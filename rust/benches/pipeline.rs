@@ -7,7 +7,7 @@
 #[path = "common/mod.rs"]
 mod common;
 
-use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
 use partir::runtime::Manifest;
 use std::path::Path;
 use std::time::Duration;
@@ -31,8 +31,7 @@ fn main() {
     println!("{:>6} {:>14} {:>12} {:>12}", "batch", "throughput", "p50", "p99");
     for batch in [1usize, 2, 4, 8, 16] {
         let cfg = PipelineCfg {
-            max_batch: batch,
-            batch_wait: Duration::from_micros(500),
+            batch: BatchPolicy::new(batch, Duration::from_micros(500)),
             simulate_link: true,
             ..Default::default()
         };
@@ -50,8 +49,7 @@ fn main() {
     println!("{:>6} {:>14} {:>12}", "depth", "throughput", "p99");
     for depth in [1usize, 4, 16, 64] {
         let cfg = PipelineCfg {
-            max_batch: 8,
-            batch_wait: Duration::from_micros(500),
+            batch: BatchPolicy::new(8, Duration::from_micros(500)),
             queue_depth: depth,
             simulate_link: true,
             ..Default::default()
@@ -105,7 +103,10 @@ fn main() {
                 out_bytes_per_item: 0,
             },
         ];
-        let cfg = PipelineCfg { batch_wait: Duration::from_millis(1), ..Default::default() };
+        let cfg = PipelineCfg {
+            batch: BatchPolicy::new(8, Duration::from_millis(1)),
+            ..Default::default()
+        };
         let r = run_pipeline(stages, &cfg, inputs.clone());
         println!(
             "{bd:>9} {:>10.1} i/s {:>12} {:>12} {:>10.2}",

@@ -1,0 +1,201 @@
+//! Bench: the discrete-event serving simulator at millions-of-requests
+//! scale — the runtime counterpart of the paper's steady-state
+//! throughput claims (§V-B "47.5% EfficientNet-B0 gain" shape), plus
+//! batching-policy and scenario sweeps.
+//!
+//!     cargo bench --bench serving
+//!
+//! Asserts (also under PARTIR_BENCH_FAST=1 in CI):
+//!   * a 1M-request Poisson scenario simulates in < 30 s wall-clock;
+//!   * repeated runs are bit-identical (fingerprints match);
+//!   * `evaluate_front` is bit-identical across worker counts;
+//!   * the partitioned deployment out-serves the best single platform.
+//! Emits machine-readable `BENCH_sim.json`.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::config::SystemConfig;
+use partir::coordinator::BatchPolicy;
+use partir::explorer::explore_two_platform;
+use partir::sim::{self, Deployment, Scenario, SimCfg};
+use partir::util::json::{obj, Json};
+use partir::util::parallel::default_jobs;
+use partir::zoo;
+use std::time::Instant;
+
+fn main() {
+    let fast = common::fast_mode();
+    // The headline stays 1M requests even in CI fast mode — simulating
+    // them cheaply is the whole point of the subsystem.
+    let requests = 1_000_000usize;
+
+    common::section("explore efficientnet_b0 (the simulator's input)");
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 20;
+    sys.search.max_samples = 200;
+    sys.jobs = default_jobs();
+    let g = zoo::build("efficientnet_b0").unwrap();
+    let t0 = Instant::now();
+    let ex = explore_two_platform(&g, &sys);
+    let explore_s = t0.elapsed().as_secs_f64();
+    println!(
+        "explored {} candidates in {}",
+        ex.candidates.len(),
+        common::fmt(explore_s)
+    );
+    let single = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 1 && c.feasible())
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .expect("a single-platform candidate");
+    let split = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 2 && c.feasible())
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .expect("a partitioned candidate");
+    println!(
+        "analytic: split '{}' {:.1} inf/s vs single '{}' {:.1} inf/s",
+        split.label, split.throughput, single.label, single.throughput
+    );
+
+    // Offered load: 1.2x what the best single platform can serve, so
+    // the comparison below happens in the regime the paper talks about.
+    let rate = 1.2 * single.throughput;
+    let cfg = SimCfg::from_system(&sys);
+
+    common::section(&format!("{requests} request Poisson storm @ {rate:.0}/s"));
+    let storm = Scenario::steady(requests, rate);
+    let dep_split = Deployment::from_candidate(split, &sys);
+    let t1 = Instant::now();
+    let r_split = sim::simulate(&dep_split, &cfg, &storm);
+    let sim_s = t1.elapsed().as_secs_f64();
+    println!(
+        "split:  {} requests in {} real ({:.2e} events/s, {:.2e} req/s simulated)",
+        requests,
+        common::fmt(sim_s),
+        r_split.events as f64 / sim_s,
+        requests as f64 / sim_s,
+    );
+    print!("{}", r_split.render());
+    assert!(sim_s < 30.0, "1M-request simulation took {sim_s:.1}s (budget: 30s)");
+    let r_again = sim::simulate(&dep_split, &cfg, &storm);
+    assert_eq!(
+        r_split.fingerprint(),
+        r_again.fingerprint(),
+        "simulation is not deterministic"
+    );
+
+    let dep_single = Deployment::from_candidate(single, &sys);
+    let r_single = sim::simulate(&dep_single, &cfg, &storm);
+    let gain = 100.0 * (r_split.throughput() - r_single.throughput())
+        / r_single.throughput();
+    println!(
+        "single: {:.1} inf/s  → simulated partitioning gain {gain:+.1}%",
+        r_single.throughput()
+    );
+    assert!(
+        r_split.throughput() > r_single.throughput(),
+        "partitioned deployment lost to single platform in simulation"
+    );
+
+    common::section("batching-policy sweep (split deployment)");
+    let sweep_req = if fast { 100_000 } else { 500_000 };
+    let sweep = Scenario::steady(sweep_req, rate);
+    println!(
+        "{:>6} {:>13} {:>10} {:>10} {:>9}",
+        "batch", "throughput", "p50", "p99", "dropped"
+    );
+    let mut sweep_rows = Vec::new();
+    for max_batch in [1usize, 2, 4, 8, 16, 32] {
+        let mut c = cfg;
+        c.batch = BatchPolicy::new(max_batch, cfg.batch.max_wait);
+        let r = sim::simulate(&dep_split, &c, &sweep);
+        println!(
+            "{max_batch:>6} {:>9.1} i/s {:>10} {:>10} {:>9}",
+            r.throughput(),
+            common::fmt(r.pipeline.latency_percentile(50.0)),
+            common::fmt(r.pipeline.latency_percentile(99.0)),
+            r.dropped
+        );
+        sweep_rows.push(obj(vec![
+            ("max_batch", Json::from(max_batch)),
+            ("throughput", Json::from(r.throughput())),
+            ("p99_s", Json::from(r.pipeline.latency_percentile(99.0))),
+            ("dropped", Json::from(r.dropped)),
+        ]));
+    }
+
+    common::section("scenario catalog (split deployment, 100 ms SLO)");
+    println!(
+        "{:>9} {:>13} {:>13} {:>9} {:>9}",
+        "scenario", "goodput", "throughput", "dropped", "slo-miss"
+    );
+    let mut scen_rows = Vec::new();
+    for name in Scenario::builtin_names() {
+        let mut sc = Scenario::by_name(name, sweep_req, rate).unwrap();
+        sc.deadline_s = Some(0.1);
+        let r = sim::simulate(&dep_split, &cfg, &sc);
+        println!(
+            "{name:>9} {:>9.1} i/s {:>9.1} i/s {:>9} {:>9}",
+            r.goodput,
+            r.throughput(),
+            r.dropped,
+            r.slo_violations
+        );
+        scen_rows.push(obj(vec![
+            ("scenario", Json::from(*name)),
+            ("goodput", Json::from(r.goodput)),
+            ("throughput", Json::from(r.throughput())),
+            ("dropped", Json::from(r.dropped)),
+            ("slo_violations", Json::from(r.slo_violations)),
+        ]));
+    }
+
+    common::section("evaluate_front across --jobs (must be bit-identical)");
+    let front_req = if fast { 50_000 } else { 200_000 };
+    let front_sc = Scenario::steady(front_req, rate);
+    let t2 = Instant::now();
+    let serial = sim::evaluate_front(&ex, &sys, &front_sc, &cfg, 1);
+    let front_serial_s = t2.elapsed().as_secs_f64();
+    let jobs = default_jobs();
+    let t3 = Instant::now();
+    let par = sim::evaluate_front(&ex, &sys, &front_sc, &cfg, jobs);
+    let front_par_s = t3.elapsed().as_secs_f64();
+    assert_eq!(serial, par, "evaluate_front changed under jobs={jobs}");
+    println!(
+        "{} candidates × {front_req} requests: serial {} vs {jobs} jobs {} ({:.2}x)",
+        serial.len(),
+        common::fmt(front_serial_s),
+        common::fmt(front_par_s),
+        front_serial_s / front_par_s.max(1e-12)
+    );
+    print!("{}", sim::render_ranking(&serial));
+
+    common::write_bench_json(
+        "sim",
+        &obj(vec![
+            ("bench", Json::from("serving")),
+            ("fast_mode", Json::from(fast)),
+            ("requests", Json::from(requests)),
+            ("explore_s", Json::from(explore_s)),
+            ("sim_s", Json::from(sim_s)),
+            ("events", Json::from(r_split.events)),
+            ("events_per_s", Json::from(r_split.events as f64 / sim_s)),
+            ("req_per_s_simulated", Json::from(requests as f64 / sim_s)),
+            ("split_label", Json::from(split.label.as_str())),
+            ("sim_split_ips", Json::from(r_split.throughput())),
+            ("sim_single_ips", Json::from(r_single.throughput())),
+            ("sim_gain_pct", Json::from(gain)),
+            ("fingerprint", Json::from(format!("{:016x}", r_split.fingerprint()))),
+            ("batch_sweep", Json::Arr(sweep_rows)),
+            ("scenarios", Json::Arr(scen_rows)),
+            ("front_candidates", Json::from(serial.len())),
+            ("front_serial_s", Json::from(front_serial_s)),
+            ("front_par_s", Json::from(front_par_s)),
+            ("front_jobs", Json::from(jobs)),
+        ]),
+    );
+}

@@ -112,6 +112,34 @@ pub struct Compression {
     pub top1_penalty: f64,
 }
 
+/// Serving-layer defaults — the dynamic-batching policy and per-stage
+/// queue bound — consumed by the discrete-event simulator via
+/// `sim::SimCfg::from_system` (`partir simulate`). TOML section
+/// `[serving]` with keys `max_batch`, `batch_wait_ms`, `queue_depth`.
+/// The artifact-backed `partir pipeline` keeps its own flags (it takes
+/// no system TOML); anything building a `coordinator::PipelineCfg`
+/// from a `SystemConfig` should source its policy here.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ServingCfg {
+    pub max_batch: usize,
+    pub batch_wait_s: f64,
+    pub queue_depth: usize,
+}
+
+impl Default for ServingCfg {
+    fn default() -> Self {
+        // Derived from the coordinator's shared BatchPolicy default so
+        // the two cannot drift apart, plus a queue deep enough to ride
+        // out short bursts without shedding.
+        let batch = crate::coordinator::BatchPolicy::default();
+        Self {
+            max_batch: batch.max_batch,
+            batch_wait_s: batch.max_wait.as_secs_f64(),
+            queue_depth: 64,
+        }
+    }
+}
+
 /// Full DSE configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -130,6 +158,9 @@ pub struct SystemConfig {
     pub search: SearchCfg,
     /// Run accuracy with QAT recovery.
     pub qat: bool,
+    /// Serving defaults (batching policy + queue bound) for the
+    /// coordinator and the simulator.
+    pub serving: ServingCfg,
     /// Directory for the persistent layer-cost cache (`costcache_v1.json`,
     /// see `hw::CostCache::{save_to, load_from}`). `None` = in-memory
     /// only. Repeated sweeps under the same search settings become pure
@@ -172,6 +203,7 @@ impl SystemConfig {
             favorite: ObjectiveWeights::latency_energy(),
             search: SearchCfg::default(),
             qat: false,
+            serving: ServingCfg::default(),
             cache_dir: None,
             seed: DSE_SEED,
             jobs: 1,
@@ -290,6 +322,27 @@ impl SystemConfig {
         }
         if let Some(q) = doc.get("qat").as_bool() {
             cfg.qat = q;
+        }
+        let s = doc.get("serving");
+        if let Json::Obj(_) = s {
+            if let Some(b) = s.get("max_batch").as_usize() {
+                if b == 0 {
+                    return Err("serving.max_batch must be at least 1".into());
+                }
+                cfg.serving.max_batch = b;
+            }
+            if let Some(w) = s.get("batch_wait_ms").as_f64() {
+                if !w.is_finite() || w < 0.0 {
+                    return Err(format!("serving.batch_wait_ms {w} must be >= 0"));
+                }
+                cfg.serving.batch_wait_s = w * 1e-3;
+            }
+            if let Some(d) = s.get("queue_depth").as_usize() {
+                if d == 0 {
+                    return Err("serving.queue_depth must be at least 1".into());
+                }
+                cfg.serving.queue_depth = d;
+            }
         }
         if let Some(d) = doc.get("cache_dir").as_str() {
             cfg.cache_dir = Some(PathBuf::from(d));
@@ -436,6 +489,31 @@ weight = 2.0
         assert_eq!(cfg.search.objective, Objective::Energy);
         assert_eq!(cfg.pareto_metrics, vec![Metric::Latency, Metric::Energy]);
         assert_eq!(cfg.favorite.weights[0].0, Metric::Throughput);
+    }
+
+    #[test]
+    fn serving_section_parses_and_validates() {
+        let doc = tomlite::parse(
+            "[serving]\nmax_batch = 16\nbatch_wait_ms = 0.5\nqueue_depth = 128\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.serving.max_batch, 16);
+        assert!((cfg.serving.batch_wait_s - 5e-4).abs() < 1e-12);
+        assert_eq!(cfg.serving.queue_depth, 128);
+        // Defaults when absent.
+        let d = SystemConfig::paper_two_platform().serving;
+        assert_eq!(d, ServingCfg::default());
+        assert_eq!(d.max_batch, 8);
+        // Degenerate values rejected.
+        for bad in [
+            "[serving]\nmax_batch = 0\n",
+            "[serving]\nqueue_depth = 0\n",
+            "[serving]\nbatch_wait_ms = -1.0\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
     }
 
     #[test]

@@ -1,39 +1,100 @@
 //! Dynamic batching: collect requests from a channel up to a batch-size
 //! or time budget — the standard serving-system batcher, applied here to
 //! the inference pipeline's stage inputs.
+//!
+//! The *policy* (when is a forming batch complete?) is factored out as
+//! [`BatchPolicy`] so the wall-clock coordinator and the discrete-event
+//! serving simulator (`crate::sim`) share one definition — the two
+//! runtimes must agree on batching semantics for cross-validation to be
+//! meaningful.
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::time::{Duration, Instant};
 
+/// The dynamic-batching policy shared by `coordinator` stage threads and
+/// the `sim` stage servers: a batch closes when it is *full*
+/// (`max_batch` items) or when the collection has *waited out its
+/// budget* (`max_wait` since collection began), whichever comes first.
+/// An empty batch never closes — both runtimes block/idle until the
+/// first item arrives.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPolicy {
+    /// Maximum items per batch (≥ 1).
+    pub max_batch: usize,
+    /// Maximum time to wait for more items after collection begins.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn new(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1, "max_batch must be at least 1");
+        Self { max_batch, max_wait }
+    }
+
+    /// A batch of `len` items is full — closes regardless of elapsed
+    /// time (and, for dispatchers, regardless of a pending wait timer).
+    pub fn full(&self, len: usize) -> bool {
+        len >= self.max_batch
+    }
+
+    /// The batch-close condition: `len` items collected, `waited`
+    /// elapsed since collection began. Empty batches never close.
+    pub fn closes(&self, len: usize, waited: Duration) -> bool {
+        len > 0 && (self.full(len) || waited >= self.max_wait)
+    }
+
+    /// How many of `queued` waiting items one batch takes.
+    pub fn take(&self, queued: usize) -> usize {
+        queued.min(self.max_batch)
+    }
+}
+
+impl Default for BatchPolicy {
+    /// The coordinator's historical defaults (batch 8, 2 ms wait).
+    fn default() -> Self {
+        Self { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
 /// Outcome of one batch collection.
 pub enum Batch<T> {
-    /// One or more items (≤ max_batch).
+    /// One or more items (≤ `policy.max_batch`).
     Items(Vec<T>),
     /// Upstream disconnected and drained.
     Closed,
 }
 
-/// Block for the first item, then drain greedily until `max_batch` items
-/// or `max_wait` elapsed (whichever first). Never returns an empty batch.
-pub fn collect<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Batch<T> {
-    assert!(max_batch >= 1);
+/// Block for the first item, then drain greedily until the policy closes
+/// the batch (full, or wait budget spent — whichever first). Never
+/// returns an empty batch.
+pub fn collect<T>(rx: &Receiver<T>, policy: &BatchPolicy) -> Batch<T> {
+    assert!(policy.max_batch >= 1);
     let first = match rx.recv() {
         Ok(item) => item,
         Err(_) => return Batch::Closed,
     };
     let mut items = vec![first];
-    let deadline = Instant::now() + max_wait;
-    while items.len() < max_batch {
-        let now = Instant::now();
-        if now >= deadline {
-            // Deadline passed: take whatever is already queued, no waiting.
+    let start = Instant::now();
+    // Both exit conditions below ARE the shared policy — the sim engine
+    // dispatches on the same `closes()`/`take()` calls, so changing the
+    // policy changes both runtimes together.
+    loop {
+        // Full closes the batch regardless of time.
+        if policy.full(items.len()) {
+            break;
+        }
+        let waited = start.elapsed();
+        if policy.closes(items.len(), waited) {
+            // Wait budget spent: like the sim's batch-timeout path
+            // (which `take`s everything queued), drain what is already
+            // here without waiting for more.
             match rx.try_recv() {
                 Ok(item) => items.push(item),
                 Err(_) => break,
             }
             continue;
         }
-        match rx.recv_timeout(deadline - now) {
+        match rx.recv_timeout(policy.max_wait - waited) {
             Ok(item) => items.push(item),
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
@@ -45,8 +106,13 @@ pub fn collect<T>(rx: &Receiver<T>, max_batch: usize, max_wait: Duration) -> Bat
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::testkit::{property, Gen};
     use std::sync::mpsc;
     use std::thread;
+
+    fn policy(max_batch: usize, wait_ms: u64) -> BatchPolicy {
+        BatchPolicy::new(max_batch, Duration::from_millis(wait_ms))
+    }
 
     #[test]
     fn collects_up_to_max_batch() {
@@ -54,11 +120,11 @@ mod tests {
         for i in 0..10 {
             tx.send(i).unwrap();
         }
-        match collect(&rx, 4, Duration::from_millis(5)) {
+        match collect(&rx, &policy(4, 5)) {
             Batch::Items(items) => assert_eq!(items, vec![0, 1, 2, 3]),
             Batch::Closed => panic!("closed"),
         }
-        match collect(&rx, 100, Duration::from_millis(5)) {
+        match collect(&rx, &policy(100, 5)) {
             Batch::Items(items) => assert_eq!(items.len(), 6),
             Batch::Closed => panic!("closed"),
         }
@@ -68,7 +134,7 @@ mod tests {
     fn returns_closed_on_disconnect() {
         let (tx, rx) = mpsc::channel::<u32>();
         drop(tx);
-        assert!(matches!(collect(&rx, 4, Duration::from_millis(1)), Batch::Closed));
+        assert!(matches!(collect(&rx, &policy(4, 1)), Batch::Closed));
     }
 
     #[test]
@@ -80,7 +146,7 @@ mod tests {
             let _ = tx.send(2);
         });
         // Wait budget is 5 ms: the second item (at 50 ms) must miss it.
-        match collect(&rx, 4, Duration::from_millis(5)) {
+        match collect(&rx, &policy(4, 5)) {
             Batch::Items(items) => assert_eq!(items, vec![1]),
             Batch::Closed => panic!("closed"),
         }
@@ -94,10 +160,68 @@ mod tests {
             thread::sleep(Duration::from_millis(20));
             tx.send(42u32).unwrap();
         });
-        match collect(&rx, 4, Duration::from_millis(1)) {
+        match collect(&rx, &policy(4, 1)) {
             Batch::Items(items) => assert_eq!(items, vec![42]),
             Batch::Closed => panic!("closed"),
         }
         t.join().unwrap();
+    }
+
+    #[test]
+    fn zero_wait_budget_still_drains_queued_items() {
+        // A spent (even zero) wait budget must not shrink batches to 1:
+        // items already queued are taken up to max_batch, exactly like
+        // the sim engine's batch-timeout dispatch.
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        match collect(&rx, &policy(8, 0)) {
+            Batch::Items(items) => assert_eq!(items, vec![0, 1, 2, 3, 4, 5, 6, 7]),
+            Batch::Closed => panic!("closed"),
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_max_batch_rejected() {
+        BatchPolicy::new(0, Duration::from_millis(1));
+    }
+
+    #[test]
+    fn property_batch_close_conditions() {
+        property("batch closes iff full or wait budget spent", 300, |rng| {
+            let p = BatchPolicy::new(
+                Gen::usize_in(rng, 1..64),
+                Duration::from_micros(Gen::usize_in(rng, 1..10_000) as u64),
+            );
+            let len = Gen::usize_in(rng, 0..128);
+            let waited = Duration::from_micros(Gen::usize_in(rng, 0..20_000) as u64);
+            let closes = p.closes(len, waited);
+            // Definition: nonempty AND (full OR budget spent).
+            assert_eq!(closes, len > 0 && (len >= p.max_batch || waited >= p.max_wait));
+            assert_eq!(p.full(len), len >= p.max_batch);
+            // Fullness is the time-independent component of closes.
+            if p.full(len) && len > 0 {
+                assert!(p.closes(len, Duration::ZERO));
+            }
+            // Empty batches never close.
+            assert!(!p.closes(0, waited));
+            // Monotone in both arguments: once closed, more items or more
+            // waiting cannot reopen it.
+            if closes {
+                assert!(p.closes(len + 1, waited));
+                assert!(p.closes(len, waited + Duration::from_micros(1)));
+            }
+            // A full batch closes no matter how briefly it waited.
+            assert!(p.closes(p.max_batch, Duration::ZERO));
+            // The wait budget closes any nonempty batch.
+            assert!(p.closes(1, p.max_wait));
+            // `take` never exceeds the cap or the queue.
+            let queued = Gen::usize_in(rng, 0..256);
+            let take = p.take(queued);
+            assert!(take <= p.max_batch && take <= queued);
+            assert_eq!(take, queued.min(p.max_batch));
+        });
     }
 }

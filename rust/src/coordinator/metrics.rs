@@ -54,10 +54,19 @@ impl PipelineReport {
     }
 
     /// End-to-end throughput over the wall clock (inferences/s).
+    /// Degenerate runs (nothing completed, or a zero-length wall clock)
+    /// report 0 rather than NaN/inf — the simulator produces such
+    /// reports for empty scenarios and fully-dropped workloads.
     pub fn throughput(&self) -> f64 {
-        self.completed() as f64 / self.wall.as_secs_f64()
+        let wall = self.wall.as_secs_f64();
+        if self.completed() == 0 || wall <= 0.0 {
+            return 0.0;
+        }
+        self.completed() as f64 / wall
     }
 
+    /// Latency summary over successful completions. Empty runs yield an
+    /// empty [`Summary`] whose `mean()` is 0 (never NaN).
     pub fn latency_summary(&self) -> Summary {
         let mut s = Summary::new();
         for c in self.completions.iter().filter(|c| c.ok) {
@@ -66,6 +75,8 @@ impl PipelineReport {
         s
     }
 
+    /// Latency percentile over successful completions; 0.0 when none
+    /// completed (a defined floor beats propagating NaN into reports).
     pub fn latency_percentile(&self, p: f64) -> f64 {
         let xs: Vec<f64> = self
             .completions
@@ -73,6 +84,9 @@ impl PipelineReport {
             .filter(|c| c.ok)
             .map(|c| c.latency.as_secs_f64())
             .collect();
+        if xs.is_empty() {
+            return 0.0;
+        }
         percentile(&xs, p)
     }
 
@@ -156,5 +170,67 @@ mod tests {
         assert!(s.contains("9 ok"));
         assert!(s.contains("stage A"));
         assert!(s.contains("mean fill 2.00"));
+    }
+
+    #[test]
+    fn empty_report_is_well_defined() {
+        // A scenario with zero requests: no completions, zero wall.
+        let r = PipelineReport {
+            completions: Vec::new(),
+            wall: Duration::ZERO,
+            stages: vec![StageStats { name: "A".into(), ..Default::default() }],
+        };
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.failed(), 0);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.latency_percentile(50.0), 0.0);
+        assert_eq!(r.latency_percentile(99.0), 0.0);
+        let lat = r.latency_summary();
+        assert_eq!(lat.count(), 0);
+        assert!(lat.mean() == 0.0, "empty mean must not be NaN");
+        assert_eq!(r.stages[0].mean_batch(), 0.0);
+        let text = r.render();
+        assert!(!text.contains("NaN"), "render leaked NaN: {text}");
+    }
+
+    #[test]
+    fn all_failed_report_is_well_defined() {
+        // Every request dropped/failed: ok-filtered stats must stay
+        // finite even though the wall clock is non-zero.
+        let r = PipelineReport {
+            completions: (0..5)
+                .map(|i| Completion {
+                    id: i,
+                    latency: Duration::from_millis(1),
+                    ok: false,
+                    prediction: None,
+                })
+                .collect(),
+            wall: Duration::from_millis(10),
+            stages: Vec::new(),
+        };
+        assert_eq!(r.completed(), 0);
+        assert_eq!(r.failed(), 5);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.latency_percentile(99.0), 0.0);
+        assert!(r.latency_summary().mean() == 0.0);
+        assert!(!r.render().contains("NaN"));
+    }
+
+    #[test]
+    fn zero_wall_with_completions_is_finite() {
+        // Instantaneous virtual runs must not divide by zero.
+        let r = PipelineReport {
+            completions: vec![Completion {
+                id: 0,
+                latency: Duration::ZERO,
+                ok: true,
+                prediction: None,
+            }],
+            wall: Duration::ZERO,
+            stages: Vec::new(),
+        };
+        assert_eq!(r.throughput(), 0.0);
+        assert!(r.throughput().is_finite());
     }
 }

@@ -20,6 +20,7 @@
 pub mod batcher;
 pub mod metrics;
 
+pub use batcher::BatchPolicy;
 pub use metrics::{Completion, PipelineReport, StageStats};
 
 use crate::link::LinkModel;
@@ -64,8 +65,9 @@ pub struct StageSpec {
 #[derive(Debug, Clone)]
 pub struct PipelineCfg {
     pub link: LinkModel,
-    pub max_batch: usize,
-    pub batch_wait: Duration,
+    /// Dynamic-batching policy, shared with the serving simulator
+    /// (`crate::sim`) so both runtimes batch identically.
+    pub batch: BatchPolicy,
     /// Bounded queue depth between stages (backpressure).
     pub queue_depth: usize,
     /// Sleep the modelled link time (true for end-to-end measurements;
@@ -77,8 +79,7 @@ impl Default for PipelineCfg {
     fn default() -> Self {
         Self {
             link: LinkModel::gigabit_ethernet(),
-            max_batch: 8,
-            batch_wait: Duration::from_millis(2),
+            batch: BatchPolicy::default(),
             queue_depth: 32,
             simulate_link: true,
         }
@@ -208,7 +209,7 @@ fn stage_thread(
     };
     let mut batch_no = 0u64;
     loop {
-        let items = match batcher::collect(&rx, cfg.max_batch, cfg.batch_wait) {
+        let items = match batcher::collect(&rx, &cfg.batch) {
             Batch::Items(items) => items,
             Batch::Closed => break,
         };
@@ -367,7 +368,7 @@ mod tests {
 
     fn fast_cfg() -> PipelineCfg {
         PipelineCfg {
-            batch_wait: Duration::from_micros(200),
+            batch: BatchPolicy::new(8, Duration::from_micros(200)),
             queue_depth: 8,
             simulate_link: false,
             ..Default::default()
@@ -415,7 +416,7 @@ mod tests {
         // execution would need >= 96 ms; a pipeline should stay well
         // under 1.5x the single-stage total.
         let mut cfg = fast_cfg();
-        cfg.max_batch = 1;
+        cfg.batch.max_batch = 1;
         let inputs: Vec<Vec<f32>> = (0..24).map(|_| vec![0.0; 4]).collect();
         let report = run_pipeline(
             vec![sim_stage("a", 2000, 4), sim_stage("b", 2000, 4)],
@@ -456,7 +457,7 @@ mod tests {
                 .map(|s| sim_stage(&format!("s{s}"), Gen::usize_in(rng, 1..50) as u64, 4))
                 .collect();
             let mut cfg = fast_cfg();
-            cfg.max_batch = Gen::usize_in(rng, 1..9);
+            cfg.batch.max_batch = Gen::usize_in(rng, 1..9);
             cfg.queue_depth = Gen::usize_in(rng, 1..6);
             let inputs: Vec<Vec<f32>> = (0..n_req).map(|_| vec![1.0; 4]).collect();
             let report = run_pipeline(stages, &cfg, inputs);

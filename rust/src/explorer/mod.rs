@@ -36,6 +36,26 @@ use std::ops::Range;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+/// Runtime-facing description of one *used* platform of a candidate
+/// schedule — everything the serving simulator (`crate::sim`) needs to
+/// instantiate the candidate as a pipeline stage without re-running the
+/// mapper. Entries appear in chain order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StagePlan {
+    /// Index into `SystemConfig::platforms`.
+    pub platform: usize,
+    /// Per-inference compute latency of this platform's segment (s).
+    pub latency_s: f64,
+    /// Per-inference compute energy of this platform's segment (J).
+    pub energy_j: f64,
+    /// Payload bytes this stage ships downstream per inference
+    /// (feature map to the next used platform, or the final output to
+    /// the chain's tail consumer; 0 = nothing leaves this stage).
+    pub out_bytes: u64,
+    /// Link hops that payload crosses (> 1 when idle platforms forward).
+    pub out_hops: u64,
+}
+
 /// Metrics of one candidate schedule (a set of cut positions over the
 /// linear order, possibly empty = single platform).
 #[derive(Debug, Clone)]
@@ -56,6 +76,9 @@ pub struct CandidateMetrics {
     pub link_bytes: u64,
     /// Number of platforms that execute at least one layer.
     pub partitions: usize,
+    /// Per-used-platform runtime plan (chain order) — consumed by
+    /// `sim::Deployment::from_candidate`.
+    pub plan: Vec<StagePlan>,
     /// Constraint-violation magnitude; 0 = feasible.
     pub violation: f64,
     pub violations: Vec<String>,
@@ -299,6 +322,8 @@ impl<'a> ChainEvaluator<'a> {
         let mut energy = 0.0f64;
         let mut rates: Vec<f64> = Vec::new();
         let mut memory_bytes = vec![0u64; k];
+        let mut seg_latency = vec![0.0f64; k];
+        let mut seg_energy = vec![0.0f64; k];
         let mut violations: Vec<String> = Vec::new();
         let mut violation = 0.0f64;
 
@@ -309,6 +334,8 @@ impl<'a> ChainEvaluator<'a> {
             let c = self.segment_cost(j, r);
             latency += c.latency_s;
             energy += c.energy_j;
+            seg_latency[j] = c.latency_s;
+            seg_energy[j] = c.energy_j;
             if c.latency_s > 0.0 {
                 rates.push(1.0 / c.latency_s);
             }
@@ -328,14 +355,26 @@ impl<'a> ChainEvaluator<'a> {
         // Link hops between consecutive used platforms (idle platforms
         // forward the data, paying their hop).
         let used: Vec<usize> = (0..k).filter(|&j| !segs[j].is_empty()).collect();
+        let mut plan: Vec<StagePlan> = used
+            .iter()
+            .map(|&j| StagePlan {
+                platform: j,
+                latency_s: seg_latency[j],
+                energy_j: seg_energy[j],
+                out_bytes: 0,
+                out_hops: 0,
+            })
+            .collect();
         let mut link_bytes = 0u64;
         let link = &self.sys.link;
-        for w in used.windows(2) {
+        for (wi, w) in used.windows(2).enumerate() {
             let (j1, j2) = (w[0], w[1]);
             let cut_pos = segs[j1].end - 1;
             let bits = self.sys.platforms[j1].accelerator.bits;
             let bytes = self.cut_bytes(cut_pos, bits);
             let hops = (j2 - j1) as u64;
+            plan[wi].out_bytes = bytes;
+            plan[wi].out_hops = hops;
             latency += hops as f64 * link.latency_s(bytes);
             energy += hops as f64 * link.energy_j(bytes);
             link_bytes += hops * bytes;
@@ -350,6 +389,10 @@ impl<'a> ChainEvaluator<'a> {
                 let bits = self.sys.platforms[last_used].accelerator.bits;
                 let bytes = self.cut_bytes(len - 1, bits);
                 let hops = (k - 1 - last_used) as u64;
+                if let Some(tail) = plan.last_mut() {
+                    tail.out_bytes = bytes;
+                    tail.out_hops = hops;
+                }
                 latency += hops as f64 * link.latency_s(bytes);
                 energy += hops as f64 * link.energy_j(bytes);
                 link_bytes += hops * bytes;
@@ -454,6 +497,7 @@ impl<'a> ChainEvaluator<'a> {
             memory_bytes,
             link_bytes,
             partitions,
+            plan,
             violation,
             violations,
         }
@@ -681,6 +725,32 @@ mod tests {
     }
 
     #[test]
+    fn candidate_plans_are_consistent() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        for c in &ex.candidates {
+            assert!(!c.plan.is_empty(), "{}: empty plan", c.label);
+            // Chain order, no duplicate platforms.
+            assert!(
+                c.plan.windows(2).all(|w| w[0].platform < w[1].platform),
+                "{}: plan out of order",
+                c.label
+            );
+            // Compute latency/energy in the plan never exceeds the
+            // candidate totals (which add link terms on top).
+            let compute_lat: f64 = c.plan.iter().map(|s| s.latency_s).sum();
+            let compute_en: f64 = c.plan.iter().map(|s| s.energy_j).sum();
+            assert!(compute_lat <= c.latency_s + 1e-12, "{}", c.label);
+            assert!(compute_en <= c.energy_j + 1e-12, "{}", c.label);
+            // Every wire byte the candidate is charged for appears in
+            // the plan's out_bytes × hops, and vice versa.
+            let plan_link: u64 = c.plan.iter().map(|s| s.out_bytes * s.out_hops).sum();
+            assert_eq!(plan_link, c.link_bytes, "{}: plan link bytes", c.label);
+        }
+    }
+
+    #[test]
     fn single_platform_references_present() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
@@ -704,6 +774,40 @@ mod tests {
                 ex.candidates[i].label
             );
         }
+    }
+
+    #[test]
+    fn wide_cut_ships_every_live_tensor() {
+        use crate::graph::{Act, Graph, LayerKind};
+        // Residual block: the cut after c2 has both r1 and c2 live, so
+        // a partition there must pay for a two-tensor transfer.
+        let mut g = Graph::new("wide");
+        let x = g.input(4, 8, 8);
+        let conv = LayerKind::Conv2d {
+            out_c: 4,
+            kernel: (3, 3),
+            stride: (1, 1),
+            pad: (1, 1),
+            groups: 1,
+            bias: false,
+        };
+        let c1 = g.add(conv.clone(), &[x]);
+        let r1 = g.add(LayerKind::Activation(Act::Relu), &[c1]);
+        let c2 = g.add(conv, &[r1]);
+        let add = g.add(LayerKind::Add, &[r1, c2]);
+        g.add(LayerKind::GlobalAvgPool, &[add]);
+        let sys = quick_sys();
+        let ev = ChainEvaluator::new(&g, &sys);
+        let wide = ev.cuts.iter().find(|c| !c.is_clean()).expect("a wide cut");
+        assert_eq!(wide.tensors.len(), 2);
+        let m = ev.evaluate(&[wide.pos]);
+        let bits = sys.platforms[0].accelerator.bits;
+        // The candidate is charged for the full multi-tensor payload —
+        // and its runtime plan ships the same bytes.
+        assert_eq!(m.link_bytes, wide.bytes(bits));
+        assert_eq!(m.plan[0].out_bytes, wide.bytes(bits));
+        let single_tensor = (4 * 8 * 8 * bits as usize).div_ceil(8) as u64;
+        assert_eq!(m.link_bytes, 2 * single_tensor);
     }
 
     #[test]

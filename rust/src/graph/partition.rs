@@ -189,6 +189,39 @@ mod tests {
     }
 
     #[test]
+    fn wide_cut_carries_every_live_tensor() {
+        // Two skip connections crossing the same region of the
+        // schedule: input -> r1 -> r2 -> r3, add1(r1, r3), add2(r2, add1).
+        // The cut after r3 has r1, r2 AND r3 live — a triple-tensor
+        // transfer, the widest this chain produces.
+        let mut g = Graph::new("skips");
+        let x = g.input(4, 8, 8);
+        let r1 = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let r2 = g.add(LayerKind::Activation(Act::Relu), &[r1]);
+        let r3 = g.add(LayerKind::Activation(Act::Relu), &[r2]);
+        let add1 = g.add(LayerKind::Add, &[r1, r3]);
+        let add2 = g.add(LayerKind::Add, &[r2, add1]);
+        g.add(LayerKind::GlobalAvgPool, &[add2]);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let cuts = all_cuts(&g, &order);
+        let pos_r3 = order.iter().position(|&v| v == r3).unwrap();
+        let wide = &cuts[pos_r3];
+        assert!(!wide.is_clean());
+        assert_eq!(wide.tensors, vec![r1, r2, r3]);
+        let per_tensor = 4 * 8 * 8;
+        assert_eq!(wide.elems, 3 * per_tensor);
+        // The multi-tensor transfer is charged for every live tensor,
+        // at any bit width (sub-byte rounds up over the whole payload).
+        assert_eq!(wide.bytes(16), (3 * per_tensor * 2) as u64);
+        assert_eq!(wide.bytes(8), (3 * per_tensor) as u64);
+        assert_eq!(wide.bytes(4), (3 * per_tensor).div_ceil(2) as u64);
+        // Widths shrink as consumers retire: after add1 only r2 and
+        // add1 remain live.
+        let pos_add1 = order.iter().position(|&v| v == add1).unwrap();
+        assert_eq!(cuts[pos_add1].tensors.len(), 2);
+    }
+
+    #[test]
     fn cut_bytes_respects_bitwidth() {
         let g = chain(2);
         let order = topo_sort(&g, TieBreak::Deterministic);

@@ -8,7 +8,8 @@
 //!
 //! Architecture (three layers):
 //! * **L3 — this crate**: graph analysis, memory/link/accuracy/hardware
-//!   models, NSGA-II, the explorer, and the pipeline coordinator.
+//!   models, NSGA-II, the explorer, the pipeline coordinator, and the
+//!   discrete-event serving simulator (`sim`).
 //! * **L2 — `python/compile/model.py`**: JAX model (build time only).
 //! * **L1 — `python/compile/kernels/`**: Pallas kernels (build time only).
 //!
@@ -24,6 +25,7 @@ pub mod coordinator;
 pub mod nsga2;
 pub mod report;
 pub mod runtime;
+pub mod sim;
 pub mod link;
 pub mod memory;
 pub mod zoo;

@@ -113,15 +113,6 @@ mod tests {
     use super::*;
 
     #[test]
-    fn zero_bytes_is_free() {
-        let l = LinkModel::gigabit_ethernet();
-        assert_eq!(l.latency_s(0), 0.0);
-        assert_eq!(l.energy_j(0), 0.0);
-        assert_eq!(l.packets(0), 0);
-        assert!(l.throughput_ceiling(0).is_infinite());
-    }
-
-    #[test]
     fn latency_monotonic_in_bytes() {
         let l = LinkModel::gigabit_ethernet();
         let mut prev = 0.0;
@@ -149,6 +140,45 @@ mod tests {
         assert_eq!(l.packets(1460), 1);
         assert_eq!(l.packets(1461), 2);
         assert_eq!(l.packets(14600), 10);
+    }
+
+    #[test]
+    fn exact_mtu_multiples_add_no_phantom_packet() {
+        let l = LinkModel::gigabit_ethernet();
+        // Payload exactly at k × MTU is exactly k packets — the sim's
+        // per-batch transfers land on these boundaries constantly
+        // (batch × power-of-two feature maps).
+        for k in [1u64, 2, 10, 1000] {
+            assert_eq!(l.packets(k * l.mtu_payload), k, "k={k}");
+            assert_eq!(l.packets(k * l.mtu_payload + 1), k + 1, "k={k}+1");
+            assert_eq!(l.packets(k * l.mtu_payload - 1), k, "k={k}-1");
+        }
+        // One byte past the boundary costs exactly one extra packet's
+        // processing latency plus one byte of serialization.
+        let at = l.latency_s(2 * l.mtu_payload);
+        let over = l.latency_s(2 * l.mtu_payload + 1);
+        let expect = l.per_packet_s + 8.0 / l.bandwidth_bps;
+        assert!((over - at - expect).abs() < 1e-12, "latency step {}", over - at);
+        // Same for energy: one packet's framing plus one byte.
+        let e_at = l.energy_j(2 * l.mtu_payload);
+        let e_over = l.energy_j(2 * l.mtu_payload + 1);
+        let e_expect = l.energy_per_packet_j + l.energy_per_byte_j;
+        assert!((e_over - e_at - e_expect).abs() < 1e-15, "energy step {}", e_over - e_at);
+        // And the pipelined ceiling drops when the extra packet appears.
+        assert!(l.throughput_ceiling(l.mtu_payload + 1) < l.throughput_ceiling(l.mtu_payload));
+    }
+
+    #[test]
+    fn zero_byte_transfer_is_free_everywhere() {
+        // Single-platform schedules transfer nothing: every link
+        // quantity must be exactly zero/identity, not epsilon.
+        for l in [LinkModel::gigabit_ethernet(), LinkModel::ideal()] {
+            assert_eq!(l.packets(0), 0, "{}", l.name);
+            assert_eq!(l.latency_s(0), 0.0, "{}", l.name);
+            assert_eq!(l.energy_j(0), 0.0, "{}", l.name);
+            assert!(l.throughput_ceiling(0).is_infinite(), "{}", l.name);
+        }
+        assert_eq!(LinkModel::required_bps(0, 1000.0), 0.0);
     }
 
     #[test]

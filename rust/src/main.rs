@@ -7,15 +7,18 @@
 //!   * `evaluate`  — per-layer hardware costs on each platform
 //!   * `pipeline`  — execute a partitioned schedule on real AOT
 //!                   artifacts over the simulated link (Definition 4)
+//!   * `simulate`  — discrete-event serving simulation of the explored
+//!                   Pareto front at millions-of-requests scale
 //!   * `report`    — regenerate every paper figure/table into reports/
 
 use partir::config::SystemConfig;
-use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
 use partir::explorer::{explore_two_platform_cached, multi};
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::hw::{CacheLoad, CostCache, HwEvaluator};
 use partir::report;
 use partir::runtime::Manifest;
+use partir::sim::{self, Scenario, SimCfg};
 use partir::util::cli::{Args, Command};
 use partir::util::parallel::default_jobs;
 use partir::util::units::{fmt_count, fmt_energy_j, fmt_time_s};
@@ -32,6 +35,7 @@ fn main() {
         Some("chain") => dispatch(chain_cmd(), &argv[1..], cmd_chain),
         Some("evaluate") => dispatch(evaluate_cmd(), &argv[1..], cmd_evaluate),
         Some("pipeline") => dispatch(pipeline_cmd(), &argv[1..], cmd_pipeline),
+        Some("simulate") => dispatch(simulate_cmd(), &argv[1..], cmd_simulate),
         Some("report") => dispatch(report_cmd(), &argv[1..], cmd_report),
         Some("--help") | Some("-h") | None => {
             print_usage();
@@ -56,6 +60,7 @@ fn print_usage() {
          \x20 chain      N-platform chain exploration (NSGA-II)\n\
          \x20 evaluate   per-layer hardware costs for a model\n\
          \x20 pipeline   run partitioned inference on AOT artifacts\n\
+         \x20 simulate   discrete-event serving simulation of the Pareto front\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
          Run `partir <COMMAND> --help` for options."
     );
@@ -399,8 +404,7 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
     };
 
     let cfg = PipelineCfg {
-        max_batch: batch,
-        batch_wait: Duration::from_millis(1),
+        batch: BatchPolicy::new(batch, Duration::from_millis(1)),
         simulate_link: !args.flag("no-link"),
         ..Default::default()
     };
@@ -417,6 +421,124 @@ fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
         m.accuracy.fp32,
         m.accuracy.ptq8
     );
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// simulate
+// ---------------------------------------------------------------------
+
+fn simulate_cmd() -> Command {
+    Command::new(
+        "simulate",
+        "discrete-event serving simulation of the explored Pareto front",
+    )
+    .opt("model", Some("efficientnet_b0"), "zoo model name")
+    .opt("config", None, "system TOML (default: paper EYR+SMB over GbE)")
+    .opt(
+        "scenario",
+        Some("steady"),
+        "traffic scenario: steady|burst|diurnal|degraded or a TOML file",
+    )
+    .opt("requests", None, "requests to simulate for built-in scenarios [default: 1000000]")
+    .opt("rate", None, "arrival rate in req/s for built-in scenarios (default: 1.5x best single-platform)")
+    .opt("slo-ms", None, "end-to-end deadline in ms (counts SLO violations)")
+    .opt("seed", None, "override exploration + arrival seed")
+    .opt("out", None, "write the ranking CSV to this path")
+    .opt("jobs", None, "worker threads (default: all hardware threads)")
+    .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+    .flag("qat", "apply QAT accuracy recovery")
+    .flag("full-search", "full mapper search budget (default: fast, the DSE is a means here)")
+}
+
+fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
+    let g = build_model(args)?;
+    let mut sys = load_sys(args)?;
+    // The DSE is only the input here; trim its budget unless asked not
+    // to, so a million-request simulation stays interactive end to end.
+    if !args.flag("full-search") {
+        sys.search.victory = 20;
+        sys.search.max_samples = 200;
+    }
+
+    // 1. Explore: the candidate set the simulator ranks.
+    let cache = open_cache(&sys);
+    let ex = if sys.platforms.len() == 2 {
+        explore_two_platform_cached(&g, &sys, Arc::clone(&cache))
+    } else {
+        multi::explore_chain_cached(&g, &sys, Arc::clone(&cache))
+    };
+    persist_cache(&sys, &cache);
+    let single_best = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 1 && c.feasible())
+        .map(|c| c.throughput)
+        .fold(0.0f64, f64::max);
+
+    // 2. Scenario: built-in catalog or a TOML file. Only the built-ins
+    // take --requests/--rate; a TOML scenario defines its own arrivals,
+    // so the default-rate derivation (which needs a feasible
+    // single-platform candidate) must not run — or fail — for it.
+    let scenario_arg = args.get("scenario").unwrap();
+    let rate_arg = args.get_f64("rate").map_err(anyhow::Error::msg)?;
+    let requests_arg = args.get_usize("requests").map_err(anyhow::Error::msg)?;
+    let requests = requests_arg.unwrap_or(1_000_000);
+    let mut scenario = if Scenario::builtin_names().contains(&scenario_arg) {
+        let rate = match rate_arg {
+            Some(r) => r,
+            // Default: overload the best single platform so the ranking
+            // shows what partitioning buys at the margin.
+            None => {
+                anyhow::ensure!(
+                    single_best > 0.0,
+                    "no feasible single-platform candidate; pass --rate explicitly"
+                );
+                1.5 * single_best
+            }
+        };
+        anyhow::ensure!(rate > 0.0, "--rate must be positive");
+        Scenario::by_name(scenario_arg, requests, rate).unwrap()
+    } else {
+        if rate_arg.is_some() || requests_arg.is_some() {
+            eprintln!(
+                "note: --rate/--requests are ignored — TOML scenario '{scenario_arg}' defines its own arrivals"
+            );
+        }
+        Scenario::from_toml_file(Path::new(scenario_arg))
+            .map_err(|e| anyhow::anyhow!("scenario '{scenario_arg}': {e}"))?
+    };
+    if let Some(ms) = args.get_f64("slo-ms").map_err(anyhow::Error::msg)? {
+        scenario.deadline_s = Some(ms * 1e-3);
+    }
+
+    // 3. Simulate + rank.
+    let cfg = SimCfg::from_system(&sys);
+    let t0 = std::time::Instant::now();
+    let ranked = sim::evaluate_front(&ex, &sys, &scenario, &cfg, sys.jobs.max(1));
+    let sim_s = t0.elapsed().as_secs_f64();
+    println!(
+        "model {} — scenario '{}': {} requests, {} candidates simulated in {}\n",
+        ex.model,
+        scenario.name,
+        scenario.requests,
+        ranked.len(),
+        fmt_time_s(sim_s),
+    );
+    print!("{}", sim::render_ranking(&ranked));
+    if let Some((label, gain)) = sim::best_gain_over_single(&ranked) {
+        println!("\nbest partitioned deployment: {label} ({gain:+.1}% simulated throughput vs best single platform)");
+    }
+    // One digest over the whole ranking: bit-identical across --jobs.
+    let mut h = partir::util::hash::Fnv64::new();
+    for r in &ranked {
+        h.write_u64(r.fingerprint);
+    }
+    println!("ranking fingerprint: {:016x}", h.finish());
+    if let Some(out) = args.get("out") {
+        report::sim_csv(&ranked).write_file(Path::new(out))?;
+        println!("wrote {out}");
+    }
     Ok(())
 }
 

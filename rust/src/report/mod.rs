@@ -178,6 +178,40 @@ pub fn throughput_gain(ex: &Exploration) -> Option<(String, f64)> {
     Some((best.label.clone(), 100.0 * (best.throughput - single) / single))
 }
 
+/// Simulated-serving ranking: one row per candidate evaluated by
+/// `sim::evaluate_front` under a traffic scenario.
+pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
+    let mut csv = Csv::new(&[
+        "label",
+        "partitions",
+        "goodput_ips",
+        "throughput_ips",
+        "p50_ms",
+        "p99_ms",
+        "completed",
+        "dropped",
+        "slo_violations",
+        "energy_j",
+        "fingerprint",
+    ]);
+    for r in ranked {
+        csv.row(&[
+            r.label.clone(),
+            r.partitions.to_string(),
+            num(r.goodput),
+            num(r.throughput),
+            num(r.p50_s * 1e3),
+            num(r.p99_s * 1e3),
+            r.completed.to_string(),
+            r.dropped.to_string(),
+            r.slo_violations.to_string(),
+            num(r.energy_j),
+            format!("{:016x}", r.fingerprint),
+        ]);
+    }
+    csv
+}
+
 /// Pareto metric columns used when exporting fronts of arbitrary metric
 /// sets (Table II runs use latency/energy/link-bytes).
 pub fn front_csv(ex: &Exploration, metrics: &[Metric]) -> Csv {
@@ -244,6 +278,29 @@ mod tests {
         let text = render_exploration(&ex, &sys);
         assert!(text.contains("favorite"));
         assert!(text.contains("Pareto front"));
+    }
+
+    #[test]
+    fn sim_csv_row_per_ranked_candidate() {
+        let ranked = vec![crate::sim::RankedCandidate {
+            candidate: 2,
+            label: "split".into(),
+            partitions: 2,
+            throughput: 950.0,
+            goodput: 900.0,
+            p50_s: 0.004,
+            p99_s: 0.012,
+            completed: 9000,
+            dropped: 1000,
+            slo_violations: 500,
+            energy_j: 12.5,
+            fingerprint: 0xdead_beef,
+        }];
+        let csv = sim_csv(&ranked);
+        assert_eq!(csv.len(), 1);
+        let text = csv.to_string();
+        assert!(text.starts_with("label,partitions,goodput_ips"));
+        assert!(text.contains("split,2,900,950,4,12,9000,1000,500,12.5,00000000deadbeef"));
     }
 
     #[test]

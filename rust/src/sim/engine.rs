@@ -1,0 +1,566 @@
+//! The discrete-event core: a virtual-nanosecond clock, one binary
+//! event heap with sequence-number tie-breaking, and per-stage state
+//! machines (bounded queue → dynamic batcher → server → link).
+//!
+//! Everything here is single-threaded and free of wall-clock reads and
+//! RNG: arrivals are precomputed by the scenario on the caller's
+//! thread, service and link times are pure functions of `(stage, batch
+//! size, virtual time)`. That makes a run a pure function of its inputs
+//! — the foundation of the bit-identical `--jobs` contract.
+
+use super::scenario::Scenario;
+use super::{Deployment, SimCfg, SimReport};
+use crate::coordinator::{BatchPolicy, Completion, PipelineReport, StageStats};
+use crate::link::LinkModel;
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, VecDeque};
+use std::time::Duration;
+
+/// Virtual seconds → integer nanoseconds (round-to-nearest). Integer
+/// time keeps event ordering exact: no f64 accumulation drift.
+pub(crate) fn s_to_ns(s: f64) -> u64 {
+    debug_assert!(s.is_finite() && s >= 0.0, "bad duration {s}");
+    (s * 1e9).round() as u64
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+enum EventKind {
+    /// The batch-wait budget of `stage`'s forming batch expired.
+    /// Stale generations (a batch already started) are ignored.
+    BatchTimeout { stage: usize, gen: u64 },
+    /// `stage`'s in-flight batch finished compute + link transfer.
+    ComputeDone { stage: usize },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+struct Event {
+    at: u64,
+    /// Tie-break for identical timestamps: strictly increasing issue
+    /// order, so the heap pops deterministically.
+    seq: u64,
+    kind: EventKind,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Req {
+    id: u64,
+    submit_ns: u64,
+}
+
+/// Plain-data per-stage parameters (copied out of the deployment so the
+/// engine owns everything it touches in the hot loop).
+#[derive(Debug, Clone, Copy)]
+struct StageParams {
+    base_s: f64,
+    per_item_s: f64,
+    energy_per_item_j: f64,
+    out_bytes: u64,
+    out_hops: u64,
+}
+
+#[derive(Debug, Default)]
+struct StageState {
+    queue: VecDeque<Req>,
+    busy: bool,
+    /// Current batch-timer generation; a timeout event with an older
+    /// generation is stale and ignored.
+    timer_gen: u64,
+    in_flight: Vec<Req>,
+    batches: u64,
+    items: u64,
+    busy_ns: u64,
+    link_ns: u64,
+    dropped: u64,
+}
+
+struct Engine {
+    params: Vec<StageParams>,
+    link: LinkModel,
+    /// (stage, from_ns, to_ns, factor) slowdown windows.
+    slowdowns: Vec<(usize, u64, u64, f64)>,
+    /// (from_ns, to_ns, factor) link-degradation windows.
+    link_faults: Vec<(u64, u64, f64)>,
+    /// The shared batch-close semantics (`closes`/`take`) — the same
+    /// object the coordinator's `collect` consults, so the two
+    /// runtimes cannot drift apart.
+    batch: BatchPolicy,
+    /// `batch.max_wait` in virtual ns (timer scheduling).
+    wait_ns: u64,
+    depth: usize,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    stages: Vec<StageState>,
+    completions: Vec<Completion>,
+    energy_j: f64,
+    events: u64,
+    last_ns: u64,
+}
+
+impl Engine {
+    fn push(&mut self, at: u64, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { at, seq: self.seq, kind }));
+    }
+
+    fn slowdown_factor(&self, stage: usize, t: u64) -> f64 {
+        let mut f = 1.0;
+        for &(s, from, to, factor) in &self.slowdowns {
+            if s == stage && (from..to).contains(&t) {
+                f *= factor;
+            }
+        }
+        f
+    }
+
+    fn link_factor(&self, t: u64) -> f64 {
+        let mut f = 1.0;
+        for &(from, to, factor) in &self.link_faults {
+            if (from..to).contains(&t) {
+                f *= factor;
+            }
+        }
+        f
+    }
+
+    fn arrive(&mut self, id: u64, t: u64) {
+        self.events += 1;
+        self.enqueue(0, Req { id, submit_ns: t }, t);
+    }
+
+    fn enqueue(&mut self, s: usize, req: Req, t: u64) {
+        if self.stages[s].queue.len() >= self.depth {
+            // Bounded queue: shed load, account the drop. A drop is a
+            // request leaving the system, so it advances the wall.
+            self.last_ns = self.last_ns.max(t);
+            self.stages[s].dropped += 1;
+            self.completions.push(Completion {
+                id: req.id,
+                latency: Duration::from_nanos(t - req.submit_ns),
+                ok: false,
+                prediction: None,
+            });
+            return;
+        }
+        self.stages[s].queue.push_back(req);
+        if !self.stages[s].busy {
+            // A full batch dispatches immediately (shared policy); a
+            // zero wait budget instead rides the same-instant timer so
+            // co-arriving requests still batch together, exactly like
+            // `collect`'s post-deadline drain.
+            if self.batch.full(self.stages[s].queue.len()) {
+                self.start_batch(s, t);
+            } else if self.stages[s].queue.len() == 1 {
+                // New head on an idle server: the wait budget starts now
+                // (the coordinator's `collect` measures from its first
+                // recv — same semantics).
+                self.schedule_timeout(s, t);
+            }
+        }
+    }
+
+    fn schedule_timeout(&mut self, s: usize, t: u64) {
+        self.stages[s].timer_gen += 1;
+        let gen = self.stages[s].timer_gen;
+        self.push(t + self.wait_ns, EventKind::BatchTimeout { stage: s, gen });
+    }
+
+    fn start_batch(&mut self, s: usize, t: u64) {
+        let n = self.batch.take(self.stages[s].queue.len());
+        debug_assert!(n >= 1, "starting an empty batch");
+        let p = self.params[s];
+        let svc_ns =
+            s_to_ns((p.base_s + p.per_item_s * n as f64) * self.slowdown_factor(s, t));
+        let bytes = n as u64 * p.out_bytes;
+        let (link_ns, link_energy) = if p.out_hops > 0 && bytes > 0 {
+            // The transfer begins when compute ends — fault windows are
+            // defined over *transfer* start times (see `FaultWindow`).
+            let t_xfer = t + svc_ns;
+            (
+                s_to_ns(self.link.latency_s(bytes) * p.out_hops as f64 * self.link_factor(t_xfer)),
+                self.link.energy_j(bytes) * p.out_hops as f64,
+            )
+        } else {
+            (0, 0.0)
+        };
+        self.energy_j += link_energy + p.energy_per_item_j * n as f64;
+        let st = &mut self.stages[s];
+        st.timer_gen += 1; // invalidate any pending batch timer
+        st.in_flight = st.queue.drain(..n).collect();
+        st.busy = true;
+        st.batches += 1;
+        st.items += n as u64;
+        st.busy_ns += svc_ns;
+        st.link_ns += link_ns;
+        // The link transfer occupies the sending stage (the coordinator
+        // sleeps it on the stage thread), so the server frees — and the
+        // batch lands downstream — when both are done.
+        self.push(t + svc_ns + link_ns, EventKind::ComputeDone { stage: s });
+    }
+
+    // The wall clock (`last_ns`) advances only when a request *leaves*
+    // the system (completion or drop) — never on popped events, else a
+    // stale trailing batch timer would pad the makespan by up to one
+    // wait budget and deflate every throughput number derived from it.
+    fn dispatch(&mut self, e: Event) {
+        self.events += 1;
+        match e.kind {
+            EventKind::BatchTimeout { stage, gen } => {
+                let st = &self.stages[stage];
+                if st.busy || gen != st.timer_gen || st.queue.is_empty() {
+                    return; // stale timer
+                }
+                self.start_batch(stage, e.at);
+            }
+            EventKind::ComputeDone { stage } => {
+                let batch = std::mem::take(&mut self.stages[stage].in_flight);
+                self.stages[stage].busy = false;
+                if stage + 1 < self.params.len() {
+                    for req in batch {
+                        self.enqueue(stage + 1, req, e.at);
+                    }
+                } else {
+                    self.last_ns = self.last_ns.max(e.at);
+                    for req in batch {
+                        self.completions.push(Completion {
+                            id: req.id,
+                            latency: Duration::from_nanos(e.at - req.submit_ns),
+                            ok: true,
+                            prediction: None,
+                        });
+                    }
+                }
+                // Server freed: close the next batch per policy — full
+                // immediately, otherwise restart the wait budget (the
+                // coordinator's collect() re-arms its deadline the same
+                // way when it loops).
+                let qlen = self.stages[stage].queue.len();
+                if self.batch.full(qlen) {
+                    self.start_batch(stage, e.at);
+                } else if qlen > 0 {
+                    self.schedule_timeout(stage, e.at);
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn run(dep: &Deployment, cfg: &SimCfg, scenario: &Scenario) -> SimReport {
+    let arrivals = scenario.arrival_times_ns(cfg.seed);
+    run_with_arrivals(dep, cfg, scenario, &arrivals)
+}
+
+/// [`run`] against a pre-expanded arrival trace — `evaluate_front`
+/// shares one trace across every candidate instead of re-running the
+/// (identical) scenario expansion per deployment.
+pub(crate) fn run_with_arrivals(
+    dep: &Deployment,
+    cfg: &SimCfg,
+    scenario: &Scenario,
+    arrivals: &[u64],
+) -> SimReport {
+    assert!(!dep.stages.is_empty(), "deployment needs at least one stage");
+    let mut eng = Engine {
+        params: dep
+            .stages
+            .iter()
+            .map(|m| StageParams {
+                base_s: m.base_s,
+                per_item_s: m.per_item_s,
+                energy_per_item_j: m.energy_per_item_j,
+                out_bytes: m.out_bytes_per_item,
+                out_hops: m.out_hops,
+            })
+            .collect(),
+        link: dep.link.clone(),
+        slowdowns: scenario
+            .slowdowns
+            .iter()
+            .map(|w| (w.stage, s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
+            .collect(),
+        link_faults: scenario
+            .link_faults
+            .iter()
+            .map(|w| (s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
+            .collect(),
+        batch: BatchPolicy::new(cfg.batch.max_batch.max(1), cfg.batch.max_wait),
+        wait_ns: s_to_ns(cfg.batch.max_wait.as_secs_f64()),
+        depth: cfg.queue_depth.max(1),
+        heap: BinaryHeap::new(),
+        seq: 0,
+        stages: dep.stages.iter().map(|_| StageState::default()).collect(),
+        completions: Vec::with_capacity(arrivals.len()),
+        energy_j: 0.0,
+        events: 0,
+        last_ns: 0,
+    };
+
+    // Merge the (sorted) arrival stream with the event heap instead of
+    // preloading a million arrival events: ties go to the arrival, so an
+    // arrival at exactly a batch-close instant still joins that batch.
+    let mut next = 0usize;
+    loop {
+        let heap_at = eng.heap.peek().map(|Reverse(e)| e.at);
+        match (arrivals.get(next).copied(), heap_at) {
+            (Some(a), Some(h)) if a <= h => {
+                eng.arrive(next as u64, a);
+                next += 1;
+            }
+            (Some(a), None) => {
+                eng.arrive(next as u64, a);
+                next += 1;
+            }
+            (_, Some(_)) => {
+                let Reverse(e) = eng.heap.pop().unwrap();
+                eng.dispatch(e);
+            }
+            (None, None) => break,
+        }
+    }
+    debug_assert_eq!(
+        eng.completions.len(),
+        arrivals.len(),
+        "every request must complete or be dropped exactly once"
+    );
+
+    eng.completions.sort_by_key(|c| c.id);
+    let deadline_ns = scenario.deadline_s.map(s_to_ns);
+    let completed: u64 = eng.completions.iter().filter(|c| c.ok).count() as u64;
+    let dropped = eng.completions.len() as u64 - completed;
+    let slo_violations = match deadline_ns {
+        Some(d) => eng
+            .completions
+            .iter()
+            .filter(|c| c.ok && c.latency.as_nanos() as u64 > d)
+            .count() as u64,
+        None => 0,
+    };
+    let wall = Duration::from_nanos(eng.last_ns);
+    let stages: Vec<StageStats> = dep
+        .stages
+        .iter()
+        .zip(&eng.stages)
+        .map(|(m, st)| StageStats {
+            name: m.name.clone(),
+            batches: st.batches,
+            items: st.items,
+            busy: Duration::from_nanos(st.busy_ns),
+            link: Duration::from_nanos(st.link_ns),
+            failures: st.dropped,
+        })
+        .collect();
+    let wall_s = wall.as_secs_f64();
+    let goodput = if wall_s > 0.0 {
+        (completed - slo_violations) as f64 / wall_s
+    } else {
+        0.0
+    };
+    SimReport {
+        pipeline: PipelineReport { completions: eng.completions, wall, stages },
+        dropped,
+        slo_violations,
+        goodput,
+        energy_j: eng.energy_j,
+        events: eng.events,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::BatchPolicy;
+    use crate::sim::{simulate, Scenario};
+
+    fn cfg(max_batch: usize, wait_us: u64, depth: usize) -> SimCfg {
+        SimCfg {
+            batch: BatchPolicy::new(max_batch, Duration::from_micros(wait_us)),
+            queue_depth: depth,
+            seed: 42,
+        }
+    }
+
+    #[test]
+    fn conserves_requests_under_capacity() {
+        // 2k req at 1000/s through a 0.2 ms bottleneck: no drops.
+        let dep = Deployment::synthetic("2s", &[0.0002, 0.0002], 4096);
+        let r = simulate(&dep, &cfg(8, 500, 1024), &Scenario::steady(2000, 1000.0));
+        assert_eq!(r.pipeline.completions.len(), 2000);
+        assert_eq!(r.dropped, 0);
+        assert_eq!(r.pipeline.completed(), 2000);
+        // IDs are complete and unique after the sort.
+        for (i, c) in r.pipeline.completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64);
+        }
+    }
+
+    #[test]
+    fn overload_drops_at_bounded_queue() {
+        // 5 ms/item server fed at 2000/s: capacity ~200/s, queue 16.
+        let dep = Deployment::synthetic("slow", &[0.005], 0);
+        let r = simulate(&dep, &cfg(1, 100, 16), &Scenario::steady(3000, 2000.0));
+        assert_eq!(r.pipeline.completions.len(), 3000);
+        assert!(r.dropped > 0, "no drops under 10x overload");
+        assert_eq!(r.dropped as usize + r.pipeline.completed(), 3000);
+        assert_eq!(r.pipeline.stages[0].failures, r.dropped);
+        // Sustained rate ≈ server capacity, not the offered rate.
+        let th = r.throughput();
+        assert!((150.0..250.0).contains(&th), "throughput {th}");
+    }
+
+    #[test]
+    fn throughput_matches_bottleneck_when_saturated() {
+        // Open loop at 3x the bottleneck rate with a deep queue: the
+        // pipeline sustains ~1/bottleneck.
+        let dep = Deployment::synthetic("pipe", &[0.0005, 0.001], 1024);
+        let r = simulate(&dep, &cfg(1, 10, 64), &Scenario::steady(5000, 3000.0));
+        let th = r.throughput();
+        assert!((800.0..1100.0).contains(&th), "bottleneck 1 kHz, got {th}");
+    }
+
+    #[test]
+    fn batching_amortizes_link_base_latency() {
+        // 150 µs GbE base latency per transfer dominates at batch 1
+        // (~5.8k inf/s ceiling); offer well above it so the batch-1 run
+        // saturates while batch 8 amortizes the base latency 8-fold.
+        let dep = Deployment::synthetic("linky", &[1e-5, 1e-5], 1460);
+        let sc = Scenario::steady(4000, 20_000.0);
+        let b1 = simulate(&dep, &cfg(1, 200, 4096), &sc);
+        let b8 = simulate(&dep, &cfg(8, 200, 4096), &sc);
+        assert!(
+            b8.throughput() > 1.5 * b1.throughput(),
+            "batch 8 {} <= 1.5x batch 1 {}",
+            b8.throughput(),
+            b1.throughput()
+        );
+    }
+
+    #[test]
+    fn batch_never_exceeds_policy() {
+        let dep = Deployment::synthetic("b", &[0.0001], 0);
+        let r = simulate(&dep, &cfg(4, 1000, 4096), &Scenario::steady(3000, 50_000.0));
+        let s = &r.pipeline.stages[0];
+        assert!(s.batches * 4 >= s.items, "some batch exceeded max_batch");
+        // Under heavy load the mean fill should approach the cap.
+        assert!(s.mean_batch() > 3.0, "mean fill {}", s.mean_batch());
+    }
+
+    #[test]
+    fn partial_batches_close_after_wait_budget() {
+        // One request: nothing else ever arrives, so only the wait
+        // budget can close the batch.
+        let dep = Deployment::synthetic("lone", &[0.001], 0);
+        let r = simulate(&dep, &cfg(8, 2000, 8), &Scenario::steady(1, 10.0));
+        assert_eq!(r.pipeline.completed(), 1);
+        let lat = r.pipeline.completions[0].latency.as_secs_f64();
+        // wait (2 ms) + service (1 ms), exact on the virtual clock.
+        assert!((lat - 0.003).abs() < 1e-9, "latency {lat}");
+    }
+
+    #[test]
+    fn stale_trailing_timer_does_not_extend_wall() {
+        // 8 co-arriving requests fill a batch instantly; the pending
+        // 2 ms batch timer is stale and must not pad the wall clock.
+        let dep = Deployment::synthetic("w", &[0.0001], 0);
+        let r = simulate(&dep, &cfg(8, 2000, 16), &Scenario::replay(vec![0.0; 8]));
+        assert_eq!(r.pipeline.completed(), 8);
+        let wall = r.pipeline.wall.as_secs_f64();
+        assert!((wall - 0.0008).abs() < 1e-9, "wall {wall} includes a stale timer");
+    }
+
+    #[test]
+    fn slowdown_window_degrades_latency() {
+        let mut sc = Scenario::steady(2000, 1000.0);
+        sc.slowdowns.push(crate::sim::Slowdown {
+            stage: 0,
+            from_s: 0.5,
+            to_s: 1.5,
+            factor: 20.0,
+        });
+        let dep = Deployment::synthetic("s", &[0.0005], 0);
+        let base = simulate(&dep, &cfg(4, 200, 64), &Scenario::steady(2000, 1000.0));
+        let slow = simulate(&dep, &cfg(4, 200, 64), &sc);
+        assert!(
+            slow.pipeline.latency_percentile(99.0) > 2.0 * base.pipeline.latency_percentile(99.0),
+            "slowdown window had no p99 effect"
+        );
+        assert!(slow.pipeline.stages[0].busy > base.pipeline.stages[0].busy);
+    }
+
+    #[test]
+    fn link_fault_window_degrades_latency() {
+        let mut sc = Scenario::steady(1000, 500.0);
+        sc.link_faults.push(crate::sim::FaultWindow { from_s: 0.0, to_s: 10.0, factor: 50.0 });
+        let dep = Deployment::synthetic("l", &[0.0002, 0.0002], 100_000);
+        let base = simulate(&dep, &cfg(4, 200, 256), &Scenario::steady(1000, 500.0));
+        let degraded = simulate(&dep, &cfg(4, 200, 256), &sc);
+        assert!(degraded.pipeline.stages[0].link > base.pipeline.stages[0].link);
+    }
+
+    #[test]
+    fn deadline_slo_accounting() {
+        let mut sc = Scenario::steady(2000, 4000.0);
+        sc.deadline_s = Some(0.002);
+        // Saturated server: queueing pushes many completions past 2 ms.
+        let dep = Deployment::synthetic("slo", &[0.0005], 0);
+        let r = simulate(&dep, &cfg(8, 100, 512), &sc);
+        assert!(r.slo_violations > 0, "no SLO violations under saturation");
+        assert!(r.goodput < r.throughput());
+        // Goodput + violation rate = throughput (over the same wall).
+        let viol_rate = r.slo_violations as f64 / r.pipeline.wall.as_secs_f64();
+        assert!((r.goodput + viol_rate - r.throughput()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn empty_scenario_is_well_defined() {
+        let dep = Deployment::synthetic("none", &[0.001], 0);
+        let r = simulate(&dep, &cfg(8, 100, 8), &Scenario::steady(0, 100.0));
+        assert_eq!(r.pipeline.completions.len(), 0);
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.goodput, 0.0);
+        assert!(!r.render().contains("NaN"));
+    }
+
+    #[test]
+    fn repeated_runs_are_bit_identical() {
+        let dep = Deployment::synthetic("det", &[0.0004, 0.0006], 8192);
+        let mut sc = Scenario::bursty(20_000, 800.0, 5000.0);
+        sc.deadline_s = Some(0.01);
+        let a = simulate(&dep, &cfg(8, 500, 128), &sc);
+        let b = simulate(&dep, &cfg(8, 500, 128), &sc);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.events, b.events);
+        for (x, y) in a.pipeline.completions.iter().zip(&b.pipeline.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.latency, y.latency);
+            assert_eq!(x.ok, y.ok);
+        }
+    }
+
+    #[test]
+    fn seed_changes_arrivals_but_preserves_conservation() {
+        let dep = Deployment::synthetic("seed", &[0.0005], 0);
+        let mut c1 = cfg(4, 200, 64);
+        let mut c2 = cfg(4, 200, 64);
+        c1.seed = 1;
+        c2.seed = 2;
+        let sc = Scenario::steady(5000, 1500.0);
+        let a = simulate(&dep, &c1, &sc);
+        let b = simulate(&dep, &c2, &sc);
+        assert_ne!(a.fingerprint(), b.fingerprint(), "different seeds, same trace?");
+        assert_eq!(a.pipeline.completions.len(), 5000);
+        assert_eq!(b.pipeline.completions.len(), 5000);
+    }
+
+    #[test]
+    fn virtual_clock_never_sleeps() {
+        // 200k requests through two stages in well under a second of
+        // real time — the point of the exercise.
+        let dep = Deployment::synthetic("fast", &[0.0002, 0.0003], 2048);
+        let t0 = std::time::Instant::now();
+        let r = simulate(&dep, &cfg(8, 500, 256), &Scenario::steady(200_000, 2500.0));
+        let real = t0.elapsed().as_secs_f64();
+        assert_eq!(r.pipeline.completions.len(), 200_000);
+        // Virtual wall is ~80 s of simulated serving.
+        assert!(r.pipeline.wall.as_secs_f64() > 10.0);
+        assert!(real < 10.0, "simulation too slow: {real}s");
+    }
+}

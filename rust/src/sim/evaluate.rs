@@ -1,0 +1,256 @@
+//! Close the loop with the explorer: replay one traffic scenario
+//! through every Pareto-front candidate (plus the single-platform
+//! references) and rank them by *simulated* serving behaviour — the
+//! quantities the analytical Definition 4 approximates.
+//!
+//! Candidates simulate independently, so the fan-out uses
+//! `util::parallel::par_map`: results land by candidate index and each
+//! simulation is a pure function of its inputs, making the ranking
+//! bit-identical for every `jobs` value (the DSE determinism contract).
+
+use super::{Deployment, Scenario, SimCfg};
+use crate::config::SystemConfig;
+use crate::explorer::Exploration;
+use crate::util::parallel::par_map;
+
+/// One candidate's simulated serving metrics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankedCandidate {
+    /// Index into `Exploration::candidates`.
+    pub candidate: usize,
+    pub label: String,
+    pub partitions: usize,
+    /// Simulated steady-state throughput (completions / virtual s).
+    pub throughput: f64,
+    /// Within-deadline completions / virtual s (= throughput without a
+    /// deadline) — the ranking key.
+    pub goodput: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub slo_violations: u64,
+    pub energy_j: f64,
+    /// `SimReport::fingerprint` of the underlying run (determinism
+    /// checks compare these across `--jobs` values).
+    pub fingerprint: u64,
+}
+
+/// Simulate the exploration's Pareto front — always including the
+/// single-platform references so every ranking contains its baselines —
+/// under one scenario, and rank by goodput (ties: throughput, then
+/// candidate index; fully deterministic).
+pub fn evaluate_front(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    scenario: &Scenario,
+    cfg: &SimCfg,
+    jobs: usize,
+) -> Vec<RankedCandidate> {
+    let mut idx: Vec<usize> = ex.pareto.clone();
+    // Baselines must be deployable: an infeasible single-platform
+    // candidate (e.g. over its memory budget) would skew the headline
+    // gain against a deployment that cannot actually run.
+    idx.extend(
+        ex.candidates
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| c.partitions == 1 && c.feasible())
+            .map(|(i, _)| i),
+    );
+    idx.sort_unstable();
+    idx.dedup();
+    // One trace, shared by every candidate: the scenario expansion is a
+    // pure function of (scenario, seed), so re-running it per candidate
+    // would only burn time (1M-request traces are ~8 MB of RNG work).
+    let arrivals = scenario.arrival_times_ns(cfg.seed);
+    let mut ranked: Vec<RankedCandidate> = par_map(jobs.max(1), &idx, |&i| {
+        let c = &ex.candidates[i];
+        let dep = Deployment::from_candidate(c, sys);
+        let r = super::engine::run_with_arrivals(&dep, cfg, scenario, &arrivals);
+        RankedCandidate {
+            candidate: i,
+            label: c.label.clone(),
+            partitions: c.partitions,
+            throughput: r.throughput(),
+            goodput: r.goodput,
+            p50_s: r.pipeline.latency_percentile(50.0),
+            p99_s: r.pipeline.latency_percentile(99.0),
+            completed: r.pipeline.completed() as u64,
+            dropped: r.dropped,
+            slo_violations: r.slo_violations,
+            energy_j: r.energy_j,
+            fingerprint: r.fingerprint(),
+        }
+    });
+    ranked.sort_by(|a, b| {
+        b.goodput
+            .partial_cmp(&a.goodput)
+            .unwrap()
+            .then(b.throughput.partial_cmp(&a.throughput).unwrap())
+            .then(a.candidate.cmp(&b.candidate))
+    });
+    ranked
+}
+
+/// The paper's headline comparison, on simulated numbers: best
+/// partitioned deployment vs best single-platform deployment, as a
+/// throughput gain in percent. `None` when either side is missing.
+pub fn best_gain_over_single(ranked: &[RankedCandidate]) -> Option<(String, f64)> {
+    let single = ranked
+        .iter()
+        .filter(|r| r.partitions == 1)
+        .map(|r| r.throughput)
+        .fold(f64::NAN, f64::max);
+    let best = ranked
+        .iter()
+        .filter(|r| r.partitions >= 2)
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())?;
+    if !single.is_finite() || single <= 0.0 {
+        return None;
+    }
+    Some((best.label.clone(), 100.0 * (best.throughput - single) / single))
+}
+
+/// Aligned table for the CLI.
+pub fn render_ranking(ranked: &[RankedCandidate]) -> String {
+    use crate::util::units::{fmt_energy_j, fmt_throughput, fmt_time_s};
+    let mut out = format!(
+        "{:<16} {:>5} {:>13} {:>13} {:>10} {:>10} {:>9} {:>9} {:>11}\n",
+        "point", "parts", "goodput", "throughput", "p50", "p99", "dropped", "slo-miss", "energy"
+    );
+    for r in ranked {
+        out.push_str(&format!(
+            "{:<16} {:>5} {:>13} {:>13} {:>10} {:>10} {:>9} {:>9} {:>11}\n",
+            r.label,
+            r.partitions,
+            fmt_throughput(r.goodput),
+            fmt_throughput(r.throughput),
+            fmt_time_s(r.p50_s),
+            fmt_time_s(r.p99_s),
+            r.dropped,
+            r.slo_violations,
+            fmt_energy_j(r.energy_j),
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::{CandidateMetrics, ExplorationTiming, StagePlan};
+
+    /// Hand-built exploration: a balanced split vs two single-platform
+    /// references — no mapper involved, so the test is instant.
+    fn toy_exploration() -> Exploration {
+        let single = |platform: usize, label: &str, lat: f64| CandidateMetrics {
+            positions: vec![if platform == 0 { 9 } else { 0 }],
+            label: label.to_string(),
+            latency_s: lat,
+            energy_j: 1.0,
+            throughput: 1.0 / lat,
+            top1: 70.0,
+            memory_bytes: vec![0, 0],
+            link_bytes: 0,
+            partitions: 1,
+            plan: vec![StagePlan {
+                platform,
+                latency_s: lat,
+                energy_j: 1.0,
+                out_bytes: 0,
+                out_hops: 0,
+            }],
+            violation: 0.0,
+            violations: Vec::new(),
+        };
+        let split = CandidateMetrics {
+            positions: vec![4],
+            label: "split".into(),
+            latency_s: 0.002,
+            energy_j: 1.0,
+            throughput: 1000.0,
+            top1: 70.0,
+            memory_bytes: vec![0, 0],
+            link_bytes: 1460,
+            partitions: 2,
+            plan: vec![
+                StagePlan {
+                    platform: 0,
+                    latency_s: 0.001,
+                    energy_j: 0.5,
+                    out_bytes: 1460,
+                    out_hops: 1,
+                },
+                StagePlan {
+                    platform: 1,
+                    latency_s: 0.001,
+                    energy_j: 0.5,
+                    out_bytes: 0,
+                    out_hops: 0,
+                },
+            ],
+            violation: 0.0,
+            violations: Vec::new(),
+        };
+        Exploration {
+            model: "toy".into(),
+            candidates: vec![single(0, "all-on-A", 0.002), single(1, "all-on-B", 0.0025), split],
+            pareto: vec![2],
+            nsga_front: vec![2],
+            favorite: Some(2),
+            timing: ExplorationTiming::default(),
+        }
+    }
+
+    fn toy_sys() -> SystemConfig {
+        crate::config::SystemConfig::paper_two_platform()
+    }
+
+    #[test]
+    fn partitioned_candidate_wins_under_overload() {
+        let ex = toy_exploration();
+        let sys = toy_sys();
+        // Offer more than any single platform can serve (1/2 ms = 500/s
+        // single, ~1000/s split).
+        let sc = Scenario::steady(30_000, 1500.0);
+        let cfg = SimCfg { seed: 5, ..Default::default() };
+        let ranked = evaluate_front(&ex, &sys, &sc, &cfg, 1);
+        // Front member + both single-platform references.
+        assert_eq!(ranked.len(), 3);
+        assert_eq!(ranked[0].label, "split", "{ranked:?}");
+        let (label, gain) = best_gain_over_single(&ranked).unwrap();
+        assert_eq!(label, "split");
+        assert!(gain > 20.0, "simulated gain only {gain:.1}%");
+        assert!(!render_ranking(&ranked).contains("NaN"));
+    }
+
+    #[test]
+    fn ranking_is_bit_identical_across_jobs() {
+        let ex = toy_exploration();
+        let sys = toy_sys();
+        let sc = Scenario::bursty(10_000, 300.0, 2000.0);
+        let cfg = SimCfg { seed: 9, ..Default::default() };
+        let a = evaluate_front(&ex, &sys, &sc, &cfg, 1);
+        let b = evaluate_front(&ex, &sys, &sc, &cfg, 4);
+        assert_eq!(a, b, "--jobs changed the ranking");
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.fingerprint, y.fingerprint);
+        }
+    }
+
+    #[test]
+    fn missing_sides_yield_no_gain() {
+        let mut ex = toy_exploration();
+        ex.candidates.retain(|c| c.partitions >= 2);
+        ex.pareto = vec![0];
+        let ranked = evaluate_front(
+            &ex,
+            &toy_sys(),
+            &Scenario::steady(100, 100.0),
+            &SimCfg::default(),
+            1,
+        );
+        assert!(best_gain_over_single(&ranked).is_none());
+    }
+}

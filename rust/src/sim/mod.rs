@@ -1,0 +1,228 @@
+//! Deterministic discrete-event serving simulator — the scale
+//! counterpart of `coordinator/`.
+//!
+//! The wall-clock coordinator executes a partitioned deployment with
+//! real threads and sleeps, which is faithful but tops out at a few
+//! thousand requests and is not reproducible under CI load. This module
+//! replays *millions* of requests through the same pipeline model on a
+//! virtual clock: a single event heap, zero sleeping, bit-identical
+//! output for every `--jobs` value.
+//!
+//! Model (matches the coordinator stage-for-stage):
+//! * each used platform is a **stage server** with a bounded FIFO queue
+//!   (arrivals to a full queue are dropped and accounted) and the shared
+//!   [`BatchPolicy`] dynamic batcher (`coordinator::batcher`);
+//! * a batch of `n` items occupies the server for
+//!   `base + per_item × n`, then ships its payload over the packetized
+//!   [`LinkModel`] (`latency_s(n × bytes)` per hop) — the link transfer
+//!   is *serialized into the sending stage*, exactly like the
+//!   coordinator's stage thread sleeping the modelled transfer time;
+//! * scenarios ([`Scenario`]) drive open-loop arrivals (Poisson, burst,
+//!   diurnal, replayed traces), deadline SLOs, and transient faults
+//!   (per-stage slowdown windows, link degradation windows).
+//!
+//! Determinism contract (same as the DSE, see `util::parallel`): every
+//! random draw happens up front on the coordinator thread, in
+//! per-entity PCG32 streams keyed by a stable entity id — never by
+//! evaluation order — and the event heap breaks timestamp ties by a
+//! monotonically assigned sequence number. Two runs of the same
+//! `(Deployment, SimCfg, Scenario)` produce bit-identical
+//! [`SimReport`]s ([`SimReport::fingerprint`] checks this cheaply), and
+//! [`evaluate_front`] fans candidates out over workers with
+//! `par_map`, so `--jobs` never changes a single bit of the output.
+
+mod engine;
+mod evaluate;
+mod scenario;
+
+pub use evaluate::{best_gain_over_single, evaluate_front, render_ranking, RankedCandidate};
+pub use scenario::{Arrivals, FaultWindow, Scenario, Slowdown};
+
+use crate::config::SystemConfig;
+use crate::coordinator::{BatchPolicy, PipelineReport};
+use crate::explorer::CandidateMetrics;
+use crate::link::LinkModel;
+use crate::util::hash::Fnv64;
+use std::time::Duration;
+
+/// One simulated pipeline stage: the latency/energy model of a
+/// platform's segment plus what it ships downstream.
+#[derive(Debug, Clone)]
+pub struct StageModel {
+    pub name: String,
+    /// Fixed per-batch service overhead (s).
+    pub base_s: f64,
+    /// Per-item service time (s) — a batch of `n` occupies the server
+    /// for `base_s + per_item_s × n`.
+    pub per_item_s: f64,
+    /// Compute energy per item (J); link energy is charged separately
+    /// from actual batched wire bytes.
+    pub energy_per_item_j: f64,
+    /// Payload bytes per item shipped downstream (0 = nothing).
+    pub out_bytes_per_item: u64,
+    /// Link hops that payload crosses (idle platforms forward).
+    pub out_hops: u64,
+}
+
+/// A deployment under test: the stage chain plus the link between
+/// consecutive stages.
+#[derive(Debug, Clone)]
+pub struct Deployment {
+    pub label: String,
+    pub stages: Vec<StageModel>,
+    pub link: LinkModel,
+}
+
+impl Deployment {
+    /// Instantiate an explorer candidate as a simulated deployment —
+    /// the loop-closing constructor: `Exploration` → `sim`.
+    pub fn from_candidate(c: &CandidateMetrics, sys: &SystemConfig) -> Self {
+        assert!(!c.plan.is_empty(), "candidate '{}' has no stage plan", c.label);
+        Deployment {
+            label: c.label.clone(),
+            stages: c
+                .plan
+                .iter()
+                .map(|p| StageModel {
+                    name: sys.platforms[p.platform].name.clone(),
+                    base_s: 0.0,
+                    per_item_s: p.latency_s,
+                    energy_per_item_j: p.energy_j,
+                    out_bytes_per_item: p.out_bytes,
+                    out_hops: p.out_hops,
+                })
+                .collect(),
+            link: sys.link.clone(),
+        }
+    }
+
+    /// Synthetic chain for tests/benches: one stage per `per_item_s`
+    /// entry, every non-final stage shipping `cut_bytes` over one GbE
+    /// hop.
+    pub fn synthetic(label: &str, per_item_s: &[f64], cut_bytes: u64) -> Self {
+        assert!(!per_item_s.is_empty());
+        let n = per_item_s.len();
+        Deployment {
+            label: label.to_string(),
+            stages: per_item_s
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| StageModel {
+                    name: format!("s{i}"),
+                    base_s: 0.0,
+                    per_item_s: s,
+                    energy_per_item_j: 0.0,
+                    out_bytes_per_item: if i + 1 < n { cut_bytes } else { 0 },
+                    out_hops: u64::from(i + 1 < n),
+                })
+                .collect(),
+            link: LinkModel::gigabit_ethernet(),
+        }
+    }
+}
+
+/// Simulator configuration: server-side policy plus the RNG seed for
+/// the scenario's arrival streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimCfg {
+    /// Dynamic-batching policy (shared type with the coordinator).
+    pub batch: BatchPolicy,
+    /// Bounded per-stage queue depth; arrivals beyond it are dropped.
+    pub queue_depth: usize,
+    pub seed: u64,
+}
+
+impl SimCfg {
+    /// Derive from a system config's `[serving]` section and seed.
+    pub fn from_system(sys: &SystemConfig) -> Self {
+        SimCfg {
+            batch: BatchPolicy::new(
+                sys.serving.max_batch,
+                Duration::from_secs_f64(sys.serving.batch_wait_s),
+            ),
+            queue_depth: sys.serving.queue_depth,
+            seed: sys.seed,
+        }
+    }
+}
+
+impl Default for SimCfg {
+    fn default() -> Self {
+        SimCfg { batch: BatchPolicy::default(), queue_depth: 64, seed: 0 }
+    }
+}
+
+/// Result of one simulation run. Wraps the coordinator's
+/// [`PipelineReport`] (same shape: completions, virtual wall clock,
+/// per-stage stats) with the sim-only accounting.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    pub pipeline: PipelineReport,
+    /// Requests dropped at a full queue (also `ok = false` completions).
+    pub dropped: u64,
+    /// Completions that finished after the scenario's deadline.
+    pub slo_violations: u64,
+    /// Within-deadline completions per virtual second (= throughput
+    /// when the scenario has no deadline).
+    pub goodput: f64,
+    /// Total energy: per-item compute plus per-batch link energy from
+    /// actual wire bytes.
+    pub energy_j: f64,
+    /// Events processed (arrivals + timers + batch completions).
+    pub events: u64,
+}
+
+impl SimReport {
+    pub fn throughput(&self) -> f64 {
+        self.pipeline.throughput()
+    }
+
+    /// Stable FNV-1a digest over every externally observable quantity —
+    /// the cheap way to assert two runs (or two `--jobs` values) are
+    /// bit-identical.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.pipeline.completions.len() as u64);
+        for c in &self.pipeline.completions {
+            h.write_u64(c.id);
+            h.write_u64(c.latency.as_nanos() as u64);
+            h.write_u64(u64::from(c.ok));
+        }
+        h.write_u64(self.pipeline.wall.as_nanos() as u64);
+        for s in &self.pipeline.stages {
+            h.write_u64(s.batches);
+            h.write_u64(s.items);
+            h.write_u64(s.busy.as_nanos() as u64);
+            h.write_u64(s.link.as_nanos() as u64);
+            h.write_u64(s.failures);
+        }
+        h.write_u64(self.dropped);
+        h.write_u64(self.slo_violations);
+        h.write_f64(self.energy_j);
+        h.write_u64(self.events);
+        h.finish()
+    }
+
+    /// Human-readable summary (appends sim accounting to the pipeline
+    /// table).
+    pub fn render(&self) -> String {
+        use crate::util::units::{fmt_energy_j, fmt_throughput};
+        let mut out = self.pipeline.render();
+        out.push_str(&format!(
+            "sim: {} events, {} dropped, {} SLO violations, goodput {}, energy {}\n",
+            self.events,
+            self.dropped,
+            self.slo_violations,
+            fmt_throughput(self.goodput),
+            fmt_energy_j(self.energy_j),
+        ));
+        out
+    }
+}
+
+/// Run one deployment through one scenario on the virtual clock.
+/// Single-threaded and allocation-light: ≥ 1M requests simulate in
+/// seconds, and the result is bit-identical across repeated runs.
+pub fn simulate(dep: &Deployment, cfg: &SimCfg, scenario: &Scenario) -> SimReport {
+    engine::run(dep, cfg, scenario)
+}

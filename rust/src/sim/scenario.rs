@@ -1,0 +1,488 @@
+//! Traffic scenarios: open-loop arrival processes, deadline SLOs, and
+//! transient fault windows, loadable from TOML.
+//!
+//! All randomness is consumed *here*, on the caller's thread, before
+//! the event loop starts: each stochastic entity draws from its own
+//! PCG32 stream keyed by a stable entity id (the same per-entity rule
+//! the DSE uses — see `util::parallel`), so a scenario expands to the
+//! exact same arrival trace no matter where or how often it is
+//! evaluated.
+
+use crate::util::json::Json;
+use crate::util::rng::Pcg32;
+use crate::util::tomlite;
+use std::path::Path;
+
+/// Stream id for the arrival-process entity (stable forever — part of
+/// the reproducibility contract, like the cost-cache hash constants).
+const STREAM_ARRIVALS: u64 = 0x51A7_0001;
+
+/// Open-loop arrival process.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Arrivals {
+    /// Homogeneous Poisson at `rate` requests/s.
+    Poisson { rate: f64 },
+    /// On/off modulated Poisson: `burst_rate` for the first
+    /// `burst_fraction` of every `period_s`, `base_rate` otherwise.
+    Burst { base_rate: f64, burst_rate: f64, period_s: f64, burst_fraction: f64 },
+    /// Sinusoidal rate between `base_rate` and `peak_rate` with the
+    /// given period — the classic day/night serving curve.
+    Diurnal { base_rate: f64, peak_rate: f64, period_s: f64 },
+    /// Replay an explicit arrival-time trace (seconds, sorted).
+    Replay { times_s: Vec<f64> },
+}
+
+/// A transient compute fault: `stage`'s service time is multiplied by
+/// `factor` for batches starting in `[from_s, to_s)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Slowdown {
+    pub stage: usize,
+    pub from_s: f64,
+    pub to_s: f64,
+    pub factor: f64,
+}
+
+/// A transient link fault: transfer times are multiplied by `factor`
+/// for transfers starting in `[from_s, to_s)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultWindow {
+    pub from_s: f64,
+    pub to_s: f64,
+    pub factor: f64,
+}
+
+/// A full serving scenario.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Requests to generate (ignored for `Replay`, which carries its
+    /// own trace).
+    pub requests: usize,
+    pub arrivals: Arrivals,
+    /// End-to-end deadline; completions beyond it count as SLO
+    /// violations and leave the goodput.
+    pub deadline_s: Option<f64>,
+    pub slowdowns: Vec<Slowdown>,
+    pub link_faults: Vec<FaultWindow>,
+}
+
+impl Scenario {
+    /// Steady Poisson traffic.
+    pub fn steady(requests: usize, rate: f64) -> Self {
+        Scenario {
+            name: "steady".into(),
+            requests,
+            arrivals: Arrivals::Poisson { rate },
+            deadline_s: None,
+            slowdowns: Vec::new(),
+            link_faults: Vec::new(),
+        }
+    }
+
+    /// Bursty traffic: 20% of each second at `burst_rate`, the rest at
+    /// `base_rate`.
+    pub fn bursty(requests: usize, base_rate: f64, burst_rate: f64) -> Self {
+        Scenario {
+            name: "burst".into(),
+            requests,
+            arrivals: Arrivals::Burst {
+                base_rate,
+                burst_rate,
+                period_s: 1.0,
+                burst_fraction: 0.2,
+            },
+            deadline_s: None,
+            slowdowns: Vec::new(),
+            link_faults: Vec::new(),
+        }
+    }
+
+    /// Diurnal traffic with a 10 s "day".
+    pub fn diurnal(requests: usize, base_rate: f64, peak_rate: f64) -> Self {
+        Scenario {
+            name: "diurnal".into(),
+            requests,
+            arrivals: Arrivals::Diurnal { base_rate, peak_rate, period_s: 10.0 },
+            deadline_s: None,
+            slowdowns: Vec::new(),
+            link_faults: Vec::new(),
+        }
+    }
+
+    /// Steady traffic with a mid-run fault: stage 0 slows 3x for one
+    /// fifth of the trace and the link degrades 10x for another fifth.
+    pub fn degraded(requests: usize, rate: f64) -> Self {
+        let span = requests as f64 / rate.max(1e-9);
+        Scenario {
+            name: "degraded".into(),
+            requests,
+            arrivals: Arrivals::Poisson { rate },
+            deadline_s: None,
+            slowdowns: vec![Slowdown {
+                stage: 0,
+                from_s: 0.2 * span,
+                to_s: 0.4 * span,
+                factor: 3.0,
+            }],
+            link_faults: vec![FaultWindow {
+                from_s: 0.6 * span,
+                to_s: 0.8 * span,
+                factor: 10.0,
+            }],
+        }
+    }
+
+    /// Replay an explicit trace.
+    pub fn replay(mut times_s: Vec<f64>) -> Self {
+        times_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        Scenario {
+            name: "replay".into(),
+            requests: times_s.len(),
+            arrivals: Arrivals::Replay { times_s },
+            deadline_s: None,
+            slowdowns: Vec::new(),
+            link_faults: Vec::new(),
+        }
+    }
+
+    /// Built-in scenario catalog for the CLI — exactly the names
+    /// [`Self::builtin_names`] advertises.
+    pub fn by_name(name: &str, requests: usize, rate: f64) -> Option<Self> {
+        Some(match name {
+            "steady" => Self::steady(requests, rate),
+            "burst" => Self::bursty(requests, 0.5 * rate, 3.0 * rate),
+            "diurnal" => Self::diurnal(requests, 0.25 * rate, rate),
+            "degraded" => Self::degraded(requests, rate),
+            _ => return None,
+        })
+    }
+
+    pub fn builtin_names() -> &'static [&'static str] {
+        &["steady", "burst", "diurnal", "degraded"]
+    }
+
+    /// Load from a TOML file (see `from_json` for the schema).
+    pub fn from_toml_file(path: &Path) -> Result<Self, String> {
+        let doc = tomlite::parse_file(path)?;
+        Self::from_json(&doc)
+    }
+
+    /// Schema:
+    ///
+    /// ```toml
+    /// name = "evening-peak"       # optional
+    /// requests = 1000000
+    /// slo_ms = 50.0               # optional deadline
+    ///
+    /// [arrivals]
+    /// kind = "poisson"            # poisson|burst|diurnal|replay
+    /// rate = 2000.0               # poisson
+    /// # burst: base_rate, burst_rate, period_s, burst_fraction
+    /// # diurnal: base_rate, peak_rate, period_s
+    /// # replay: times_s = [0.0, 0.001, ...]
+    ///
+    /// [[slowdown]]
+    /// stage = 0
+    /// from_s = 1.0
+    /// to_s = 2.0
+    /// factor = 3.0
+    ///
+    /// [[link_fault]]
+    /// from_s = 5.0
+    /// to_s = 6.0
+    /// factor = 10.0
+    /// ```
+    pub fn from_json(doc: &Json) -> Result<Self, String> {
+        let requests = doc.get("requests").as_usize().unwrap_or(1_000_000);
+        let a = doc.get("arrivals");
+        let kind = a.get("kind").as_str().unwrap_or("poisson");
+        let need = |key: &str| -> Result<f64, String> {
+            a.get(key).as_f64().ok_or_else(|| format!("arrivals.{key} required for '{kind}'"))
+        };
+        let arrivals = match kind {
+            "poisson" => Arrivals::Poisson { rate: positive(need("rate")?, "rate")? },
+            "burst" => Arrivals::Burst {
+                base_rate: positive(need("base_rate")?, "base_rate")?,
+                burst_rate: positive(need("burst_rate")?, "burst_rate")?,
+                period_s: positive(a.get("period_s").as_f64().unwrap_or(1.0), "period_s")?,
+                burst_fraction: {
+                    let f = a.get("burst_fraction").as_f64().unwrap_or(0.2);
+                    if !(0.0 < f && f < 1.0) {
+                        return Err(format!("burst_fraction {f} must be in (0, 1)"));
+                    }
+                    f
+                },
+            },
+            "diurnal" => Arrivals::Diurnal {
+                base_rate: positive(need("base_rate")?, "base_rate")?,
+                peak_rate: positive(need("peak_rate")?, "peak_rate")?,
+                period_s: positive(a.get("period_s").as_f64().unwrap_or(10.0), "period_s")?,
+            },
+            "replay" => {
+                let times = a
+                    .get("times_s")
+                    .as_arr()
+                    .ok_or("arrivals.times_s required for 'replay'")?;
+                let times_s: Vec<f64> = times
+                    .iter()
+                    .map(|t| t.as_f64().ok_or_else(|| format!("bad replay time {t:?}")))
+                    .collect::<Result<_, _>>()?;
+                let mut sc = Self::replay(times_s);
+                sc.name = doc.get("name").as_str().unwrap_or("replay").to_string();
+                sc.deadline_s = doc.get("slo_ms").as_f64().map(|ms| ms * 1e-3);
+                sc.slowdowns = parse_slowdowns(doc)?;
+                sc.link_faults = parse_link_faults(doc)?;
+                return Ok(sc);
+            }
+            other => return Err(format!("unknown arrivals.kind '{other}'")),
+        };
+        Ok(Scenario {
+            name: doc.get("name").as_str().unwrap_or(kind).to_string(),
+            requests,
+            arrivals,
+            deadline_s: doc.get("slo_ms").as_f64().map(|ms| ms * 1e-3),
+            slowdowns: parse_slowdowns(doc)?,
+            link_faults: parse_link_faults(doc)?,
+        })
+    }
+
+    /// Expand the arrival process into a sorted trace of virtual
+    /// nanoseconds. Pure function of `(self, seed)` — the only RNG in
+    /// the simulator, drawn from the arrival entity's own stream.
+    pub fn arrival_times_ns(&self, seed: u64) -> Vec<u64> {
+        let mut rng = Pcg32::new(seed, STREAM_ARRIVALS);
+        let n = self.requests;
+        let mut out = Vec::with_capacity(n);
+        match &self.arrivals {
+            Arrivals::Poisson { rate } => {
+                let mut t = 0.0f64;
+                for _ in 0..n {
+                    t += exp_gap(&mut rng, *rate);
+                    out.push(super::engine::s_to_ns(t));
+                }
+            }
+            Arrivals::Burst { base_rate, burst_rate, period_s, burst_fraction } => {
+                let r_max = base_rate.max(*burst_rate);
+                let rate = |t: f64| {
+                    if (t / period_s).fract() < *burst_fraction {
+                        *burst_rate
+                    } else {
+                        *base_rate
+                    }
+                };
+                thin(&mut rng, n, r_max, rate, &mut out);
+            }
+            Arrivals::Diurnal { base_rate, peak_rate, period_s } => {
+                let r_max = base_rate.max(*peak_rate);
+                let (lo, hi) = (*base_rate, *peak_rate);
+                let rate = |t: f64| {
+                    let phase = (2.0 * std::f64::consts::PI * t / period_s).cos();
+                    lo + (hi - lo) * 0.5 * (1.0 - phase)
+                };
+                thin(&mut rng, n, r_max, rate, &mut out);
+            }
+            Arrivals::Replay { times_s } => {
+                out.extend(times_s.iter().map(|&t| super::engine::s_to_ns(t)));
+                out.sort_unstable();
+            }
+        }
+        debug_assert!(out.windows(2).all(|w| w[0] <= w[1]), "arrival trace unsorted");
+        out
+    }
+}
+
+fn positive(v: f64, what: &str) -> Result<f64, String> {
+    if v > 0.0 && v.is_finite() {
+        Ok(v)
+    } else {
+        Err(format!("{what} must be positive, got {v}"))
+    }
+}
+
+fn parse_slowdowns(doc: &Json) -> Result<Vec<Slowdown>, String> {
+    let Some(arr) = doc.get("slowdown").as_arr() else { return Ok(Vec::new()) };
+    arr.iter()
+        .map(|w| {
+            Ok(Slowdown {
+                stage: w.get("stage").as_usize().ok_or("slowdown.stage required")?,
+                from_s: w.get("from_s").as_f64().unwrap_or(0.0),
+                to_s: w.get("to_s").as_f64().unwrap_or(f64::MAX),
+                factor: positive(w.get("factor").as_f64().unwrap_or(1.0), "slowdown.factor")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_link_faults(doc: &Json) -> Result<Vec<FaultWindow>, String> {
+    let Some(arr) = doc.get("link_fault").as_arr() else { return Ok(Vec::new()) };
+    arr.iter()
+        .map(|w| {
+            Ok(FaultWindow {
+                from_s: w.get("from_s").as_f64().unwrap_or(0.0),
+                to_s: w.get("to_s").as_f64().unwrap_or(f64::MAX),
+                factor: positive(w.get("factor").as_f64().unwrap_or(1.0), "link_fault.factor")?,
+            })
+        })
+        .collect()
+}
+
+/// Exponential inter-arrival gap for a Poisson process at `rate`.
+fn exp_gap(rng: &mut Pcg32, rate: f64) -> f64 {
+    -(1.0 - rng.gen_f64()).ln() / rate
+}
+
+/// Lewis–Shedler thinning: sample a homogeneous Poisson at `r_max` and
+/// accept each point with probability `rate(t) / r_max`. Exact for any
+/// bounded rate function, and deterministic given the stream.
+fn thin<F: Fn(f64) -> f64>(rng: &mut Pcg32, n: usize, r_max: f64, rate: F, out: &mut Vec<u64>) {
+    assert!(r_max > 0.0, "rate ceiling must be positive");
+    let mut t = 0.0f64;
+    while out.len() < n {
+        t += exp_gap(rng, r_max);
+        if rng.gen_f64() * r_max < rate(t) {
+            out.push(super::engine::s_to_ns(t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_trace_is_sorted_and_rate_accurate() {
+        let sc = Scenario::steady(50_000, 2000.0);
+        let ts = sc.arrival_times_ns(7);
+        assert_eq!(ts.len(), 50_000);
+        assert!(ts.windows(2).all(|w| w[0] <= w[1]));
+        // Empirical rate within 5% of nominal.
+        let span_s = *ts.last().unwrap() as f64 * 1e-9;
+        let rate = ts.len() as f64 / span_s;
+        assert!((rate - 2000.0).abs() / 2000.0 < 0.05, "rate {rate}");
+    }
+
+    #[test]
+    fn traces_are_deterministic_per_seed_and_entity_stream() {
+        let sc = Scenario::bursty(5000, 100.0, 1000.0);
+        assert_eq!(sc.arrival_times_ns(3), sc.arrival_times_ns(3));
+        assert_ne!(sc.arrival_times_ns(3), sc.arrival_times_ns(4));
+    }
+
+    #[test]
+    fn burst_concentrates_arrivals() {
+        let sc = Scenario::bursty(20_000, 100.0, 4000.0);
+        let ts = sc.arrival_times_ns(11);
+        // Count arrivals inside the burst fifth of each 1 s period.
+        let in_burst = ts
+            .iter()
+            .filter(|&&t| ((t as f64 * 1e-9) / 1.0).fract() < 0.2)
+            .count();
+        // Burst windows carry 4000/s×0.2 vs 100/s×0.8: ~91% of traffic.
+        let frac = in_burst as f64 / ts.len() as f64;
+        assert!(frac > 0.8, "burst fraction {frac}");
+    }
+
+    #[test]
+    fn diurnal_peak_beats_trough() {
+        let sc = Scenario::diurnal(40_000, 100.0, 2000.0);
+        let ts = sc.arrival_times_ns(13);
+        // Peak half-period (phase 0.25..0.75) vs trough.
+        let (mut peak, mut trough) = (0usize, 0usize);
+        for &t in &ts {
+            let phase = ((t as f64 * 1e-9) / 10.0).fract();
+            if (0.25..0.75).contains(&phase) {
+                peak += 1;
+            } else {
+                trough += 1;
+            }
+        }
+        assert!(peak > 2 * trough, "peak {peak} vs trough {trough}");
+    }
+
+    #[test]
+    fn replay_roundtrips_and_sorts() {
+        let sc = Scenario::replay(vec![0.003, 0.001, 0.002]);
+        assert_eq!(sc.requests, 3);
+        let ts = sc.arrival_times_ns(99);
+        assert_eq!(ts, vec![1_000_000, 2_000_000, 3_000_000]);
+    }
+
+    #[test]
+    fn toml_schema_parses() {
+        let text = r#"
+name = "evening-peak"
+requests = 5000
+slo_ms = 50.0
+
+[arrivals]
+kind = "diurnal"
+base_rate = 500.0
+peak_rate = 4000.0
+period_s = 20.0
+
+[[slowdown]]
+stage = 1
+from_s = 2.0
+to_s = 4.0
+factor = 3.0
+
+[[link_fault]]
+from_s = 5.0
+to_s = 6.0
+factor = 10.0
+"#;
+        let sc = Scenario::from_json(&tomlite::parse(text).unwrap()).unwrap();
+        assert_eq!(sc.name, "evening-peak");
+        assert_eq!(sc.requests, 5000);
+        assert_eq!(sc.deadline_s, Some(0.05));
+        assert_eq!(
+            sc.arrivals,
+            Arrivals::Diurnal { base_rate: 500.0, peak_rate: 4000.0, period_s: 20.0 }
+        );
+        assert_eq!(sc.slowdowns.len(), 1);
+        assert_eq!(sc.slowdowns[0].stage, 1);
+        assert_eq!(sc.link_faults[0].factor, 10.0);
+    }
+
+    #[test]
+    fn toml_replay_and_errors() {
+        let sc = Scenario::from_json(
+            &tomlite::parse("[arrivals]\nkind = \"replay\"\ntimes_s = [0.0, 0.5, 0.25]\n")
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sc.requests, 3);
+        assert!(matches!(sc.arrivals, Arrivals::Replay { .. }));
+
+        for bad in [
+            "[arrivals]\nkind = \"warp\"\n",
+            "[arrivals]\nkind = \"poisson\"\nrate = -5.0\n",
+            "[arrivals]\nkind = \"burst\"\nbase_rate = 1.0\n",
+            "[arrivals]\nkind = \"burst\"\nbase_rate = 1.0\nburst_rate = 2.0\nburst_fraction = 1.5\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(Scenario::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn builtin_catalog() {
+        for name in Scenario::builtin_names() {
+            let sc = Scenario::by_name(name, 100, 1000.0).unwrap();
+            assert_eq!(sc.requests, 100);
+            assert_eq!(sc.arrival_times_ns(1).len(), 100);
+        }
+        assert!(Scenario::by_name("nope", 1, 1.0).is_none());
+    }
+
+    #[test]
+    fn default_poisson_from_minimal_toml() {
+        let sc = Scenario::from_json(
+            &tomlite::parse("requests = 10\n[arrivals]\nrate = 100.0\n").unwrap(),
+        )
+        .unwrap();
+        assert_eq!(sc.requests, 10);
+        assert_eq!(sc.arrivals, Arrivals::Poisson { rate: 100.0 });
+        assert_eq!(sc.deadline_s, None);
+    }
+}

@@ -4,8 +4,9 @@
 //! with defaults, and positional arguments, plus generated `--help` text.
 //!
 //! Shared option convention: every DSE subcommand (`explore`, `chain`,
-//! `evaluate`, `report`) registers `--jobs <N>` — the worker-thread
-//! count for hardware evaluation, candidate enumeration and NSGA-II.
+//! `evaluate`, `report`, `simulate`) registers `--jobs <N>` — the
+//! worker-thread count for hardware evaluation, candidate enumeration,
+//! NSGA-II, and the serving simulator's per-candidate fan-out.
 //! It defaults to all hardware threads and never changes results
 //! (parallel runs are bit-identical to `--jobs 1`; see `util::parallel`).
 //! The same subcommands register `--cache-dir <DIR>` — the persistent

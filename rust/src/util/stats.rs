@@ -29,8 +29,11 @@ impl Summary {
         self.n
     }
 
+    /// Mean of the observations; 0.0 for an empty summary (a defined
+    /// value — report renderers must never print NaN for degenerate
+    /// runs; check `count()` to distinguish "no data" from "mean 0").
     pub fn mean(&self) -> f64 {
-        if self.n == 0 { f64::NAN } else { self.mean }
+        if self.n == 0 { 0.0 } else { self.mean }
     }
 
     pub fn var(&self) -> f64 {
@@ -92,8 +95,9 @@ mod tests {
     #[test]
     fn empty_summary() {
         let s = Summary::new();
-        assert!(s.mean().is_nan());
+        assert_eq!(s.mean(), 0.0, "empty mean is a defined 0, not NaN");
         assert_eq!(s.var(), 0.0);
+        assert_eq!(s.count(), 0);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! default build works on bare toolchains).
 #![cfg(feature = "xla")]
 
-use partir::coordinator::{run_pipeline, PipelineCfg, StageComputeSpec, StageSpec};
+use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
 use partir::runtime::{evaluate_top1, Engine, Manifest};
 use std::path::{Path, PathBuf};
 use std::time::Duration;
@@ -127,7 +127,10 @@ fn mixed_precision_pipeline_over_simulated_link() {
     let ts = m.load_testset().unwrap();
     let n = 32.min(ts.count);
     let inputs: Vec<Vec<f32>> = (0..n).map(|i| ts.image(i).to_vec()).collect();
-    let cfg = PipelineCfg { batch_wait: Duration::from_millis(1), ..Default::default() };
+    let cfg = PipelineCfg {
+        batch: BatchPolicy::new(8, Duration::from_millis(1)),
+        ..Default::default()
+    };
     let report = run_pipeline(vec![stage_a, stage_b], &cfg, inputs);
     assert_eq!(report.completed(), n);
     // Predictions should be mostly correct (quantized model, easy set).

@@ -33,8 +33,11 @@ use std::ops::Range;
 /// for depthwise-heavy / SiLU networks).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelAccuracy {
+    /// Zoo model name this calibration belongs to.
     pub name: &'static str,
+    /// Published fp32 top-1 (%).
     pub fp32_top1: f64,
+    /// Published top-1 drop under 8-bit per-tensor PTQ (points).
     pub ptq8_drop: f64,
 }
 
@@ -56,6 +59,7 @@ const GAMMA: f64 = 0.85;
 /// Fraction of the PTQ drop remaining after 2-epoch QAT (§V-A).
 const QAT_RECOVERY: f64 = 0.25;
 
+/// Calibration constants for a zoo model, if published.
 pub fn model_accuracy(name: &str) -> Option<&'static ModelAccuracy> {
     MODEL_TABLE.iter().find(|m| m.name == name)
 }
@@ -74,10 +78,12 @@ pub struct BitAssignment {
 }
 
 impl BitAssignment {
+    /// Two segments split after `cut_pos` with per-platform widths.
     pub fn two_way(cut_pos: usize, len: usize, bits_a: u32, bits_b: u32) -> Self {
         Self { segments: vec![(0..cut_pos + 1, bits_a), (cut_pos + 1..len, bits_b)] }
     }
 
+    /// A single segment covering the whole schedule.
     pub fn uniform(len: usize, bits: u32) -> Self {
         Self { segments: vec![(0..len, bits)] }
     }

@@ -14,8 +14,11 @@ use std::path::{Path, PathBuf};
 /// platform's segment must fit here).
 #[derive(Debug, Clone)]
 pub struct PlatformCfg {
+    /// Platform display name (candidate labels use it).
     pub name: String,
+    /// The platform's compute side.
     pub accelerator: Accelerator,
+    /// Local memory budget (Definition-3 constraint).
     pub memory_bytes: u64,
 }
 
@@ -37,6 +40,7 @@ pub enum Metric {
 }
 
 impl Metric {
+    /// Metric key used in TOML/CSV.
     pub fn name(self) -> &'static str {
         match self {
             Metric::Latency => "latency",
@@ -48,6 +52,7 @@ impl Metric {
         }
     }
 
+    /// Parse a metric key (accepts the TOML aliases).
     pub fn parse(s: &str) -> Option<Metric> {
         Some(match s {
             "latency" => Metric::Latency,
@@ -70,9 +75,13 @@ impl Metric {
 /// "memory & link evaluation" plus accuracy bound).
 #[derive(Debug, Clone, Default)]
 pub struct Constraints {
+    /// Upper bound on end-to-end latency (s).
     pub max_latency_s: Option<f64>,
+    /// Upper bound on per-inference energy (J).
     pub max_energy_j: Option<f64>,
+    /// Lower bound on top-1 accuracy (%).
     pub min_top1: Option<f64>,
+    /// Lower bound on pipelined throughput (inf/s).
     pub min_throughput: Option<f64>,
     /// Cap on per-inference link payload.
     pub max_link_bytes: Option<u64>,
@@ -85,14 +94,17 @@ pub struct Constraints {
 /// min-normalized metrics to pick the single "most favorable" point.
 #[derive(Debug, Clone)]
 pub struct ObjectiveWeights {
+    /// `(metric, weight)` pairs of the scalarization.
     pub weights: Vec<(Metric, f64)>,
 }
 
 impl ObjectiveWeights {
+    /// The paper's default: latency + energy, equally weighted.
     pub fn latency_energy() -> Self {
         Self { weights: vec![(Metric::Latency, 1.0), (Metric::Energy, 1.0)] }
     }
 
+    /// Throughput-only selection.
     pub fn throughput() -> Self {
         Self { weights: vec![(Metric::Throughput, 1.0)] }
     }
@@ -121,8 +133,11 @@ pub struct Compression {
 /// from a `SystemConfig` should source its policy here.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ServingCfg {
+    /// Dynamic-batching cap (items per batch).
     pub max_batch: usize,
+    /// Batch wait budget (s).
     pub batch_wait_s: f64,
+    /// Bounded per-stage queue depth.
     pub queue_depth: usize,
 }
 
@@ -143,12 +158,14 @@ impl Default for ServingCfg {
 /// Full DSE configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
+    /// The platform chain, in link order.
     pub platforms: Vec<PlatformCfg>,
     /// Link between consecutive platforms (the paper uses the same GbE
     /// hop everywhere).
     pub link: LinkModel,
     /// Optional lossy compression of transmitted feature maps.
     pub compression: Option<Compression>,
+    /// Hard feasibility constraints.
     pub constraints: Constraints,
     /// Objectives handed to NSGA-II (the Pareto axes).
     pub pareto_metrics: Vec<Metric>,
@@ -166,6 +183,7 @@ pub struct SystemConfig {
     /// only. Repeated sweeps under the same search settings become pure
     /// cache hits; stale/corrupt files are ignored, never fatal.
     pub cache_dir: Option<PathBuf>,
+    /// Seed for every stochastic component of the DSE.
     pub seed: u64,
     /// Worker threads for hardware evaluation, candidate enumeration and
     /// NSGA-II population evaluation (1 = serial; results are
@@ -246,6 +264,7 @@ impl SystemConfig {
         Self::from_json(&doc)
     }
 
+    /// Build from a parsed TOML/JSON document (defaults fill gaps).
     pub fn from_json(doc: &Json) -> Result<Self, String> {
         let mut cfg = Self::paper_two_platform();
 
@@ -415,6 +434,7 @@ const _: () = ();
 
 // Named constant for the default seed, spelled as hex for greppability.
 #[allow(clippy::unusual_byte_groupings)]
+/// Default exploration seed.
 pub const DSE_SEED: u64 = 0xD5E_5EED;
 
 #[cfg(test)]

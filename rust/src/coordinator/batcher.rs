@@ -26,6 +26,7 @@ pub struct BatchPolicy {
 }
 
 impl BatchPolicy {
+    /// Build a policy that closes batches at `max_batch` items or after `max_wait`.
     pub fn new(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch >= 1, "max_batch must be at least 1");
         Self { max_batch, max_wait }

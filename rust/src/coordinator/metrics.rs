@@ -8,8 +8,11 @@ use std::time::Duration;
 /// One finished request.
 #[derive(Debug, Clone)]
 pub struct Completion {
+    /// Request id (submission order).
     pub id: u64,
+    /// End-to-end latency from submission to completion.
     pub latency: Duration,
+    /// False when the request failed or was shed at a full queue.
     pub ok: bool,
     /// argmax of the final logits (classifier pipelines).
     pub prediction: Option<usize>,
@@ -18,15 +21,22 @@ pub struct Completion {
 /// Per-stage accounting filled in by the stage threads.
 #[derive(Debug, Clone, Default)]
 pub struct StageStats {
+    /// Stage display name.
     pub name: String,
+    /// Batches served.
     pub batches: u64,
+    /// Items served across all batches.
     pub items: u64,
+    /// Total compute occupancy.
     pub busy: Duration,
+    /// Total link-transfer occupancy.
     pub link: Duration,
+    /// Failed or dropped requests charged to this stage.
     pub failures: u64,
 }
 
 impl StageStats {
+    /// Mean batch fill (items per batch; 0 when no batch ran).
     pub fn mean_batch(&self) -> f64 {
         if self.batches == 0 {
             0.0
@@ -39,16 +49,21 @@ impl StageStats {
 /// Full pipeline run report.
 #[derive(Debug, Clone)]
 pub struct PipelineReport {
+    /// Every request that left the pipeline.
     pub completions: Vec<Completion>,
+    /// Wall-clock (or virtual-clock) span of the run.
     pub wall: Duration,
+    /// Per-stage accounting, in pipeline order.
     pub stages: Vec<StageStats>,
 }
 
 impl PipelineReport {
+    /// Number of successful completions.
     pub fn completed(&self) -> usize {
         self.completions.iter().filter(|c| c.ok).count()
     }
 
+    /// Number of failed or dropped completions.
     pub fn failed(&self) -> usize {
         self.completions.len() - self.completed()
     }

@@ -55,7 +55,9 @@ pub enum StageComputeSpec {
 /// One pipeline stage (= one platform of the chain).
 #[derive(Debug, Clone)]
 pub struct StageSpec {
+    /// Stage display name.
     pub name: String,
+    /// What the stage executes (artifacts or simulated compute).
     pub compute: StageComputeSpec,
     /// Payload bytes per item sent to the next stage (for link timing).
     pub out_bytes_per_item: u64,
@@ -64,6 +66,7 @@ pub struct StageSpec {
 /// Pipeline-wide configuration.
 #[derive(Debug, Clone)]
 pub struct PipelineCfg {
+    /// Link model between consecutive stages.
     pub link: LinkModel,
     /// Dynamic-batching policy, shared with the serving simulator
     /// (`crate::sim`) so both runtimes batch identically.
@@ -84,6 +87,56 @@ impl Default for PipelineCfg {
             simulate_link: true,
         }
     }
+}
+
+/// Instantiate an explored candidate's stage plan
+/// ([`crate::explorer::CandidateMetrics::plan`]) as simulated pipeline
+/// stages — the wall-clock counterpart of
+/// `sim::Deployment::from_candidate`, closing the explorer→coordinator
+/// loop without AOT artifacts.
+///
+/// The coordinator executes a *linear* chain of stage threads, so
+/// branch-parallel (DAG) plans are realized conservatively serialized
+/// in platform order: pipelined throughput matches the plan (the
+/// bottleneck stage is the same either way), while single-inference
+/// latency is over-approximated by the stacked branches. Each stage
+/// ships `Σ edges bytes × hops` downstream for link timing — multi-hop
+/// transfers (idle platforms forwarding) are approximated by scaling
+/// the payload, which is exact on the bandwidth term and undercounts
+/// one per-transfer base latency per extra hop.
+pub fn simulated_specs_from_plan(
+    plan: &[crate::explorer::StagePlan],
+    platform_names: &[String],
+) -> Vec<StageSpec> {
+    let n = plan.len();
+    plan.iter()
+        .enumerate()
+        .map(|(i, p)| {
+            let wire: u64 = p.edges.iter().map(|e| e.bytes.saturating_mul(e.hops)).sum();
+            // Hand-built plans without explicit edges fall back to the
+            // chain aggregates.
+            let wire = if p.edges.is_empty() {
+                p.out_bytes.saturating_mul(p.out_hops.max(1))
+            } else {
+                wire
+            };
+            StageSpec {
+                name: platform_names
+                    .get(p.platform)
+                    .cloned()
+                    .unwrap_or_else(|| format!("P{}", p.platform)),
+                compute: StageComputeSpec::Simulated {
+                    base: Duration::ZERO,
+                    per_item: Duration::from_secs_f64(p.latency_s.max(0.0)),
+                    out_elems: ((p.out_bytes / 4).max(1)) as usize,
+                    fail_every: None,
+                },
+                // The last stage's egress (if any) leaves the pipeline;
+                // the coordinator only times inter-stage transfers.
+                out_bytes_per_item: if i + 1 < n { wire } else { 0 },
+            }
+        })
+        .collect()
 }
 
 /// A request travelling through the pipeline.
@@ -373,6 +426,40 @@ mod tests {
             simulate_link: false,
             ..Default::default()
         }
+    }
+
+    #[test]
+    fn specs_from_plan_execute_on_the_coordinator() {
+        use crate::explorer::{PlanEdge, StagePlan};
+        // A branch-parallel plan (two stages with a fan-out edge set)
+        // realizes as a serialized two-stage wall-clock pipeline.
+        let plan = vec![
+            StagePlan {
+                platform: 0,
+                latency_s: 20e-6,
+                energy_j: 0.0,
+                out_bytes: 128,
+                out_hops: 1,
+                edges: vec![PlanEdge { to: Some(1), bytes: 128, hops: 1 }],
+            },
+            StagePlan {
+                platform: 1,
+                latency_s: 30e-6,
+                energy_j: 0.0,
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+            },
+        ];
+        let names = vec!["A".to_string(), "B".to_string()];
+        let specs = simulated_specs_from_plan(&plan, &names);
+        assert_eq!(specs.len(), 2);
+        assert_eq!(specs[0].name, "A");
+        assert_eq!(specs[0].out_bytes_per_item, 128);
+        assert_eq!(specs[1].out_bytes_per_item, 0, "tail egress leaves the pipeline");
+        let inputs: Vec<Vec<f32>> = (0..16).map(|i| vec![i as f32; 8]).collect();
+        let report = run_pipeline(specs, &fast_cfg(), inputs);
+        assert_eq!(report.completed(), 16);
     }
 
     #[test]

@@ -67,11 +67,17 @@ pub fn cnnparted_like(ex: &Exploration, max_link_bytes: u64) -> Option<usize> {
 /// throughput-best point.
 #[derive(Debug, Clone)]
 pub struct BaselineComparison {
+    /// Strategy name.
     pub name: &'static str,
+    /// Chosen candidate's label.
     pub label: String,
+    /// End-to-end latency of the choice (s).
     pub latency_s: f64,
+    /// Energy per inference of the choice (J).
     pub energy_j: f64,
+    /// Pipelined throughput of the choice (inf/s).
     pub throughput: f64,
+    /// Top-1 accuracy of the choice (%).
     pub top1: f64,
 }
 

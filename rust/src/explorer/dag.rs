@@ -1,0 +1,378 @@
+//! DAG-aware exploration: convex subgraph partitions beyond linear
+//! cuts.
+//!
+//! The chain explorers ([`super::explore_two_platform`],
+//! [`super::multi::explore_chain`]) enumerate cut positions on one
+//! topological schedule, which collapses branchy CNNs (GoogLeNet's
+//! inception blocks, ResNet skip paths) into a chain: parallel branches
+//! can never execute on different platforms at the same time. This
+//! module searches the strictly larger space of **monotone convex
+//! layer→platform assignments** ([`crate::graph::partition`]): NSGA-II
+//! evolves one platform index per layer, a repair operator
+//! ([`repair_monotone`]) pins the input to platform 0 and raises every
+//! layer to at least the maximum platform of its inputs (guaranteeing
+//! convexity), and [`PlanEvaluator::evaluate_dag`] scores each
+//! assignment — delegating chain-expressible ones to the chain
+//! evaluator bit-for-bit.
+//!
+//! [`explore_dag`] therefore *extends* the chain exploration: it first
+//! runs the exact chain sweep (two platforms) or chain NSGA-II (more),
+//! then appends the branch-parallel candidates the assignment search
+//! discovered, deduplicated against the chain space. On a purely
+//! sequential model every monotone assignment is chain-expressible, so
+//! nothing is appended and the result is **bit-identical** to the chain
+//! explorer — the tier-1-gated `dag_matches_chain_on_sequential_models`
+//! invariant.
+
+use super::{
+    exhaustive_pareto, explore_two_platform_with, pick_favorite, CandidateMetrics, Exploration,
+    PlanEvaluator,
+};
+use crate::config::{Metric, SystemConfig};
+use crate::graph::partition::repair_monotone;
+use crate::graph::Graph;
+use crate::hw::CostCache;
+use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use std::collections::BTreeSet;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// NSGA-II problem over layer→platform assignments. The genome has one
+/// integer gene per layer (`0..platforms`); [`Problem::repair`] applies
+/// the monotone convexity repair, so every evaluated genome is a valid
+/// [`crate::graph::partition::DagPartition`].
+struct DagProblem<'a, 'b> {
+    ev: &'a PlanEvaluator<'b>,
+    metrics: Vec<Metric>,
+    num_platforms: usize,
+}
+
+impl Problem for DagProblem<'_, '_> {
+    fn num_vars(&self) -> usize {
+        self.ev.g.len()
+    }
+    fn num_objectives(&self) -> usize {
+        self.metrics.len()
+    }
+    fn bounds(&self, _: usize) -> (i64, i64) {
+        (0, self.num_platforms as i64 - 1)
+    }
+    fn repair(&self, vars: &mut [i64]) {
+        // One operator, one definition: round-trip through the shared
+        // `graph::partition::repair_monotone` so genome repair can never
+        // drift from what `evaluate_dag` validates.
+        let mut assign: Vec<usize> = vars.iter().map(|&v| v.max(0) as usize).collect();
+        repair_monotone(self.ev.g, &mut assign);
+        for (v, a) in vars.iter_mut().zip(assign) {
+            *v = a as i64;
+        }
+    }
+    fn evaluate(&self, vars: &[i64]) -> Eval {
+        let assign: Vec<usize> = vars.iter().map(|&v| v as usize).collect();
+        let m = self.ev.evaluate_dag(&assign);
+        if m.feasible() {
+            Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
+        } else {
+            Eval::infeasible(self.metrics.len(), m.violation)
+        }
+    }
+}
+
+/// GA budget for the assignment genome: population/generations follow
+/// the paper's depth scaling, but the per-gene mutation rate is scaled
+/// to ~2 expected flips per child — a flat rate over hundreds of genes
+/// would randomize every offspring.
+fn dag_cfg(layers: usize, seed: u64) -> Nsga2Cfg {
+    let mut cfg = Nsga2Cfg::for_layers(layers, seed);
+    cfg.mutation_p = (2.0 / layers.max(1) as f64).clamp(0.02, 0.3);
+    cfg
+}
+
+/// DAG-aware exploration with a private layer-cost cache. See
+/// [`explore_dag_cached`].
+pub fn explore_dag(g: &Graph, sys: &SystemConfig) -> Exploration {
+    explore_dag_cached(g, sys, Arc::new(CostCache::new()))
+}
+
+/// DAG-aware exploration: the chain exploration plus the NSGA-II
+/// search over convex layer→platform assignments, sharing one
+/// layer-cost cache.
+///
+/// The returned [`Exploration`] starts with the chain candidates in
+/// their original order (so downstream consumers — reports, the
+/// simulator, baselines — see a superset of the chain result); any
+/// genuinely branch-parallel candidates from the assignment search are
+/// appended with `assign: Some(..)`, and the Pareto front / favorite
+/// are recomputed over the union. On sequential models no candidate is
+/// appended and the result is bit-identical to the chain explorer.
+pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
+    assert!(sys.platforms.len() >= 2, "need at least two platforms");
+    let total0 = Instant::now();
+    let t0 = Instant::now();
+    let ev = PlanEvaluator::with_cache(g, sys, cache);
+    let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
+    let k = sys.platforms.len();
+    let mut ex = if k == 2 {
+        explore_two_platform_with(&ev, graph_s)
+    } else {
+        super::multi::explore_chain_with(&ev)
+    };
+
+    // Assignment search. Everything here is deterministic: the GA's RNG
+    // is seeded, evaluation is pure, and dedup uses ordered sets.
+    let t1 = Instant::now();
+    let problem =
+        DagProblem { ev: &ev, metrics: sys.pareto_metrics.clone(), num_platforms: k };
+    let front = nsga2::optimize_par(&problem, &dag_cfg(g.len(), sys.seed), sys.jobs.max(1));
+
+    // Dedup: one entry per distinct repaired assignment, and never a
+    // candidate that duplicates an existing chain candidate's schedule
+    // (single-platform references included — their labels collide).
+    let mut seen_assign: BTreeSet<Vec<usize>> = BTreeSet::new();
+    let mut seen_labels: BTreeSet<(String, usize)> =
+        ex.candidates.iter().map(|c| (c.label.clone(), c.partitions)).collect();
+    let mut fresh: Vec<CandidateMetrics> = Vec::new();
+    for s in &front {
+        let mut assign: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
+        repair_monotone(g, &mut assign); // idempotent (already repaired)
+        if !seen_assign.insert(assign.clone()) {
+            continue;
+        }
+        let m = ev.evaluate_dag(&assign);
+        if !seen_labels.insert((m.label.clone(), m.partitions)) {
+            continue; // chain-expressible duplicate of an existing point
+        }
+        fresh.push(m);
+    }
+    if !fresh.is_empty() {
+        let start = ex.candidates.len();
+        ex.candidates.extend(fresh);
+        ex.nsga_front.extend(start..ex.candidates.len());
+        ex.pareto = exhaustive_pareto(&ex.candidates, &sys.pareto_metrics);
+        ex.favorite = pick_favorite(&ex.candidates, &sys.favorite.weights);
+    }
+    ex.timing.nsga_s += t1.elapsed().as_secs_f64();
+    ex.timing.total_s = total0.elapsed().as_secs_f64();
+    ex
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::graph::partition::DagPartition;
+    use crate::graph::{Act, LayerKind};
+    use crate::zoo;
+
+    fn quick_sys() -> SystemConfig {
+        let mut sys = SystemConfig::paper_two_platform();
+        sys.search.victory = 10;
+        sys.search.max_samples = 100;
+        sys
+    }
+
+    /// input -> stem conv -> {branch1: conv, branch2: conv} -> add -> gap.
+    fn branchy() -> Graph {
+        let mut g = Graph::new("branchy");
+        let x = g.input(3, 16, 16);
+        let conv = |g: &mut Graph, inp, out_c| {
+            g.add(
+                LayerKind::Conv2d {
+                    out_c,
+                    kernel: (3, 3),
+                    stride: (1, 1),
+                    pad: (1, 1),
+                    groups: 1,
+                    bias: false,
+                },
+                &[inp],
+            )
+        };
+        let stem = conv(&mut g, x, 8);
+        let r = g.add(LayerKind::Activation(Act::Relu), &[stem]);
+        let b1 = conv(&mut g, r, 8);
+        let b2 = conv(&mut g, r, 8);
+        let add = g.add(LayerKind::Add, &[b1, b2]);
+        g.add(LayerKind::GlobalAvgPool, &[add]);
+        g
+    }
+
+    #[test]
+    fn dag_exploration_matches_chain_on_sequential_model() {
+        // tiny_cnn is a pure chain: the DAG space collapses onto the
+        // chain space, so the exploration must be bit-identical.
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let chain = crate::explorer::explore_two_platform(&g, &sys);
+        let dag = explore_dag(&g, &sys);
+        assert_eq!(chain.candidates.len(), dag.candidates.len());
+        assert_eq!(chain.pareto, dag.pareto);
+        assert_eq!(chain.favorite, dag.favorite);
+        for (a, b) in chain.candidates.iter().zip(&dag.candidates) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert!(b.assign.is_none());
+        }
+    }
+
+    #[test]
+    fn dag_exploration_extends_the_chain_result_on_branchy_models() {
+        // Homogeneous platforms over an ideal link make the outcome
+        // provable rather than model-dependent: every candidate then
+        // ties on energy/top1 (same layers, same accelerator, no wire
+        // cost), so the Pareto front reduces to throughput/latency —
+        // and the best balance points of this graph (splitting between
+        // or across the parallel branches) are *not* Definition-1
+        // clean cuts. The GA's genome space here is tiny (≈15 distinct
+        // partitions, hundreds of evaluations), so the search must
+        // surface them: an empty extension means the DAG explorer is
+        // broken, not unlucky.
+        let g = branchy();
+        let mut sys = quick_sys();
+        sys.platforms[1].accelerator = crate::hw::presets::eyeriss_like();
+        sys.link = crate::link::LinkModel::ideal();
+        let chain = crate::explorer::explore_two_platform(&g, &sys);
+        let dag = explore_dag(&g, &sys);
+        // The chain candidates lead, in their original order.
+        assert!(
+            dag.candidates.len() > chain.candidates.len(),
+            "DAG search appended nothing on a branchy model"
+        );
+        for (a, b) in chain.candidates.iter().zip(&dag.candidates) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+        }
+        // Appended candidates are either branch-parallel stages
+        // (labelled `par:`) or wide chain cuts the Definition-1 space
+        // excluded; all must be internally consistent.
+        for c in &dag.candidates[chain.candidates.len()..] {
+            assert_eq!(c.branch_parallel(), c.label.starts_with("par:"), "{}", c.label);
+            assert!(c.latency_s > 0.0 && c.energy_j > 0.0);
+            let plan_link: u64 = c
+                .plan
+                .iter()
+                .flat_map(|s| s.edges.iter())
+                .map(|e| e.bytes * e.hops)
+                .sum();
+            assert_eq!(plan_link, c.link_bytes, "{}: plan/link mismatch", c.label);
+        }
+    }
+
+    #[test]
+    fn diamond_with_both_branches_on_one_platform_is_not_pruned() {
+        // The degenerate case: on a branchy graph the best plan may
+        // keep both branches on a single platform (a plain chain cut).
+        // The DAG explorer must keep those candidates in the pool.
+        let g = branchy();
+        let sys = quick_sys();
+        let dag = explore_dag(&g, &sys);
+        // Chain cuts survive: the single-platform references and at
+        // least one 2-partition chain cut (both branches co-located).
+        let labels: Vec<&str> = dag.candidates.iter().map(|c| c.label.as_str()).collect();
+        assert!(labels.contains(&"all-on-A"), "{labels:?}");
+        assert!(labels.contains(&"all-on-B"), "{labels:?}");
+        assert!(
+            dag.candidates
+                .iter()
+                .any(|c| c.assign.is_none() && c.partitions == 2),
+            "no co-located chain split kept: {labels:?}"
+        );
+        // And the Pareto filter ran over the union, so every front
+        // member is feasible.
+        for &i in &dag.pareto {
+            assert!(dag.candidates[i].feasible());
+        }
+    }
+
+    #[test]
+    fn constructed_branch_split_evaluates_feasibly() {
+        // Hand-build the canonical branch-parallel split: branch 1
+        // (Conv_1) runs on platform 1 while branch 2 (Conv_2, scheduled
+        // *after* it) stays on platform 0 — not expressible as a cut.
+        let g = branchy();
+        let sys = quick_sys();
+        let ev = PlanEvaluator::new(&g, &sys);
+        let b1 = g.by_name("Conv_1").unwrap().id;
+        let add = g.by_name("Add_0").unwrap().id;
+        let gap = g.by_name("GlobalAvgPool_0").unwrap().id;
+        let mut assign = vec![0usize; g.len()];
+        for id in [b1, add, gap] {
+            assign[id.0] = 1;
+        }
+        let m = ev.evaluate_dag(&assign);
+        assert!(m.assign.is_some(), "split should be branch-parallel");
+        assert_eq!(m.partitions, 2);
+        assert!(m.feasible(), "{:?}", m.violations);
+        assert!(m.latency_s > 0.0 && m.throughput > 0.0);
+        // Both platforms hold memory; stage plan covers both.
+        assert!(m.memory_bytes.iter().all(|&b| b > 0));
+        assert_eq!(m.plan.len(), 2);
+        // The partition object agrees it is not chain-expressible.
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert!(dp.is_branch_parallel(&ev.order, 2));
+    }
+
+    #[test]
+    fn repair_keeps_the_branch_parallel_space_reachable() {
+        // Guard against the GA's search space silently collapsing onto
+        // chain cuts: (a) an already-monotone branch-parallel genome
+        // must survive repair unchanged, and (b) a healthy fraction of
+        // random genomes must repair into genuinely branch-parallel
+        // partitions (deterministic: fixed seed).
+        use crate::graph::partition::{repair_monotone, DagPartition};
+        use crate::graph::topo::{topo_sort, TieBreak};
+        use crate::util::rng::Pcg32;
+        let g = branchy();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let b1 = g.by_name("Conv_1").unwrap().id;
+        let add = g.by_name("Add_0").unwrap().id;
+        let gap = g.by_name("GlobalAvgPool_0").unwrap().id;
+        let mut split = vec![0usize; g.len()];
+        for id in [b1, add, gap] {
+            split[id.0] = 1;
+        }
+        let before = split.clone();
+        repair_monotone(&g, &mut split);
+        assert_eq!(split, before, "repair must not disturb a valid branch split");
+        let dp = DagPartition::from_assignment(&g, &split, 2).unwrap();
+        assert!(dp.is_branch_parallel(&order, 2));
+
+        let mut rng = Pcg32::seeded(2024);
+        let mut parallel = 0usize;
+        let trials = 600;
+        for _ in 0..trials {
+            let mut assign: Vec<usize> =
+                (0..g.len()).map(|_| rng.gen_usize(0, 2)).collect();
+            repair_monotone(&g, &mut assign);
+            let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+            if dp.is_branch_parallel(&order, 2) {
+                parallel += 1;
+            }
+        }
+        assert!(
+            parallel > 0,
+            "no random genome repaired into a branch-parallel partition"
+        );
+    }
+
+    #[test]
+    fn dag_exploration_is_deterministic_across_jobs() {
+        let g = branchy();
+        let mut serial = quick_sys();
+        serial.jobs = 1;
+        let mut par = quick_sys();
+        par.jobs = 4;
+        let a = explore_dag(&g, &serial);
+        let b = explore_dag(&g, &par);
+        assert_eq!(a.candidates.len(), b.candidates.len());
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.favorite, b.favorite);
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
+        }
+    }
+}

@@ -19,27 +19,47 @@
 //! serial run for any `jobs` value.
 
 pub mod baselines;
+pub mod dag;
 pub mod multi;
 
 use crate::accuracy::{self, ModelAccuracy};
 use crate::config::{Metric, SystemConfig};
-use crate::graph::partition::{all_cuts, Cut};
+use crate::graph::partition::{all_cuts, Cut, DagPartition};
 use crate::graph::topo::{self, TieBreak};
 use crate::graph::{Graph, NodeId};
 use crate::hw::{prefix_costs, CostCache, HwEvaluator, SegmentCost};
 use crate::link::LinkModel;
 use crate::memory;
 use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use crate::util::hash::Fnv64;
 use crate::util::parallel::par_map;
 use std::collections::HashMap;
 use std::ops::Range;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
+pub use dag::{explore_dag, explore_dag_cached};
+
+/// One forwarding edge of a [`StagePlan`]: a per-inference payload the
+/// stage ships to another stage of the plan (`to = Some(index)`) or out
+/// of the system to the chain's tail consumer (`to = None`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanEdge {
+    /// Receiving plan stage, or `None` when the payload leaves the
+    /// pipeline (the final network output delivered downstream).
+    pub to: Option<usize>,
+    /// Payload bytes per inference.
+    pub bytes: u64,
+    /// Link hops the payload crosses (idle platforms relay).
+    pub hops: u64,
+}
+
 /// Runtime-facing description of one *used* platform of a candidate
 /// schedule — everything the serving simulator (`crate::sim`) needs to
 /// instantiate the candidate as a pipeline stage without re-running the
-/// mapper. Entries appear in chain order.
+/// mapper. Entries appear in platform order; for chain candidates that
+/// is also pipeline order, for DAG candidates consecutive entries may
+/// run branch-parallel (see `edges`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct StagePlan {
     /// Index into `SystemConfig::platforms`.
@@ -48,12 +68,17 @@ pub struct StagePlan {
     pub latency_s: f64,
     /// Per-inference compute energy of this platform's segment (J).
     pub energy_j: f64,
-    /// Payload bytes this stage ships downstream per inference
-    /// (feature map to the next used platform, or the final output to
-    /// the chain's tail consumer; 0 = nothing leaves this stage).
+    /// Total payload bytes this stage ships per inference — the sum of
+    /// `edges[*].bytes`, kept as a convenience aggregate for legacy
+    /// chain consumers (0 = nothing leaves this stage).
     pub out_bytes: u64,
-    /// Link hops that payload crosses (> 1 when idle platforms forward).
+    /// Sum of `edges[*].hops` (for chain plans: the single downstream
+    /// transfer's hop count; > 1 when idle platforms forward).
     pub out_hops: u64,
+    /// Explicit stage-graph out-edges. Chain plans have at most one
+    /// (the next used platform, or the tail consumer); branch-parallel
+    /// plans fan out to every consuming stage.
+    pub edges: Vec<PlanEdge>,
 }
 
 /// Metrics of one candidate schedule (a set of cut positions over the
@@ -65,10 +90,13 @@ pub struct CandidateMetrics {
     pub positions: Vec<usize>,
     /// Human-readable label: boundary layer names, or `all-on-X`.
     pub label: String,
+    /// End-to-end single-inference latency (s), link included.
     pub latency_s: f64,
+    /// Total energy per inference (J), link included.
     pub energy_j: f64,
     /// Definition-4 pipelined throughput (inferences/s).
     pub throughput: f64,
+    /// Modelled top-1 accuracy (%) under the per-platform bit widths.
     pub top1: f64,
     /// Per-platform memory demand in bytes (0 for idle platforms).
     pub memory_bytes: Vec<u64>,
@@ -76,17 +104,29 @@ pub struct CandidateMetrics {
     pub link_bytes: u64,
     /// Number of platforms that execute at least one layer.
     pub partitions: usize,
-    /// Per-used-platform runtime plan (chain order) — consumed by
+    /// Per-used-platform runtime plan (platform order) — consumed by
     /// `sim::Deployment::from_candidate`.
     pub plan: Vec<StagePlan>,
+    /// Per-layer platform assignment for branch-parallel DAG candidates
+    /// (`Some` iff the candidate is not expressible as chain cuts; see
+    /// [`PlanEvaluator::evaluate_dag`]). `None` for chain candidates.
+    pub assign: Option<Vec<usize>>,
     /// Constraint-violation magnitude; 0 = feasible.
     pub violation: f64,
+    /// Human-readable description of each violated constraint.
     pub violations: Vec<String>,
 }
 
 impl CandidateMetrics {
+    /// True when no hard constraint is violated.
     pub fn feasible(&self) -> bool {
         self.violation == 0.0
+    }
+
+    /// True for DAG candidates that execute branches on distinct
+    /// platforms in parallel (not expressible as chain cut positions).
+    pub fn branch_parallel(&self) -> bool {
+        self.assign.is_some()
     }
 
     /// Metric accessor in *minimization* orientation (maximized metrics
@@ -115,16 +155,22 @@ impl CandidateMetrics {
 /// Wall-time breakdown of an exploration (§V-B reports this).
 #[derive(Debug, Clone, Default)]
 pub struct ExplorationTiming {
+    /// Graph analysis (schedule + cut enumeration) wall time.
     pub graph_s: f64,
+    /// Hardware (mapper) evaluation wall time.
     pub hw_eval_s: f64,
+    /// Candidate sweep wall time.
     pub candidates_s: f64,
+    /// NSGA-II wall time.
     pub nsga_s: f64,
+    /// Whole exploration wall time.
     pub total_s: f64,
 }
 
 /// Result of a full exploration.
 #[derive(Debug, Clone)]
 pub struct Exploration {
+    /// Explored model name.
     pub model: String,
     /// All evaluated candidates (feasible and not).
     pub candidates: Vec<CandidateMetrics>,
@@ -135,25 +181,41 @@ pub struct Exploration {
     pub nsga_front: Vec<usize>,
     /// Definition-2 favorite among feasible candidates.
     pub favorite: Option<usize>,
+    /// Wall-time breakdown of the phases.
     pub timing: ExplorationTiming,
 }
 
 impl Exploration {
+    /// Metrics of the Definition-2 favorite, if one is feasible.
     pub fn favorite_metrics(&self) -> Option<&CandidateMetrics> {
         self.favorite.map(|i| &self.candidates[i])
     }
 }
 
 /// Precomputed per-platform costs for a fixed schedule; evaluates any
-/// cut-position vector in O(segments · log) plus a memo-cached memory
-/// walk. `Sync`: candidates can be evaluated concurrently.
-pub struct ChainEvaluator<'a> {
+/// chain cut-position vector ([`Self::evaluate`]) or convex DAG
+/// partition ([`Self::evaluate_dag`]) against the same cost substrate.
+/// `Sync`: candidates can be evaluated concurrently.
+///
+/// Formerly `ChainEvaluator`; the old name remains as a type alias.
+pub struct PlanEvaluator<'a> {
+    /// The model under exploration.
     pub g: &'a Graph,
+    /// The system (platforms, link, constraints, objectives).
     pub sys: &'a SystemConfig,
+    /// The deterministic linear schedule all cut positions refer to.
     pub order: Vec<NodeId>,
+    /// Candidate cuts of `order` (Definition 1 plus wider cuts).
     pub cuts: Vec<Cut>,
+    /// Schedule position of every node (`pos[id] = index into order`).
+    pos: Vec<usize>,
     prefix: Vec<Vec<SegmentCost>>,
     mem_memo: Mutex<HashMap<(usize, usize, u32), u64>>,
+    /// DAG-path counterpart of `mem_memo`: Definition-3 memory of a
+    /// stage's (sorted) member-position set at a bit width. GA genomes
+    /// differ by ~2 genes per child, so stage sets repeat massively
+    /// across generations.
+    dag_mem_memo: Mutex<HashMap<(Vec<usize>, u32), u64>>,
     // O(1)-lookup arrays for prefix/suffix segments (§Perf: these turn
     // the candidate sweep from O(L²) memory walks into O(L)).
     params_prefix: Vec<u64>,
@@ -164,10 +226,15 @@ pub struct ChainEvaluator<'a> {
     /// before it ship the raw input, not a feature map.
     first_compute_pos: usize,
     model_acc: ModelAccuracy,
+    /// Wall time spent mapping layers onto the platforms' accelerators.
     pub hw_eval_s: f64,
 }
 
-impl<'a> ChainEvaluator<'a> {
+/// Backward-compatible name for [`PlanEvaluator`] (pre-DAG API).
+pub type ChainEvaluator<'a> = PlanEvaluator<'a>;
+
+impl<'a> PlanEvaluator<'a> {
+    /// Build an evaluator with a private layer-cost cache.
     pub fn new(g: &'a Graph, sys: &'a SystemConfig) -> Self {
         Self::with_cache(g, sys, Arc::new(CostCache::new()))
     }
@@ -180,6 +247,7 @@ impl<'a> ChainEvaluator<'a> {
         // candidate labels stable across runs (the search is exercised by
         // the memory module's own tests and the `zoo` CLI).
         let order = topo::topo_sort(g, TieBreak::Deterministic);
+        let pos = topo::positions(&order, g.len());
         let cuts = all_cuts(g, &order);
         let jobs = sys.jobs.max(1);
         let t0 = Instant::now();
@@ -212,9 +280,11 @@ impl<'a> ChainEvaluator<'a> {
             g,
             sys,
             order,
+            pos,
             cuts,
             prefix,
             mem_memo: Mutex::new(HashMap::new()),
+            dag_mem_memo: Mutex::new(HashMap::new()),
             params_prefix,
             macs_prefix,
             peak_prefix,
@@ -363,6 +433,7 @@ impl<'a> ChainEvaluator<'a> {
                 energy_j: seg_energy[j],
                 out_bytes: 0,
                 out_hops: 0,
+                edges: Vec::new(),
             })
             .collect();
         let mut link_bytes = 0u64;
@@ -375,6 +446,7 @@ impl<'a> ChainEvaluator<'a> {
             let hops = (j2 - j1) as u64;
             plan[wi].out_bytes = bytes;
             plan[wi].out_hops = hops;
+            plan[wi].edges.push(PlanEdge { to: Some(wi + 1), bytes, hops });
             latency += hops as f64 * link.latency_s(bytes);
             energy += hops as f64 * link.energy_j(bytes);
             link_bytes += hops * bytes;
@@ -392,6 +464,7 @@ impl<'a> ChainEvaluator<'a> {
                 if let Some(tail) = plan.last_mut() {
                     tail.out_bytes = bytes;
                     tail.out_hops = hops;
+                    tail.edges.push(PlanEdge { to: None, bytes, hops });
                 }
                 latency += hops as f64 * link.latency_s(bytes);
                 energy += hops as f64 * link.energy_j(bytes);
@@ -429,48 +502,15 @@ impl<'a> ChainEvaluator<'a> {
         }
 
         // Remaining hard constraints.
-        let c = &self.sys.constraints;
-        if let Some(maxl) = c.max_latency_s {
-            if latency > maxl {
-                violations.push(format!("latency {latency:.4} > {maxl}"));
-                violation += (latency - maxl) / maxl;
-            }
-        }
-        if let Some(maxe) = c.max_energy_j {
-            if energy > maxe {
-                violations.push(format!("energy {energy:.4} > {maxe}"));
-                violation += (energy - maxe) / maxe;
-            }
-        }
-        if let Some(mint) = c.min_top1 {
-            if top1 < mint {
-                violations.push(format!("top1 {top1:.2} < {mint}"));
-                violation += (mint - top1) / mint;
-            }
-        }
-        if let Some(minr) = c.min_throughput {
-            if throughput < minr {
-                violations.push(format!("throughput {throughput:.2} < {minr}"));
-                violation += (minr - throughput) / minr;
-            }
-        }
-        if let Some(maxb) = c.max_link_bytes {
-            if link_bytes > maxb {
-                violations.push(format!("link bytes {link_bytes} > {maxb}"));
-                violation += (link_bytes - maxb) as f64 / maxb as f64;
-            }
-        }
-        if let Some(rate) = c.target_rate {
-            let req = LinkModel::required_bps(link_bytes, rate);
-            if req > link.bandwidth_bps {
-                violations.push(format!(
-                    "required bw {:.1} Mbit/s > link {:.1}",
-                    req / 1e6,
-                    link.bandwidth_bps / 1e6
-                ));
-                violation += (req - link.bandwidth_bps) / link.bandwidth_bps;
-            }
-        }
+        self.apply_constraints(
+            latency,
+            energy,
+            top1,
+            throughput,
+            link_bytes,
+            &mut violations,
+            &mut violation,
+        );
 
         // A platform whose segment holds only free placeholder layers
         // (Input/Flatten/Dropout: no MACs, ops or parameters) does no
@@ -498,9 +538,341 @@ impl<'a> ChainEvaluator<'a> {
             link_bytes,
             partitions,
             plan,
+            assign: None,
             violation,
             violations,
         }
+    }
+
+    /// The Fig-1 constraint filter, shared verbatim between the chain
+    /// and DAG evaluation paths (identical arithmetic, bit-for-bit).
+    #[allow(clippy::too_many_arguments)]
+    fn apply_constraints(
+        &self,
+        latency: f64,
+        energy: f64,
+        top1: f64,
+        throughput: f64,
+        link_bytes: u64,
+        violations: &mut Vec<String>,
+        violation: &mut f64,
+    ) {
+        let c = &self.sys.constraints;
+        let link = &self.sys.link;
+        if let Some(maxl) = c.max_latency_s {
+            if latency > maxl {
+                violations.push(format!("latency {latency:.4} > {maxl}"));
+                *violation += (latency - maxl) / maxl;
+            }
+        }
+        if let Some(maxe) = c.max_energy_j {
+            if energy > maxe {
+                violations.push(format!("energy {energy:.4} > {maxe}"));
+                *violation += (energy - maxe) / maxe;
+            }
+        }
+        if let Some(mint) = c.min_top1 {
+            if top1 < mint {
+                violations.push(format!("top1 {top1:.2} < {mint}"));
+                *violation += (mint - top1) / mint;
+            }
+        }
+        if let Some(minr) = c.min_throughput {
+            if throughput < minr {
+                violations.push(format!("throughput {throughput:.2} < {minr}"));
+                *violation += (minr - throughput) / minr;
+            }
+        }
+        if let Some(maxb) = c.max_link_bytes {
+            if link_bytes > maxb {
+                violations.push(format!("link bytes {link_bytes} > {maxb}"));
+                *violation += (link_bytes - maxb) as f64 / maxb as f64;
+            }
+        }
+        if let Some(rate) = c.target_rate {
+            let req = LinkModel::required_bps(link_bytes, rate);
+            if req > link.bandwidth_bps {
+                violations.push(format!(
+                    "required bw {:.1} Mbit/s > link {:.1}",
+                    req / 1e6,
+                    link.bandwidth_bps / 1e6
+                ));
+                *violation += (req - link.bandwidth_bps) / link.bandwidth_bps;
+            }
+        }
+    }
+
+    /// Evaluate a convex DAG partition given as a per-layer platform
+    /// assignment (monotone; run
+    /// [`crate::graph::partition::repair_monotone`] on raw genomes
+    /// first).
+    ///
+    /// Chain-expressible partitions — every stage contiguous in the
+    /// schedule — are delegated to [`Self::evaluate`], so on them the
+    /// result is **bit-identical** to the paper's chain model (the
+    /// tier-1-gated `dag_matches_chain_on_sequential_models` invariant
+    /// rests on this). Genuinely branch-parallel partitions use the
+    /// stage-graph model:
+    ///
+    /// * **latency** — critical path over the stage DAG: a stage starts
+    ///   when every in-edge has delivered (`finish(from) + hops ×
+    ///   link_latency(edge bytes)`) and runs its members sequentially;
+    /// * **throughput** — `min` over per-stage service rates and
+    ///   per-*physical-link* ceilings: all edges crossing the same hop
+    ///   of the platform chain contend for it, as in the sim engine
+    ///   (Definition 4 with parallel branches). As in the chain model,
+    ///   stage service rates exclude link occupancy — the documented
+    ///   optimistic delta the sim cross-validation tolerates;
+    /// * **memory** — per-platform Definition 3 over the stage's
+    ///   (possibly non-contiguous) member set, with direct
+    ///   producer→consumer shipping (no store-and-forward buffers);
+    /// * **link** — every crossing tensor ships once per consuming
+    ///   stage, charged `hops = platform distance` on the chain.
+    pub fn evaluate_dag(&self, assign: &[usize]) -> CandidateMetrics {
+        let k = self.sys.platforms.len();
+        // The sensor input lives on platform 0 in the physical model; an
+        // assignment starting elsewhere would get the raw-input transfer
+        // for free and score optimistically vs. the chain's all-on-B.
+        assert_eq!(
+            assign.first().copied().unwrap_or(0),
+            0,
+            "the graph input must be assigned to platform 0 (run repair_monotone)"
+        );
+        let dp = DagPartition::from_assignment(self.g, assign, k)
+            .unwrap_or_else(|e| panic!("invalid DAG assignment: {e}"));
+        if let Some(positions) = dp.as_chain_positions(&self.order, k) {
+            return self.evaluate(&positions);
+        }
+        let ns = dp.stages.len();
+        let link = &self.sys.link;
+        let mut violations: Vec<String> = Vec::new();
+        let mut violation = 0.0f64;
+        let mut memory_bytes = vec![0u64; k];
+        let mut rates: Vec<f64> = Vec::new();
+        let mut stage_lat = vec![0.0f64; ns];
+        let mut stage_en = vec![0.0f64; ns];
+        for (si, st) in dp.stages.iter().enumerate() {
+            let pf = &self.prefix[st.platform];
+            let (mut lat, mut en) = (0.0f64, 0.0f64);
+            for &m in &st.members {
+                let p = self.pos[m.0];
+                lat += pf[p + 1].latency_s - pf[p].latency_s;
+                en += pf[p + 1].energy_j - pf[p].energy_j;
+            }
+            stage_lat[si] = lat;
+            stage_en[si] = en;
+            if lat > 0.0 {
+                rates.push(1.0 / lat);
+            }
+            let bits = self.sys.platforms[st.platform].accelerator.bits;
+            let mut mpos: Vec<usize> = st.members.iter().map(|m| self.pos[m.0]).collect();
+            mpos.sort_unstable();
+            let key = (mpos, bits);
+            let memoized = self.dag_mem_memo.lock().unwrap().get(&key).copied();
+            let m = match memoized {
+                Some(m) => m,
+                None => {
+                    let m = memory::subset_memory_bytes(self.g, &self.order, &key.0, bits);
+                    self.dag_mem_memo.lock().unwrap().insert(key, m);
+                    m
+                }
+            };
+            memory_bytes[st.platform] = m;
+            let cap = self.sys.platforms[st.platform].memory_bytes;
+            if m > cap {
+                violations.push(format!(
+                    "platform {} memory {} > {}",
+                    self.sys.platforms[st.platform].name, m, cap
+                ));
+                violation += (m - cap) as f64 / cap as f64;
+            }
+        }
+
+        // Stage-graph link traffic: each crossing tensor ships directly
+        // from its producer stage to every consuming stage. Throughput
+        // ceilings are charged per *physical* link of the platform chain
+        // (`hop_bytes[j]` = traffic between platforms j and j+1): edges
+        // sharing a hop contend for it, exactly as the sim engine
+        // serializes every transfer crossing the same wire.
+        let mut energy: f64 = stage_en.iter().sum();
+        let mut link_bytes = 0u64;
+        let mut edge_bytes = vec![0u64; dp.edges.len()];
+        let mut edge_hops = vec![0u64; dp.edges.len()];
+        let mut hop_bytes = vec![0u64; k.saturating_sub(1)];
+        let mut lossy_edges = 0usize;
+        for (ei, e) in dp.edges.iter().enumerate() {
+            let from_p = dp.stages[e.from].platform;
+            let to_p = dp.stages[e.to].platform;
+            let bits = self.sys.platforms[from_p].accelerator.bits;
+            // Tensors with compute upstream are feature maps (eligible
+            // for the configured lossy compression); tensors produced
+            // before the first compute layer ship the raw sensor input.
+            let (mut raw_elems, mut fm_elems) = (0u64, 0u64);
+            for &t in &e.tensors {
+                let elems = self.g.node(t).out_shape.numel() as u64;
+                if self.pos[t.0] >= self.first_compute_pos {
+                    fm_elems += elems;
+                } else {
+                    raw_elems += elems;
+                }
+            }
+            let mut fm_bytes = (fm_elems * bits as u64).div_ceil(8);
+            if let Some(c) = self.sys.compression {
+                if fm_bytes > 0 {
+                    fm_bytes = ((fm_bytes as f64 * c.ratio).ceil() as u64).max(1);
+                    lossy_edges += 1;
+                }
+            }
+            let bytes = fm_bytes + (raw_elems * bits as u64).div_ceil(8);
+            let hops = (to_p - from_p) as u64;
+            edge_bytes[ei] = bytes;
+            edge_hops[ei] = hops;
+            energy += hops as f64 * link.energy_j(bytes);
+            link_bytes += hops * bytes;
+            for h in from_p..to_p {
+                hop_bytes[h] += bytes;
+            }
+        }
+
+        // Critical path over the stage DAG (stages are in platform
+        // order, which monotonicity makes a topological order).
+        let mut finish = vec![0.0f64; ns];
+        for si in 0..ns {
+            let mut start = 0.0f64;
+            for (ei, e) in dp.edges.iter().enumerate() {
+                if e.to == si {
+                    let arrive =
+                        finish[e.from] + edge_hops[ei] as f64 * link.latency_s(edge_bytes[ei]);
+                    start = start.max(arrive);
+                }
+            }
+            finish[si] = start + stage_lat[si];
+        }
+        let mut latency = finish.iter().copied().fold(0.0f64, f64::max);
+
+        // The final output still travels to the chain's last platform,
+        // exactly as in the chain model (uncompressed: it is the result,
+        // not a feature map).
+        let sink_platform = dp.stages.last().map(|s| s.platform).unwrap_or(0);
+        let mut tail_edge: Option<PlanEdge> = None;
+        if sink_platform < k - 1 {
+            let bits = self.sys.platforms[sink_platform].accelerator.bits;
+            let out_elems: usize =
+                self.g.outputs().iter().map(|&o| self.g.node(o).out_shape.numel()).sum();
+            let bytes = (out_elems as u64 * bits as u64).div_ceil(8);
+            let hops = (k - 1 - sink_platform) as u64;
+            latency += hops as f64 * link.latency_s(bytes);
+            energy += hops as f64 * link.energy_j(bytes);
+            link_bytes += hops * bytes;
+            for h in sink_platform..k - 1 {
+                hop_bytes[h] += bytes;
+            }
+            tail_edge = Some(PlanEdge { to: None, bytes, hops });
+        }
+        for &b in &hop_bytes {
+            if b > 0 {
+                rates.push(link.throughput_ceiling(b));
+            }
+        }
+
+        let throughput = rates.iter().copied().fold(f64::INFINITY, f64::min);
+        let throughput = if throughput.is_finite() { throughput } else { 0.0 };
+
+        // Accuracy under per-stage bit widths (MAC-weighted noise).
+        let total_macs = *self.macs_prefix.last().unwrap() as f64;
+        let mut noise = 0.0f64;
+        if total_macs > 0.0 {
+            for st in &dp.stages {
+                let macs: u64 = st.members.iter().map(|&m| self.g.node(m).macs).sum();
+                let bits = self.sys.platforms[st.platform].accelerator.bits;
+                noise += macs as f64 / total_macs * accuracy::noise_weight(bits);
+            }
+        }
+        let mut top1 = accuracy::top1_from_noise(&self.model_acc, noise, self.sys.qat);
+        if let Some(c) = self.sys.compression {
+            top1 = (top1 - c.top1_penalty * lossy_edges as f64).max(0.0);
+        }
+
+        self.apply_constraints(
+            latency,
+            energy,
+            top1,
+            throughput,
+            link_bytes,
+            &mut violations,
+            &mut violation,
+        );
+
+        let computes = |st: &crate::graph::partition::DagStage| {
+            st.members.iter().any(|&m| {
+                let n = self.g.node(m);
+                n.macs > 0 || n.ops > 0 || n.params > 0
+            })
+        };
+        let partitions = dp.stages.iter().filter(|st| computes(st)).count().max(1);
+
+        let mut plan: Vec<StagePlan> = dp
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(si, st)| StagePlan {
+                platform: st.platform,
+                latency_s: stage_lat[si],
+                energy_j: stage_en[si],
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+            })
+            .collect();
+        for (ei, e) in dp.edges.iter().enumerate() {
+            plan[e.from].edges.push(PlanEdge {
+                to: Some(e.to),
+                bytes: edge_bytes[ei],
+                hops: edge_hops[ei],
+            });
+        }
+        if let (Some(tail), Some(last)) = (tail_edge, plan.last_mut()) {
+            last.edges.push(tail);
+        }
+        for p in &mut plan {
+            p.out_bytes = p.edges.iter().map(|e| e.bytes).sum();
+            p.out_hops = p.edges.iter().map(|e| e.hops).sum();
+        }
+
+        let label = self.dag_label(&dp);
+        CandidateMetrics {
+            positions: Vec::new(),
+            label,
+            latency_s: latency,
+            energy_j: energy,
+            throughput,
+            top1,
+            memory_bytes,
+            link_bytes,
+            partitions,
+            plan,
+            assign: Some(dp.assign),
+            violation,
+            violations,
+        }
+    }
+
+    /// Stable human-readable label for a branch-parallel candidate:
+    /// the used platform names plus a 32-bit assignment digest —
+    /// distinct assignments collide with probability ~n²/2³³, vanishing
+    /// at realistic front sizes (labels are also a dedup key in
+    /// `explore_dag`, so collisions must stay negligible).
+    fn dag_label(&self, dp: &DagPartition) -> String {
+        let mut h = Fnv64::new();
+        for &a in &dp.assign {
+            h.write_usize(a);
+        }
+        let names: Vec<&str> = dp
+            .stages
+            .iter()
+            .map(|st| self.sys.platforms[st.platform].name.as_str())
+            .collect();
+        format!("par:{}@{:08x}", names.join("+"), h.finish() & 0xffff_ffff)
     }
 
     fn label_for(&self, segs: &[Range<usize>], used: &[usize]) -> String {
@@ -585,7 +957,7 @@ pub fn exhaustive_pareto(candidates: &[CandidateMetrics], metrics: &[Metric]) ->
 
 /// NSGA-II problem over the two-platform candidate index space.
 struct TwoPlatformProblem<'a, 'b> {
-    ev: &'a ChainEvaluator<'b>,
+    ev: &'a PlanEvaluator<'b>,
     /// Candidate cut positions (clean cuts + the all-on-A sentinel).
     space: Vec<usize>,
     metrics: Vec<Metric>,
@@ -625,12 +997,23 @@ pub fn explore_two_platform_cached(
     cache: Arc<CostCache>,
 ) -> Exploration {
     assert_eq!(sys.platforms.len(), 2, "explore_two_platform needs 2 platforms");
+    let total0 = Instant::now();
+    let t0 = Instant::now();
+    let ev = PlanEvaluator::with_cache(g, sys, cache);
+    let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
+    let mut ex = explore_two_platform_with(&ev, graph_s);
+    ex.timing.total_s = total0.elapsed().as_secs_f64();
+    ex
+}
+
+/// The two-platform sweep against an existing evaluator — the shared
+/// core of [`explore_two_platform_cached`] and [`dag::explore_dag`]
+/// (which appends branch-parallel candidates to this exact result).
+pub(crate) fn explore_two_platform_with(ev: &PlanEvaluator, graph_s: f64) -> Exploration {
+    let g = ev.g;
+    let sys = ev.sys;
     let jobs = sys.jobs.max(1);
     let total0 = Instant::now();
-
-    let t0 = Instant::now();
-    let ev = ChainEvaluator::with_cache(g, sys, cache);
-    let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
 
     // Candidate space: Definition-1 (single-tensor) cuts plus the two
     // single-platform references. Cut at `len-1` = everything on A.
@@ -668,7 +1051,8 @@ pub fn explore_two_platform_cached(
 
     // NSGA-II per the paper (validated against the exhaustive front).
     let t2 = Instant::now();
-    let problem = TwoPlatformProblem { ev: &ev, space: space.clone(), metrics: sys.pareto_metrics.clone() };
+    let problem =
+        TwoPlatformProblem { ev, space: space.clone(), metrics: sys.pareto_metrics.clone() };
     let front = nsga2::optimize_par(&problem, &Nsga2Cfg::for_layers(g.len(), sys.seed), jobs);
     let mut nsga_front: Vec<usize> = front
         .iter()
@@ -747,6 +1131,51 @@ mod tests {
             // the plan's out_bytes × hops, and vice versa.
             let plan_link: u64 = c.plan.iter().map(|s| s.out_bytes * s.out_hops).sum();
             assert_eq!(plan_link, c.link_bytes, "{}: plan link bytes", c.label);
+        }
+    }
+
+    #[test]
+    fn plan_edges_account_every_wire_byte() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ex = explore_two_platform(&g, &sys);
+        for c in &ex.candidates {
+            let edge_link: u64 = c
+                .plan
+                .iter()
+                .flat_map(|s| s.edges.iter())
+                .map(|e| e.bytes * e.hops)
+                .sum();
+            assert_eq!(edge_link, c.link_bytes, "{}: edges vs link_bytes", c.label);
+            for s in &c.plan {
+                let agg: u64 = s.edges.iter().map(|e| e.bytes).sum();
+                assert_eq!(agg, s.out_bytes, "{}: out_bytes aggregate", c.label);
+            }
+        }
+    }
+
+    #[test]
+    fn evaluate_dag_delegates_chain_assignments_bit_identically() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ev = PlanEvaluator::new(&g, &sys);
+        let len = ev.order.len();
+        for pos in [0usize, 3, len - 1] {
+            let mut assign = vec![0usize; g.len()];
+            for (i, &v) in ev.order.iter().enumerate() {
+                assign[v.0] = usize::from(i > pos);
+            }
+            let a = ev.evaluate(&[pos]);
+            let b = ev.evaluate_dag(&assign);
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.positions, b.positions, "delegation must go through evaluate()");
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+            assert_eq!(a.top1.to_bits(), b.top1.to_bits());
+            assert_eq!(a.memory_bytes, b.memory_bytes);
+            assert_eq!(a.link_bytes, b.link_bytes);
+            assert!(b.assign.is_none());
         }
     }
 

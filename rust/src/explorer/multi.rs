@@ -7,7 +7,7 @@
 //! duplicate positions naturally express idle platforms (fewer
 //! partitions than platforms).
 
-use super::{exhaustive_pareto, ChainEvaluator, CandidateMetrics, Exploration, ExplorationTiming};
+use super::{exhaustive_pareto, CandidateMetrics, Exploration, ExplorationTiming, PlanEvaluator};
 use crate::config::{Metric, SystemConfig};
 use crate::graph::Graph;
 use crate::hw::CostCache;
@@ -17,7 +17,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 struct ChainProblem<'a, 'b> {
-    ev: &'a ChainEvaluator<'b>,
+    ev: &'a PlanEvaluator<'b>,
     metrics: Vec<Metric>,
     num_cuts: usize,
     max_pos: usize,
@@ -59,13 +59,25 @@ pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
 pub fn explore_chain_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
     let total0 = Instant::now();
     assert!(sys.platforms.len() >= 2, "need at least two platforms");
+    let ev = PlanEvaluator::with_cache(g, sys, cache);
+    let mut ex = explore_chain_with(&ev);
+    ex.timing.total_s = total0.elapsed().as_secs_f64();
+    ex
+}
+
+/// The NSGA-II chain search against an existing evaluator — the shared
+/// core of [`explore_chain_cached`] and `dag::explore_dag` on systems
+/// with more than two platforms.
+pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
+    let total0 = Instant::now();
+    let g = ev.g;
+    let sys = ev.sys;
     let jobs = sys.jobs.max(1);
-    let ev = ChainEvaluator::with_cache(g, sys, cache);
     let len = ev.order.len();
 
     let t2 = Instant::now();
     let problem = ChainProblem {
-        ev: &ev,
+        ev,
         metrics: sys.pareto_metrics.clone(),
         num_cuts: sys.platforms.len() - 1,
         max_pos: len - 1,

@@ -18,10 +18,12 @@ pub enum Shape {
 }
 
 impl Shape {
+    /// CHW feature-map constructor.
     pub fn chw(c: usize, h: usize, w: usize) -> Self {
         Shape::Chw { c, h, w }
     }
 
+    /// Total elements.
     pub fn numel(&self) -> usize {
         match *self {
             Shape::Chw { c, h, w } => c * h * w,
@@ -29,6 +31,7 @@ impl Shape {
         }
     }
 
+    /// Channel count (flat vectors count as channels).
     pub fn channels(&self) -> usize {
         match *self {
             Shape::Chw { c, .. } => c,
@@ -36,6 +39,7 @@ impl Shape {
         }
     }
 
+    /// Spatial `(h, w)`; `(1, 1)` for flat vectors.
     pub fn spatial(&self) -> (usize, usize) {
         match *self {
             Shape::Chw { h, w, .. } => (h, w),
@@ -56,14 +60,20 @@ impl fmt::Display for Shape {
 /// Elementwise activation functions (zero parameters).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Act {
+    /// `max(x, 0)`.
     Relu,
+    /// `min(max(x, 0), 6)`.
     Relu6,
+    /// `x · sigmoid(x)` (a.k.a. swish; EfficientNet).
     Silu,
+    /// Logistic gate (squeeze-and-excitation).
     Sigmoid,
+    /// Classifier head normalization.
     Softmax,
 }
 
 impl Act {
+    /// ONNX-style operator name of the activation.
     pub fn name(&self) -> &'static str {
         match self {
             Act::Relu => "Relu",
@@ -78,8 +88,11 @@ impl Act {
 /// 2-D pooling hyperparameters.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Pool2d {
+    /// Square kernel size.
     pub kernel: usize,
+    /// Stride in both dimensions.
     pub stride: usize,
+    /// Zero padding on each border.
     pub pad: usize,
     /// torchvision GoogLeNet uses `ceil_mode=True` pools.
     pub ceil: bool,
@@ -91,6 +104,7 @@ pub struct Pool2d {
 pub enum LayerKind {
     /// Graph input placeholder.
     Input,
+    /// 2-D (grouped) convolution.
     Conv2d {
         out_c: usize,
         kernel: (usize, usize),
@@ -99,6 +113,7 @@ pub enum LayerKind {
         groups: usize,
         bias: bool,
     },
+    /// Fully connected layer (ONNX `Gemm`).
     Linear {
         out_features: usize,
         bias: bool,
@@ -107,9 +122,13 @@ pub enum LayerKind {
     /// parameters; running stats are buffers and excluded, matching the
     /// parameter counts torchvision reports).
     BatchNorm,
+    /// Elementwise activation.
     Activation(Act),
+    /// 2-D max pooling.
     MaxPool(Pool2d),
+    /// 2-D average pooling.
     AvgPool(Pool2d),
+    /// Global average pooling to `c×1×1`.
     GlobalAvgPool,
     /// Elementwise sum of all inputs (residual connections).
     Add,
@@ -118,6 +137,7 @@ pub enum LayerKind {
     Mul,
     /// Channel-dimension concatenation (Inception / Fire modules).
     Concat,
+    /// Reshape to a flat vector (no compute).
     Flatten,
     /// Identity at inference time; kept so graph indices match training
     /// topologies.

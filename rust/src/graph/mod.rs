@@ -28,12 +28,16 @@ impl std::fmt::Display for NodeId {
 /// One layer in the DAG.
 #[derive(Debug, Clone)]
 pub struct Node {
+    /// Identifier (index into [`Graph::nodes`]).
     pub id: NodeId,
     /// ONNX-style name: `<Op>_<per-op-counter>`, e.g. `Conv_45`, `Relu_11`
     /// — the naming the paper uses to label partitioning points.
     pub name: String,
+    /// Operator kind with its hyperparameters.
     pub kind: LayerKind,
+    /// Producers of this layer's inputs.
     pub inputs: Vec<NodeId>,
+    /// Inferred output feature-map shape.
     pub out_shape: Shape,
     /// Learnable parameters (count, not bytes — bytes depend on the
     /// platform's quantized bit width, applied by the memory model).
@@ -60,25 +64,31 @@ impl Node {
 /// producer to consumer via `Node::inputs`.
 #[derive(Debug, Clone)]
 pub struct Graph {
+    /// Model name (zoo key).
     pub name: String,
+    /// Layers in insertion (topological) order.
     pub nodes: Vec<Node>,
     /// Per-operator counters used for ONNX-style naming.
     op_counters: BTreeMap<&'static str, usize>,
 }
 
 impl Graph {
+    /// Create an empty graph with the given model name.
     pub fn new(name: &str) -> Self {
         Self { name: name.to_string(), nodes: Vec::new(), op_counters: BTreeMap::new() }
     }
 
+    /// Borrow a node by id.
     pub fn node(&self, id: NodeId) -> &Node {
         &self.nodes[id.0]
     }
 
+    /// Number of layers.
     pub fn len(&self) -> usize {
         self.nodes.len()
     }
 
+    /// True when the graph has no layers.
     pub fn is_empty(&self) -> bool {
         self.nodes.is_empty()
     }

@@ -57,6 +57,16 @@ fn last_use_positions(g: &Graph, order: &[NodeId]) -> Vec<usize> {
 ///
 /// Runs in O(V + E) total using a sweep: a producer crosses cut `p` iff
 /// `pos[u] <= p < last_use[u]`.
+///
+/// ```
+/// use partir::graph::partition::all_cuts;
+/// use partir::graph::topo::{topo_sort, TieBreak};
+/// let g = partir::zoo::tiny_cnn(10);
+/// let order = topo_sort(&g, TieBreak::Deterministic);
+/// let cuts = all_cuts(&g, &order);
+/// assert_eq!(cuts.len(), g.len() - 1);
+/// assert!(cuts.iter().all(|c| c.is_clean())); // a chain: every cut ships one tensor
+/// ```
 pub fn all_cuts(g: &Graph, order: &[NodeId]) -> Vec<Cut> {
     assert_eq!(order.len(), g.len(), "schedule must cover the whole graph");
     let n = g.len();
@@ -120,6 +130,330 @@ pub fn segments(order_len: usize, cut_positions: &[usize]) -> Vec<Range<usize>> 
         prev = p + 1;
     }
     out.push(prev..order_len);
+    out
+}
+
+// ---------------------------------------------------------------------
+// DAG partitioning (beyond linear cuts)
+// ---------------------------------------------------------------------
+//
+// The paper's Definition-1 cuts live on a *linear* schedule, which
+// collapses branchy CNNs into a chain and forfeits mapping parallel
+// branches onto different platforms. The types below generalize a
+// partitioning to an arbitrary **convex** subgraph partition of the
+// layer DAG, restricted to *monotone* platform assignments: along every
+// edge the platform index never decreases, which (a) guarantees every
+// class is convex (no path leaves a platform and returns to it), (b)
+// makes the induced stage graph acyclic with stages ordered by platform
+// index, and (c) matches the physical system — a chain of platforms
+// where data only flows forward. Chain cuts are exactly the monotone
+// assignments whose classes are contiguous in the schedule
+// ([`DagPartition::as_chain_positions`]), so Definition 1 is recovered
+// as the special case.
+
+use std::collections::BTreeMap;
+
+/// True iff the platform index never decreases along any edge — the
+/// sufficient (and for chains of platforms, the modelled) form of
+/// convexity. Monotone assignments are always [`is_convex`].
+pub fn is_monotone(g: &Graph, assign: &[usize]) -> bool {
+    assert_eq!(assign.len(), g.len());
+    g.nodes.iter().all(|n| n.inputs.iter().all(|&i| assign[i.0] <= assign[n.id.0]))
+}
+
+/// True iff every platform's layer set is convex: for any two layers on
+/// the same platform, every directed path between them stays on that
+/// platform. Equivalent to the quotient (stage) graph being acyclic.
+pub fn is_convex(g: &Graph, assign: &[usize]) -> bool {
+    assert_eq!(assign.len(), g.len());
+    // Kahn over the quotient graph of platform classes.
+    let classes: Vec<usize> = {
+        let mut c: Vec<usize> = assign.to_vec();
+        c.sort_unstable();
+        c.dedup();
+        c
+    };
+    let idx_of = |p: usize| classes.binary_search(&p).unwrap();
+    let n = classes.len();
+    let mut edges = std::collections::BTreeSet::new();
+    for node in &g.nodes {
+        for &i in &node.inputs {
+            let (a, b) = (idx_of(assign[i.0]), idx_of(assign[node.id.0]));
+            if a != b {
+                edges.insert((a, b));
+            }
+        }
+    }
+    let mut indeg = vec![0usize; n];
+    for &(_, b) in &edges {
+        indeg[b] += 1;
+    }
+    let mut ready: Vec<usize> = (0..n).filter(|&i| indeg[i] == 0).collect();
+    let mut seen = 0;
+    while let Some(v) = ready.pop() {
+        seen += 1;
+        for &(a, b) in &edges {
+            if a == v {
+                indeg[b] -= 1;
+                if indeg[b] == 0 {
+                    ready.push(b);
+                }
+            }
+        }
+    }
+    seen == n
+}
+
+/// Convexity repair operator (used by the DAG explorer's NSGA-II
+/// genome): pin the graph input to platform 0 and raise every layer to
+/// at least the maximum platform of its inputs. Node ids are
+/// topologically valid by construction ([`Graph::validate`]), so one
+/// pass in id order suffices. Idempotent; monotone assignments with
+/// `assign[0] == 0` are left unchanged.
+///
+/// ```
+/// use partir::graph::partition::{is_monotone, repair_monotone};
+/// use partir::graph::{Act, Graph, LayerKind};
+/// let mut g = Graph::new("doc");
+/// let x = g.input(2, 4, 4);
+/// let a = g.add(LayerKind::Activation(Act::Relu), &[x]);
+/// let b = g.add(LayerKind::Activation(Act::Relu), &[a]);
+/// let mut assign = vec![1, 0, 1]; // input on 1, middle on 0: invalid
+/// repair_monotone(&g, &mut assign);
+/// assert_eq!(assign, vec![0, 0, 1]);
+/// assert!(is_monotone(&g, &assign));
+/// # let _ = (a, b);
+/// ```
+pub fn repair_monotone(g: &Graph, assign: &mut [usize]) {
+    assert_eq!(assign.len(), g.len());
+    if assign.is_empty() {
+        return;
+    }
+    assign[0] = 0; // the sensor input originates on the first platform
+    for n in &g.nodes {
+        let mut p = assign[n.id.0];
+        for &i in &n.inputs {
+            p = p.max(assign[i.0]);
+        }
+        assign[n.id.0] = p;
+    }
+}
+
+/// One stage of a [`DagPartition`]: a convex set of layers executing on
+/// a single platform.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DagStage {
+    /// Index into the system's platform chain.
+    pub platform: usize,
+    /// Member layers, ascending by node id.
+    pub members: Vec<NodeId>,
+}
+
+/// A tensor transfer between two stages of a [`DagPartition`]: every
+/// producer whose output crosses from `from` to `to` ships it directly
+/// (no store-and-forward through intermediate stages).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageEdge {
+    /// Producing stage (index into [`DagPartition::stages`]).
+    pub from: usize,
+    /// Consuming stage (index into [`DagPartition::stages`]).
+    pub to: usize,
+    /// Producers whose output tensors cross this edge (deduplicated,
+    /// ascending by node id).
+    pub tensors: Vec<NodeId>,
+    /// Total elements crossing the edge.
+    pub elems: usize,
+}
+
+impl StageEdge {
+    /// Bytes on the wire for a given transmission bit width.
+    pub fn bytes(&self, bits: u32) -> u64 {
+        (self.elems as u64 * bits as u64).div_ceil(8)
+    }
+}
+
+/// A convex subgraph partition of the layer DAG: stages are convex
+/// layer sets on distinct platforms, connected by explicit inter-stage
+/// tensor edges. Built from a monotone layer→platform assignment;
+/// chain cuts are the special case whose stages are contiguous in a
+/// linear schedule ([`Self::as_chain_positions`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DagPartition {
+    /// Per-layer platform assignment (`assign[id] = platform`).
+    pub assign: Vec<usize>,
+    /// Used platforms' stages, ascending by platform index — which is
+    /// also a topological order of the stage graph (monotonicity).
+    pub stages: Vec<DagStage>,
+    /// Inter-stage tensor transfers, ascending by `(from, to)`.
+    pub edges: Vec<StageEdge>,
+}
+
+impl DagPartition {
+    /// Build the partition induced by a monotone assignment. Errors on
+    /// length/platform-range mismatches and non-monotone assignments
+    /// (run [`repair_monotone`] first for arbitrary genomes).
+    pub fn from_assignment(
+        g: &Graph,
+        assign: &[usize],
+        num_platforms: usize,
+    ) -> Result<Self, String> {
+        if assign.len() != g.len() {
+            return Err(format!("assignment length {} != graph {}", assign.len(), g.len()));
+        }
+        if let Some(&p) = assign.iter().find(|&&p| p >= num_platforms) {
+            return Err(format!("platform {p} out of range (have {num_platforms})"));
+        }
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                if assign[i.0] > assign[n.id.0] {
+                    return Err(format!(
+                        "non-monotone: {} (platform {}) feeds {} (platform {})",
+                        g.node(i).name,
+                        assign[i.0],
+                        n.name,
+                        assign[n.id.0]
+                    ));
+                }
+            }
+        }
+        let mut members: BTreeMap<usize, Vec<NodeId>> = BTreeMap::new();
+        for n in &g.nodes {
+            members.entry(assign[n.id.0]).or_default().push(n.id);
+        }
+        let stages: Vec<DagStage> = members
+            .into_iter()
+            .map(|(platform, members)| DagStage { platform, members })
+            .collect();
+        let mut stage_of = vec![usize::MAX; num_platforms];
+        for (si, st) in stages.iter().enumerate() {
+            stage_of[st.platform] = si;
+        }
+        let mut cross: BTreeMap<(usize, usize), Vec<NodeId>> = BTreeMap::new();
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                if assign[i.0] != assign[n.id.0] {
+                    let key = (stage_of[assign[i.0]], stage_of[assign[n.id.0]]);
+                    let v = cross.entry(key).or_default();
+                    if !v.contains(&i) {
+                        v.push(i);
+                    }
+                }
+            }
+        }
+        let edges = cross
+            .into_iter()
+            .map(|((from, to), mut tensors)| {
+                tensors.sort_unstable();
+                let elems = tensors.iter().map(|&t| g.node(t).out_shape.numel()).sum();
+                StageEdge { from, to, tensors, elems }
+            })
+            .collect();
+        Ok(Self { assign: assign.to_vec(), stages, edges })
+    }
+
+    /// True iff more than one stage computes in parallel somewhere —
+    /// i.e. the partition is *not* expressible as chain cut positions
+    /// over the given schedule.
+    pub fn is_branch_parallel(&self, order: &[NodeId], num_platforms: usize) -> bool {
+        self.as_chain_positions(order, num_platforms).is_none()
+    }
+
+    /// If every stage is a contiguous range of the schedule and the
+    /// ranges tile it in platform order, return the equivalent chain
+    /// cut-position vector (length `num_platforms - 1`, the exact input
+    /// shape of the chain evaluator — idle platforms encoded as
+    /// duplicate positions). `None` for genuinely branch-parallel
+    /// partitions.
+    pub fn as_chain_positions(
+        &self,
+        order: &[NodeId],
+        num_platforms: usize,
+    ) -> Option<Vec<usize>> {
+        let pos = super::topo::positions(order, self.assign.len());
+        let mut bounds: Vec<Option<(usize, usize, usize)>> = vec![None; num_platforms];
+        for st in &self.stages {
+            let (mut mn, mut mx) = (usize::MAX, 0usize);
+            for &m in &st.members {
+                mn = mn.min(pos[m.0]);
+                mx = mx.max(pos[m.0]);
+            }
+            bounds[st.platform] = Some((mn, mx, st.members.len()));
+        }
+        let mut prev = 0usize;
+        let mut positions = Vec::with_capacity(num_platforms.saturating_sub(1));
+        for (j, b) in bounds.iter().enumerate() {
+            match *b {
+                Some((mn, mx, cnt)) => {
+                    if mx - mn + 1 != cnt || mn != prev {
+                        return None; // holes, or out of platform order
+                    }
+                    prev = mx + 1;
+                    if j + 1 < num_platforms {
+                        positions.push(mx);
+                    }
+                }
+                None => {
+                    if prev == 0 {
+                        return None; // platform 0 idle: the chain cannot express it
+                    }
+                    if j + 1 < num_platforms {
+                        positions.push(prev - 1);
+                    }
+                }
+            }
+        }
+        if prev != order.len() {
+            return None;
+        }
+        Some(positions)
+    }
+}
+
+/// Enumerate two-platform DAG cuts: every monotone 0/1 assignment with
+/// the input pinned to platform 0 (platform 0's set is down-closed, so
+/// its frontier is an antichain of the DAG). On a branch-free chain
+/// this yields exactly the `len` linear prefixes — Definition-1 cuts
+/// plus the all-on-A sentinel — so chain cuts are the special case.
+/// Enumeration stops after `cap` assignments (branchy graphs have
+/// exponentially many antichains); callers that need the full space on
+/// large graphs should search ([`crate::nsga2`]) instead.
+///
+/// ```
+/// use partir::graph::partition::dag_cuts;
+/// use partir::graph::{Act, Graph, LayerKind};
+/// let mut g = Graph::new("chain");
+/// let mut prev = g.input(2, 4, 4);
+/// for _ in 0..3 {
+///     prev = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+/// }
+/// // A 4-node chain has exactly 4 down-sets: the linear prefixes.
+/// assert_eq!(dag_cuts(&g, 1024).len(), 4);
+/// ```
+pub fn dag_cuts(g: &Graph, cap: usize) -> Vec<Vec<usize>> {
+    fn rec(g: &Graph, v: usize, assign: &mut Vec<usize>, out: &mut Vec<Vec<usize>>, cap: usize) {
+        if out.len() >= cap {
+            return;
+        }
+        if v == g.len() {
+            out.push(assign.clone());
+            return;
+        }
+        if g.nodes[v].inputs.iter().all(|&i| assign[i.0] == 0) {
+            assign[v] = 0;
+            rec(g, v + 1, assign, out, cap);
+        }
+        if v > 0 {
+            assign[v] = 1;
+            rec(g, v + 1, assign, out, cap);
+            assign[v] = 0;
+        }
+    }
+    let mut out = Vec::new();
+    if g.is_empty() {
+        return out;
+    }
+    let mut assign = vec![0usize; g.len()];
+    rec(g, 0, &mut assign, &mut out, cap);
     out
 }
 
@@ -288,6 +622,182 @@ mod tests {
                 assert_eq!(cut.tensors, naive, "mismatch at pos {}", cut.pos);
             }
         });
+    }
+
+    /// input -> a -> {b, c} -> add(b, c) -> gap: the minimal diamond.
+    fn diamond() -> (Graph, [NodeId; 6]) {
+        let mut g = Graph::new("diamond");
+        let x = g.input(4, 8, 8);
+        let a = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let b = g.add(LayerKind::Activation(Act::Relu), &[a]);
+        let c = g.add(LayerKind::Activation(Act::Relu), &[a]);
+        let add = g.add(LayerKind::Add, &[b, c]);
+        let gap = g.add(LayerKind::GlobalAvgPool, &[add]);
+        (g, [x, a, b, c, add, gap])
+    }
+
+    #[test]
+    fn monotone_and_convex_checks() {
+        let (g, [_, _, b, _, _, _]) = diamond();
+        // Branch-parallel split: b on platform 1, join and tail on 1.
+        let mut assign = vec![0, 0, 0, 0, 1, 1];
+        assign[b.0] = 1;
+        assert!(is_monotone(&g, &assign));
+        assert!(is_convex(&g, &assign));
+        // Platform decreasing along an edge: not monotone, and the
+        // quotient A->B->A cycle breaks convexity.
+        let bad = vec![0, 1, 0, 1, 0, 0];
+        assert!(!is_monotone(&g, &bad));
+        assert!(!is_convex(&g, &bad));
+        // Single class is trivially both.
+        assert!(is_monotone(&g, &[0; 6]));
+        assert!(is_convex(&g, &[2; 6]));
+    }
+
+    #[test]
+    fn repair_raises_to_monotone_and_pins_input() {
+        let (g, _) = diamond();
+        let mut assign = vec![2, 0, 1, 0, 0, 0];
+        repair_monotone(&g, &mut assign);
+        assert_eq!(assign[0], 0, "input pinned to platform 0");
+        assert!(is_monotone(&g, &assign));
+        // Idempotent.
+        let again = {
+            let mut a = assign.clone();
+            repair_monotone(&g, &mut a);
+            a
+        };
+        assert_eq!(assign, again);
+        // Already-monotone assignments are untouched.
+        let mut ok = vec![0, 0, 0, 1, 1, 1];
+        let before = ok.clone();
+        repair_monotone(&g, &mut ok);
+        assert_eq!(ok, before);
+    }
+
+    #[test]
+    fn dag_partition_from_assignment_builds_stages_and_edges() {
+        let (g, [x, a, b, c, add, gap]) = diamond();
+        // c stays on platform 0 with the stem; b alone on platform 1 (a
+        // single-layer stage running in parallel with c); join + tail on
+        // platform 2.
+        let mut assign = vec![0; 6];
+        assign[b.0] = 1;
+        assign[add.0] = 2;
+        assign[gap.0] = 2;
+        let dp = DagPartition::from_assignment(&g, &assign, 3).unwrap();
+        assert_eq!(dp.stages.len(), 3);
+        assert_eq!(dp.stages[0].members, vec![x, a, c]);
+        assert_eq!(dp.stages[1].members, vec![b], "single-layer stage");
+        assert_eq!(dp.stages[2].members, vec![add, gap]);
+        // Edges: a -> b (0->1), c -> add (0->2), b -> add (1->2).
+        assert_eq!(dp.edges.len(), 3);
+        let e = |i: usize| (dp.edges[i].from, dp.edges[i].to, dp.edges[i].tensors.clone());
+        assert_eq!(e(0), (0, 1, vec![a]));
+        assert_eq!(e(1), (0, 2, vec![c]));
+        assert_eq!(e(2), (1, 2, vec![b]));
+        assert_eq!(dp.edges[0].elems, 4 * 8 * 8);
+        assert_eq!(dp.edges[0].bytes(16), (4 * 8 * 8 * 2) as u64);
+        // This split is genuinely branch-parallel.
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        assert!(dp.is_branch_parallel(&order, 3));
+        // Non-monotone assignments are rejected.
+        let bad = vec![0, 1, 0, 1, 1, 1];
+        assert!(DagPartition::from_assignment(&g, &bad, 3).is_err());
+    }
+
+    #[test]
+    fn shared_tensor_counts_once_per_edge() {
+        // a feeds both b and c on the same remote platform: one copy
+        // crosses, not two.
+        let (g, [_, a, b, c, add, gap]) = diamond();
+        let mut assign = vec![0; 6];
+        for id in [b, c, add, gap] {
+            assign[id.0] = 1;
+        }
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert_eq!(dp.edges.len(), 1);
+        assert_eq!(dp.edges[0].tensors, vec![a]);
+        assert_eq!(dp.edges[0].elems, 4 * 8 * 8);
+    }
+
+    #[test]
+    fn chain_positions_roundtrip_on_contiguous_partitions() {
+        let g = chain(5); // input + 5 relus
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        // Cut after position 2 on two platforms.
+        let assign = vec![0, 0, 0, 1, 1, 1];
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert_eq!(dp.as_chain_positions(&order, 2), Some(vec![2]));
+        assert!(!dp.is_branch_parallel(&order, 2));
+        // All on platform 0 = the all-on-A sentinel position.
+        let dp = DagPartition::from_assignment(&g, &[0; 6], 2).unwrap();
+        assert_eq!(dp.as_chain_positions(&order, 2), Some(vec![5]));
+        // Idle middle platform of a 3-chain encodes as a duplicate cut.
+        let assign = vec![0, 0, 0, 2, 2, 2];
+        let dp = DagPartition::from_assignment(&g, &assign, 3).unwrap();
+        assert_eq!(dp.as_chain_positions(&order, 3), Some(vec![2, 2]));
+    }
+
+    #[test]
+    fn branch_split_is_not_chain_expressible() {
+        let (g, [_, _, b, _, _, _]) = diamond();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let mut assign = vec![0, 0, 0, 0, 1, 1];
+        assign[b.0] = 1; // b runs on platform 1 while c runs on 0
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert_eq!(dp.as_chain_positions(&order, 2), None);
+    }
+
+    #[test]
+    fn branch_wider_than_platform_count_repairs_cleanly() {
+        // Three parallel branches, two platforms: any genome repairs to
+        // a valid monotone assignment and builds a partition.
+        let mut g = Graph::new("wide");
+        let x = g.input(4, 4, 4);
+        let b1 = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let b2 = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let b3 = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let a1 = g.add(LayerKind::Add, &[b1, b2]);
+        g.add(LayerKind::Add, &[a1, b3]);
+        let mut assign = vec![1, 0, 1, 0, 0, 1];
+        repair_monotone(&g, &mut assign);
+        assert!(is_monotone(&g, &assign));
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert!(dp.stages.len() <= 2);
+        // Every layer lands in exactly one stage.
+        let total: usize = dp.stages.iter().map(|s| s.members.len()).sum();
+        assert_eq!(total, g.len());
+    }
+
+    #[test]
+    fn dag_cuts_on_a_chain_are_the_linear_prefixes() {
+        let g = chain(4); // 5 nodes
+        let cuts = dag_cuts(&g, 1 << 20);
+        // Exactly the 5 prefixes: {input}, {input,r1}, ..., everything.
+        assert_eq!(cuts.len(), g.len());
+        for assign in &cuts {
+            assert!(is_monotone(&g, assign));
+            assert_eq!(assign[0], 0);
+            // Prefix structure: platform 0 is a contiguous id prefix.
+            let first_b = assign.iter().position(|&p| p == 1).unwrap_or(assign.len());
+            assert!(assign[first_b..].iter().all(|&p| p == 1));
+        }
+    }
+
+    #[test]
+    fn dag_cuts_on_a_diamond_include_branch_splits() {
+        let (g, [_, _, b, c, _, _]) = diamond();
+        let cuts = dag_cuts(&g, 1 << 20);
+        // Down-sets of the diamond: input alone, +a, +a+b, +a+c,
+        // +a+b+c, +...+add, full = 7.
+        assert_eq!(cuts.len(), 7);
+        assert!(cuts
+            .iter()
+            .any(|a| a[b.0] == 0 && a[c.0] == 1), "branch split missing");
+        assert!(cuts.iter().all(|a| is_monotone(&g, a)));
+        // The cap truncates enumeration instead of diverging.
+        assert_eq!(dag_cuts(&g, 3).len(), 3);
     }
 
     #[test]

@@ -14,6 +14,7 @@ use crate::util::hash::Fnv64;
 /// Dataflow: spatial dim assignment plus fixed per-level loop orders.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Dataflow {
+    /// Dataflow name (e.g. `row-stationary`).
     pub name: &'static str,
     /// Dims spatialized across array rows (factors multiply; product
     /// bounded by `pe_rows`).
@@ -70,11 +71,15 @@ impl Dataflow {
 /// One accelerator (the paper's "hardware platform" compute side).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Accelerator {
+    /// Accelerator preset name (EYR / SMB).
     pub name: String,
     /// Datapath / storage precision in bits (16 for EYR, 8 for SMB).
     pub bits: u32,
+    /// Core clock frequency.
     pub clock_hz: f64,
+    /// Processing-element array rows.
     pub pe_rows: usize,
+    /// Processing-element array columns.
     pub pe_cols: usize,
     /// Register file bytes per PE (holds W/I/O tiles).
     pub rf_bytes: u64,
@@ -86,11 +91,14 @@ pub struct Accelerator {
     pub glb_bw: f64,
     /// Vector-unit scalar ops per cycle (non-MAC layers).
     pub vector_lanes: f64,
+    /// Spatial mapping strategy of the PE array.
     pub dataflow: Dataflow,
+    /// Per-action energy table.
     pub energy: EnergyTable,
 }
 
 impl Accelerator {
+    /// Total processing elements (`rows × cols`).
     pub fn num_pes(&self) -> usize {
         self.pe_rows * self.pe_cols
     }
@@ -137,6 +145,7 @@ impl Accelerator {
         h.finish()
     }
 
+    /// Check every parameter is positive/usable; `Err` explains the first violation.
     pub fn validate(&self) -> Result<(), String> {
         if self.bits == 0 || self.bits > 64 {
             return Err(format!("{}: bad bit width {}", self.name, self.bits));

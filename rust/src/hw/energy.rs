@@ -23,6 +23,7 @@
 /// Energy per action, in picojoules per element unless noted.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EnergyTable {
+    /// One multiply-accumulate.
     pub mac_pj: f64,
     /// Per-element register-file access inside a PE.
     pub rf_pj: f64,
@@ -68,6 +69,7 @@ pub fn scaled(bits: u32) -> EnergyTable {
     }
 }
 
+/// Picojoules → joules.
 pub const PJ: f64 = 1e-12;
 
 #[cfg(test)]

@@ -51,7 +51,9 @@ use crate::util::rng::Pcg32;
 /// Objective minimized by the search.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Objective {
+    /// Minimize latency.
     Latency,
+    /// Minimize energy.
     Energy,
     /// Energy–delay product (Timeloop's default figure of merit).
     Edp,
@@ -72,9 +74,13 @@ impl Objective {
 /// victory condition of 100").
 #[derive(Debug, Clone)]
 pub struct SearchCfg {
+    /// Stop after this many samples without improvement.
     pub victory: usize,
+    /// Hard cap on sampled mappings per workload.
     pub max_samples: usize,
+    /// Base seed of the per-workload search streams.
     pub seed: u64,
+    /// Figure of merit the search minimizes.
     pub objective: Objective,
 }
 
@@ -102,10 +108,15 @@ impl SearchCfg {
 /// factors for the dataflow's row/col dims.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Mapping {
+    /// Temporal tiling factors at the register file.
     pub rf: [usize; 6],
+    /// Spatial factors across array rows.
     pub sp_row: [usize; 2],
+    /// Spatial factors across array columns.
     pub sp_col: [usize; 2],
+    /// Temporal tiling factors at the global buffer.
     pub glb: [usize; 6],
+    /// Temporal tiling factors at DRAM.
     pub dram: [usize; 6],
 }
 
@@ -161,16 +172,22 @@ impl Mapping {
 /// Cost of one layer on one accelerator.
 #[derive(Debug, Clone)]
 pub struct LayerCost {
+    /// Seconds per inference for this layer.
     pub latency_s: f64,
+    /// Joules per inference for this layer.
     pub energy_j: f64,
     /// Achieved MACs / (cycles × PEs): fraction of the roofline.
     pub utilization: f64,
+    /// Multiply-accumulates the layer performs.
     pub macs: u64,
+    /// Bytes moved to/from DRAM under the chosen mapping.
     pub dram_bytes: u64,
+    /// Human-readable description of the winning mapping.
     pub mapping_desc: String,
 }
 
 impl LayerCost {
+    /// A free layer (placeholders: Input/Flatten/Dropout).
     pub fn zero() -> Self {
         Self {
             latency_s: 0.0,

@@ -54,13 +54,18 @@ use std::sync::{Arc, Mutex};
 /// layer execution: latencies and energies add).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct SegmentCost {
+    /// Summed seconds per inference.
     pub latency_s: f64,
+    /// Summed joules per inference.
     pub energy_j: f64,
+    /// Summed multiply-accumulates.
     pub macs: u64,
+    /// Summed DRAM traffic in bytes.
     pub dram_bytes: u64,
 }
 
 impl SegmentCost {
+    /// Accumulate one layer's cost into the segment.
     pub fn add(&mut self, c: &LayerCost) {
         self.latency_s += c.latency_s;
         self.energy_j += c.energy_j;
@@ -137,6 +142,7 @@ pub struct CostCache {
 }
 
 impl CostCache {
+    /// Empty in-memory cache.
     pub fn new() -> Self {
         Self {
             shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
@@ -169,6 +175,7 @@ impl CostCache {
         self.shards.iter().map(|s| s.lock().unwrap().len()).sum()
     }
 
+    /// True when no layer cost is cached.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -346,6 +353,7 @@ impl Default for CostCache {
 /// Memoizing per-layer evaluator. `Send + Sync`: share one instance (or
 /// one [`CostCache`]) across `std::thread::scope` workers.
 pub struct HwEvaluator {
+    /// Mapping-search budget and objective.
     pub cfg: SearchCfg,
     cache: Arc<CostCache>,
     /// Mapper invocations that missed the cache (for §Perf reporting).
@@ -353,6 +361,7 @@ pub struct HwEvaluator {
 }
 
 impl HwEvaluator {
+    /// Evaluator with a private cost cache.
     pub fn new(cfg: SearchCfg) -> Self {
         Self::with_cache(cfg, Arc::new(CostCache::new()))
     }
@@ -444,6 +453,7 @@ impl HwEvaluator {
         self.mapper_runs.load(Ordering::Relaxed)
     }
 
+    /// Number of cached layer costs.
     pub fn cache_len(&self) -> usize {
         self.cache.len()
     }

@@ -13,21 +13,30 @@ use crate::graph::{Graph, LayerKind, Node};
 /// `[usize; 6]` bound arrays.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Dim {
+    /// Output channels.
     K = 0,
+    /// Input channels (per group).
     C = 1,
+    /// Kernel height.
     R = 2,
+    /// Kernel width.
     S = 3,
+    /// Output height.
     P = 4,
+    /// Output width.
     Q = 5,
 }
 
+/// All six loop dimensions, in canonical order.
 pub const DIMS: [Dim; 6] = [Dim::K, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q];
 
 impl Dim {
+    /// Canonical index of the dimension (position in [`DIMS`]).
     pub fn idx(self) -> usize {
         self as usize
     }
 
+    /// Single-letter dimension name.
     pub fn name(self) -> &'static str {
         match self {
             Dim::K => "K",
@@ -43,11 +52,15 @@ impl Dim {
 /// The three operand tensors of a MAC loop nest.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Dataspace {
+    /// Filter weights.
     Weights,
+    /// Input feature maps.
     Inputs,
+    /// Output feature maps.
     Outputs,
 }
 
+/// All three dataspaces, in canonical order.
 pub const DATASPACES: [Dataspace; 3] = [Dataspace::Weights, Dataspace::Inputs, Dataspace::Outputs];
 
 impl Dataspace {
@@ -65,11 +78,13 @@ impl Dataspace {
 /// One MAC layer as a (possibly grouped) loop nest.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ConvWorkload {
+    /// Graph node name this workload was derived from.
     pub layer_name: String,
     /// Per-group bounds `[K, C, R, S, P, Q]`.
     pub bounds: [usize; 6],
     /// Filter groups; the mapper evaluates one group and scales by this.
     pub groups: usize,
+    /// Convolution stride `(h, w)`.
     pub stride: (usize, usize),
 }
 
@@ -100,6 +115,7 @@ impl ConvWorkload {
         }
     }
 
+    /// Loop bound of one dimension.
     pub fn bound(&self, d: Dim) -> usize {
         self.bounds[d.idx()]
     }

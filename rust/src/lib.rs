@@ -4,30 +4,61 @@
 //! exploration framework that finds Pareto-optimal partitioning points for
 //! DNN inference over a chain of embedded accelerator platforms, plus a
 //! runtime that executes the chosen partitioning as an asynchronous
-//! pipeline via AOT-compiled XLA artifacts.
+//! pipeline via AOT-compiled XLA artifacts, and a deterministic
+//! discrete-event simulator that serves millions of requests through any
+//! explored deployment.
 //!
-//! Architecture (three layers):
-//! * **L3 — this crate**: graph analysis, memory/link/accuracy/hardware
-//!   models, NSGA-II, the explorer, the pipeline coordinator, and the
-//!   discrete-event serving simulator (`sim`).
+//! ## The pipeline in five lines
+//!
+//! ```
+//! use partir::{config::SystemConfig, explorer, zoo};
+//! let model = zoo::tiny_cnn(10);                 // a layer DAG from the zoo
+//! let mut sys = SystemConfig::paper_two_platform();
+//! sys.search.victory = 5; sys.search.max_samples = 50; // quick mapper budget
+//! let ex = explorer::explore_two_platform(&model, &sys);
+//! assert!(ex.favorite.is_some() && !ex.pareto.is_empty());
+//! ```
+//!
+//! ## Partitioning models
+//!
+//! * **Chain cuts** (the paper's Definition 1): cut positions on one
+//!   topological schedule — [`explorer::explore_two_platform`] and
+//!   [`explorer::multi::explore_chain`].
+//! * **Convex DAG partitions** (beyond the paper): monotone
+//!   layer→platform assignments whose stages may run parallel branches
+//!   on distinct platforms — [`explorer::explore_dag`], built on
+//!   [`graph::partition::DagPartition`] and evaluated by
+//!   [`explorer::PlanEvaluator::evaluate_dag`]. On sequential models
+//!   this collapses bit-identically onto the chain result.
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 — this crate**: graph analysis ([`graph`]), memory/link/
+//!   accuracy/hardware models ([`memory`], [`link`], [`accuracy`],
+//!   [`hw`]), NSGA-II ([`nsga2`]), the explorers ([`explorer`]), the
+//!   wall-clock pipeline coordinator ([`coordinator`]), and the
+//!   discrete-event serving simulator ([`sim`]).
 //! * **L2 — `python/compile/model.py`**: JAX model (build time only).
 //! * **L1 — `python/compile/kernels/`**: Pallas kernels (build time only).
 //!
-//! See `DESIGN.md` for the full system inventory and the per-experiment
-//! index mapping every paper table/figure to a bench target.
+//! See `README.md` for the 60-second CLI quickstart and `DESIGN.md` for
+//! the full system inventory and the per-experiment index mapping every
+//! paper table/figure to a bench target.
+
+#![warn(missing_docs)]
 
 pub mod accuracy;
 pub mod config;
+pub mod coordinator;
 pub mod explorer;
 pub mod graph;
 pub mod hw;
-pub mod coordinator;
+pub mod link;
+pub mod memory;
 pub mod nsga2;
 pub mod report;
 pub mod runtime;
 pub mod sim;
-pub mod link;
-pub mod memory;
-pub mod zoo;
 pub mod testkit;
 pub mod util;
+pub mod zoo;

@@ -11,6 +11,7 @@
 /// Parametric point-to-point link.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkModel {
+    /// Link preset name (e.g. `gbe`).
     pub name: String,
     /// Effective payload bandwidth in bits/s (GbE ≈ 941 Mbit/s after
     /// TCP/IP + Ethernet framing overhead).

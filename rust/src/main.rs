@@ -2,18 +2,25 @@
 //!
 //! Subcommands:
 //!   * `zoo`       — list the model zoo with parameter/MAC totals
-//!   * `explore`   — two-platform partitioning DSE (paper §V-B)
-//!   * `chain`     — N-platform chain DSE via NSGA-II (paper §V-C)
+//!   * `explore`   — two-platform partitioning DSE (paper §V-B);
+//!                   `--dag` generalizes cuts to convex DAG partitions
+//!                   with branch-parallel stages
+//!   * `chain`     — N-platform chain DSE via NSGA-II (paper §V-C),
+//!                   also `--dag`-capable
 //!   * `evaluate`  — per-layer hardware costs on each platform
 //!   * `pipeline`  — execute a partitioned schedule on real AOT
-//!                   artifacts over the simulated link (Definition 4)
+//!                   artifacts over the simulated link (Definition 4),
+//!                   or (`--model`) an explored favorite plan on
+//!                   simulated wall-clock stages
 //!   * `simulate`  — discrete-event serving simulation of the explored
 //!                   Pareto front at millions-of-requests scale
 //!   * `report`    — regenerate every paper figure/table into reports/
 
 use partir::config::SystemConfig;
-use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
-use partir::explorer::{explore_two_platform_cached, multi};
+use partir::coordinator::{
+    run_pipeline, simulated_specs_from_plan, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec,
+};
+use partir::explorer::{explore_dag_cached, explore_two_platform_cached, multi};
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::hw::{CacheLoad, CostCache, HwEvaluator};
 use partir::report;
@@ -56,11 +63,12 @@ fn print_usage() {
          USAGE: partir <COMMAND> [OPTIONS]\n\n\
          COMMANDS:\n\
          \x20 zoo        list models (params, MACs, layer counts)\n\
-         \x20 explore    two-platform partitioning exploration\n\
-         \x20 chain      N-platform chain exploration (NSGA-II)\n\
+         \x20 explore    two-platform partitioning exploration (--dag: branch-parallel DAG partitions)\n\
+         \x20 chain      N-platform chain exploration via NSGA-II (--dag: branch-parallel DAG partitions)\n\
          \x20 evaluate   per-layer hardware costs for a model\n\
-         \x20 pipeline   run partitioned inference on AOT artifacts\n\
-         \x20 simulate   discrete-event serving simulation of the Pareto front\n\
+         \x20 pipeline   run partitioned inference on AOT artifacts (--model: explored plan on simulated stages)\n\
+         \x20 simulate   discrete-event serving simulation of the explored Pareto front\n\
+         \x20            (scenario presets: steady | burst | diurnal | degraded, or a TOML file)\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
          Run `partir <COMMAND> --help` for options."
     );
@@ -189,13 +197,17 @@ fn cmd_zoo() -> i32 {
 // ---------------------------------------------------------------------
 
 fn explore_cmd() -> Command {
-    Command::new("explore", "two-platform partitioning DSE (paper §V-B)")
+    Command::new(
+        "explore",
+        "two-platform partitioning DSE (paper §V-B): Definition-1 chain cuts, or convex DAG partitions with --dag",
+    )
         .opt("model", Some("resnet50"), "zoo model name")
         .opt("config", None, "system TOML (default: paper EYR+SMB over GbE)")
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write fig2-style CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+        .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -208,9 +220,17 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         "explore needs a 2-platform config; use `chain` for longer chains"
     );
     let cache = open_cache(&sys);
-    let ex = explore_two_platform_cached(&g, &sys, Arc::clone(&cache));
+    let ex = if args.flag("dag") {
+        explore_dag_cached(&g, &sys, Arc::clone(&cache))
+    } else {
+        explore_two_platform_cached(&g, &sys, Arc::clone(&cache))
+    };
     persist_cache(&sys, &cache);
     print!("{}", report::render_exploration(&ex, &sys));
+    if args.flag("dag") {
+        let parallel = ex.candidates.iter().filter(|c| c.branch_parallel()).count();
+        println!("branch-parallel candidates: {parallel} (flagged D above)");
+    }
     if let Some((label, gain)) = report::throughput_gain(&ex) {
         println!("best pipelined throughput: {label} (+{gain:.1}% over best single platform)");
     }
@@ -226,13 +246,14 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
 // ---------------------------------------------------------------------
 
 fn chain_cmd() -> Command {
-    Command::new("chain", "N-platform chain DSE via NSGA-II (paper §V-C)")
+    Command::new("chain", "N-platform chain DSE via NSGA-II (paper §V-C); --dag adds branch-parallel DAG partitions")
         .opt("model", Some("resnet50"), "zoo model name")
         .opt("config", None, "system TOML (default: paper EYR,EYR,SMB,SMB)")
         .opt("seed", None, "override exploration seed")
         .opt("out", None, "write Pareto-front CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+        .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
 }
@@ -260,9 +281,17 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
         sys
     };
     let cache = open_cache(&sys);
-    let ex = multi::explore_chain_cached(&g, &sys, Arc::clone(&cache));
+    let ex = if args.flag("dag") {
+        explore_dag_cached(&g, &sys, Arc::clone(&cache))
+    } else {
+        multi::explore_chain_cached(&g, &sys, Arc::clone(&cache))
+    };
     persist_cache(&sys, &cache);
     print!("{}", report::render_exploration(&ex, &sys));
+    if args.flag("dag") {
+        let parallel = ex.candidates.iter().filter(|c| c.branch_parallel()).count();
+        println!("branch-parallel candidates: {parallel} (flagged D above)");
+    }
     let hist = multi::partition_histogram(&ex, sys.platforms.len());
     println!("\npartition histogram (Table II row): {hist:?}");
     if let Some(out) = args.get("out") {
@@ -343,11 +372,62 @@ fn pipeline_cmd() -> Command {
         .opt("boundary", Some("2"), "partition boundary 1..3, or 0 = unpartitioned")
         .opt("requests", Some("64"), "number of inference requests")
         .opt("batch", Some("8"), "max dynamic batch size")
+        .opt(
+            "model",
+            None,
+            "explore this zoo model and execute its favorite plan on simulated wall-clock stages (no artifacts needed)",
+        )
+        .flag("dag", "with --model: explore convex DAG partitions too")
         .flag("quant", "use the quantized (EYR 16b / SMB 8b) artifacts")
         .flag("no-link", "disable link simulation")
 }
 
+/// `pipeline --model NAME`: close the explorer→coordinator loop without
+/// artifacts — run the exploration, realize the favorite candidate's
+/// stage plan as simulated wall-clock pipeline stages, and serve
+/// requests through it (branch-parallel plans execute conservatively
+/// serialized in platform order).
+fn cmd_pipeline_explored(name: &str, args: &Args) -> anyhow::Result<()> {
+    let g = zoo::build(name)
+        .ok_or_else(|| anyhow::anyhow!("unknown model '{name}'; try one of {:?}", zoo::names()))?;
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 20;
+    sys.search.max_samples = 200;
+    sys.jobs = default_jobs();
+    let ex = if args.flag("dag") {
+        explore_dag_cached(&g, &sys, Arc::new(CostCache::new()))
+    } else {
+        explore_two_platform_cached(&g, &sys, Arc::new(CostCache::new()))
+    };
+    let fav = ex
+        .favorite_metrics()
+        .ok_or_else(|| anyhow::anyhow!("no feasible candidate to execute"))?;
+    let names: Vec<String> = sys.platforms.iter().map(|p| p.name.clone()).collect();
+    let specs = simulated_specs_from_plan(&fav.plan, &names);
+    let n = args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(64);
+    let batch = args.get_usize("batch").map_err(anyhow::Error::msg)?.unwrap_or(8);
+    let cfg = PipelineCfg {
+        batch: BatchPolicy::new(batch, Duration::from_millis(1)),
+        simulate_link: !args.flag("no-link"),
+        ..Default::default()
+    };
+    let inputs: Vec<Vec<f32>> = (0..n).map(|i| vec![i as f32; 64]).collect();
+    println!(
+        "executing explored plan '{}' ({} stage(s){}) on the wall-clock coordinator",
+        fav.label,
+        fav.plan.len(),
+        if fav.branch_parallel() { ", branch-parallel, serialized" } else { "" },
+    );
+    let rpt = run_pipeline(specs, &cfg, inputs);
+    print!("{}", rpt.render());
+    Ok(())
+}
+
 fn cmd_pipeline(args: &Args) -> anyhow::Result<()> {
+    if let Some(model) = args.get("model") {
+        let model = model.to_string();
+        return cmd_pipeline_explored(&model, args);
+    }
     let dir = PathBuf::from(args.get("artifacts").unwrap());
     let m = Manifest::load(&dir)?;
     let boundary = args.get_usize("boundary").map_err(anyhow::Error::msg)?.unwrap_or(2);
@@ -447,6 +527,7 @@ fn simulate_cmd() -> Command {
     .opt("out", None, "write the ranking CSV to this path")
     .opt("jobs", None, "worker threads (default: all hardware threads)")
     .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+    .flag("dag", "explore convex DAG partitions too — branch-parallel deployments enter the ranking")
     .flag("qat", "apply QAT accuracy recovery")
     .flag("full-search", "full mapper search budget (default: fast, the DSE is a means here)")
 }
@@ -461,9 +542,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         sys.search.max_samples = 200;
     }
 
-    // 1. Explore: the candidate set the simulator ranks.
+    // 1. Explore: the candidate set the simulator ranks. `--dag` widens
+    // it with branch-parallel convex DAG partitions.
     let cache = open_cache(&sys);
-    let ex = if sys.platforms.len() == 2 {
+    let ex = if args.flag("dag") {
+        explore_dag_cached(&g, &sys, Arc::clone(&cache))
+    } else if sys.platforms.len() == 2 {
         explore_two_platform_cached(&g, &sys, Arc::clone(&cache))
     } else {
         multi::explore_chain_cached(&g, &sys, Arc::clone(&cache))

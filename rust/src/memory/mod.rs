@@ -122,6 +122,94 @@ pub fn segment_memory_bytes(g: &Graph, order: &[NodeId], range: Range<usize>, bi
     elem_bytes(params + act, bits)
 }
 
+/// Peak live activation elements while executing exactly the schedule
+/// positions in `members` (sorted ascending) — the DAG-partition
+/// generalization of [`peak_activation_elems`], where a platform's
+/// layer set need not be contiguous in the schedule.
+///
+/// Semantics differ from the chain walk in one deliberate way: chain
+/// segments buffer *pass-through* tensors (data a platform only
+/// forwards downstream), because the linear link topology forces every
+/// byte through every intermediate platform. DAG stages instead ship
+/// each crossing tensor directly from its producer stage to each
+/// consuming stage, so here only tensors **produced by a member** and
+/// consumed outside the set (or graph outputs) are held to the end of
+/// the walk; ingress tensors are freed at their last member use. On
+/// branch-free graphs no pass-through tensors exist and the two walks
+/// agree exactly (property-tested).
+pub fn subset_peak_activation_elems(g: &Graph, order: &[NodeId], members: &[usize]) -> u64 {
+    if members.is_empty() {
+        return 0;
+    }
+    debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be sorted unique");
+    let pos = topo::positions(order, g.len());
+    let mut in_set = vec![false; g.len()];
+    for &p in members {
+        in_set[p] = true;
+    }
+    let succ = g.successors();
+    let outputs = g.outputs();
+
+    // Last member position consuming each tensor; NEVER = held for
+    // egress (member-produced, consumed outside or a graph output).
+    const NEVER: usize = usize::MAX - 1;
+    let mut last_use = vec![usize::MAX; g.len()];
+    for &p in members {
+        for &inp in &g.node(order[p]).inputs {
+            last_use[inp.0] = if last_use[inp.0] == usize::MAX {
+                p
+            } else {
+                last_use[inp.0].max(p)
+            };
+        }
+    }
+    for &p in members {
+        let id = order[p];
+        let external =
+            outputs.contains(&id) || succ[id.0].iter().any(|c| !in_set[pos[c.0]]);
+        if external {
+            last_use[id.0] = NEVER;
+        }
+    }
+
+    let mut peak = 0u64;
+    let mut live = 0u64;
+    // Ingress tensors (produced outside, consumed by a member) are live
+    // from the start of the walk.
+    for id in 0..g.len() {
+        if last_use[id] != usize::MAX && last_use[id] != NEVER && !in_set[pos[id]] {
+            live += g.nodes[id].out_shape.numel() as u64;
+        }
+    }
+    for &p in members {
+        let node = g.node(order[p]);
+        let out = node.out_shape.numel() as u64;
+        // While computing the member, inputs and output coexist.
+        peak = peak.max(live + out);
+        let lu = last_use[node.id.0];
+        let needed_later = lu == NEVER || (lu != usize::MAX && lu > p);
+        if needed_later {
+            live += out;
+        }
+        for &inp in &node.inputs {
+            if last_use[inp.0] == p {
+                live -= g.node(inp).out_shape.numel() as u64;
+            }
+        }
+        peak = peak.max(live);
+    }
+    peak
+}
+
+/// Definition-3 memory bytes for an arbitrary member-position set on a
+/// platform with quantized bit width `bits` (params + peak activations;
+/// see [`subset_peak_activation_elems`] for the DAG-stage semantics).
+pub fn subset_memory_bytes(g: &Graph, order: &[NodeId], members: &[usize], bits: u32) -> u64 {
+    let params: u64 = members.iter().map(|&p| g.node(order[p]).params).sum();
+    let act = subset_peak_activation_elems(g, order, members);
+    elem_bytes(params + act, bits)
+}
+
 /// Per-step transient activation peaks over the whole schedule.
 ///
 /// `step_peaks[j]` is the live-tensor footprint while executing
@@ -389,6 +477,55 @@ mod tests {
                 assert_eq!(suf[p], peak_activation_elems(&g, &order, p..g.len()));
             }
         });
+    }
+
+    #[test]
+    fn subset_matches_range_walk_on_branch_free_graphs() {
+        // On a chain no pass-through tensors exist, so the DAG-stage
+        // walk must agree exactly with the Definition-3 segment walk
+        // for every contiguous range.
+        let g = zoo::tiny_cnn(10);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        for start in 0..g.len() {
+            for end in start..=g.len() {
+                let members: Vec<usize> = (start..end).collect();
+                assert_eq!(
+                    subset_peak_activation_elems(&g, &order, &members),
+                    peak_activation_elems(&g, &order, start..end),
+                    "range {start}..{end}"
+                );
+                assert_eq!(
+                    subset_memory_bytes(&g, &order, &members, 8),
+                    segment_memory_bytes(&g, &order, start..end, 8),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn subset_walk_on_a_diamond_branch() {
+        // input -> a -> {b, c} -> add(b, c): the branch set {b} holds
+        // a's output (ingress) while producing b's egress tensor.
+        let mut g = Graph::new("diamond");
+        let x = g.input(4, 4, 4); // 64 elems everywhere
+        let a = g.add(LayerKind::Activation(Act::Relu), &[x]);
+        let b = g.add(LayerKind::Activation(Act::Relu), &[a]);
+        let c = g.add(LayerKind::Activation(Act::Relu), &[a]);
+        g.add(LayerKind::Add, &[b, c]);
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let pos = crate::graph::topo::positions(&order, g.len());
+        assert_eq!(pos[c.0], 3, "deterministic schedule is id order here");
+        // Single-member set {b}: ingress a (64) + egress b (64).
+        let peak = subset_peak_activation_elems(&g, &order, &[pos[b.0]]);
+        assert_eq!(peak, 128);
+        // Non-contiguous set {b, add}: a and c enter over the link; b is
+        // internal. Peak while computing add: ingress c + b + add out.
+        let mut members = vec![pos[b.0], pos[4]];
+        members.sort_unstable();
+        let peak = subset_peak_activation_elems(&g, &order, &members);
+        assert_eq!(peak, 192);
+        // Empty set is zero.
+        assert_eq!(subset_peak_activation_elems(&g, &order, &[]), 0);
     }
 
     #[test]

@@ -32,14 +32,17 @@ pub struct Eval {
 }
 
 impl Eval {
+    /// A feasible evaluation (violation 0).
     pub fn feasible(objectives: Vec<f64>) -> Self {
         Self { objectives, violation: 0.0 }
     }
 
+    /// An infeasible evaluation ranked only by violation magnitude.
     pub fn infeasible(num_objectives: usize, violation: f64) -> Self {
         Self { objectives: vec![f64::INFINITY; num_objectives], violation: violation.max(f64::MIN_POSITIVE) }
     }
 
+    /// True when no constraint is violated.
     pub fn is_feasible(&self) -> bool {
         self.violation == 0.0
     }
@@ -59,10 +62,15 @@ pub trait Problem {
 /// Algorithm configuration.
 #[derive(Debug, Clone)]
 pub struct Nsga2Cfg {
+    /// Individuals per generation (kept even for pairing).
     pub population: usize,
+    /// Number of generations to evolve.
     pub generations: usize,
+    /// Per-child uniform-crossover probability.
     pub crossover_p: f64,
+    /// Per-gene mutation probability.
     pub mutation_p: f64,
+    /// RNG seed (full run is deterministic given it).
     pub seed: u64,
 }
 
@@ -81,7 +89,9 @@ impl Nsga2Cfg {
 /// One individual of the final population.
 #[derive(Debug, Clone)]
 pub struct Solution {
+    /// Decision variables of the solution.
     pub vars: Vec<i64>,
+    /// Its objective values and violation.
     pub eval: Eval,
 }
 

@@ -28,6 +28,7 @@ pub fn fig2_csv(ex: &Exploration) -> Csv {
         "feasible",
         "pareto",
         "favorite",
+        "mode",
     ]);
     for (i, c) in ex.candidates.iter().enumerate() {
         csv.row(&[
@@ -44,9 +45,20 @@ pub fn fig2_csv(ex: &Exploration) -> Csv {
             c.feasible().to_string(),
             ex.pareto.contains(&i).to_string(),
             (ex.favorite == Some(i)).to_string(),
+            candidate_mode(c).to_string(),
         ]);
     }
     csv
+}
+
+/// CSV `mode` cell: `chain` for cut-position candidates, `dag` for
+/// branch-parallel convex partitions (from `explorer::dag`).
+fn candidate_mode(c: &crate::explorer::CandidateMetrics) -> &'static str {
+    if c.branch_parallel() {
+        "dag"
+    } else {
+        "chain"
+    }
 }
 
 /// Fig 3: per-platform Definition-3 memory demand for every candidate
@@ -128,6 +140,9 @@ pub fn render_exploration(ex: &Exploration, sys: &SystemConfig) -> String {
         }
         if ex.favorite == Some(i) {
             flags.push('*');
+        }
+        if c.branch_parallel() {
+            flags.push('D');
         }
         if !c.feasible() {
             flags.push('!');
@@ -215,13 +230,15 @@ pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
 /// Pareto metric columns used when exporting fronts of arbitrary metric
 /// sets (Table II runs use latency/energy/link-bytes).
 pub fn front_csv(ex: &Exploration, metrics: &[Metric]) -> Csv {
-    let mut header = vec!["label".to_string(), "partitions".to_string()];
+    let mut header =
+        vec!["label".to_string(), "partitions".to_string(), "mode".to_string()];
     header.extend(metrics.iter().map(|m| m.name().to_string()));
     let hdr: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
     let mut csv = Csv::new(&hdr);
     for &i in &ex.pareto {
         let c = &ex.candidates[i];
-        let mut cells = vec![c.label.clone(), c.partitions.to_string()];
+        let mut cells =
+            vec![c.label.clone(), c.partitions.to_string(), candidate_mode(c).to_string()];
         cells.extend(metrics.iter().map(|&m| num(c.value(m))));
         csv.row(&cells);
     }

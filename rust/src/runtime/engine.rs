@@ -11,11 +11,13 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Create a PJRT CPU client.
     pub fn cpu() -> Result<Self> {
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         Ok(Self { client })
     }
 
+    /// Backend platform name reported by PJRT.
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
@@ -38,6 +40,7 @@ impl Engine {
 
 /// A compiled artifact plus its manifest metadata.
 pub struct Executable {
+    /// Manifest entry this executable was compiled from.
     pub meta: ArtifactMeta,
     exe: xla::PjRtLoadedExecutable,
 }

@@ -9,10 +9,15 @@ use std::path::{Path, PathBuf};
 /// One exported HLO artifact.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ArtifactMeta {
+    /// Artifact identifier inside the manifest.
     pub name: String,
+    /// HLO file path relative to the artifact directory.
     pub path: String,
+    /// Batch size the artifact was lowered for.
     pub batch: usize,
+    /// Input tensor shape (per item).
     pub input_shape: Vec<usize>,
+    /// Output tensor shape (per item).
     pub output_shape: Vec<usize>,
     /// Quantization bit width (None = fp32).
     pub bits: Option<u32>,
@@ -25,36 +30,54 @@ pub struct ArtifactMeta {
 /// Partition boundary metadata: rust schedule position + fmap shape.
 #[derive(Debug, Clone, PartialEq)]
 pub struct BoundaryMeta {
+    /// Schedule position of the boundary layer.
     pub position: usize,
+    /// Feature-map shape crossing the boundary.
     pub shape: Vec<usize>,
 }
 
 /// Accuracy numbers measured at build time by the python side.
 #[derive(Debug, Clone, Default)]
 pub struct BuildAccuracy {
+    /// fp32 top-1 (%).
     pub fp32: f64,
+    /// 8-bit PTQ top-1 (%).
     pub ptq8: f64,
+    /// 16-bit PTQ top-1 (%).
     pub ptq16: f64,
+    /// 8-bit QAT top-1 (%).
     pub qat8: f64,
 }
 
 /// Parsed manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Directory the manifest was loaded from.
     pub dir: PathBuf,
+    /// Model name.
     pub model: String,
+    /// Classifier output classes.
     pub classes: usize,
+    /// Model input shape.
     pub input_shape: Vec<usize>,
+    /// Learnable parameter count.
     pub param_count: u64,
+    /// Exported partition boundaries by index.
     pub boundaries: BTreeMap<usize, BoundaryMeta>,
+    /// Build-time accuracy measurements.
     pub accuracy: BuildAccuracy,
+    /// Every exported HLO artifact.
     pub artifacts: Vec<ArtifactMeta>,
+    /// Relative path of the test-set image blob.
     pub testset_images: String,
+    /// Relative path of the test-set label blob.
     pub testset_labels: String,
+    /// Number of held-out test images.
     pub testset_count: usize,
 }
 
 impl Manifest {
+    /// Parse `<dir>/manifest.json`.
     pub fn load(dir: &Path) -> Result<Self> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
@@ -153,6 +176,7 @@ impl Manifest {
         })
     }
 
+    /// Load the held-out test set named by the manifest.
     pub fn load_testset(&self) -> Result<TestSet> {
         TestSet::load(self)
     }
@@ -161,13 +185,18 @@ impl Manifest {
 /// Held-out test set exported by the build (f32 images + u8 labels).
 #[derive(Debug, Clone)]
 pub struct TestSet {
+    /// Flat f32 image data (`count × image_elems`).
     pub images: Vec<f32>,
+    /// One u8 label per image.
     pub labels: Vec<u8>,
+    /// Number of images.
     pub count: usize,
+    /// Shape of a single image.
     pub image_shape: Vec<usize>,
 }
 
 impl TestSet {
+    /// Read the image/label blobs referenced by a manifest.
     pub fn load(m: &Manifest) -> Result<Self> {
         let img_path = m.dir.join(&m.testset_images);
         let raw = std::fs::read(&img_path)
@@ -192,6 +221,7 @@ impl TestSet {
         Ok(TestSet { images, labels, count: m.testset_count, image_shape: m.input_shape.clone() })
     }
 
+    /// Elements per image.
     pub fn image_elems(&self) -> usize {
         self.image_shape.iter().product()
     }

@@ -9,7 +9,7 @@
 //! — the foundation of the bit-identical `--jobs` contract.
 
 use super::scenario::Scenario;
-use super::{Deployment, SimCfg, SimReport};
+use super::{Deployment, SimCfg, SimEdge, SimReport};
 use crate::coordinator::{BatchPolicy, Completion, PipelineReport, StageStats};
 use crate::link::LinkModel;
 use std::cmp::Reverse;
@@ -54,8 +54,6 @@ struct StageParams {
     base_s: f64,
     per_item_s: f64,
     energy_per_item_j: f64,
-    out_bytes: u64,
-    out_hops: u64,
 }
 
 #[derive(Debug, Default)]
@@ -75,6 +73,20 @@ struct StageState {
 
 struct Engine {
     params: Vec<StageParams>,
+    /// Stage-graph out-edges per stage (chain: `[i -> i+1]`).
+    edges: Vec<Vec<SimEdge>>,
+    /// Successor stage indices per stage, precomputed so the hot loop
+    /// never allocates (empty = terminal stage).
+    succ: Vec<Vec<usize>>,
+    /// Number of `Some`-edges pointing at each stage; > 1 = join stage.
+    indeg: Vec<usize>,
+    /// Join bookkeeping: per join stage, copies of each request
+    /// delivered so far (empty vec for non-join stages).
+    pending: Vec<Vec<u8>>,
+    /// Requests that already left the system (dropped at a full queue
+    /// or completed); late copies arriving via other branches are
+    /// discarded.
+    done: Vec<bool>,
     link: LinkModel,
     /// (stage, from_ns, to_ns, factor) slowdown windows.
     slowdowns: Vec<(usize, u64, u64, f64)>,
@@ -127,12 +139,36 @@ impl Engine {
         self.enqueue(0, Req { id, submit_ns: t }, t);
     }
 
+    /// Hand a request copy to stage `s` over a stage-graph edge. At a
+    /// join (in-degree > 1) the request enters the queue only when its
+    /// last copy lands; copies of requests that already left the system
+    /// (dropped on a sibling branch) are discarded.
+    fn deliver(&mut self, s: usize, req: Req, t: u64) {
+        if self.done[req.id as usize] {
+            return;
+        }
+        if self.indeg[s] > 1 {
+            let cnt = {
+                let c = &mut self.pending[s][req.id as usize];
+                *c += 1;
+                *c
+            };
+            if (cnt as usize) < self.indeg[s] {
+                return;
+            }
+        }
+        self.enqueue(s, req, t);
+    }
+
     fn enqueue(&mut self, s: usize, req: Req, t: u64) {
         if self.stages[s].queue.len() >= self.depth {
             // Bounded queue: shed load, account the drop. A drop is a
             // request leaving the system, so it advances the wall.
+            // Copies still in flight on sibling branches are discarded
+            // at their next hop via the `done` flag.
             self.last_ns = self.last_ns.max(t);
             self.stages[s].dropped += 1;
+            self.done[req.id as usize] = true;
             self.completions.push(Completion {
                 id: req.id,
                 latency: Duration::from_nanos(t - req.submit_ns),
@@ -170,18 +206,19 @@ impl Engine {
         let p = self.params[s];
         let svc_ns =
             s_to_ns((p.base_s + p.per_item_s * n as f64) * self.slowdown_factor(s, t));
-        let bytes = n as u64 * p.out_bytes;
-        let (link_ns, link_energy) = if p.out_hops > 0 && bytes > 0 {
-            // The transfer begins when compute ends — fault windows are
-            // defined over *transfer* start times (see `FaultWindow`).
-            let t_xfer = t + svc_ns;
-            (
-                s_to_ns(self.link.latency_s(bytes) * p.out_hops as f64 * self.link_factor(t_xfer)),
-                self.link.energy_j(bytes) * p.out_hops as f64,
-            )
-        } else {
-            (0, 0.0)
-        };
+        // The transfers begin when compute ends — fault windows are
+        // defined over *transfer* start times (see `FaultWindow`) — and
+        // are serialized into the sending stage, one per out-edge.
+        let t_xfer = t + svc_ns;
+        let link_fct = self.link_factor(t_xfer);
+        let (mut link_ns, mut link_energy) = (0u64, 0.0f64);
+        for e in &self.edges[s] {
+            let bytes = n as u64 * e.bytes_per_item;
+            if e.hops > 0 && bytes > 0 {
+                link_ns += s_to_ns(self.link.latency_s(bytes) * e.hops as f64 * link_fct);
+                link_energy += self.link.energy_j(bytes) * e.hops as f64;
+            }
+        }
         self.energy_j += link_energy + p.energy_per_item_j * n as f64;
         let st = &mut self.stages[s];
         st.timer_gen += 1; // invalidate any pending batch timer
@@ -214,13 +251,15 @@ impl Engine {
             EventKind::ComputeDone { stage } => {
                 let batch = std::mem::take(&mut self.stages[stage].in_flight);
                 self.stages[stage].busy = false;
-                if stage + 1 < self.params.len() {
+                if self.succ[stage].is_empty() {
+                    // Terminal stage: the request leaves the system
+                    // (unless a sibling branch already dropped it).
                     for req in batch {
-                        self.enqueue(stage + 1, req, e.at);
-                    }
-                } else {
-                    self.last_ns = self.last_ns.max(e.at);
-                    for req in batch {
+                        if self.done[req.id as usize] {
+                            continue;
+                        }
+                        self.done[req.id as usize] = true;
+                        self.last_ns = self.last_ns.max(e.at);
                         self.completions.push(Completion {
                             id: req.id,
                             latency: Duration::from_nanos(e.at - req.submit_ns),
@@ -228,6 +267,17 @@ impl Engine {
                             prediction: None,
                         });
                     }
+                } else {
+                    // Take the successor list out for the duration of
+                    // the fan-out (deliver needs &mut self) — a move,
+                    // not an allocation.
+                    let succ = std::mem::take(&mut self.succ[stage]);
+                    for &t_stage in &succ {
+                        for &req in &batch {
+                            self.deliver(t_stage, req, e.at);
+                        }
+                    }
+                    self.succ[stage] = succ;
                 }
                 // Server freed: close the next batch per policy — full
                 // immediately, otherwise restart the wait budget (the
@@ -259,6 +309,28 @@ pub(crate) fn run_with_arrivals(
     arrivals: &[u64],
 ) -> SimReport {
     assert!(!dep.stages.is_empty(), "deployment needs at least one stage");
+    assert_eq!(
+        dep.edges.len(),
+        dep.stages.len(),
+        "deployment needs one edge list per stage"
+    );
+    let mut indeg = vec![0usize; dep.stages.len()];
+    for es in &dep.edges {
+        for e in es {
+            if let Some(t) = e.to {
+                indeg[t] += 1;
+            }
+        }
+    }
+    assert_eq!(indeg[0], 0, "stage 0 must be the arrival source");
+    debug_assert!(
+        dep.edges.iter().filter(|es| !es.iter().any(|e| e.to.is_some())).count() == 1,
+        "deployment must have exactly one terminal stage"
+    );
+    let pending: Vec<Vec<u8>> = indeg
+        .iter()
+        .map(|&d| if d > 1 { vec![0u8; arrivals.len()] } else { Vec::new() })
+        .collect();
     let mut eng = Engine {
         params: dep
             .stages
@@ -267,10 +339,17 @@ pub(crate) fn run_with_arrivals(
                 base_s: m.base_s,
                 per_item_s: m.per_item_s,
                 energy_per_item_j: m.energy_per_item_j,
-                out_bytes: m.out_bytes_per_item,
-                out_hops: m.out_hops,
             })
             .collect(),
+        edges: dep.edges.clone(),
+        succ: dep
+            .edges
+            .iter()
+            .map(|es| es.iter().filter_map(|se| se.to).collect())
+            .collect(),
+        indeg,
+        pending,
+        done: vec![false; arrivals.len()],
         link: dep.link.clone(),
         slowdowns: scenario
             .slowdowns
@@ -548,6 +627,72 @@ mod tests {
         assert_ne!(a.fingerprint(), b.fingerprint(), "different seeds, same trace?");
         assert_eq!(a.pipeline.completions.len(), 5000);
         assert_eq!(b.pipeline.completions.len(), 5000);
+    }
+
+    #[test]
+    fn fork_join_waits_for_the_slowest_branch() {
+        // src -> {b0: 1 ms, b1: 0.2 ms} -> sink. A single request's
+        // latency is src + max(branches) + sink, exact on the virtual
+        // clock (batch size 1: no wait budgets, no link bytes).
+        let dep = Deployment::synthetic_fork_join("fj", 0.0001, &[0.001, 0.0002], 0.0001, 0);
+        let r = simulate(&dep, &cfg(1, 100, 64), &Scenario::replay(vec![0.0]));
+        assert_eq!(r.pipeline.completed(), 1);
+        let lat = r.pipeline.completions[0].latency.as_secs_f64();
+        assert!((lat - 0.0012).abs() < 1e-9, "latency {lat}");
+        // Both branches processed the request; the join served exactly
+        // one batch.
+        assert_eq!(r.pipeline.stages[1].items, 1);
+        assert_eq!(r.pipeline.stages[2].items, 1);
+        assert_eq!(r.pipeline.stages[3].items, 1);
+    }
+
+    #[test]
+    fn fork_join_throughput_tracks_bottleneck_branch() {
+        // Parallel branches pipeline independently: the fork/join
+        // sustains ~1/slowest-branch, not 1/(sum of branches).
+        let dep = Deployment::synthetic_fork_join("fjp", 1e-5, &[0.001, 0.0008], 1e-5, 0);
+        let r = simulate(&dep, &cfg(1, 10, 8192), &Scenario::steady(3000, 3000.0));
+        let th = r.throughput();
+        assert!((800.0..1100.0).contains(&th), "bottleneck 1 kHz, got {th}");
+        // The linearized chain of the same stages bottlenecks the same
+        // way, but its end-to-end latency stacks the branches while the
+        // fork/join overlaps them.
+        let chain = Deployment::synthetic("lin", &[1e-5, 0.001, 0.0008, 1e-5], 0);
+        let c = simulate(&chain, &cfg(1, 10, 8192), &Scenario::steady(3000, 3000.0));
+        assert!(
+            r.pipeline.latency_percentile(50.0) < c.pipeline.latency_percentile(50.0),
+            "branch-parallel p50 {} not below linearized {}",
+            r.pipeline.latency_percentile(50.0),
+            c.pipeline.latency_percentile(50.0)
+        );
+    }
+
+    #[test]
+    fn fork_branch_drop_completes_each_request_once() {
+        // Branch 0 is 50x slower than the offered rate allows, with a
+        // shallow queue: many requests drop there while their copies
+        // continue on branch 1. Every request must leave the system
+        // exactly once (ok or dropped), never twice.
+        let dep = Deployment::synthetic_fork_join("fjd", 1e-5, &[0.005, 1e-4], 1e-5, 0);
+        let r = simulate(&dep, &cfg(1, 50, 4), &Scenario::steady(2000, 2000.0));
+        assert_eq!(r.pipeline.completions.len(), 2000);
+        assert!(r.dropped > 0, "no drops under 25x branch overload");
+        assert_eq!(r.dropped as usize + r.pipeline.completed(), 2000);
+        // IDs unique and complete after the sort.
+        for (i, c) in r.pipeline.completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64, "duplicate or missing completion");
+        }
+    }
+
+    #[test]
+    fn fork_join_is_deterministic() {
+        let dep =
+            Deployment::synthetic_fork_join("fjdet", 1e-4, &[0.0007, 0.0004], 1e-4, 4096);
+        let sc = Scenario::bursty(5000, 500.0, 3000.0);
+        let a = simulate(&dep, &cfg(4, 300, 128), &sc);
+        let b = simulate(&dep, &cfg(4, 300, 128), &sc);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.events, b.events);
     }
 
     #[test]

@@ -18,18 +18,26 @@ use crate::util::parallel::par_map;
 pub struct RankedCandidate {
     /// Index into `Exploration::candidates`.
     pub candidate: usize,
+    /// Candidate label (chain boundary names or `par:`…).
     pub label: String,
+    /// Number of platforms that execute compute.
     pub partitions: usize,
     /// Simulated steady-state throughput (completions / virtual s).
     pub throughput: f64,
     /// Within-deadline completions / virtual s (= throughput without a
     /// deadline) — the ranking key.
     pub goodput: f64,
+    /// Median end-to-end latency (s).
     pub p50_s: f64,
+    /// 99th-percentile end-to-end latency (s).
     pub p99_s: f64,
+    /// Requests served successfully.
     pub completed: u64,
+    /// Requests shed at full queues.
     pub dropped: u64,
+    /// Completions that missed the scenario deadline.
     pub slo_violations: u64,
+    /// Total simulated energy (compute + wire).
     pub energy_j: f64,
     /// `SimReport::fingerprint` of the underlying run (determinism
     /// checks compare these across `--jobs` values).
@@ -139,7 +147,7 @@ pub fn render_ranking(ranked: &[RankedCandidate]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::explorer::{CandidateMetrics, ExplorationTiming, StagePlan};
+    use crate::explorer::{CandidateMetrics, ExplorationTiming, PlanEdge, StagePlan};
 
     /// Hand-built exploration: a balanced split vs two single-platform
     /// references — no mapper involved, so the test is instant.
@@ -160,7 +168,9 @@ mod tests {
                 energy_j: 1.0,
                 out_bytes: 0,
                 out_hops: 0,
+                edges: Vec::new(),
             }],
+            assign: None,
             violation: 0.0,
             violations: Vec::new(),
         };
@@ -181,6 +191,7 @@ mod tests {
                     energy_j: 0.5,
                     out_bytes: 1460,
                     out_hops: 1,
+                    edges: vec![PlanEdge { to: Some(1), bytes: 1460, hops: 1 }],
                 },
                 StagePlan {
                     platform: 1,
@@ -188,8 +199,10 @@ mod tests {
                     energy_j: 0.5,
                     out_bytes: 0,
                     out_hops: 0,
+                    edges: Vec::new(),
                 },
             ],
+            assign: None,
             violation: 0.0,
             violations: Vec::new(),
         };

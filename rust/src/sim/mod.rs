@@ -19,7 +19,12 @@
 //!   coordinator's stage thread sleeping the modelled transfer time;
 //! * scenarios ([`Scenario`]) drive open-loop arrivals (Poisson, burst,
 //!   diurnal, replayed traces), deadline SLOs, and transient faults
-//!   (per-stage slowdown windows, link degradation windows).
+//!   (per-stage slowdown windows, link degradation windows);
+//! * deployments are **stage graphs**, not just chains: a stage may
+//!   fork a request to several successors (branch-parallel DAG
+//!   partitions from `explorer::dag`) and a join stage waits for every
+//!   copy before serving — a request dropped on one branch is accounted
+//!   once and its surviving copies are discarded at their next hop.
 //!
 //! Determinism contract (same as the DSE, see `util::parallel`): every
 //! random draw happens up front on the coordinator thread, in
@@ -49,6 +54,7 @@ use std::time::Duration;
 /// platform's segment plus what it ships downstream.
 #[derive(Debug, Clone)]
 pub struct StageModel {
+    /// Display name (the platform name for explored candidates).
     pub name: String,
     /// Fixed per-batch service overhead (s).
     pub base_s: f64,
@@ -58,26 +64,81 @@ pub struct StageModel {
     /// Compute energy per item (J); link energy is charged separately
     /// from actual batched wire bytes.
     pub energy_per_item_j: f64,
-    /// Payload bytes per item shipped downstream (0 = nothing).
+    /// Total payload bytes per item shipped downstream (0 = nothing) —
+    /// informational aggregate; the engine times transfers per
+    /// [`Deployment::edges`] entry.
     pub out_bytes_per_item: u64,
-    /// Link hops that payload crosses (idle platforms forward).
+    /// Aggregate link hops of this stage's transfers (idle platforms
+    /// forward).
     pub out_hops: u64,
 }
 
-/// A deployment under test: the stage chain plus the link between
-/// consecutive stages.
+/// One stage-graph forwarding edge of a [`Deployment`]: a per-item
+/// payload shipped to another stage, or out of the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SimEdge {
+    /// Receiving stage index; `None` = the payload leaves the pipeline
+    /// (final output delivered to the chain's tail consumer — link time
+    /// is still charged to the sender).
+    pub to: Option<usize>,
+    /// Payload bytes per item on this edge.
+    pub bytes_per_item: u64,
+    /// Link hops the payload crosses.
+    pub hops: u64,
+}
+
+/// A deployment under test: the stage set, the stage-graph topology,
+/// and the link model. Chain deployments connect stage `i` to `i + 1`;
+/// branch-parallel deployments (from DAG exploration) fork a request to
+/// several successor stages and join it where their outputs meet.
 #[derive(Debug, Clone)]
 pub struct Deployment {
+    /// Display label (the explored candidate's label).
     pub label: String,
+    /// The stage servers, in plan order.
     pub stages: Vec<StageModel>,
+    /// The link between platforms (shared by every hop).
     pub link: LinkModel,
+    /// Per-stage out-edges: `edges[i]` lists where stage `i` ships its
+    /// output. A stage with no `Some` successor is terminal (requests
+    /// complete there); a stage receiving several `Some` edges is a
+    /// join and waits for every copy of a request before serving it.
+    pub edges: Vec<Vec<SimEdge>>,
 }
 
 impl Deployment {
     /// Instantiate an explorer candidate as a simulated deployment —
-    /// the loop-closing constructor: `Exploration` → `sim`.
+    /// the loop-closing constructor: `Exploration` → `sim`. Works for
+    /// chain and branch-parallel (DAG) candidates alike: the stage
+    /// topology is read from each [`crate::explorer::StagePlan`]'s
+    /// `edges`; plans without explicit edges (hand-built chains) fall
+    /// back to the linear `out_bytes`/`out_hops` wiring.
     pub fn from_candidate(c: &CandidateMetrics, sys: &SystemConfig) -> Self {
         assert!(!c.plan.is_empty(), "candidate '{}' has no stage plan", c.label);
+        let n = c.plan.len();
+        let mut edges: Vec<Vec<SimEdge>> = c
+            .plan
+            .iter()
+            .map(|p| {
+                p.edges
+                    .iter()
+                    .map(|e| SimEdge { to: e.to, bytes_per_item: e.bytes, hops: e.hops })
+                    .collect()
+            })
+            .collect();
+        if edges.iter().all(|e| e.is_empty()) {
+            // Legacy chain plan: wire i -> i+1 from the aggregates.
+            for (i, p) in c.plan.iter().enumerate() {
+                let to = if i + 1 < n { Some(i + 1) } else { None };
+                if to.is_some() || (p.out_bytes > 0 && p.out_hops > 0) {
+                    edges[i].push(SimEdge {
+                        to,
+                        bytes_per_item: p.out_bytes,
+                        hops: p.out_hops,
+                    });
+                }
+            }
+        }
         Deployment {
             label: c.label.clone(),
             stages: c
@@ -93,6 +154,7 @@ impl Deployment {
                 })
                 .collect(),
             link: sys.link.clone(),
+            edges,
         }
     }
 
@@ -117,7 +179,64 @@ impl Deployment {
                 })
                 .collect(),
             link: LinkModel::gigabit_ethernet(),
+            edges: (0..n)
+                .map(|i| {
+                    if i + 1 < n {
+                        vec![SimEdge { to: Some(i + 1), bytes_per_item: cut_bytes, hops: 1 }]
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect(),
         }
+    }
+
+    /// Synthetic fork/join diamond for tests: a source stage fans out
+    /// to parallel branch stages (one per `branch_s` entry, each
+    /// receiving `cut_bytes` per item), which join into a sink stage.
+    /// Stage order: `[source, branches.., sink]`.
+    pub fn synthetic_fork_join(
+        label: &str,
+        source_s: f64,
+        branch_s: &[f64],
+        sink_s: f64,
+        cut_bytes: u64,
+    ) -> Self {
+        assert!(!branch_s.is_empty());
+        let nb = branch_s.len();
+        let sink = nb + 1;
+        let mut stages = vec![StageModel {
+            name: "src".into(),
+            base_s: 0.0,
+            per_item_s: source_s,
+            energy_per_item_j: 0.0,
+            out_bytes_per_item: cut_bytes * nb as u64,
+            out_hops: nb as u64,
+        }];
+        let mut edges: Vec<Vec<SimEdge>> = vec![(1..=nb)
+            .map(|b| SimEdge { to: Some(b), bytes_per_item: cut_bytes, hops: 1 })
+            .collect()];
+        for (i, &s) in branch_s.iter().enumerate() {
+            stages.push(StageModel {
+                name: format!("b{i}"),
+                base_s: 0.0,
+                per_item_s: s,
+                energy_per_item_j: 0.0,
+                out_bytes_per_item: cut_bytes,
+                out_hops: 1,
+            });
+            edges.push(vec![SimEdge { to: Some(sink), bytes_per_item: cut_bytes, hops: 1 }]);
+        }
+        stages.push(StageModel {
+            name: "sink".into(),
+            base_s: 0.0,
+            per_item_s: sink_s,
+            energy_per_item_j: 0.0,
+            out_bytes_per_item: 0,
+            out_hops: 0,
+        });
+        edges.push(Vec::new());
+        Deployment { label: label.to_string(), stages, link: LinkModel::gigabit_ethernet(), edges }
     }
 }
 
@@ -129,6 +248,7 @@ pub struct SimCfg {
     pub batch: BatchPolicy,
     /// Bounded per-stage queue depth; arrivals beyond it are dropped.
     pub queue_depth: usize,
+    /// Seed for the scenario's arrival-stream expansion.
     pub seed: u64,
 }
 
@@ -157,6 +277,7 @@ impl Default for SimCfg {
 /// per-stage stats) with the sim-only accounting.
 #[derive(Debug, Clone)]
 pub struct SimReport {
+    /// The coordinator-shaped run report (completions, wall, stages).
     pub pipeline: PipelineReport,
     /// Requests dropped at a full queue (also `ok = false` completions).
     pub dropped: u64,
@@ -173,6 +294,7 @@ pub struct SimReport {
 }
 
 impl SimReport {
+    /// Completions per virtual second.
     pub fn throughput(&self) -> f64 {
         self.pipeline.throughput()
     }
@@ -223,6 +345,14 @@ impl SimReport {
 /// Run one deployment through one scenario on the virtual clock.
 /// Single-threaded and allocation-light: ≥ 1M requests simulate in
 /// seconds, and the result is bit-identical across repeated runs.
+///
+/// ```
+/// use partir::sim::{simulate, Deployment, Scenario, SimCfg};
+/// let dep = Deployment::synthetic("doc", &[0.0005, 0.0005], 1460);
+/// let report = simulate(&dep, &SimCfg::default(), &Scenario::steady(500, 800.0));
+/// assert_eq!(report.pipeline.completions.len(), 500);
+/// assert!(report.throughput() > 0.0);
+/// ```
 pub fn simulate(dep: &Deployment, cfg: &SimCfg, scenario: &Scenario) -> SimReport {
     engine::run(dep, cfg, scenario)
 }

@@ -36,9 +36,13 @@ pub enum Arrivals {
 /// `factor` for batches starting in `[from_s, to_s)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slowdown {
+    /// Affected stage index.
     pub stage: usize,
+    /// Window start (virtual seconds).
     pub from_s: f64,
+    /// Window end (virtual seconds, exclusive).
     pub to_s: f64,
+    /// Service-time multiplier inside the window.
     pub factor: f64,
 }
 
@@ -46,23 +50,30 @@ pub struct Slowdown {
 /// for transfers starting in `[from_s, to_s)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultWindow {
+    /// Window start (virtual seconds).
     pub from_s: f64,
+    /// Window end (virtual seconds, exclusive).
     pub to_s: f64,
+    /// Transfer-time multiplier inside the window.
     pub factor: f64,
 }
 
 /// A full serving scenario.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Scenario {
+    /// Scenario name (preset key or TOML-declared).
     pub name: String,
     /// Requests to generate (ignored for `Replay`, which carries its
     /// own trace).
     pub requests: usize,
+    /// Open-loop arrival process.
     pub arrivals: Arrivals,
     /// End-to-end deadline; completions beyond it count as SLO
     /// violations and leave the goodput.
     pub deadline_s: Option<f64>,
+    /// Transient per-stage compute faults.
     pub slowdowns: Vec<Slowdown>,
+    /// Transient link-degradation windows.
     pub link_faults: Vec<FaultWindow>,
 }
 
@@ -157,6 +168,7 @@ impl Scenario {
         })
     }
 
+    /// Names accepted by [`Scenario::by_name`] (the CLI presets).
     pub fn builtin_names() -> &'static [&'static str] {
         &["steady", "burst", "diurnal", "degraded"]
     }

@@ -49,23 +49,28 @@ pub fn property<F: Fn(&mut Pcg32) + std::panic::RefUnwindSafe>(name: &str, cases
 pub struct Gen;
 
 impl Gen {
+    /// Uniform `usize` in `range`.
     pub fn usize_in(rng: &mut Pcg32, range: Range<usize>) -> usize {
         rng.gen_usize(range.start, range.end)
     }
 
+    /// Uniform `u32` in `range`.
     pub fn u32_in(rng: &mut Pcg32, range: Range<u32>) -> u32 {
         range.start + rng.gen_range(range.end - range.start)
     }
 
+    /// Uniform `f64` in `[lo, hi)`.
     pub fn f64_in(rng: &mut Pcg32, lo: f64, hi: f64) -> f64 {
         lo + rng.gen_f64() * (hi - lo)
     }
 
+    /// Vector of uniform `u32 < max` with length drawn from `len`.
     pub fn vec_u32(rng: &mut Pcg32, len: Range<usize>, max: u32) -> Vec<u32> {
         let n = Self::usize_in(rng, len);
         (0..n).map(|_| rng.gen_range(max.max(1))).collect()
     }
 
+    /// Vector of uniform `f64` in `[lo, hi)` with length drawn from `len`.
     pub fn vec_f64(rng: &mut Pcg32, len: Range<usize>, lo: f64, hi: f64) -> Vec<f64> {
         let n = Self::usize_in(rng, len);
         (0..n).map(|_| Self::f64_in(rng, lo, hi)).collect()

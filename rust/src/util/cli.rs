@@ -18,10 +18,15 @@ use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
 #[derive(Debug, Clone)]
+/// One declared option or flag.
 pub struct OptSpec {
+    /// Long option name (without `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
+    /// Default value (None for required-less options and flags).
     pub default: Option<&'static str>,
+    /// True for boolean flags (no value).
     pub is_flag: bool,
 }
 
@@ -30,22 +35,27 @@ pub struct OptSpec {
 pub struct Args {
     values: BTreeMap<String, String>,
     flags: Vec<String>,
+    /// Positional arguments, in order.
     pub positionals: Vec<String>,
 }
 
 impl Args {
+    /// Option value (explicit or default).
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(|s| s.as_str())
     }
 
+    /// Option value with a call-site fallback.
     pub fn get_or(&self, name: &str, default: &str) -> String {
         self.get(name).unwrap_or(default).to_string()
     }
 
+    /// True when the flag was passed.
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Option parsed as f64 (`Err` on malformed input).
     pub fn get_f64(&self, name: &str) -> Result<Option<f64>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -56,6 +66,7 @@ impl Args {
         }
     }
 
+    /// Option parsed as usize (`Err` on malformed input).
     pub fn get_usize(&self, name: &str) -> Result<Option<usize>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -66,6 +77,7 @@ impl Args {
         }
     }
 
+    /// Option parsed as u64 (`Err` on malformed input).
     pub fn get_u64(&self, name: &str) -> Result<Option<u64>, String> {
         match self.get(name) {
             None => Ok(None),
@@ -80,27 +92,35 @@ impl Args {
 /// Command definition: options + expected positionals.
 #[derive(Debug, Clone)]
 pub struct Command {
+    /// Subcommand name.
     pub name: &'static str,
+    /// One-line description shown in help.
     pub about: &'static str,
+    /// Declared options and flags.
     pub opts: Vec<OptSpec>,
+    /// Help text for positionals (empty = none accepted).
     pub positional_help: &'static str,
 }
 
 impl Command {
+    /// Start declaring a subcommand.
     pub fn new(name: &'static str, about: &'static str) -> Self {
         Self { name, about, opts: Vec::new(), positional_help: "" }
     }
 
+    /// Declare a value option.
     pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default, is_flag: false });
         self
     }
 
+    /// Declare a boolean flag.
     pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
         self.opts.push(OptSpec { name, help, default: None, is_flag: true });
         self
     }
 
+    /// Accept positionals, described by `help`.
     pub fn positionals(mut self, help: &'static str) -> Self {
         self.positional_help = help;
         self
@@ -158,6 +178,7 @@ impl Command {
         Ok(Args { values, flags, positionals })
     }
 
+    /// Render the `--help` text.
     pub fn help_text(&self) -> String {
         let mut s = String::new();
         let _ = writeln!(s, "{} — {}", self.name, self.about);

@@ -11,6 +11,7 @@ pub struct Csv {
 }
 
 impl Csv {
+    /// Empty table with the given header.
     pub fn new(header: &[&str]) -> Self {
         Self {
             header: header.iter().map(|s| s.to_string()).collect(),
@@ -31,14 +32,17 @@ impl Csv {
         self.rows.push(cells.to_vec());
     }
 
+    /// Number of data rows.
     pub fn len(&self) -> usize {
         self.rows.len()
     }
 
+    /// True when no rows were added.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Render as CSV text (header first, quoted where needed).
     pub fn to_string(&self) -> String {
         let mut out = String::new();
         out.push_str(&escape_row(&self.header));
@@ -50,6 +54,7 @@ impl Csv {
         out
     }
 
+    /// Write to a file, creating parent directories.
     pub fn write_file(&self, path: &Path) -> std::io::Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;

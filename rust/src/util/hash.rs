@@ -9,7 +9,9 @@
 //! keys, and the keyed payloads carry enough structure that real
 //! configurations never collide in practice).
 
+/// FNV-1a 64-bit offset basis.
 pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+/// FNV-1a 64-bit prime.
 pub const FNV_PRIME: u64 = 0x1000_0000_01b3;
 
 /// Incremental FNV-1a hasher over 64-bit words.
@@ -19,15 +21,18 @@ pub struct Fnv64 {
 }
 
 impl Fnv64 {
+    /// Fresh hasher at the offset basis.
     pub fn new() -> Self {
         Self { state: FNV_OFFSET }
     }
 
+    /// Mix in a u64 (little-endian bytes).
     pub fn write_u64(&mut self, v: u64) {
         self.state ^= v;
         self.state = self.state.wrapping_mul(FNV_PRIME);
     }
 
+    /// Mix in a usize (as u64).
     pub fn write_usize(&mut self, v: usize) {
         self.write_u64(v as u64);
     }
@@ -37,6 +42,7 @@ impl Fnv64 {
         self.write_u64(v.to_bits());
     }
 
+    /// Mix in raw bytes.
     pub fn write_bytes(&mut self, bytes: &[u8]) {
         // Length prefix keeps ("ab","c") distinct from ("a","bc").
         self.write_u64(bytes.len() as u64);
@@ -45,6 +51,7 @@ impl Fnv64 {
         }
     }
 
+    /// Current digest.
     pub fn finish(&self) -> u64 {
         self.state
     }

@@ -8,18 +8,28 @@ use std::collections::BTreeMap;
 use std::fmt;
 
 #[derive(Debug, Clone, PartialEq)]
+/// A parsed JSON value.
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (insertion-ordered pairs).
     Obj(BTreeMap<String, Json>),
 }
 
 #[derive(Debug, Clone, PartialEq)]
+/// Parse failure with byte offset.
 pub struct JsonError {
+    /// What went wrong.
     pub msg: String,
+    /// Byte offset of the failure.
     pub offset: usize,
 }
 
@@ -32,6 +42,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a JSON document.
     pub fn parse(s: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: s.as_bytes(), i: 0 };
         p.skip_ws();
@@ -45,6 +56,7 @@ impl Json {
 
     // ---- typed accessors -------------------------------------------------
 
+    /// Borrow as a string, if it is one.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -52,6 +64,7 @@ impl Json {
         }
     }
 
+    /// Read as f64, if numeric.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -59,6 +72,7 @@ impl Json {
         }
     }
 
+    /// Read as u64, if a non-negative integer.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 => Some(*n as u64),
@@ -66,10 +80,12 @@ impl Json {
         }
     }
 
+    /// Read as usize, if a non-negative integer.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_u64().map(|v| v as usize)
     }
 
+    /// Read as bool, if boolean.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -77,6 +93,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an array, if it is one.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -84,6 +101,7 @@ impl Json {
         }
     }
 
+    /// Borrow as an object's pairs, if it is one.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),

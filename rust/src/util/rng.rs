@@ -15,10 +15,12 @@ pub struct SplitMix64 {
 }
 
 impl SplitMix64 {
+    /// Seeded splitmix64 stream.
     pub fn new(seed: u64) -> Self {
         Self { state: seed }
     }
 
+    /// Next 64-bit draw.
     pub fn next_u64(&mut self) -> u64 {
         self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
         let mut z = self.state;
@@ -56,6 +58,7 @@ impl Pcg32 {
         Self::new(seed, 0)
     }
 
+    /// Next 32-bit draw.
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
         self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
@@ -64,6 +67,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64-bit draw (two 32-bit halves).
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
     }

@@ -12,10 +12,12 @@ pub struct Summary {
 }
 
 impl Summary {
+    /// Empty accumulator.
     pub fn new() -> Self {
         Self { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
+    /// Fold in one sample (Welford update).
     pub fn add(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -25,6 +27,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Samples folded in.
     pub fn count(&self) -> u64 {
         self.n
     }
@@ -36,18 +39,22 @@ impl Summary {
         if self.n == 0 { 0.0 } else { self.mean }
     }
 
+    /// Sample variance (0 for fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 { 0.0 } else { self.m2 / (self.n - 1) as f64 }
     }
 
+    /// Sample standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample (∞ when empty).
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample (−∞ when empty).
     pub fn max(&self) -> f64 {
         self.max
     }

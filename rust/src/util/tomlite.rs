@@ -14,8 +14,11 @@ use super::json::{Json, JsonError};
 use std::collections::BTreeMap;
 
 #[derive(Debug)]
+/// Parse failure with line number.
 pub struct TomlError {
+    /// 1-based line of the failure.
     pub line: usize,
+    /// What went wrong.
     pub msg: String,
 }
 

@@ -84,14 +84,17 @@ pub fn gconv_bn_act(
     g.add(LayerKind::Activation(act), &[b])
 }
 
+/// Append a ReLU.
 pub fn relu(g: &mut Graph, inp: NodeId) -> NodeId {
     g.add(LayerKind::Activation(Act::Relu), &[inp])
 }
 
+/// Append a 2-D max pool.
 pub fn maxpool(g: &mut Graph, inp: NodeId, k: usize, s: usize, p: usize, ceil: bool) -> NodeId {
     g.add(LayerKind::MaxPool(Pool2d { kernel: k, stride: s, pad: p, ceil }), &[inp])
 }
 
+/// Append a global average pool.
 pub fn gap(g: &mut Graph, inp: NodeId) -> NodeId {
     g.add(LayerKind::GlobalAvgPool, &[inp])
 }

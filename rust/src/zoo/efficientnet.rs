@@ -65,6 +65,7 @@ fn mbconv(
     }
 }
 
+/// torchvision `efficientnet_b0` (5,288,548 parameters).
 pub fn efficientnet_b0(classes: usize) -> Graph {
     let mut g = Graph::new("efficientnet_b0");
     let x = g.input(3, 224, 224);

@@ -45,6 +45,7 @@ const CFGS: &[InceptionCfg] = &[
     InceptionCfg { ch1x1: 384, ch3x3red: 192, ch3x3: 384, ch5x5red: 48, ch5x5: 128, pool_proj: 128 },
 ];
 
+/// torchvision `googlenet` (6,624,904 parameters).
 pub fn googlenet(classes: usize) -> Graph {
     let mut g = Graph::new("googlenet");
     let x = g.input(3, 224, 224);

@@ -38,6 +38,13 @@ pub const PAPER_MODELS: [&str; 6] = [
 
 /// Build a zoo model by name (1000 ImageNet classes for the paper models,
 /// 10 classes for the executable tiny CNN).
+///
+/// ```
+/// let g = partir::zoo::build("googlenet").unwrap();
+/// g.validate().unwrap();
+/// assert_eq!(g.total_params(), 6_624_904); // torchvision's published count
+/// assert!(partir::zoo::build("alexnet").is_none());
+/// ```
 pub fn build(name: &str) -> Option<Graph> {
     match name {
         "vgg16" => Some(vgg16(1000)),

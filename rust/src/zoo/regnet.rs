@@ -27,6 +27,7 @@ fn x_block(g: &mut Graph, inp: NodeId, w_out: usize, stride: usize) -> NodeId {
     relu(g, sum)
 }
 
+/// torchvision `regnet_x_400mf` (5,495,976 parameters).
 pub fn regnet_x_400mf(classes: usize) -> Graph {
     let mut g = Graph::new("regnet_x_400mf");
     let x = g.input(3, 224, 224);

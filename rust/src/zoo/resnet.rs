@@ -36,6 +36,7 @@ fn stage(g: &mut Graph, mut x: NodeId, width: usize, blocks: usize, stride: usiz
     x
 }
 
+/// torchvision `resnet50` (25,557,032 parameters).
 pub fn resnet50(classes: usize) -> Graph {
     let mut g = Graph::new("resnet50");
     let x = g.input(3, 224, 224);

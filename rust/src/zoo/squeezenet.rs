@@ -16,6 +16,7 @@ fn fire(g: &mut Graph, inp: NodeId, squeeze_c: usize, expand_c: usize) -> NodeId
     g.add(LayerKind::Concat, &[e1, e3])
 }
 
+/// torchvision `squeezenet1_1` (1,235,496 parameters).
 pub fn squeezenet1_1(classes: usize) -> Graph {
     let mut g = Graph::new("squeezenet1_1");
     let x = g.input(3, 224, 224);

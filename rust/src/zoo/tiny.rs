@@ -11,9 +11,12 @@ use crate::graph::{Graph, LayerKind};
 
 /// Channel plan shared with the python model.
 pub const TINY_CHANNELS: [usize; 3] = [16, 32, 64];
+/// Input shape `(c, h, w)` shared with the python model.
 pub const TINY_INPUT: (usize, usize, usize) = (3, 32, 32);
+/// Classifier classes of the executable model.
 pub const TINY_CLASSES: usize = 10;
 
+/// The executable tiny CNN (3 conv blocks + linear classifier).
 pub fn tiny_cnn(classes: usize) -> Graph {
     let mut g = Graph::new("tiny_cnn");
     let (c, h, w) = TINY_INPUT;

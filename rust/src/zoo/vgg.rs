@@ -8,6 +8,7 @@ use crate::graph::{Graph, LayerKind};
 /// Configuration "D": channel widths per block, `M` = maxpool.
 const CFG_D: &[&[usize]] = &[&[64, 64], &[128, 128], &[256, 256, 256], &[512, 512, 512], &[512, 512, 512]];
 
+/// torchvision `vgg16` (138,357,544 parameters).
 pub fn vgg16(classes: usize) -> Graph {
     let mut g = Graph::new("vgg16");
     let mut x = g.input(3, 224, 224);

@@ -1,0 +1,235 @@
+//! Bench: incremental DAG-plan evaluation (stage-granular cost cache,
+//! allocation-free eval scratch, bound-pruned genome scoring).
+//!
+//! Three sections:
+//! 1. DAG sweep throughput — enumerate two-platform convex DAG cuts
+//!    (`graph::partition::dag_cuts`) and score them three ways: the
+//!    preserved pre-cache reference path
+//!    (`explorer::reference::DagReference`, global `Mutex<HashMap>`
+//!    memo + per-genome allocations), the incremental path with a cold
+//!    stage cache, and the incremental path warm + bound-pruned. All
+//!    three must produce a **bit-identical Pareto front**; acceptance
+//!    is ≥ 3× genomes/second for warm-pruned vs the reference.
+//! 2. `explore_dag` serial vs `--jobs N` — identical fronts, wall-clock
+//!    speedup of the full (chain + assignment-GA) exploration.
+//! 3. machine-readable results in `BENCH_dag.json`.
+//!
+//!     cargo bench --bench dag_explore
+
+#[path = "common/mod.rs"]
+mod common;
+
+use partir::config::SystemConfig;
+use partir::explorer::reference::DagReference;
+use partir::explorer::{explore_dag, sweep_dag_front, CandidateMetrics, PlanEvaluator};
+use partir::graph::partition::dag_cuts;
+use partir::util::json::{obj, Json};
+use partir::zoo;
+use std::time::Instant;
+
+fn bench_sys(fast: bool) -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    if fast {
+        sys.search.victory = 15;
+        sys.search.max_samples = 150;
+    } else {
+        sys.search.victory = 50;
+        sys.search.max_samples = 1000;
+    }
+    sys.jobs = 1;
+    sys
+}
+
+fn assert_fronts_identical(a: &[CandidateMetrics], b: &[CandidateMetrics], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: front sizes diverged");
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.label, y.label, "{what}");
+        assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "{what}: {}", x.label);
+        assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{what}: {}", x.label);
+        assert_eq!(x.throughput.to_bits(), y.throughput.to_bits(), "{what}: {}", x.label);
+        assert_eq!(x.top1.to_bits(), y.top1.to_bits(), "{what}: {}", x.label);
+        assert_eq!(x.link_bytes, y.link_bytes, "{what}: {}", x.label);
+        assert_eq!(x.memory_bytes, y.memory_bytes, "{what}: {}", x.label);
+    }
+}
+
+/// Pareto front of the reference evaluator over the whole sweep (its
+/// "current evaluator" behavior: every genome fully surfaced, no
+/// pruning, fresh memo per run).
+fn reference_front(
+    ev: &PlanEvaluator,
+    assigns: &[Vec<usize>],
+    metrics: &[partir::config::Metric],
+) -> Vec<CandidateMetrics> {
+    let reference = DagReference::new(ev);
+    let cands: Vec<CandidateMetrics> =
+        assigns.iter().map(|a| reference.evaluate_dag(a)).collect();
+    partir::explorer::exhaustive_pareto(&cands, metrics)
+        .into_iter()
+        .map(|i| cands[i].clone())
+        .collect()
+}
+
+fn main() {
+    let fast = common::fast_mode();
+    let iters = if fast { 3 } else { 7 };
+    let sys = bench_sys(fast);
+    let cap = if fast { 120 } else { 400 };
+    let models: &[&str] = if fast {
+        &["squeezenet1_1"]
+    } else {
+        &["squeezenet1_1", "googlenet", "resnet50"]
+    };
+
+    common::section(&format!(
+        "DAG sweep: reference vs incremental (cap {cap} genomes, victory={}, max_samples={})",
+        sys.search.victory, sys.search.max_samples
+    ));
+    println!(
+        "{:<16} {:>8} {:>10} {:>10} {:>10} {:>8} {:>10} {:>10} {:>9}",
+        "model", "genomes", "ref g/s", "cold g/s", "warm g/s", "pruned", "hits", "misses", "speedup"
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut ln_speedups: Vec<f64> = Vec::new();
+    for model in models {
+        let g = zoo::build(model).unwrap();
+        let ev = PlanEvaluator::new(&g, &sys);
+        let assigns = dag_cuts(&g, cap);
+        let n = assigns.len();
+
+        // Correctness first: all three paths agree on the front.
+        let front_ref = reference_front(&ev, &assigns, &sys.pareto_metrics);
+        ev.clear_stage_cache();
+        let (front_cold, _) = sweep_dag_front(&ev, &assigns, false);
+        let (front_warm, stats) = sweep_dag_front(&ev, &assigns, true);
+        assert_fronts_identical(&front_ref, &front_cold, &format!("{model}: ref vs cold"));
+        assert_fronts_identical(&front_cold, &front_warm, &format!("{model}: cold vs warm+pruned"));
+        assert!(
+            stats.evaluated + stats.pruned == n,
+            "{model}: sweep lost genomes ({} + {} != {n})",
+            stats.evaluated,
+            stats.pruned
+        );
+
+        // Reference throughput: fresh memo per run, exactly one run's
+        // worth of work each iteration.
+        let mut ref_min = f64::INFINITY;
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(reference_front(&ev, &assigns, &sys.pareto_metrics));
+            ref_min = ref_min.min(t.elapsed().as_secs_f64());
+        }
+        // Cold incremental: stage cache dropped before every run.
+        let mut cold_min = f64::INFINITY;
+        for _ in 0..iters {
+            ev.clear_stage_cache();
+            let t = Instant::now();
+            std::hint::black_box(sweep_dag_front(&ev, &assigns, false));
+            cold_min = cold_min.min(t.elapsed().as_secs_f64());
+        }
+        // Warm incremental + bound prune: the NSGA-II steady state.
+        ev.clear_stage_cache();
+        let _ = sweep_dag_front(&ev, &assigns, true); // warm the cache
+        let mut warm_min = f64::INFINITY;
+        for _ in 0..iters {
+            let t = Instant::now();
+            std::hint::black_box(sweep_dag_front(&ev, &assigns, true));
+            warm_min = warm_min.min(t.elapsed().as_secs_f64());
+        }
+        let (hits, misses, entries) = ev.stage_cache_stats();
+        let (ref_gps, cold_gps, warm_gps) = (
+            n as f64 / ref_min.max(1e-12),
+            n as f64 / cold_min.max(1e-12),
+            n as f64 / warm_min.max(1e-12),
+        );
+        let speedup = ref_min / warm_min.max(1e-12);
+        ln_speedups.push(speedup.max(1e-12).ln());
+        println!(
+            "{:<16} {:>8} {:>10.0} {:>10.0} {:>10.0} {:>8} {:>10} {:>10} {:>8.2}x",
+            model, n, ref_gps, cold_gps, warm_gps, stats.pruned, hits, misses, speedup
+        );
+        rows.push(obj(vec![
+            ("model", Json::from(*model)),
+            ("genomes", Json::from(n)),
+            ("ref_s", Json::from(ref_min)),
+            ("cold_s", Json::from(cold_min)),
+            ("warm_s", Json::from(warm_min)),
+            ("ref_genomes_per_s", Json::from(ref_gps)),
+            ("cold_genomes_per_s", Json::from(cold_gps)),
+            ("warm_genomes_per_s", Json::from(warm_gps)),
+            ("pruned", Json::from(stats.pruned)),
+            ("evaluated", Json::from(stats.evaluated)),
+            ("cache_hits", Json::from(hits)),
+            ("cache_misses", Json::from(misses)),
+            ("cache_entries", Json::from(entries)),
+            ("front_size", Json::from(front_ref.len())),
+            ("speedup_vs_reference", Json::from(speedup)),
+            ("identical_front", Json::from(true)),
+        ]));
+        assert!(
+            speedup >= 3.0,
+            "{model}: warm incremental sweep only {speedup:.2}x the reference (need >= 3x)"
+        );
+    }
+    let geomean =
+        (ln_speedups.iter().sum::<f64>() / ln_speedups.len().max(1) as f64).exp();
+    println!(
+        "\nsweep speedup geomean: {geomean:.2}x \
+         (acceptance: >= 3x genomes/s at a bit-identical Pareto front)"
+    );
+
+    common::section("explore_dag: serial vs parallel (identical fronts)");
+    let jobs = partir::util::parallel::default_jobs().clamp(2, 4);
+    println!("{:<16} {:>12} {:>12} {:>9}", "model", "serial", "jobs", "speedup");
+    let mut explore_rows: Vec<Json> = Vec::new();
+    for model in models {
+        let g = zoo::build(model).unwrap();
+        let mut serial_sys = bench_sys(fast);
+        serial_sys.jobs = 1;
+        let mut par_sys = bench_sys(fast);
+        par_sys.jobs = jobs;
+        let t = Instant::now();
+        let a = explore_dag(&g, &serial_sys);
+        let serial_s = t.elapsed().as_secs_f64();
+        let t = Instant::now();
+        let b = explore_dag(&g, &par_sys);
+        let par_s = t.elapsed().as_secs_f64();
+        assert_eq!(a.pareto, b.pareto, "{model}: parallel front diverged");
+        assert_eq!(a.favorite, b.favorite, "{model}: favorite diverged");
+        assert_eq!(a.candidates.len(), b.candidates.len(), "{model}");
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.label, y.label, "{model}");
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits(), "{model}: {}", x.label);
+            assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits(), "{model}: {}", x.label);
+        }
+        let speedup = serial_s / par_s.max(1e-12);
+        println!(
+            "{:<16} {:>12} {:>12} {:>8.2}x",
+            model,
+            common::fmt(serial_s),
+            common::fmt(par_s),
+            speedup
+        );
+        explore_rows.push(obj(vec![
+            ("model", Json::from(*model)),
+            ("serial_s", Json::from(serial_s)),
+            ("parallel_s", Json::from(par_s)),
+            ("jobs", Json::from(jobs)),
+            ("speedup", Json::from(speedup)),
+            ("identical_front", Json::from(true)),
+        ]));
+    }
+
+    common::write_bench_json(
+        "dag",
+        &obj(vec![
+            ("bench", Json::from("dag_explore")),
+            ("fast_mode", Json::from(fast)),
+            ("cap", Json::from(cap)),
+            ("sweep", Json::Arr(rows)),
+            ("sweep_speedup_geomean", Json::from(geomean)),
+            ("explore", Json::Arr(explore_rows)),
+            ("identical_fronts", Json::from(true)),
+        ]),
+    );
+}

@@ -25,22 +25,44 @@
 //! invariant.
 
 use super::{
-    exhaustive_pareto, explore_two_platform_with, pick_favorite, CandidateMetrics, Exploration,
-    PlanEvaluator,
+    exhaustive_pareto, explore_two_platform_with, pick_favorite, CandidateMetrics, EvalScratch,
+    Exploration, PlanEvaluator,
 };
 use crate::config::{Metric, SystemConfig};
 use crate::graph::partition::repair_monotone;
 use crate::graph::Graph;
 use crate::hw::CostCache;
 use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use crate::util::hash::Fnv64;
 use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::Instant;
 
+/// Stable fingerprint of a repaired assignment (cross-generation dedup
+/// key — no owned `Vec` clones).
+fn assign_fp(assign: &[usize]) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_usize(assign.len());
+    for &a in assign {
+        h.write_usize(a);
+    }
+    h.finish()
+}
+
+/// Stable fingerprint of a candidate's (label, partitions) dedup
+/// signature — shared with the chain explorer's front dedup.
+pub(crate) fn label_fp(label: &str, partitions: usize) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(label.as_bytes());
+    h.write_usize(partitions);
+    h.finish()
+}
+
 /// NSGA-II problem over layer→platform assignments. The genome has one
 /// integer gene per layer (`0..platforms`); [`Problem::repair`] applies
 /// the monotone convexity repair, so every evaluated genome is a valid
-/// [`crate::graph::partition::DagPartition`].
+/// [`crate::graph::partition::DagPartition`]. Evaluation goes through
+/// the allocation-free lean path with the worker's [`EvalScratch`].
 struct DagProblem<'a, 'b> {
     ev: &'a PlanEvaluator<'b>,
     metrics: Vec<Metric>,
@@ -48,6 +70,7 @@ struct DagProblem<'a, 'b> {
 }
 
 impl Problem for DagProblem<'_, '_> {
+    type Scratch = EvalScratch;
     fn num_vars(&self) -> usize {
         self.ev.g.len()
     }
@@ -67,9 +90,15 @@ impl Problem for DagProblem<'_, '_> {
             *v = a as i64;
         }
     }
-    fn evaluate(&self, vars: &[i64]) -> Eval {
-        let assign: Vec<usize> = vars.iter().map(|&v| v as usize).collect();
-        let m = self.ev.evaluate_dag(&assign);
+    fn make_scratch(&self) -> EvalScratch {
+        EvalScratch::new()
+    }
+    fn evaluate(&self, vars: &[i64], scratch: &mut EvalScratch) -> Eval {
+        let mut assign = std::mem::take(&mut scratch.assign_buf);
+        assign.clear();
+        assign.extend(vars.iter().map(|&v| v as usize));
+        let m = self.ev.evaluate_dag_lean(&assign, scratch);
+        scratch.assign_buf = assign;
         if m.feasible() {
             Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
         } else {
@@ -128,18 +157,23 @@ pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) 
     // Dedup: one entry per distinct repaired assignment, and never a
     // candidate that duplicates an existing chain candidate's schedule
     // (single-platform references included — their labels collide).
-    let mut seen_assign: BTreeSet<Vec<usize>> = BTreeSet::new();
-    let mut seen_labels: BTreeSet<(String, usize)> =
-        ex.candidates.iter().map(|c| (c.label.clone(), c.partitions)).collect();
+    // Both keys are FNV fingerprints — no owned `Vec<usize>`/`String`
+    // clones per front member, and the genome-level memo inside
+    // `nsga2::optimize_par` already collapsed duplicate assignments
+    // across generations before they reach this loop.
+    let mut seen_assign: BTreeSet<u64> = BTreeSet::new();
+    let mut seen_labels: BTreeSet<u64> =
+        ex.candidates.iter().map(|c| label_fp(&c.label, c.partitions)).collect();
     let mut fresh: Vec<CandidateMetrics> = Vec::new();
+    let mut scratch = EvalScratch::new();
     for s in &front {
         let mut assign: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
         repair_monotone(g, &mut assign); // idempotent (already repaired)
-        if !seen_assign.insert(assign.clone()) {
+        if !seen_assign.insert(assign_fp(&assign)) {
             continue;
         }
-        let m = ev.evaluate_dag(&assign);
-        if !seen_labels.insert((m.label.clone(), m.partitions)) {
+        let m = ev.evaluate_dag_in(&assign, &mut scratch);
+        if !seen_labels.insert(label_fp(&m.label, m.partitions)) {
             continue; // chain-expressible duplicate of an existing point
         }
         fresh.push(m);
@@ -154,6 +188,79 @@ pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) 
     ex.timing.nsga_s += t1.elapsed().as_secs_f64();
     ex.timing.total_s = total0.elapsed().as_secs_f64();
     ex
+}
+
+/// Outcome counters of [`sweep_dag_front`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SweepStats {
+    /// Assignments fully evaluated.
+    pub evaluated: usize,
+    /// Assignments skipped by the monotone lower-bound prune.
+    pub pruned: usize,
+}
+
+/// Pareto front over an explicit list of monotone layer→platform
+/// assignments (e.g. a [`crate::graph::partition::dag_cuts`]
+/// enumeration) under the system's `pareto_metrics`, returned as the
+/// front members' surfaced metrics in first-appearance order.
+///
+/// With `prune` enabled, each assignment's evaluation floor
+/// ([`PlanEvaluator::dag_floor`]) is tested against the feasible
+/// candidates evaluated so far: if any of them *strictly* dominates the
+/// floor, it also strictly dominates the assignment's exact objectives
+/// (every floor component is `≤` its exact counterpart bit-exactly), so
+/// the assignment provably cannot reach the front and its full
+/// evaluation is skipped. The returned front is therefore
+/// **bit-identical** with pruning on or off — the property
+/// `tests/dag_equivalence.rs::incremental_dag_eval_bit_identical`
+/// asserts across the zoo, and `benches/dag_explore.rs` re-asserts
+/// while measuring the genomes/second gain.
+pub fn sweep_dag_front(
+    ev: &PlanEvaluator,
+    assigns: &[Vec<usize>],
+    prune: bool,
+) -> (Vec<CandidateMetrics>, SweepStats) {
+    let metrics = &ev.sys.pareto_metrics;
+    let mut scratch = EvalScratch::new();
+    let mut stats = SweepStats::default();
+    let mut cands: Vec<CandidateMetrics> = Vec::new();
+    // Objective vectors of every feasible candidate evaluated so far —
+    // the "current front" the bound is tested against (a dominating
+    // point needn't itself be non-dominated for the skip to be sound).
+    let mut archive: Vec<Vec<f64>> = Vec::new();
+    let mut floor_buf: Vec<f64> = Vec::new();
+    for assign in assigns {
+        if prune && !archive.is_empty() {
+            let floor = ev.dag_floor(assign, &mut scratch);
+            floor_buf.clear();
+            floor_buf.extend(metrics.iter().map(|&m| floor.objective_floor(m)));
+            let dominated = archive.iter().any(|a| {
+                let mut strictly = false;
+                for (x, y) in a.iter().zip(&floor_buf) {
+                    if x > y {
+                        return false;
+                    }
+                    if x < y {
+                        strictly = true;
+                    }
+                }
+                strictly
+            });
+            if dominated {
+                stats.pruned += 1;
+                continue;
+            }
+        }
+        let m = ev.evaluate_dag_in(assign, &mut scratch);
+        stats.evaluated += 1;
+        if m.feasible() {
+            archive.push(metrics.iter().map(|&mm| m.objective(mm)).collect());
+        }
+        cands.push(m);
+    }
+    let front = exhaustive_pareto(&cands, metrics);
+    let out = front.iter().map(|&i| cands[i].clone()).collect();
+    (out, stats)
 }
 
 #[cfg(test)]
@@ -355,6 +462,60 @@ mod tests {
             parallel > 0,
             "no random genome repaired into a branch-parallel partition"
         );
+    }
+
+    #[test]
+    fn sweep_prune_preserves_the_front_bitwise() {
+        let g = branchy();
+        let sys = quick_sys();
+        let ev = PlanEvaluator::new(&g, &sys);
+        let assigns = crate::graph::partition::dag_cuts(&g, 1 << 10);
+        let (cold, cold_stats) = sweep_dag_front(&ev, &assigns, false);
+        let (warm, warm_stats) = sweep_dag_front(&ev, &assigns, true);
+        assert_eq!(cold_stats.evaluated, assigns.len());
+        assert_eq!(cold_stats.pruned, 0);
+        assert_eq!(warm_stats.evaluated + warm_stats.pruned, assigns.len());
+        assert_eq!(cold.len(), warm.len(), "prune changed the front size");
+        for (a, b) in cold.iter().zip(&warm) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{}", a.label);
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{}", a.label);
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{}", a.label);
+            assert_eq!(a.top1.to_bits(), b.top1.to_bits(), "{}", a.label);
+            assert_eq!(a.memory_bytes, b.memory_bytes, "{}", a.label);
+        }
+    }
+
+    #[test]
+    fn dag_floor_is_a_true_lower_bound_per_objective() {
+        use crate::util::rng::Pcg32;
+        let g = branchy();
+        let sys = quick_sys();
+        let ev = PlanEvaluator::new(&g, &sys);
+        let mut scratch = EvalScratch::new();
+        let mut assigns = crate::graph::partition::dag_cuts(&g, 1 << 10);
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..64 {
+            let mut a: Vec<usize> = (0..g.len()).map(|_| rng.gen_usize(0, 2)).collect();
+            repair_monotone(&g, &mut a);
+            assigns.push(a);
+        }
+        for assign in &assigns {
+            let floor = ev.dag_floor(assign, &mut scratch);
+            let m = ev.evaluate_dag_in(assign, &mut scratch);
+            for &metric in &sys.pareto_metrics {
+                assert!(
+                    floor.objective_floor(metric) <= m.objective(metric),
+                    "floor above objective for {metric:?} on {:?} ({} > {})",
+                    assign,
+                    floor.objective_floor(metric),
+                    m.objective(metric)
+                );
+            }
+            // Top-1 and link bytes are exact, not merely bounded.
+            assert_eq!(floor.top1.to_bits(), m.top1.to_bits(), "{:?}", assign);
+            assert_eq!(floor.link_bytes, m.link_bytes, "{:?}", assign);
+        }
     }
 
     #[test]

@@ -7,7 +7,11 @@
 //! duplicate positions naturally express idle platforms (fewer
 //! partitions than platforms).
 
-use super::{exhaustive_pareto, CandidateMetrics, Exploration, ExplorationTiming, PlanEvaluator};
+use super::dag::label_fp;
+use super::{
+    exhaustive_pareto, CandidateMetrics, EvalScratch, Exploration, ExplorationTiming,
+    PlanEvaluator,
+};
 use crate::config::{Metric, SystemConfig};
 use crate::graph::Graph;
 use crate::hw::CostCache;
@@ -24,6 +28,7 @@ struct ChainProblem<'a, 'b> {
 }
 
 impl Problem for ChainProblem<'_, '_> {
+    type Scratch = EvalScratch;
     fn num_vars(&self) -> usize {
         self.num_cuts
     }
@@ -36,9 +41,15 @@ impl Problem for ChainProblem<'_, '_> {
     fn repair(&self, vars: &mut [i64]) {
         vars.sort_unstable();
     }
-    fn evaluate(&self, vars: &[i64]) -> Eval {
-        let positions: Vec<usize> = vars.iter().map(|&v| v as usize).collect();
-        let m = self.ev.evaluate(&positions);
+    fn make_scratch(&self) -> EvalScratch {
+        EvalScratch::new()
+    }
+    fn evaluate(&self, vars: &[i64], scratch: &mut EvalScratch) -> Eval {
+        let mut positions = std::mem::take(&mut scratch.positions_buf);
+        positions.clear();
+        positions.extend(vars.iter().map(|&v| v as usize));
+        let m = self.ev.evaluate_lean(&positions, scratch);
+        scratch.positions_buf = positions;
         if m.feasible() {
             Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
         } else {
@@ -89,14 +100,15 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
     let nsga_s = t2.elapsed().as_secs_f64();
 
     // Materialize metrics for the front; dedup by *used-segment*
-    // signature (different genomes can express the same schedule).
+    // signature (different genomes can express the same schedule),
+    // fingerprinted instead of cloning owned (String, usize) keys.
     let mut candidates: Vec<CandidateMetrics> = Vec::new();
     let mut seen = std::collections::BTreeSet::new();
+    let mut scratch = EvalScratch::new();
     for s in &front {
         let positions: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
-        let m = ev.evaluate(&positions);
-        let sig = (m.label.clone(), m.partitions);
-        if seen.insert(sig) {
+        let m = ev.evaluate_in(&positions, &mut scratch);
+        if seen.insert(label_fp(&m.label, m.partitions)) {
             candidates.push(m);
         }
     }

@@ -1,0 +1,270 @@
+//! The pre-incremental DAG evaluation path, preserved as the
+//! equivalence oracle and bench baseline — the `hw::mapper::reference`
+//! pattern applied to the plan evaluator.
+//!
+//! [`DagReference::evaluate_dag`] scores a monotone layer→platform
+//! assignment exactly the way `PlanEvaluator::evaluate_dag` did before
+//! the stage-granular cost cache, the per-worker `EvalScratch` and the
+//! lean GA path existed: it materializes a full
+//! [`DagPartition`] per genome, walks every stage's latency/energy
+//! members afresh, memoizes stage memory behind one global
+//! `Mutex<HashMap>` with owned `Vec<usize>` keys (the get/insert
+//! double-lock round trip included), and allocates every intermediate
+//! vector per call. It shares nothing with the incremental path except
+//! the chain evaluator (chain-expressible partitions delegate, exactly
+//! as before) and the constraint filter.
+//!
+//! Its purpose is twofold:
+//! * **oracle** — `tests/dag_equivalence.rs::incremental_dag_eval_bit_identical`
+//!   asserts the incremental evaluator reproduces this path bit for bit
+//!   across the model zoo;
+//! * **baseline** — `benches/dag_explore.rs` measures genomes/second
+//!   against it (acceptance: ≥ 3× at identical fronts).
+
+use super::{CandidateMetrics, PlanEdge, PlanEvaluator, StagePlan};
+use crate::accuracy;
+use crate::graph::partition::DagPartition;
+use crate::memory;
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+/// Reference (pre-cache) DAG evaluator over an existing
+/// [`PlanEvaluator`]'s cost substrate. See the module docs.
+pub struct DagReference<'a, 'b> {
+    ev: &'a PlanEvaluator<'b>,
+    /// The old global memo: Definition-3 memory of a stage's (sorted)
+    /// member-position set at a bit width, behind a single mutex with
+    /// owned `Vec` keys.
+    dag_mem_memo: Mutex<HashMap<(Vec<usize>, u32), u64>>,
+}
+
+impl<'a, 'b> DagReference<'a, 'b> {
+    /// Wrap an evaluator; the reference keeps its own (old-style) memo.
+    pub fn new(ev: &'a PlanEvaluator<'b>) -> Self {
+        Self { ev, dag_mem_memo: Mutex::new(HashMap::new()) }
+    }
+
+    /// The pre-incremental `evaluate_dag`, verbatim: same model, same
+    /// floating-point op order, allocation- and lock-heavy. See
+    /// [`PlanEvaluator::evaluate_dag`] for the model semantics.
+    pub fn evaluate_dag(&self, assign: &[usize]) -> CandidateMetrics {
+        let ev = self.ev;
+        let k = ev.sys.platforms.len();
+        // The sensor input lives on platform 0 in the physical model; an
+        // assignment starting elsewhere would get the raw-input transfer
+        // for free and score optimistically vs. the chain's all-on-B.
+        assert_eq!(
+            assign.first().copied().unwrap_or(0),
+            0,
+            "the graph input must be assigned to platform 0 (run repair_monotone)"
+        );
+        let dp = DagPartition::from_assignment(ev.g, assign, k)
+            .unwrap_or_else(|e| panic!("invalid DAG assignment: {e}"));
+        if let Some(positions) = dp.as_chain_positions(&ev.order, k) {
+            return ev.evaluate(&positions);
+        }
+        let ns = dp.stages.len();
+        let link = &ev.sys.link;
+        let mut violations: Vec<String> = Vec::new();
+        let mut violation = 0.0f64;
+        let mut memory_bytes = vec![0u64; k];
+        let mut rates: Vec<f64> = Vec::new();
+        let mut stage_lat = vec![0.0f64; ns];
+        let mut stage_en = vec![0.0f64; ns];
+        for (si, st) in dp.stages.iter().enumerate() {
+            let pf = &ev.prefix[st.platform];
+            let (mut lat, mut en) = (0.0f64, 0.0f64);
+            for &m in &st.members {
+                let p = ev.pos[m.0];
+                lat += pf[p + 1].latency_s - pf[p].latency_s;
+                en += pf[p + 1].energy_j - pf[p].energy_j;
+            }
+            stage_lat[si] = lat;
+            stage_en[si] = en;
+            if lat > 0.0 {
+                rates.push(1.0 / lat);
+            }
+            let bits = ev.sys.platforms[st.platform].accelerator.bits;
+            let mut mpos: Vec<usize> = st.members.iter().map(|m| ev.pos[m.0]).collect();
+            mpos.sort_unstable();
+            let key = (mpos, bits);
+            let memoized = self.dag_mem_memo.lock().unwrap().get(&key).copied();
+            let m = match memoized {
+                Some(m) => m,
+                None => {
+                    let m = memory::subset_memory_bytes(ev.g, &ev.order, &key.0, bits);
+                    self.dag_mem_memo.lock().unwrap().insert(key, m);
+                    m
+                }
+            };
+            memory_bytes[st.platform] = m;
+            let cap = ev.sys.platforms[st.platform].memory_bytes;
+            if m > cap {
+                violations.push(format!(
+                    "platform {} memory {} > {}",
+                    ev.sys.platforms[st.platform].name, m, cap
+                ));
+                violation += (m - cap) as f64 / cap as f64;
+            }
+        }
+
+        // Stage-graph link traffic (see the incremental path's docs).
+        let mut energy: f64 = stage_en.iter().sum();
+        let mut link_bytes = 0u64;
+        let mut edge_bytes = vec![0u64; dp.edges.len()];
+        let mut edge_hops = vec![0u64; dp.edges.len()];
+        let mut hop_bytes = vec![0u64; k.saturating_sub(1)];
+        let mut lossy_edges = 0usize;
+        for (ei, e) in dp.edges.iter().enumerate() {
+            let from_p = dp.stages[e.from].platform;
+            let to_p = dp.stages[e.to].platform;
+            let bits = ev.sys.platforms[from_p].accelerator.bits;
+            let (mut raw_elems, mut fm_elems) = (0u64, 0u64);
+            for &t in &e.tensors {
+                let elems = ev.g.node(t).out_shape.numel() as u64;
+                if ev.pos[t.0] >= ev.first_compute_pos {
+                    fm_elems += elems;
+                } else {
+                    raw_elems += elems;
+                }
+            }
+            let mut fm_bytes = (fm_elems * bits as u64).div_ceil(8);
+            if let Some(c) = ev.sys.compression {
+                if fm_bytes > 0 {
+                    fm_bytes = ((fm_bytes as f64 * c.ratio).ceil() as u64).max(1);
+                    lossy_edges += 1;
+                }
+            }
+            let bytes = fm_bytes + (raw_elems * bits as u64).div_ceil(8);
+            let hops = (to_p - from_p) as u64;
+            edge_bytes[ei] = bytes;
+            edge_hops[ei] = hops;
+            energy += hops as f64 * link.energy_j(bytes);
+            link_bytes += hops * bytes;
+            for h in from_p..to_p {
+                hop_bytes[h] += bytes;
+            }
+        }
+
+        // Critical path over the stage DAG.
+        let mut finish = vec![0.0f64; ns];
+        for si in 0..ns {
+            let mut start = 0.0f64;
+            for (ei, e) in dp.edges.iter().enumerate() {
+                if e.to == si {
+                    let arrive =
+                        finish[e.from] + edge_hops[ei] as f64 * link.latency_s(edge_bytes[ei]);
+                    start = start.max(arrive);
+                }
+            }
+            finish[si] = start + stage_lat[si];
+        }
+        let mut latency = finish.iter().copied().fold(0.0f64, f64::max);
+
+        // Final-output delivery to the chain's last platform.
+        let sink_platform = dp.stages.last().map(|s| s.platform).unwrap_or(0);
+        let mut tail_edge: Option<PlanEdge> = None;
+        if sink_platform < k - 1 {
+            let bits = ev.sys.platforms[sink_platform].accelerator.bits;
+            let out_elems: usize =
+                ev.g.outputs().iter().map(|&o| ev.g.node(o).out_shape.numel()).sum();
+            let bytes = (out_elems as u64 * bits as u64).div_ceil(8);
+            let hops = (k - 1 - sink_platform) as u64;
+            latency += hops as f64 * link.latency_s(bytes);
+            energy += hops as f64 * link.energy_j(bytes);
+            link_bytes += hops * bytes;
+            for h in sink_platform..k - 1 {
+                hop_bytes[h] += bytes;
+            }
+            tail_edge = Some(PlanEdge { to: None, bytes, hops });
+        }
+        for &b in &hop_bytes {
+            if b > 0 {
+                rates.push(link.throughput_ceiling(b));
+            }
+        }
+
+        let throughput = rates.iter().copied().fold(f64::INFINITY, f64::min);
+        let throughput = if throughput.is_finite() { throughput } else { 0.0 };
+
+        // Accuracy under per-stage bit widths (MAC-weighted noise).
+        let total_macs = *ev.macs_prefix.last().unwrap() as f64;
+        let mut noise = 0.0f64;
+        if total_macs > 0.0 {
+            for st in &dp.stages {
+                let macs: u64 = st.members.iter().map(|&m| ev.g.node(m).macs).sum();
+                let bits = ev.sys.platforms[st.platform].accelerator.bits;
+                noise += macs as f64 / total_macs * accuracy::noise_weight(bits);
+            }
+        }
+        let mut top1 = accuracy::top1_from_noise(&ev.model_acc, noise, ev.sys.qat);
+        if let Some(c) = ev.sys.compression {
+            top1 = (top1 - c.top1_penalty * lossy_edges as f64).max(0.0);
+        }
+
+        ev.apply_constraints(
+            latency,
+            energy,
+            top1,
+            throughput,
+            link_bytes,
+            true,
+            &mut violations,
+            &mut violation,
+        );
+
+        let computes = |st: &crate::graph::partition::DagStage| {
+            st.members.iter().any(|&m| {
+                let n = ev.g.node(m);
+                n.macs > 0 || n.ops > 0 || n.params > 0
+            })
+        };
+        let partitions = dp.stages.iter().filter(|st| computes(st)).count().max(1);
+
+        let mut plan: Vec<StagePlan> = dp
+            .stages
+            .iter()
+            .enumerate()
+            .map(|(si, st)| StagePlan {
+                platform: st.platform,
+                latency_s: stage_lat[si],
+                energy_j: stage_en[si],
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+            })
+            .collect();
+        for (ei, e) in dp.edges.iter().enumerate() {
+            plan[e.from].edges.push(PlanEdge {
+                to: Some(e.to),
+                bytes: edge_bytes[ei],
+                hops: edge_hops[ei],
+            });
+        }
+        if let (Some(tail), Some(last)) = (tail_edge, plan.last_mut()) {
+            last.edges.push(tail);
+        }
+        for p in &mut plan {
+            p.out_bytes = p.edges.iter().map(|e| e.bytes).sum();
+            p.out_hops = p.edges.iter().map(|e| e.hops).sum();
+        }
+
+        let stage_platforms: Vec<usize> = dp.stages.iter().map(|st| st.platform).collect();
+        let label = ev.dag_label_from(&dp.assign, &stage_platforms);
+        CandidateMetrics {
+            positions: Vec::new(),
+            label,
+            latency_s: latency,
+            energy_j: energy,
+            throughput,
+            top1,
+            memory_bytes,
+            link_bytes,
+            partitions,
+            plan,
+            assign: Some(dp.assign),
+            violation,
+            violations,
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! Per-worker evaluation scratch: every buffer the candidate-evaluation
+//! hot paths need, allocated once per worker thread and reused across
+//! genomes (the `hw::mapper` `MapperCtx` pattern lifted to the plan
+//! evaluator). Threaded through
+//! [`crate::util::parallel::par_map_with`] by the explorers and by
+//! NSGA-II's batch evaluator ([`crate::nsga2::Problem::make_scratch`]),
+//! so steady-state genome scoring performs no heap allocation: vectors
+//! only grow to the high-water mark of (platforms, layers, stage
+//! edges) and are cleared — never dropped — between evaluations.
+//!
+//! The scratch carries no results: evaluation stays a pure function of
+//! the genome, and a fresh scratch produces bit-identical metrics to a
+//! reused one (property-tested via the `--jobs` identity suites).
+
+use super::StagePlan;
+use crate::graph::NodeId;
+use std::ops::Range;
+
+/// Pooled stage-graph edge under construction (crossing tensors are
+/// deduplicated in place; the `tensors` vector keeps its capacity
+/// across evaluations).
+#[derive(Debug, Default)]
+pub(crate) struct EdgeBuf {
+    pub(crate) from: usize,
+    pub(crate) to: usize,
+    pub(crate) tensors: Vec<NodeId>,
+}
+
+/// Reusable buffers for one evaluation worker; see the module docs.
+/// Obtain one per worker (`EvalScratch::new()`) and pass it to the
+/// `*_in`/`*_lean` evaluation entry points of
+/// [`super::PlanEvaluator`].
+#[derive(Debug, Default)]
+pub struct EvalScratch {
+    // ---- chain path ----
+    pub(crate) segs: Vec<Range<usize>>,
+    pub(crate) seg_latency: Vec<f64>,
+    pub(crate) seg_energy: Vec<f64>,
+    pub(crate) used: Vec<usize>,
+    pub(crate) seg_bits: Vec<(Range<usize>, u32)>,
+    // ---- shared ----
+    pub(crate) rates: Vec<f64>,
+    pub(crate) memory_bytes: Vec<u64>,
+    pub(crate) violations: Vec<String>,
+    pub(crate) plan: Vec<StagePlan>,
+    pub(crate) plan_len: usize,
+    /// Genome-decode buffer for chain cut-position problems.
+    pub(crate) positions_buf: Vec<usize>,
+    // ---- DAG path ----
+    /// Genome-decode buffer for layer→platform assignment problems.
+    pub(crate) assign_buf: Vec<usize>,
+    pub(crate) chain_bounds: Vec<(usize, usize, usize)>,
+    pub(crate) chain_positions: Vec<usize>,
+    pub(crate) stage_platform: Vec<usize>,
+    pub(crate) stage_members: Vec<Vec<NodeId>>,
+    pub(crate) stages_len: usize,
+    /// Platform index → stage index (`usize::MAX` = idle platform).
+    pub(crate) stage_of: Vec<usize>,
+    pub(crate) mpos: Vec<usize>,
+    pub(crate) stage_lat: Vec<f64>,
+    pub(crate) stage_en: Vec<f64>,
+    pub(crate) stage_macs: Vec<u64>,
+    /// `from_stage * num_stages + to_stage` → pooled edge index.
+    pub(crate) edge_slot: Vec<usize>,
+    pub(crate) edges: Vec<EdgeBuf>,
+    pub(crate) edges_len: usize,
+    /// Edge indices in ascending `(from, to)` order.
+    pub(crate) edge_order: Vec<usize>,
+    pub(crate) edge_bytes: Vec<u64>,
+    pub(crate) edge_hops: Vec<u64>,
+    pub(crate) hop_bytes: Vec<u64>,
+    pub(crate) finish: Vec<f64>,
+}
+
+impl EvalScratch {
+    /// Fresh scratch (all buffers empty; they grow on first use and are
+    /// reused thereafter).
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Begin a new stage slot for `platform`, reusing a pooled member
+    /// vector; returns the stage index.
+    pub(crate) fn push_stage(&mut self, platform: usize) -> usize {
+        if self.stages_len == self.stage_members.len() {
+            self.stage_members.push(Vec::new());
+            self.stage_platform.push(0);
+        }
+        self.stage_members[self.stages_len].clear();
+        self.stage_platform[self.stages_len] = platform;
+        self.stages_len += 1;
+        self.stages_len - 1
+    }
+
+    /// Begin a new stage-graph edge slot, reusing a pooled tensor
+    /// vector; returns the edge index.
+    pub(crate) fn push_edge(&mut self, from: usize, to: usize) -> usize {
+        if self.edges_len == self.edges.len() {
+            self.edges.push(EdgeBuf::default());
+        }
+        let e = &mut self.edges[self.edges_len];
+        e.from = from;
+        e.to = to;
+        e.tensors.clear();
+        self.edges_len += 1;
+        self.edges_len - 1
+    }
+
+    /// Begin a new runtime-plan stage slot, reusing its pooled edge
+    /// vector; returns the plan index.
+    pub(crate) fn push_plan_stage(
+        &mut self,
+        platform: usize,
+        latency_s: f64,
+        energy_j: f64,
+    ) -> usize {
+        if self.plan_len == self.plan.len() {
+            self.plan.push(StagePlan {
+                platform: 0,
+                latency_s: 0.0,
+                energy_j: 0.0,
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+            });
+        }
+        let s = &mut self.plan[self.plan_len];
+        s.platform = platform;
+        s.latency_s = latency_s;
+        s.energy_j = energy_j;
+        s.out_bytes = 0;
+        s.out_hops = 0;
+        s.edges.clear();
+        self.plan_len += 1;
+        self.plan_len - 1
+    }
+}

@@ -1,0 +1,188 @@
+//! Sharded stage-granular cost cache for the DAG evaluation hot path.
+//!
+//! NSGA-II over per-layer platform genomes mutates ~2 genes per child,
+//! so the stage sets it evaluates repeat massively across a run: the
+//! per-stage latency/energy/MACs/memory of a (member set, platform, bit
+//! width) triple is a pure function worth caching once and reading
+//! forever. Entries are keyed by a stable FNV-1a fingerprint
+//! ([`crate::util::hash::Fnv64`]) of the sorted member schedule
+//! positions plus the platform id and bit width, and stored in
+//! N-striped [`RwLock`] shards (the [`crate::hw::CostCache`] sharding,
+//! with read-locks on the lookup path): concurrent NSGA-II workers take
+//! shared read locks on hits — the steady state — and only a miss pays
+//! a short exclusive insert. This replaces the former pair of global
+//! `Mutex<HashMap>` memos (`mem_memo`/`dag_mem_memo`) whose
+//! heap-allocated `Vec<usize>` keys and exclusive locks serialized the
+//! `par_map` workers.
+//!
+//! A fingerprint collision would silently alias two stages; with 64-bit
+//! FNV over at most a few hundred thousand distinct stages per run the
+//! probability is ~n²/2⁶⁵ — the same vanishing-collision argument the
+//! explorer already relies on for candidate-label digests.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::RwLock;
+
+const SHARDS: usize = 16;
+
+/// Cached per-stage costs: everything `evaluate_dag` derives from a
+/// stage's member set on a given platform. Chain-segment memory entries
+/// reuse the same cache with only `memory_bytes` meaningful (their
+/// latency/energy come from O(1) prefix sums instead).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    /// Sequential compute latency of the stage's members (s).
+    pub latency_s: f64,
+    /// Compute energy of the stage's members (J).
+    pub energy_j: f64,
+    /// Total MACs of the stage's members (accuracy weighting).
+    pub macs: u64,
+    /// Definition-3 memory demand of the member set (bytes).
+    pub memory_bytes: u64,
+}
+
+/// Sharded read-mostly stage-cost cache; see the module docs. `Sync`:
+/// one instance per [`super::PlanEvaluator`] is shared by every worker
+/// evaluating candidates against it.
+pub struct StageCache {
+    shards: Vec<RwLock<HashMap<u64, StageCost>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl StageCache {
+    /// Empty cache.
+    pub fn new() -> Self {
+        Self {
+            shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, fp: u64) -> &RwLock<HashMap<u64, StageCost>> {
+        &self.shards[fp as usize % SHARDS]
+    }
+
+    /// Look up a fingerprint (shared read lock; counts hit/miss).
+    pub fn get(&self, fp: u64) -> Option<StageCost> {
+        let found = self.shard(fp).read().unwrap().get(&fp).copied();
+        match found {
+            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
+            None => self.misses.fetch_add(1, Ordering::Relaxed),
+        };
+        found
+    }
+
+    /// Insert a fingerprint's cost (exclusive lock, one probe).
+    pub fn insert(&self, fp: u64, cost: StageCost) {
+        self.shard(fp).write().unwrap().insert(fp, cost);
+    }
+
+    /// The single entry-or-compute path: return the cached cost or run
+    /// `compute` outside any lock and publish the result. Two workers
+    /// racing on the same miss both compute — the evaluators are
+    /// deterministic, so both insert the identical value and the cache
+    /// content (and every read) is the same either way.
+    pub fn get_or_compute(&self, fp: u64, compute: impl FnOnce() -> StageCost) -> StageCost {
+        if let Some(c) = self.get(fp) {
+            return c;
+        }
+        let c = compute();
+        self.insert(fp, c);
+        c
+    }
+
+    /// Number of distinct cached stages.
+    pub fn len(&self) -> usize {
+        self.shards.iter().map(|s| s.read().unwrap().len()).sum()
+    }
+
+    /// True when nothing is cached.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Lookups answered from the cache so far.
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    /// Lookups that found nothing (each triggers one stage evaluation).
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Drop every entry and reset the counters (benches use this to
+    /// measure cold-cache runs against a warm evaluator).
+    pub fn clear(&self) {
+        for s in &self.shards {
+            s.write().unwrap().clear();
+        }
+        self.hits.store(0, Ordering::Relaxed);
+        self.misses.store(0, Ordering::Relaxed);
+    }
+}
+
+impl Default for StageCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_compute_hit_roundtrip() {
+        let c = StageCache::new();
+        let cost = StageCost { latency_s: 1.5, energy_j: 2.5, macs: 7, memory_bytes: 64 };
+        let got = c.get_or_compute(42, || cost);
+        assert_eq!(got, cost);
+        assert_eq!((c.hits(), c.misses(), c.len()), (0, 1, 1));
+        // Second lookup never recomputes.
+        let again = c.get_or_compute(42, || panic!("must hit"));
+        assert_eq!(again, cost);
+        assert_eq!((c.hits(), c.misses()), (1, 1));
+    }
+
+    #[test]
+    fn clear_resets_entries_and_counters() {
+        let c = StageCache::new();
+        for fp in 0..100u64 {
+            c.insert(fp, StageCost { latency_s: 0.0, energy_j: 0.0, macs: 0, memory_bytes: fp });
+        }
+        assert_eq!(c.len(), 100);
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!((c.hits(), c.misses()), (0, 0));
+        assert!(c.get(3).is_none());
+    }
+
+    #[test]
+    fn concurrent_readers_agree() {
+        let c = StageCache::new();
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                let c = &c;
+                s.spawn(move || {
+                    for i in 0..256u64 {
+                        let fp = (i * 31 + t) % 64;
+                        let got = c.get_or_compute(fp, || StageCost {
+                            latency_s: fp as f64,
+                            energy_j: 0.0,
+                            macs: fp,
+                            memory_bytes: fp * 2,
+                        });
+                        // Racing double-computes insert identical values.
+                        assert_eq!(got.macs, fp);
+                        assert_eq!(got.memory_bytes, fp * 2);
+                    }
+                });
+            }
+        });
+        assert_eq!(c.len(), 64);
+    }
+}

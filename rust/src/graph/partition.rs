@@ -370,43 +370,69 @@ impl DagPartition {
         num_platforms: usize,
     ) -> Option<Vec<usize>> {
         let pos = super::topo::positions(order, self.assign.len());
-        let mut bounds: Vec<Option<(usize, usize, usize)>> = vec![None; num_platforms];
-        for st in &self.stages {
-            let (mut mn, mut mx) = (usize::MAX, 0usize);
-            for &m in &st.members {
-                mn = mn.min(pos[m.0]);
-                mx = mx.max(pos[m.0]);
-            }
-            bounds[st.platform] = Some((mn, mx, st.members.len()));
+        let mut bounds = Vec::new();
+        let mut positions = Vec::new();
+        let ok = assignment_chain_positions_into(
+            &self.assign,
+            &pos,
+            num_platforms,
+            &mut bounds,
+            &mut positions,
+        );
+        if ok {
+            Some(positions)
+        } else {
+            None
         }
-        let mut prev = 0usize;
-        let mut positions = Vec::with_capacity(num_platforms.saturating_sub(1));
-        for (j, b) in bounds.iter().enumerate() {
-            match *b {
-                Some((mn, mx, cnt)) => {
-                    if mx - mn + 1 != cnt || mn != prev {
-                        return None; // holes, or out of platform order
-                    }
-                    prev = mx + 1;
-                    if j + 1 < num_platforms {
-                        positions.push(mx);
-                    }
-                }
-                None => {
-                    if prev == 0 {
-                        return None; // platform 0 idle: the chain cannot express it
-                    }
-                    if j + 1 < num_platforms {
-                        positions.push(prev - 1);
-                    }
-                }
-            }
-        }
-        if prev != order.len() {
-            return None;
-        }
-        Some(positions)
     }
+}
+
+/// Allocation-free core of [`DagPartition::as_chain_positions`],
+/// operating directly on a per-layer platform assignment: fills `out`
+/// with the equivalent chain cut-position vector and returns `true` iff
+/// every platform's layer set is a contiguous schedule range and the
+/// ranges tile the schedule in platform order. `pos` maps node ids to
+/// schedule positions; `bounds` is a reusable caller-owned buffer (its
+/// contents are overwritten). The explorer's hot evaluation path calls
+/// this once per genome with buffers from its `EvalScratch`.
+pub fn assignment_chain_positions_into(
+    assign: &[usize],
+    pos: &[usize],
+    num_platforms: usize,
+    bounds: &mut Vec<(usize, usize, usize)>,
+    out: &mut Vec<usize>,
+) -> bool {
+    // Per-platform (min position, max position, member count);
+    // (usize::MAX, 0, 0) marks an idle platform.
+    bounds.clear();
+    bounds.resize(num_platforms, (usize::MAX, 0usize, 0usize));
+    for (id, &p) in assign.iter().enumerate() {
+        let b = &mut bounds[p];
+        b.0 = b.0.min(pos[id]);
+        b.1 = b.1.max(pos[id]);
+        b.2 += 1;
+    }
+    let mut prev = 0usize;
+    out.clear();
+    for (j, &(mn, mx, cnt)) in bounds.iter().enumerate() {
+        if cnt > 0 {
+            if mx - mn + 1 != cnt || mn != prev {
+                return false; // holes, or out of platform order
+            }
+            prev = mx + 1;
+            if j + 1 < num_platforms {
+                out.push(mx);
+            }
+        } else {
+            if prev == 0 {
+                return false; // platform 0 idle: the chain cannot express it
+            }
+            if j + 1 < num_platforms {
+                out.push(prev - 1);
+            }
+        }
+    }
+    prev == assign.len()
 }
 
 /// Enumerate two-platform DAG cuts: every monotone 0/1 assignment with

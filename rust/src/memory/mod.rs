@@ -138,17 +138,33 @@ pub fn segment_memory_bytes(g: &Graph, order: &[NodeId], range: Range<usize>, bi
 /// branch-free graphs no pass-through tensors exist and the two walks
 /// agree exactly (property-tested).
 pub fn subset_peak_activation_elems(g: &Graph, order: &[NodeId], members: &[usize]) -> u64 {
+    let pos = topo::positions(order, g.len());
+    let succ = g.successors();
+    let outputs = g.outputs();
+    subset_peak_activation_elems_with(g, order, &pos, &succ, &outputs, members)
+}
+
+/// [`subset_peak_activation_elems`] against precomputed graph analyses
+/// (`pos` = schedule positions, `succ` = successor lists, `outputs` =
+/// graph outputs). The explorer's stage-cost cache computes these once
+/// per evaluator instead of re-deriving them on every cache miss; the
+/// returned value is identical to the convenience wrapper's.
+pub fn subset_peak_activation_elems_with(
+    g: &Graph,
+    order: &[NodeId],
+    pos: &[usize],
+    succ: &[Vec<NodeId>],
+    outputs: &[NodeId],
+    members: &[usize],
+) -> u64 {
     if members.is_empty() {
         return 0;
     }
     debug_assert!(members.windows(2).all(|w| w[0] < w[1]), "members must be sorted unique");
-    let pos = topo::positions(order, g.len());
     let mut in_set = vec![false; g.len()];
     for &p in members {
         in_set[p] = true;
     }
-    let succ = g.successors();
-    let outputs = g.outputs();
 
     // Last member position consuming each tensor; NEVER = held for
     // egress (member-produced, consumed outside or a graph output).
@@ -207,6 +223,22 @@ pub fn subset_peak_activation_elems(g: &Graph, order: &[NodeId], members: &[usiz
 pub fn subset_memory_bytes(g: &Graph, order: &[NodeId], members: &[usize], bits: u32) -> u64 {
     let params: u64 = members.iter().map(|&p| g.node(order[p]).params).sum();
     let act = subset_peak_activation_elems(g, order, members);
+    elem_bytes(params + act, bits)
+}
+
+/// [`subset_memory_bytes`] against precomputed graph analyses (see
+/// [`subset_peak_activation_elems_with`]); bit-identical result.
+pub fn subset_memory_bytes_with(
+    g: &Graph,
+    order: &[NodeId],
+    pos: &[usize],
+    succ: &[Vec<NodeId>],
+    outputs: &[NodeId],
+    members: &[usize],
+    bits: u32,
+) -> u64 {
+    let params: u64 = members.iter().map(|&p| g.node(order[p]).params).sum();
+    let act = subset_peak_activation_elems_with(g, order, pos, succ, outputs, members);
     elem_bytes(params + act, bits)
 }
 

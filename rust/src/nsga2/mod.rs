@@ -18,7 +18,7 @@
 //! the evolution — and therefore the final front — is bit-identical for
 //! every worker count.
 
-use crate::util::parallel::par_map;
+use crate::util::parallel::par_map_with_pool;
 use crate::util::rng::Pcg32;
 use std::collections::{HashMap, HashSet};
 
@@ -50,13 +50,27 @@ impl Eval {
 
 /// Problem definition over integer decision variables.
 pub trait Problem {
+    /// Per-worker reusable evaluation state: [`optimize_par`] creates
+    /// one per worker via [`Self::make_scratch`], pools them across
+    /// generations, and threads one through every evaluation a worker
+    /// performs — so problems with expensive intermediate buffers (the
+    /// explorer's `EvalScratch`) evaluate allocation-free in steady
+    /// state over the whole run. Stateless problems use `()`. The
+    /// scratch must never influence results: `evaluate` stays a pure
+    /// function of the genome, and the run is bit-identical for every
+    /// worker count. `Send`: worker states cross into scoped threads.
+    type Scratch: Send;
     fn num_vars(&self) -> usize;
     fn num_objectives(&self) -> usize;
     /// Inclusive bounds for variable `i`.
     fn bounds(&self, i: usize) -> (i64, i64);
     /// Normalize a genome in place (e.g. sort partition points).
     fn repair(&self, _vars: &mut [i64]) {}
-    fn evaluate(&self, vars: &[i64]) -> Eval;
+    /// Fresh per-worker scratch state.
+    fn make_scratch(&self) -> Self::Scratch;
+    /// Score a (repaired) genome; pure in `vars`, free to use `scratch`
+    /// as reusable working memory.
+    fn evaluate(&self, vars: &[i64], scratch: &mut Self::Scratch) -> Eval;
 }
 
 /// Algorithm configuration.
@@ -316,11 +330,15 @@ fn rank_population(pop: &mut Vec<Individual>, keep: usize) {
 /// genome is evaluated exactly once per `optimize` call — duplicates
 /// within a batch and across generations are free. Results are
 /// bit-identical to evaluating every genome afresh.
+///
+/// `pool` holds the per-worker scratches, grown on demand and reused
+/// across generations (worker `w` always gets `pool[w]`).
 fn evaluate_batch<P: Problem + Sync>(
     problem: &P,
     genomes: Vec<Vec<i64>>,
     jobs: usize,
     memo: &mut HashMap<Vec<i64>, Eval>,
+    pool: &mut Vec<P::Scratch>,
 ) -> Vec<Individual> {
     // Unique unseen genomes, in first-appearance order (deterministic).
     let mut need: Vec<Vec<i64>> = Vec::new();
@@ -331,7 +349,12 @@ fn evaluate_batch<P: Problem + Sync>(
         }
     }
     drop(queued);
-    let fresh = par_map(jobs, &need, |vars| problem.evaluate(vars));
+    let workers = jobs.max(1).min(need.len().max(1));
+    while pool.len() < workers {
+        pool.push(problem.make_scratch());
+    }
+    let fresh =
+        par_map_with_pool(jobs, &need, pool, |scratch, vars| problem.evaluate(vars, scratch));
     for (vars, eval) in need.into_iter().zip(fresh) {
         memo.insert(vars, eval);
     }
@@ -358,9 +381,10 @@ pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize)
     assert!(cfg.population >= 4, "population too small");
     let mut rng = Pcg32::new(cfg.seed, 0x6e73_6761); // "nsga"
     let mut memo: HashMap<Vec<i64>, Eval> = HashMap::new();
+    let mut pool: Vec<P::Scratch> = Vec::new();
     let genomes: Vec<Vec<i64>> =
         (0..cfg.population).map(|_| random_genome(problem, &mut rng)).collect();
-    let mut pop = evaluate_batch(problem, genomes, jobs, &mut memo);
+    let mut pop = evaluate_batch(problem, genomes, jobs, &mut memo, &mut pool);
     rank_population(&mut pop, cfg.population);
 
     for _ in 0..cfg.generations {
@@ -370,7 +394,7 @@ pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize)
             let b = tournament(&pop, &mut rng);
             children.push(make_child(problem, &a.vars, &b.vars, cfg, &mut rng));
         }
-        let offspring = evaluate_batch(problem, children, jobs, &mut memo);
+        let offspring = evaluate_batch(problem, children, jobs, &mut memo, &mut pool);
         pop.extend(offspring);
         rank_population(&mut pop, cfg.population);
     }
@@ -395,6 +419,7 @@ mod tests {
     struct Schaffer;
 
     impl Problem for Schaffer {
+        type Scratch = ();
         fn num_vars(&self) -> usize {
             1
         }
@@ -404,7 +429,8 @@ mod tests {
         fn bounds(&self, _: usize) -> (i64, i64) {
             (-1000, 1000)
         }
-        fn evaluate(&self, v: &[i64]) -> Eval {
+        fn make_scratch(&self) {}
+        fn evaluate(&self, v: &[i64], _: &mut ()) -> Eval {
             let x = v[0] as f64 / 100.0;
             Eval::feasible(vec![x * x, (x - 2.0) * (x - 2.0)])
         }
@@ -428,6 +454,7 @@ mod tests {
     struct Constrained;
 
     impl Problem for Constrained {
+        type Scratch = ();
         fn num_vars(&self) -> usize {
             1
         }
@@ -437,7 +464,8 @@ mod tests {
         fn bounds(&self, _: usize) -> (i64, i64) {
             (0, 1000)
         }
-        fn evaluate(&self, v: &[i64]) -> Eval {
+        fn make_scratch(&self) {}
+        fn evaluate(&self, v: &[i64], _: &mut ()) -> Eval {
             if v[0] >= 300 {
                 return Eval::infeasible(2, (v[0] - 299) as f64);
             }
@@ -543,6 +571,7 @@ mod tests {
         // and the memo must collapse them to one evaluation each.
         struct Counted(AtomicUsize);
         impl Problem for Counted {
+            type Scratch = ();
             fn num_vars(&self) -> usize {
                 1
             }
@@ -552,7 +581,8 @@ mod tests {
             fn bounds(&self, _: usize) -> (i64, i64) {
                 (0, 9)
             }
-            fn evaluate(&self, v: &[i64]) -> Eval {
+            fn make_scratch(&self) {}
+            fn evaluate(&self, v: &[i64], _: &mut ()) -> Eval {
                 self.0.fetch_add(1, Ordering::Relaxed);
                 let x = v[0] as f64;
                 Eval::feasible(vec![x, 9.0 - x])
@@ -630,6 +660,7 @@ mod tests {
     fn repair_is_applied() {
         struct Sorted;
         impl Problem for Sorted {
+            type Scratch = ();
             fn num_vars(&self) -> usize {
                 3
             }
@@ -642,7 +673,8 @@ mod tests {
             fn repair(&self, v: &mut [i64]) {
                 v.sort_unstable();
             }
-            fn evaluate(&self, v: &[i64]) -> Eval {
+            fn make_scratch(&self) {}
+            fn evaluate(&self, v: &[i64], _: &mut ()) -> Eval {
                 assert!(v.windows(2).all(|w| w[0] <= w[1]), "repair not applied");
                 Eval::feasible(vec![v[0] as f64, -(v[2] as f64)])
             }

@@ -31,21 +31,84 @@ where
     O: Send,
     F: Fn(&I) -> O + Sync,
 {
+    par_map_with(jobs, items, || (), |(), item| f(item))
+}
+
+/// [`par_map`] with per-worker reusable state: every worker thread calls
+/// `init()` exactly once and threads the result through each of its
+/// items — the hook the explorer uses to hand each worker its own
+/// `EvalScratch` so steady-state candidate evaluation performs no heap
+/// allocation. The state must not influence results (`f` stays a pure
+/// function of the item); output order and content are identical for
+/// every worker count.
+pub fn par_map_with<I, O, S, N, F>(jobs: usize, items: &[I], init: N, f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    N: Fn() -> S + Sync,
+    F: Fn(&mut S, &I) -> O + Sync,
+{
     let jobs = jobs.max(1).min(items.len().max(1));
     if jobs <= 1 || items.len() <= 1 {
-        return items.iter().map(&f).collect();
+        let mut state = init();
+        return items.iter().map(|item| f(&mut state, item)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<O>>> = items.iter().map(|_| Mutex::new(None)).collect();
+    let (f, init, cursor, slots) = (&f, &init, &cursor, &slots);
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(move || {
+                let mut state = init();
+                loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= items.len() {
+                        break;
+                    }
+                    let out = f(&mut state, &items[i]);
+                    *slots[i].lock().unwrap() = Some(out);
+                }
+            });
+        }
+    });
+    slots
+        .iter()
+        .map(|slot| slot.lock().unwrap().take().expect("scope joined all workers"))
+        .collect()
+}
+
+/// [`par_map_with`] over *caller-owned* worker states: worker `w`
+/// borrows `states[w]` for the duration of the call, so the states —
+/// and the buffer capacity they accumulated — survive across calls.
+/// This is how NSGA-II reuses each worker's `EvalScratch` across
+/// generations instead of re-allocating it per batch. `states` must
+/// hold at least the effective worker count
+/// (`jobs.max(1).min(items.len().max(1))`); as everywhere in this
+/// module, states must not influence results.
+pub fn par_map_with_pool<I, O, S, F>(jobs: usize, items: &[I], states: &mut [S], f: F) -> Vec<O>
+where
+    I: Sync,
+    O: Send,
+    S: Send,
+    F: Fn(&mut S, &I) -> O + Sync,
+{
+    let jobs = jobs.max(1).min(items.len().max(1));
+    assert!(states.len() >= jobs, "need one state per worker ({} < {jobs})", states.len());
+    if jobs <= 1 || items.len() <= 1 {
+        let state = &mut states[0];
+        return items.iter().map(|item| f(state, item)).collect();
     }
     let cursor = AtomicUsize::new(0);
     let slots: Vec<Mutex<Option<O>>> = items.iter().map(|_| Mutex::new(None)).collect();
     let (f, cursor, slots) = (&f, &cursor, &slots);
     std::thread::scope(|scope| {
-        for _ in 0..jobs {
+        for state in states.iter_mut().take(jobs) {
             scope.spawn(move || loop {
                 let i = cursor.fetch_add(1, Ordering::Relaxed);
                 if i >= items.len() {
                     break;
                 }
-                let out = f(&items[i]);
+                let out = f(state, &items[i]);
                 *slots[i].lock().unwrap() = Some(out);
             });
         }
@@ -96,5 +159,66 @@ mod tests {
     #[test]
     fn default_jobs_is_positive() {
         assert!(default_jobs() >= 1);
+    }
+
+    #[test]
+    fn per_worker_state_is_reused_not_shared() {
+        // Each worker's state counts the items it processed; totals must
+        // cover every item exactly once, and the state must never leak
+        // into the (pure) outputs.
+        let items: Vec<usize> = (0..200).collect();
+        for jobs in [1usize, 3, 8] {
+            let out = par_map_with(
+                jobs,
+                &items,
+                || 0usize,
+                |seen, &x| {
+                    *seen += 1;
+                    x * 3
+                },
+            );
+            assert_eq!(out, items.iter().map(|&x| x * 3).collect::<Vec<_>>(), "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn pooled_states_survive_across_calls() {
+        // The pool variant keeps caller-owned state (and its buffer
+        // capacity) alive across par_map_with_pool invocations.
+        let items: Vec<usize> = (0..40).collect();
+        let mut pool: Vec<Vec<usize>> = (0..4).map(|_| Vec::new()).collect();
+        for round in 0..3 {
+            let out = par_map_with_pool(4, &items, &mut pool, |buf, &x| {
+                buf.clear();
+                buf.extend(0..x % 5);
+                buf.len() + round
+            });
+            assert_eq!(
+                out,
+                items.iter().map(|&x| x % 5 + round).collect::<Vec<_>>(),
+                "round={round}"
+            );
+        }
+        // Serial degenerate path uses states[0] without panicking.
+        let single = par_map_with_pool(1, &items, &mut pool, |_, &x| x);
+        assert_eq!(single, items);
+    }
+
+    #[test]
+    fn state_buffers_survive_across_items() {
+        // A scratch Vec grown on the first item keeps its capacity for
+        // later items on the same worker (the allocation-free pattern).
+        let items: Vec<usize> = (0..64).collect();
+        let out = par_map_with(
+            2,
+            &items,
+            Vec::<usize>::new,
+            |buf, &x| {
+                buf.clear();
+                buf.extend(0..x % 7);
+                buf.len()
+            },
+        );
+        assert_eq!(out, items.iter().map(|&x| x % 7).collect::<Vec<_>>());
     }
 }

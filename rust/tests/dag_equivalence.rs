@@ -13,10 +13,18 @@
 //!    to the chain front (it is a superset).
 
 use partir::config::SystemConfig;
-use partir::explorer::{explore_dag, explore_two_platform, PlanEvaluator};
+use partir::explorer::reference::DagReference;
+use partir::explorer::{
+    exhaustive_pareto, explore_dag, explore_dag_cached, explore_two_platform, sweep_dag_front,
+    CandidateMetrics, EvalScratch, PlanEvaluator,
+};
+use partir::graph::partition::{dag_cuts, repair_monotone};
 use partir::graph::Graph;
+use partir::hw::CostCache;
 use partir::sim::{self, Deployment, Scenario, SimCfg};
+use partir::util::rng::Pcg32;
 use partir::zoo;
+use std::sync::Arc;
 
 fn quick_sys() -> SystemConfig {
     let mut sys = SystemConfig::paper_two_platform();
@@ -132,6 +140,110 @@ fn googlenet_supports_branch_parallel_plans_end_to_end() {
     assert_eq!(a.fingerprint(), b.fingerprint(), "branch-parallel sim not deterministic");
     assert_eq!(a.pipeline.completions.len(), 20_000);
     assert!(a.throughput() > 0.0);
+}
+
+fn assert_candidates_bit_identical(a: &CandidateMetrics, b: &CandidateMetrics, what: &str) {
+    assert_eq!(a.label, b.label, "{what}");
+    assert_eq!(a.positions, b.positions, "{what}: {}", a.label);
+    assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: {}", a.label);
+    assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{what}: {}", a.label);
+    assert_eq!(a.throughput.to_bits(), b.throughput.to_bits(), "{what}: {}", a.label);
+    assert_eq!(a.top1.to_bits(), b.top1.to_bits(), "{what}: {}", a.label);
+    assert_eq!(a.memory_bytes, b.memory_bytes, "{what}: {}", a.label);
+    assert_eq!(a.link_bytes, b.link_bytes, "{what}: {}", a.label);
+    assert_eq!(a.partitions, b.partitions, "{what}: {}", a.label);
+    assert_eq!(a.plan, b.plan, "{what}: {}", a.label);
+    assert_eq!(a.assign, b.assign, "{what}: {}", a.label);
+    assert_eq!(a.violation.to_bits(), b.violation.to_bits(), "{what}: {}", a.label);
+    assert_eq!(a.violations, b.violations, "{what}: {}", a.label);
+}
+
+/// The incremental DAG evaluator (stage-granular cost cache, reused
+/// `EvalScratch`, bound-pruned sweep) must be **bit-identical** to the
+/// preserved pre-cache reference path — per candidate and per Pareto
+/// front — for every zoo model under both system presets, and the full
+/// DAG exploration must be identical across `--jobs 1` vs `--jobs N`.
+/// (CI greps that this test runs.)
+#[test]
+fn incremental_dag_eval_bit_identical() {
+    for name in zoo::PAPER_MODELS.iter().copied().chain(["tiny_cnn"]) {
+        let g = zoo::build(name).unwrap();
+        // One shared layer-cost cache per model: both presets use the
+        // same accelerators, so the mapper runs once per layer shape.
+        let cache = Arc::new(CostCache::new());
+        for (pi, mut sys) in
+            [SystemConfig::paper_two_platform(), SystemConfig::paper_four_platform()]
+                .into_iter()
+                .enumerate()
+        {
+            sys.search.victory = 10;
+            sys.search.max_samples = 100;
+            let k = sys.platforms.len();
+            let what = format!("{name}/preset{pi}");
+            let ev = PlanEvaluator::with_cache(&g, &sys, Arc::clone(&cache));
+
+            // Genome pool: enumerated two-platform convex cuts (chain
+            // prefixes on sequential models, branch splits on branchy
+            // ones) plus repaired random k-platform genomes.
+            let mut assigns = dag_cuts(&g, 48);
+            let mut rng = Pcg32::seeded(2026 + pi as u64);
+            for _ in 0..16 {
+                let mut a: Vec<usize> = (0..g.len()).map(|_| rng.gen_usize(0, k)).collect();
+                repair_monotone(&g, &mut a);
+                assigns.push(a);
+            }
+
+            // Per-candidate bit identity: reference (fresh allocations,
+            // Mutex memo) vs incremental (warm cache + reused scratch).
+            let reference = DagReference::new(&ev);
+            let mut scratch = EvalScratch::new();
+            let mut ref_cands: Vec<CandidateMetrics> = Vec::new();
+            for a in &assigns {
+                let r = reference.evaluate_dag(a);
+                let m = ev.evaluate_dag_in(a, &mut scratch);
+                assert_candidates_bit_identical(&r, &m, &what);
+                ref_cands.push(r);
+            }
+
+            // Front identity: unpruned cold runs vs the warm, pruned,
+            // scratch-reusing sweep.
+            let ref_front: Vec<CandidateMetrics> =
+                exhaustive_pareto(&ref_cands, &sys.pareto_metrics)
+                    .into_iter()
+                    .map(|i| ref_cands[i].clone())
+                    .collect();
+            ev.clear_stage_cache();
+            let (cold_front, cold_stats) = sweep_dag_front(&ev, &assigns, false);
+            let (warm_front, warm_stats) = sweep_dag_front(&ev, &assigns, true);
+            assert_eq!(cold_stats.evaluated, assigns.len(), "{what}: cold sweep must not prune");
+            assert_eq!(
+                warm_stats.evaluated + warm_stats.pruned,
+                assigns.len(),
+                "{what}: sweep lost genomes"
+            );
+            assert_eq!(ref_front.len(), cold_front.len(), "{what}: ref vs cold front size");
+            assert_eq!(cold_front.len(), warm_front.len(), "{what}: cold vs warm front size");
+            for ((r, c), w) in ref_front.iter().zip(&cold_front).zip(&warm_front) {
+                assert_candidates_bit_identical(r, c, &format!("{what}: ref vs cold"));
+                assert_candidates_bit_identical(c, w, &format!("{what}: cold vs warm+pruned"));
+            }
+        }
+
+        // Full DAG exploration: serial vs parallel workers, identical
+        // fronts (the cache/scratch machinery is shard-shared).
+        let mut s1 = quick_sys();
+        s1.jobs = 1;
+        let mut sn = quick_sys();
+        sn.jobs = 3;
+        let a = explore_dag_cached(&g, &s1, Arc::clone(&cache));
+        let b = explore_dag_cached(&g, &sn, Arc::clone(&cache));
+        assert_eq!(a.pareto, b.pareto, "{name}: jobs changed the Pareto front");
+        assert_eq!(a.favorite, b.favorite, "{name}: jobs changed the favorite");
+        assert_eq!(a.candidates.len(), b.candidates.len(), "{name}");
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_candidates_bit_identical(x, y, &format!("{name}: jobs 1 vs 3"));
+        }
+    }
 }
 
 #[test]

@@ -10,7 +10,7 @@
 //! beneficiary of >2 partitions).
 
 use partir::config::SystemConfig;
-use partir::explorer::multi::{explore_chain, partition_histogram};
+use partir::explorer::{multi::partition_histogram, ExploreRequest};
 use partir::report;
 use partir::zoo;
 
@@ -35,7 +35,7 @@ fn main() {
         system.pareto_metrics.iter().map(|m| m.name()).collect::<Vec<_>>(),
     );
 
-    let ex = explore_chain(&graph, &system);
+    let ex = ExploreRequest::chain().run(&graph, &system);
     print!("{}", report::render_exploration(&ex, &system));
 
     let hist = partition_histogram(&ex, system.platforms.len());

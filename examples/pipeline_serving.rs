@@ -15,7 +15,7 @@
 
 use partir::config::SystemConfig;
 use partir::coordinator::{run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec};
-use partir::explorer::explore_two_platform;
+use partir::explorer::ExploreRequest;
 use partir::runtime::Manifest;
 use partir::zoo;
 use std::path::PathBuf;
@@ -32,7 +32,7 @@ fn main() -> anyhow::Result<()> {
     // ---- 1. explorer chooses the boundary --------------------------------
     let graph = zoo::tiny_cnn(10);
     let system = SystemConfig::paper_two_platform();
-    let ex = explore_two_platform(&graph, &system);
+    let ex = ExploreRequest::chain().run(&graph, &system);
     // Only block boundaries have exported artifacts; pick the exported
     // boundary closest to the explorer's best-throughput cut.
     let best_cut = ex

@@ -8,7 +8,7 @@
 //! graph, describe the system, explore, inspect the result.
 
 use partir::config::SystemConfig;
-use partir::explorer::explore_two_platform;
+use partir::explorer::ExploreRequest;
 use partir::report;
 use partir::zoo;
 
@@ -25,7 +25,7 @@ fn main() {
     // 3. Explore: enumerate Definition-1 partitioning points, filter on
     //    memory/link constraints, evaluate latency/energy/throughput/
     //    accuracy per point, and run NSGA-II for the Pareto front.
-    let exploration = explore_two_platform(&graph, &system);
+    let exploration = ExploreRequest::chain().run(&graph, &system);
 
     // 4. Inspect.
     print!("{}", report::render_exploration(&exploration, &system));

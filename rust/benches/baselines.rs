@@ -9,7 +9,7 @@
 mod common;
 
 use partir::config::SystemConfig;
-use partir::explorer::{baselines, explore_two_platform};
+use partir::explorer::{baselines, ExploreRequest};
 use partir::zoo;
 
 fn main() {
@@ -21,7 +21,7 @@ fn main() {
     for model in ["resnet50", "efficientnet_b0", "squeezenet1_1"] {
         common::section(&format!("{model}: what each strategy's choice costs"));
         let g = zoo::build(model).unwrap();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let rows = baselines::compare_all(&ex);
         println!(
             "{:<20} {:<16} {:>10} {:>11} {:>13} {:>7}",

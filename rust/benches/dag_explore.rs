@@ -21,7 +21,7 @@ mod common;
 
 use partir::config::SystemConfig;
 use partir::explorer::reference::DagReference;
-use partir::explorer::{explore_dag, sweep_dag_front, CandidateMetrics, PlanEvaluator};
+use partir::explorer::{sweep_dag_front, CandidateMetrics, ExploreRequest, PlanEvaluator};
 use partir::graph::partition::dag_cuts;
 use partir::util::json::{obj, Json};
 use partir::zoo;
@@ -189,10 +189,10 @@ fn main() {
         let mut par_sys = bench_sys(fast);
         par_sys.jobs = jobs;
         let t = Instant::now();
-        let a = explore_dag(&g, &serial_sys);
+        let a = ExploreRequest::dag().run(&g, &serial_sys);
         let serial_s = t.elapsed().as_secs_f64();
         let t = Instant::now();
-        let b = explore_dag(&g, &par_sys);
+        let b = ExploreRequest::dag().run(&g, &par_sys);
         let par_s = t.elapsed().as_secs_f64();
         assert_eq!(a.pareto, b.pareto, "{model}: parallel front diverged");
         assert_eq!(a.favorite, b.favorite, "{model}: favorite diverged");

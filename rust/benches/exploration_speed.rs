@@ -15,7 +15,7 @@
 mod common;
 
 use partir::config::SystemConfig;
-use partir::explorer::{explore_two_platform, multi};
+use partir::explorer::ExploreRequest;
 use partir::graph::Graph;
 use partir::hw::{CacheLoad, CostCache};
 use partir::util::json::{obj, Json};
@@ -44,8 +44,8 @@ fn main() {
     let mut per_model: Vec<Json> = Vec::new();
     for name in zoo::PAPER_MODELS {
         let g = zoo::build(name).unwrap();
-        let ex_serial = explore_two_platform(&g, &serial);
-        let ex_par = explore_two_platform(&g, &par);
+        let ex_serial = ExploreRequest::chain().run(&g, &serial);
+        let ex_par = ExploreRequest::chain().run(&g, &par);
         // Parallel runs must be byte-identical to serial — fail loudly
         // here rather than publish a speedup for a different answer.
         assert_eq!(ex_serial.pareto, ex_par.pareto, "{name}: parallel run diverged");
@@ -73,23 +73,23 @@ fn main() {
     }
 
     common::section(format!(
-        "full PAPER_MODELS sweep: serial loop vs shared-pool explore_many ({jobs} jobs)"
+        "full PAPER_MODELS sweep: serial loop vs shared-pool run_many ({jobs} jobs)"
     )
     .as_str());
     let graphs: Vec<Graph> = zoo::PAPER_MODELS.iter().map(|m| zoo::build(m).unwrap()).collect();
     let t0 = Instant::now();
     for g in &graphs {
-        std::hint::black_box(explore_two_platform(g, &serial));
+        std::hint::black_box(ExploreRequest::chain().run(g, &serial));
     }
     let serial_s = t0.elapsed().as_secs_f64();
     // The parallel sweep doubles as the *cold* run of the persistence
     // section below: its cache is saved and reloaded for the warm rerun.
     let cold_cache = Arc::new(CostCache::new());
     let t1 = Instant::now();
-    let cold = multi::explore_many_cached(&graphs, &par, Arc::clone(&cold_cache));
+    let cold = ExploreRequest::chain().with_cache(Arc::clone(&cold_cache)).run_many(&graphs, &par);
     let cold_s = t1.elapsed().as_secs_f64();
     println!("{:<28} {:>10}", "serial loop", common::fmt(serial_s));
-    println!("{:<28} {:>10}", "explore_many (shared cache)", common::fmt(cold_s));
+    println!("{:<28} {:>10}", "run_many (shared cache)", common::fmt(cold_s));
     println!(
         "sweep speedup: {:.2}x on {jobs} hardware threads (acceptance target: >= 1.8x on 4 cores)",
         serial_s / cold_s.max(1e-12)
@@ -106,7 +106,7 @@ fn main() {
     );
     let warm_cache = Arc::new(warm_cache);
     let t2 = Instant::now();
-    let warm = multi::explore_many_cached(&graphs, &par, Arc::clone(&warm_cache));
+    let warm = ExploreRequest::chain().with_cache(Arc::clone(&warm_cache)).run_many(&graphs, &par);
     let warm_s = t2.elapsed().as_secs_f64();
     assert_eq!(warm_cache.misses(), 0, "warm sweep re-ran layer evaluations");
     for (a, b) in cold.iter().zip(&warm) {

@@ -9,19 +9,25 @@
 //!   * a 1M-request Poisson scenario simulates in < 30 s wall-clock;
 //!   * repeated runs are bit-identical (fingerprints match);
 //!   * `evaluate_front` is bit-identical across worker counts;
-//!   * the partitioned deployment out-serves the best single platform.
-//! Emits machine-readable `BENCH_sim.json`.
+//!   * the partitioned deployment out-serves the best single platform;
+//!   * on the 16-node mixed EYR/SMB cluster preset, the best replicated
+//!     plan achieves strictly higher simulated goodput than the best
+//!     unreplicated pipeline split for EfficientNet-B0 AND ResNet-50.
+//! Emits machine-readable `BENCH_sim.json` and `BENCH_cluster.json`
+//! (goodput scaling curve over the 16/32/64-node presets).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use partir::config::SystemConfig;
 use partir::coordinator::BatchPolicy;
-use partir::explorer::explore_two_platform;
+use partir::explorer::{CandidateMetrics, Exploration, ExploreRequest};
+use partir::hw::{presets::CLUSTER_SIZES, CostCache};
 use partir::sim::{self, Deployment, Scenario, SimCfg};
 use partir::util::json::{obj, Json};
 use partir::util::parallel::default_jobs;
 use partir::zoo;
+use std::sync::Arc;
 use std::time::Instant;
 
 fn main() {
@@ -37,7 +43,7 @@ fn main() {
     sys.jobs = default_jobs();
     let g = zoo::build("efficientnet_b0").unwrap();
     let t0 = Instant::now();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let explore_s = t0.elapsed().as_secs_f64();
     println!(
         "explored {} candidates in {}",
@@ -196,6 +202,119 @@ fn main() {
             ("front_serial_s", Json::from(front_serial_s)),
             ("front_par_s", Json::from(front_par_s)),
             ("front_jobs", Json::from(jobs)),
+        ]),
+    );
+
+    // -----------------------------------------------------------------
+    // Cluster-scale replication
+    // -----------------------------------------------------------------
+    common::section("cluster replication: 16-node mixed EYR/SMB preset (acceptance)");
+    let cluster_requests = if fast { 200_000 } else { 1_000_000 };
+    // One layer-cost cache across every cluster exploration: all presets
+    // reuse the same two accelerator design points.
+    let shared = Arc::new(CostCache::new());
+    // Best feasible pipeline split (>= 2 stages) by analytic throughput.
+    let best_split = |ex: &Exploration| -> CandidateMetrics {
+        ex.candidates
+            .iter()
+            .filter(|c| c.feasible() && c.partitions >= 2)
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .cloned()
+            .expect("a feasible pipeline split")
+    };
+    let mut accept_rows = Vec::new();
+    for model in ["efficientnet_b0", "resnet50"] {
+        let gm = zoo::build(model).unwrap();
+        let mut csys = SystemConfig::cluster(16);
+        csys.search.victory = 20;
+        csys.search.max_samples = 200;
+        csys.jobs = default_jobs();
+        // Unreplicated reference: same cluster, replication stripped.
+        let mut base_sys = csys.clone();
+        base_sys.replication = None;
+        let base_ex = ExploreRequest::chain().with_cache(Arc::clone(&shared)).run(&gm, &base_sys);
+        let rep_ex = ExploreRequest::chain().with_cache(Arc::clone(&shared)).run(&gm, &csys);
+        let base_best = best_split(&base_ex);
+        let rep_best = best_split(&rep_ex);
+        let max_rep = rep_best.plan.iter().map(|p| p.replicas).max().unwrap_or(1);
+        // Storm above the unreplicated split's capacity; both sides see
+        // the exact same arrival trace (same scenario + seed).
+        let rate = 1.5 * base_best.throughput;
+        let storm = Scenario::steady(cluster_requests, rate);
+        let ccfg = SimCfg::from_system(&csys);
+        let r_base = sim::simulate(&Deployment::from_candidate(&base_best, &csys), &ccfg, &storm);
+        let r_rep = sim::simulate(&Deployment::from_candidate(&rep_best, &csys), &ccfg, &storm);
+        println!(
+            "{model:<16} offered {rate:>8.0}/s  unreplicated '{}' {:>8.1} i/s goodput  \
+             replicated '{}' (max {max_rep}x) {:>8.1} i/s goodput",
+            base_best.label,
+            r_base.goodput,
+            rep_best.label,
+            r_rep.goodput,
+        );
+        assert!(max_rep > 1, "{model}: cluster search never replicated a stage");
+        assert!(
+            r_rep.goodput > r_base.goodput,
+            "{model}: replication did not raise simulated goodput \
+             ({:.1} vs {:.1} i/s)",
+            r_rep.goodput,
+            r_base.goodput
+        );
+        accept_rows.push(obj(vec![
+            ("model", Json::from(model)),
+            ("nodes", Json::from(16usize)),
+            ("offered_rate", Json::from(rate)),
+            ("base_label", Json::from(base_best.label.as_str())),
+            ("base_goodput", Json::from(r_base.goodput)),
+            ("rep_label", Json::from(rep_best.label.as_str())),
+            ("rep_max_replicas", Json::from(max_rep)),
+            ("rep_goodput", Json::from(r_rep.goodput)),
+            ("gain_pct", Json::from(100.0 * (r_rep.goodput - r_base.goodput) / r_base.goodput)),
+        ]));
+    }
+
+    common::section("cluster goodput scaling (efficientnet_b0, 16/32/64 nodes)");
+    let curve_requests = if fast { 100_000 } else { 1_000_000 };
+    let gm = zoo::build("efficientnet_b0").unwrap();
+    println!("{:>6} {:>14} {:>14} {:>9}", "nodes", "analytic", "sim goodput", "dropped");
+    let mut curve_rows = Vec::new();
+    for nodes in CLUSTER_SIZES {
+        let mut csys = SystemConfig::cluster(nodes);
+        csys.search.victory = 20;
+        csys.search.max_samples = 200;
+        csys.jobs = default_jobs();
+        let ex = ExploreRequest::chain().with_cache(Arc::clone(&shared)).run(&gm, &csys);
+        let bestc = best_split(&ex);
+        // Saturate every preset: each point's goodput reads its capacity.
+        let rate = 1.2 * bestc.throughput;
+        let r = sim::simulate(
+            &Deployment::from_candidate(&bestc, &csys),
+            &SimCfg::from_system(&csys),
+            &Scenario::steady(curve_requests, rate),
+        );
+        let tput = bestc.throughput;
+        println!("{nodes:>6} {tput:>10.1} i/s {:>10.1} i/s {:>9}", r.goodput, r.dropped);
+        curve_rows.push(obj(vec![
+            ("nodes", Json::from(nodes)),
+            ("analytic_ips", Json::from(bestc.throughput)),
+            ("sim_goodput", Json::from(r.goodput)),
+            ("dropped", Json::from(r.dropped)),
+            ("label", Json::from(bestc.label.as_str())),
+        ]));
+    }
+    // The curve must actually scale: 64 nodes out-serve 16.
+    let g16 = curve_rows.first().and_then(|r| r.get("sim_goodput").as_f64()).unwrap();
+    let g64 = curve_rows.last().and_then(|r| r.get("sim_goodput").as_f64()).unwrap();
+    assert!(g64 > g16, "cluster goodput does not scale: 64 nodes {g64:.1} <= 16 nodes {g16:.1}");
+
+    common::write_bench_json(
+        "cluster",
+        &obj(vec![
+            ("bench", Json::from("serving/cluster")),
+            ("fast_mode", Json::from(fast)),
+            ("requests", Json::from(cluster_requests)),
+            ("acceptance", Json::Arr(accept_rows)),
+            ("scaling", Json::Arr(curve_rows)),
         ]),
     );
 }

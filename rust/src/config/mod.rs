@@ -155,6 +155,46 @@ impl Default for ServingCfg {
     }
 }
 
+/// Per-platform replica inventory for cluster-scale DSE (the edge-cluster
+/// extension: Parthasarathy & Krishnamachari partition a DNN *and*
+/// replicate its bottleneck stages across the cluster's nodes).
+///
+/// `inventory[j]` is the number of physical nodes available for platform
+/// slot `j` (so `inventory.len()` must equal `platforms.len()`). A stage
+/// mapped to slot `j` may be deployed on `1..=inventory[j]` replica
+/// nodes: throughput scales with the replica count while memory and
+/// energy are charged once per replica node (Def-3 stays a *per-node*
+/// constraint). `None` on [`SystemConfig::replication`] disables the
+/// replication axis entirely and keeps every result bit-identical to the
+/// unreplicated explorer. TOML section: `[replication]` with
+/// `inventory = [8, 8]`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ReplicationCfg {
+    /// Physical nodes available per platform slot.
+    pub inventory: Vec<usize>,
+}
+
+impl ReplicationCfg {
+    /// Uniform inventory: `replicas` nodes for each of `platforms` slots.
+    pub fn uniform(platforms: usize, replicas: usize) -> Self {
+        Self { inventory: vec![replicas.max(1); platforms] }
+    }
+
+    /// Check the inventory against a platform chain of length `k`.
+    pub fn validate(&self, k: usize) -> Result<(), String> {
+        if self.inventory.len() != k {
+            return Err(format!(
+                "replication.inventory has {} entries for {k} platforms",
+                self.inventory.len()
+            ));
+        }
+        if let Some(j) = self.inventory.iter().position(|&r| r == 0) {
+            return Err(format!("replication.inventory[{j}] must be at least 1"));
+        }
+        Ok(())
+    }
+}
+
 /// Full DSE configuration.
 #[derive(Debug, Clone)]
 pub struct SystemConfig {
@@ -183,6 +223,10 @@ pub struct SystemConfig {
     /// only. Repeated sweeps under the same search settings become pure
     /// cache hits; stale/corrupt files are ignored, never fatal.
     pub cache_dir: Option<PathBuf>,
+    /// Optional per-platform replica inventory. `None` (the default)
+    /// reproduces the unreplicated explorer bit-for-bit; `Some` opens
+    /// the replication axis of the genome (see [`ReplicationCfg`]).
+    pub replication: Option<ReplicationCfg>,
     /// Seed for every stochastic component of the DSE.
     pub seed: u64,
     /// Worker threads for hardware evaluation, candidate enumeration and
@@ -223,9 +267,27 @@ impl SystemConfig {
             qat: false,
             serving: ServingCfg::default(),
             cache_dir: None,
+            replication: None,
             seed: DSE_SEED,
             jobs: 1,
         }
+    }
+
+    /// A mixed EYR/SMB cluster of `total_nodes` physical nodes behind
+    /// the paper's two-platform system: the chain stays EYR → GbE → SMB,
+    /// but each slot owns a pool of identical nodes
+    /// (`hw::presets::mixed_cluster_inventory`) that the explorer may
+    /// replicate stages across. Valid for 2–64 nodes; the benchmark
+    /// presets use 16–64.
+    pub fn cluster(total_nodes: usize) -> Self {
+        assert!(
+            (2..=64).contains(&total_nodes),
+            "cluster presets cover 2..=64 nodes, got {total_nodes}"
+        );
+        let mut cfg = Self::paper_two_platform();
+        let [eyr, smb] = presets::mixed_cluster_inventory(total_nodes);
+        cfg.replication = Some(ReplicationCfg { inventory: vec![eyr, smb] });
+        cfg
     }
 
     /// The paper's §V-C system: EYR, EYR, SMB, SMB chained over GbE
@@ -362,6 +424,24 @@ impl SystemConfig {
                 }
                 cfg.serving.queue_depth = d;
             }
+        }
+        if let Json::Obj(_) = doc.get("replication") {
+            let r = doc.get("replication");
+            let inv = r
+                .get("inventory")
+                .as_arr()
+                .ok_or("replication needs an 'inventory' array")?;
+            let inventory = inv
+                .iter()
+                .map(|v| {
+                    v.as_u64()
+                        .map(|n| n as usize)
+                        .ok_or_else(|| format!("bad replication.inventory entry {v:?}"))
+                })
+                .collect::<Result<Vec<_>, _>>()?;
+            let repl = ReplicationCfg { inventory };
+            repl.validate(cfg.platforms.len())?;
+            cfg.replication = Some(repl);
         }
         if let Some(d) = doc.get("cache_dir").as_str() {
             cfg.cache_dir = Some(PathBuf::from(d));
@@ -560,6 +640,38 @@ weight = 2.0
             let doc = tomlite::parse(bad).unwrap();
             assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
         }
+    }
+
+    #[test]
+    fn replication_section_parses_and_validates() {
+        let doc = tomlite::parse("[replication]\ninventory = [8, 8]\n").unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.replication, Some(ReplicationCfg { inventory: vec![8, 8] }));
+        // Default: no replication axis.
+        assert!(SystemConfig::paper_two_platform().replication.is_none());
+        // Inventory length must match the platform chain.
+        for bad in [
+            "[replication]\ninventory = [8]\n",
+            "[replication]\ninventory = [8, 0]\n",
+            "[replication]\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn cluster_preset_splits_nodes_across_both_slots() {
+        for n in [2usize, 16, 17, 64] {
+            let cfg = SystemConfig::cluster(n);
+            assert_eq!(cfg.platforms.len(), 2, "chain shape unchanged");
+            let inv = cfg.replication.unwrap().inventory;
+            assert_eq!(inv.iter().sum::<usize>(), n);
+            assert!(inv.iter().all(|&r| r >= 1));
+            assert!(inv[0] >= inv[1], "EYR takes the ceiling half");
+        }
+        assert_eq!(ReplicationCfg::uniform(3, 4).inventory, vec![4, 4, 4]);
+        assert!(ReplicationCfg::uniform(2, 0).inventory.iter().all(|&r| r == 1));
     }
 
     #[test]

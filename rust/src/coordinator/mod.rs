@@ -441,6 +441,7 @@ mod tests {
                 out_bytes: 128,
                 out_hops: 1,
                 edges: vec![PlanEdge { to: Some(1), bytes: 128, hops: 1 }],
+                replicas: 1,
             },
             StagePlan {
                 platform: 1,
@@ -449,6 +450,7 @@ mod tests {
                 out_bytes: 0,
                 out_hops: 0,
                 edges: Vec::new(),
+                replicas: 1,
             },
         ];
         let names = vec!["A".to_string(), "B".to_string()];

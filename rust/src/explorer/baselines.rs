@@ -115,14 +115,14 @@ pub fn compare_all(ex: &Exploration) -> Vec<BaselineComparison> {
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
-    use crate::explorer::explore_two_platform;
+    use crate::explorer::ExploreRequest;
     use crate::zoo;
 
     fn quick_ex(model: &str) -> Exploration {
         let mut sys = SystemConfig::paper_two_platform();
         sys.search.victory = 15;
         sys.search.max_samples = 150;
-        explore_two_platform(&zoo::build(model).unwrap(), &sys)
+        ExploreRequest::chain().run(&zoo::build(model).unwrap(), &sys)
     }
 
     #[test]

@@ -1,19 +1,20 @@
 //! DAG-aware exploration: convex subgraph partitions beyond linear
 //! cuts.
 //!
-//! The chain explorers ([`super::explore_two_platform`],
-//! [`super::multi::explore_chain`]) enumerate cut positions on one
-//! topological schedule, which collapses branchy CNNs (GoogLeNet's
-//! inception blocks, ResNet skip paths) into a chain: parallel branches
-//! can never execute on different platforms at the same time. This
-//! module searches the strictly larger space of **monotone convex
-//! layer→platform assignments** ([`crate::graph::partition`]): NSGA-II
-//! evolves one platform index per layer, a repair operator
-//! ([`repair_monotone`]) pins the input to platform 0 and raises every
-//! layer to at least the maximum platform of its inputs (guaranteeing
-//! convexity), and [`PlanEvaluator::evaluate_dag`] scores each
-//! assignment — delegating chain-expressible ones to the chain
-//! evaluator bit-for-bit.
+//! The chain explorers (the [`super::ExploreRequest::chain`] paths)
+//! enumerate cut positions on one topological schedule, which collapses
+//! branchy CNNs (GoogLeNet's inception blocks, ResNet skip paths) into
+//! a chain: parallel branches can never execute on different platforms
+//! at the same time. This module searches the strictly larger space of
+//! **monotone convex layer→platform assignments**
+//! ([`crate::graph::partition`]): NSGA-II evolves one platform index
+//! per layer, a repair operator ([`repair_monotone`]) pins the input to
+//! platform 0 and raises every layer to at least the maximum platform
+//! of its inputs (guaranteeing convexity), and
+//! [`PlanEvaluator::evaluate_dag`] scores each assignment — delegating
+//! chain-expressible ones to the chain evaluator bit-for-bit. When the
+//! system carries a replication inventory the genome additionally grows
+//! one replica-count gene per platform, exactly as in the chain search.
 //!
 //! [`explore_dag`] therefore *extends* the chain exploration: it first
 //! runs the exact chain sweep (two platforms) or chain NSGA-II (more),
@@ -26,7 +27,7 @@
 
 use super::{
     exhaustive_pareto, explore_two_platform_with, pick_favorite, CandidateMetrics, EvalScratch,
-    Exploration, PlanEvaluator,
+    Exploration, ExploreRequest, PlanEvaluator,
 };
 use crate::config::{Metric, SystemConfig};
 use crate::graph::partition::repair_monotone;
@@ -38,13 +39,16 @@ use std::collections::BTreeSet;
 use std::sync::Arc;
 use std::time::Instant;
 
-/// Stable fingerprint of a repaired assignment (cross-generation dedup
-/// key — no owned `Vec` clones).
-fn assign_fp(assign: &[usize]) -> u64 {
+/// Stable fingerprint of a repaired assignment plus its replica vector
+/// (cross-generation dedup key — no owned `Vec` clones).
+fn assign_fp(assign: &[usize], replicas: &[usize]) -> u64 {
     let mut h = Fnv64::new();
     h.write_usize(assign.len());
     for &a in assign {
         h.write_usize(a);
+    }
+    for &r in replicas {
+        h.write_usize(r);
     }
     h.finish()
 }
@@ -59,34 +63,49 @@ pub(crate) fn label_fp(label: &str, partitions: usize) -> u64 {
 }
 
 /// NSGA-II problem over layer→platform assignments. The genome has one
-/// integer gene per layer (`0..platforms`); [`Problem::repair`] applies
-/// the monotone convexity repair, so every evaluated genome is a valid
+/// integer gene per layer (`0..platforms`), plus one replica-count gene
+/// per platform when a replication inventory is configured;
+/// [`Problem::repair`] applies the monotone convexity repair to the
+/// assignment prefix, so every evaluated genome is a valid
 /// [`crate::graph::partition::DagPartition`]. Evaluation goes through
 /// the allocation-free lean path with the worker's [`EvalScratch`].
 struct DagProblem<'a, 'b> {
     ev: &'a PlanEvaluator<'b>,
     metrics: Vec<Metric>,
     num_platforms: usize,
+    /// Per-platform node inventory when replication is on.
+    inventory: Option<Vec<usize>>,
+}
+
+impl DagProblem<'_, '_> {
+    fn num_layers(&self) -> usize {
+        self.ev.g.len()
+    }
 }
 
 impl Problem for DagProblem<'_, '_> {
     type Scratch = EvalScratch;
     fn num_vars(&self) -> usize {
-        self.ev.g.len()
+        self.num_layers() + self.inventory.as_ref().map_or(0, Vec::len)
     }
     fn num_objectives(&self) -> usize {
         self.metrics.len()
     }
-    fn bounds(&self, _: usize) -> (i64, i64) {
-        (0, self.num_platforms as i64 - 1)
+    fn bounds(&self, i: usize) -> (i64, i64) {
+        match &self.inventory {
+            Some(inv) if i >= self.num_layers() => (1, inv[i - self.num_layers()] as i64),
+            _ => (0, self.num_platforms as i64 - 1),
+        }
     }
     fn repair(&self, vars: &mut [i64]) {
         // One operator, one definition: round-trip through the shared
         // `graph::partition::repair_monotone` so genome repair can never
-        // drift from what `evaluate_dag` validates.
-        let mut assign: Vec<usize> = vars.iter().map(|&v| v.max(0) as usize).collect();
+        // drift from what `evaluate_dag` validates. Replica genes need
+        // no repair beyond the GA's bounds clamping.
+        let layers = self.num_layers();
+        let mut assign: Vec<usize> = vars[..layers].iter().map(|&v| v.max(0) as usize).collect();
         repair_monotone(self.ev.g, &mut assign);
-        for (v, a) in vars.iter_mut().zip(assign) {
+        for (v, a) in vars[..layers].iter_mut().zip(assign) {
             *v = a as i64;
         }
     }
@@ -94,10 +113,20 @@ impl Problem for DagProblem<'_, '_> {
         EvalScratch::new()
     }
     fn evaluate(&self, vars: &[i64], scratch: &mut EvalScratch) -> Eval {
+        let (assign_vars, rep_vars) = vars.split_at(self.num_layers());
         let mut assign = std::mem::take(&mut scratch.assign_buf);
         assign.clear();
-        assign.extend(vars.iter().map(|&v| v as usize));
-        let m = self.ev.evaluate_dag_lean(&assign, scratch);
+        assign.extend(assign_vars.iter().map(|&v| v as usize));
+        let m = if rep_vars.is_empty() {
+            self.ev.evaluate_dag_lean(&assign, scratch)
+        } else {
+            let mut replicas = std::mem::take(&mut scratch.replicas_buf);
+            replicas.clear();
+            replicas.extend(rep_vars.iter().map(|&v| v as usize));
+            let m = self.ev.evaluate_dag_replicated_lean(&assign, &replicas, scratch);
+            scratch.replicas_buf = replicas;
+            m
+        };
         scratch.assign_buf = assign;
         if m.feasible() {
             Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
@@ -119,13 +148,25 @@ fn dag_cfg(layers: usize, seed: u64) -> Nsga2Cfg {
 
 /// DAG-aware exploration with a private layer-cost cache. See
 /// [`explore_dag_cached`].
+#[deprecated(since = "0.6.0", note = "use `ExploreRequest::dag().run(g, sys)`")]
 pub fn explore_dag(g: &Graph, sys: &SystemConfig) -> Exploration {
-    explore_dag_cached(g, sys, Arc::new(CostCache::new()))
+    ExploreRequest::dag().run(g, sys)
 }
 
 /// DAG-aware exploration: the chain exploration plus the NSGA-II
 /// search over convex layer→platform assignments, sharing one
 /// layer-cost cache.
+#[deprecated(
+    since = "0.6.0",
+    note = "use `ExploreRequest::dag().with_cache(cache).run(g, sys)`"
+)]
+pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
+    ExploreRequest::dag().with_cache(cache).run(g, sys)
+}
+
+/// The DAG exploration behind [`ExploreRequest::dag`]: the chain
+/// exploration plus the NSGA-II search over convex layer→platform
+/// assignments, sharing one layer-cost cache.
 ///
 /// The returned [`Exploration`] starts with the chain candidates in
 /// their original order (so downstream consumers — reports, the
@@ -134,14 +175,18 @@ pub fn explore_dag(g: &Graph, sys: &SystemConfig) -> Exploration {
 /// appended with `assign: Some(..)`, and the Pareto front / favorite
 /// are recomputed over the union. On sequential models no candidate is
 /// appended and the result is bit-identical to the chain explorer.
-pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
+pub(crate) fn explore_dag_impl(
+    g: &Graph,
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Exploration {
     assert!(sys.platforms.len() >= 2, "need at least two platforms");
     let total0 = Instant::now();
     let t0 = Instant::now();
     let ev = PlanEvaluator::with_cache(g, sys, cache);
     let graph_s = t0.elapsed().as_secs_f64() - ev.hw_eval_s;
     let k = sys.platforms.len();
-    let mut ex = if k == 2 {
+    let mut ex = if k == 2 && sys.replication.is_none() {
         explore_two_platform_with(&ev, graph_s)
     } else {
         super::multi::explore_chain_with(&ev)
@@ -150,29 +195,40 @@ pub fn explore_dag_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) 
     // Assignment search. Everything here is deterministic: the GA's RNG
     // is seeded, evaluation is pure, and dedup uses ordered sets.
     let t1 = Instant::now();
-    let problem =
-        DagProblem { ev: &ev, metrics: sys.pareto_metrics.clone(), num_platforms: k };
+    let problem = DagProblem {
+        ev: &ev,
+        metrics: sys.pareto_metrics.clone(),
+        num_platforms: k,
+        inventory: sys.replication.as_ref().map(|r| r.inventory.clone()),
+    };
     let front = nsga2::optimize_par(&problem, &dag_cfg(g.len(), sys.seed), sys.jobs.max(1));
 
-    // Dedup: one entry per distinct repaired assignment, and never a
-    // candidate that duplicates an existing chain candidate's schedule
-    // (single-platform references included — their labels collide).
-    // Both keys are FNV fingerprints — no owned `Vec<usize>`/`String`
-    // clones per front member, and the genome-level memo inside
-    // `nsga2::optimize_par` already collapsed duplicate assignments
-    // across generations before they reach this loop.
+    // Dedup: one entry per distinct repaired (assignment, replicas)
+    // pair, and never a candidate that duplicates an existing chain
+    // candidate's schedule (single-platform references included — their
+    // labels collide). Both keys are FNV fingerprints — no owned
+    // `Vec<usize>`/`String` clones per front member, and the
+    // genome-level memo inside `nsga2::optimize_par` already collapsed
+    // duplicate assignments across generations before they reach this
+    // loop.
     let mut seen_assign: BTreeSet<u64> = BTreeSet::new();
     let mut seen_labels: BTreeSet<u64> =
         ex.candidates.iter().map(|c| label_fp(&c.label, c.partitions)).collect();
     let mut fresh: Vec<CandidateMetrics> = Vec::new();
     let mut scratch = EvalScratch::new();
     for s in &front {
-        let mut assign: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
+        let (assign_vars, rep_vars) = s.vars.split_at(g.len());
+        let mut assign: Vec<usize> = assign_vars.iter().map(|&v| v as usize).collect();
         repair_monotone(g, &mut assign); // idempotent (already repaired)
-        if !seen_assign.insert(assign_fp(&assign)) {
+        let replicas: Vec<usize> = rep_vars.iter().map(|&v| v as usize).collect();
+        if !seen_assign.insert(assign_fp(&assign, &replicas)) {
             continue;
         }
-        let m = ev.evaluate_dag_in(&assign, &mut scratch);
+        let m = if replicas.is_empty() {
+            ev.evaluate_dag_in(&assign, &mut scratch)
+        } else {
+            ev.evaluate_dag_replicated_in(&assign, &replicas, &mut scratch)
+        };
         if !seen_labels.insert(label_fp(&m.label, m.partitions)) {
             continue; // chain-expressible duplicate of an existing point
         }
@@ -310,8 +366,8 @@ mod tests {
         // chain space, so the exploration must be bit-identical.
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let chain = crate::explorer::explore_two_platform(&g, &sys);
-        let dag = explore_dag(&g, &sys);
+        let chain = ExploreRequest::chain().run(&g, &sys);
+        let dag = ExploreRequest::dag().run(&g, &sys);
         assert_eq!(chain.candidates.len(), dag.candidates.len());
         assert_eq!(chain.pareto, dag.pareto);
         assert_eq!(chain.favorite, dag.favorite);
@@ -340,8 +396,8 @@ mod tests {
         let mut sys = quick_sys();
         sys.platforms[1].accelerator = crate::hw::presets::eyeriss_like();
         sys.link = crate::link::LinkModel::ideal();
-        let chain = crate::explorer::explore_two_platform(&g, &sys);
-        let dag = explore_dag(&g, &sys);
+        let chain = ExploreRequest::chain().run(&g, &sys);
+        let dag = ExploreRequest::dag().run(&g, &sys);
         // The chain candidates lead, in their original order.
         assert!(
             dag.candidates.len() > chain.candidates.len(),
@@ -374,7 +430,7 @@ mod tests {
         // The DAG explorer must keep those candidates in the pool.
         let g = branchy();
         let sys = quick_sys();
-        let dag = explore_dag(&g, &sys);
+        let dag = ExploreRequest::dag().run(&g, &sys);
         // Chain cuts survive: the single-platform references and at
         // least one 2-partition chain cut (both branches co-located).
         let labels: Vec<&str> = dag.candidates.iter().map(|c| c.label.as_str()).collect();
@@ -525,8 +581,8 @@ mod tests {
         serial.jobs = 1;
         let mut par = quick_sys();
         par.jobs = 4;
-        let a = explore_dag(&g, &serial);
-        let b = explore_dag(&g, &par);
+        let a = ExploreRequest::dag().run(&g, &serial);
+        let b = ExploreRequest::dag().run(&g, &par);
         assert_eq!(a.candidates.len(), b.candidates.len());
         assert_eq!(a.pareto, b.pareto);
         assert_eq!(a.favorite, b.favorite);
@@ -535,5 +591,27 @@ mod tests {
             assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
             assert_eq!(x.energy_j.to_bits(), y.energy_j.to_bits());
         }
+    }
+
+    #[test]
+    fn replicated_dag_exploration_carries_replicas_into_plans() {
+        // A branchy model with a replication inventory: the DAG search
+        // co-evolves replica genes, and every feasible candidate's plan
+        // stays within the inventory.
+        let g = branchy();
+        let mut sys = quick_sys();
+        sys.replication = Some(crate::config::ReplicationCfg { inventory: vec![4, 4] });
+        let dag = ExploreRequest::dag().run(&g, &sys);
+        assert!(!dag.candidates.is_empty());
+        let mut replicated = 0usize;
+        for c in dag.candidates.iter().filter(|c| c.feasible()) {
+            for s in &c.plan {
+                assert!((1..=4).contains(&s.replicas), "{}: {} replicas", c.label, s.replicas);
+                if s.replicas > 1 {
+                    replicated += 1;
+                }
+            }
+        }
+        assert!(replicated > 0, "no replicated DAG candidate on the front");
     }
 }

@@ -11,17 +11,24 @@
 //! the partitioning: each layer is mapped once per platform, then any
 //! candidate's metrics are prefix-sum lookups.
 //!
+//! Every exploration — chain or DAG, one model or many, replicated or
+//! not — is described by an [`ExploreRequest`] and executed by the
+//! [`Explorer::run`] facade; the pre-0.6 free functions
+//! (`explore_two_platform`, `multi::explore_chain`, `dag::explore_dag`,
+//! …) remain as deprecated delegating wrappers.
+//!
 //! Concurrency: `SystemConfig::jobs` selects the worker count; hardware
 //! evaluation, candidate enumeration and NSGA-II population evaluation
 //! all shard across `std::thread::scope` workers, and layer costs flow
 //! through a [`CostCache`] that can be shared across models and platform
-//! pairs (see [`multi::explore_many`]). Results are bit-identical to the
-//! serial run for any `jobs` value.
+//! pairs (see [`ExploreRequest::run_many`]). Results are bit-identical
+//! to the serial run for any `jobs` value.
 
 pub mod baselines;
 pub mod dag;
 pub mod multi;
 pub mod reference;
+mod request;
 mod scratch;
 mod stagecache;
 
@@ -40,7 +47,10 @@ use std::ops::Range;
 use std::sync::Arc;
 use std::time::Instant;
 
-pub use dag::{explore_dag, explore_dag_cached, sweep_dag_front, SweepStats};
+#[allow(deprecated)]
+pub use dag::{explore_dag, explore_dag_cached};
+pub use dag::{sweep_dag_front, SweepStats};
+pub use request::{ExploreMode, ExploreRequest, Explorer};
 pub use scratch::EvalScratch;
 pub use stagecache::{StageCache, StageCost};
 
@@ -74,6 +84,12 @@ pub struct PlanEdge {
 pub struct StagePlan {
     /// Index into `SystemConfig::platforms`.
     pub platform: usize,
+    /// Replica nodes this stage is deployed on (1 = unreplicated).
+    /// Replication scales the stage's service rate ×`replicas` and
+    /// charges memory/energy once per replica node; the serving
+    /// simulator fans requests out across the replicas
+    /// (`sim::DispatchPolicy`).
+    pub replicas: usize,
     /// Per-inference compute latency of this platform's segment (s).
     pub latency_s: f64,
     /// Per-inference compute energy of this platform's segment (J).
@@ -293,11 +309,28 @@ impl Exploration {
 }
 
 /// Precomputed per-platform costs for a fixed schedule; evaluates any
-/// chain cut-position vector ([`Self::evaluate`]) or convex DAG
-/// partition ([`Self::evaluate_dag`]) against the same cost substrate.
-/// `Sync`: candidates can be evaluated concurrently.
+/// chain cut-position vector or convex DAG partition against the same
+/// cost substrate. `Sync`: candidates can be evaluated concurrently.
 ///
-/// Formerly `ChainEvaluator`; the old name remains as a type alias.
+/// # Evaluation entry points — one pattern, three axes
+///
+/// Every evaluation method is the same call shape along three
+/// orthogonal axes; pick one coordinate per axis instead of memorizing
+/// a method list:
+///
+/// | axis | choices |
+/// |---|---|
+/// | **candidate shape** | chain cut positions (`evaluate*`) vs. per-layer DAG assignment (`evaluate_dag*`) |
+/// | **output depth** | surfaced [`CandidateMetrics`] (owned scratch: [`Self::evaluate`] / [`Self::evaluate_dag`]; caller scratch: [`Self::evaluate_in`] / [`Self::evaluate_dag_in`]) vs. allocation-free [`LeanMetrics`] for the GA hot loop ([`Self::evaluate_lean`] / [`Self::evaluate_dag_lean`]) |
+/// | **replication** | unreplicated (bit-identical to the paper's model) vs. per-platform replica counts ([`Self::evaluate_replicated_in`] / [`Self::evaluate_replicated_lean`] / [`Self::evaluate_dag_replicated_in`] / [`Self::evaluate_dag_replicated_lean`]) |
+///
+/// All variants share one arithmetic core per candidate shape, so the
+/// surfaced and lean results are bit-identical, and the replicated
+/// paths with `replicas = [1, 1, …]` are bit-identical to the
+/// unreplicated ones (property-tested in `tests/replication.rs`).
+///
+/// Formerly `ChainEvaluator`; the old name remains as a deprecated
+/// type alias.
 pub struct PlanEvaluator<'a> {
     /// The model under exploration.
     pub g: &'a Graph,
@@ -334,6 +367,7 @@ pub struct PlanEvaluator<'a> {
 }
 
 /// Backward-compatible name for [`PlanEvaluator`] (pre-DAG API).
+#[deprecated(since = "0.6.0", note = "use `PlanEvaluator` (same type)")]
 pub type ChainEvaluator<'a> = PlanEvaluator<'a>;
 
 impl<'a> PlanEvaluator<'a> {
@@ -510,7 +544,43 @@ impl<'a> PlanEvaluator<'a> {
     /// strings), with all intermediate state drawn from `scratch`.
     /// Bit-identical for any scratch (fresh or reused).
     pub fn evaluate_in(&self, positions: &[usize], scratch: &mut EvalScratch) -> CandidateMetrics {
-        let lean = self.eval_chain_core(positions, scratch, true);
+        self.surfaced_chain(positions, None, scratch)
+    }
+
+    /// Replicated-chain evaluation with a throwaway scratch; see
+    /// [`Self::evaluate_replicated_in`].
+    pub fn evaluate_replicated(&self, positions: &[usize], replicas: &[usize]) -> CandidateMetrics {
+        self.evaluate_replicated_in(positions, replicas, &mut EvalScratch::new())
+    }
+
+    /// [`Self::evaluate_in`] with a per-platform replica count
+    /// (`replicas[j]` nodes run platform `j`'s segment): each replicated
+    /// stage's service rate scales ×`replicas[j]` while its memory and
+    /// energy are charged once per replica node — Definition 3 stays a
+    /// *per-node* constraint, and the reported `memory_bytes[j]` is the
+    /// slot's deployed total. Replicas share the chain's physical link,
+    /// so link throughput ceilings are unchanged. Exceeding the
+    /// configured inventory (`SystemConfig::replication`) is a
+    /// constraint violation. With `replicas = [1, 1, …]` the result is
+    /// bit-identical to [`Self::evaluate_in`].
+    pub fn evaluate_replicated_in(
+        &self,
+        positions: &[usize],
+        replicas: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> CandidateMetrics {
+        self.surfaced_chain(positions, Some(replicas), scratch)
+    }
+
+    /// Shared surfaced-chain path behind [`Self::evaluate_in`] and
+    /// [`Self::evaluate_replicated_in`].
+    fn surfaced_chain(
+        &self,
+        positions: &[usize],
+        replicas: Option<&[usize]>,
+        scratch: &mut EvalScratch,
+    ) -> CandidateMetrics {
+        let lean = self.eval_chain_core(positions, scratch, true, replicas);
         // A platform whose segment holds only free placeholder layers
         // (Input/Flatten/Dropout: no MACs, ops or parameters) does no
         // compute: it does not count as a partition. The cut-after-Input
@@ -525,7 +595,10 @@ impl<'a> PlanEvaluator<'a> {
         let used_compute: Vec<usize> =
             scratch.used.iter().copied().filter(|&j| computes(&scratch.segs[j])).collect();
         let partitions = used_compute.len().max(1);
-        let label = self.label_for(&scratch.segs, &used_compute);
+        let label = self.replicated_label(
+            self.label_for(&scratch.segs, &used_compute),
+            replicas,
+        );
         CandidateMetrics {
             positions: positions.to_vec(),
             label,
@@ -549,22 +622,61 @@ impl<'a> PlanEvaluator<'a> {
     /// arithmetic is the shared [`Self::eval_chain_core`], so every
     /// value is bit-identical to the surfaced [`Self::evaluate_in`].
     pub fn evaluate_lean(&self, positions: &[usize], scratch: &mut EvalScratch) -> LeanMetrics {
-        self.eval_chain_core(positions, scratch, false)
+        self.eval_chain_core(positions, scratch, false, None)
+    }
+
+    /// Lean twin of [`Self::evaluate_replicated_in`] — the replicated
+    /// GA hot path. Bit-identical to the surfaced replicated result.
+    pub fn evaluate_replicated_lean(
+        &self,
+        positions: &[usize],
+        replicas: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> LeanMetrics {
+        self.eval_chain_core(positions, scratch, false, Some(replicas))
+    }
+
+    /// Replica count of platform `j` under an optional per-platform
+    /// replica vector, plus its inventory-violation term (0 when within
+    /// the configured `SystemConfig::replication` inventory).
+    #[inline]
+    fn replica_count(&self, replicas: Option<&[usize]>, j: usize) -> usize {
+        replicas.map_or(1, |rs| rs[j].max(1))
+    }
+
+    /// Label suffix for replicated candidates: ` ×[r0,r1,…]` when any
+    /// slot is replicated, the unmodified label otherwise (so all-ones
+    /// replica vectors keep their dedup keys unchanged).
+    fn replicated_label(&self, label: String, replicas: Option<&[usize]>) -> String {
+        match replicas {
+            Some(rs) if rs.iter().any(|&r| r > 1) => {
+                let counts: Vec<String> = rs.iter().map(|r| r.to_string()).collect();
+                format!("{label} ×[{}]", counts.join(","))
+            }
+            _ => label,
+        }
     }
 
     /// The single chain-evaluation arithmetic path behind both the
     /// surfaced and the lean entry points; `surface` only gates
     /// violation-string formatting and runtime-plan materialization
     /// (every metric is computed either way, in the same
-    /// floating-point op order).
+    /// floating-point op order). `replicas` (per-platform, `None` =
+    /// all ones) opens the replication axis: every replication term is
+    /// guarded on `r > 1`, so an all-ones vector performs exactly the
+    /// unreplicated op sequence and stays bit-identical.
     fn eval_chain_core(
         &self,
         positions: &[usize],
         scratch: &mut EvalScratch,
         surface: bool,
+        replicas: Option<&[usize]>,
     ) -> LeanMetrics {
         let k = self.sys.platforms.len();
         assert_eq!(positions.len(), k - 1, "need one cut per platform boundary");
+        if let Some(rs) = replicas {
+            assert_eq!(rs.len(), k, "need one replica count per platform");
+        }
         let len = self.order.len();
 
         // Per-platform segment ranges (empty = idle platform).
@@ -601,13 +713,29 @@ impl<'a> PlanEvaluator<'a> {
             energy += c.energy_j;
             scratch.seg_latency[j] = c.latency_s;
             scratch.seg_energy[j] = c.energy_j;
+            let rj = self.replica_count(replicas, j);
             if c.latency_s > 0.0 {
-                scratch.rates.push(1.0 / c.latency_s);
+                // A replicated stage serves `rj` requests concurrently:
+                // its service rate scales ×rj (the edge-cluster model).
+                if rj > 1 {
+                    scratch.rates.push(rj as f64 / c.latency_s);
+                } else {
+                    scratch.rates.push(1.0 / c.latency_s);
+                }
+            }
+            if rj > 1 {
+                // Deployment energy is additive per replica node: every
+                // provisioned replica is charged the stage's
+                // per-inference energy.
+                energy += (rj - 1) as f64 * c.energy_j;
             }
             let bits = self.sys.platforms[j].accelerator.bits;
             let m = self.segment_memory(&r, bits);
-            scratch.memory_bytes[j] = m;
-            mem_peak = mem_peak.max(m);
+            // Definition 3 stays a *per-node* check; the reported slot
+            // memory is additive across replica nodes.
+            let slot_m = m * rj as u64;
+            scratch.memory_bytes[j] = slot_m;
+            mem_peak = mem_peak.max(slot_m);
             let cap = self.sys.platforms[j].memory_bytes;
             if m > cap {
                 if surface {
@@ -617,6 +745,17 @@ impl<'a> PlanEvaluator<'a> {
                     ));
                 }
                 violation += (m - cap) as f64 / cap as f64;
+            }
+            if let Some(inv) = self.sys.replication.as_ref().and_then(|r| r.inventory.get(j)) {
+                if rj > *inv {
+                    if surface {
+                        scratch.violations.push(format!(
+                            "platform {} replicas {rj} > inventory {inv}",
+                            self.sys.platforms[j].name
+                        ));
+                    }
+                    violation += (rj - inv) as f64 / *inv as f64;
+                }
             }
         }
 
@@ -637,7 +776,8 @@ impl<'a> PlanEvaluator<'a> {
             while i < scratch.used.len() {
                 let j = scratch.used[i];
                 let (lat, en) = (scratch.seg_latency[j], scratch.seg_energy[j]);
-                scratch.push_plan_stage(j, lat, en);
+                let pi = scratch.push_plan_stage(j, lat, en);
+                scratch.plan[pi].replicas = self.replica_count(replicas, j);
                 i += 1;
             }
         }
@@ -820,10 +960,41 @@ impl<'a> PlanEvaluator<'a> {
     /// pre-cache path ([`reference::DagReference`]) — property-tested
     /// over the zoo in `tests/dag_equivalence.rs`.
     pub fn evaluate_dag_in(&self, assign: &[usize], scratch: &mut EvalScratch) -> CandidateMetrics {
-        match self.eval_dag_core(assign, scratch, true) {
+        self.surfaced_dag(assign, None, scratch)
+    }
+
+    /// Replicated-DAG evaluation with a throwaway scratch; see
+    /// [`Self::evaluate_dag_replicated_in`].
+    pub fn evaluate_dag_replicated(&self, assign: &[usize], replicas: &[usize]) -> CandidateMetrics {
+        self.evaluate_dag_replicated_in(assign, replicas, &mut EvalScratch::new())
+    }
+
+    /// [`Self::evaluate_dag_in`] with a per-platform replica count —
+    /// the DAG twin of [`Self::evaluate_replicated_in`], with identical
+    /// replication semantics (rate ×r, memory/energy additive per
+    /// replica node, Def-3 per node, shared links). Chain-expressible
+    /// assignments delegate to the replicated chain path bit-exactly.
+    pub fn evaluate_dag_replicated_in(
+        &self,
+        assign: &[usize],
+        replicas: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> CandidateMetrics {
+        self.surfaced_dag(assign, Some(replicas), scratch)
+    }
+
+    /// Shared surfaced-DAG path behind [`Self::evaluate_dag_in`] and
+    /// [`Self::evaluate_dag_replicated_in`].
+    fn surfaced_dag(
+        &self,
+        assign: &[usize],
+        replicas: Option<&[usize]>,
+        scratch: &mut EvalScratch,
+    ) -> CandidateMetrics {
+        match self.eval_dag_core(assign, scratch, true, replicas) {
             DagCore::Chain => {
                 let positions = std::mem::take(&mut scratch.chain_positions);
-                let m = self.evaluate_in(&positions, scratch);
+                let m = self.surfaced_chain(&positions, replicas, scratch);
                 scratch.chain_positions = positions;
                 m
             }
@@ -836,7 +1007,10 @@ impl<'a> PlanEvaluator<'a> {
                     })
                 };
                 let partitions = (0..ns).filter(|&si| computes(si)).count().max(1);
-                let label = self.dag_label_from(assign, &scratch.stage_platform[..ns]);
+                let label = self.replicated_label(
+                    self.dag_label_from(assign, &scratch.stage_platform[..ns]),
+                    replicas,
+                );
                 CandidateMetrics {
                     positions: Vec::new(),
                     label,
@@ -862,10 +1036,33 @@ impl<'a> PlanEvaluator<'a> {
     /// surfaced path, so every value is bit-identical to
     /// [`Self::evaluate_dag_in`].
     pub fn evaluate_dag_lean(&self, assign: &[usize], scratch: &mut EvalScratch) -> LeanMetrics {
-        match self.eval_dag_core(assign, scratch, false) {
+        self.dag_lean(assign, None, scratch)
+    }
+
+    /// Lean twin of [`Self::evaluate_dag_replicated_in`] — the
+    /// replicated DAG GA hot path. Bit-identical to the surfaced
+    /// replicated result.
+    pub fn evaluate_dag_replicated_lean(
+        &self,
+        assign: &[usize],
+        replicas: &[usize],
+        scratch: &mut EvalScratch,
+    ) -> LeanMetrics {
+        self.dag_lean(assign, Some(replicas), scratch)
+    }
+
+    /// Shared lean-DAG path behind [`Self::evaluate_dag_lean`] and
+    /// [`Self::evaluate_dag_replicated_lean`].
+    fn dag_lean(
+        &self,
+        assign: &[usize],
+        replicas: Option<&[usize]>,
+        scratch: &mut EvalScratch,
+    ) -> LeanMetrics {
+        match self.eval_dag_core(assign, scratch, false, replicas) {
             DagCore::Chain => {
                 let positions = std::mem::take(&mut scratch.chain_positions);
-                let m = self.eval_chain_core(&positions, scratch, false);
+                let m = self.eval_chain_core(&positions, scratch, false, replicas);
                 scratch.chain_positions = positions;
                 m
             }
@@ -1067,8 +1264,17 @@ impl<'a> PlanEvaluator<'a> {
     /// core, keeping the tier-1 `dag_matches_chain` invariant
     /// bit-exact); branch-parallel ones are scored with the stage-graph
     /// model, drawing per-stage costs from the sharded stage cache.
-    fn eval_dag_core(&self, assign: &[usize], scratch: &mut EvalScratch, surface: bool) -> DagCore {
+    fn eval_dag_core(
+        &self,
+        assign: &[usize],
+        scratch: &mut EvalScratch,
+        surface: bool,
+        replicas: Option<&[usize]>,
+    ) -> DagCore {
         let k = self.sys.platforms.len();
+        if let Some(rs) = replicas {
+            assert_eq!(rs.len(), k, "need one replica count per platform");
+        }
         let ns = self.build_stages(assign, scratch);
         {
             let EvalScratch { chain_bounds, chain_positions, .. } = scratch;
@@ -1113,12 +1319,20 @@ impl<'a> PlanEvaluator<'a> {
             scratch.stage_lat.push(cost.latency_s);
             scratch.stage_en.push(cost.energy_j);
             scratch.stage_macs.push(cost.macs);
+            let rj = self.replica_count(replicas, platform);
             if cost.latency_s > 0.0 {
-                scratch.rates.push(1.0 / cost.latency_s);
+                // Replicated stage: service rate ×rj (see the chain core).
+                if rj > 1 {
+                    scratch.rates.push(rj as f64 / cost.latency_s);
+                } else {
+                    scratch.rates.push(1.0 / cost.latency_s);
+                }
             }
             let m = cost.memory_bytes;
-            scratch.memory_bytes[platform] = m;
-            mem_peak = mem_peak.max(m);
+            // Def-3 per node; reported slot memory additive per replica.
+            let slot_m = m * rj as u64;
+            scratch.memory_bytes[platform] = slot_m;
+            mem_peak = mem_peak.max(slot_m);
             let cap = self.sys.platforms[platform].memory_bytes;
             if m > cap {
                 if surface {
@@ -1128,6 +1342,19 @@ impl<'a> PlanEvaluator<'a> {
                     ));
                 }
                 violation += (m - cap) as f64 / cap as f64;
+            }
+            if let Some(inv) =
+                self.sys.replication.as_ref().and_then(|r| r.inventory.get(platform))
+            {
+                if rj > *inv {
+                    if surface {
+                        scratch.violations.push(format!(
+                            "platform {} replicas {rj} > inventory {inv}",
+                            self.sys.platforms[platform].name
+                        ));
+                    }
+                    violation += (rj - inv) as f64 / *inv as f64;
+                }
             }
         }
 
@@ -1140,6 +1367,17 @@ impl<'a> PlanEvaluator<'a> {
         self.build_stage_edges(assign, scratch);
         let ne = scratch.edge_order.len();
         let mut energy: f64 = scratch.stage_en.iter().sum();
+        // Deployment energy of replicated stages: each extra replica
+        // node is charged the stage's per-inference energy (guarded on
+        // r > 1, so all-ones vectors add zero float ops).
+        if replicas.is_some() {
+            for si in 0..ns {
+                let rj = self.replica_count(replicas, scratch.stage_platform[si]);
+                if rj > 1 {
+                    energy += (rj - 1) as f64 * scratch.stage_en[si];
+                }
+            }
+        }
         let mut link_bytes = 0u64;
         scratch.edge_bytes.clear();
         scratch.edge_bytes.resize(ne, 0);
@@ -1231,7 +1469,8 @@ impl<'a> PlanEvaluator<'a> {
             for si in 0..ns {
                 let (p, lat, en) =
                     (scratch.stage_platform[si], scratch.stage_lat[si], scratch.stage_en[si]);
-                scratch.push_plan_stage(p, lat, en);
+                let pi = scratch.push_plan_stage(p, lat, en);
+                scratch.plan[pi].replicas = self.replica_count(replicas, p);
             }
             for oi in 0..ne {
                 let ei = scratch.edge_order[oi];
@@ -1555,13 +1794,30 @@ impl Problem for TwoPlatformProblem<'_, '_> {
 }
 
 /// Full two-platform exploration (paper §V-B setting).
+#[deprecated(since = "0.6.0", note = "use `ExploreRequest::chain().run(g, sys)`")]
 pub fn explore_two_platform(g: &Graph, sys: &SystemConfig) -> Exploration {
-    explore_two_platform_cached(g, sys, Arc::new(CostCache::new()))
+    assert_eq!(sys.platforms.len(), 2, "explore_two_platform needs 2 platforms");
+    ExploreRequest::chain().run(g, sys)
 }
 
 /// [`explore_two_platform`] against a shared layer-cost cache, so sweeps
 /// over many models (or platform pairs) amortize mapper work.
+#[deprecated(
+    since = "0.6.0",
+    note = "use `ExploreRequest::chain().with_cache(cache).run(g, sys)`"
+)]
 pub fn explore_two_platform_cached(
+    g: &Graph,
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Exploration {
+    assert_eq!(sys.platforms.len(), 2, "explore_two_platform needs 2 platforms");
+    ExploreRequest::chain().with_cache(cache).run(g, sys)
+}
+
+/// The exhaustive two-platform sweep behind [`ExploreRequest`] on
+/// unreplicated two-platform systems (the paper's §V-B setting).
+pub(crate) fn explore_two_platform_impl(
     g: &Graph,
     sys: &SystemConfig,
     cache: Arc<CostCache>,
@@ -1666,7 +1922,7 @@ mod tests {
     fn two_platform_exploration_runs() {
         let g = zoo::squeezenet1_1(1000);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         assert!(!ex.candidates.is_empty());
         assert!(!ex.pareto.is_empty());
         assert!(ex.favorite.is_some());
@@ -1683,7 +1939,7 @@ mod tests {
     fn candidate_plans_are_consistent() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         for c in &ex.candidates {
             assert!(!c.plan.is_empty(), "{}: empty plan", c.label);
             // Chain order, no duplicate platforms.
@@ -1709,7 +1965,7 @@ mod tests {
     fn plan_edges_account_every_wire_byte() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         for c in &ex.candidates {
             let edge_link: u64 = c
                 .plan
@@ -1754,7 +2010,7 @@ mod tests {
     fn single_platform_references_present() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let labels: Vec<&str> = ex.candidates.iter().map(|c| c.label.as_str()).collect();
         assert!(labels.contains(&"all-on-A"), "{labels:?}");
         assert!(labels.contains(&"all-on-B"), "{labels:?}");
@@ -1764,7 +2020,7 @@ mod tests {
     fn nsga_front_subset_of_exhaustive() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         // Map NSGA space indices to candidate indices: they share the
         // ordering (both built from `space`).
         for &i in &ex.nsga_front {
@@ -1797,7 +2053,7 @@ mod tests {
         let add = g.add(LayerKind::Add, &[r1, c2]);
         g.add(LayerKind::GlobalAvgPool, &[add]);
         let sys = quick_sys();
-        let ev = ChainEvaluator::new(&g, &sys);
+        let ev = PlanEvaluator::new(&g, &sys);
         let wide = ev.cuts.iter().find(|c| !c.is_clean()).expect("a wide cut");
         assert_eq!(wide.tensors.len(), 2);
         let m = ev.evaluate(&[wide.pos]);
@@ -1816,7 +2072,7 @@ mod tests {
         // throughput for a compute-heavy net.
         let g = zoo::resnet50(1000);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let single_best = ex
             .candidates
             .iter()
@@ -1841,7 +2097,7 @@ mod tests {
         let mut sys = quick_sys();
         sys.platforms[0].memory_bytes = 1 << 20; // 1 MiB: nothing fits on A
         sys.platforms[1].memory_bytes = 1 << 30;
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         // all-on-B (cut at position 0) keeps platform A empty -> feasible.
         let feasible: Vec<&CandidateMetrics> =
             ex.candidates.iter().filter(|c| c.feasible()).collect();
@@ -1859,7 +2115,7 @@ mod tests {
     fn favorite_is_feasible_and_on_reasonable_score() {
         let g = zoo::googlenet(1000);
         let sys = quick_sys();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let fav = ex.favorite_metrics().unwrap();
         assert!(fav.feasible());
     }
@@ -1923,8 +2179,8 @@ mod tests {
     fn deterministic_given_seed() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_sys();
-        let a = explore_two_platform(&g, &sys);
-        let b = explore_two_platform(&g, &sys);
+        let a = ExploreRequest::chain().run(&g, &sys);
+        let b = ExploreRequest::chain().run(&g, &sys);
         assert_eq!(a.pareto, b.pareto);
         assert_eq!(a.favorite, b.favorite);
         for (x, y) in a.candidates.iter().zip(&b.candidates) {
@@ -1940,8 +2196,8 @@ mod tests {
         serial.jobs = 1;
         let mut par = quick_sys();
         par.jobs = 4;
-        let a = explore_two_platform(&g, &serial);
-        let b = explore_two_platform(&g, &par);
+        let a = ExploreRequest::chain().run(&g, &serial);
+        let b = ExploreRequest::chain().run(&g, &par);
         assert_eq!(a.pareto, b.pareto);
         assert_eq!(a.nsga_front, b.nsga_front);
         assert_eq!(a.favorite, b.favorite);
@@ -1953,11 +2209,11 @@ mod tests {
         // over the wire, a fixed top-1 penalty per cut.
         let g = zoo::resnet50(1000);
         let base_sys = quick_sys();
-        let base = explore_two_platform(&g, &base_sys);
+        let base = ExploreRequest::chain().run(&g, &base_sys);
         let mut comp_sys = quick_sys();
         comp_sys.compression =
             Some(crate::config::Compression { ratio: 0.25, top1_penalty: 0.8 });
-        let comp = explore_two_platform(&g, &comp_sys);
+        let comp = ExploreRequest::chain().run(&g, &comp_sys);
         for (a, b) in base.candidates.iter().zip(&comp.candidates) {
             assert_eq!(a.label, b.label);
             if a.partitions == 2 {

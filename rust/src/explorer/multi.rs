@@ -6,11 +6,19 @@
 //! genome is one integer per platform boundary; `repair` sorts it, and
 //! duplicate positions naturally express idle platforms (fewer
 //! partitions than platforms).
+//!
+//! When the system carries a [`ReplicationCfg`] (cluster presets), the
+//! genome grows by one replica-count gene per platform, bounded by that
+//! platform's node inventory: NSGA-II then co-optimizes where to cut
+//! *and* how many nodes to dedicate to each stage, and candidates are
+//! materialized through the replicated evaluation path. Without a
+//! replication config the genome, the RNG stream and the results are
+//! bit-identical to the pre-replication explorer.
 
 use super::dag::label_fp;
 use super::{
     exhaustive_pareto, CandidateMetrics, EvalScratch, Exploration, ExplorationTiming,
-    PlanEvaluator,
+    ExploreRequest, PlanEvaluator,
 };
 use crate::config::{Metric, SystemConfig};
 use crate::graph::Graph;
@@ -25,30 +33,48 @@ struct ChainProblem<'a, 'b> {
     metrics: Vec<Metric>,
     num_cuts: usize,
     max_pos: usize,
+    /// Per-platform node inventory when replication is on: appends one
+    /// replica-count gene per platform after the cut genes.
+    inventory: Option<Vec<usize>>,
 }
 
 impl Problem for ChainProblem<'_, '_> {
     type Scratch = EvalScratch;
     fn num_vars(&self) -> usize {
-        self.num_cuts
+        self.num_cuts + self.inventory.as_ref().map_or(0, Vec::len)
     }
     fn num_objectives(&self) -> usize {
         self.metrics.len()
     }
-    fn bounds(&self, _: usize) -> (i64, i64) {
-        (0, self.max_pos as i64)
+    fn bounds(&self, i: usize) -> (i64, i64) {
+        match &self.inventory {
+            Some(inv) if i >= self.num_cuts => (1, inv[i - self.num_cuts] as i64),
+            _ => (0, self.max_pos as i64),
+        }
     }
     fn repair(&self, vars: &mut [i64]) {
-        vars.sort_unstable();
+        // Only the cut prefix needs sorting; replica genes are kept
+        // within inventory by the GA's bounds clamping.
+        vars[..self.num_cuts].sort_unstable();
     }
     fn make_scratch(&self) -> EvalScratch {
         EvalScratch::new()
     }
     fn evaluate(&self, vars: &[i64], scratch: &mut EvalScratch) -> Eval {
+        let (cut_vars, rep_vars) = vars.split_at(self.num_cuts);
         let mut positions = std::mem::take(&mut scratch.positions_buf);
         positions.clear();
-        positions.extend(vars.iter().map(|&v| v as usize));
-        let m = self.ev.evaluate_lean(&positions, scratch);
+        positions.extend(cut_vars.iter().map(|&v| v as usize));
+        let m = if rep_vars.is_empty() {
+            self.ev.evaluate_lean(&positions, scratch)
+        } else {
+            let mut replicas = std::mem::take(&mut scratch.replicas_buf);
+            replicas.clear();
+            replicas.extend(rep_vars.iter().map(|&v| v as usize));
+            let m = self.ev.evaluate_replicated_lean(&positions, &replicas, scratch);
+            scratch.replicas_buf = replicas;
+            m
+        };
         scratch.positions_buf = positions;
         if m.feasible() {
             Eval::feasible(self.metrics.iter().map(|&mm| m.objective(mm)).collect())
@@ -61,13 +87,28 @@ impl Problem for ChainProblem<'_, '_> {
 /// Explore an N-platform chain with NSGA-II. Returns the deduplicated
 /// front as an [`Exploration`] whose `candidates` are the front members
 /// themselves (the space is not enumerable).
+#[deprecated(since = "0.6.0", note = "use `ExploreRequest::chain().run(g, sys)`")]
 pub fn explore_chain(g: &Graph, sys: &SystemConfig) -> Exploration {
-    explore_chain_cached(g, sys, Arc::new(CostCache::new()))
+    ExploreRequest::chain().run(g, sys)
 }
 
 /// [`explore_chain`] against a shared layer-cost cache (see
 /// [`explore_chain_many`]).
+#[deprecated(
+    since = "0.6.0",
+    note = "use `ExploreRequest::chain().with_cache(cache).run(g, sys)`"
+)]
 pub fn explore_chain_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>) -> Exploration {
+    ExploreRequest::chain().with_cache(cache).run(g, sys)
+}
+
+/// The NSGA-II chain search behind [`ExploreRequest`] on systems with
+/// more than two platforms (or any replicated chain system).
+pub(crate) fn explore_chain_impl(
+    g: &Graph,
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> Exploration {
     let total0 = Instant::now();
     assert!(sys.platforms.len() >= 2, "need at least two platforms");
     let ev = PlanEvaluator::with_cache(g, sys, cache);
@@ -77,21 +118,24 @@ pub fn explore_chain_cached(g: &Graph, sys: &SystemConfig, cache: Arc<CostCache>
 }
 
 /// The NSGA-II chain search against an existing evaluator — the shared
-/// core of [`explore_chain_cached`] and `dag::explore_dag` on systems
-/// with more than two platforms.
+/// core of [`explore_chain_impl`] and `dag::explore_dag_impl` on
+/// systems beyond the exhaustive two-platform sweep. Honors
+/// `sys.replication` (replica-count genes, replicated materialization).
 pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
     let total0 = Instant::now();
     let g = ev.g;
     let sys = ev.sys;
     let jobs = sys.jobs.max(1);
     let len = ev.order.len();
+    let num_cuts = sys.platforms.len() - 1;
 
     let t2 = Instant::now();
     let problem = ChainProblem {
         ev,
         metrics: sys.pareto_metrics.clone(),
-        num_cuts: sys.platforms.len() - 1,
+        num_cuts,
         max_pos: len - 1,
+        inventory: sys.replication.as_ref().map(|r| r.inventory.clone()),
     };
     // Scale the GA budget with both depth and chain length.
     let mut cfg = Nsga2Cfg::for_layers(g.len() * sys.platforms.len() / 2, sys.seed);
@@ -106,8 +150,14 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
     let mut seen = std::collections::BTreeSet::new();
     let mut scratch = EvalScratch::new();
     for s in &front {
-        let positions: Vec<usize> = s.vars.iter().map(|&v| v as usize).collect();
-        let m = ev.evaluate_in(&positions, &mut scratch);
+        let (cut_vars, rep_vars) = s.vars.split_at(num_cuts);
+        let positions: Vec<usize> = cut_vars.iter().map(|&v| v as usize).collect();
+        let m = if rep_vars.is_empty() {
+            ev.evaluate_in(&positions, &mut scratch)
+        } else {
+            let replicas: Vec<usize> = rep_vars.iter().map(|&v| v as usize).collect();
+            ev.evaluate_replicated_in(&positions, &replicas, &mut scratch)
+        };
         if seen.insert(label_fp(&m.label, m.partitions)) {
             candidates.push(m);
         }
@@ -136,40 +186,50 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
 /// pool, sharing a single layer-cost cache across all of them — the
 /// `zoo::PAPER_MODELS` sweep path. Per-model explorations are
 /// independent and deterministic, so the result vector is element-wise
-/// identical to running [`super::explore_two_platform`] serially.
+/// identical to running each model's exploration serially.
+#[deprecated(since = "0.6.0", note = "use `ExploreRequest::chain().run_many(graphs, sys)`")]
 pub fn explore_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
-    explore_many_cached(graphs, sys, Arc::new(CostCache::new()))
+    ExploreRequest::chain().run_many(graphs, sys)
 }
 
 /// [`explore_many`] against an external (possibly pre-warmed, possibly
 /// persisted — see `hw::CostCache::load_from`) layer-cost cache.
+#[deprecated(
+    since = "0.6.0",
+    note = "use `ExploreRequest::chain().with_cache(cache).run_many(graphs, sys)`"
+)]
 pub fn explore_many_cached(
     graphs: &[Graph],
     sys: &SystemConfig,
     cache: Arc<CostCache>,
 ) -> Vec<Exploration> {
-    explore_pool(graphs, sys, cache, super::explore_two_platform_cached)
+    ExploreRequest::chain().with_cache(cache).run_many(graphs, sys)
 }
 
 /// [`explore_many`] for N-platform chains ([`explore_chain`] per model).
+#[deprecated(since = "0.6.0", note = "use `ExploreRequest::chain().run_many(graphs, sys)`")]
 pub fn explore_chain_many(graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
-    explore_chain_many_cached(graphs, sys, Arc::new(CostCache::new()))
+    ExploreRequest::chain().run_many(graphs, sys)
 }
 
 /// [`explore_chain_many`] against an external layer-cost cache.
+#[deprecated(
+    since = "0.6.0",
+    note = "use `ExploreRequest::chain().with_cache(cache).run_many(graphs, sys)`"
+)]
 pub fn explore_chain_many_cached(
     graphs: &[Graph],
     sys: &SystemConfig,
     cache: Arc<CostCache>,
 ) -> Vec<Exploration> {
-    explore_pool(graphs, sys, cache, explore_chain_cached)
+    ExploreRequest::chain().with_cache(cache).run_many(graphs, sys)
 }
 
-fn explore_pool(
+pub(crate) fn explore_pool(
     graphs: &[Graph],
     sys: &SystemConfig,
     cache: Arc<CostCache>,
-    explore: fn(&Graph, &SystemConfig, Arc<CostCache>) -> Exploration,
+    explore: impl Fn(&Graph, &SystemConfig, Arc<CostCache>) -> Exploration + Sync,
 ) -> Vec<Exploration> {
     let jobs = sys.jobs.max(1);
     // Outer parallelism over models; hand the leftover worker budget to
@@ -198,7 +258,7 @@ pub fn partition_histogram(ex: &Exploration, num_platforms: usize) -> Vec<usize>
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::config::SystemConfig;
+    use crate::config::{ReplicationCfg, SystemConfig};
     use crate::zoo;
 
     fn quick_four() -> SystemConfig {
@@ -212,7 +272,7 @@ mod tests {
     fn four_platform_chain_explores() {
         let g = zoo::squeezenet1_1(1000);
         let sys = quick_four();
-        let ex = explore_chain(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         assert!(!ex.candidates.is_empty());
         for c in &ex.candidates {
             assert!((1..=4).contains(&c.partitions));
@@ -225,7 +285,7 @@ mod tests {
     fn histogram_sums_to_front_size() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_four();
-        let ex = explore_chain(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let h = partition_histogram(&ex, 4);
         assert_eq!(h.iter().sum::<usize>(), ex.pareto.len());
     }
@@ -236,7 +296,7 @@ mod tests {
         // collapse to single-platform execution only.
         let g = zoo::googlenet(1000);
         let sys = quick_four();
-        let ex = explore_chain(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         let h = partition_histogram(&ex, 4);
         let multi: usize = h[1..].iter().sum();
         assert!(multi > 0, "no multi-partition schedule on the front: {h:?}");
@@ -246,8 +306,8 @@ mod tests {
     fn deterministic_given_seed() {
         let g = zoo::tiny_cnn(10);
         let sys = quick_four();
-        let a = explore_chain(&g, &sys);
-        let b = explore_chain(&g, &sys);
+        let a = ExploreRequest::chain().run(&g, &sys);
+        let b = ExploreRequest::chain().run(&g, &sys);
         assert_eq!(a.candidates.len(), b.candidates.len());
         assert_eq!(partition_histogram(&a, 4), partition_histogram(&b, 4));
     }
@@ -259,8 +319,8 @@ mod tests {
         serial.jobs = 1;
         let mut par = quick_four();
         par.jobs = 4;
-        let a = explore_chain(&g, &serial);
-        let b = explore_chain(&g, &par);
+        let a = ExploreRequest::chain().run(&g, &serial);
+        let b = ExploreRequest::chain().run(&g, &par);
         assert_eq!(a.candidates.len(), b.candidates.len());
         for (x, y) in a.candidates.iter().zip(&b.candidates) {
             assert_eq!(x.positions, y.positions);
@@ -278,12 +338,12 @@ mod tests {
         sys.search.victory = 10;
         sys.search.max_samples = 100;
         sys.jobs = 4;
-        let pooled = explore_many(&graphs, &sys);
+        let pooled = ExploreRequest::chain().run_many(&graphs, &sys);
         assert_eq!(pooled.len(), graphs.len());
         let mut serial = sys.clone();
         serial.jobs = 1;
         for (g, ex) in graphs.iter().zip(&pooled) {
-            let lone = crate::explorer::explore_two_platform(g, &serial);
+            let lone = ExploreRequest::chain().run(g, &serial);
             assert_eq!(ex.model, lone.model);
             assert_eq!(ex.pareto, lone.pareto);
             assert_eq!(ex.favorite, lone.favorite);
@@ -294,6 +354,54 @@ mod tests {
                 assert_eq!(x.throughput.to_bits(), y.throughput.to_bits());
                 assert_eq!(x.top1.to_bits(), y.top1.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn replicated_chain_search_respects_inventory_and_finds_gains() {
+        // A 4-platform chain with a small node inventory: every surfaced
+        // candidate's replica counts must fit the inventory, and the
+        // front must contain at least one genuinely replicated schedule
+        // (the throughput objective rewards it directly).
+        let g = zoo::squeezenet1_1(1000);
+        let mut sys = quick_four();
+        sys.replication = Some(ReplicationCfg { inventory: vec![3, 3, 2, 2] });
+        let ex = ExploreRequest::chain().run(&g, &sys);
+        assert!(!ex.candidates.is_empty());
+        let inv = [3usize, 3, 2, 2];
+        let mut replicated = 0usize;
+        for c in &ex.candidates {
+            for s in &c.plan {
+                assert!(s.replicas >= 1);
+                if c.feasible() {
+                    assert!(
+                        s.replicas <= inv[s.platform],
+                        "{}: {} replicas on platform {} (inventory {})",
+                        c.label,
+                        s.replicas,
+                        s.platform,
+                        inv[s.platform]
+                    );
+                }
+                if s.replicas > 1 {
+                    replicated += 1;
+                }
+            }
+        }
+        assert!(replicated > 0, "no replicated candidate survived to the front");
+        // Replication is monotone in throughput: re-evaluating any front
+        // member at full inventory can only raise (or tie, if link-bound)
+        // its service rate, never lower it.
+        let ev = PlanEvaluator::new(&g, &sys);
+        for c in ex.candidates.iter().filter(|c| c.feasible()).take(4) {
+            let full = ev.evaluate_replicated(&c.positions, &inv);
+            assert!(
+                full.throughput >= c.throughput,
+                "{}: full-inventory replication lowered throughput ({} < {})",
+                c.label,
+                full.throughput,
+                c.throughput
+            );
         }
     }
 }

@@ -232,6 +232,7 @@ impl<'a, 'b> DagReference<'a, 'b> {
                 out_bytes: 0,
                 out_hops: 0,
                 edges: Vec::new(),
+                replicas: 1,
             })
             .collect();
         for (ei, e) in dp.edges.iter().enumerate() {

@@ -1,0 +1,254 @@
+//! The unified exploration entry point: one [`ExploreRequest`] builder
+//! and one [`Explorer::run`] facade replace the pre-0.6 family of ten
+//! free functions (`explore_two_platform`, `explore_chain`,
+//! `explore_dag`, `explore_many`, `explore_chain_many` and their
+//! `_cached` twins), which remain as thin deprecated wrappers.
+//!
+//! A request has four independent knobs:
+//!
+//! | knob | builder call | replaces |
+//! |---|---|---|
+//! | candidate space | [`ExploreRequest::chain`] / [`ExploreRequest::dag`] | `explore_*` vs `explore_dag*` |
+//! | shared layer-cost cache | [`ExploreRequest::with_cache`] | the `_cached` twins |
+//! | worker budget | [`ExploreRequest::jobs`] | mutating `SystemConfig::jobs` |
+//! | per-stage replication | [`ExploreRequest::replication`] | — (new in 0.6) |
+//!
+//! and two executions: [`ExploreRequest::run`] for one model,
+//! [`ExploreRequest::run_many`] for a fleet sharing one cache and
+//! worker pool. Both delegate to [`Explorer::run`].
+//!
+//! Dispatch is by system shape, exactly as the old functions composed:
+//! `Chain` mode on an unreplicated two-platform system runs the
+//! exhaustive Definition-1 sweep (the paper's §V-B setting, bit-identical
+//! to the pre-0.6 `explore_two_platform`); any other chain system —
+//! more platforms, or a replication inventory — runs the NSGA-II chain
+//! search; `Dag` mode layers the convex-assignment search on top of
+//! whichever chain path applies.
+//!
+//! ```
+//! use partir::config::SystemConfig;
+//! use partir::explorer::ExploreRequest;
+//! use partir::zoo;
+//!
+//! let g = zoo::tiny_cnn(10);
+//! let mut sys = SystemConfig::paper_two_platform();
+//! sys.search.victory = 10;
+//! sys.search.max_samples = 100;
+//! let ex = ExploreRequest::chain().run(&g, &sys);
+//! assert!(ex.favorite.is_some());
+//! ```
+
+use super::{dag, multi, Exploration};
+use crate::config::{ReplicationCfg, SystemConfig};
+use crate::graph::Graph;
+use crate::hw::CostCache;
+use std::sync::Arc;
+
+/// Which candidate space an [`ExploreRequest`] searches.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ExploreMode {
+    /// Linear pipeline cuts over the topological schedule
+    /// (Definition 1): exhaustive on unreplicated two-platform systems,
+    /// NSGA-II beyond.
+    #[default]
+    Chain,
+    /// Convex monotone layer→platform assignments — the chain result
+    /// plus branch-parallel candidates ([`super::dag`]).
+    Dag,
+}
+
+/// One exploration, fully described: mode, models, cache, worker
+/// budget and replication. Build with [`ExploreRequest::chain`] /
+/// [`ExploreRequest::dag`], refine with the `with_*`-style setters, and
+/// execute with [`ExploreRequest::run`] / [`ExploreRequest::run_many`].
+///
+/// Every knob left unset inherits from the [`SystemConfig`] passed at
+/// execution time, so `ExploreRequest::chain().run(&g, &sys)` is the
+/// drop-in replacement for the deprecated `explore_two_platform(&g,
+/// &sys)` — bit-identical output included.
+#[derive(Debug, Clone, Default)]
+pub struct ExploreRequest {
+    mode: ExploreMode,
+    cache: Option<Arc<CostCache>>,
+    jobs: Option<usize>,
+    replication: Option<ReplicationCfg>,
+}
+
+impl ExploreRequest {
+    /// A request over the given candidate space with every other knob
+    /// inherited from the [`SystemConfig`] at execution time.
+    pub fn new(mode: ExploreMode) -> Self {
+        Self { mode, ..Self::default() }
+    }
+
+    /// Chain-cut exploration ([`ExploreMode::Chain`]).
+    pub fn chain() -> Self {
+        Self::new(ExploreMode::Chain)
+    }
+
+    /// DAG-assignment exploration ([`ExploreMode::Dag`]).
+    pub fn dag() -> Self {
+        Self::new(ExploreMode::Dag)
+    }
+
+    /// Share an external layer-cost cache (possibly pre-warmed or
+    /// persisted — see [`CostCache::load_from`](crate::hw::CostCache))
+    /// across this and other requests.
+    pub fn with_cache(mut self, cache: Arc<CostCache>) -> Self {
+        self.cache = Some(cache);
+        self
+    }
+
+    /// Override the worker count for this request (otherwise
+    /// `SystemConfig::jobs` applies). Results are bit-identical for any
+    /// value.
+    pub fn jobs(mut self, jobs: usize) -> Self {
+        self.jobs = Some(jobs.max(1));
+        self
+    }
+
+    /// Search per-stage replication against the given node inventory
+    /// (overrides `SystemConfig::replication` if both are set). The
+    /// genome gains one replica-count gene per platform; memory and
+    /// energy become additive per replica node while stage throughput
+    /// scales with the count.
+    pub fn replication(mut self, cfg: ReplicationCfg) -> Self {
+        self.replication = Some(cfg);
+        self
+    }
+
+    /// Execute for one model. See [`Explorer::run`].
+    pub fn run(&self, g: &Graph, sys: &SystemConfig) -> Exploration {
+        Explorer::run(self, std::slice::from_ref(g), sys)
+            .pop()
+            .expect("one model in, one exploration out")
+    }
+
+    /// Execute for a fleet of models concurrently on one worker pool,
+    /// sharing one layer-cost cache. Per-model results are element-wise
+    /// bit-identical to running [`ExploreRequest::run`] per model.
+    pub fn run_many(&self, graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
+        Explorer::run(self, graphs, sys)
+    }
+}
+
+/// The execution facade: every exploration — including all deprecated
+/// free-function wrappers — funnels through [`Explorer::run`].
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Explorer;
+
+impl Explorer {
+    /// Execute `req` for each model in `graphs` against `sys`.
+    ///
+    /// The request's overrides (jobs, replication) are applied to a
+    /// private copy of `sys`; a replication inventory — from the
+    /// request or from `sys.replication` (cluster presets) — is
+    /// validated against the platform count before any work starts.
+    ///
+    /// # Panics
+    ///
+    /// Panics if the system has fewer than two platforms or the
+    /// replication inventory does not match the platform count.
+    pub fn run(req: &ExploreRequest, graphs: &[Graph], sys: &SystemConfig) -> Vec<Exploration> {
+        let mut effective = sys.clone();
+        if let Some(jobs) = req.jobs {
+            effective.jobs = jobs;
+        }
+        if req.replication.is_some() {
+            effective.replication = req.replication.clone();
+        }
+        if let Some(rep) = &effective.replication {
+            if let Err(e) = rep.validate(effective.platforms.len()) {
+                panic!("invalid replication config: {e}");
+            }
+        }
+        let cache = req.cache.clone().unwrap_or_else(|| Arc::new(CostCache::new()));
+        let mode = req.mode;
+        multi::explore_pool(graphs, &effective, cache, move |g, sys, cache| match mode {
+            ExploreMode::Dag => dag::explore_dag_impl(g, sys, cache),
+            ExploreMode::Chain if sys.platforms.len() == 2 && sys.replication.is_none() => {
+                super::explore_two_platform_impl(g, sys, cache)
+            }
+            ExploreMode::Chain => multi::explore_chain_impl(g, sys, cache),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::zoo;
+
+    fn quick_sys() -> SystemConfig {
+        let mut sys = SystemConfig::paper_two_platform();
+        sys.search.victory = 10;
+        sys.search.max_samples = 100;
+        sys
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_wrappers_delegate_to_the_facade() {
+        // The acceptance contract: every pre-0.6 free function returns
+        // exactly what the request API returns.
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let via_request = ExploreRequest::chain().run(&g, &sys);
+        let via_wrapper = crate::explorer::explore_two_platform(&g, &sys);
+        assert_eq!(via_request.candidates.len(), via_wrapper.candidates.len());
+        assert_eq!(via_request.pareto, via_wrapper.pareto);
+        assert_eq!(via_request.nsga_front, via_wrapper.nsga_front);
+        assert_eq!(via_request.favorite, via_wrapper.favorite);
+        for (a, b) in via_request.candidates.iter().zip(&via_wrapper.candidates) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        }
+        let dag_request = ExploreRequest::dag().run(&g, &sys);
+        let dag_wrapper = crate::explorer::explore_dag(&g, &sys);
+        assert_eq!(dag_request.pareto, dag_wrapper.pareto);
+        assert_eq!(dag_request.favorite, dag_wrapper.favorite);
+    }
+
+    #[test]
+    fn request_jobs_override_keeps_results_bit_identical() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let a = ExploreRequest::chain().jobs(1).run(&g, &sys);
+        let b = ExploreRequest::chain().jobs(4).run(&g, &sys);
+        assert_eq!(a.pareto, b.pareto);
+        assert_eq!(a.favorite, b.favorite);
+        for (x, y) in a.candidates.iter().zip(&b.candidates) {
+            assert_eq!(x.latency_s.to_bits(), y.latency_s.to_bits());
+        }
+    }
+
+    #[test]
+    fn request_replication_override_wins_over_system() {
+        use crate::config::ReplicationCfg;
+        let g = zoo::tiny_cnn(10);
+        let mut sys = quick_sys();
+        sys.replication = Some(ReplicationCfg::uniform(2, 2));
+        let ex = ExploreRequest::chain()
+            .replication(ReplicationCfg { inventory: vec![3, 1] })
+            .run(&g, &sys);
+        for c in ex.candidates.iter().filter(|c| c.feasible()) {
+            for s in &c.plan {
+                let cap = [3usize, 1][s.platform];
+                assert!(s.replicas <= cap, "{}: over inventory", c.label);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid replication config")]
+    fn mismatched_inventory_panics() {
+        use crate::config::ReplicationCfg;
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let _ = ExploreRequest::chain()
+            .replication(ReplicationCfg { inventory: vec![1, 2, 3] })
+            .run(&g, &sys);
+    }
+}

@@ -46,6 +46,8 @@ pub struct EvalScratch {
     pub(crate) plan_len: usize,
     /// Genome-decode buffer for chain cut-position problems.
     pub(crate) positions_buf: Vec<usize>,
+    /// Genome-decode buffer for per-platform replica counts.
+    pub(crate) replicas_buf: Vec<usize>,
     // ---- DAG path ----
     /// Genome-decode buffer for layer→platform assignment problems.
     pub(crate) assign_buf: Vec<usize>,
@@ -117,6 +119,7 @@ impl EvalScratch {
         if self.plan_len == self.plan.len() {
             self.plan.push(StagePlan {
                 platform: 0,
+                replicas: 1,
                 latency_s: 0.0,
                 energy_j: 0.0,
                 out_bytes: 0,
@@ -126,6 +129,7 @@ impl EvalScratch {
         }
         let s = &mut self.plan[self.plan_len];
         s.platform = platform;
+        s.replicas = 1;
         s.latency_s = latency_s;
         s.energy_j = energy_j;
         s.out_bytes = 0;

@@ -45,6 +45,19 @@ pub fn simba_like() -> Accelerator {
     }
 }
 
+/// Cluster sizes the serving benchmarks sweep (`BENCH_cluster.json`).
+pub const CLUSTER_SIZES: [usize; 3] = [16, 32, 64];
+
+/// Node mix of a mixed EYR/SMB cluster of `total` physical nodes:
+/// `[eyr_nodes, smb_nodes]`. The 16-bit Eyeriss-like nodes take the
+/// ceiling half (they sit nearer the sensor and usually host the wider
+/// early layers), the Simba-like nodes the rest. Consumed by
+/// `config::SystemConfig::cluster`.
+pub fn mixed_cluster_inventory(total: usize) -> [usize; 2] {
+    let eyr = total.div_ceil(2).max(1);
+    [eyr, (total - eyr).max(1)]
+}
+
 /// Look up a preset by name (used by the TOML config loader).
 pub fn by_name(name: &str) -> Option<Accelerator> {
     match name.to_ascii_uppercase().as_str() {
@@ -63,6 +76,16 @@ mod tests {
         assert_eq!(by_name("eyr").unwrap().name, "EYR");
         assert_eq!(by_name("Simba").unwrap().name, "SMB");
         assert!(by_name("tpu").is_none());
+    }
+
+    #[test]
+    fn cluster_inventory_covers_every_node() {
+        for n in CLUSTER_SIZES.into_iter().chain([2, 3, 17]) {
+            let [eyr, smb] = mixed_cluster_inventory(n);
+            assert_eq!(eyr + smb, n, "n={n}");
+            assert!(eyr >= smb, "EYR takes the ceiling half (n={n})");
+            assert!(smb >= 1, "n={n}");
+        }
     }
 
     #[test]

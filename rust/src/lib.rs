@@ -11,25 +11,35 @@
 //! ## The pipeline in five lines
 //!
 //! ```
-//! use partir::{config::SystemConfig, explorer, zoo};
+//! use partir::{config::SystemConfig, explorer::ExploreRequest, zoo};
 //! let model = zoo::tiny_cnn(10);                 // a layer DAG from the zoo
 //! let mut sys = SystemConfig::paper_two_platform();
 //! sys.search.victory = 5; sys.search.max_samples = 50; // quick mapper budget
-//! let ex = explorer::explore_two_platform(&model, &sys);
+//! let ex = ExploreRequest::chain().run(&model, &sys);
 //! assert!(ex.favorite.is_some() && !ex.pareto.is_empty());
 //! ```
 //!
 //! ## Partitioning models
 //!
+//! Every exploration is described by an [`explorer::ExploreRequest`]
+//! (mode, models, shared cache, worker budget, replication) and executed
+//! by [`explorer::Explorer::run`].
+//!
 //! * **Chain cuts** (the paper's Definition 1): cut positions on one
-//!   topological schedule — [`explorer::explore_two_platform`] and
-//!   [`explorer::multi::explore_chain`].
+//!   topological schedule — [`explorer::ExploreMode::Chain`], exhaustive
+//!   on unreplicated two-platform systems, NSGA-II beyond.
 //! * **Convex DAG partitions** (beyond the paper): monotone
 //!   layer→platform assignments whose stages may run parallel branches
-//!   on distinct platforms — [`explorer::explore_dag`], built on
+//!   on distinct platforms — [`explorer::ExploreMode::Dag`], built on
 //!   [`graph::partition::DagPartition`] and evaluated by
 //!   [`explorer::PlanEvaluator::evaluate_dag`]. On sequential models
 //!   this collapses bit-identically onto the chain result.
+//! * **Per-stage replication** (cluster scale): a
+//!   [`config::ReplicationCfg`] node inventory — from
+//!   [`config::SystemConfig::cluster`], a `[replication]` TOML section
+//!   or [`explorer::ExploreRequest::replication`] — adds one
+//!   replica-count gene per platform slot; stage throughput scales with
+//!   the count while memory stays per node and energy adds per node.
 //!
 //! ## Architecture (three layers)
 //!

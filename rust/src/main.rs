@@ -20,7 +20,7 @@ use partir::config::SystemConfig;
 use partir::coordinator::{
     run_pipeline, simulated_specs_from_plan, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec,
 };
-use partir::explorer::{explore_dag_cached, explore_two_platform_cached, multi};
+use partir::explorer::{multi, ExploreRequest};
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::hw::{CacheLoad, CostCache, HwEvaluator};
 use partir::report;
@@ -91,10 +91,19 @@ fn dispatch(cmd: Command, raw: &[String], f: fn(&Args) -> anyhow::Result<()>) ->
 }
 
 fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
-    let mut sys = match args.get("config") {
-        Some(path) => SystemConfig::from_toml_file(Path::new(path))
-            .map_err(|e| anyhow::anyhow!("config: {e}"))?,
-        None => SystemConfig::paper_two_platform(),
+    let mut sys = if let Some(n) = args.get_usize("cluster").map_err(anyhow::Error::msg)? {
+        anyhow::ensure!(
+            args.get("config").is_none(),
+            "--cluster and --config are mutually exclusive"
+        );
+        anyhow::ensure!((2..=64).contains(&n), "--cluster takes 2..=64 nodes");
+        SystemConfig::cluster(n)
+    } else {
+        match args.get("config") {
+            Some(path) => SystemConfig::from_toml_file(Path::new(path))
+                .map_err(|e| anyhow::anyhow!("config: {e}"))?,
+            None => SystemConfig::paper_two_platform(),
+        }
     };
     if let Some(seed) = args.get_u64("seed").map_err(anyhow::Error::msg)? {
         sys.seed = seed;
@@ -119,7 +128,21 @@ fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
     if let Some(dir) = args.get("cache-dir") {
         sys.cache_dir = Some(PathBuf::from(dir));
     }
+    apply_replicas(args, &mut sys)?;
     Ok(sys)
+}
+
+/// `--replicas R`: search per-stage replication with a uniform
+/// inventory of `R` nodes per platform slot (beats the config file's
+/// `[replication]` section). A `--cluster` preset already carries its
+/// own inventory, which `--replicas` overrides.
+fn apply_replicas(args: &Args, sys: &mut SystemConfig) -> anyhow::Result<()> {
+    if let Some(r) = args.get_usize("replicas").map_err(anyhow::Error::msg)? {
+        anyhow::ensure!(r >= 1, "--replicas must be at least 1");
+        sys.replication =
+            Some(partir::config::ReplicationCfg::uniform(sys.platforms.len(), r));
+    }
+    Ok(())
 }
 
 /// Open the persistent layer-cost cache named by `cache_dir` (empty
@@ -207,6 +230,8 @@ fn explore_cmd() -> Command {
         .opt("out", None, "write fig2-style CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+        .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
+        .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
@@ -220,12 +245,12 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         "explore needs a 2-platform config; use `chain` for longer chains"
     );
     let cache = open_cache(&sys);
-    let ex = if args.flag("dag") {
-        explore_dag_cached(&g, &sys, Arc::clone(&cache))
-    } else {
-        explore_two_platform_cached(&g, &sys, Arc::clone(&cache))
-    };
+    let req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    let ex = req.with_cache(Arc::clone(&cache)).run(&g, &sys);
     persist_cache(&sys, &cache);
+    if let Some(rep) = &sys.replication {
+        println!("replication inventory (nodes per platform slot): {:?}", rep.inventory);
+    }
     print!("{}", report::render_exploration(&ex, &sys));
     if args.flag("dag") {
         let parallel = ex.candidates.iter().filter(|c| c.branch_parallel()).count();
@@ -253,6 +278,8 @@ fn chain_cmd() -> Command {
         .opt("out", None, "write Pareto-front CSV to this path")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+        .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
+        .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
@@ -260,7 +287,7 @@ fn chain_cmd() -> Command {
 
 fn cmd_chain(args: &Args) -> anyhow::Result<()> {
     let g = build_model(args)?;
-    let sys = if args.get("config").is_some() {
+    let sys = if args.get("config").is_some() || args.get("cluster").is_some() {
         load_sys(args)?
     } else {
         let mut sys = SystemConfig::paper_four_platform();
@@ -278,15 +305,16 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
             sys.cache_dir = Some(PathBuf::from(dir));
         }
         sys.jobs = jobs_arg(args)?;
+        apply_replicas(args, &mut sys)?;
         sys
     };
     let cache = open_cache(&sys);
-    let ex = if args.flag("dag") {
-        explore_dag_cached(&g, &sys, Arc::clone(&cache))
-    } else {
-        multi::explore_chain_cached(&g, &sys, Arc::clone(&cache))
-    };
+    let req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    let ex = req.with_cache(Arc::clone(&cache)).run(&g, &sys);
     persist_cache(&sys, &cache);
+    if let Some(rep) = &sys.replication {
+        println!("replication inventory (nodes per platform slot): {:?}", rep.inventory);
+    }
     print!("{}", report::render_exploration(&ex, &sys));
     if args.flag("dag") {
         let parallel = ex.candidates.iter().filter(|c| c.branch_parallel()).count();
@@ -394,11 +422,8 @@ fn cmd_pipeline_explored(name: &str, args: &Args) -> anyhow::Result<()> {
     sys.search.victory = 20;
     sys.search.max_samples = 200;
     sys.jobs = default_jobs();
-    let ex = if args.flag("dag") {
-        explore_dag_cached(&g, &sys, Arc::new(CostCache::new()))
-    } else {
-        explore_two_platform_cached(&g, &sys, Arc::new(CostCache::new()))
-    };
+    let req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    let ex = req.with_cache(Arc::new(CostCache::new())).run(&g, &sys);
     let fav = ex
         .favorite_metrics()
         .ok_or_else(|| anyhow::anyhow!("no feasible candidate to execute"))?;
@@ -527,6 +552,8 @@ fn simulate_cmd() -> Command {
     .opt("out", None, "write the ranking CSV to this path")
     .opt("jobs", None, "worker threads (default: all hardware threads)")
     .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+    .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
+    .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
     .flag("dag", "explore convex DAG partitions too — branch-parallel deployments enter the ranking")
     .flag("qat", "apply QAT accuracy recovery")
     .flag("full-search", "full mapper search budget (default: fast, the DSE is a means here)")
@@ -543,15 +570,12 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     }
 
     // 1. Explore: the candidate set the simulator ranks. `--dag` widens
-    // it with branch-parallel convex DAG partitions.
+    // it with branch-parallel convex DAG partitions; the request facade
+    // picks exhaustive vs NSGA-II from the (possibly replicated) system
+    // shape.
     let cache = open_cache(&sys);
-    let ex = if args.flag("dag") {
-        explore_dag_cached(&g, &sys, Arc::clone(&cache))
-    } else if sys.platforms.len() == 2 {
-        explore_two_platform_cached(&g, &sys, Arc::clone(&cache))
-    } else {
-        multi::explore_chain_cached(&g, &sys, Arc::clone(&cache))
-    };
+    let req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    let ex = req.with_cache(Arc::clone(&cache)).run(&g, &sys);
     persist_cache(&sys, &cache);
     let single_best = ex
         .candidates

@@ -249,7 +249,7 @@ pub fn front_csv(ex: &Exploration, metrics: &[Metric]) -> Csv {
 mod tests {
     use super::*;
     use crate::config::SystemConfig;
-    use crate::explorer::explore_two_platform;
+    use crate::explorer::ExploreRequest;
     use crate::zoo;
 
     fn quick_ex() -> (Exploration, SystemConfig) {
@@ -257,7 +257,7 @@ mod tests {
         sys.search.victory = 10;
         sys.search.max_samples = 80;
         let g = zoo::tiny_cnn(10);
-        (explore_two_platform(&g, &sys), sys)
+        (ExploreRequest::chain().run(&g, &sys), sys)
     }
 
     #[test]

@@ -17,7 +17,7 @@
 
 use super::{fig2_csv, fig3_csv, table2_csv, table2_markdown, throughput_gain};
 use crate::config::SystemConfig;
-use crate::explorer::{explore_two_platform, multi, Exploration};
+use crate::explorer::{multi, Exploration, ExploreRequest};
 use crate::graph::Graph;
 use crate::hw::{CacheLoad, CostCache};
 use crate::zoo;
@@ -52,7 +52,7 @@ pub fn fig2_system(fast: bool, jobs: usize) -> SystemConfig {
 pub fn fig2_exploration(model: &str, fast: bool, jobs: usize) -> (Exploration, SystemConfig) {
     let g = zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}"));
     let sys = fig2_system(fast, jobs);
-    (explore_two_platform(&g, &sys), sys)
+    (ExploreRequest::chain().run(&g, &sys), sys)
 }
 
 /// Fig 2: all six CNN series, explored concurrently on a shared worker
@@ -75,7 +75,8 @@ pub fn fig2_with_cache(
         .iter()
         .map(|&(model, _)| zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}")))
         .collect();
-    let explorations = multi::explore_many_cached(&graphs, &sys, Arc::clone(cache));
+    let explorations =
+        ExploreRequest::chain().with_cache(Arc::clone(cache)).run_many(&graphs, &sys);
     let mut gains = Vec::new();
     for (&(model, file), ex) in FIG2_FILES.iter().zip(&explorations) {
         fig2_csv(ex)
@@ -134,7 +135,8 @@ pub fn table2_with_cache(
     // `search_fingerprint`) is only valid if the two never drift apart.
     sys.search = fig2_system(fast, jobs).search;
     let graphs: Vec<Graph> = zoo::PAPER_MODELS.iter().map(|m| zoo::build(m).unwrap()).collect();
-    let explorations = multi::explore_chain_many_cached(&graphs, &sys, Arc::clone(cache));
+    let explorations =
+        ExploreRequest::chain().with_cache(Arc::clone(cache)).run_many(&graphs, &sys);
     let mut rows = Vec::new();
     for (model, ex) in zoo::PAPER_MODELS.iter().zip(&explorations) {
         let hist = multi::partition_histogram(ex, sys.platforms.len());

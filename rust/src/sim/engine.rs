@@ -2,14 +2,24 @@
 //! event heap with sequence-number tie-breaking, and per-stage state
 //! machines (bounded queue → dynamic batcher → server → link).
 //!
+//! A stage with `replicas > 1` is a bank of identical servers: each
+//! replica owns its bounded queue, batch timer and link port (a replica
+//! node ships its own output — replication multiplies NICs along with
+//! accelerators), and the stage's [`DispatchPolicy`] routes every
+//! delivered request to exactly one replica. With one replica per stage
+//! the routing is the identity and the event stream — and therefore the
+//! [`super::SimReport::fingerprint`] — is bit-identical to the
+//! pre-replication engine under either policy.
+//!
 //! Everything here is single-threaded and free of wall-clock reads and
 //! RNG: arrivals are precomputed by the scenario on the caller's
-//! thread, service and link times are pure functions of `(stage, batch
-//! size, virtual time)`. That makes a run a pure function of its inputs
-//! — the foundation of the bit-identical `--jobs` contract.
+//! thread, service and link times are pure functions of `(stage,
+//! replica, batch size, virtual time)`, and round-robin cursors advance
+//! in delivery order. That makes a run a pure function of its inputs —
+//! the foundation of the bit-identical `--jobs` contract.
 
 use super::scenario::Scenario;
-use super::{Deployment, SimCfg, SimEdge, SimReport};
+use super::{Deployment, DispatchPolicy, SimCfg, SimEdge, SimReport};
 use crate::coordinator::{BatchPolicy, Completion, PipelineReport, StageStats};
 use crate::link::LinkModel;
 use std::cmp::Reverse;
@@ -25,18 +35,20 @@ pub(crate) fn s_to_ns(s: f64) -> u64 {
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EventKind {
-    /// The batch-wait budget of `stage`'s forming batch expired.
-    /// Stale generations (a batch already started) are ignored.
-    BatchTimeout { stage: usize, gen: u64 },
-    /// `stage`'s in-flight batch finished compute + link transfer.
-    ComputeDone { stage: usize },
+    /// The batch-wait budget of `stage`/`replica`'s forming batch
+    /// expired. Stale generations (a batch already started) are ignored.
+    BatchTimeout { stage: usize, replica: usize, gen: u64 },
+    /// `stage`/`replica`'s in-flight batch finished compute + link
+    /// transfer.
+    ComputeDone { stage: usize, replica: usize },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 struct Event {
     at: u64,
     /// Tie-break for identical timestamps: strictly increasing issue
-    /// order, so the heap pops deterministically.
+    /// order, so the heap pops deterministically (the `kind` — and with
+    /// it the replica index — never participates in the ordering).
     seq: u64,
     kind: EventKind,
 }
@@ -56,8 +68,10 @@ struct StageParams {
     energy_per_item_j: f64,
 }
 
+/// One replica server of a stage: bounded queue, batch timer, in-flight
+/// batch and its private accounting.
 #[derive(Debug, Default)]
-struct StageState {
+struct Server {
     queue: VecDeque<Req>,
     busy: bool,
     /// Current batch-timer generation; a timeout event with an older
@@ -68,6 +82,14 @@ struct StageState {
     items: u64,
     busy_ns: u64,
     link_ns: u64,
+}
+
+#[derive(Debug, Default)]
+struct StageState {
+    /// The replica bank (`len == StageModel::replicas`).
+    servers: Vec<Server>,
+    /// Round-robin cursor over the bank (advances in delivery order).
+    rr_next: usize,
     dropped: u64,
 }
 
@@ -99,6 +121,7 @@ struct Engine {
     /// `batch.max_wait` in virtual ns (timer scheduling).
     wait_ns: u64,
     depth: usize,
+    dispatch: DispatchPolicy,
     heap: BinaryHeap<Reverse<Event>>,
     seq: u64,
     stages: Vec<StageState>,
@@ -160,8 +183,41 @@ impl Engine {
         self.enqueue(s, req, t);
     }
 
+    /// Pick the replica server of stage `s` that receives the next
+    /// request — the load balancer in front of the replica bank. Both
+    /// policies are pure functions of engine state, so routing is
+    /// deterministic; with a single replica they are the identity.
+    fn route(&mut self, s: usize) -> usize {
+        let st = &mut self.stages[s];
+        let n = st.servers.len();
+        if n == 1 {
+            return 0;
+        }
+        match self.dispatch {
+            DispatchPolicy::RoundRobin => {
+                let r = st.rr_next;
+                st.rr_next = (r + 1) % n;
+                r
+            }
+            DispatchPolicy::QueueAware => {
+                // Join-shortest-queue, counting the in-flight batch as
+                // one unit of backlog so an idle replica beats a busy
+                // one with an empty queue; ties go to the lowest index.
+                let load = |srv: &Server| srv.queue.len() + usize::from(srv.busy);
+                let mut best = 0;
+                for i in 1..n {
+                    if load(&st.servers[i]) < load(&st.servers[best]) {
+                        best = i;
+                    }
+                }
+                best
+            }
+        }
+    }
+
     fn enqueue(&mut self, s: usize, req: Req, t: u64) {
-        if self.stages[s].queue.len() >= self.depth {
+        let r = self.route(s);
+        if self.stages[s].servers[r].queue.len() >= self.depth {
             // Bounded queue: shed load, account the drop. A drop is a
             // request leaving the system, so it advances the wall.
             // Copies still in flight on sibling branches are discarded
@@ -177,38 +233,40 @@ impl Engine {
             });
             return;
         }
-        self.stages[s].queue.push_back(req);
-        if !self.stages[s].busy {
+        self.stages[s].servers[r].queue.push_back(req);
+        if !self.stages[s].servers[r].busy {
             // A full batch dispatches immediately (shared policy); a
             // zero wait budget instead rides the same-instant timer so
             // co-arriving requests still batch together, exactly like
             // `collect`'s post-deadline drain.
-            if self.batch.full(self.stages[s].queue.len()) {
-                self.start_batch(s, t);
-            } else if self.stages[s].queue.len() == 1 {
+            let qlen = self.stages[s].servers[r].queue.len();
+            if self.batch.full(qlen) {
+                self.start_batch(s, r, t);
+            } else if qlen == 1 {
                 // New head on an idle server: the wait budget starts now
                 // (the coordinator's `collect` measures from its first
                 // recv — same semantics).
-                self.schedule_timeout(s, t);
+                self.schedule_timeout(s, r, t);
             }
         }
     }
 
-    fn schedule_timeout(&mut self, s: usize, t: u64) {
-        self.stages[s].timer_gen += 1;
-        let gen = self.stages[s].timer_gen;
-        self.push(t + self.wait_ns, EventKind::BatchTimeout { stage: s, gen });
+    fn schedule_timeout(&mut self, s: usize, r: usize, t: u64) {
+        self.stages[s].servers[r].timer_gen += 1;
+        let gen = self.stages[s].servers[r].timer_gen;
+        self.push(t + self.wait_ns, EventKind::BatchTimeout { stage: s, replica: r, gen });
     }
 
-    fn start_batch(&mut self, s: usize, t: u64) {
-        let n = self.batch.take(self.stages[s].queue.len());
+    fn start_batch(&mut self, s: usize, r: usize, t: u64) {
+        let n = self.batch.take(self.stages[s].servers[r].queue.len());
         debug_assert!(n >= 1, "starting an empty batch");
         let p = self.params[s];
         let svc_ns =
             s_to_ns((p.base_s + p.per_item_s * n as f64) * self.slowdown_factor(s, t));
         // The transfers begin when compute ends — fault windows are
         // defined over *transfer* start times (see `FaultWindow`) — and
-        // are serialized into the sending stage, one per out-edge.
+        // are serialized into the sending replica, one per out-edge
+        // (each replica node owns its link port).
         let t_xfer = t + svc_ns;
         let link_fct = self.link_factor(t_xfer);
         let (mut link_ns, mut link_energy) = (0u64, 0.0f64);
@@ -220,18 +278,18 @@ impl Engine {
             }
         }
         self.energy_j += link_energy + p.energy_per_item_j * n as f64;
-        let st = &mut self.stages[s];
-        st.timer_gen += 1; // invalidate any pending batch timer
-        st.in_flight = st.queue.drain(..n).collect();
-        st.busy = true;
-        st.batches += 1;
-        st.items += n as u64;
-        st.busy_ns += svc_ns;
-        st.link_ns += link_ns;
-        // The link transfer occupies the sending stage (the coordinator
-        // sleeps it on the stage thread), so the server frees — and the
-        // batch lands downstream — when both are done.
-        self.push(t + svc_ns + link_ns, EventKind::ComputeDone { stage: s });
+        let srv = &mut self.stages[s].servers[r];
+        srv.timer_gen += 1; // invalidate any pending batch timer
+        srv.in_flight = srv.queue.drain(..n).collect();
+        srv.busy = true;
+        srv.batches += 1;
+        srv.items += n as u64;
+        srv.busy_ns += svc_ns;
+        srv.link_ns += link_ns;
+        // The link transfer occupies the sending replica (the
+        // coordinator sleeps it on the stage thread), so the server
+        // frees — and the batch lands downstream — when both are done.
+        self.push(t + svc_ns + link_ns, EventKind::ComputeDone { stage: s, replica: r });
     }
 
     // The wall clock (`last_ns`) advances only when a request *leaves*
@@ -241,16 +299,17 @@ impl Engine {
     fn dispatch(&mut self, e: Event) {
         self.events += 1;
         match e.kind {
-            EventKind::BatchTimeout { stage, gen } => {
-                let st = &self.stages[stage];
-                if st.busy || gen != st.timer_gen || st.queue.is_empty() {
+            EventKind::BatchTimeout { stage, replica, gen } => {
+                let srv = &self.stages[stage].servers[replica];
+                if srv.busy || gen != srv.timer_gen || srv.queue.is_empty() {
                     return; // stale timer
                 }
-                self.start_batch(stage, e.at);
+                self.start_batch(stage, replica, e.at);
             }
-            EventKind::ComputeDone { stage } => {
-                let batch = std::mem::take(&mut self.stages[stage].in_flight);
-                self.stages[stage].busy = false;
+            EventKind::ComputeDone { stage, replica } => {
+                let batch =
+                    std::mem::take(&mut self.stages[stage].servers[replica].in_flight);
+                self.stages[stage].servers[replica].busy = false;
                 if self.succ[stage].is_empty() {
                     // Terminal stage: the request leaves the system
                     // (unless a sibling branch already dropped it).
@@ -283,11 +342,11 @@ impl Engine {
                 // immediately, otherwise restart the wait budget (the
                 // coordinator's collect() re-arms its deadline the same
                 // way when it loops).
-                let qlen = self.stages[stage].queue.len();
+                let qlen = self.stages[stage].servers[replica].queue.len();
                 if self.batch.full(qlen) {
-                    self.start_batch(stage, e.at);
+                    self.start_batch(stage, replica, e.at);
                 } else if qlen > 0 {
-                    self.schedule_timeout(stage, e.at);
+                    self.schedule_timeout(stage, replica, e.at);
                 }
             }
         }
@@ -364,9 +423,18 @@ pub(crate) fn run_with_arrivals(
         batch: BatchPolicy::new(cfg.batch.max_batch.max(1), cfg.batch.max_wait),
         wait_ns: s_to_ns(cfg.batch.max_wait.as_secs_f64()),
         depth: cfg.queue_depth.max(1),
+        dispatch: cfg.dispatch,
         heap: BinaryHeap::new(),
         seq: 0,
-        stages: dep.stages.iter().map(|_| StageState::default()).collect(),
+        stages: dep
+            .stages
+            .iter()
+            .map(|m| StageState {
+                servers: (0..m.replicas.max(1)).map(|_| Server::default()).collect(),
+                rr_next: 0,
+                dropped: 0,
+            })
+            .collect(),
         completions: Vec::with_capacity(arrivals.len()),
         energy_j: 0.0,
         events: 0,
@@ -414,16 +482,19 @@ pub(crate) fn run_with_arrivals(
         None => 0,
     };
     let wall = Duration::from_nanos(eng.last_ns);
+    // Replica accounting folds into the stage row (the report shape is
+    // shared with the coordinator): items/batches/busy/link sum over
+    // the bank, so `busy` can exceed the wall on replicated stages.
     let stages: Vec<StageStats> = dep
         .stages
         .iter()
         .zip(&eng.stages)
         .map(|(m, st)| StageStats {
             name: m.name.clone(),
-            batches: st.batches,
-            items: st.items,
-            busy: Duration::from_nanos(st.busy_ns),
-            link: Duration::from_nanos(st.link_ns),
+            batches: st.servers.iter().map(|s| s.batches).sum(),
+            items: st.servers.iter().map(|s| s.items).sum(),
+            busy: Duration::from_nanos(st.servers.iter().map(|s| s.busy_ns).sum()),
+            link: Duration::from_nanos(st.servers.iter().map(|s| s.link_ns).sum()),
             failures: st.dropped,
         })
         .collect();
@@ -454,6 +525,7 @@ mod tests {
             batch: BatchPolicy::new(max_batch, Duration::from_micros(wait_us)),
             queue_depth: depth,
             seed: 42,
+            dispatch: DispatchPolicy::RoundRobin,
         }
     }
 
@@ -707,5 +779,108 @@ mod tests {
         // Virtual wall is ~80 s of simulated serving.
         assert!(r.pipeline.wall.as_secs_f64() > 10.0);
         assert!(real < 10.0, "simulation too slow: {real}s");
+    }
+
+    #[test]
+    fn replicated_bottleneck_scales_throughput() {
+        // A 5 ms bottleneck stage caps the chain at ~200/s; 4 replicas
+        // lift the ceiling to ~800/s under the same 600/s offered load.
+        let base = Deployment::synthetic("rep1", &[1e-5, 0.005], 0);
+        let rep = base.clone().replicate_stage(1, 4);
+        let sc = Scenario::steady(4000, 600.0);
+        let r1 = simulate(&base, &cfg(1, 100, 32), &sc);
+        let r4 = simulate(&rep, &cfg(1, 100, 32), &sc);
+        assert!(r1.dropped > 0, "unreplicated bottleneck should shed load");
+        assert_eq!(r4.dropped, 0, "4 replicas at 600/s offered should keep up");
+        assert!(
+            r4.throughput() > 2.0 * r1.throughput(),
+            "replication gain too small: {} vs {}",
+            r4.throughput(),
+            r1.throughput()
+        );
+    }
+
+    #[test]
+    fn replica_fanout_conserves_requests() {
+        // Overloaded even with replicas: every request still leaves the
+        // system exactly once, and per-stage items sum to deliveries.
+        let dep = Deployment::synthetic("cons", &[1e-5, 0.002], 0).replicate_stage(1, 3);
+        for dispatch in [DispatchPolicy::RoundRobin, DispatchPolicy::QueueAware] {
+            let mut c = cfg(1, 50, 8);
+            c.dispatch = dispatch;
+            let r = simulate(&dep, &c, &Scenario::steady(5000, 5000.0));
+            assert_eq!(r.pipeline.completions.len(), 5000, "{dispatch:?}");
+            assert_eq!(
+                r.dropped as usize + r.pipeline.completed(),
+                5000,
+                "{dispatch:?}"
+            );
+            for (i, c) in r.pipeline.completions.iter().enumerate() {
+                assert_eq!(c.id, i as u64, "{dispatch:?}: duplicate or lost completion");
+            }
+            // Items processed by the replicated stage = requests that
+            // were not dropped upstream of (or at) its queues.
+            let s1 = &r.pipeline.stages[1];
+            assert_eq!(s1.items + r.dropped, 5000, "{dispatch:?}");
+        }
+    }
+
+    #[test]
+    fn single_replica_fingerprint_is_policy_invariant() {
+        // With one replica per stage both dispatch policies route
+        // identically, so reports must be bit-identical — and equal to
+        // the pre-replication engine's output by construction.
+        let dep = Deployment::synthetic("inv", &[0.0004, 0.0006], 8192);
+        let sc = Scenario::bursty(10_000, 800.0, 5000.0);
+        let mut rr = cfg(8, 500, 128);
+        rr.dispatch = DispatchPolicy::RoundRobin;
+        let mut qa = cfg(8, 500, 128);
+        qa.dispatch = DispatchPolicy::QueueAware;
+        let a = simulate(&dep, &rr, &sc);
+        let b = simulate(&dep, &qa, &sc);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn queue_aware_dispatch_beats_round_robin_on_skewed_batches() {
+        // Round-robin keeps feeding a replica that is stuck behind a
+        // slow batch; join-shortest-queue routes around the backlog.
+        // Construct the skew with a slowdown window on the replicated
+        // stage: both replicas slow down, but queue-aware rebalances
+        // the queues while round-robin lets one replica's queue drop.
+        let dep = Deployment::synthetic("skew", &[1e-5, 0.004], 0).replicate_stage(1, 2);
+        let sc = Scenario::steady(3000, 450.0);
+        let mut rr = cfg(1, 50, 4);
+        rr.dispatch = DispatchPolicy::RoundRobin;
+        let mut qa = cfg(1, 50, 4);
+        qa.dispatch = DispatchPolicy::QueueAware;
+        let a = simulate(&dep, &rr, &sc);
+        let b = simulate(&dep, &qa, &sc);
+        // Both conserve; queue-aware never drops more than round-robin
+        // under symmetric replicas (it only routes to shorter queues).
+        assert_eq!(a.pipeline.completions.len(), 3000);
+        assert_eq!(b.pipeline.completions.len(), 3000);
+        assert!(
+            b.dropped <= a.dropped,
+            "queue-aware dropped more ({}) than round-robin ({})",
+            b.dropped,
+            a.dropped
+        );
+    }
+
+    #[test]
+    fn replicated_runs_are_bit_identical() {
+        let dep = Deployment::synthetic("repdet", &[0.0004, 0.0006], 8192)
+            .replicate_stage(1, 3);
+        let sc = Scenario::bursty(20_000, 800.0, 5000.0);
+        for dispatch in [DispatchPolicy::RoundRobin, DispatchPolicy::QueueAware] {
+            let mut c = cfg(8, 500, 128);
+            c.dispatch = dispatch;
+            let a = simulate(&dep, &c, &sc);
+            let b = simulate(&dep, &c, &sc);
+            assert_eq!(a.fingerprint(), b.fingerprint(), "{dispatch:?}");
+            assert_eq!(a.events, b.events, "{dispatch:?}");
+        }
     }
 }

@@ -169,6 +169,7 @@ mod tests {
                 out_bytes: 0,
                 out_hops: 0,
                 edges: Vec::new(),
+                replicas: 1,
             }],
             assign: None,
             violation: 0.0,
@@ -192,6 +193,7 @@ mod tests {
                     out_bytes: 1460,
                     out_hops: 1,
                     edges: vec![PlanEdge { to: Some(1), bytes: 1460, hops: 1 }],
+                    replicas: 1,
                 },
                 StagePlan {
                     platform: 1,
@@ -200,6 +202,7 @@ mod tests {
                     out_bytes: 0,
                     out_hops: 0,
                     edges: Vec::new(),
+                    replicas: 1,
                 },
             ],
             assign: None,

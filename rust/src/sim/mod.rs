@@ -24,7 +24,13 @@
 //!   fork a request to several successors (branch-parallel DAG
 //!   partitions from `explorer::dag`) and a join stage waits for every
 //!   copy before serving — a request dropped on one branch is accounted
-//!   once and its surviving copies are discarded at their next hop.
+//!   once and its surviving copies are discarded at their next hop;
+//! * a stage with [`StageModel::replicas`] ` > 1` is a **replica bank**:
+//!   identical servers, each with its own bounded queue, batch timer and
+//!   link port, fed by the configured [`DispatchPolicy`] (round-robin or
+//!   join-shortest-queue). With one replica everywhere both policies are
+//!   the identity and the event stream is bit-identical to the
+//!   unreplicated engine.
 //!
 //! Determinism contract (same as the DSE, see `util::parallel`): every
 //! random draw happens up front on the coordinator thread, in
@@ -71,6 +77,11 @@ pub struct StageModel {
     /// Aggregate link hops of this stage's transfers (idle platforms
     /// forward).
     pub out_hops: u64,
+    /// Number of identical replica servers backing this stage (≥ 1).
+    /// Each replica owns a bounded queue, a batch timer and a link
+    /// port; the [`DispatchPolicy`] routes every delivered request to
+    /// exactly one of them.
+    pub replicas: usize,
 }
 
 /// One stage-graph forwarding edge of a [`Deployment`]: a per-item
@@ -151,6 +162,7 @@ impl Deployment {
                     energy_per_item_j: p.energy_j,
                     out_bytes_per_item: p.out_bytes,
                     out_hops: p.out_hops,
+                    replicas: p.replicas.max(1),
                 })
                 .collect(),
             link: sys.link.clone(),
@@ -176,6 +188,7 @@ impl Deployment {
                     energy_per_item_j: 0.0,
                     out_bytes_per_item: if i + 1 < n { cut_bytes } else { 0 },
                     out_hops: u64::from(i + 1 < n),
+                    replicas: 1,
                 })
                 .collect(),
             link: LinkModel::gigabit_ethernet(),
@@ -212,6 +225,7 @@ impl Deployment {
             energy_per_item_j: 0.0,
             out_bytes_per_item: cut_bytes * nb as u64,
             out_hops: nb as u64,
+            replicas: 1,
         }];
         let mut edges: Vec<Vec<SimEdge>> = vec![(1..=nb)
             .map(|b| SimEdge { to: Some(b), bytes_per_item: cut_bytes, hops: 1 })
@@ -224,6 +238,7 @@ impl Deployment {
                 energy_per_item_j: 0.0,
                 out_bytes_per_item: cut_bytes,
                 out_hops: 1,
+                replicas: 1,
             });
             edges.push(vec![SimEdge { to: Some(sink), bytes_per_item: cut_bytes, hops: 1 }]);
         }
@@ -234,10 +249,35 @@ impl Deployment {
             energy_per_item_j: 0.0,
             out_bytes_per_item: 0,
             out_hops: 0,
+            replicas: 1,
         });
         edges.push(Vec::new());
         Deployment { label: label.to_string(), stages, link: LinkModel::gigabit_ethernet(), edges }
     }
+
+    /// Back `stage` with a bank of `replicas` identical servers —
+    /// test/bench convenience; explored candidates already carry
+    /// replica counts in their stage plans.
+    pub fn replicate_stage(mut self, stage: usize, replicas: usize) -> Self {
+        self.stages[stage].replicas = replicas.max(1);
+        self
+    }
+}
+
+/// How a replicated stage's load balancer routes a delivered request to
+/// one of its replica servers. Both policies are deterministic pure
+/// functions of engine state; with a single replica they are the
+/// identity, so the policy cannot change unreplicated results.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum DispatchPolicy {
+    /// Cycle through the replica bank in delivery order — the stateless
+    /// baseline every hardware load balancer implements.
+    #[default]
+    RoundRobin,
+    /// Join-shortest-queue: route to the replica with the least backlog
+    /// (queue length plus its in-flight batch), ties to the lowest
+    /// index. Routes around replicas stuck behind slow batches.
+    QueueAware,
 }
 
 /// Simulator configuration: server-side policy plus the RNG seed for
@@ -246,10 +286,13 @@ impl Deployment {
 pub struct SimCfg {
     /// Dynamic-batching policy (shared type with the coordinator).
     pub batch: BatchPolicy,
-    /// Bounded per-stage queue depth; arrivals beyond it are dropped.
+    /// Bounded per-replica queue depth; arrivals beyond it are dropped.
     pub queue_depth: usize,
     /// Seed for the scenario's arrival-stream expansion.
     pub seed: u64,
+    /// Replica routing policy for stages with `replicas > 1` (no effect
+    /// on unreplicated stages).
+    pub dispatch: DispatchPolicy,
 }
 
 impl SimCfg {
@@ -262,13 +305,19 @@ impl SimCfg {
             ),
             queue_depth: sys.serving.queue_depth,
             seed: sys.seed,
+            dispatch: DispatchPolicy::default(),
         }
     }
 }
 
 impl Default for SimCfg {
     fn default() -> Self {
-        SimCfg { batch: BatchPolicy::default(), queue_depth: 64, seed: 0 }
+        SimCfg {
+            batch: BatchPolicy::default(),
+            queue_depth: 64,
+            seed: 0,
+            dispatch: DispatchPolicy::default(),
+        }
     }
 }
 

@@ -4,7 +4,7 @@
 //! fronts, and stale/corrupt cache files must be ignored, never fatal.
 
 use partir::config::SystemConfig;
-use partir::explorer::explore_two_platform_cached;
+use partir::explorer::ExploreRequest;
 use partir::hw::{CacheLoad, CostCache, SearchCfg, COST_CACHE_FILE};
 use partir::zoo;
 use std::path::PathBuf;
@@ -32,7 +32,7 @@ fn warm_explore_runs_zero_mapper_searches_and_matches_cold_front() {
 
     // Cold run: populates, then persists.
     let cold_cache = Arc::new(CostCache::new());
-    let cold = explore_two_platform_cached(&g, &sys, Arc::clone(&cold_cache));
+    let cold = ExploreRequest::chain().with_cache(Arc::clone(&cold_cache)).run(&g, &sys);
     assert!(cold_cache.misses() > 0, "cold run must actually evaluate layers");
     let path = cold_cache.save_to(&dir, &sys.search).unwrap();
     assert!(path.ends_with(COST_CACHE_FILE));
@@ -41,7 +41,7 @@ fn warm_explore_runs_zero_mapper_searches_and_matches_cold_front() {
     let (warm_cache, status) = CostCache::load_from(&dir, &sys.search);
     assert_eq!(status, CacheLoad::Loaded(cold_cache.len()));
     let warm_cache = Arc::new(warm_cache);
-    let warm = explore_two_platform_cached(&g, &sys, Arc::clone(&warm_cache));
+    let warm = ExploreRequest::chain().with_cache(Arc::clone(&warm_cache)).run(&g, &sys);
     assert_eq!(
         warm_cache.misses(),
         0,

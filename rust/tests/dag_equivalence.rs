@@ -15,8 +15,8 @@
 use partir::config::SystemConfig;
 use partir::explorer::reference::DagReference;
 use partir::explorer::{
-    exhaustive_pareto, explore_dag, explore_dag_cached, explore_two_platform, sweep_dag_front,
-    CandidateMetrics, EvalScratch, PlanEvaluator,
+    exhaustive_pareto, sweep_dag_front, CandidateMetrics, EvalScratch, ExploreRequest,
+    PlanEvaluator,
 };
 use partir::graph::partition::{dag_cuts, repair_monotone};
 use partir::graph::Graph;
@@ -51,8 +51,8 @@ fn dag_matches_chain_on_sequential_models() {
         }
         checked += 1;
         let sys = quick_sys();
-        let chain = explore_two_platform(&g, &sys);
-        let dag = explore_dag(&g, &sys);
+        let chain = ExploreRequest::chain().run(&g, &sys);
+        let dag = ExploreRequest::dag().run(&g, &sys);
         assert_eq!(chain.candidates.len(), dag.candidates.len(), "{name}: extra candidates");
         assert_eq!(chain.pareto, dag.pareto, "{name}: Pareto front diverged");
         assert_eq!(chain.favorite, dag.favorite, "{name}: favorite diverged");
@@ -235,8 +235,8 @@ fn incremental_dag_eval_bit_identical() {
         s1.jobs = 1;
         let mut sn = quick_sys();
         sn.jobs = 3;
-        let a = explore_dag_cached(&g, &s1, Arc::clone(&cache));
-        let b = explore_dag_cached(&g, &sn, Arc::clone(&cache));
+        let a = ExploreRequest::dag().with_cache(Arc::clone(&cache)).run(&g, &s1);
+        let b = ExploreRequest::dag().with_cache(Arc::clone(&cache)).run(&g, &sn);
         assert_eq!(a.pareto, b.pareto, "{name}: jobs changed the Pareto front");
         assert_eq!(a.favorite, b.favorite, "{name}: jobs changed the favorite");
         assert_eq!(a.candidates.len(), b.candidates.len(), "{name}");
@@ -252,8 +252,8 @@ fn dag_front_never_loses_throughput_on_googlenet() {
     // its best feasible throughput can only match or beat the chain's.
     let g = zoo::googlenet(1000);
     let sys = quick_sys();
-    let chain = explore_two_platform(&g, &sys);
-    let dag = explore_dag(&g, &sys);
+    let chain = ExploreRequest::chain().run(&g, &sys);
+    let dag = ExploreRequest::dag().run(&g, &sys);
     let best = |ex: &partir::explorer::Exploration| {
         ex.candidates
             .iter()

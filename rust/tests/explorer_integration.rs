@@ -3,7 +3,7 @@
 //! models with the paper's system configs.
 
 use partir::config::{Metric, SystemConfig};
-use partir::explorer::{explore_two_platform, multi};
+use partir::explorer::ExploreRequest;
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::link::LinkModel;
 use partir::zoo;
@@ -20,7 +20,7 @@ fn all_paper_models_explore_cleanly() {
     let sys = quick_sys();
     for name in zoo::PAPER_MODELS {
         let g = zoo::build(name).unwrap();
-        let ex = explore_two_platform(&g, &sys);
+        let ex = ExploreRequest::chain().run(&g, &sys);
         assert!(!ex.pareto.is_empty(), "{name}: empty Pareto front");
         assert!(ex.favorite.is_some(), "{name}: no favorite");
         // Single-platform references present exactly once each.
@@ -52,8 +52,8 @@ fn parallel_exploration_bit_identical_to_serial() {
         serial.jobs = 1;
         let mut par = quick_sys();
         par.jobs = 4;
-        let a = explore_two_platform(&g, &serial);
-        let b = explore_two_platform(&g, &par);
+        let a = ExploreRequest::chain().run(&g, &serial);
+        let b = ExploreRequest::chain().run(&g, &par);
         assert_eq!(a.pareto, b.pareto, "{name}: Pareto sets diverge");
         assert_eq!(a.nsga_front, b.nsga_front, "{name}: NSGA fronts diverge");
         assert_eq!(a.favorite, b.favorite, "{name}: favorites diverge");
@@ -76,7 +76,7 @@ fn parallel_exploration_bit_identical_to_serial() {
 fn pareto_front_is_internally_consistent() {
     let g = zoo::googlenet(1000);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     // No front member dominates another on the configured metrics.
     for &i in &ex.pareto {
         for &j in &ex.pareto {
@@ -104,7 +104,7 @@ fn accuracy_monotone_in_cut_position_for_16_8_system() {
     // monotonically non-decreasing top-1 (paper Fig 2c/f guideline).
     let g = zoo::efficientnet_b0(1000);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let mut by_pos: Vec<(usize, f64)> = ex
         .candidates
         .iter()
@@ -130,7 +130,7 @@ fn slow_link_pushes_optimum_to_single_platform() {
     let mut sys = quick_sys();
     sys.link = LinkModel { bandwidth_bps: 1e6, ..LinkModel::gigabit_ethernet() };
     sys.favorite.weights = vec![(Metric::Latency, 1.0)];
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let fav = ex.favorite_metrics().unwrap();
     assert_eq!(fav.partitions, 1, "favorite {} should be single-platform", fav.label);
 }
@@ -140,7 +140,7 @@ fn ideal_link_makes_pipelining_dominate_throughput() {
     let g = zoo::resnet50(1000);
     let mut sys = quick_sys();
     sys.link = LinkModel::ideal();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let best = ex
         .candidates
         .iter()
@@ -155,7 +155,7 @@ fn throughput_never_exceeds_sum_of_platform_rates() {
     // two single-platform rates.
     let g = zoo::vgg16(1000);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let sum: f64 = ex
         .candidates
         .iter()
@@ -177,7 +177,7 @@ fn throughput_never_exceeds_sum_of_platform_rates() {
 fn memory_reported_matches_standalone_estimator() {
     let g = zoo::squeezenet1_1(1000);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let order = topo_sort(&g, TieBreak::Deterministic);
     for c in ex.candidates.iter().filter(|c| c.partitions == 2) {
         let p = c.positions[0];
@@ -195,7 +195,7 @@ fn four_platform_chain_respects_memory_caps() {
     // Tight caps on the two EYR platforms force weight mass to C/D.
     sys.platforms[0].memory_bytes = 4 << 20;
     sys.platforms[1].memory_bytes = 4 << 20;
-    let ex = multi::explore_chain(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     for &i in &ex.pareto {
         let c = &ex.candidates[i];
         assert!(c.feasible());
@@ -208,9 +208,9 @@ fn four_platform_chain_respects_memory_caps() {
 fn qat_flag_raises_top1() {
     let g = zoo::efficientnet_b0(1000);
     let mut sys = quick_sys();
-    let without = explore_two_platform(&g, &sys);
+    let without = ExploreRequest::chain().run(&g, &sys);
     sys.qat = true;
-    let with = explore_two_platform(&g, &sys);
+    let with = ExploreRequest::chain().run(&g, &sys);
     // Same candidate order (deterministic): compare pointwise.
     for (a, b) in without.candidates.iter().zip(&with.candidates) {
         assert!(b.top1 >= a.top1, "{}: QAT lowered top1", a.label);
@@ -244,8 +244,8 @@ min_top1 = 50.0
     sys.search.victory = 10;
     sys.search.max_samples = 100;
     let g = zoo::squeezenet1_1(1000);
-    let slow = explore_two_platform(&g, &sys);
-    let fast_ex = explore_two_platform(&g, &quick_sys());
+    let slow = ExploreRequest::chain().run(&g, &sys);
+    let fast_ex = ExploreRequest::chain().run(&g, &quick_sys());
     // The 10 Mbit/s link must raise every two-partition latency.
     let avg = |ex: &partir::explorer::Exploration| {
         let xs: Vec<f64> = ex

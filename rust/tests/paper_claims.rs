@@ -5,7 +5,7 @@
 //! exact measured values next to the paper's.
 
 use partir::config::{Metric, SystemConfig};
-use partir::explorer::explore_two_platform;
+use partir::explorer::ExploreRequest;
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::memory;
 use partir::report::throughput_gain;
@@ -24,7 +24,7 @@ fn sys() -> SystemConfig {
 /// EfficientNet-B0 inference partitioned onto two platforms".
 #[test]
 fn efficientnet_pipelined_throughput_gain_is_large() {
-    let ex = explore_two_platform(&zoo::efficientnet_b0(1000), &sys());
+    let ex = ExploreRequest::chain().run(&zoo::efficientnet_b0(1000), &sys());
     let (_, gain) = throughput_gain(&ex).expect("gain");
     assert!(
         (25.0..80.0).contains(&gain),
@@ -35,7 +35,7 @@ fn efficientnet_pipelined_throughput_gain_is_large() {
 /// Fig 2(b): ResNet-50 gains ~29% throughput from pipelining.
 #[test]
 fn resnet_pipelined_throughput_gain_is_moderate() {
-    let ex = explore_two_platform(&zoo::resnet50(1000), &sys());
+    let ex = ExploreRequest::chain().run(&zoo::resnet50(1000), &sys());
     let (_, gain) = throughput_gain(&ex).expect("gain");
     assert!(
         (15.0..70.0).contains(&gain),
@@ -49,7 +49,7 @@ fn resnet_pipelined_throughput_gain_is_moderate() {
 #[test]
 fn early_relu_partition_dominates_a_single_platform_reference() {
     for model in ["vgg16", "squeezenet1_1"] {
-        let ex = explore_two_platform(&zoo::build(model).unwrap(), &sys());
+        let ex = ExploreRequest::chain().run(&zoo::build(model).unwrap(), &sys());
         let singles: Vec<&partir::explorer::CandidateMetrics> =
             ex.candidates.iter().filter(|c| c.partitions == 1).collect();
         let found = ex
@@ -71,7 +71,7 @@ fn early_relu_partition_dominates_a_single_platform_reference() {
 #[test]
 fn accuracy_guideline_later_is_better() {
     for model in ["resnet50", "efficientnet_b0"] {
-        let ex = explore_two_platform(&zoo::build(model).unwrap(), &sys());
+        let ex = ExploreRequest::chain().run(&zoo::build(model).unwrap(), &sys());
         let splits: Vec<(usize, f64)> = ex
             .candidates
             .iter()
@@ -91,7 +91,7 @@ fn accuracy_guideline_later_is_better() {
 /// point is not chosen carefully" — the split-point spread is large.
 #[test]
 fn throughput_spread_across_cut_points_is_significant() {
-    let ex = explore_two_platform(&zoo::resnet50(1000), &sys());
+    let ex = ExploreRequest::chain().run(&zoo::resnet50(1000), &sys());
     let tputs: Vec<f64> = ex
         .candidates
         .iter()
@@ -134,7 +134,7 @@ fn fig3_memory_growth_shape() {
 /// optimization metrics — every candidate carries them.
 #[test]
 fn all_six_metrics_are_reported() {
-    let ex = explore_two_platform(&zoo::googlenet(1000), &sys());
+    let ex = ExploreRequest::chain().run(&zoo::googlenet(1000), &sys());
     let c = ex.favorite_metrics().unwrap();
     for m in [
         Metric::Latency,

@@ -1,0 +1,177 @@
+//! Cross-layer replication properties (PR 6 acceptance surface).
+//!
+//! * **All-ones identity**: `evaluate_replicated(pos, [1,1,…])` is
+//!   bit-identical to `evaluate(pos)` for every paper model on both
+//!   paper presets — the replication axis is free when unused.
+//! * **Analytic monotonicity**: doubling every slot's replica count
+//!   never lowers Definition-4 throughput, keeps latency/top-1
+//!   untouched, and reports slot memory additive across replica nodes
+//!   while Definition 3 stays a per-node check.
+//! * **Conservation**: a replicated deployment built from a real
+//!   explored candidate neither drops nor duplicates requests under
+//!   overload, under both dispatch policies.
+//! * **Jobs identity**: a replicated cluster exploration is
+//!   bit-identical for any `ExploreRequest::jobs` value.
+//! * **Goodput**: replicating the bottleneck stage strictly raises
+//!   simulated goodput under an overload storm.
+
+use partir::config::SystemConfig;
+use partir::coordinator::BatchPolicy;
+use partir::explorer::{ExploreRequest, PlanEvaluator};
+use partir::hw::CostCache;
+use partir::sim::{self, Deployment, DispatchPolicy, Scenario, SimCfg};
+use partir::zoo;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn quick(mut sys: SystemConfig) -> SystemConfig {
+    sys.search.victory = 10;
+    sys.search.max_samples = 80;
+    sys
+}
+
+/// A deterministic spread of cut-position vectors for a `k`-platform
+/// chain over a `layers`-long schedule: all-on-first, all-on-last,
+/// evenly spaced, and a lopsided split.
+fn sample_cuts(layers: usize, k: usize) -> Vec<Vec<usize>> {
+    let last = layers - 1;
+    let spread: Vec<usize> = (1..k).map(|i| (i * layers / k).min(last)).collect();
+    let lopsided: Vec<usize> = (1..k).map(|i| (i * layers / (4 * k)).min(last)).collect();
+    vec![vec![0; k - 1], vec![last; k - 1], spread, lopsided]
+}
+
+#[test]
+fn all_ones_replicas_identity() {
+    // The CI grep-gate keys on this test name: replicas = [1,1,…] must
+    // stay bit-identical to the unreplicated evaluation everywhere.
+    let cache = Arc::new(CostCache::new());
+    for sys in [
+        quick(SystemConfig::paper_two_platform()),
+        quick(SystemConfig::paper_four_platform()),
+    ] {
+        let k = sys.platforms.len();
+        let ones = vec![1usize; k];
+        for model in zoo::PAPER_MODELS {
+            let g = zoo::build(model).unwrap();
+            let ev = PlanEvaluator::with_cache(&g, &sys, Arc::clone(&cache));
+            for pos in sample_cuts(g.len(), k) {
+                let plain = ev.evaluate(&pos);
+                let rep = ev.evaluate_replicated(&pos, &ones);
+                assert_eq!(
+                    format!("{plain:?}"),
+                    format!("{rep:?}"),
+                    "{model} ({k} platforms) diverges at cuts {pos:?}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn doubling_replicas_is_throughput_monotone_and_memory_additive() {
+    let sys = quick(SystemConfig::paper_two_platform());
+    let g = zoo::build("squeezenet1_1").unwrap();
+    let ev = PlanEvaluator::new(&g, &sys);
+    let mut strict = 0usize;
+    for pos in sample_cuts(g.len(), 2) {
+        let r1 = ev.evaluate(&pos);
+        let r2 = ev.evaluate_replicated(&pos, &[2, 2]);
+        assert!(r2.throughput >= r1.throughput, "throughput dropped at {pos:?}");
+        if r2.throughput > r1.throughput {
+            strict += 1;
+        }
+        // Single-inference metrics are replica-blind.
+        assert_eq!(r1.latency_s, r2.latency_s, "latency changed at {pos:?}");
+        assert_eq!(r1.top1, r2.top1);
+        assert_eq!(r1.link_bytes, r2.link_bytes);
+        // Reported slot memory is additive across replica nodes…
+        for j in 0..2 {
+            assert_eq!(r2.memory_bytes[j], 2 * r1.memory_bytes[j], "slot {j} at {pos:?}");
+        }
+        // …while Definition 3 stays per-node: feasibility is unchanged.
+        assert_eq!(r1.feasible(), r2.feasible(), "feasibility flipped at {pos:?}");
+    }
+    assert!(strict > 0, "no compute-bound cut gained throughput from 2x replicas");
+}
+
+#[test]
+fn replicated_deployment_conserves_requests_under_overload() {
+    // Take a real explored split, replicate its first stage 3x, and
+    // storm it well past capacity: every request must leave the system
+    // exactly once (completed ok, or dropped) under both policies.
+    let sys = quick(SystemConfig::paper_two_platform());
+    let g = zoo::build("squeezenet1_1").unwrap();
+    let ex = ExploreRequest::chain().run(&g, &sys);
+    let best = ex
+        .candidates
+        .iter()
+        .filter(|c| c.feasible() && c.partitions == 2)
+        .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+        .expect("a feasible split");
+    let dep = Deployment::from_candidate(best, &sys).replicate_stage(0, 3);
+    let n = 20_000usize;
+    let storm = Scenario::steady(n, 4.0 * best.throughput);
+    for dispatch in [DispatchPolicy::RoundRobin, DispatchPolicy::QueueAware] {
+        let cfg = SimCfg {
+            batch: BatchPolicy::new(8, Duration::from_millis(2)),
+            queue_depth: 32,
+            seed: 11,
+            dispatch,
+        };
+        let r = sim::simulate(&dep, &cfg, &storm);
+        assert_eq!(r.pipeline.completions.len(), n, "{dispatch:?}: lost completions");
+        assert_eq!(
+            r.pipeline.completed() + r.dropped as usize,
+            n,
+            "{dispatch:?}: completed + dropped != offered"
+        );
+        for (i, c) in r.pipeline.completions.iter().enumerate() {
+            assert_eq!(c.id, i as u64, "{dispatch:?}: duplicate or reordered completion");
+        }
+    }
+}
+
+#[test]
+fn replicated_cluster_exploration_is_jobs_invariant() {
+    // The --jobs contract survives the replication axis: same candidates,
+    // same front, same favorite for any worker count.
+    let sys = quick(SystemConfig::cluster(4));
+    let g = zoo::build("squeezenet1_1").unwrap();
+    let cache = Arc::new(CostCache::new());
+    let a = ExploreRequest::chain().with_cache(Arc::clone(&cache)).jobs(1).run(&g, &sys);
+    let b = ExploreRequest::chain().with_cache(Arc::clone(&cache)).jobs(4).run(&g, &sys);
+    assert!(!a.candidates.is_empty());
+    assert!(a.candidates.iter().any(|c| c.plan.iter().any(|p| p.replicas > 1)));
+    assert_eq!(
+        format!("{:?}", a.candidates),
+        format!("{:?}", b.candidates),
+        "candidate lists diverge between jobs=1 and jobs=4"
+    );
+    assert_eq!(a.pareto, b.pareto);
+    assert_eq!(a.favorite, b.favorite);
+}
+
+#[test]
+fn replicating_the_bottleneck_raises_goodput_under_overload() {
+    // 5 ms bottleneck caps the chain near 200/s; at 500/s offered, a
+    // 3x replica bank must convert the headroom into strictly higher
+    // goodput.
+    let base = Deployment::synthetic("goodput", &[1e-4, 0.005], 4096);
+    let rep = base.clone().replicate_stage(1, 3);
+    let cfg = SimCfg {
+        batch: BatchPolicy::new(4, Duration::from_millis(1)),
+        queue_depth: 64,
+        seed: 3,
+        dispatch: DispatchPolicy::QueueAware,
+    };
+    let storm = Scenario::steady(10_000, 500.0);
+    let r1 = sim::simulate(&base, &cfg, &storm);
+    let r3 = sim::simulate(&rep, &cfg, &storm);
+    assert!(
+        r3.goodput > r1.goodput,
+        "replication did not raise goodput: {} vs {}",
+        r3.goodput,
+        r1.goodput
+    );
+    assert!(r3.dropped < r1.dropped);
+}

@@ -15,7 +15,7 @@ use partir::config::SystemConfig;
 use partir::coordinator::{
     run_pipeline, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec,
 };
-use partir::explorer::explore_two_platform;
+use partir::explorer::ExploreRequest;
 use partir::sim::{self, Deployment, Scenario, SimCfg};
 use partir::zoo;
 use std::time::Duration;
@@ -71,7 +71,7 @@ fn sim_cross_validates_wallclock_coordinator() {
 
     // Virtual-clock run of the same deployment and arrival pattern.
     let dep = Deployment::synthetic("xval", &[2e-3, 2e-3], out_bytes);
-    let sim_cfg = SimCfg { batch, queue_depth: n, seed: 0 };
+    let sim_cfg = SimCfg { batch, queue_depth: n, seed: 0, ..Default::default() };
     let r = sim::simulate(&dep, &sim_cfg, &Scenario::replay(vec![0.0; n]));
     assert_eq!(r.pipeline.completed(), n);
     assert_eq!(r.dropped, 0);
@@ -112,7 +112,7 @@ fn sim_cross_validates_wallclock_coordinator() {
 fn sim_determinism_bit_identical_across_jobs() {
     let g = zoo::tiny_cnn(10);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let single_best = ex
         .candidates
         .iter()
@@ -147,7 +147,7 @@ fn sim_determinism_bit_identical_across_jobs() {
 fn simulated_partitioned_throughput_beats_single_platform() {
     let g = zoo::resnet50(1000);
     let sys = quick_sys();
-    let ex = explore_two_platform(&g, &sys);
+    let ex = ExploreRequest::chain().run(&g, &sys);
     let single_best = ex
         .candidates
         .iter()

@@ -12,9 +12,13 @@
 //!   * the partitioned deployment out-serves the best single platform;
 //!   * on the 16-node mixed EYR/SMB cluster preset, the best replicated
 //!     plan achieves strictly higher simulated goodput than the best
-//!     unreplicated pipeline split for EfficientNet-B0 AND ResNet-50.
-//! Emits machine-readable `BENCH_sim.json` and `BENCH_cluster.json`
-//! (goodput scaling curve over the 16/32/64-node presets).
+//!     unreplicated pipeline split for EfficientNet-B0 AND ResNet-50;
+//!   * under the `failover` preset the adaptive controller strictly
+//!     out-serves the static favorite, pays nonzero migration cost,
+//!     and is bit-identical across worker counts.
+//! Emits machine-readable `BENCH_sim.json`, `BENCH_cluster.json`
+//! (goodput scaling curve over the 16/32/64-node presets) and
+//! `BENCH_adaptive.json` (adaptive-vs-static-vs-oracle goodput).
 
 #[path = "common/mod.rs"]
 mod common;
@@ -315,6 +319,102 @@ fn main() {
             ("requests", Json::from(cluster_requests)),
             ("acceptance", Json::Arr(accept_rows)),
             ("scaling", Json::Arr(curve_rows)),
+        ]),
+    );
+
+    // -----------------------------------------------------------------
+    // Adaptive serving: static favorite vs live re-partitioning
+    // -----------------------------------------------------------------
+    common::section("adaptive vs static under the failover preset (node loss on platform 0)");
+    let adaptive_requests = if fast { 100_000 } else { 500_000 };
+    // Offered load the *surviving* plans can absorb: under the weakest
+    // feasible single-platform candidate, so failing over to it is a
+    // strict win rather than trading drops for drops.
+    let weakest_single = ex
+        .candidates
+        .iter()
+        .filter(|c| c.partitions == 1 && c.feasible())
+        .map(|c| c.throughput)
+        .fold(f64::INFINITY, f64::min);
+    let fallback_exists = ex
+        .candidates
+        .iter()
+        .any(|c| c.partitions == 1 && c.feasible() && c.plan.iter().all(|p| p.platform != 0));
+    let arate = 0.8 * weakest_single;
+    let failover = Scenario::failover(adaptive_requests, arate);
+    let acfg = sys.adaptive;
+    let t4 = Instant::now();
+    let cmp = sim::compare_adaptive(&ex, &sys, &failover, &cfg, &acfg, default_jobs());
+    let adaptive_s = t4.elapsed().as_secs_f64();
+    print!("{}", cmp.render());
+    println!(
+        "static {:.1} i/s vs adaptive {:.1} i/s vs oracle {:.1} i/s (gap {:.1}%), {} in {}",
+        cmp.static_report.goodput,
+        cmp.adaptive.report.goodput,
+        cmp.oracle.report.goodput,
+        100.0 * cmp.gap(),
+        cmp.adaptive.migrations.len(),
+        common::fmt(adaptive_s),
+    );
+    // Determinism: the three-way comparison must not depend on --jobs.
+    let cmp_serial = sim::compare_adaptive(&ex, &sys, &failover, &cfg, &acfg, 1);
+    assert_eq!(
+        cmp.adaptive.fingerprint(),
+        cmp_serial.adaptive.fingerprint(),
+        "adaptive run changed under --jobs"
+    );
+    assert_eq!(
+        cmp.oracle.fingerprint(),
+        cmp_serial.oracle.fingerprint(),
+        "oracle run changed under --jobs"
+    );
+    // The win is only forced when the favorite actually touches the
+    // dying platform and a feasible plan avoiding it exists.
+    let exposed = cmp.pool[cmp.static_candidate].platforms.contains(&0);
+    if fallback_exists && exposed {
+        assert!(
+            !cmp.adaptive.migrations.is_empty(),
+            "controller never failed over off the dead platform"
+        );
+        assert!(
+            cmp.adaptive.total_migration_bytes > 0 && cmp.adaptive.total_migration_ns > 0,
+            "migrations were free"
+        );
+        assert!(
+            cmp.adaptive.report.goodput > cmp.static_report.goodput,
+            "adaptive goodput {:.1} did not beat static {:.1} under failover",
+            cmp.adaptive.report.goodput,
+            cmp.static_report.goodput
+        );
+    } else {
+        println!("note: favorite not exposed to platform 0 loss or no fallback — win assertions skipped");
+    }
+
+    common::write_bench_json(
+        "adaptive",
+        &obj(vec![
+            ("bench", Json::from("serving/adaptive")),
+            ("fast_mode", Json::from(fast)),
+            ("scenario", Json::from("failover")),
+            ("requests", Json::from(adaptive_requests)),
+            ("offered_rate", Json::from(arate)),
+            ("epoch_ms", Json::from(acfg.epoch_s * 1e3)),
+            ("hysteresis", Json::from(acfg.hysteresis)),
+            ("static_goodput", Json::from(cmp.static_report.goodput)),
+            ("adaptive_goodput", Json::from(cmp.adaptive.report.goodput)),
+            ("oracle_goodput", Json::from(cmp.oracle.report.goodput)),
+            ("oracle_gap", Json::from(cmp.gap())),
+            ("migrations", Json::from(cmp.adaptive.migrations.len())),
+            ("migration_ms", Json::from(cmp.adaptive.total_migration_ns as f64 / 1e6)),
+            ("migration_bytes", Json::from(cmp.adaptive.total_migration_bytes)),
+            ("static_dropped", Json::from(cmp.static_report.dropped)),
+            ("adaptive_dropped", Json::from(cmp.adaptive.report.dropped)),
+            ("wall_s", Json::from(adaptive_s)),
+            (
+                "adaptive_fingerprint",
+                Json::from(format!("{:016x}", cmp.adaptive.fingerprint())),
+            ),
+            ("oracle_fingerprint", Json::from(format!("{:016x}", cmp.oracle.fingerprint()))),
         ]),
     );
 }

@@ -155,6 +155,35 @@ impl Default for ServingCfg {
     }
 }
 
+/// Adaptive-serving controller settings, consumed by
+/// `sim::simulate_adaptive` (`partir simulate --adaptive`). TOML
+/// section `[adaptive]` with keys `epoch_ms`, `hysteresis`,
+/// `improve_factor`, `probe_after`; the `--epoch-ms`/`--hysteresis`
+/// CLI flags override the file.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveCfg {
+    /// Control-epoch length (s): the controller observes queue depths,
+    /// drops and SLO misses once per epoch, on the virtual clock.
+    pub epoch_s: f64,
+    /// Consecutive unhealthy epochs required before a migration is
+    /// considered (and the post-migration cooldown, in epochs).
+    pub hysteresis: usize,
+    /// A candidate must score at least this factor above the live
+    /// deployment to be worth a cutover (ignored when the live plan's
+    /// score is zero — a dead platform always warrants failover).
+    pub improve_factor: f64,
+    /// Epochs without a fresh observation before a platform's learned
+    /// degradation factor decays back to nominal (lets the controller
+    /// retry recovered hardware). `0` = never decay (sticky).
+    pub probe_after: usize,
+}
+
+impl Default for AdaptiveCfg {
+    fn default() -> Self {
+        Self { epoch_s: 0.2, hysteresis: 2, improve_factor: 1.15, probe_after: 4 }
+    }
+}
+
 /// Per-platform replica inventory for cluster-scale DSE (the edge-cluster
 /// extension: Parthasarathy & Krishnamachari partition a DNN *and*
 /// replicate its bottleneck stages across the cluster's nodes).
@@ -218,6 +247,8 @@ pub struct SystemConfig {
     /// Serving defaults (batching policy + queue bound) for the
     /// coordinator and the simulator.
     pub serving: ServingCfg,
+    /// Adaptive-serving controller settings (`--adaptive`).
+    pub adaptive: AdaptiveCfg,
     /// Directory for the persistent layer-cost cache (`costcache_v1.json`,
     /// see `hw::CostCache::{save_to, load_from}`). `None` = in-memory
     /// only. Repeated sweeps under the same search settings become pure
@@ -266,6 +297,7 @@ impl SystemConfig {
             search: SearchCfg::default(),
             qat: false,
             serving: ServingCfg::default(),
+            adaptive: AdaptiveCfg::default(),
             cache_dir: None,
             replication: None,
             seed: DSE_SEED,
@@ -423,6 +455,30 @@ impl SystemConfig {
                     return Err("serving.queue_depth must be at least 1".into());
                 }
                 cfg.serving.queue_depth = d;
+            }
+        }
+        let a = doc.get("adaptive");
+        if let Json::Obj(_) = a {
+            if let Some(e) = a.get("epoch_ms").as_f64() {
+                if !e.is_finite() || e <= 0.0 {
+                    return Err(format!("adaptive.epoch_ms {e} must be > 0"));
+                }
+                cfg.adaptive.epoch_s = e * 1e-3;
+            }
+            if let Some(h) = a.get("hysteresis").as_usize() {
+                if h == 0 {
+                    return Err("adaptive.hysteresis must be at least 1".into());
+                }
+                cfg.adaptive.hysteresis = h;
+            }
+            if let Some(f) = a.get("improve_factor").as_f64() {
+                if !f.is_finite() || f < 1.0 {
+                    return Err(format!("adaptive.improve_factor {f} must be >= 1"));
+                }
+                cfg.adaptive.improve_factor = f;
+            }
+            if let Some(p) = a.get("probe_after").as_usize() {
+                cfg.adaptive.probe_after = p;
             }
         }
         if let Json::Obj(_) = doc.get("replication") {
@@ -610,6 +666,34 @@ weight = 2.0
             "[serving]\nmax_batch = 0\n",
             "[serving]\nqueue_depth = 0\n",
             "[serving]\nbatch_wait_ms = -1.0\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn adaptive_section_parses_and_validates() {
+        let doc = tomlite::parse(
+            "[adaptive]\nepoch_ms = 50\nhysteresis = 3\nimprove_factor = 1.5\nprobe_after = 0\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert!((cfg.adaptive.epoch_s - 0.05).abs() < 1e-12);
+        assert_eq!(cfg.adaptive.hysteresis, 3);
+        assert_eq!(cfg.adaptive.improve_factor, 1.5);
+        assert_eq!(cfg.adaptive.probe_after, 0);
+        // Defaults when absent.
+        let d = SystemConfig::paper_two_platform().adaptive;
+        assert_eq!(d, AdaptiveCfg::default());
+        assert!((d.epoch_s - 0.2).abs() < 1e-12);
+        assert_eq!(d.hysteresis, 2);
+        // Degenerate values rejected.
+        for bad in [
+            "[adaptive]\nepoch_ms = 0\n",
+            "[adaptive]\nepoch_ms = -5\n",
+            "[adaptive]\nhysteresis = 0\n",
+            "[adaptive]\nimprove_factor = 0.5\n",
         ] {
             let doc = tomlite::parse(bad).unwrap();
             assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");

@@ -155,6 +155,17 @@ impl CandidateMetrics {
         self.assign.is_some()
     }
 
+    /// Sorted, deduplicated platform indices this candidate's plan
+    /// occupies — the metadata the adaptive controller filters on when
+    /// a platform goes dark (`sim::simulate_adaptive` keeps only
+    /// candidates whose platform set avoids the dead node).
+    pub fn platform_set(&self) -> Vec<usize> {
+        let mut ps: Vec<usize> = self.plan.iter().map(|p| p.platform).collect();
+        ps.sort_unstable();
+        ps.dedup();
+        ps
+    }
+
     /// Metric accessor in *minimization* orientation (maximized metrics
     /// negated) — what NSGA-II and Pareto filtering consume.
     pub fn objective(&self, m: Metric) -> f64 {
@@ -305,6 +316,33 @@ impl Exploration {
     /// Metrics of the Definition-2 favorite, if one is feasible.
     pub fn favorite_metrics(&self) -> Option<&CandidateMetrics> {
         self.favorite.map(|i| &self.candidates[i])
+    }
+
+    /// Indices of every candidate worth serving: the Pareto front,
+    /// the feasible single-platform references (baselines and the
+    /// adaptive controller's degraded fallback plans), and the
+    /// favorite — deduplicated, in candidate order, restricted to
+    /// candidates carrying a deployable stage plan. Shared by
+    /// `sim::evaluate_front` and `sim::candidate_pool`, so the ranking
+    /// and the controller draw from the same set.
+    pub fn serving_candidates(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = self
+            .pareto
+            .iter()
+            .copied()
+            .chain(
+                self.candidates
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, c)| c.partitions == 1 && c.feasible())
+                    .map(|(i, _)| i),
+            )
+            .chain(self.favorite)
+            .filter(|&i| i < self.candidates.len() && !self.candidates[i].plan.is_empty())
+            .collect();
+        idx.sort_unstable();
+        idx.dedup();
+        idx
     }
 }
 

@@ -17,6 +17,16 @@
 //! [`ExploreRequest::run_many`] for a fleet sharing one cache and
 //! worker pool. Both delegate to [`Explorer::run`].
 //!
+//! Every candidate in the returned [`Exploration`] carries its full
+//! runtime plan ([`CandidateMetrics::plan`](super::CandidateMetrics))
+//! and platform-set metadata
+//! ([`CandidateMetrics::platform_set`](super::CandidateMetrics::platform_set))
+//! — what the adaptive serving controller
+//! (`sim::candidate_pool` / `sim::simulate_adaptive`) filters on when
+//! it fails over away from a dead platform, and what
+//! [`Exploration::serving_candidates`] assembles into the shared
+//! serving set.
+//!
 //! Dispatch is by system shape, exactly as the old functions composed:
 //! `Chain` mode on an unreplicated two-platform system runs the
 //! exhaustive Definition-1 sweep (the paper's §V-B setting, bit-identical
@@ -209,6 +219,30 @@ mod tests {
         let dag_wrapper = crate::explorer::explore_dag(&g, &sys);
         assert_eq!(dag_request.pareto, dag_wrapper.pareto);
         assert_eq!(dag_request.favorite, dag_wrapper.favorite);
+    }
+
+    #[test]
+    fn exploration_surfaces_serving_metadata() {
+        // The adaptive controller's inputs must exist on every explored
+        // result: a non-empty serving set whose members all carry
+        // deployable plans, and per-candidate platform sets that are
+        // sorted, deduplicated, and within the system's platform count.
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ex = ExploreRequest::chain().run(&g, &sys);
+        let serving = ex.serving_candidates();
+        assert!(!serving.is_empty(), "no serving candidates surfaced");
+        if let Some(f) = ex.favorite {
+            assert!(serving.contains(&f), "favorite missing from the serving set");
+        }
+        for &i in &serving {
+            let c = &ex.candidates[i];
+            assert!(!c.plan.is_empty(), "{}: serving candidate without a plan", c.label);
+            let ps = c.platform_set();
+            assert!(!ps.is_empty());
+            assert!(ps.windows(2).all(|w| w[0] < w[1]), "{}: unsorted platform set", c.label);
+            assert!(ps.iter().all(|&p| p < sys.platforms.len()));
+        }
     }
 
     #[test]

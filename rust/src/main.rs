@@ -68,7 +68,8 @@ fn print_usage() {
          \x20 evaluate   per-layer hardware costs for a model\n\
          \x20 pipeline   run partitioned inference on AOT artifacts (--model: explored plan on simulated stages)\n\
          \x20 simulate   discrete-event serving simulation of the explored Pareto front\n\
-         \x20            (scenario presets: steady | burst | diurnal | degraded, or a TOML file)\n\
+         \x20            (scenario presets: steady | burst | diurnal | degraded | failover, or a TOML file;\n\
+         \x20            --adaptive: live re-partitioning under drift and node loss)\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
          Run `partir <COMMAND> --help` for options."
     );
@@ -543,7 +544,7 @@ fn simulate_cmd() -> Command {
     .opt(
         "scenario",
         Some("steady"),
-        "traffic scenario: steady|burst|diurnal|degraded or a TOML file",
+        "traffic scenario: steady|burst|diurnal|degraded|failover or a TOML file",
     )
     .opt("requests", None, "requests to simulate for built-in scenarios [default: 1000000]")
     .opt("rate", None, "arrival rate in req/s for built-in scenarios (default: 1.5x best single-platform)")
@@ -554,6 +555,12 @@ fn simulate_cmd() -> Command {
     .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
     .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
     .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
+    .opt("epoch-ms", None, "adaptive control-epoch length in ms (overrides [adaptive] epoch_ms)")
+    .opt("hysteresis", None, "unhealthy epochs before the adaptive controller migrates (>= 1)")
+    .flag(
+        "adaptive",
+        "serve with the runtime re-partitioning controller and compare static vs adaptive vs oracle",
+    )
     .flag("dag", "explore convex DAG partitions too — branch-parallel deployments enter the ranking")
     .flag("qat", "apply QAT accuracy recovery")
     .flag("full-search", "full mapper search budget (default: fast, the DSE is a means here)")
@@ -618,6 +625,42 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     };
     if let Some(ms) = args.get_f64("slo-ms").map_err(anyhow::Error::msg)? {
         scenario.deadline_s = Some(ms * 1e-3);
+    }
+    // Reject broken scenarios (inverted windows, out-of-range platform
+    // indices) with a CLI error instead of a panic deep in the engine.
+    scenario
+        .validate(Some(sys.platforms.len()))
+        .map_err(|e| anyhow::anyhow!("scenario '{}': {e}", scenario.name))?;
+
+    // 3a. Adaptive serving: run the live re-partitioning controller
+    // (plus its schedule-aware oracle reference) against the static
+    // favorite instead of ranking the whole front.
+    if args.flag("adaptive") {
+        if let Some(ms) = args.get_f64("epoch-ms").map_err(anyhow::Error::msg)? {
+            anyhow::ensure!(ms > 0.0, "--epoch-ms must be positive");
+            sys.adaptive.epoch_s = ms * 1e-3;
+        }
+        if let Some(h) = args.get_usize("hysteresis").map_err(anyhow::Error::msg)? {
+            anyhow::ensure!(h >= 1, "--hysteresis must be at least 1");
+            sys.adaptive.hysteresis = h;
+        }
+        let cfg = SimCfg::from_system(&sys);
+        let t0 = std::time::Instant::now();
+        let cmp =
+            sim::compare_adaptive(&ex, &sys, &scenario, &cfg, &sys.adaptive, sys.jobs.max(1));
+        println!(
+            "model {} — scenario '{}': {} requests, adaptive controller (epoch {:.0} ms, hysteresis {}) in {}\n",
+            ex.model,
+            scenario.name,
+            scenario.requests,
+            sys.adaptive.epoch_s * 1e3,
+            sys.adaptive.hysteresis,
+            fmt_time_s(t0.elapsed().as_secs_f64()),
+        );
+        print!("{}", cmp.render());
+        println!("adaptive fingerprint: {:016x}", cmp.adaptive.fingerprint());
+        println!("oracle fingerprint:   {:016x}", cmp.oracle.fingerprint());
+        return Ok(());
     }
 
     // 3. Simulate + rank.

@@ -1,0 +1,663 @@
+//! Adaptive serving: a deterministic runtime controller that re-
+//! partitions a *live* deployment when the scenario drifts under it —
+//! the online-elasticity layer on top of the offline DSE (DEFER,
+//! arXiv 2201.06769, motivates the split; our controller differs in
+//! that it swaps between *explored Pareto candidates* instead of
+//! re-solving placement online).
+//!
+//! Shape of the loop (`simulate_adaptive`):
+//!
+//! 1. the engine serves the shared arrival trace in fixed **control
+//!    epochs** on the virtual clock ([`Engine::step_until`] +
+//!    [`Engine::take_epoch`]);
+//! 2. at every epoch edge the controller folds the epoch's
+//!    observations (per-stage service inflation, drops, SLO misses,
+//!    dead platforms) into per-*platform* degradation factors;
+//! 3. under hysteresis it may pick a better candidate from the
+//!    explored pool ([`candidate_pool`]) — scored by factor-adjusted
+//!    bottleneck capacity — and **migrate**: the live engine aborts
+//!    (in-flight work captured), the cutover pays an explicit link
+//!    cost (stage weights + captured activations over the real
+//!    [`LinkModel`](crate::link::LinkModel), degraded by any active
+//!    link fault), and a successor engine resumes the same trace with
+//!    the backlog re-admitted at the model input.
+//!
+//! Everything is a pure function of `(Exploration, SystemConfig,
+//! Scenario, SimCfg, AdaptiveCfg, ControllerMode)`: no RNG, no wall
+//! clock, decisions read only drained epoch stats. A run that never
+//! migrates is one engine regime and therefore **bit-identical** to
+//! the static simulator — the property `tests/adaptive.rs` pins.
+//!
+//! [`ControllerMode::Oracle`] replaces the learned factors with the
+//! true per-epoch factors read off the fault schedule — a greedy
+//! schedule-aware reference whose goodput bounds what the reactive
+//! hysteresis controller could have achieved; [`compare_adaptive`]
+//! reports the gap.
+
+use super::engine::{
+    self, assemble_report, in_window, s_to_ns, Engine, EpochObs, Req,
+};
+use super::{Deployment, Scenario, SimCfg, SimReport};
+use crate::config::{AdaptiveCfg, SystemConfig};
+use crate::coordinator::{Completion, StageStats};
+use crate::explorer::Exploration;
+use crate::util::hash::Fnv64;
+use crate::util::parallel::par_map;
+
+/// One stage of a pool candidate, reduced to what the controller
+/// scores on.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PoolStage {
+    /// Platform slot hosting the stage (fault-factor key).
+    pub platform: usize,
+    /// Per-item service time (s) — the plan's stage latency.
+    pub latency_s: f64,
+    /// Replica-bank width (≥ 1).
+    pub replicas: usize,
+}
+
+/// One deployable candidate the controller can swap to: the explored
+/// candidate's plan summary plus the metadata migration costing needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PoolCandidate {
+    /// Index into `Exploration::candidates`.
+    pub candidate: usize,
+    /// Candidate label (chain boundary names or `par:`…).
+    pub label: String,
+    /// Stage summaries in plan order.
+    pub stages: Vec<PoolStage>,
+    /// Sorted, deduplicated platform set the plan occupies — the
+    /// failover filter (a candidate touching a dead platform scores 0).
+    pub platforms: Vec<usize>,
+    /// Per-platform stage-weight bytes (`CandidateMetrics::memory_bytes`)
+    /// — what a migration ships for stages not already resident.
+    pub memory_bytes: Vec<u64>,
+    /// Analytic (Definition-4) pipelined throughput — the nominal
+    /// ranking used to seed the controller when no favorite exists.
+    pub throughput: f64,
+}
+
+/// Build the controller's candidate pool from an exploration: the
+/// Pareto front, every feasible single-platform reference (the
+/// degraded fallback plans), and the Definition-2 favorite —
+/// deduplicated, in candidate order ([`Exploration::serving_candidates`]).
+pub fn candidate_pool(ex: &Exploration) -> Vec<PoolCandidate> {
+    ex.serving_candidates()
+        .into_iter()
+        .map(|i| {
+            let c = &ex.candidates[i];
+            PoolCandidate {
+                candidate: i,
+                label: c.label.clone(),
+                stages: c
+                    .plan
+                    .iter()
+                    .map(|p| PoolStage {
+                        platform: p.platform,
+                        latency_s: p.latency_s,
+                        replicas: p.replicas.max(1),
+                    })
+                    .collect(),
+                platforms: c.platform_set(),
+                memory_bytes: c.memory_bytes.clone(),
+                throughput: c.throughput,
+            }
+        })
+        .collect()
+}
+
+/// Which decision rule drives re-partitioning.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerMode {
+    /// Reactive: learn per-platform degradation factors from epoch
+    /// observations, migrate only after `hysteresis` consecutive
+    /// unhealthy epochs to a candidate at least `improve_factor`
+    /// better, then hold a cooldown — the deployable controller.
+    Hysteresis,
+    /// Schedule-aware greedy reference: reads the *true* fault factors
+    /// for the upcoming epoch straight off the scenario and migrates
+    /// whenever any candidate scores strictly higher. Not deployable
+    /// (it peeks at the future); it bounds the hysteresis controller's
+    /// regret in [`compare_adaptive`].
+    Oracle,
+}
+
+/// One executed cutover.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Migration {
+    /// Epoch edge (virtual ns) the decision fired at.
+    pub at_ns: u64,
+    /// Pool index served before the cutover.
+    pub from: usize,
+    /// Pool index live after the cutover.
+    pub to: usize,
+    /// Stage-weight bytes shipped (stages not already resident on
+    /// their platform with identical per-item latency).
+    pub weight_bytes: u64,
+    /// Captured in-flight activation bytes re-shipped to the new plan.
+    pub activation_bytes: u64,
+    /// Cutover duration (virtual ns): all bytes over the real link,
+    /// degraded by any link-fault window active at `at_ns`; stages are
+    /// drained for exactly this long before the successor goes live.
+    pub cost_ns: u64,
+    /// Requests captured mid-flight and restarted from the model input
+    /// (keeping their original submit time).
+    pub carried: u64,
+    /// Why the controller moved (`dead-platform`, `drops`, `slo-miss`,
+    /// `oracle`).
+    pub reason: String,
+}
+
+/// Result of one adaptive run: the aggregated multi-regime
+/// [`SimReport`] plus the controller's decision trace.
+#[derive(Debug, Clone)]
+pub struct AdaptiveReport {
+    /// Aggregated serving report (same accounting as the static sim;
+    /// with zero migrations it is bit-identical to it).
+    pub report: SimReport,
+    /// Control epochs observed.
+    pub epochs: u64,
+    /// Executed cutovers, in time order.
+    pub migrations: Vec<Migration>,
+    /// Total virtual time spent in cutovers.
+    pub total_migration_ns: u64,
+    /// Total bytes shipped by cutovers (weights + activations).
+    pub total_migration_bytes: u64,
+    /// Pool index the run started on.
+    pub start_candidate: usize,
+    /// Pool index live when the trace drained.
+    pub final_candidate: usize,
+}
+
+impl AdaptiveReport {
+    /// Stable digest over the serving report *and* the decision trace —
+    /// the `--jobs` determinism check for adaptive runs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.report.fingerprint());
+        h.write_u64(self.epochs);
+        h.write_u64(self.migrations.len() as u64);
+        for m in &self.migrations {
+            h.write_u64(m.at_ns);
+            h.write_u64(m.from as u64);
+            h.write_u64(m.to as u64);
+            h.write_u64(m.weight_bytes);
+            h.write_u64(m.activation_bytes);
+            h.write_u64(m.cost_ns);
+            h.write_u64(m.carried);
+        }
+        h.write_u64(self.start_candidate as u64);
+        h.write_u64(self.final_candidate as u64);
+        h.finish()
+    }
+
+    /// Human-readable migration log appended to the serving summary.
+    pub fn render(&self, pool: &[PoolCandidate]) -> String {
+        use crate::util::units::fmt_bytes;
+        let mut out = self.report.render();
+        out.push_str(&format!(
+            "adaptive: {} epochs, {} migrations, {:.3} ms cutover, {} shipped\n",
+            self.epochs,
+            self.migrations.len(),
+            self.total_migration_ns as f64 / 1e6,
+            fmt_bytes(self.total_migration_bytes),
+        ));
+        for m in &self.migrations {
+            out.push_str(&format!(
+                "  @{:.3}s {} -> {} [{}] weights {} + activations {} ({} carried) in {:.3} ms\n",
+                m.at_ns as f64 / 1e9,
+                pool[m.from].label,
+                pool[m.to].label,
+                m.reason,
+                fmt_bytes(m.weight_bytes),
+                fmt_bytes(m.activation_bytes),
+                m.carried,
+                m.cost_ns as f64 / 1e6,
+            ));
+        }
+        out
+    }
+}
+
+/// Per-platform degradation state the decision rule scores against.
+struct Controller {
+    mode: ControllerMode,
+    hysteresis: usize,
+    improve: f64,
+    probe_after: usize,
+    /// Multiplicative service-time inflation per platform (≥ 1.0;
+    /// `INFINITY` = considered dead).
+    factors: Vec<f64>,
+    /// Epoch index of each platform's last direct observation.
+    fresh: Vec<u64>,
+    epoch: u64,
+    streak: usize,
+    cooldown: usize,
+}
+
+impl Controller {
+    fn new(mode: ControllerMode, acfg: &AdaptiveCfg, platforms: usize) -> Controller {
+        Controller {
+            mode,
+            hysteresis: acfg.hysteresis.max(1),
+            improve: acfg.improve_factor.max(1.0),
+            probe_after: acfg.probe_after,
+            factors: vec![1.0; platforms],
+            fresh: vec![0; platforms],
+            epoch: 0,
+            streak: 0,
+            cooldown: 0,
+        }
+    }
+
+    /// Factor-adjusted bottleneck capacity (items/s) of a candidate:
+    /// `min over stages of replicas / (latency × factor)`; 0 when any
+    /// stage sits on a platform currently considered dead.
+    fn score(&self, c: &PoolCandidate) -> f64 {
+        let mut s = f64::INFINITY;
+        for st in &c.stages {
+            let f = self.factors[st.platform];
+            if !f.is_finite() {
+                return 0.0;
+            }
+            s = s.min(st.replicas as f64 / (st.latency_s.max(1e-12) * f));
+        }
+        s
+    }
+
+    /// Fold one epoch in and decide. `window` is the *upcoming* epoch
+    /// `[t, t + epoch)` the oracle reads true factors for. Returns the
+    /// migration target (pool index) and reason, or `None` to hold.
+    fn decide(
+        &mut self,
+        obs: &EpochObs,
+        scenario: &Scenario,
+        window: (u64, u64),
+        pool: &[PoolCandidate],
+        cur: usize,
+    ) -> Option<(usize, &'static str)> {
+        self.epoch += 1;
+        match self.mode {
+            ControllerMode::Hysteresis => {
+                // Learn: measured per-item busy time vs the plan's
+                // nominal stage latency; a stage offered work that
+                // served nothing all epoch marks its platform dead.
+                for (s, st) in pool[cur].stages.iter().enumerate() {
+                    if obs.items[s] > 0 {
+                        let per_item = obs.busy_ns[s] as f64 / obs.items[s] as f64 * 1e-9;
+                        self.factors[st.platform] =
+                            (per_item / st.latency_s.max(1e-12)).max(1.0);
+                        self.fresh[st.platform] = self.epoch;
+                    } else if obs.delivered[s] > 0 {
+                        self.factors[st.platform] = f64::INFINITY;
+                        self.fresh[st.platform] = self.epoch;
+                    }
+                }
+                // Decay: factors unobserved for `probe_after` epochs
+                // (stages we migrated off can never refresh) return to
+                // nominal so recovered hardware gets another chance.
+                if self.probe_after > 0 {
+                    for p in 0..self.factors.len() {
+                        if self.epoch - self.fresh[p] >= self.probe_after as u64 {
+                            self.factors[p] = 1.0;
+                        }
+                    }
+                }
+            }
+            ControllerMode::Oracle => {
+                // True factors for the upcoming epoch, off the schedule.
+                let overlaps = |from_s: f64, to_s: f64| {
+                    s_to_ns(from_s.max(0.0)) < window.1 && window.0 < s_to_ns(to_s.min(1e9))
+                };
+                for f in &mut self.factors {
+                    *f = 1.0;
+                }
+                for w in &scenario.slowdowns {
+                    if overlaps(w.from_s, w.to_s) {
+                        self.factors[w.platform] *= w.factor;
+                    }
+                }
+                for w in &scenario.node_loss {
+                    if overlaps(w.from_s, w.to_s) {
+                        self.factors[w.platform] = f64::INFINITY;
+                    }
+                }
+            }
+        }
+        let cur_score = self.score(&pool[cur]);
+        let mut best = 0;
+        for i in 1..pool.len() {
+            if self.score(&pool[i]) > self.score(&pool[best]) {
+                best = i;
+            }
+        }
+        let best_score = self.score(&pool[best]);
+        match self.mode {
+            ControllerMode::Oracle => {
+                (best != cur && best_score > cur_score).then_some((best, "oracle"))
+            }
+            ControllerMode::Hysteresis => {
+                if self.cooldown > 0 {
+                    self.cooldown -= 1;
+                    return None;
+                }
+                let unhealthy = obs.dropped > 0
+                    || obs.slo_miss * 20 > obs.completed
+                    || cur_score == 0.0;
+                self.streak = if unhealthy { self.streak + 1 } else { 0 };
+                if self.streak < self.hysteresis || best == cur {
+                    return None;
+                }
+                let worth = if cur_score == 0.0 {
+                    best_score > 0.0
+                } else {
+                    best_score > self.improve * cur_score
+                };
+                if !worth {
+                    return None;
+                }
+                self.streak = 0;
+                self.cooldown = self.hysteresis;
+                let reason = if cur_score == 0.0 {
+                    "dead-platform"
+                } else if obs.dropped > 0 {
+                    "drops"
+                } else {
+                    "slo-miss"
+                };
+                Some((best, reason))
+            }
+        }
+    }
+}
+
+/// Pool index the controller starts on: the exploration's Definition-2
+/// favorite when it is deployable, else the highest analytic
+/// throughput (ties to the lowest pool index).
+fn start_index(ex: &Exploration, pool: &[PoolCandidate]) -> usize {
+    if let Some(f) = ex.favorite {
+        if let Some(i) = pool.iter().position(|p| p.candidate == f) {
+            return i;
+        }
+    }
+    let mut best = 0;
+    for (i, p) in pool.iter().enumerate().skip(1) {
+        if p.throughput > pool[best].throughput {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Stage-weight bytes a cutover ships: the target's per-platform
+/// memory demand for every stage not already resident on the same
+/// platform with an identical per-item latency (bit-equal — a resized
+/// stage is a different binary).
+fn weight_bytes(from: &PoolCandidate, to: &PoolCandidate) -> u64 {
+    to.stages
+        .iter()
+        .filter(|st| {
+            !from.stages.iter().any(|o| {
+                o.platform == st.platform && o.latency_s.to_bits() == st.latency_s.to_bits()
+            })
+        })
+        .map(|st| to.memory_bytes.get(st.platform).copied().unwrap_or(0))
+        .sum()
+}
+
+/// Activation bytes a cutover re-ships: every captured request pays
+/// its stage's inbound edge payload on the *old* plan (a request at
+/// the model input pays the plan's widest edge as the input proxy).
+fn activation_bytes(old: &Deployment, backlog: &[(usize, Req)]) -> u64 {
+    let widest = old
+        .edges
+        .iter()
+        .flatten()
+        .map(|e| e.bytes_per_item)
+        .max()
+        .unwrap_or(1460)
+        .max(1);
+    backlog
+        .iter()
+        .map(|&(s, _)| {
+            if s == 0 {
+                widest
+            } else {
+                old.edges
+                    .iter()
+                    .flatten()
+                    .filter(|e| e.to == Some(s))
+                    .map(|e| e.bytes_per_item)
+                    .max()
+                    .unwrap_or(widest)
+            }
+        })
+        .sum()
+}
+
+/// Product of link-fault factors active at `t_ns` (1.0 outside every
+/// window) — cutover traffic crosses the same degraded link the
+/// pipeline does.
+fn link_factor(scenario: &Scenario, t_ns: u64) -> f64 {
+    scenario
+        .link_faults
+        .iter()
+        .filter(|w| in_window(t_ns, s_to_ns(w.from_s), s_to_ns(w.to_s)))
+        .map(|w| w.factor)
+        .product()
+}
+
+/// Run one scenario under the adaptive controller. Deterministic: the
+/// result is a pure function of the arguments, bit-identical across
+/// runs and `--jobs` values; a run that never migrates is fingerprint-
+/// identical to [`super::simulate`] on the starting candidate.
+///
+/// Panics on an invalid scenario (including platform indices out of
+/// range for `sys`) or an exploration with no deployable candidate.
+pub fn simulate_adaptive(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    scenario: &Scenario,
+    cfg: &SimCfg,
+    acfg: &AdaptiveCfg,
+    mode: ControllerMode,
+) -> AdaptiveReport {
+    if let Err(e) = scenario.validate(Some(sys.platforms.len())) {
+        panic!("invalid scenario '{}': {e}", scenario.name);
+    }
+    let pool = candidate_pool(ex);
+    assert!(!pool.is_empty(), "adaptive serving needs a deployable candidate pool");
+    let deps: Vec<Deployment> = pool
+        .iter()
+        .map(|p| Deployment::from_candidate(&ex.candidates[p.candidate], sys))
+        .collect();
+    let start = start_index(ex, &pool);
+    let arrivals = scenario.arrival_times_ns(cfg.seed);
+    let n = arrivals.len();
+    let epoch_ns = s_to_ns(acfg.epoch_s).max(1);
+    let mut ctrl = Controller::new(mode, acfg, sys.platforms.len());
+
+    let mut cur = start;
+    let mut epochs = 0u64;
+    let mut migrations: Vec<Migration> = Vec::new();
+    let mut completions: Vec<Completion> = Vec::with_capacity(n);
+    let mut stage_rows: Vec<StageStats> = Vec::new();
+    let mut energy_j = 0.0;
+    let mut events = 0u64;
+    let mut last_ns = 0u64;
+
+    let mut eng = Engine::new(&deps[cur], cfg, scenario, &arrivals, 0, 0, vec![false; n], &[]);
+    let mut t = epoch_ns;
+    loop {
+        eng.step_until(t);
+        if eng.idle() {
+            break;
+        }
+        let obs = eng.take_epoch();
+        epochs += 1;
+        if let Some((tgt, reason)) = ctrl.decide(&obs, scenario, (t, t + epoch_ns), &pool, cur) {
+            let (backlog, out) = eng.abort();
+            completions.extend(out.completions);
+            stage_rows.extend(out.stages);
+            energy_j += out.energy_j;
+            events += out.events;
+            last_ns = last_ns.max(out.last_ns);
+            let weights = weight_bytes(&pool[cur], &pool[tgt]);
+            let activations = activation_bytes(&deps[cur], &backlog);
+            let bytes = weights + activations;
+            let cost_ns =
+                s_to_ns(sys.link.latency_s(bytes) * link_factor(scenario, t)).max(1);
+            energy_j += sys.link.energy_j(bytes);
+            let t_live = t + cost_ns;
+            let reqs: Vec<Req> = backlog.iter().map(|&(_, r)| r).collect();
+            migrations.push(Migration {
+                at_ns: t,
+                from: cur,
+                to: tgt,
+                weight_bytes: weights,
+                activation_bytes: activations,
+                cost_ns,
+                carried: reqs.len() as u64,
+                reason: reason.to_string(),
+            });
+            eng = Engine::new(
+                &deps[tgt], cfg, scenario, &arrivals, out.next, t_live, out.done, &reqs,
+            );
+            cur = tgt;
+            // Resume the epoch grid at the first edge after cutover.
+            t = (t_live / epoch_ns + 1) * epoch_ns;
+            continue;
+        }
+        t += epoch_ns;
+    }
+    let out = eng.finish();
+    completions.extend(out.completions);
+    stage_rows.extend(out.stages);
+    energy_j += out.energy_j;
+    events += out.events;
+    last_ns = last_ns.max(out.last_ns);
+    debug_assert_eq!(
+        completions.len(),
+        n,
+        "every request must complete or be dropped exactly once across regimes"
+    );
+    let total_migration_ns: u64 = migrations.iter().map(|m| m.cost_ns).sum();
+    let total_migration_bytes: u64 =
+        migrations.iter().map(|m| m.weight_bytes + m.activation_bytes).sum();
+    AdaptiveReport {
+        report: assemble_report(
+            completions,
+            stage_rows,
+            last_ns,
+            energy_j,
+            events,
+            scenario.deadline_s,
+        ),
+        epochs,
+        migrations,
+        total_migration_ns,
+        total_migration_bytes,
+        start_candidate: start,
+        final_candidate: cur,
+    }
+}
+
+/// Static favorite vs hysteresis controller vs schedule-aware oracle,
+/// under one scenario.
+#[derive(Debug, Clone)]
+pub struct AdaptiveComparison {
+    /// The starting candidate served statically (no controller) — the
+    /// baseline every adaptive win is measured against.
+    pub static_report: SimReport,
+    /// Pool index of the static baseline (same candidate the adaptive
+    /// runs start on).
+    pub static_candidate: usize,
+    /// The candidate pool the runs drew from (for labelling).
+    pub pool: Vec<PoolCandidate>,
+    /// The reactive hysteresis run.
+    pub adaptive: AdaptiveReport,
+    /// The schedule-aware greedy reference run.
+    pub oracle: AdaptiveReport,
+}
+
+impl AdaptiveComparison {
+    /// Hysteresis regret vs the oracle: `(oracle − adaptive) / oracle`
+    /// goodput, clamped at 0 (the reactive controller occasionally
+    /// beats the greedy oracle, which pays eager migration costs).
+    pub fn gap(&self) -> f64 {
+        let o = self.oracle.report.goodput;
+        if o <= 0.0 {
+            0.0
+        } else {
+            ((o - self.adaptive.report.goodput) / o).max(0.0)
+        }
+    }
+
+    /// Three-row comparison table plus the adaptive migration logs.
+    pub fn render(&self) -> String {
+        use crate::util::units::fmt_throughput;
+        let row = |name: &str, r: &SimReport, migs: usize| {
+            format!(
+                "{:<10} {:>13} {:>13} {:>9} {:>9} {:>6}\n",
+                name,
+                fmt_throughput(r.goodput),
+                fmt_throughput(r.throughput()),
+                r.dropped,
+                r.slo_violations,
+                migs,
+            )
+        };
+        let mut out = format!(
+            "adaptive serving vs static '{}' (gap to oracle {:.1}%)\n",
+            self.pool[self.static_candidate].label,
+            100.0 * self.gap(),
+        );
+        out.push_str(&format!(
+            "{:<10} {:>13} {:>13} {:>9} {:>9} {:>6}\n",
+            "run", "goodput", "throughput", "dropped", "slo-miss", "migs"
+        ));
+        out.push_str(&row("static", &self.static_report, 0));
+        out.push_str(&row("adaptive", &self.adaptive.report, self.adaptive.migrations.len()));
+        out.push_str(&row("oracle", &self.oracle.report, self.oracle.migrations.len()));
+        out.push_str(&self.adaptive.render(&self.pool));
+        out
+    }
+}
+
+/// Run the three-way comparison, fanning the independent runs over
+/// `jobs` workers with `par_map` — each run is a pure function of its
+/// inputs, so the comparison is bit-identical for every `jobs` value.
+pub fn compare_adaptive(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    scenario: &Scenario,
+    cfg: &SimCfg,
+    acfg: &AdaptiveCfg,
+    jobs: usize,
+) -> AdaptiveComparison {
+    enum RunOut {
+        Static(SimReport),
+        Adaptive(AdaptiveReport),
+    }
+    let pool = candidate_pool(ex);
+    assert!(!pool.is_empty(), "adaptive serving needs a deployable candidate pool");
+    let start = start_index(ex, &pool);
+    let kinds = [0usize, 1, 2];
+    let mut outs: Vec<RunOut> = par_map(jobs.max(1), &kinds, |&k| match k {
+        0 => {
+            let dep = Deployment::from_candidate(&ex.candidates[pool[start].candidate], sys);
+            let arrivals = scenario.arrival_times_ns(cfg.seed);
+            RunOut::Static(engine::run_with_arrivals(&dep, cfg, scenario, &arrivals))
+        }
+        1 => RunOut::Adaptive(simulate_adaptive(
+            ex, sys, scenario, cfg, acfg, ControllerMode::Hysteresis,
+        )),
+        _ => RunOut::Adaptive(simulate_adaptive(
+            ex, sys, scenario, cfg, acfg, ControllerMode::Oracle,
+        )),
+    });
+    let Some(RunOut::Adaptive(oracle)) = outs.pop() else { unreachable!() };
+    let Some(RunOut::Adaptive(adaptive)) = outs.pop() else { unreachable!() };
+    let Some(RunOut::Static(static_report)) = outs.pop() else { unreachable!() };
+    AdaptiveComparison { static_report, static_candidate: start, pool, adaptive, oracle }
+}

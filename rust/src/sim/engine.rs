@@ -33,6 +33,13 @@ pub(crate) fn s_to_ns(s: f64) -> u64 {
     (s * 1e9).round() as u64
 }
 
+/// Half-open fault-window membership: `from <= t < to`. An event
+/// exactly at `to` is *outside* the window — the single edge rule
+/// shared by slowdowns, link faults and node-loss windows.
+pub(crate) fn in_window(t: u64, from: u64, to: u64) -> bool {
+    from <= t && t < to
+}
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
 enum EventKind {
     /// The batch-wait budget of `stage`/`replica`'s forming batch
@@ -41,6 +48,9 @@ enum EventKind {
     /// `stage`/`replica`'s in-flight batch finished compute + link
     /// transfer.
     ComputeDone { stage: usize, replica: usize },
+    /// A node-loss window opened on `stage`'s platform: drain the
+    /// replica bank — queued and in-flight work drops on the spot.
+    NodeDown { stage: usize },
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -53,10 +63,14 @@ struct Event {
     kind: EventKind,
 }
 
+/// A request in flight through the pipeline. `submit_ns` is the
+/// original arrival instant and survives migration carryover, so a
+/// request aborted mid-flight and restarted on a new deployment pays
+/// its full end-to-end latency.
 #[derive(Debug, Clone, Copy)]
-struct Req {
-    id: u64,
-    submit_ns: u64,
+pub(crate) struct Req {
+    pub(crate) id: u64,
+    pub(crate) submit_ns: u64,
 }
 
 /// Plain-data per-stage parameters (copied out of the deployment so the
@@ -93,8 +107,52 @@ struct StageState {
     dropped: u64,
 }
 
-struct Engine {
+/// Per-control-epoch observations, drained by [`Engine::take_epoch`].
+/// Pure accounting: taking (or not taking) epochs never perturbs the
+/// event stream, so epoch-instrumented runs stay bit-identical to
+/// uninstrumented ones.
+#[derive(Debug, Clone)]
+pub(crate) struct EpochObs {
+    /// Requests handed to each stage's queue this epoch (including
+    /// ones dropped at a full queue or dead node).
+    pub(crate) delivered: Vec<u64>,
+    /// Items that entered service per stage this epoch.
+    pub(crate) items: Vec<u64>,
+    /// Busy time accrued per stage this epoch (slowdowns included).
+    pub(crate) busy_ns: Vec<u64>,
+    /// Queue-depth snapshot per stage at the epoch edge (queued +
+    /// in-flight, summed over the replica bank).
+    pub(crate) queued: Vec<usize>,
+    /// Requests that completed this epoch.
+    pub(crate) completed: u64,
+    /// Requests dropped this epoch.
+    pub(crate) dropped: u64,
+    /// Completions this epoch that missed the deadline.
+    pub(crate) slo_miss: u64,
+}
+
+/// Everything a finished (or aborted) engine regime hands back:
+/// terminal accounting plus the `done`/`next` cursors a successor
+/// regime resumes from.
+#[derive(Debug)]
+pub(crate) struct RegimeOutput {
+    pub(crate) completions: Vec<Completion>,
+    pub(crate) stages: Vec<StageStats>,
+    pub(crate) energy_j: f64,
+    pub(crate) events: u64,
+    pub(crate) last_ns: u64,
+    pub(crate) done: Vec<bool>,
+    pub(crate) next: usize,
+}
+
+pub(crate) struct Engine<'a> {
     params: Vec<StageParams>,
+    /// Stage display names (copied so `finish` can build stage rows
+    /// without the deployment).
+    names: Vec<String>,
+    /// Platform slot per stage (`StageModel::platform`) — the key
+    /// faults are matched on.
+    platforms: Vec<usize>,
     /// Stage-graph out-edges per stage (chain: `[i -> i+1]`).
     edges: Vec<Vec<SimEdge>>,
     /// Successor stage indices per stage, precomputed so the hot loop
@@ -110,10 +168,13 @@ struct Engine {
     /// discarded.
     done: Vec<bool>,
     link: LinkModel,
-    /// (stage, from_ns, to_ns, factor) slowdown windows.
+    /// (platform, from_ns, to_ns, factor) slowdown windows.
     slowdowns: Vec<(usize, u64, u64, f64)>,
     /// (from_ns, to_ns, factor) link-degradation windows.
     link_faults: Vec<(u64, u64, f64)>,
+    /// Per-stage node-loss windows `(from_ns, to_ns)`, pre-resolved
+    /// from platform to the stages it hosts.
+    dead: Vec<Vec<(u64, u64)>>,
     /// The shared batch-close semantics (`closes`/`take`) — the same
     /// object the coordinator's `collect` consults, so the two
     /// runtimes cannot drift apart.
@@ -129,18 +190,36 @@ struct Engine {
     energy_j: f64,
     events: u64,
     last_ns: u64,
+    /// The shared (pre-expanded) arrival trace and the cursor of the
+    /// next arrival this regime has not consumed yet.
+    arrivals: &'a [u64],
+    next: usize,
+    /// Regime start: arrivals earlier than this (buffered while a
+    /// migration cutover paused admission) are admitted at `start_ns`.
+    start_ns: u64,
+    /// Deadline in virtual ns, for per-epoch SLO-miss accounting only
+    /// (the final report recomputes violations from completions).
+    deadline_ns: Option<u64>,
+    // Per-epoch accumulators, drained by `take_epoch`.
+    ep_delivered: Vec<u64>,
+    ep_items: Vec<u64>,
+    ep_busy_ns: Vec<u64>,
+    ep_completed: u64,
+    ep_dropped: u64,
+    ep_slo_miss: u64,
 }
 
-impl Engine {
+impl<'a> Engine<'a> {
     fn push(&mut self, at: u64, kind: EventKind) {
         self.seq += 1;
         self.heap.push(Reverse(Event { at, seq: self.seq, kind }));
     }
 
     fn slowdown_factor(&self, stage: usize, t: u64) -> f64 {
+        let p = self.platforms[stage];
         let mut f = 1.0;
-        for &(s, from, to, factor) in &self.slowdowns {
-            if s == stage && (from..to).contains(&t) {
+        for &(plat, from, to, factor) in &self.slowdowns {
+            if plat == p && in_window(t, from, to) {
                 f *= factor;
             }
         }
@@ -150,11 +229,34 @@ impl Engine {
     fn link_factor(&self, t: u64) -> f64 {
         let mut f = 1.0;
         for &(from, to, factor) in &self.link_faults {
-            if (from..to).contains(&t) {
+            if in_window(t, from, to) {
                 f *= factor;
             }
         }
         f
+    }
+
+    /// Is `stage`'s platform inside a node-loss window at `t`?
+    fn node_dead(&self, stage: usize, t: u64) -> bool {
+        self.dead[stage].iter().any(|&(from, to)| in_window(t, from, to))
+    }
+
+    /// A request leaves the system as a drop at stage `s`. No-op if a
+    /// sibling copy already left (fork branches share the `done` flag).
+    fn drop_req(&mut self, s: usize, req: Req, t: u64) {
+        if self.done[req.id as usize] {
+            return;
+        }
+        self.last_ns = self.last_ns.max(t);
+        self.stages[s].dropped += 1;
+        self.done[req.id as usize] = true;
+        self.ep_dropped += 1;
+        self.completions.push(Completion {
+            id: req.id,
+            latency: Duration::from_nanos(t - req.submit_ns),
+            ok: false,
+            prediction: None,
+        });
     }
 
     fn arrive(&mut self, id: u64, t: u64) {
@@ -216,21 +318,20 @@ impl Engine {
     }
 
     fn enqueue(&mut self, s: usize, req: Req, t: u64) {
+        self.ep_delivered[s] += 1;
+        if self.node_dead(s, t) {
+            // The whole replica bank is dark: the delivery is lost on
+            // arrival, exactly like a full queue sheds load.
+            self.drop_req(s, req, t);
+            return;
+        }
         let r = self.route(s);
         if self.stages[s].servers[r].queue.len() >= self.depth {
             // Bounded queue: shed load, account the drop. A drop is a
             // request leaving the system, so it advances the wall.
             // Copies still in flight on sibling branches are discarded
             // at their next hop via the `done` flag.
-            self.last_ns = self.last_ns.max(t);
-            self.stages[s].dropped += 1;
-            self.done[req.id as usize] = true;
-            self.completions.push(Completion {
-                id: req.id,
-                latency: Duration::from_nanos(t - req.submit_ns),
-                ok: false,
-                prediction: None,
-            });
+            self.drop_req(s, req, t);
             return;
         }
         self.stages[s].servers[r].queue.push_back(req);
@@ -278,6 +379,8 @@ impl Engine {
             }
         }
         self.energy_j += link_energy + p.energy_per_item_j * n as f64;
+        self.ep_items[s] += n as u64;
+        self.ep_busy_ns[s] += svc_ns;
         let srv = &mut self.stages[s].servers[r];
         srv.timer_gen += 1; // invalidate any pending batch timer
         srv.in_flight = srv.queue.drain(..n).collect();
@@ -319,6 +422,12 @@ impl Engine {
                         }
                         self.done[req.id as usize] = true;
                         self.last_ns = self.last_ns.max(e.at);
+                        self.ep_completed += 1;
+                        if let Some(d) = self.deadline_ns {
+                            if e.at - req.submit_ns > d {
+                                self.ep_slo_miss += 1;
+                            }
+                        }
                         self.completions.push(Completion {
                             id: req.id,
                             latency: Duration::from_nanos(e.at - req.submit_ns),
@@ -349,7 +458,287 @@ impl Engine {
                     self.schedule_timeout(stage, replica, e.at);
                 }
             }
+            EventKind::NodeDown { stage } => {
+                // The platform went dark: every queued and in-flight
+                // request on the bank drops at the window edge. The
+                // server's busy flag stays set until its (now empty)
+                // ComputeDone fires — the aborted batch's slot frees
+                // when the node is back in the cluster's view, and a
+                // stale ComputeDone on an emptied bank is a no-op.
+                // Deliveries during the window drop in `enqueue`.
+                for r in 0..self.stages[stage].servers.len() {
+                    let srv = &mut self.stages[stage].servers[r];
+                    srv.timer_gen += 1; // stale any pending batch timer
+                    let mut victims: Vec<Req> = srv.queue.drain(..).collect();
+                    victims.extend(srv.in_flight.drain(..));
+                    for req in victims {
+                        self.drop_req(stage, req, e.at);
+                    }
+                }
+            }
         }
+    }
+
+    /// Process every arrival and event strictly before `t_stop`,
+    /// merging the (sorted) arrival stream with the event heap; ties
+    /// go to the arrival, so an arrival at exactly a batch-close
+    /// instant still joins that batch. With `t_stop == u64::MAX` this
+    /// runs the regime to quiescence, in exactly the order the
+    /// pre-adaptive engine used — stopping at epoch edges and resuming
+    /// never reorders events.
+    pub(crate) fn step_until(&mut self, t_stop: u64) {
+        loop {
+            let a = self.arrivals.get(self.next).map(|&a| a.max(self.start_ns));
+            let h = self.heap.peek().map(|r| r.0.at);
+            match (a, h) {
+                (Some(a), Some(hh)) if a <= hh => {
+                    if a >= t_stop {
+                        break;
+                    }
+                    self.arrive(self.next as u64, a);
+                    self.next += 1;
+                }
+                (Some(a), None) => {
+                    if a >= t_stop {
+                        break;
+                    }
+                    self.arrive(self.next as u64, a);
+                    self.next += 1;
+                }
+                (_, Some(hh)) => {
+                    if hh >= t_stop {
+                        break;
+                    }
+                    let Reverse(e) = self.heap.pop().unwrap();
+                    self.dispatch(e);
+                }
+                (None, None) => break,
+            }
+        }
+    }
+
+    /// True once every arrival is consumed and the heap is drained —
+    /// the regime can produce no further work.
+    pub(crate) fn idle(&self) -> bool {
+        self.heap.is_empty() && self.next >= self.arrivals.len()
+    }
+
+    /// Drain the per-epoch accumulators and snapshot queue depths.
+    pub(crate) fn take_epoch(&mut self) -> EpochObs {
+        let n = self.params.len();
+        let queued = self
+            .stages
+            .iter()
+            .map(|st| st.servers.iter().map(|s| s.queue.len() + s.in_flight.len()).sum())
+            .collect();
+        EpochObs {
+            delivered: std::mem::replace(&mut self.ep_delivered, vec![0; n]),
+            items: std::mem::replace(&mut self.ep_items, vec![0; n]),
+            busy_ns: std::mem::replace(&mut self.ep_busy_ns, vec![0; n]),
+            queued,
+            completed: std::mem::take(&mut self.ep_completed),
+            dropped: std::mem::take(&mut self.ep_dropped),
+            slo_miss: std::mem::take(&mut self.ep_slo_miss),
+        }
+    }
+
+    /// Abort the regime for a migration cutover: capture every live
+    /// request (queued or in flight, one copy each — fork siblings
+    /// dedup by id) as `(stage, request)` backlog, then close out the
+    /// regime's accounting. Captured requests restart from the model
+    /// input on the successor deployment, keeping their original
+    /// submit time.
+    pub(crate) fn abort(mut self) -> (Vec<(usize, Req)>, RegimeOutput) {
+        let mut seen = vec![false; self.arrivals.len()];
+        let mut backlog = Vec::new();
+        for (s, st) in self.stages.iter_mut().enumerate() {
+            for srv in &mut st.servers {
+                srv.timer_gen += 1;
+                for req in srv.queue.drain(..).chain(srv.in_flight.drain(..)) {
+                    let id = req.id as usize;
+                    if self.done[id] || seen[id] {
+                        continue;
+                    }
+                    seen[id] = true;
+                    backlog.push((s, req));
+                }
+                srv.busy = false;
+            }
+        }
+        backlog.sort_by_key(|(_, r)| r.id);
+        (backlog, self.finish())
+    }
+
+    /// Close out the regime: fold replica accounting into stage rows
+    /// and hand back the cursors a successor regime resumes from.
+    pub(crate) fn finish(self) -> RegimeOutput {
+        let stages: Vec<StageStats> = self
+            .names
+            .iter()
+            .zip(&self.stages)
+            .map(|(name, st)| StageStats {
+                name: name.clone(),
+                batches: st.servers.iter().map(|s| s.batches).sum(),
+                items: st.servers.iter().map(|s| s.items).sum(),
+                busy: Duration::from_nanos(st.servers.iter().map(|s| s.busy_ns).sum()),
+                link: Duration::from_nanos(st.servers.iter().map(|s| s.link_ns).sum()),
+                failures: st.dropped,
+            })
+            .collect();
+        RegimeOutput {
+            completions: self.completions,
+            stages,
+            energy_j: self.energy_j,
+            events: self.events,
+            last_ns: self.last_ns,
+            done: self.done,
+            next: self.next,
+        }
+    }
+}
+
+impl<'a> Engine<'a> {
+    /// Build a regime: a deployment serving (a suffix of) the shared
+    /// arrival trace from `start_ns`, resuming the `done` flags of any
+    /// predecessor regime and re-admitting `carryover` backlog at the
+    /// model input. The static simulator is the one-regime special
+    /// case (`next = 0`, `start_ns = 0`, empty carryover), and its
+    /// event stream — and fingerprint — is bit-identical to the
+    /// pre-adaptive engine.
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) fn new(
+        dep: &Deployment,
+        cfg: &SimCfg,
+        scenario: &Scenario,
+        arrivals: &'a [u64],
+        next: usize,
+        start_ns: u64,
+        done: Vec<bool>,
+        carryover: &[Req],
+    ) -> Engine<'a> {
+        assert!(!dep.stages.is_empty(), "deployment needs at least one stage");
+        assert_eq!(
+            dep.edges.len(),
+            dep.stages.len(),
+            "deployment needs one edge list per stage"
+        );
+        assert_eq!(done.len(), arrivals.len(), "one done flag per request");
+        let mut indeg = vec![0usize; dep.stages.len()];
+        for es in &dep.edges {
+            for e in es {
+                if let Some(t) = e.to {
+                    indeg[t] += 1;
+                }
+            }
+        }
+        assert_eq!(indeg[0], 0, "stage 0 must be the arrival source");
+        debug_assert!(
+            dep.edges.iter().filter(|es| !es.iter().any(|e| e.to.is_some())).count() == 1,
+            "deployment must have exactly one terminal stage"
+        );
+        let pending: Vec<Vec<u8>> = indeg
+            .iter()
+            .map(|&d| if d > 1 { vec![0u8; arrivals.len()] } else { Vec::new() })
+            .collect();
+        let platforms: Vec<usize> = dep.stages.iter().map(|m| m.platform).collect();
+        let dead: Vec<Vec<(u64, u64)>> = platforms
+            .iter()
+            .map(|&p| {
+                scenario
+                    .node_loss
+                    .iter()
+                    .filter(|w| w.platform == p)
+                    .map(|w| (s_to_ns(w.from_s), s_to_ns(w.to_s)))
+                    .collect()
+            })
+            .collect();
+        // Node-loss windows opening during this regime drain the
+        // affected bank at the window edge; windows already open at
+        // `start_ns` need no event — queues are empty at regime start
+        // and deliveries drop lazily in `enqueue`.
+        let downs: Vec<(u64, usize)> = dead
+            .iter()
+            .enumerate()
+            .flat_map(|(s, ws)| {
+                ws.iter()
+                    .filter(|&&(from, to)| from >= start_ns && from < to)
+                    .map(move |&(from, _)| (from, s))
+            })
+            .collect();
+        let n_stages = dep.stages.len();
+        let mut eng = Engine {
+            params: dep
+                .stages
+                .iter()
+                .map(|m| StageParams {
+                    base_s: m.base_s,
+                    per_item_s: m.per_item_s,
+                    energy_per_item_j: m.energy_per_item_j,
+                })
+                .collect(),
+            names: dep.stages.iter().map(|m| m.name.clone()).collect(),
+            platforms,
+            edges: dep.edges.clone(),
+            succ: dep
+                .edges
+                .iter()
+                .map(|es| es.iter().filter_map(|se| se.to).collect())
+                .collect(),
+            indeg,
+            pending,
+            done,
+            link: dep.link.clone(),
+            slowdowns: scenario
+                .slowdowns
+                .iter()
+                .map(|w| (w.platform, s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
+                .collect(),
+            link_faults: scenario
+                .link_faults
+                .iter()
+                .map(|w| (s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
+                .collect(),
+            dead,
+            batch: BatchPolicy::new(cfg.batch.max_batch.max(1), cfg.batch.max_wait),
+            wait_ns: s_to_ns(cfg.batch.max_wait.as_secs_f64()),
+            depth: cfg.queue_depth.max(1),
+            dispatch: cfg.dispatch,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            stages: dep
+                .stages
+                .iter()
+                .map(|m| StageState {
+                    servers: (0..m.replicas.max(1)).map(|_| Server::default()).collect(),
+                    rr_next: 0,
+                    dropped: 0,
+                })
+                .collect(),
+            completions: Vec::with_capacity(arrivals.len().saturating_sub(next)),
+            energy_j: 0.0,
+            events: 0,
+            last_ns: 0,
+            arrivals,
+            next,
+            start_ns,
+            deadline_ns: scenario.deadline_s.map(s_to_ns),
+            ep_delivered: vec![0; n_stages],
+            ep_items: vec![0; n_stages],
+            ep_busy_ns: vec![0; n_stages],
+            ep_completed: 0,
+            ep_dropped: 0,
+            ep_slo_miss: 0,
+        };
+        for (at, stage) in downs {
+            eng.push(at, EventKind::NodeDown { stage });
+        }
+        // Carryover re-admission is an event per request, like an
+        // arrival: aborted work restarts from the model input.
+        for &req in carryover {
+            eng.events += 1;
+            eng.enqueue(0, req, start_ns);
+        }
+        eng
     }
 }
 
@@ -367,137 +756,55 @@ pub(crate) fn run_with_arrivals(
     scenario: &Scenario,
     arrivals: &[u64],
 ) -> SimReport {
-    assert!(!dep.stages.is_empty(), "deployment needs at least one stage");
-    assert_eq!(
-        dep.edges.len(),
-        dep.stages.len(),
-        "deployment needs one edge list per stage"
-    );
-    let mut indeg = vec![0usize; dep.stages.len()];
-    for es in &dep.edges {
-        for e in es {
-            if let Some(t) = e.to {
-                indeg[t] += 1;
-            }
-        }
+    if let Err(e) = scenario.validate(None) {
+        panic!("invalid scenario '{}': {e}", scenario.name);
     }
-    assert_eq!(indeg[0], 0, "stage 0 must be the arrival source");
-    debug_assert!(
-        dep.edges.iter().filter(|es| !es.iter().any(|e| e.to.is_some())).count() == 1,
-        "deployment must have exactly one terminal stage"
-    );
-    let pending: Vec<Vec<u8>> = indeg
-        .iter()
-        .map(|&d| if d > 1 { vec![0u8; arrivals.len()] } else { Vec::new() })
-        .collect();
-    let mut eng = Engine {
-        params: dep
-            .stages
-            .iter()
-            .map(|m| StageParams {
-                base_s: m.base_s,
-                per_item_s: m.per_item_s,
-                energy_per_item_j: m.energy_per_item_j,
-            })
-            .collect(),
-        edges: dep.edges.clone(),
-        succ: dep
-            .edges
-            .iter()
-            .map(|es| es.iter().filter_map(|se| se.to).collect())
-            .collect(),
-        indeg,
-        pending,
-        done: vec![false; arrivals.len()],
-        link: dep.link.clone(),
-        slowdowns: scenario
-            .slowdowns
-            .iter()
-            .map(|w| (w.stage, s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
-            .collect(),
-        link_faults: scenario
-            .link_faults
-            .iter()
-            .map(|w| (s_to_ns(w.from_s), s_to_ns(w.to_s), w.factor))
-            .collect(),
-        batch: BatchPolicy::new(cfg.batch.max_batch.max(1), cfg.batch.max_wait),
-        wait_ns: s_to_ns(cfg.batch.max_wait.as_secs_f64()),
-        depth: cfg.queue_depth.max(1),
-        dispatch: cfg.dispatch,
-        heap: BinaryHeap::new(),
-        seq: 0,
-        stages: dep
-            .stages
-            .iter()
-            .map(|m| StageState {
-                servers: (0..m.replicas.max(1)).map(|_| Server::default()).collect(),
-                rr_next: 0,
-                dropped: 0,
-            })
-            .collect(),
-        completions: Vec::with_capacity(arrivals.len()),
-        energy_j: 0.0,
-        events: 0,
-        last_ns: 0,
-    };
-
-    // Merge the (sorted) arrival stream with the event heap instead of
-    // preloading a million arrival events: ties go to the arrival, so an
-    // arrival at exactly a batch-close instant still joins that batch.
-    let mut next = 0usize;
-    loop {
-        let heap_at = eng.heap.peek().map(|Reverse(e)| e.at);
-        match (arrivals.get(next).copied(), heap_at) {
-            (Some(a), Some(h)) if a <= h => {
-                eng.arrive(next as u64, a);
-                next += 1;
-            }
-            (Some(a), None) => {
-                eng.arrive(next as u64, a);
-                next += 1;
-            }
-            (_, Some(_)) => {
-                let Reverse(e) = eng.heap.pop().unwrap();
-                eng.dispatch(e);
-            }
-            (None, None) => break,
-        }
-    }
+    let done = vec![false; arrivals.len()];
+    let mut eng = Engine::new(dep, cfg, scenario, arrivals, 0, 0, done, &[]);
+    eng.step_until(u64::MAX);
+    debug_assert!(eng.idle(), "run left work pending");
+    let out = eng.finish();
     debug_assert_eq!(
-        eng.completions.len(),
+        out.completions.len(),
         arrivals.len(),
         "every request must complete or be dropped exactly once"
     );
+    assemble_report(
+        out.completions,
+        out.stages,
+        out.last_ns,
+        out.energy_j,
+        out.events,
+        scenario.deadline_s,
+    )
+}
 
-    eng.completions.sort_by_key(|c| c.id);
-    let deadline_ns = scenario.deadline_s.map(s_to_ns);
-    let completed: u64 = eng.completions.iter().filter(|c| c.ok).count() as u64;
-    let dropped = eng.completions.len() as u64 - completed;
+/// Fold terminal accounting into a [`SimReport`] — shared by the
+/// single-regime path above and the adaptive runner's multi-regime
+/// aggregation, so both compute goodput/SLO numbers identically.
+pub(crate) fn assemble_report(
+    mut completions: Vec<Completion>,
+    stages: Vec<StageStats>,
+    last_ns: u64,
+    energy_j: f64,
+    events: u64,
+    deadline_s: Option<f64>,
+) -> SimReport {
+    completions.sort_by_key(|c| c.id);
+    let deadline_ns = deadline_s.map(s_to_ns);
+    let completed: u64 = completions.iter().filter(|c| c.ok).count() as u64;
+    let dropped = completions.len() as u64 - completed;
     let slo_violations = match deadline_ns {
-        Some(d) => eng
-            .completions
+        Some(d) => completions
             .iter()
             .filter(|c| c.ok && c.latency.as_nanos() as u64 > d)
             .count() as u64,
         None => 0,
     };
-    let wall = Duration::from_nanos(eng.last_ns);
+    let wall = Duration::from_nanos(last_ns);
     // Replica accounting folds into the stage row (the report shape is
     // shared with the coordinator): items/batches/busy/link sum over
     // the bank, so `busy` can exceed the wall on replicated stages.
-    let stages: Vec<StageStats> = dep
-        .stages
-        .iter()
-        .zip(&eng.stages)
-        .map(|(m, st)| StageStats {
-            name: m.name.clone(),
-            batches: st.servers.iter().map(|s| s.batches).sum(),
-            items: st.servers.iter().map(|s| s.items).sum(),
-            busy: Duration::from_nanos(st.servers.iter().map(|s| s.busy_ns).sum()),
-            link: Duration::from_nanos(st.servers.iter().map(|s| s.link_ns).sum()),
-            failures: st.dropped,
-        })
-        .collect();
     let wall_s = wall.as_secs_f64();
     let goodput = if wall_s > 0.0 {
         (completed - slo_violations) as f64 / wall_s
@@ -505,12 +812,12 @@ pub(crate) fn run_with_arrivals(
         0.0
     };
     SimReport {
-        pipeline: PipelineReport { completions: eng.completions, wall, stages },
+        pipeline: PipelineReport { completions, wall, stages },
         dropped,
         slo_violations,
         goodput,
-        energy_j: eng.energy_j,
-        events: eng.events,
+        energy_j,
+        events,
     }
 }
 
@@ -621,7 +928,7 @@ mod tests {
     fn slowdown_window_degrades_latency() {
         let mut sc = Scenario::steady(2000, 1000.0);
         sc.slowdowns.push(crate::sim::Slowdown {
-            stage: 0,
+            platform: 0,
             from_s: 0.5,
             to_s: 1.5,
             factor: 20.0,
@@ -644,6 +951,165 @@ mod tests {
         let base = simulate(&dep, &cfg(4, 200, 256), &Scenario::steady(1000, 500.0));
         let degraded = simulate(&dep, &cfg(4, 200, 256), &sc);
         assert!(degraded.pipeline.stages[0].link > base.pipeline.stages[0].link);
+    }
+
+    #[test]
+    fn fault_windows_are_half_open() {
+        // Service 1 ms; slowdown 10x over [1, 2). Arrivals pinned at
+        // the window edges: the window start is inside (from_s
+        // inclusive), the window end is outside (to_s exclusive).
+        let dep = Deployment::synthetic("edge", &[0.001], 0);
+        let mut sc = Scenario::replay(vec![0.5, 1.0, 1.5, 2.0]);
+        sc.slowdowns.push(crate::sim::Slowdown {
+            platform: 0,
+            from_s: 1.0,
+            to_s: 2.0,
+            factor: 10.0,
+        });
+        let r = simulate(&dep, &cfg(1, 0, 64), &sc);
+        let lat: Vec<f64> =
+            r.pipeline.completions.iter().map(|c| c.latency.as_secs_f64()).collect();
+        assert!((lat[0] - 0.001).abs() < 1e-9, "before window: {}", lat[0]);
+        assert!((lat[1] - 0.010).abs() < 1e-9, "at from_s (inside): {}", lat[1]);
+        assert!((lat[2] - 0.010).abs() < 1e-9, "inside window: {}", lat[2]);
+        assert!((lat[3] - 0.001).abs() < 1e-9, "at to_s (outside): {}", lat[3]);
+    }
+
+    #[test]
+    fn link_fault_window_is_half_open() {
+        // Two 1 ms stages, 100 kB inter-stage payload; link 100x over
+        // [1, 2). The transfer *start* time picks the factor: an
+        // arrival at 1.999 starts its transfer at exactly to_s = 2.0,
+        // outside the window (half-open), so it matches the clean run.
+        let dep = Deployment::synthetic("l2", &[0.001, 0.001], 100_000);
+        let mk = |faults: Vec<crate::sim::FaultWindow>| {
+            let mut sc = Scenario::replay(vec![0.5, 1.5, 1.999]);
+            sc.link_faults = faults;
+            sc
+        };
+        let fault = crate::sim::FaultWindow { from_s: 1.0, to_s: 2.0, factor: 100.0 };
+        let r = simulate(&dep, &cfg(1, 0, 64), &mk(vec![fault]));
+        let lat: Vec<f64> =
+            r.pipeline.completions.iter().map(|c| c.latency.as_secs_f64()).collect();
+        assert!(lat[1] > 2.0 * lat[0], "transfer inside window not degraded");
+        assert!((lat[2] - lat[0]).abs() < 1e-9, "transfer at to_s degraded: {}", lat[2]);
+    }
+
+    #[test]
+    fn overlapping_windows_compose_multiplicatively_order_independent() {
+        // [1, 3) x2 and [2, 4) x3 on the same platform: disjoint parts
+        // see one factor, the overlap sees 6x, and swapping the window
+        // list order changes nothing (fingerprint-identical).
+        let dep = Deployment::synthetic("ov", &[0.001], 0);
+        let w1 = crate::sim::Slowdown { platform: 0, from_s: 1.0, to_s: 3.0, factor: 2.0 };
+        let w2 = crate::sim::Slowdown { platform: 0, from_s: 2.0, to_s: 4.0, factor: 3.0 };
+        let mk = |ws: Vec<crate::sim::Slowdown>| {
+            let mut sc = Scenario::replay(vec![1.5, 2.5, 3.5]);
+            sc.slowdowns = ws;
+            sc
+        };
+        let a = simulate(&dep, &cfg(1, 0, 64), &mk(vec![w1, w2]));
+        let lat: Vec<f64> =
+            a.pipeline.completions.iter().map(|c| c.latency.as_secs_f64()).collect();
+        assert!((lat[0] - 0.002).abs() < 1e-9, "w1 only: {}", lat[0]);
+        assert!((lat[1] - 0.006).abs() < 1e-9, "overlap multiplies: {}", lat[1]);
+        assert!((lat[2] - 0.003).abs() < 1e-9, "w2 only: {}", lat[2]);
+        let b = simulate(&dep, &cfg(1, 0, 64), &mk(vec![w2, w1]));
+        assert_eq!(a.fingerprint(), b.fingerprint(), "window order changed the run");
+    }
+
+    #[test]
+    fn node_loss_window_drops_and_recovers() {
+        // Platform 0 dark over [1, 2): the request at 1.5 is lost on
+        // delivery; 0.5 (before) and 2.0 (window end, half-open)
+        // complete normally.
+        let dep = Deployment::synthetic("nl", &[0.001], 0);
+        let mut sc = Scenario::replay(vec![0.5, 1.5, 2.0]);
+        sc.node_loss.push(crate::sim::NodeLoss { platform: 0, from_s: 1.0, to_s: 2.0 });
+        let r = simulate(&dep, &cfg(1, 0, 64), &sc);
+        assert_eq!(r.pipeline.completions.len(), 3);
+        assert_eq!(r.dropped, 1);
+        assert!(r.pipeline.completions[0].ok);
+        assert!(!r.pipeline.completions[1].ok, "delivery to a dead node must drop");
+        assert!(r.pipeline.completions[2].ok, "node must be back at to_s");
+        assert_eq!(r.pipeline.stages[0].failures, 1);
+    }
+
+    #[test]
+    fn node_loss_drains_queued_and_in_flight_work_at_window_start() {
+        // Ten co-arriving requests through a 0.1 s/item server; the
+        // node dies at 0.25. Two complete (at 0.1 and 0.2); the third
+        // is in flight and the remaining seven are queued when the
+        // window opens — all eight drop exactly at the window edge.
+        let dep = Deployment::synthetic("drain", &[0.1], 0);
+        let mut sc = Scenario::replay(vec![0.0; 10]);
+        sc.node_loss.push(crate::sim::NodeLoss { platform: 0, from_s: 0.25, to_s: 10.0 });
+        let r = simulate(&dep, &cfg(1, 0, 64), &sc);
+        assert_eq!(r.pipeline.completions.len(), 10);
+        assert_eq!(r.pipeline.completed(), 2);
+        assert_eq!(r.dropped, 8);
+        for c in r.pipeline.completions.iter().filter(|c| !c.ok) {
+            assert_eq!(c.latency.as_nanos() as u64, 250_000_000, "drop not at window edge");
+        }
+    }
+
+    #[test]
+    fn node_loss_conserves_requests_and_is_deterministic() {
+        // A replicated downstream stage dies mid-run: upstream keeps
+        // forwarding into the dead bank (drops on delivery), then the
+        // pipeline recovers. Every request leaves exactly once and the
+        // run is bit-identical on repeat.
+        let dep = Deployment::synthetic("nl2", &[0.0003, 0.0005], 4096).replicate_stage(1, 2);
+        let mut sc = Scenario::steady(5000, 1500.0);
+        sc.node_loss.push(crate::sim::NodeLoss { platform: 1, from_s: 1.0, to_s: 2.0 });
+        let a = simulate(&dep, &cfg(4, 200, 128), &sc);
+        let b = simulate(&dep, &cfg(4, 200, 128), &sc);
+        assert_eq!(a.pipeline.completions.len(), 5000);
+        assert!(a.dropped > 0, "node loss produced no drops");
+        assert_eq!(a.dropped as usize + a.pipeline.completed(), 5000);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        assert_eq!(a.events, b.events);
+        // The clean run completes everything — the drops are the
+        // window's doing, not the load's.
+        let clean = simulate(&dep, &cfg(4, 200, 128), &Scenario::steady(5000, 1500.0));
+        assert_eq!(clean.dropped, 0);
+    }
+
+    #[test]
+    fn chunked_stepping_matches_single_run() {
+        // Driving the engine in 50 ms epochs (draining epoch stats at
+        // every edge) must replay the exact event stream of the
+        // one-shot run: same fingerprint, same event count.
+        let dep = Deployment::synthetic("chunk", &[0.0004, 0.0006], 8192);
+        let sc = Scenario::bursty(8000, 800.0, 4000.0);
+        let arrivals = sc.arrival_times_ns(42);
+        let c = cfg(8, 500, 128);
+        let one = run_with_arrivals(&dep, &c, &sc, &arrivals);
+        let mut eng =
+            Engine::new(&dep, &c, &sc, &arrivals, 0, 0, vec![false; arrivals.len()], &[]);
+        let mut t = 50_000_000u64;
+        let mut epochs = 0usize;
+        let mut observed_delivered = 0u64;
+        while !eng.idle() {
+            eng.step_until(t);
+            let obs = eng.take_epoch();
+            observed_delivered += obs.delivered[0];
+            epochs += 1;
+            t += 50_000_000;
+        }
+        let out = eng.finish();
+        let rep = assemble_report(
+            out.completions,
+            out.stages,
+            out.last_ns,
+            out.energy_j,
+            out.events,
+            sc.deadline_s,
+        );
+        assert_eq!(one.fingerprint(), rep.fingerprint(), "epoch stepping perturbed the run");
+        assert_eq!(one.events, rep.events);
+        assert!(epochs > 10, "trace should span many epochs, got {epochs}");
+        assert_eq!(observed_delivered, 8000, "epoch stats missed deliveries");
     }
 
     #[test]

@@ -55,19 +55,12 @@ pub fn evaluate_front(
     cfg: &SimCfg,
     jobs: usize,
 ) -> Vec<RankedCandidate> {
-    let mut idx: Vec<usize> = ex.pareto.clone();
-    // Baselines must be deployable: an infeasible single-platform
-    // candidate (e.g. over its memory budget) would skew the headline
-    // gain against a deployment that cannot actually run.
-    idx.extend(
-        ex.candidates
-            .iter()
-            .enumerate()
-            .filter(|(_, c)| c.partitions == 1 && c.feasible())
-            .map(|(i, _)| i),
-    );
-    idx.sort_unstable();
-    idx.dedup();
+    // The serving set (Pareto front + feasible single-platform
+    // baselines + favorite) is shared with the adaptive controller's
+    // candidate pool — an infeasible single-platform candidate (e.g.
+    // over its memory budget) is excluded so it cannot skew the
+    // headline gain against a deployment that cannot actually run.
+    let idx = ex.serving_candidates();
     // One trace, shared by every candidate: the scenario expansion is a
     // pure function of (scenario, seed), so re-running it per candidate
     // would only burn time (1M-request traces are ~8 MB of RNG work).

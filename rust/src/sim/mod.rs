@@ -18,8 +18,17 @@
 //!   is *serialized into the sending stage*, exactly like the
 //!   coordinator's stage thread sleeping the modelled transfer time;
 //! * scenarios ([`Scenario`]) drive open-loop arrivals (Poisson, burst,
-//!   diurnal, replayed traces), deadline SLOs, and transient faults
-//!   (per-stage slowdown windows, link degradation windows);
+//!   diurnal, replayed traces), deadline SLOs, and transient faults —
+//!   all on half-open `[from, to)` windows keyed by *platform*, so
+//!   degradation follows the hardware: per-platform slowdown windows,
+//!   link degradation windows, and node-loss windows ([`NodeLoss`]:
+//!   the platform's replica bank goes dark, queued work drops);
+//! * the adaptive layer ([`simulate_adaptive`]) runs a deterministic
+//!   controller on the same virtual clock: it watches per-epoch queue
+//!   depths, drops and SLO misses, and under hysteresis swaps the live
+//!   deployment to a different explored candidate, paying an explicit
+//!   migration cost (stage weights + in-flight activations over the
+//!   real link) while aborted requests restart from the model input;
 //! * deployments are **stage graphs**, not just chains: a stage may
 //!   fork a request to several successors (branch-parallel DAG
 //!   partitions from `explorer::dag`) and a join stage waits for every
@@ -42,12 +51,17 @@
 //! [`evaluate_front`] fans candidates out over workers with
 //! `par_map`, so `--jobs` never changes a single bit of the output.
 
+mod adaptive;
 mod engine;
 mod evaluate;
 mod scenario;
 
+pub use adaptive::{
+    candidate_pool, compare_adaptive, simulate_adaptive, AdaptiveComparison, AdaptiveReport,
+    ControllerMode, Migration, PoolCandidate, PoolStage,
+};
 pub use evaluate::{best_gain_over_single, evaluate_front, render_ranking, RankedCandidate};
-pub use scenario::{Arrivals, FaultWindow, Scenario, Slowdown};
+pub use scenario::{Arrivals, FaultWindow, NodeLoss, Scenario, Slowdown};
 
 use crate::config::SystemConfig;
 use crate::coordinator::{BatchPolicy, PipelineReport};
@@ -70,6 +84,11 @@ pub struct StageModel {
     /// Compute energy per item (J); link energy is charged separately
     /// from actual batched wire bytes.
     pub energy_per_item_j: f64,
+    /// Platform slot hosting this stage — the key fault windows match
+    /// on (`Slowdown`/`NodeLoss` follow hardware, not stage indices).
+    /// Explored candidates carry their plan's platform; synthetic
+    /// helpers use the stage index.
+    pub platform: usize,
     /// Total payload bytes per item shipped downstream (0 = nothing) —
     /// informational aggregate; the engine times transfers per
     /// [`Deployment::edges`] entry.
@@ -160,6 +179,7 @@ impl Deployment {
                     base_s: 0.0,
                     per_item_s: p.latency_s,
                     energy_per_item_j: p.energy_j,
+                    platform: p.platform,
                     out_bytes_per_item: p.out_bytes,
                     out_hops: p.out_hops,
                     replicas: p.replicas.max(1),
@@ -186,6 +206,7 @@ impl Deployment {
                     base_s: 0.0,
                     per_item_s: s,
                     energy_per_item_j: 0.0,
+                    platform: i,
                     out_bytes_per_item: if i + 1 < n { cut_bytes } else { 0 },
                     out_hops: u64::from(i + 1 < n),
                     replicas: 1,
@@ -223,6 +244,7 @@ impl Deployment {
             base_s: 0.0,
             per_item_s: source_s,
             energy_per_item_j: 0.0,
+            platform: 0,
             out_bytes_per_item: cut_bytes * nb as u64,
             out_hops: nb as u64,
             replicas: 1,
@@ -236,6 +258,7 @@ impl Deployment {
                 base_s: 0.0,
                 per_item_s: s,
                 energy_per_item_j: 0.0,
+                platform: i + 1,
                 out_bytes_per_item: cut_bytes,
                 out_hops: 1,
                 replicas: 1,
@@ -247,6 +270,7 @@ impl Deployment {
             base_s: 0.0,
             per_item_s: sink_s,
             energy_per_item_j: 0.0,
+            platform: sink,
             out_bytes_per_item: 0,
             out_hops: 0,
             replicas: 1,

@@ -32,12 +32,18 @@ pub enum Arrivals {
     Replay { times_s: Vec<f64> },
 }
 
-/// A transient compute fault: `stage`'s service time is multiplied by
-/// `factor` for batches starting in `[from_s, to_s)`.
+/// A transient compute fault: every stage deployed on `platform` has
+/// its service time multiplied by `factor` for batches starting in
+/// the half-open window `[from_s, to_s)`.
+///
+/// Faults are keyed by *platform* (hardware slot), not by deployment
+/// stage index: degradation follows the physical node, so it keeps
+/// affecting the same hardware after the adaptive controller swaps to
+/// a deployment that partitions the model differently.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slowdown {
-    /// Affected stage index.
-    pub stage: usize,
+    /// Affected platform slot (matches `StageModel::platform`).
+    pub platform: usize,
     /// Window start (virtual seconds).
     pub from_s: f64,
     /// Window end (virtual seconds, exclusive).
@@ -47,7 +53,7 @@ pub struct Slowdown {
 }
 
 /// A transient link fault: transfer times are multiplied by `factor`
-/// for transfers starting in `[from_s, to_s)`.
+/// for transfers starting in the half-open window `[from_s, to_s)`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultWindow {
     /// Window start (virtual seconds).
@@ -56,6 +62,22 @@ pub struct FaultWindow {
     pub to_s: f64,
     /// Transfer-time multiplier inside the window.
     pub factor: f64,
+}
+
+/// A node-loss window: `platform`'s entire replica bank is dark for
+/// `[from_s, to_s)`. Work queued or in flight on the node when the
+/// window opens is dropped (and accounted as dropped), and deliveries
+/// addressed to it during the window are dropped on arrival. At
+/// `to_s` the node is back (half-open interval, like every other
+/// fault window).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct NodeLoss {
+    /// Affected platform slot (matches `StageModel::platform`).
+    pub platform: usize,
+    /// Window start (virtual seconds).
+    pub from_s: f64,
+    /// Window end (virtual seconds, exclusive).
+    pub to_s: f64,
 }
 
 /// A full serving scenario.
@@ -71,10 +93,12 @@ pub struct Scenario {
     /// End-to-end deadline; completions beyond it count as SLO
     /// violations and leave the goodput.
     pub deadline_s: Option<f64>,
-    /// Transient per-stage compute faults.
+    /// Transient per-platform compute faults.
     pub slowdowns: Vec<Slowdown>,
     /// Transient link-degradation windows.
     pub link_faults: Vec<FaultWindow>,
+    /// Node-loss windows (a platform's replica bank dark).
+    pub node_loss: Vec<NodeLoss>,
 }
 
 impl Scenario {
@@ -87,7 +111,9 @@ impl Scenario {
             deadline_s: None,
             slowdowns: Vec::new(),
             link_faults: Vec::new(),
+            node_loss: Vec::new(),
         }
+        .checked()
     }
 
     /// Bursty traffic: 20% of each second at `burst_rate`, the rest at
@@ -105,7 +131,9 @@ impl Scenario {
             deadline_s: None,
             slowdowns: Vec::new(),
             link_faults: Vec::new(),
+            node_loss: Vec::new(),
         }
+        .checked()
     }
 
     /// Diurnal traffic with a 10 s "day".
@@ -117,11 +145,14 @@ impl Scenario {
             deadline_s: None,
             slowdowns: Vec::new(),
             link_faults: Vec::new(),
+            node_loss: Vec::new(),
         }
+        .checked()
     }
 
-    /// Steady traffic with a mid-run fault: stage 0 slows 3x for one
-    /// fifth of the trace and the link degrades 10x for another fifth.
+    /// Steady traffic with a mid-run fault: platform 0 slows 3x for
+    /// one fifth of the trace and the link degrades 10x for another
+    /// fifth.
     pub fn degraded(requests: usize, rate: f64) -> Self {
         let span = requests as f64 / rate.max(1e-9);
         Scenario {
@@ -130,7 +161,7 @@ impl Scenario {
             arrivals: Arrivals::Poisson { rate },
             deadline_s: None,
             slowdowns: vec![Slowdown {
-                stage: 0,
+                platform: 0,
                 from_s: 0.2 * span,
                 to_s: 0.4 * span,
                 factor: 3.0,
@@ -140,7 +171,33 @@ impl Scenario {
                 to_s: 0.8 * span,
                 factor: 10.0,
             }],
+            node_loss: Vec::new(),
         }
+        .checked()
+    }
+
+    /// Steady traffic with a mid-run node loss: platform 0's replica
+    /// bank goes dark for `[0.35, 0.65)` of the trace span. Any
+    /// deployment with a stage on platform 0 drops everything it is
+    /// offered during the window; plans that avoid the platform ride
+    /// it out — the canonical failover scenario for the adaptive
+    /// controller.
+    pub fn failover(requests: usize, rate: f64) -> Self {
+        let span = requests as f64 / rate.max(1e-9);
+        Scenario {
+            name: "failover".into(),
+            requests,
+            arrivals: Arrivals::Poisson { rate },
+            deadline_s: None,
+            slowdowns: Vec::new(),
+            link_faults: Vec::new(),
+            node_loss: vec![NodeLoss {
+                platform: 0,
+                from_s: 0.35 * span,
+                to_s: 0.65 * span,
+            }],
+        }
+        .checked()
     }
 
     /// Replay an explicit trace.
@@ -153,7 +210,9 @@ impl Scenario {
             deadline_s: None,
             slowdowns: Vec::new(),
             link_faults: Vec::new(),
+            node_loss: Vec::new(),
         }
+        .checked()
     }
 
     /// Built-in scenario catalog for the CLI — exactly the names
@@ -164,13 +223,14 @@ impl Scenario {
             "burst" => Self::bursty(requests, 0.5 * rate, 3.0 * rate),
             "diurnal" => Self::diurnal(requests, 0.25 * rate, rate),
             "degraded" => Self::degraded(requests, rate),
+            "failover" => Self::failover(requests, rate),
             _ => return None,
         })
     }
 
     /// Names accepted by [`Scenario::by_name`] (the CLI presets).
     pub fn builtin_names() -> &'static [&'static str] {
-        &["steady", "burst", "diurnal", "degraded"]
+        &["steady", "burst", "diurnal", "degraded", "failover"]
     }
 
     /// Load from a TOML file (see `from_json` for the schema).
@@ -194,7 +254,7 @@ impl Scenario {
     /// # replay: times_s = [0.0, 0.001, ...]
     ///
     /// [[slowdown]]
-    /// stage = 0
+    /// platform = 0                # "stage" accepted as legacy alias
     /// from_s = 1.0
     /// to_s = 2.0
     /// factor = 3.0
@@ -203,7 +263,16 @@ impl Scenario {
     /// from_s = 5.0
     /// to_s = 6.0
     /// factor = 10.0
+    ///
+    /// [[node_loss]]
+    /// platform = 1
+    /// from_s = 3.0
+    /// to_s = 4.0
     /// ```
+    ///
+    /// The parsed scenario is [`Scenario::validate`]d before it is
+    /// returned; inverted windows and non-positive factors are errors,
+    /// not silent no-ops.
     pub fn from_json(doc: &Json) -> Result<Self, String> {
         let requests = doc.get("requests").as_usize().unwrap_or(1_000_000);
         let a = doc.get("arrivals");
@@ -239,23 +308,107 @@ impl Scenario {
                     .iter()
                     .map(|t| t.as_f64().ok_or_else(|| format!("bad replay time {t:?}")))
                     .collect::<Result<_, _>>()?;
+                if times_s.iter().any(|t| !t.is_finite() || *t < 0.0) {
+                    return Err("replay times must be finite and >= 0".into());
+                }
                 let mut sc = Self::replay(times_s);
                 sc.name = doc.get("name").as_str().unwrap_or("replay").to_string();
                 sc.deadline_s = doc.get("slo_ms").as_f64().map(|ms| ms * 1e-3);
                 sc.slowdowns = parse_slowdowns(doc)?;
                 sc.link_faults = parse_link_faults(doc)?;
+                sc.node_loss = parse_node_loss(doc)?;
+                sc.validate(None)?;
                 return Ok(sc);
             }
             other => return Err(format!("unknown arrivals.kind '{other}'")),
         };
-        Ok(Scenario {
+        let sc = Scenario {
             name: doc.get("name").as_str().unwrap_or(kind).to_string(),
             requests,
             arrivals,
             deadline_s: doc.get("slo_ms").as_f64().map(|ms| ms * 1e-3),
             slowdowns: parse_slowdowns(doc)?,
             link_faults: parse_link_faults(doc)?,
-        })
+            node_loss: parse_node_loss(doc)?,
+        };
+        sc.validate(None)?;
+        Ok(sc)
+    }
+
+    /// Structural validation: rejects inverted fault windows
+    /// (`from_s > to_s`), non-positive or non-finite factors,
+    /// non-positive arrival rates, and — when the caller knows the
+    /// platform count — out-of-range platform indices. Called on TOML
+    /// load and on every preset constructor; callers that resolve a
+    /// scenario against a concrete system should re-validate with
+    /// `Some(platform_count)`.
+    pub fn validate(&self, platforms: Option<usize>) -> Result<(), String> {
+        let window = |what: &str, from: f64, to: f64| -> Result<(), String> {
+            if !(from.is_finite() && from >= 0.0) {
+                return Err(format!("{what}: window start {from} must be finite and >= 0"));
+            }
+            if to.is_nan() || to < from {
+                return Err(format!("{what}: inverted window [{from}, {to})"));
+            }
+            Ok(())
+        };
+        let platform_ok = |what: &str, p: usize| -> Result<(), String> {
+            match platforms {
+                Some(n) if p >= n => {
+                    Err(format!("{what}: platform {p} out of range (system has {n})"))
+                }
+                _ => Ok(()),
+            }
+        };
+        match &self.arrivals {
+            Arrivals::Poisson { rate } => {
+                positive(*rate, "arrivals.rate")?;
+            }
+            Arrivals::Burst { base_rate, burst_rate, period_s, burst_fraction } => {
+                positive(*base_rate, "arrivals.base_rate")?;
+                positive(*burst_rate, "arrivals.burst_rate")?;
+                positive(*period_s, "arrivals.period_s")?;
+                if !(0.0 < *burst_fraction && *burst_fraction < 1.0) {
+                    return Err(format!("burst_fraction {burst_fraction} must be in (0, 1)"));
+                }
+            }
+            Arrivals::Diurnal { base_rate, peak_rate, period_s } => {
+                positive(*base_rate, "arrivals.base_rate")?;
+                positive(*peak_rate, "arrivals.peak_rate")?;
+                positive(*period_s, "arrivals.period_s")?;
+            }
+            Arrivals::Replay { times_s } => {
+                if times_s.iter().any(|t| !t.is_finite() || *t < 0.0) {
+                    return Err("replay times must be finite and >= 0".into());
+                }
+            }
+        }
+        if let Some(d) = self.deadline_s {
+            positive(d, "deadline_s")?;
+        }
+        for (i, w) in self.slowdowns.iter().enumerate() {
+            window(&format!("slowdown[{i}]"), w.from_s, w.to_s)?;
+            positive(w.factor, &format!("slowdown[{i}].factor"))?;
+            platform_ok(&format!("slowdown[{i}]"), w.platform)?;
+        }
+        for (i, w) in self.link_faults.iter().enumerate() {
+            window(&format!("link_fault[{i}]"), w.from_s, w.to_s)?;
+            positive(w.factor, &format!("link_fault[{i}].factor"))?;
+        }
+        for (i, w) in self.node_loss.iter().enumerate() {
+            window(&format!("node_loss[{i}]"), w.from_s, w.to_s)?;
+            platform_ok(&format!("node_loss[{i}]"), w.platform)?;
+        }
+        Ok(())
+    }
+
+    /// Preset-constructor guard: presets are built from code, so a
+    /// validation failure is a programming error, not user input.
+    fn checked(self) -> Self {
+        if let Err(e) = self.validate(None) {
+            panic!("builtin scenario '{}' failed validation: {e}", self.name);
+        }
+        self
     }
 
     /// Expand the arrival process into a sorted trace of virtual
@@ -316,10 +469,29 @@ fn parse_slowdowns(doc: &Json) -> Result<Vec<Slowdown>, String> {
     arr.iter()
         .map(|w| {
             Ok(Slowdown {
-                stage: w.get("stage").as_usize().ok_or("slowdown.stage required")?,
+                // "stage" is the pre-0.7 key; faults have always pinned
+                // hardware, so it keeps parsing as the platform slot.
+                platform: w
+                    .get("platform")
+                    .as_usize()
+                    .or_else(|| w.get("stage").as_usize())
+                    .ok_or("slowdown.platform required")?,
                 from_s: w.get("from_s").as_f64().unwrap_or(0.0),
                 to_s: w.get("to_s").as_f64().unwrap_or(f64::MAX),
                 factor: positive(w.get("factor").as_f64().unwrap_or(1.0), "slowdown.factor")?,
+            })
+        })
+        .collect()
+}
+
+fn parse_node_loss(doc: &Json) -> Result<Vec<NodeLoss>, String> {
+    let Some(arr) = doc.get("node_loss").as_arr() else { return Ok(Vec::new()) };
+    arr.iter()
+        .map(|w| {
+            Ok(NodeLoss {
+                platform: w.get("platform").as_usize().ok_or("node_loss.platform required")?,
+                from_s: w.get("from_s").as_f64().unwrap_or(0.0),
+                to_s: w.get("to_s").as_f64().unwrap_or(f64::MAX),
             })
         })
         .collect()
@@ -438,10 +610,20 @@ from_s = 2.0
 to_s = 4.0
 factor = 3.0
 
+[[slowdown]]
+platform = 0
+from_s = 6.0
+factor = 2.0
+
 [[link_fault]]
 from_s = 5.0
 to_s = 6.0
 factor = 10.0
+
+[[node_loss]]
+platform = 1
+from_s = 8.0
+to_s = 9.0
 "#;
         let sc = Scenario::from_json(&tomlite::parse(text).unwrap()).unwrap();
         assert_eq!(sc.name, "evening-peak");
@@ -451,9 +633,74 @@ factor = 10.0
             sc.arrivals,
             Arrivals::Diurnal { base_rate: 500.0, peak_rate: 4000.0, period_s: 20.0 }
         );
-        assert_eq!(sc.slowdowns.len(), 1);
-        assert_eq!(sc.slowdowns[0].stage, 1);
+        assert_eq!(sc.slowdowns.len(), 2);
+        // Legacy "stage" key parses as the platform slot.
+        assert_eq!(sc.slowdowns[0].platform, 1);
+        assert_eq!(sc.slowdowns[1].platform, 0);
         assert_eq!(sc.link_faults[0].factor, 10.0);
+        assert_eq!(sc.node_loss, vec![NodeLoss { platform: 1, from_s: 8.0, to_s: 9.0 }]);
+    }
+
+    #[test]
+    fn validate_rejects_inverted_windows_and_bad_factors() {
+        let mut sc = Scenario::steady(100, 1000.0);
+        assert!(sc.validate(None).is_ok());
+
+        sc.slowdowns = vec![Slowdown { platform: 0, from_s: 4.0, to_s: 2.0, factor: 3.0 }];
+        assert!(sc.validate(None).unwrap_err().contains("inverted"));
+
+        sc.slowdowns = vec![Slowdown { platform: 0, from_s: 1.0, to_s: 2.0, factor: -3.0 }];
+        assert!(sc.validate(None).unwrap_err().contains("factor"));
+
+        sc.slowdowns = vec![Slowdown { platform: 0, from_s: 1.0, to_s: 2.0, factor: 0.0 }];
+        assert!(sc.validate(None).is_err());
+
+        sc.slowdowns.clear();
+        sc.link_faults = vec![FaultWindow { from_s: 9.0, to_s: 1.0, factor: 2.0 }];
+        assert!(sc.validate(None).unwrap_err().contains("link_fault"));
+
+        sc.link_faults.clear();
+        sc.node_loss = vec![NodeLoss { platform: 0, from_s: -1.0, to_s: 2.0 }];
+        assert!(sc.validate(None).is_err());
+    }
+
+    #[test]
+    fn validate_bounds_platform_indices_when_known() {
+        let mut sc = Scenario::steady(100, 1000.0);
+        sc.slowdowns = vec![Slowdown { platform: 2, from_s: 0.0, to_s: 1.0, factor: 2.0 }];
+        assert!(sc.validate(None).is_ok(), "platform count unknown: no bound check");
+        assert!(sc.validate(Some(3)).is_ok());
+        let err = sc.validate(Some(2)).unwrap_err();
+        assert!(err.contains("out of range"), "{err}");
+
+        sc.slowdowns.clear();
+        sc.node_loss = vec![NodeLoss { platform: 5, from_s: 0.0, to_s: 1.0 }];
+        assert!(sc.validate(Some(2)).is_err());
+    }
+
+    #[test]
+    fn toml_load_rejects_invalid_windows() {
+        for bad in [
+            "requests = 10\n[arrivals]\nrate = 100.0\n[[slowdown]]\nplatform = 0\nfrom_s = 5.0\nto_s = 1.0\nfactor = 2.0\n",
+            "requests = 10\n[arrivals]\nrate = 100.0\n[[link_fault]]\nfrom_s = 5.0\nto_s = 1.0\nfactor = 2.0\n",
+            "requests = 10\n[arrivals]\nrate = 100.0\n[[node_loss]]\nplatform = 0\nfrom_s = 5.0\nto_s = 1.0\n",
+            "requests = 10\n[arrivals]\nkind = \"replay\"\ntimes_s = [-1.0, 0.5]\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(Scenario::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn failover_preset_has_midrun_node_loss() {
+        let sc = Scenario::by_name("failover", 1000, 100.0).unwrap();
+        assert_eq!(sc.node_loss.len(), 1);
+        let w = sc.node_loss[0];
+        assert_eq!(w.platform, 0);
+        let span = 1000.0 / 100.0;
+        assert!(w.from_s > 0.0 && w.to_s < span && w.from_s < w.to_s);
+        assert!(sc.validate(Some(1)).is_ok());
+        assert!(Scenario::builtin_names().contains(&"failover"));
     }
 
     #[test]

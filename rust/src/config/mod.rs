@@ -260,6 +260,11 @@ pub struct SystemConfig {
     pub replication: Option<ReplicationCfg>,
     /// Seed for every stochastic component of the DSE.
     pub seed: u64,
+    /// Observability sinks and (when active) the live metrics/span
+    /// registry (`--trace-out` / `--metrics-out` / `[obs]`). Default:
+    /// dormant — zero instrumentation, provably inert when enabled
+    /// (see [`crate::obs`] and `tests/obs.rs`).
+    pub obs: crate::obs::ObsCfg,
     /// Worker threads for hardware evaluation, candidate enumeration and
     /// NSGA-II population evaluation (1 = serial; results are
     /// bit-identical for every value — see `util::parallel`).
@@ -301,6 +306,7 @@ impl SystemConfig {
             cache_dir: None,
             replication: None,
             seed: DSE_SEED,
+            obs: Default::default(),
             jobs: 1,
         }
     }
@@ -499,6 +505,29 @@ impl SystemConfig {
             repl.validate(cfg.platforms.len())?;
             cfg.replication = Some(repl);
         }
+        let o = doc.get("obs");
+        if let Json::Obj(_) = o {
+            if let Some(t) = o.get("trace_out").as_str() {
+                if t.is_empty() {
+                    return Err("obs.trace_out must not be empty".into());
+                }
+                cfg.obs.trace_out = Some(PathBuf::from(t));
+            }
+            if let Some(m) = o.get("metrics_out").as_str() {
+                if m.is_empty() {
+                    return Err("obs.metrics_out must not be empty".into());
+                }
+                cfg.obs.metrics_out = Some(PathBuf::from(m));
+            }
+            // A sink implies instrumentation; `enabled = true` turns it
+            // on even without sinks (library callers export manually).
+            if o.get("enabled").as_bool() == Some(true)
+                || cfg.obs.trace_out.is_some()
+                || cfg.obs.metrics_out.is_some()
+            {
+                cfg.obs.activate();
+            }
+        }
         if let Some(d) = doc.get("cache_dir").as_str() {
             cfg.cache_dir = Some(PathBuf::from(d));
         }
@@ -695,6 +724,31 @@ weight = 2.0
             "[adaptive]\nhysteresis = 0\n",
             "[adaptive]\nimprove_factor = 0.5\n",
         ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn obs_section_parses_and_validates() {
+        let doc = tomlite::parse(
+            "[obs]\ntrace_out = \"out/trace.json\"\nmetrics_out = \"out/metrics.csv\"\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.obs.trace_out, Some(PathBuf::from("out/trace.json")));
+        assert_eq!(cfg.obs.metrics_out, Some(PathBuf::from("out/metrics.csv")));
+        // A sink implies a live registry.
+        assert!(cfg.obs.enabled());
+        // `enabled = true` activates without sinks.
+        let doc = tomlite::parse("[obs]\nenabled = true\n").unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert!(cfg.obs.enabled() && cfg.obs.trace_out.is_none());
+        // Default: dormant.
+        let d = SystemConfig::paper_two_platform().obs;
+        assert!(!d.enabled() && d.trace_out.is_none() && d.metrics_out.is_none());
+        // Empty sink paths rejected.
+        for bad in ["[obs]\ntrace_out = \"\"\n", "[obs]\nmetrics_out = \"\"\n"] {
             let doc = tomlite::parse(bad).unwrap();
             assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
         }

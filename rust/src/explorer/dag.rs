@@ -194,6 +194,8 @@ pub(crate) fn explore_dag_impl(
 
     // Assignment search. Everything here is deterministic: the GA's RNG
     // is seeded, evaluation is pure, and dedup uses ordered sets.
+    let obs = sys.obs.registry();
+    let dag0 = crate::obs::mark(obs);
     let t1 = Instant::now();
     let problem = DagProblem {
         ev: &ev,
@@ -201,7 +203,12 @@ pub(crate) fn explore_dag_impl(
         num_platforms: k,
         inventory: sys.replication.as_ref().map(|r| r.inventory.clone()),
     };
-    let front = nsga2::optimize_par(&problem, &dag_cfg(g.len(), sys.seed), sys.jobs.max(1));
+    let front = nsga2::optimize_par_obs(
+        &problem,
+        &dag_cfg(g.len(), sys.seed),
+        sys.jobs.max(1),
+        obs.map(|a| a.as_ref()),
+    );
 
     // Dedup: one entry per distinct repaired (assignment, replicas)
     // pair, and never a candidate that duplicates an existing chain
@@ -243,6 +250,9 @@ pub(crate) fn explore_dag_impl(
     }
     ex.timing.nsga_s += t1.elapsed().as_secs_f64();
     ex.timing.total_s = total0.elapsed().as_secs_f64();
+    if let Some(reg) = obs {
+        reg.wall_span("dag assignment search", 0, dag0);
+    }
     ex
 }
 

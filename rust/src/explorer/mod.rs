@@ -425,14 +425,25 @@ impl<'a> PlanEvaluator<'a> {
         let pos = topo::positions(&order, g.len());
         let cuts = all_cuts(g, &order);
         let jobs = sys.jobs.max(1);
+        let obs = sys.obs.registry();
+        let warm0 = crate::obs::mark(obs);
         let t0 = Instant::now();
         let ev = HwEvaluator::with_cache(sys.search.clone(), cache);
+        if let Some(reg) = obs {
+            // Adoption, not duplication: the registry exports the very
+            // cells the evaluator increments (cost-cache hits/misses,
+            // mapper prune effectiveness).
+            ev.adopt_into(reg);
+        }
         let prefix = sys
             .platforms
             .iter()
             .map(|p| prefix_costs(&ev.schedule_costs_par(&p.accelerator, g, &order, jobs)))
             .collect();
         let hw_eval_s = t0.elapsed().as_secs_f64();
+        if let Some(reg) = obs {
+            reg.wall_span("hw eval (cache warmup + mapper)", 0, warm0);
+        }
         let model_acc = accuracy::model_accuracy(&g.name)
             .cloned()
             .unwrap_or(ModelAccuracy { name: "unknown", fp32_top1: 75.0, ptq8_drop: 1.0 });
@@ -453,6 +464,10 @@ impl<'a> PlanEvaluator<'a> {
             .unwrap_or(0);
         let succ = g.successors();
         let outs = g.outputs();
+        let stage_cache = StageCache::new();
+        if let Some(reg) = obs {
+            stage_cache.adopt_into(reg, &format!("explorer.stagecache.{}", g.name));
+        }
         Self {
             g,
             sys,
@@ -462,7 +477,7 @@ impl<'a> PlanEvaluator<'a> {
             prefix,
             succ,
             outs,
-            stage_cache: StageCache::new(),
+            stage_cache,
             params_prefix,
             macs_prefix,
             peak_prefix,
@@ -1877,10 +1892,12 @@ pub(crate) fn explore_two_platform_with(ev: &PlanEvaluator, graph_s: f64) -> Exp
     let g = ev.g;
     let sys = ev.sys;
     let jobs = sys.jobs.max(1);
+    let obs = sys.obs.registry();
     let total0 = Instant::now();
 
     // Candidate space: Definition-1 (single-tensor) cuts plus the two
     // single-platform references. Cut at `len-1` = everything on A.
+    let cand0 = crate::obs::mark(obs);
     let t1 = Instant::now();
     let len = ev.order.len();
     let mut space: Vec<usize> = ev
@@ -1910,15 +1927,25 @@ pub(crate) fn explore_two_platform_with(ev: &PlanEvaluator, graph_s: f64) -> Exp
     let mut it = keep_mask.iter();
     candidates.retain(|_| *it.next().unwrap());
     let candidates_s = t1.elapsed().as_secs_f64();
+    if let Some(reg) = obs {
+        reg.wall_span("candidate sweep", 0, cand0);
+        reg.counter("explorer.candidates_evaluated").add(space.len() as u64);
+    }
 
     let pareto = exhaustive_pareto(&candidates, &sys.pareto_metrics);
     let favorite = pick_favorite(&candidates, &sys.favorite.weights);
 
     // NSGA-II per the paper (validated against the exhaustive front).
+    let nsga0 = crate::obs::mark(obs);
     let t2 = Instant::now();
     let problem =
         TwoPlatformProblem { ev, space: space.clone(), metrics: sys.pareto_metrics.clone() };
-    let front = nsga2::optimize_par(&problem, &Nsga2Cfg::for_layers(g.len(), sys.seed), jobs);
+    let front = nsga2::optimize_par_obs(
+        &problem,
+        &Nsga2Cfg::for_layers(g.len(), sys.seed),
+        jobs,
+        obs.map(|a| a.as_ref()),
+    );
     let mut nsga_front: Vec<usize> = front
         .iter()
         .map(|s| s.vars[0] as usize)
@@ -1926,6 +1953,9 @@ pub(crate) fn explore_two_platform_with(ev: &PlanEvaluator, graph_s: f64) -> Exp
     nsga_front.sort_unstable();
     nsga_front.dedup();
     let nsga_s = t2.elapsed().as_secs_f64();
+    if let Some(reg) = obs {
+        reg.wall_span("nsga-ii search", 0, nsga0);
+    }
 
     Exploration {
         model: g.name.clone(),

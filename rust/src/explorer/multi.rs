@@ -126,9 +126,11 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
     let g = ev.g;
     let sys = ev.sys;
     let jobs = sys.jobs.max(1);
+    let obs = sys.obs.registry();
     let len = ev.order.len();
     let num_cuts = sys.platforms.len() - 1;
 
+    let nsga0 = crate::obs::mark(obs);
     let t2 = Instant::now();
     let problem = ChainProblem {
         ev,
@@ -140,8 +142,11 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
     // Scale the GA budget with both depth and chain length.
     let mut cfg = Nsga2Cfg::for_layers(g.len() * sys.platforms.len() / 2, sys.seed);
     cfg.mutation_p = 0.3; // cut vectors benefit from more exploration
-    let front = nsga2::optimize_par(&problem, &cfg, jobs);
+    let front = nsga2::optimize_par_obs(&problem, &cfg, jobs, obs.map(|a| a.as_ref()));
     let nsga_s = t2.elapsed().as_secs_f64();
+    if let Some(reg) = obs {
+        reg.wall_span("nsga-ii chain search", 0, nsga0);
+    }
 
     // Materialize metrics for the front; dedup by *used-segment*
     // signature (different genomes can express the same schedule),

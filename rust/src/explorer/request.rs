@@ -174,13 +174,19 @@ impl Explorer {
         }
         let cache = req.cache.clone().unwrap_or_else(|| Arc::new(CostCache::new()));
         let mode = req.mode;
-        multi::explore_pool(graphs, &effective, cache, move |g, sys, cache| match mode {
+        let t0 = crate::obs::mark(effective.obs.registry());
+        let out = multi::explore_pool(graphs, &effective, cache, move |g, sys, cache| match mode {
             ExploreMode::Dag => dag::explore_dag_impl(g, sys, cache),
             ExploreMode::Chain if sys.platforms.len() == 2 && sys.replication.is_none() => {
                 super::explore_two_platform_impl(g, sys, cache)
             }
             ExploreMode::Chain => multi::explore_chain_impl(g, sys, cache),
-        })
+        });
+        if let Some(reg) = effective.obs.registry() {
+            reg.wall_span(format!("explore request ({} model(s))", graphs.len()), 0, t0);
+            reg.counter("explorer.requests").inc();
+        }
+        out
     }
 }
 

@@ -15,13 +15,20 @@
 //! heap-allocated `Vec<usize>` keys and exclusive locks serialized the
 //! `par_map` workers.
 //!
+//! Hit/miss counts are kept **per stripe** as
+//! [`crate::obs::CounterCell`]s: the increment cost is unchanged (one
+//! relaxed add), the aggregate accessors sum the stripes, and an active
+//! observability registry can adopt every stripe cell
+//! ([`StageCache::adopt_into`]) to expose stripe balance — a skewed
+//! stripe means a skewed fingerprint distribution.
+//!
 //! A fingerprint collision would silently alias two stages; with 64-bit
 //! FNV over at most a few hundred thousand distinct stages per run the
 //! probability is ~n²/2⁶⁵ — the same vanishing-collision argument the
 //! explorer already relies on for candidate-label digests.
 
+use crate::obs::{CounterCell, Registry};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::RwLock;
 
 const SHARDS: usize = 16;
@@ -47,8 +54,8 @@ pub struct StageCost {
 /// evaluating candidates against it.
 pub struct StageCache {
     shards: Vec<RwLock<HashMap<u64, StageCost>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    stripe_hits: Vec<CounterCell>,
+    stripe_misses: Vec<CounterCell>,
 }
 
 impl StageCache {
@@ -56,21 +63,26 @@ impl StageCache {
     pub fn new() -> Self {
         Self {
             shards: (0..SHARDS).map(|_| RwLock::new(HashMap::new())).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            stripe_hits: (0..SHARDS).map(|_| CounterCell::new()).collect(),
+            stripe_misses: (0..SHARDS).map(|_| CounterCell::new()).collect(),
         }
     }
 
-    fn shard(&self, fp: u64) -> &RwLock<HashMap<u64, StageCost>> {
-        &self.shards[fp as usize % SHARDS]
+    fn stripe(fp: u64) -> usize {
+        fp as usize % SHARDS
     }
 
-    /// Look up a fingerprint (shared read lock; counts hit/miss).
+    fn shard(&self, fp: u64) -> &RwLock<HashMap<u64, StageCost>> {
+        &self.shards[Self::stripe(fp)]
+    }
+
+    /// Look up a fingerprint (shared read lock; counts hit/miss on the
+    /// fingerprint's stripe).
     pub fn get(&self, fp: u64) -> Option<StageCost> {
         let found = self.shard(fp).read().unwrap().get(&fp).copied();
         match found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
+            Some(_) => self.stripe_hits[Self::stripe(fp)].inc(),
+            None => self.stripe_misses[Self::stripe(fp)].inc(),
         };
         found
     }
@@ -104,14 +116,34 @@ impl StageCache {
         self.len() == 0
     }
 
-    /// Lookups answered from the cache so far.
+    /// Lookups answered from the cache so far (sum over stripes).
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.stripe_hits.iter().map(|c| c.get()).sum()
     }
 
     /// Lookups that found nothing (each triggers one stage evaluation).
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.stripe_misses.iter().map(|c| c.get()).sum()
+    }
+
+    /// Hit/miss counts of one stripe (`0..`[`StageCache::stripes`]).
+    pub fn stripe_stats(&self, stripe: usize) -> (u64, u64) {
+        (self.stripe_hits[stripe].get(), self.stripe_misses[stripe].get())
+    }
+
+    /// Number of stripes (shards) in this cache.
+    pub fn stripes(&self) -> usize {
+        SHARDS
+    }
+
+    /// Register every stripe's hit/miss cells with an observability
+    /// registry as `{prefix}.stripeNN.{hits,misses}`. Shared cells:
+    /// the exported metrics are the live counts, not copies.
+    pub fn adopt_into(&self, reg: &Registry, prefix: &str) {
+        for i in 0..SHARDS {
+            reg.adopt_counter(&format!("{prefix}.stripe{i:02}.hits"), &self.stripe_hits[i]);
+            reg.adopt_counter(&format!("{prefix}.stripe{i:02}.misses"), &self.stripe_misses[i]);
+        }
     }
 
     /// Drop every entry and reset the counters (benches use this to
@@ -120,8 +152,9 @@ impl StageCache {
         for s in &self.shards {
             s.write().unwrap().clear();
         }
-        self.hits.store(0, Ordering::Relaxed);
-        self.misses.store(0, Ordering::Relaxed);
+        for c in self.stripe_hits.iter().chain(&self.stripe_misses) {
+            c.reset();
+        }
     }
 }
 
@@ -146,6 +179,8 @@ mod tests {
         let again = c.get_or_compute(42, || panic!("must hit"));
         assert_eq!(again, cost);
         assert_eq!((c.hits(), c.misses()), (1, 1));
+        // The counts landed on fingerprint 42's stripe.
+        assert_eq!(c.stripe_stats(42 % c.stripes()), (1, 1));
     }
 
     #[test]
@@ -159,6 +194,30 @@ mod tests {
         assert!(c.is_empty());
         assert_eq!((c.hits(), c.misses()), (0, 0));
         assert!(c.get(3).is_none());
+    }
+
+    #[test]
+    fn stripe_counters_sum_to_totals() {
+        let c = StageCache::new();
+        for fp in 0..64u64 {
+            let _ = c.get(fp); // all misses, spread over stripes
+        }
+        let summed: u64 = (0..c.stripes()).map(|i| c.stripe_stats(i).1).sum();
+        assert_eq!(summed, c.misses());
+        assert_eq!(c.misses(), 64);
+        // Uniform fingerprints spread uniformly over 16 stripes.
+        assert!((0..c.stripes()).all(|i| c.stripe_stats(i).1 == 4));
+    }
+
+    #[test]
+    fn adopted_stripes_export_live_counts() {
+        let reg = Registry::new();
+        let c = StageCache::new();
+        c.adopt_into(&reg, "explorer.stagecache");
+        let _ = c.get(0); // miss on stripe 0
+        assert_eq!(reg.counter("explorer.stagecache.stripe00.misses").get(), 1);
+        let snap = reg.snapshot();
+        assert_eq!(snap.rows.len(), 2 * c.stripes());
     }
 
     #[test]

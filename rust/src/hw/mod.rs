@@ -40,6 +40,7 @@ pub use mapper::{LayerCost, Objective, SearchCfg};
 pub use workload::{ConvWorkload, Dataspace, Dim};
 
 use crate::graph::{Graph, Node, NodeId};
+use crate::obs::CounterCell;
 use crate::util::json::{obj, Json};
 use crate::util::parallel::par_map;
 use std::borrow::Cow;
@@ -47,7 +48,7 @@ use std::collections::{HashMap, HashSet};
 use std::hash::{Hash, Hasher};
 use std::ops::Range;
 use std::path::{Path, PathBuf};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 
 /// Aggregate cost of a schedule segment on one accelerator (sequential
@@ -137,8 +138,11 @@ pub enum CacheLoad {
 /// write, the cache content is the same.
 pub struct CostCache {
     shards: Vec<Mutex<HashMap<CostKey, LayerCost>>>,
-    hits: AtomicU64,
-    misses: AtomicU64,
+    // `obs::CounterCell`s rather than raw atomics so an active
+    // `obs::Registry` can adopt the very same counts under stable names
+    // (`hw.cost_cache.{hits,misses}`) — one count, zero duplication.
+    hits: CounterCell,
+    misses: CounterCell,
 }
 
 impl CostCache {
@@ -146,8 +150,8 @@ impl CostCache {
     pub fn new() -> Self {
         Self {
             shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect(),
-            hits: AtomicU64::new(0),
-            misses: AtomicU64::new(0),
+            hits: CounterCell::new(),
+            misses: CounterCell::new(),
         }
     }
 
@@ -160,8 +164,8 @@ impl CostCache {
     fn get(&self, key: &CostKey) -> Option<LayerCost> {
         let found = self.shard(key).lock().unwrap().get(key).cloned();
         match found {
-            Some(_) => self.hits.fetch_add(1, Ordering::Relaxed),
-            None => self.misses.fetch_add(1, Ordering::Relaxed),
+            Some(_) => self.hits.inc(),
+            None => self.misses.inc(),
         };
         found
     }
@@ -182,13 +186,22 @@ impl CostCache {
 
     /// Lookups answered from the cache so far.
     pub fn hits(&self) -> u64 {
-        self.hits.load(Ordering::Relaxed)
+        self.hits.get()
     }
 
     /// Lookups that found nothing (each triggers one layer evaluation;
     /// a fully warm run — e.g. after `load_from` — reports 0).
     pub fn misses(&self) -> u64 {
-        self.misses.load(Ordering::Relaxed)
+        self.misses.get()
+    }
+
+    /// Register this cache's hit/miss counters with an observability
+    /// registry as `hw.cost_cache.{hits,misses}`. The registry shares
+    /// the cells — [`CostCache::hits`]/[`CostCache::misses`] and the
+    /// exported metrics can never disagree.
+    pub fn adopt_into(&self, reg: &crate::obs::Registry) {
+        reg.adopt_counter("hw.cost_cache.hits", &self.hits);
+        reg.adopt_counter("hw.cost_cache.misses", &self.misses);
     }
 
     // ---- persistence ---------------------------------------------------
@@ -358,6 +371,10 @@ pub struct HwEvaluator {
     cache: Arc<CostCache>,
     /// Mapper invocations that missed the cache (for §Perf reporting).
     mapper_runs: AtomicUsize,
+    /// Mapping samples fully evaluated across all mapper runs.
+    map_samples: CounterCell,
+    /// Mapping samples skipped by the mapper's bound prune.
+    map_pruned: CounterCell,
 }
 
 impl HwEvaluator {
@@ -368,7 +385,13 @@ impl HwEvaluator {
 
     /// Evaluator backed by a shared (possibly pre-warmed) cost cache.
     pub fn with_cache(cfg: SearchCfg, cache: Arc<CostCache>) -> Self {
-        Self { cfg, cache, mapper_runs: AtomicUsize::new(0) }
+        Self {
+            cfg,
+            cache,
+            mapper_runs: AtomicUsize::new(0),
+            map_samples: CounterCell::new(),
+            map_pruned: CounterCell::new(),
+        }
     }
 
     /// Cost of one layer on one accelerator (cached).
@@ -392,7 +415,10 @@ impl HwEvaluator {
         let cost = match ConvWorkload::from_node(g, node) {
             Some(wl) => {
                 self.mapper_runs.fetch_add(1, Ordering::Relaxed);
-                mapper::map_layer(acc, &wl, &self.cfg)
+                let (cost, stats) = mapper::map_layer_with_stats(acc, &wl, &self.cfg);
+                self.map_samples.add(stats.samples as u64);
+                self.map_pruned.add(stats.pruned as u64);
+                cost
             }
             None => vector::vector_layer_cost(acc, g, node),
         };
@@ -451,6 +477,20 @@ impl HwEvaluator {
     /// Mapper invocations that missed the cache so far.
     pub fn mapper_runs(&self) -> usize {
         self.mapper_runs.load(Ordering::Relaxed)
+    }
+
+    /// Mapper prune effectiveness so far: `(samples evaluated, samples
+    /// pruned)` summed over every cache-missing mapper run.
+    pub fn map_stats(&self) -> (u64, u64) {
+        (self.map_samples.get(), self.map_pruned.get())
+    }
+
+    /// Register this evaluator's cost-cache and mapper counters with an
+    /// observability registry (`hw.cost_cache.*`, `hw.mapper.*`).
+    pub fn adopt_into(&self, reg: &crate::obs::Registry) {
+        self.cache.adopt_into(reg);
+        reg.adopt_counter("hw.mapper.samples_evaluated", &self.map_samples);
+        reg.adopt_counter("hw.mapper.samples_pruned", &self.map_pruned);
     }
 
     /// Number of cached layer costs.

@@ -46,8 +46,9 @@
 //! * **L3 — this crate**: graph analysis ([`graph`]), memory/link/
 //!   accuracy/hardware models ([`memory`], [`link`], [`accuracy`],
 //!   [`hw`]), NSGA-II ([`nsga2`]), the explorers ([`explorer`]), the
-//!   wall-clock pipeline coordinator ([`coordinator`]), and the
-//!   discrete-event serving simulator ([`sim`]).
+//!   wall-clock pipeline coordinator ([`coordinator`]), the
+//!   discrete-event serving simulator ([`sim`]), and the deterministic
+//!   observability layer ([`obs`]: spans, metrics, Perfetto export).
 //! * **L2 — `python/compile/model.py`**: JAX model (build time only).
 //! * **L1 — `python/compile/kernels/`**: Pallas kernels (build time only).
 //!
@@ -66,6 +67,7 @@ pub mod hw;
 pub mod link;
 pub mod memory;
 pub mod nsga2;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sim;

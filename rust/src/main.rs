@@ -71,6 +71,10 @@ fn print_usage() {
          \x20            (scenario presets: steady | burst | diurnal | degraded | failover, or a TOML file;\n\
          \x20            --adaptive: live re-partitioning under drift and node loss)\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
+         OBSERVABILITY (explore, chain, simulate, report):\n\
+         \x20 --trace-out FILE    Chrome/Perfetto trace (wall + virtual clock spans)\n\
+         \x20 --metrics-out FILE  metrics snapshot, .csv or .json\n\
+         \x20 Recording is write-only: results are bit-identical with or without it.\n\n\
          Run `partir <COMMAND> --help` for options."
     );
 }
@@ -130,6 +134,7 @@ fn load_sys(args: &Args) -> anyhow::Result<SystemConfig> {
         sys.cache_dir = Some(PathBuf::from(dir));
     }
     apply_replicas(args, &mut sys)?;
+    apply_obs(args, &mut sys.obs);
     Ok(sys)
 }
 
@@ -142,6 +147,43 @@ fn apply_replicas(args: &Args, sys: &mut SystemConfig) -> anyhow::Result<()> {
         anyhow::ensure!(r >= 1, "--replicas must be at least 1");
         sys.replication =
             Some(partir::config::ReplicationCfg::uniform(sys.platforms.len(), r));
+    }
+    Ok(())
+}
+
+/// `--trace-out` / `--metrics-out`: observability sinks (beating the
+/// config file's `[obs]` section key-by-key). Setting either flag — or
+/// a live `[obs]` section — activates the registry; instrumented runs
+/// are bit-identical to bare ones, so this is always safe to turn on.
+fn apply_obs(args: &Args, obs: &mut partir::obs::ObsCfg) {
+    if let Some(p) = args.get("trace-out") {
+        obs.trace_out = Some(PathBuf::from(p));
+    }
+    if let Some(p) = args.get("metrics-out") {
+        obs.metrics_out = Some(PathBuf::from(p));
+    }
+    if obs.trace_out.is_some() || obs.metrics_out.is_some() {
+        obs.activate();
+    }
+}
+
+/// Export the observability sinks after a command's main output (no-op
+/// when dormant), printing where each artifact landed.
+fn finish_obs(obs: &partir::obs::ObsCfg) -> anyhow::Result<()> {
+    let Some(reg) = obs.registry() else {
+        return Ok(());
+    };
+    if let Some(path) = &obs.trace_out {
+        partir::obs::write_trace(reg, path)?;
+        println!(
+            "trace: wrote {} span(s) to {} (load in Perfetto / chrome://tracing)",
+            reg.span_count(),
+            path.display()
+        );
+    }
+    if let Some(path) = &obs.metrics_out {
+        let rows = partir::obs::write_metrics(reg, path)?;
+        println!("metrics: wrote {rows} row(s) to {}", path.display());
     }
     Ok(())
 }
@@ -233,6 +275,8 @@ fn explore_cmd() -> Command {
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
         .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
+        .opt("trace-out", None, "write a Chrome/Perfetto trace of the exploration here")
+        .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
@@ -264,6 +308,7 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         report::fig2_csv(&ex).write_file(Path::new(out))?;
         println!("wrote {out}");
     }
+    finish_obs(&sys.obs)?;
     Ok(())
 }
 
@@ -281,6 +326,8 @@ fn chain_cmd() -> Command {
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
         .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
+        .opt("trace-out", None, "write a Chrome/Perfetto trace of the exploration here")
+        .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
         .flag("qat", "apply QAT accuracy recovery")
         .flag("fast", "smaller mapper search budget")
@@ -307,6 +354,7 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
         }
         sys.jobs = jobs_arg(args)?;
         apply_replicas(args, &mut sys)?;
+        apply_obs(args, &mut sys.obs);
         sys
     };
     let cache = open_cache(&sys);
@@ -327,6 +375,7 @@ fn cmd_chain(args: &Args) -> anyhow::Result<()> {
         report::front_csv(&ex, &sys.pareto_metrics).write_file(Path::new(out))?;
         println!("wrote {out}");
     }
+    finish_obs(&sys.obs)?;
     Ok(())
 }
 
@@ -557,6 +606,8 @@ fn simulate_cmd() -> Command {
     .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
     .opt("epoch-ms", None, "adaptive control-epoch length in ms (overrides [adaptive] epoch_ms)")
     .opt("hysteresis", None, "unhealthy epochs before the adaptive controller migrates (>= 1)")
+    .opt("trace-out", None, "write a Chrome/Perfetto trace here (--adaptive adds migration spans)")
+    .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
     .flag(
         "adaptive",
         "serve with the runtime re-partitioning controller and compare static vs adaptive vs oracle",
@@ -660,6 +711,14 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         print!("{}", cmp.render());
         println!("adaptive fingerprint: {:016x}", cmp.adaptive.fingerprint());
         println!("oracle fingerprint:   {:016x}", cmp.oracle.fingerprint());
+        finish_obs(&sys.obs)?;
+        if let Some(p) = &sys.obs.trace_out {
+            println!(
+                "adaptive decision trace: controller migration spans are on the virtual track \
+                 (lane 0) of {}",
+                p.display()
+            );
+        }
         return Ok(());
     }
 
@@ -690,6 +749,7 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         report::sim_csv(&ranked).write_file(Path::new(out))?;
         println!("wrote {out}");
     }
+    finish_obs(&sys.obs)?;
     Ok(())
 }
 
@@ -702,11 +762,22 @@ fn report_cmd() -> Command {
         .opt("out", Some("reports"), "output directory")
         .opt("jobs", None, "worker threads (default: all hardware threads)")
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
+        .opt("trace-out", None, "write a Chrome/Perfetto trace of the figure regeneration here")
+        .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
         .flag("fast", "smaller search budgets (CI smoke)")
 }
 
 fn cmd_report(args: &Args) -> anyhow::Result<()> {
     let out = PathBuf::from(args.get("out").unwrap());
     let cache_dir = args.get("cache-dir").map(PathBuf::from);
-    report::paper::generate_all(&out, args.flag("fast"), jobs_arg(args)?, cache_dir.as_deref())
+    let mut obs = partir::obs::ObsCfg::default();
+    apply_obs(args, &mut obs);
+    report::paper::generate_all_obs(
+        &out,
+        args.flag("fast"),
+        jobs_arg(args)?,
+        cache_dir.as_deref(),
+        &obs,
+    )?;
+    finish_obs(&obs)
 }

@@ -378,7 +378,43 @@ pub fn optimize<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg) -> Vec<Solution>
 /// happens on this thread in a fixed RNG sequence, and `evaluate` is a
 /// pure function of the genome.
 pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize) -> Vec<Solution> {
+    optimize_par_obs(problem, cfg, jobs, None)
+}
+
+/// Pre-fetched telemetry handles for one [`optimize_par_obs`] run, all
+/// under the `nsga2.` prefix. Write-only from the GA's perspective —
+/// no counter value ever feeds selection, ranking, or the RNG, which
+/// is why instrumented runs stay bit-identical (`tests/obs.rs`).
+struct GaObs {
+    /// Fresh (memo-missing) genome evaluations (`nsga2.evals`).
+    evals: crate::obs::CounterCell,
+    /// Generations completed (`nsga2.generations`).
+    generations: crate::obs::CounterCell,
+    /// Worker scratch allocations; `evals - scratch_allocs` evaluations
+    /// reused a pooled scratch (`nsga2.scratch_allocs`).
+    scratch_allocs: crate::obs::CounterCell,
+    /// Per-generation rank-0 front size (`nsga2.front_size`).
+    front_size: std::sync::Arc<crate::obs::Histogram>,
+}
+
+/// [`optimize_par`] with optional telemetry: when `obs` carries a
+/// registry, the run records fresh-evaluation counts, per-generation
+/// front sizes, scratch-pool growth, and one wall-clock span per
+/// generation. `None` is the zero-cost default; results are
+/// bit-identical either way.
+pub fn optimize_par_obs<P: Problem + Sync>(
+    problem: &P,
+    cfg: &Nsga2Cfg,
+    jobs: usize,
+    obs: Option<&crate::obs::Registry>,
+) -> Vec<Solution> {
     assert!(cfg.population >= 4, "population too small");
+    let cells = obs.map(|r| GaObs {
+        evals: r.counter("nsga2.evals"),
+        generations: r.counter("nsga2.generations"),
+        scratch_allocs: r.counter("nsga2.scratch_allocs"),
+        front_size: r.histogram("nsga2.front_size"),
+    });
     let mut rng = Pcg32::new(cfg.seed, 0x6e73_6761); // "nsga"
     let mut memo: HashMap<Vec<i64>, Eval> = HashMap::new();
     let mut pool: Vec<P::Scratch> = Vec::new();
@@ -386,8 +422,14 @@ pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize)
         (0..cfg.population).map(|_| random_genome(problem, &mut rng)).collect();
     let mut pop = evaluate_batch(problem, genomes, jobs, &mut memo, &mut pool);
     rank_population(&mut pop, cfg.population);
+    if let Some(c) = &cells {
+        c.evals.add(memo.len() as u64);
+        c.scratch_allocs.add(pool.len() as u64);
+    }
 
-    for _ in 0..cfg.generations {
+    for gen_idx in 0..cfg.generations {
+        let start_ns = obs.map(|r| r.now_ns());
+        let (evals_before, pool_before) = (memo.len(), pool.len());
         let mut children: Vec<Vec<i64>> = Vec::with_capacity(cfg.population);
         while children.len() < cfg.population {
             let a = tournament(&pop, &mut rng);
@@ -397,6 +439,13 @@ pub fn optimize_par<P: Problem + Sync>(problem: &P, cfg: &Nsga2Cfg, jobs: usize)
         let offspring = evaluate_batch(problem, children, jobs, &mut memo, &mut pool);
         pop.extend(offspring);
         rank_population(&mut pop, cfg.population);
+        if let (Some(c), Some(r)) = (&cells, obs) {
+            c.generations.inc();
+            c.evals.add((memo.len() - evals_before) as u64);
+            c.scratch_allocs.add((pool.len() - pool_before) as u64);
+            c.front_size.observe(pop.iter().filter(|i| i.rank == 0).count() as u64);
+            r.wall_span(format!("nsga2 gen {gen_idx}"), 1, start_ns.unwrap_or(0));
+        }
     }
 
     // Final front 0, deduplicated by genome.
@@ -448,6 +497,24 @@ mod tests {
         let xs: Vec<f64> = front.iter().map(|s| s.vars[0] as f64 / 100.0).collect();
         assert!(xs.iter().cloned().fold(f64::INFINITY, f64::min) < 0.3);
         assert!(xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max) > 1.7);
+    }
+
+    #[test]
+    fn telemetry_does_not_perturb_the_front() {
+        let reg = crate::obs::Registry::new();
+        let cfg = Nsga2Cfg::for_layers(60, 42);
+        let base = optimize(&Schaffer, &cfg);
+        let instrumented = optimize_par_obs(&Schaffer, &cfg, 2, Some(&reg));
+        assert_eq!(base.len(), instrumented.len());
+        for (a, b) in base.iter().zip(&instrumented) {
+            assert_eq!(a.vars, b.vars);
+            for (x, y) in a.eval.objectives.iter().zip(&b.eval.objectives) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+        assert_eq!(reg.counter("nsga2.generations").get(), cfg.generations as u64);
+        assert!(reg.counter("nsga2.evals").get() >= cfg.population as u64);
+        assert_eq!(reg.histogram("nsga2.front_size").count(), cfg.generations as u64);
     }
 
     /// Constrained problem: x ≥ 300 infeasible.

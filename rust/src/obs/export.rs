@@ -1,0 +1,123 @@
+//! Exporters: Chrome trace-event JSON (loadable in Perfetto /
+//! `chrome://tracing`) and flat metrics snapshots (JSON or CSV by file
+//! extension). Pure functions of a [`Registry`]'s contents — exporting
+//! never mutates instrumentation state, so a run can export and keep
+//! going.
+
+use super::metrics::Registry;
+use super::span::Track;
+use crate::util::json::{obj, Json};
+use std::path::Path;
+
+/// Chrome-trace `pid` for the wall-clock track.
+const PID_WALL: usize = 1;
+/// Chrome-trace `pid` for the simulator's virtual-clock track.
+const PID_VIRTUAL: usize = 2;
+
+/// Render every recorded span as a Chrome trace-event document:
+/// complete (`"ph":"X"`) events with microsecond timestamps, wall and
+/// virtual clocks separated as processes 1 and 2 (named via `"M"`
+/// metadata events). Events are ordered by `(track, lane, start, seq)`
+/// so per-lane timestamps are monotone — `tests/obs.rs` gates this.
+pub fn chrome_trace(reg: &Registry) -> Json {
+    let mut events: Vec<Json> = vec![
+        process_name(PID_WALL, "wall clock (explorer / mapper)"),
+        process_name(PID_VIRTUAL, "virtual clock (serving sim)"),
+    ];
+    for s in reg.spans_sorted() {
+        let pid = match s.track {
+            Track::Wall => PID_WALL,
+            Track::Virtual => PID_VIRTUAL,
+        };
+        let cat = match s.track {
+            Track::Wall => "wall",
+            Track::Virtual => "virtual",
+        };
+        events.push(obj(vec![
+            ("name", Json::from(s.name.as_ref())),
+            ("cat", Json::from(cat)),
+            ("ph", Json::from("X")),
+            ("ts", Json::from(s.start_ns as f64 / 1e3)),
+            ("dur", Json::from(s.dur_ns as f64 / 1e3)),
+            ("pid", Json::from(pid)),
+            ("tid", Json::from(s.lane)),
+        ]));
+    }
+    obj(vec![("traceEvents", Json::Arr(events)), ("displayTimeUnit", Json::from("ms"))])
+}
+
+fn process_name(pid: usize, name: &str) -> Json {
+    obj(vec![
+        ("name", Json::from("process_name")),
+        ("ph", Json::from("M")),
+        ("pid", Json::from(pid)),
+        ("tid", Json::from(0usize)),
+        ("args", obj(vec![("name", Json::from(name))])),
+    ])
+}
+
+/// Write the Chrome trace to `path` (parent directories created).
+pub fn write_trace(reg: &Registry, path: &Path) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(path, chrome_trace(reg).dump())
+}
+
+/// Write the metrics snapshot to `path`: CSV when the extension is
+/// `.csv`, pretty JSON otherwise (parents created). Returns the number
+/// of rows written.
+pub fn write_metrics(reg: &Registry, path: &Path) -> std::io::Result<usize> {
+    let snap = reg.snapshot();
+    let rows = snap.rows.len();
+    if path.extension().and_then(|e| e.to_str()) == Some("csv") {
+        snap.to_csv().write_file(path)?;
+    } else {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, snap.to_json().pretty())?;
+    }
+    Ok(rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::{vlane, SpanBuf};
+
+    #[test]
+    fn trace_is_parseable_and_carries_both_tracks() {
+        let reg = Registry::new();
+        let t0 = reg.now_ns();
+        reg.wall_span("phase", 0, t0);
+        let mut buf = SpanBuf::new();
+        buf.push(Track::Virtual, vlane(0, 0), "service", 1_000, 500);
+        reg.flush_spans(&mut buf);
+        let doc = Json::parse(&chrome_trace(&reg).dump()).unwrap();
+        let events = doc.get("traceEvents").as_arr().unwrap();
+        // 2 metadata + 2 spans
+        assert_eq!(events.len(), 4);
+        let pids: Vec<u64> = events
+            .iter()
+            .filter(|e| e.get("ph").as_str() == Some("X"))
+            .map(|e| e.get("pid").as_u64().unwrap())
+            .collect();
+        assert!(pids.contains(&(PID_WALL as u64)));
+        assert!(pids.contains(&(PID_VIRTUAL as u64)));
+    }
+
+    #[test]
+    fn metrics_files_pick_format_by_extension() {
+        let reg = Registry::new();
+        reg.counter("x.count").add(3);
+        let dir = std::env::temp_dir().join(format!("partir_obs_{}", std::process::id()));
+        let csv = dir.join("m.csv");
+        let json = dir.join("m.json");
+        assert_eq!(write_metrics(&reg, &csv).unwrap(), 1);
+        assert_eq!(write_metrics(&reg, &json).unwrap(), 1);
+        assert!(std::fs::read_to_string(&csv).unwrap().starts_with("name,kind,value"));
+        assert!(Json::parse(&std::fs::read_to_string(&json).unwrap()).is_ok());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

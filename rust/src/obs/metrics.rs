@@ -1,0 +1,478 @@
+//! The metrics registry: named lock-free counters, gauges, and
+//! power-of-two histograms, plus the span sink.
+//!
+//! Hot paths touch only pre-fetched [`CounterCell`] / [`Histogram`]
+//! handles — a single relaxed atomic RMW per event, no lock, no name
+//! lookup. The [`Registry`]'s `RwLock<BTreeMap>` is a cold path used
+//! once per name at registration/adoption time and once at export.
+//!
+//! **Determinism contract.** Instrumentation is write-only from every
+//! compute path: no counter, gauge, histogram, or span value ever
+//! flows back into exploration, simulation, or controller state, and
+//! nothing here reads a wall clock on behalf of the simulator's
+//! virtual-time paths. Counter values themselves are deterministic
+//! under any `--jobs` (relaxed additions commute); wall-span
+//! timestamps are not, and are segregated on their own track
+//! ([`super::span::Track::Wall`]).
+
+use super::span::{sort_spans, SpanBuf, SpanEvent, Track};
+use crate::util::csv::Csv;
+use crate::util::json::{obj, Json};
+use std::borrow::Cow;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Instant;
+
+/// A shareable monotone counter. Cloning shares the underlying atomic,
+/// so a cell can live inside a subsystem (e.g. [`crate::hw::CostCache`]
+/// hit/miss counts) *and* be adopted into a [`Registry`] under a stable
+/// name — one count, two views, zero indirection on the increment path.
+#[derive(Clone, Default)]
+pub struct CounterCell(Arc<AtomicU64>);
+
+impl CounterCell {
+    /// A fresh zeroed counter.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `n` (relaxed; commutative, hence `--jobs`-deterministic).
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Add one.
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+
+    /// Reset to zero (bench cold-start paths).
+    pub fn reset(&self) {
+        self.0.store(0, Ordering::Relaxed);
+    }
+}
+
+impl std::fmt::Debug for CounterCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "CounterCell({})", self.get())
+    }
+}
+
+/// A shareable last-write-wins gauge (current queue depth, pool size).
+#[derive(Clone, Default)]
+pub struct GaugeCell(Arc<AtomicU64>);
+
+impl GaugeCell {
+    /// A fresh zeroed gauge.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Overwrite the value.
+    #[inline]
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    /// Raise to at least `v` (high-water marks).
+    #[inline]
+    pub fn max(&self, v: u64) {
+        self.0.fetch_max(v, Ordering::Relaxed);
+    }
+
+    /// Current value.
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+impl std::fmt::Debug for GaugeCell {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "GaugeCell({})", self.get())
+    }
+}
+
+/// Number of histogram buckets: bucket `b` counts values whose
+/// bit-length is `b` (bucket 0 holds exactly the value 0, bucket 64
+/// holds values with the top bit set).
+pub const HIST_BUCKETS: usize = 65;
+
+/// Lock-free log2 histogram over `u64` samples (queue depths, batch
+/// fills, nanosecond durations). Exact count and sum plus
+/// power-of-two bucket counts — coarse, but allocation-free and
+/// order-independent, so observations from racing workers still
+/// produce deterministic totals.
+pub struct Histogram {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+impl Histogram {
+    /// A fresh empty histogram.
+    pub fn new() -> Self {
+        Self {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Record one sample.
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        let b = (u64::BITS - v.leading_zeros()) as usize; // bit length: 0..=64
+        self.buckets[b].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Sum of all samples (mean = sum / count).
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Count in bucket `b` (samples of bit-length `b`).
+    pub fn bucket(&self, b: usize) -> u64 {
+        self.buckets[b].load(Ordering::Relaxed)
+    }
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Histogram(count={}, sum={})", self.count(), self.sum())
+    }
+}
+
+/// One row of a flat metrics [`Snapshot`]: `(name, kind, value)`.
+/// Histograms expand to `hist_count` / `hist_sum` / `hist_bucket_NN`
+/// rows so the snapshot stays a plain integer table that survives the
+/// CSV round trip bit-exactly.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SnapRow {
+    /// Dotted metric name (`sim.stage00.batches`).
+    pub name: String,
+    /// Row kind: `counter`, `gauge`, `hist_count`, `hist_sum`, or
+    /// `hist_bucket_NN`.
+    pub kind: String,
+    /// Integer value (counts, sums, or the gauge's last write).
+    pub value: u64,
+}
+
+/// A point-in-time flat view of every registered metric, sorted by
+/// `(name, kind)`. Convertible to JSON ([`Snapshot::to_json`]) and CSV
+/// ([`Snapshot::to_csv`]); [`Snapshot::from_csv`] inverts the latter.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Snapshot {
+    /// The rows, sorted by `(name, kind)`.
+    pub rows: Vec<SnapRow>,
+}
+
+impl Snapshot {
+    /// Render as a three-column CSV table (`name,kind,value`).
+    pub fn to_csv(&self) -> Csv {
+        let mut csv = Csv::new(&["name", "kind", "value"]);
+        for r in &self.rows {
+            csv.row(&[r.name.clone(), r.kind.clone(), r.value.to_string()]);
+        }
+        csv
+    }
+
+    /// Parse a snapshot back from [`Snapshot::to_csv`] text.
+    pub fn from_csv(text: &str) -> Result<Snapshot, String> {
+        let table = Csv::parse(text)?;
+        if table.header() != ["name", "kind", "value"] {
+            return Err(format!("unexpected snapshot header {:?}", table.header()));
+        }
+        let mut rows = Vec::with_capacity(table.rows().len());
+        for r in table.rows() {
+            let value =
+                r[2].parse::<u64>().map_err(|e| format!("bad value {:?} for {}: {e}", r[2], r[0]))?;
+            rows.push(SnapRow { name: r[0].clone(), kind: r[1].clone(), value });
+        }
+        Ok(Snapshot { rows })
+    }
+
+    /// Render as a JSON array of `{name, kind, value}` objects.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.rows
+                .iter()
+                .map(|r| {
+                    obj(vec![
+                        ("name", Json::from(r.name.as_str())),
+                        ("kind", Json::from(r.kind.as_str())),
+                        ("value", Json::from(r.value)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+/// The process-wide observability sink: named metrics plus the merged
+/// span stream. Created once per run when `--trace-out`/
+/// `--metrics-out` (or `[obs] enabled`) request instrumentation, and
+/// threaded through the system as `Arc<Registry>` on
+/// [`crate::config::SystemConfig::obs`]. Absent registry = zero
+/// instrumentation, which is the default.
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, CounterCell>>,
+    gauges: RwLock<BTreeMap<String, GaugeCell>>,
+    hists: RwLock<BTreeMap<String, Arc<Histogram>>>,
+    spans: Mutex<Vec<SpanEvent>>,
+    seq: AtomicU64,
+    epoch: Instant,
+}
+
+impl Registry {
+    /// A fresh registry; its creation instant is the zero point of the
+    /// wall-clock span track.
+    pub fn new() -> Self {
+        Self {
+            counters: RwLock::new(BTreeMap::new()),
+            gauges: RwLock::new(BTreeMap::new()),
+            hists: RwLock::new(BTreeMap::new()),
+            spans: Mutex::new(Vec::new()),
+            seq: AtomicU64::new(0),
+            epoch: Instant::now(),
+        }
+    }
+
+    /// Get-or-create the counter `name`. Cold path; hold the returned
+    /// cell and increment it directly on hot paths.
+    pub fn counter(&self, name: &str) -> CounterCell {
+        if let Some(c) = self.counters.read().unwrap().get(name) {
+            return c.clone();
+        }
+        self.counters.write().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Register an externally owned cell under `name` (the adoption
+    /// path: `hw::CostCache` keeps its cell, the registry exports it).
+    /// Replaces any previous cell of that name.
+    pub fn adopt_counter(&self, name: &str, cell: &CounterCell) {
+        self.counters.write().unwrap().insert(name.to_string(), cell.clone());
+    }
+
+    /// Get-or-create the gauge `name`.
+    pub fn gauge(&self, name: &str) -> GaugeCell {
+        if let Some(g) = self.gauges.read().unwrap().get(name) {
+            return g.clone();
+        }
+        self.gauges.write().unwrap().entry(name.to_string()).or_default().clone()
+    }
+
+    /// Get-or-create the histogram `name`.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        if let Some(h) = self.hists.read().unwrap().get(name) {
+            return Arc::clone(h);
+        }
+        Arc::clone(self.hists.write().unwrap().entry(name.to_string()).or_default())
+    }
+
+    /// Nanoseconds of wall time since the registry was created — the
+    /// wall span track's clock. Never call on a simulator virtual-time
+    /// path (the inertness contract); virtual spans carry the
+    /// simulator's own clock.
+    pub fn now_ns(&self) -> u64 {
+        self.epoch.elapsed().as_nanos() as u64
+    }
+
+    /// Record one wall-clock span directly (coarse phases; one mutex
+    /// acquisition per span).
+    pub fn wall_span(&self, name: impl Into<Cow<'static, str>>, lane: u64, start_ns: u64) {
+        let dur_ns = self.now_ns().saturating_sub(start_ns);
+        self.push_span(Track::Wall, lane, name.into(), start_ns, dur_ns);
+    }
+
+    /// Record one virtual-clock span directly (controller-level events;
+    /// high-rate simulator spans go through a [`SpanBuf`] instead).
+    pub fn virt_span(
+        &self,
+        name: impl Into<Cow<'static, str>>,
+        lane: u64,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        self.push_span(Track::Virtual, lane, name.into(), start_ns, dur_ns);
+    }
+
+    fn push_span(
+        &self,
+        track: Track,
+        lane: u64,
+        name: Cow<'static, str>,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        self.spans.lock().unwrap().push(SpanEvent { track, lane, name, start_ns, dur_ns, seq });
+    }
+
+    /// Merge a buffer's spans in, reassigning global sequence numbers
+    /// so buffer-local order is preserved among equal timestamps.
+    pub fn flush_spans(&self, buf: &mut SpanBuf) {
+        let events = buf.take();
+        if events.is_empty() {
+            return;
+        }
+        let mut spans = self.spans.lock().unwrap();
+        for mut e in events {
+            e.seq = self.seq.fetch_add(1, Ordering::Relaxed);
+            spans.push(e);
+        }
+    }
+
+    /// Number of spans recorded so far.
+    pub fn span_count(&self) -> usize {
+        self.spans.lock().unwrap().len()
+    }
+
+    /// All spans, deterministically ordered by
+    /// `(track, lane, start, seq)` — see [`sort_spans`].
+    pub fn spans_sorted(&self) -> Vec<SpanEvent> {
+        let mut all = self.spans.lock().unwrap().clone();
+        sort_spans(&mut all);
+        all
+    }
+
+    /// Flatten every registered metric into a sorted [`Snapshot`].
+    pub fn snapshot(&self) -> Snapshot {
+        let mut rows = Vec::new();
+        for (name, c) in self.counters.read().unwrap().iter() {
+            rows.push(SnapRow { name: name.clone(), kind: "counter".into(), value: c.get() });
+        }
+        for (name, g) in self.gauges.read().unwrap().iter() {
+            rows.push(SnapRow { name: name.clone(), kind: "gauge".into(), value: g.get() });
+        }
+        for (name, h) in self.hists.read().unwrap().iter() {
+            rows.push(SnapRow { name: name.clone(), kind: "hist_count".into(), value: h.count() });
+            rows.push(SnapRow { name: name.clone(), kind: "hist_sum".into(), value: h.sum() });
+            for b in 0..HIST_BUCKETS {
+                let v = h.bucket(b);
+                if v > 0 {
+                    rows.push(SnapRow {
+                        name: name.clone(),
+                        kind: format!("hist_bucket_{b:02}"),
+                        value: v,
+                    });
+                }
+            }
+        }
+        rows.sort_by(|a, b| (&a.name, &a.kind).cmp(&(&b.name, &b.kind)));
+        Snapshot { rows }
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "Registry(counters={}, gauges={}, hists={}, spans={})",
+            self.counters.read().unwrap().len(),
+            self.gauges.read().unwrap().len(),
+            self.hists.read().unwrap().len(),
+            self.span_count(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_is_shared_through_adoption() {
+        let reg = Registry::new();
+        let mine = CounterCell::new();
+        mine.add(3);
+        reg.adopt_counter("hw.cache.hits", &mine);
+        mine.inc();
+        assert_eq!(reg.counter("hw.cache.hits").get(), 4);
+        reg.counter("hw.cache.hits").add(6);
+        assert_eq!(mine.get(), 10);
+    }
+
+    #[test]
+    fn histogram_buckets_by_bit_length() {
+        let h = Histogram::new();
+        for v in [0u64, 1, 2, 3, 4, u64::MAX] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert_eq!(h.bucket(0), 1); // the value 0
+        assert_eq!(h.bucket(1), 1); // 1
+        assert_eq!(h.bucket(2), 2); // 2, 3
+        assert_eq!(h.bucket(3), 1); // 4
+        assert_eq!(h.bucket(64), 1); // u64::MAX
+    }
+
+    #[test]
+    fn snapshot_is_sorted_and_roundtrips_csv() {
+        let reg = Registry::new();
+        reg.counter("z.last").add(9);
+        reg.counter("a.first").add(2);
+        reg.gauge("m.depth").set(5);
+        reg.histogram("m.fill").observe(7);
+        let snap = reg.snapshot();
+        assert!(snap.rows.windows(2).all(|w| (&w[0].name, &w[0].kind) <= (&w[1].name, &w[1].kind)));
+        let text = snap.to_csv().to_string();
+        assert_eq!(Snapshot::from_csv(&text).unwrap(), snap);
+    }
+
+    #[test]
+    fn flushed_buffers_keep_local_order() {
+        let reg = Registry::new();
+        let mut buf = SpanBuf::new();
+        buf.push(Track::Virtual, 1, "a", 10, 5);
+        buf.push(Track::Virtual, 1, "b", 10, 5); // same timestamp
+        reg.flush_spans(&mut buf);
+        let spans = reg.spans_sorted();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].name, "a");
+        assert!(spans[0].seq < spans[1].seq);
+    }
+
+    #[test]
+    fn concurrent_increments_sum_exactly() {
+        let reg = Registry::new();
+        let c = reg.counter("par.count");
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let c = c.clone();
+                s.spawn(move || {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 4000);
+    }
+}

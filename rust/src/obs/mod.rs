@@ -1,0 +1,102 @@
+//! Deterministic observability: spans, metrics, and Perfetto-loadable
+//! trace export across the explorer, the serving simulator, and the
+//! adaptive controller (PR 8 tentpole).
+//!
+//! Three parts:
+//!
+//! * [`metrics`] — a [`Registry`] of named lock-free counters, gauges,
+//!   and log2 histograms. Subsystem-owned counters (cost-cache
+//!   hits/misses, stage-cache stripes, mapper prune stats) are
+//!   *adopted* by the registry rather than duplicated, so the hot path
+//!   stays a single relaxed atomic add.
+//! * [`span`] — wall-clock spans for explorer/mapper phases and
+//!   **virtual-clock** spans for the simulator (service, link hop,
+//!   controller migration windows), buffered locally and merged
+//!   deterministically by `(track, lane, time, seq)`.
+//! * [`export`] — Chrome trace-event JSON plus a flat metrics snapshot
+//!   (JSON / CSV), behind `--trace-out` / `--metrics-out` and the
+//!   `[obs]` TOML section.
+//!
+//! **Off by default, provably inert.** Instrumentation only exists
+//! when an [`ObsCfg`] carries a live registry; every recording site is
+//! `if let Some(..)`-guarded, writes are one-way (no obs value feeds
+//! any computation), and the simulator's virtual-time paths never read
+//! a wall clock. `tests/obs.rs` enforces the contract end to end:
+//! exploration fronts, `SimReport` fingerprints, and
+//! `AdaptiveReport::fingerprint` are bit-identical with obs on or off,
+//! for any `--jobs`.
+
+pub mod export;
+pub mod metrics;
+pub mod span;
+
+pub use export::{chrome_trace, write_metrics, write_trace};
+pub use metrics::{CounterCell, GaugeCell, Histogram, Registry, SnapRow, Snapshot};
+pub use span::{sort_spans, vlane, SpanBuf, SpanEvent, Track};
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+/// Observability configuration, carried on
+/// [`crate::config::SystemConfig::obs`] so the registry reaches every
+/// subsystem through the existing config plumbing. Default: no sinks,
+/// no registry, zero instrumentation.
+#[derive(Debug, Clone, Default)]
+pub struct ObsCfg {
+    /// Chrome trace-event JSON output path (`--trace-out`).
+    pub trace_out: Option<PathBuf>,
+    /// Metrics snapshot output path, `.csv` or `.json`
+    /// (`--metrics-out`).
+    pub metrics_out: Option<PathBuf>,
+    /// The live registry; `None` means instrumentation is compiled-in
+    /// but dormant (the default).
+    pub registry: Option<Arc<Registry>>,
+}
+
+impl ObsCfg {
+    /// True when a live registry is attached.
+    pub fn enabled(&self) -> bool {
+        self.registry.is_some()
+    }
+
+    /// The registry handle, if instrumentation is on.
+    pub fn registry(&self) -> Option<&Arc<Registry>> {
+        self.registry.as_ref()
+    }
+
+    /// Attach a fresh registry (idempotent) and return a handle.
+    pub fn activate(&mut self) -> Arc<Registry> {
+        Arc::clone(self.registry.get_or_insert_with(|| Arc::new(Registry::new())))
+    }
+}
+
+/// Wall-clock mark helper for optional instrumentation: the registry's
+/// wall time when obs is on, 0 when off (the value is only ever used
+/// when obs is on).
+pub fn mark(reg: Option<&Arc<Registry>>) -> u64 {
+    reg.map_or(0, |r| r.now_ns())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_dormant_and_activate_is_idempotent() {
+        let mut cfg = ObsCfg::default();
+        assert!(!cfg.enabled());
+        assert!(cfg.registry().is_none());
+        let a = cfg.activate();
+        let b = cfg.activate();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(cfg.enabled());
+    }
+
+    #[test]
+    fn mark_is_zero_when_dormant() {
+        assert_eq!(mark(None), 0);
+        let reg = Arc::new(Registry::new());
+        let m = mark(Some(&reg));
+        assert!(mark(Some(&reg)) >= m);
+    }
+}

@@ -1,0 +1,169 @@
+//! Span records for the observability layer: wall-clock spans from the
+//! explorer/mapper and **virtual-clock** spans from the serving
+//! simulator, kept on separate tracks so a Perfetto view never mixes
+//! the two time bases.
+//!
+//! Spans are plain data — `(track, lane, name, start_ns, dur_ns)` — and
+//! the recording side is strictly write-only: nothing on a compute path
+//! ever reads a span back, which is half of the determinism contract
+//! (the other half lives in [`super::metrics`]). Virtual spans carry
+//! simulator virtual-time nanoseconds; wall spans carry nanoseconds
+//! since the owning [`super::Registry`] was created. Buffers are merged
+//! deterministically by `(track, lane, start_ns, seq)` at export time.
+
+use std::borrow::Cow;
+
+/// Which clock a span's timestamps belong to. Exported as separate
+/// Chrome-trace processes (`pid` 1 = wall, `pid` 2 = virtual) so the
+/// two time bases never share an axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Track {
+    /// Host wall-clock time, relative to the registry's creation
+    /// instant. Durations are real; ordering across threads is
+    /// best-effort (wall spans never feed fingerprinted state).
+    Wall,
+    /// Simulator virtual time ([`crate::sim`]'s nanosecond clock).
+    /// Fully deterministic: same inputs, same spans, any `--jobs`.
+    Virtual,
+}
+
+/// One completed span (Chrome-trace `"ph":"X"` event).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Clock this span is measured on.
+    pub track: Track,
+    /// Lane within the track (Chrome-trace `tid`): explorer phases,
+    /// NSGA-II generations, and sim stage/replica pairs each get their
+    /// own lane — see [`vlane`] for the virtual-track layout.
+    pub lane: u64,
+    /// Display name. `Cow<'static, str>` so steady-state simulator
+    /// spans ("service", "link") allocate nothing per batch.
+    pub name: Cow<'static, str>,
+    /// Start timestamp in ns on the span's clock.
+    pub start_ns: u64,
+    /// Duration in ns (0 = instant event).
+    pub dur_ns: u64,
+    /// Tie-break sequence number, assigned when the span reaches the
+    /// registry; preserves recording order among equal timestamps.
+    pub seq: u64,
+}
+
+/// Virtual-track lane for a (stage, replica) pair. Lane 0 is reserved
+/// for the adaptive controller (migration windows), so stage lanes
+/// start at 1; replicas pack into the low 8 bits (the engine caps
+/// per-stage replication far below 256).
+pub fn vlane(stage: usize, replica: usize) -> u64 {
+    1 + ((stage as u64) << 8) + replica as u64
+}
+
+/// A thread-local (or engine-local) span buffer: spans are appended
+/// lock-free here and flushed into the owning [`super::Registry`] in
+/// one mutex acquisition at a deterministic point (engine teardown,
+/// phase end), never mid-computation.
+#[derive(Debug, Default)]
+pub struct SpanBuf {
+    events: Vec<SpanEvent>,
+}
+
+impl SpanBuf {
+    /// Empty buffer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a completed span. `seq` is provisional (buffer-local) and
+    /// reassigned on flush so merged buffers stay ordered.
+    pub fn push(
+        &mut self,
+        track: Track,
+        lane: u64,
+        name: impl Into<Cow<'static, str>>,
+        start_ns: u64,
+        dur_ns: u64,
+    ) {
+        let seq = self.events.len() as u64;
+        self.events.push(SpanEvent { track, lane, name: name.into(), start_ns, dur_ns, seq });
+    }
+
+    /// Number of buffered spans.
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// Take the buffered events (buffer stays reusable).
+    pub(crate) fn take(&mut self) -> Vec<SpanEvent> {
+        std::mem::take(&mut self.events)
+    }
+}
+
+/// Deterministic merge order for export: by track, then lane, then
+/// start time, then arrival sequence. Guarantees per-(track, lane)
+/// timestamp monotonicity in the exported trace — `tests/obs.rs`
+/// asserts it on real traces.
+pub fn sort_spans(events: &mut [SpanEvent]) {
+    events.sort_by(|a, b| {
+        (a.track, a.lane, a.start_ns, a.seq).cmp(&(b.track, b.lane, b.start_ns, b.seq))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn push_records_in_order() {
+        let mut b = SpanBuf::new();
+        b.push(Track::Virtual, vlane(0, 0), "service", 100, 50);
+        b.push(Track::Virtual, vlane(0, 0), "link", 150, 10);
+        assert_eq!(b.len(), 2);
+        let ev = b.take();
+        assert!(b.is_empty());
+        assert_eq!(ev[0].name, "service");
+        assert_eq!(ev[1].seq, 1);
+    }
+
+    #[test]
+    fn sort_is_per_track_lane_time_seq() {
+        let mut ev = vec![
+            SpanEvent {
+                track: Track::Virtual,
+                lane: 2,
+                name: "b".into(),
+                start_ns: 5,
+                dur_ns: 0,
+                seq: 1,
+            },
+            SpanEvent {
+                track: Track::Wall,
+                lane: 9,
+                name: "w".into(),
+                start_ns: 999,
+                dur_ns: 0,
+                seq: 2,
+            },
+            SpanEvent {
+                track: Track::Virtual,
+                lane: 2,
+                name: "a".into(),
+                start_ns: 5,
+                dur_ns: 0,
+                seq: 0,
+            },
+        ];
+        sort_spans(&mut ev);
+        assert_eq!(ev[0].name, "w"); // Wall track sorts first
+        assert_eq!(ev[1].name, "a"); // then (lane, time, seq)
+        assert_eq!(ev[2].name, "b");
+    }
+
+    #[test]
+    fn controller_lane_is_reserved() {
+        assert!(vlane(0, 0) > 0);
+        assert_ne!(vlane(0, 1), vlane(1, 0));
+    }
+}

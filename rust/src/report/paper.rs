@@ -69,8 +69,23 @@ pub fn fig2_with_cache(
     jobs: usize,
     cache: &Arc<CostCache>,
 ) -> Result<Vec<(String, f64)>> {
+    fig2_with_cache_obs(out, fast, jobs, cache, &crate::obs::ObsCfg::default())
+}
+
+/// [`fig2_with_cache`] with an observability config threaded into the
+/// internally built [`SystemConfig`] (the report path owns its systems,
+/// so `--trace-out`/`--metrics-out` flow through here). Dormant `obs`
+/// (the default) makes this exactly [`fig2_with_cache`].
+pub fn fig2_with_cache_obs(
+    out: &Path,
+    fast: bool,
+    jobs: usize,
+    cache: &Arc<CostCache>,
+    obs: &crate::obs::ObsCfg,
+) -> Result<Vec<(String, f64)>> {
     std::fs::create_dir_all(out)?;
-    let sys = fig2_system(fast, jobs);
+    let mut sys = fig2_system(fast, jobs);
+    sys.obs = obs.clone();
     let graphs: Vec<Graph> = FIG2_FILES
         .iter()
         .map(|&(model, _)| zoo::build(model).unwrap_or_else(|| panic!("unknown model {model}")))
@@ -127,9 +142,22 @@ pub fn table2_with_cache(
     jobs: usize,
     cache: &Arc<CostCache>,
 ) -> Result<Vec<(String, Vec<usize>)>> {
+    table2_with_cache_obs(out, fast, jobs, cache, &crate::obs::ObsCfg::default())
+}
+
+/// [`table2_with_cache`] with an observability config threaded into the
+/// internally built four-platform [`SystemConfig`].
+pub fn table2_with_cache_obs(
+    out: &Path,
+    fast: bool,
+    jobs: usize,
+    cache: &Arc<CostCache>,
+    obs: &crate::obs::ObsCfg,
+) -> Result<Vec<(String, Vec<usize>)>> {
     std::fs::create_dir_all(out)?;
     let mut sys = SystemConfig::paper_four_platform();
     sys.jobs = jobs.max(1);
+    sys.obs = obs.clone();
     // Same mapper-search settings as fig2, *structurally*: the cache
     // shared across fig2/table2 (and persisted under one
     // `search_fingerprint`) is only valid if the two never drift apart.
@@ -152,6 +180,19 @@ pub fn table2_with_cache(
 /// layer-cost cache is loaded before and saved after, so a repeated
 /// `partir report` re-runs zero mapper searches.
 pub fn generate_all(out: &Path, fast: bool, jobs: usize, cache_dir: Option<&Path>) -> Result<()> {
+    generate_all_obs(out, fast, jobs, cache_dir, &crate::obs::ObsCfg::default())
+}
+
+/// [`generate_all`] with an observability config: both explorations
+/// record into `obs`'s registry (when live), and the CLI exports the
+/// sinks after this returns.
+pub fn generate_all_obs(
+    out: &Path,
+    fast: bool,
+    jobs: usize,
+    cache_dir: Option<&Path>,
+    obs: &crate::obs::ObsCfg,
+) -> Result<()> {
     let t0 = std::time::Instant::now();
     let search = fig2_system(fast, jobs).search;
     let cache = Arc::new(match cache_dir {
@@ -164,9 +205,9 @@ pub fn generate_all(out: &Path, fast: bool, jobs: usize, cache_dir: Option<&Path
         }
         None => CostCache::new(),
     });
-    fig2_with_cache(out, fast, jobs, &cache)?;
+    fig2_with_cache_obs(out, fast, jobs, &cache, obs)?;
     fig3(out)?;
-    table2_with_cache(out, fast, jobs, &cache)?;
+    table2_with_cache_obs(out, fast, jobs, &cache, obs)?;
     if let Some(dir) = cache_dir {
         let path = cache.save_to(dir, &search)?;
         println!("[report] cost cache: saved {} entries to {}", cache.len(), path.display());

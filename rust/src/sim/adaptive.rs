@@ -35,14 +35,16 @@
 //! reports the gap.
 
 use super::engine::{
-    self, assemble_report, in_window, s_to_ns, Engine, EpochObs, Req,
+    self, assemble_report, in_window, s_to_ns, Engine, EpochObs, Req, SimObs,
 };
 use super::{Deployment, Scenario, SimCfg, SimReport};
 use crate::config::{AdaptiveCfg, SystemConfig};
 use crate::coordinator::{Completion, StageStats};
 use crate::explorer::Exploration;
+use crate::obs::Registry;
 use crate::util::hash::Fnv64;
 use crate::util::parallel::par_map;
+use std::sync::Arc;
 
 /// One stage of a pool candidate, reduced to what the controller
 /// scores on.
@@ -462,6 +464,26 @@ pub fn simulate_adaptive(
     acfg: &AdaptiveCfg,
     mode: ControllerMode,
 ) -> AdaptiveReport {
+    simulate_adaptive_obs(ex, sys, scenario, cfg, acfg, mode, None)
+}
+
+/// [`simulate_adaptive`] with an optional metrics registry: per-stage
+/// engine counters/histograms and virtual-clock spans, plus controller
+/// lane-0 migration spans (`migrate from -> to [reason]`) and
+/// `adaptive.*` counters. Write-only instrumentation — the returned
+/// report (and its fingerprint) is bit-identical to the uninstrumented
+/// run. Note `sys.obs` is deliberately *not* read here: the caller
+/// decides which run records (see [`compare_adaptive`], which fans out
+/// three runs but instruments only the hysteresis one).
+pub fn simulate_adaptive_obs(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    scenario: &Scenario,
+    cfg: &SimCfg,
+    acfg: &AdaptiveCfg,
+    mode: ControllerMode,
+    reg: Option<&Arc<Registry>>,
+) -> AdaptiveReport {
     if let Err(e) = scenario.validate(Some(sys.platforms.len())) {
         panic!("invalid scenario '{}': {e}", scenario.name);
     }
@@ -486,7 +508,18 @@ pub fn simulate_adaptive(
     let mut events = 0u64;
     let mut last_ns = 0u64;
 
-    let mut eng = Engine::new(&deps[cur], cfg, scenario, &arrivals, 0, 0, vec![false; n], &[]);
+    let sim_obs = |dep: &Deployment| reg.map(|r| SimObs::new(r, dep.stages.len(), true));
+    let mut eng = Engine::new(
+        &deps[cur],
+        cfg,
+        scenario,
+        &arrivals,
+        0,
+        0,
+        vec![false; n],
+        &[],
+        sim_obs(&deps[cur]),
+    );
     let mut t = epoch_ns;
     loop {
         eng.step_until(t);
@@ -520,8 +553,33 @@ pub fn simulate_adaptive(
                 carried: reqs.len() as u64,
                 reason: reason.to_string(),
             });
+            // Controller-lane instrumentation: the migration window as
+            // a virtual-clock span on the reserved lane 0, plus cutover
+            // counters. Write-only — never read back by the controller.
+            if let Some(r) = reg {
+                r.counter("adaptive.migrations").inc();
+                r.counter("adaptive.migration_cost_ns").add(cost_ns);
+                r.counter("adaptive.migration_bytes").add(bytes);
+                r.virt_span(
+                    format!(
+                        "migrate {} -> {} [{}]",
+                        pool[cur].label, pool[tgt].label, reason
+                    ),
+                    0,
+                    t,
+                    cost_ns,
+                );
+            }
             eng = Engine::new(
-                &deps[tgt], cfg, scenario, &arrivals, out.next, t_live, out.done, &reqs,
+                &deps[tgt],
+                cfg,
+                scenario,
+                &arrivals,
+                out.next,
+                t_live,
+                out.done,
+                &reqs,
+                sim_obs(&deps[tgt]),
             );
             cur = tgt;
             // Resume the epoch grid at the first edge after cutover.
@@ -541,6 +599,9 @@ pub fn simulate_adaptive(
         n,
         "every request must complete or be dropped exactly once across regimes"
     );
+    if let Some(r) = reg {
+        r.counter("adaptive.epochs").add(epochs);
+    }
     let total_migration_ns: u64 = migrations.iter().map(|m| m.cost_ns).sum();
     let total_migration_bytes: u64 =
         migrations.iter().map(|m| m.weight_bytes + m.activation_bytes).sum();
@@ -643,14 +704,24 @@ pub fn compare_adaptive(
     assert!(!pool.is_empty(), "adaptive serving needs a deployable candidate pool");
     let start = start_index(ex, &pool);
     let kinds = [0usize, 1, 2];
+    // Only the hysteresis run records into `sys.obs` — the three runs
+    // share stage/lane names, so instrumenting all of them would fold
+    // three event streams into one set of cells and garble the trace.
+    let reg = sys.obs.registry();
     let mut outs: Vec<RunOut> = par_map(jobs.max(1), &kinds, |&k| match k {
         0 => {
             let dep = Deployment::from_candidate(&ex.candidates[pool[start].candidate], sys);
             let arrivals = scenario.arrival_times_ns(cfg.seed);
             RunOut::Static(engine::run_with_arrivals(&dep, cfg, scenario, &arrivals))
         }
-        1 => RunOut::Adaptive(simulate_adaptive(
-            ex, sys, scenario, cfg, acfg, ControllerMode::Hysteresis,
+        1 => RunOut::Adaptive(simulate_adaptive_obs(
+            ex,
+            sys,
+            scenario,
+            cfg,
+            acfg,
+            ControllerMode::Hysteresis,
+            reg,
         )),
         _ => RunOut::Adaptive(simulate_adaptive(
             ex, sys, scenario, cfg, acfg, ControllerMode::Oracle,

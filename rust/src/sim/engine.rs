@@ -22,8 +22,10 @@ use super::scenario::Scenario;
 use super::{Deployment, DispatchPolicy, SimCfg, SimEdge, SimReport};
 use crate::coordinator::{BatchPolicy, Completion, PipelineReport, StageStats};
 use crate::link::LinkModel;
+use crate::obs::{vlane, CounterCell, Histogram, Registry, SpanBuf, Track};
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, VecDeque};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Virtual seconds → integer nanoseconds (round-to-nearest). Integer
@@ -145,6 +147,55 @@ pub(crate) struct RegimeOutput {
     pub(crate) next: usize,
 }
 
+/// Pre-fetched metric cells for one stage, resolved once at engine
+/// construction so the event loop never touches the registry's name
+/// maps. Successive adaptive regimes resolve the *same* cells
+/// (get-or-create by name), so counts accumulate across migrations.
+pub(crate) struct StageCells {
+    batches: CounterCell,
+    items: CounterCell,
+    drops: CounterCell,
+    compute_busy_ns: CounterCell,
+    link_busy_ns: CounterCell,
+    batch_fill: Arc<Histogram>,
+    queue_depth: Arc<Histogram>,
+}
+
+/// Observability sidecar for one engine regime: per-stage metric cells
+/// plus a local span buffer, flushed into the registry in a single
+/// deterministic step at [`Engine::finish`]. Strictly write-only from
+/// the event loop — the engine never reads instrumentation back, so an
+/// instrumented run's event stream (and fingerprint) is bit-identical
+/// to a bare one (`tests/obs.rs` asserts it).
+pub(crate) struct SimObs {
+    reg: Arc<Registry>,
+    /// Record per-batch virtual spans? On for the single-deployment
+    /// `simulate`/adaptive paths; off for `evaluate_front`, where many
+    /// candidates share one registry and their lanes would interleave.
+    spans: bool,
+    buf: SpanBuf,
+    stages: Vec<StageCells>,
+}
+
+impl SimObs {
+    /// Resolve (or create) the `sim.stageNN.*` cells for `n_stages`
+    /// stages of `reg`.
+    pub(crate) fn new(reg: &Arc<Registry>, n_stages: usize, spans: bool) -> SimObs {
+        let stages = (0..n_stages)
+            .map(|s| StageCells {
+                batches: reg.counter(&format!("sim.stage{s:02}.batches")),
+                items: reg.counter(&format!("sim.stage{s:02}.items")),
+                drops: reg.counter(&format!("sim.stage{s:02}.drops")),
+                compute_busy_ns: reg.counter(&format!("sim.stage{s:02}.compute_busy_ns")),
+                link_busy_ns: reg.counter(&format!("sim.stage{s:02}.link_busy_ns")),
+                batch_fill: reg.histogram(&format!("sim.stage{s:02}.batch_fill")),
+                queue_depth: reg.histogram(&format!("sim.stage{s:02}.queue_depth")),
+            })
+            .collect();
+        SimObs { reg: Arc::clone(reg), spans, buf: SpanBuf::new(), stages }
+    }
+}
+
 pub(crate) struct Engine<'a> {
     params: Vec<StageParams>,
     /// Stage display names (copied so `finish` can build stage rows
@@ -207,6 +258,9 @@ pub(crate) struct Engine<'a> {
     ep_completed: u64,
     ep_dropped: u64,
     ep_slo_miss: u64,
+    /// Write-only observability sidecar (`None` = fully uninstrumented;
+    /// the hooks compile to a branch on a `None` discriminant).
+    obs: Option<SimObs>,
 }
 
 impl<'a> Engine<'a> {
@@ -251,6 +305,11 @@ impl<'a> Engine<'a> {
         self.stages[s].dropped += 1;
         self.done[req.id as usize] = true;
         self.ep_dropped += 1;
+        // Counter only — a span per drop would make a storm's trace as
+        // large as its arrival trace.
+        if let Some(o) = self.obs.as_ref() {
+            o.stages[s].drops.inc();
+        }
         self.completions.push(Completion {
             id: req.id,
             latency: Duration::from_nanos(t - req.submit_ns),
@@ -359,7 +418,8 @@ impl<'a> Engine<'a> {
     }
 
     fn start_batch(&mut self, s: usize, r: usize, t: u64) {
-        let n = self.batch.take(self.stages[s].servers[r].queue.len());
+        let qlen = self.stages[s].servers[r].queue.len();
+        let n = self.batch.take(qlen);
         debug_assert!(n >= 1, "starting an empty batch");
         let p = self.params[s];
         let svc_ns =
@@ -381,6 +441,21 @@ impl<'a> Engine<'a> {
         self.energy_j += link_energy + p.energy_per_item_j * n as f64;
         self.ep_items[s] += n as u64;
         self.ep_busy_ns[s] += svc_ns;
+        if let Some(o) = self.obs.as_mut() {
+            let c = &o.stages[s];
+            c.batches.inc();
+            c.items.add(n as u64);
+            c.compute_busy_ns.add(svc_ns);
+            c.link_busy_ns.add(link_ns);
+            c.batch_fill.observe(n as u64);
+            c.queue_depth.observe(qlen as u64);
+            if o.spans {
+                o.buf.push(Track::Virtual, vlane(s, r), "service", t, svc_ns);
+                if link_ns > 0 {
+                    o.buf.push(Track::Virtual, vlane(s, r), "link", t_xfer, link_ns);
+                }
+            }
+        }
         let srv = &mut self.stages[s].servers[r];
         srv.timer_gen += 1; // invalidate any pending batch timer
         srv.in_flight = srv.queue.drain(..n).collect();
@@ -466,6 +541,11 @@ impl<'a> Engine<'a> {
                 // when the node is back in the cluster's view, and a
                 // stale ComputeDone on an emptied bank is a no-op.
                 // Deliveries during the window drop in `enqueue`.
+                if let Some(o) = self.obs.as_mut() {
+                    if o.spans {
+                        o.buf.push(Track::Virtual, vlane(stage, 0), "node-down", e.at, 0);
+                    }
+                }
                 for r in 0..self.stages[stage].servers.len() {
                     let srv = &mut self.stages[stage].servers[r];
                     srv.timer_gen += 1; // stale any pending batch timer
@@ -570,8 +650,13 @@ impl<'a> Engine<'a> {
     }
 
     /// Close out the regime: fold replica accounting into stage rows
-    /// and hand back the cursors a successor regime resumes from.
-    pub(crate) fn finish(self) -> RegimeOutput {
+    /// and hand back the cursors a successor regime resumes from. The
+    /// span buffer (if any) flushes into the registry here — one
+    /// deterministic point, never mid-event-loop.
+    pub(crate) fn finish(mut self) -> RegimeOutput {
+        if let Some(mut o) = self.obs.take() {
+            o.reg.flush_spans(&mut o.buf);
+        }
         let stages: Vec<StageStats> = self
             .names
             .iter()
@@ -615,6 +700,7 @@ impl<'a> Engine<'a> {
         start_ns: u64,
         done: Vec<bool>,
         carryover: &[Req],
+        obs: Option<SimObs>,
     ) -> Engine<'a> {
         assert!(!dep.stages.is_empty(), "deployment needs at least one stage");
         assert_eq!(
@@ -728,6 +814,7 @@ impl<'a> Engine<'a> {
             ep_completed: 0,
             ep_dropped: 0,
             ep_slo_miss: 0,
+            obs,
         };
         for (at, stage) in downs {
             eng.push(at, EventKind::NodeDown { stage });
@@ -743,8 +830,22 @@ impl<'a> Engine<'a> {
 }
 
 pub(crate) fn run(dep: &Deployment, cfg: &SimCfg, scenario: &Scenario) -> SimReport {
+    run_obs(dep, cfg, scenario, None)
+}
+
+/// [`run`] with an optional metrics registry: per-stage counters and
+/// histograms plus per-batch virtual-clock spans. The registry is
+/// write-only for the engine, so the returned report is bit-identical
+/// to [`run`]'s.
+pub(crate) fn run_obs(
+    dep: &Deployment,
+    cfg: &SimCfg,
+    scenario: &Scenario,
+    reg: Option<&Arc<Registry>>,
+) -> SimReport {
     let arrivals = scenario.arrival_times_ns(cfg.seed);
-    run_with_arrivals(dep, cfg, scenario, &arrivals)
+    let obs = reg.map(|r| SimObs::new(r, dep.stages.len(), true));
+    run_with_arrivals_obs(dep, cfg, scenario, &arrivals, obs)
 }
 
 /// [`run`] against a pre-expanded arrival trace — `evaluate_front`
@@ -756,11 +857,24 @@ pub(crate) fn run_with_arrivals(
     scenario: &Scenario,
     arrivals: &[u64],
 ) -> SimReport {
+    run_with_arrivals_obs(dep, cfg, scenario, arrivals, None)
+}
+
+/// [`run_with_arrivals`] with an optional pre-built observability
+/// sidecar (metric cells + span buffer), used by `evaluate_front`
+/// (metrics only) and the obs-enabled single-run paths.
+pub(crate) fn run_with_arrivals_obs(
+    dep: &Deployment,
+    cfg: &SimCfg,
+    scenario: &Scenario,
+    arrivals: &[u64],
+    obs: Option<SimObs>,
+) -> SimReport {
     if let Err(e) = scenario.validate(None) {
         panic!("invalid scenario '{}': {e}", scenario.name);
     }
     let done = vec![false; arrivals.len()];
-    let mut eng = Engine::new(dep, cfg, scenario, arrivals, 0, 0, done, &[]);
+    let mut eng = Engine::new(dep, cfg, scenario, arrivals, 0, 0, done, &[], obs);
     eng.step_until(u64::MAX);
     debug_assert!(eng.idle(), "run left work pending");
     let out = eng.finish();
@@ -1086,7 +1200,7 @@ mod tests {
         let c = cfg(8, 500, 128);
         let one = run_with_arrivals(&dep, &c, &sc, &arrivals);
         let mut eng =
-            Engine::new(&dep, &c, &sc, &arrivals, 0, 0, vec![false; arrivals.len()], &[]);
+            Engine::new(&dep, &c, &sc, &arrivals, 0, 0, vec![false; arrivals.len()], &[], None);
         let mut t = 50_000_000u64;
         let mut epochs = 0usize;
         let mut observed_delivered = 0u64;

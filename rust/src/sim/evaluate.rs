@@ -65,10 +65,17 @@ pub fn evaluate_front(
     // pure function of (scenario, seed), so re-running it per candidate
     // would only burn time (1M-request traces are ~8 MB of RNG work).
     let arrivals = scenario.arrival_times_ns(cfg.seed);
+    // Metrics only (spans off): candidates run concurrently against one
+    // registry, so per-batch spans from different deployments would
+    // interleave on shared lanes. Counter adds commute, so the
+    // aggregate sim.stageNN.* totals stay jobs-deterministic.
+    let obs = sys.obs.registry();
+    let t0 = crate::obs::mark(obs);
     let mut ranked: Vec<RankedCandidate> = par_map(jobs.max(1), &idx, |&i| {
         let c = &ex.candidates[i];
         let dep = Deployment::from_candidate(c, sys);
-        let r = super::engine::run_with_arrivals(&dep, cfg, scenario, &arrivals);
+        let sim_obs = obs.map(|r| super::engine::SimObs::new(r, dep.stages.len(), false));
+        let r = super::engine::run_with_arrivals_obs(&dep, cfg, scenario, &arrivals, sim_obs);
         RankedCandidate {
             candidate: i,
             label: c.label.clone(),
@@ -84,6 +91,10 @@ pub fn evaluate_front(
             fingerprint: r.fingerprint(),
         }
     });
+    if let Some(reg) = obs {
+        reg.counter("sim.candidates_simulated").add(idx.len() as u64);
+        reg.wall_span(format!("evaluate front ({} candidate(s))", idx.len()), 0, t0);
+    }
     ranked.sort_by(|a, b| {
         b.goodput
             .partial_cmp(&a.goodput)

@@ -57,8 +57,8 @@ mod evaluate;
 mod scenario;
 
 pub use adaptive::{
-    candidate_pool, compare_adaptive, simulate_adaptive, AdaptiveComparison, AdaptiveReport,
-    ControllerMode, Migration, PoolCandidate, PoolStage,
+    candidate_pool, compare_adaptive, simulate_adaptive, simulate_adaptive_obs,
+    AdaptiveComparison, AdaptiveReport, ControllerMode, Migration, PoolCandidate, PoolStage,
 };
 pub use evaluate::{best_gain_over_single, evaluate_front, render_ranking, RankedCandidate};
 pub use scenario::{Arrivals, FaultWindow, NodeLoss, Scenario, Slowdown};
@@ -428,4 +428,19 @@ impl SimReport {
 /// ```
 pub fn simulate(dep: &Deployment, cfg: &SimCfg, scenario: &Scenario) -> SimReport {
     engine::run(dep, cfg, scenario)
+}
+
+/// [`simulate`] with an optional observability registry: per-stage
+/// counters and histograms (`sim.stageNN.*`) plus per-batch
+/// virtual-clock spans (`service`/`link` on per-(stage, replica)
+/// lanes). Instrumentation is write-only, so the returned report —
+/// including [`SimReport::fingerprint`] — is bit-identical to
+/// [`simulate`]'s (`tests/obs.rs` asserts it).
+pub fn simulate_obs(
+    dep: &Deployment,
+    cfg: &SimCfg,
+    scenario: &Scenario,
+    reg: Option<&std::sync::Arc<crate::obs::Registry>>,
+) -> SimReport {
+    engine::run_obs(dep, cfg, scenario, reg)
 }

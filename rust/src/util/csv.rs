@@ -62,6 +62,86 @@ impl Csv {
         let mut f = std::fs::File::create(path)?;
         f.write_all(self.to_string().as_bytes())
     }
+
+    /// Parse CSV text produced by [`Csv::to_string`] back into a table
+    /// (header + rows, RFC-4180 quoting). Round-tripping is what the
+    /// observability metrics snapshot relies on: `tests/obs.rs` asserts
+    /// `parse(to_string(x)) == x`.
+    pub fn parse(text: &str) -> Result<Csv, String> {
+        let mut records = parse_records(text)?;
+        if records.is_empty() {
+            return Err("empty CSV: no header line".into());
+        }
+        let header = records.remove(0);
+        for (i, r) in records.iter().enumerate() {
+            if r.len() != header.len() {
+                return Err(format!(
+                    "row {} arity {} != header arity {}",
+                    i + 1,
+                    r.len(),
+                    header.len()
+                ));
+            }
+        }
+        Ok(Csv { header, rows: records })
+    }
+
+    /// Borrow the header cells.
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    /// Borrow the data rows.
+    pub fn rows(&self) -> &[Vec<String>] {
+        &self.rows
+    }
+}
+
+/// Split CSV text into records, honoring `""`-escaped quotes. Newlines
+/// inside quoted cells are preserved; a trailing newline is not an
+/// empty record.
+fn parse_records(text: &str) -> Result<Vec<Vec<String>>, String> {
+    let mut records = Vec::new();
+    let mut row: Vec<String> = Vec::new();
+    let mut cell = String::new();
+    let mut quoted = false;
+    let mut any = false; // saw content since last record boundary
+    let mut chars = text.chars().peekable();
+    while let Some(c) = chars.next() {
+        match c {
+            '"' if quoted => {
+                if chars.peek() == Some(&'"') {
+                    chars.next();
+                    cell.push('"');
+                } else {
+                    quoted = false;
+                }
+            }
+            '"' if cell.is_empty() => quoted = true,
+            '"' => return Err("stray quote mid-cell".into()),
+            ',' if !quoted => {
+                row.push(std::mem::take(&mut cell));
+                any = true;
+            }
+            '\n' if !quoted => {
+                if any || !cell.is_empty() {
+                    row.push(std::mem::take(&mut cell));
+                    records.push(std::mem::take(&mut row));
+                }
+                any = false;
+            }
+            '\r' if !quoted => {} // tolerate CRLF
+            _ => cell.push(c),
+        }
+    }
+    if quoted {
+        return Err("unterminated quoted cell".into());
+    }
+    if any || !cell.is_empty() {
+        row.push(cell);
+        records.push(row);
+    }
+    Ok(records)
 }
 
 /// Format a float cell with enough precision for plotting but stable output.
@@ -114,6 +194,23 @@ mod tests {
     fn panics_on_ragged_row() {
         let mut c = Csv::new(&["a", "b"]);
         c.row(&["only-one".into()]);
+    }
+
+    #[test]
+    fn parse_roundtrips_writer_output() {
+        let mut c = Csv::new(&["name", "kind", "value"]);
+        c.row(&["a,b".into(), "counter".into(), "7".into()]);
+        c.row(&["q\"uote".into(), "gauge".into(), "0".into()]);
+        let back = Csv::parse(&c.to_string()).unwrap();
+        assert_eq!(back.header(), c.header());
+        assert_eq!(back.rows(), c.rows());
+    }
+
+    #[test]
+    fn parse_rejects_ragged_and_empty() {
+        assert!(Csv::parse("").is_err());
+        assert!(Csv::parse("a,b\n1\n").is_err());
+        assert!(Csv::parse("a\n\"unterminated\n").is_err());
     }
 
     #[test]

@@ -1,0 +1,284 @@
+//! Observability inertness gate (PR 8 acceptance): turning the
+//! deterministic observability layer on must not move a single bit of
+//! any result — exploration fronts, `SimReport` fingerprints, and
+//! `AdaptiveReport` fingerprints are identical with a live registry or
+//! a dormant one, for any `--jobs` value. On top of that, the exported
+//! Chrome trace must be valid JSON with per-lane monotone timestamps,
+//! the metrics snapshot must round-trip through CSV exactly, and a
+//! failover run must surface the controller's migration window as a
+//! virtual-clock span.
+
+use partir::config::SystemConfig;
+use partir::explorer::{
+    CandidateMetrics, Exploration, ExplorationTiming, ExploreRequest, PlanEdge, StagePlan,
+};
+use partir::obs::{chrome_trace, Registry, Snapshot};
+use partir::sim::{
+    compare_adaptive, evaluate_front, simulate, simulate_obs, Deployment, Scenario, SimCfg,
+};
+use partir::zoo;
+use std::sync::Arc;
+
+fn quick_sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 10;
+    sys.search.max_samples = 100;
+    sys
+}
+
+fn obs_sys() -> SystemConfig {
+    let mut sys = quick_sys();
+    sys.obs.activate();
+    sys
+}
+
+/// Same laxer improvement bar as `tests/adaptive.rs`, so the fault
+/// presets migrate by construction.
+fn acfg() -> partir::config::AdaptiveCfg {
+    partir::config::AdaptiveCfg { improve_factor: 1.1, ..Default::default() }
+}
+
+/// Hand-built serving fixture (same shape as `tests/adaptive.rs`): a
+/// two-platform split plus single-platform fallbacks with controlled
+/// capacities, so the failover scenario forces a migration.
+fn single(platform: usize, label: &str, lat: f64) -> CandidateMetrics {
+    let mut memory = vec![0u64, 0];
+    memory[platform] = 5_000_000;
+    CandidateMetrics {
+        positions: vec![if platform == 0 { 9 } else { 0 }],
+        label: label.to_string(),
+        latency_s: lat,
+        energy_j: 1.0,
+        throughput: 1.0 / lat,
+        top1: 70.0,
+        memory_bytes: memory,
+        link_bytes: 0,
+        partitions: 1,
+        plan: vec![StagePlan {
+            platform,
+            latency_s: lat,
+            energy_j: 1.0,
+            out_bytes: 0,
+            out_hops: 0,
+            edges: Vec::new(),
+            replicas: 1,
+        }],
+        assign: None,
+        violation: 0.0,
+        violations: Vec::new(),
+    }
+}
+
+fn toy_exploration() -> Exploration {
+    let split = CandidateMetrics {
+        positions: vec![4],
+        label: "split".into(),
+        latency_s: 0.002,
+        energy_j: 1.0,
+        throughput: 1000.0,
+        top1: 70.0,
+        memory_bytes: vec![2_500_000, 2_500_000],
+        link_bytes: 1460,
+        partitions: 2,
+        plan: vec![
+            StagePlan {
+                platform: 0,
+                latency_s: 0.001,
+                energy_j: 0.5,
+                out_bytes: 1460,
+                out_hops: 1,
+                edges: vec![PlanEdge { to: Some(1), bytes: 1460, hops: 1 }],
+                replicas: 1,
+            },
+            StagePlan {
+                platform: 1,
+                latency_s: 0.001,
+                energy_j: 0.5,
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+                replicas: 1,
+            },
+        ],
+        assign: None,
+        violation: 0.0,
+        violations: Vec::new(),
+    };
+    Exploration {
+        model: "toy".into(),
+        candidates: vec![single(0, "all-on-A", 0.002), single(1, "all-on-B", 0.0025), split],
+        pareto: vec![2],
+        nsga_front: vec![2],
+        favorite: Some(2),
+        timing: ExplorationTiming::default(),
+    }
+}
+
+fn assert_fronts_equal(bare: &Exploration, obs: &Exploration, what: &str) {
+    assert_eq!(bare.pareto, obs.pareto, "{what}: pareto set moved");
+    assert_eq!(bare.nsga_front, obs.nsga_front, "{what}: NSGA front moved");
+    assert_eq!(bare.favorite, obs.favorite, "{what}: favorite moved");
+    assert_eq!(bare.candidates.len(), obs.candidates.len(), "{what}: candidate count moved");
+    for (a, b) in bare.candidates.iter().zip(&obs.candidates) {
+        assert_eq!(a.label, b.label, "{what}: label moved");
+        assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits(), "{what}: latency bits moved");
+        assert_eq!(a.energy_j.to_bits(), b.energy_j.to_bits(), "{what}: energy bits moved");
+        assert_eq!(
+            a.throughput.to_bits(),
+            b.throughput.to_bits(),
+            "{what}: throughput bits moved"
+        );
+    }
+}
+
+#[test]
+fn exploration_front_bit_identical_with_obs_on_across_jobs() {
+    let g = zoo::tiny_cnn(10);
+    let bare = quick_sys();
+    for jobs in [1usize, 4] {
+        let chain_off = ExploreRequest::chain().jobs(jobs).run(&g, &bare);
+        let dag_off = ExploreRequest::dag().jobs(jobs).run(&g, &bare);
+        // Fresh live registry per run: recording must not perturb.
+        let chain_on = ExploreRequest::chain().jobs(jobs).run(&g, &obs_sys());
+        let dag_on = ExploreRequest::dag().jobs(jobs).run(&g, &obs_sys());
+        assert_fronts_equal(&chain_off, &chain_on, &format!("chain jobs={jobs}"));
+        assert_fronts_equal(&dag_off, &dag_on, &format!("dag jobs={jobs}"));
+    }
+    // The instrumented run actually recorded something (the contract is
+    // "inert", not "absent").
+    let sys = obs_sys();
+    let _ = ExploreRequest::chain().run(&g, &sys);
+    let reg = sys.obs.registry().unwrap();
+    assert!(reg.counter("explorer.requests").get() >= 1);
+    assert!(reg.span_count() > 0, "no spans recorded by an instrumented exploration");
+}
+
+#[test]
+fn sim_and_adaptive_fingerprints_bit_identical_with_obs_on() {
+    let ex = toy_exploration();
+    let sc = Scenario::failover(12_000, 300.0);
+    let cfg = SimCfg { seed: 7, ..Default::default() };
+
+    // Static engine: instrumented run, same fingerprint.
+    let dep = Deployment::from_candidate(&ex.candidates[2], &quick_sys());
+    let reg = Arc::new(Registry::new());
+    let bare = simulate(&dep, &cfg, &sc);
+    let inst = simulate_obs(&dep, &cfg, &sc, Some(&reg));
+    assert_eq!(bare.fingerprint(), inst.fingerprint(), "simulate_obs moved the fingerprint");
+    assert!(reg.counter("sim.stage00.batches").get() > 0, "engine counters stayed silent");
+    assert!(reg.span_count() > 0, "engine spans stayed silent");
+
+    // Adaptive comparison: obs-on vs obs-off, jobs 1 vs 4.
+    let off = compare_adaptive(&ex, &quick_sys(), &sc, &cfg, &acfg(), 1);
+    for jobs in [1usize, 4] {
+        let sys_on = obs_sys();
+        let on = compare_adaptive(&ex, &sys_on, &sc, &cfg, &acfg(), jobs);
+        assert_eq!(
+            off.static_report.fingerprint(),
+            on.static_report.fingerprint(),
+            "obs moved the static baseline (jobs={jobs})"
+        );
+        assert_eq!(
+            off.adaptive.fingerprint(),
+            on.adaptive.fingerprint(),
+            "obs moved the adaptive run (jobs={jobs})"
+        );
+        assert_eq!(
+            off.oracle.fingerprint(),
+            on.oracle.fingerprint(),
+            "obs moved the oracle run (jobs={jobs})"
+        );
+    }
+
+    // Front evaluation: obs-on vs obs-off, jobs 1 vs 4.
+    let ranked_off = evaluate_front(&ex, &quick_sys(), &sc, &cfg, 1);
+    for jobs in [1usize, 4] {
+        let ranked_on = evaluate_front(&ex, &obs_sys(), &sc, &cfg, jobs);
+        assert_eq!(ranked_off, ranked_on, "obs moved the ranking (jobs={jobs})");
+    }
+}
+
+#[test]
+fn trace_export_is_valid_json_with_monotone_lane_timestamps() {
+    use partir::util::json::Json;
+    let ex = toy_exploration();
+    let sys = obs_sys();
+    let sc = Scenario::failover(12_000, 300.0);
+    let cfg = SimCfg { seed: 7, ..Default::default() };
+    let _ = compare_adaptive(&ex, &sys, &sc, &cfg, &acfg(), 2);
+    let reg = sys.obs.registry().unwrap();
+    let doc = Json::parse(&chrome_trace(reg).dump()).expect("trace is not valid JSON");
+    let events = doc.get("traceEvents").as_arr().expect("no traceEvents array");
+    assert!(events.len() > 2, "trace holds only metadata");
+    // Per-(pid, tid) lane timestamps must be monotone in document
+    // order — that is what makes the Perfetto view readable.
+    let mut last: std::collections::BTreeMap<(u64, u64), f64> = Default::default();
+    let mut x_events = 0usize;
+    for e in events {
+        match e.get("ph").as_str() {
+            Some("X") => {}
+            Some("M") => continue,
+            other => panic!("unexpected phase {other:?}"),
+        }
+        x_events += 1;
+        let key = (e.get("pid").as_u64().unwrap(), e.get("tid").as_u64().unwrap());
+        let ts = e.get("ts").as_f64().unwrap();
+        assert!(ts >= 0.0 && e.get("dur").as_f64().unwrap() >= 0.0);
+        if let Some(prev) = last.insert(key, ts) {
+            assert!(ts >= prev, "lane {key:?} went backwards: {prev} -> {ts}");
+        }
+    }
+    assert!(x_events > 0, "no span events exported");
+}
+
+#[test]
+fn metrics_snapshot_csv_roundtrip_is_exact() {
+    let reg = Registry::new();
+    reg.counter("a.hits").add(41);
+    reg.counter("a.misses").inc();
+    reg.gauge("b.depth").set(17);
+    let h = reg.histogram("c.fill");
+    for v in [0u64, 1, 2, 3, 1024, u64::MAX] {
+        h.observe(v);
+    }
+    let snap = reg.snapshot();
+    let text = snap.to_csv().to_string();
+    let back = Snapshot::from_csv(&text).expect("snapshot CSV failed to parse");
+    assert_eq!(snap.rows, back.rows, "CSV round-trip lost rows");
+    assert!(snap.rows.iter().any(|r| r.name == "a.hits" && r.value == 41));
+    assert!(snap.rows.iter().any(|r| r.name == "c.fill" && r.kind == "hist_count" && r.value == 6));
+}
+
+#[test]
+fn failover_trace_contains_controller_migration_span() {
+    let ex = toy_exploration();
+    let sys = obs_sys();
+    let sc = Scenario::failover(24_000, 300.0);
+    let cfg = SimCfg { seed: 7, ..Default::default() };
+    let cmp = compare_adaptive(&ex, &sys, &sc, &cfg, &acfg(), 1);
+    assert!(!cmp.adaptive.migrations.is_empty(), "failover preset produced no migration");
+    let reg = sys.obs.registry().unwrap();
+    assert_eq!(reg.counter("adaptive.migrations").get(), cmp.adaptive.migrations.len() as u64);
+    let doc = chrome_trace(reg);
+    let events = doc.get("traceEvents").as_arr().unwrap();
+    // The migration window rides the virtual-clock track (pid 2), on
+    // the reserved controller lane 0, named after the cutover.
+    let migration_spans: Vec<_> = events
+        .iter()
+        .filter(|e| {
+            e.get("ph").as_str() == Some("X")
+                && e.get("pid").as_u64() == Some(2)
+                && e.get("tid").as_u64() == Some(0)
+                && e.get("name").as_str().map_or(false, |n| n.starts_with("migrate "))
+        })
+        .collect();
+    assert_eq!(
+        migration_spans.len(),
+        cmp.adaptive.migrations.len(),
+        "one controller span per migration"
+    );
+    for s in &migration_spans {
+        assert!(s.get("dur").as_f64().unwrap() > 0.0, "migration span has no width");
+        assert!(s.get("name").as_str().unwrap().contains("->"));
+    }
+}

@@ -18,17 +18,24 @@
 //!     and is bit-identical across worker counts;
 //!   * a live observability registry (counters + spans) leaves the
 //!     1M-request storm's fingerprint — and therefore its goodput —
-//!     bit-identical to the bare run.
+//!     bit-identical to the bare run;
+//!   * on the 16-node cluster preset, jointly co-scheduled 2-tenant
+//!     serving achieves strictly higher aggregate goodput than the best
+//!     sequential per-tenant plans (each model taking the cluster
+//!     exclusively, back to back), and the multi-tenant ranking is
+//!     bit-identical across worker counts.
 //! Emits machine-readable `BENCH_sim.json`, `BENCH_cluster.json`
 //! (goodput scaling curve over the 16/32/64-node presets),
-//! `BENCH_adaptive.json` (adaptive-vs-static-vs-oracle goodput) and
+//! `BENCH_adaptive.json` (adaptive-vs-static-vs-oracle goodput),
 //! `BENCH_obs.json` (instrumentation overhead) plus a sample Perfetto
-//! trace `BENCH_obs_trace.json` from an instrumented failover run.
+//! trace `BENCH_obs_trace.json` from an instrumented failover run, and
+//! `BENCH_multitenant.json` (joint-vs-sequential goodput + fairness
+//! sweep).
 
 #[path = "common/mod.rs"]
 mod common;
 
-use partir::config::SystemConfig;
+use partir::config::{FairnessPolicy, SystemConfig, TenantSet, TenantSpec};
 use partir::coordinator::BatchPolicy;
 use partir::explorer::{CandidateMetrics, Exploration, ExploreRequest};
 use partir::hw::{presets::CLUSTER_SIZES, CostCache};
@@ -503,6 +510,161 @@ fn main() {
             ("storm_metric_rows", Json::from(storm_rows)),
             ("trace_spans", Json::from(treg.span_count())),
             ("trace_migrations", Json::from(trace_migrations)),
+        ]),
+    );
+
+    // -----------------------------------------------------------------
+    // Multi-tenant co-scheduling: joint shared-cluster serving vs the
+    // best sequential per-tenant plans (acceptance)
+    // -----------------------------------------------------------------
+    common::section("multi-tenant co-scheduling on the 16-node cluster (acceptance)");
+    let mt_requests = if fast { 50_000 } else { 200_000 };
+    let mut msys = SystemConfig::cluster(16);
+    msys.search.victory = 20;
+    msys.search.max_samples = 200;
+    msys.jobs = default_jobs();
+    let mcfg = SimCfg::from_system(&msys);
+    let pair = ["resnet50", "squeezenet1_1"];
+    // Solo references: each tenant's best full-cluster plan — also the
+    // strongest possible "one model at a time" contender.
+    let mut solo: Vec<CandidateMetrics> = Vec::new();
+    for model in pair {
+        let gm = zoo::build(model).unwrap();
+        let sex = ExploreRequest::chain().with_cache(Arc::clone(&shared)).run(&gm, &msys);
+        let best = sex
+            .candidates
+            .iter()
+            .filter(|c| c.feasible())
+            .max_by(|a, b| a.throughput.partial_cmp(&b.throughput).unwrap())
+            .cloned()
+            .expect("a feasible solo plan");
+        println!("solo {model:<16} '{}' analytic {:.1} i/s", best.label, best.throughput);
+        solo.push(best);
+    }
+    // Offered rates leave the shared cluster room to carry both models
+    // at once (~40% of each solo capacity).
+    let rates: Vec<f64> = solo.iter().map(|c| 0.4 * c.throughput).collect();
+    let set = TenantSet {
+        tenants: vec![
+            TenantSpec { rate: rates[0], ..TenantSpec::new(pair[0]) },
+            TenantSpec { rate: rates[1], priority: 2.0, ..TenantSpec::new(pair[1]) },
+        ],
+        ..TenantSet::default()
+    };
+
+    // Sequential baseline: each tenant's best plan serves its whole
+    // stream with the cluster to itself, back to back. Aggregate goodput
+    // therefore divides the same total in-SLO completions by the summed
+    // occupancy — the cost of not sharing.
+    let quiet = Scenario::steady(mt_requests, rates.iter().sum());
+    let mut seq_inslo = 0.0f64;
+    let mut seq_wall = 0.0f64;
+    for (i, best) in solo.iter().enumerate() {
+        let traffic = vec![sim::TenantTraffic {
+            spec: set.tenants[i].clone(),
+            deployment: Deployment::from_candidate(best, &msys),
+            requests: mt_requests,
+        }];
+        let r = sim::simulate_tenants(&traffic, FairnessPolicy::Fifo, &mcfg, &quiet, true);
+        seq_inslo += r.tenants[0].goodput * r.wall_s;
+        seq_wall += r.wall_s;
+    }
+    let seq_goodput = seq_inslo / seq_wall;
+    println!(
+        "sequential baseline: {:.1} i/s aggregate goodput over {:.1}s total occupancy",
+        seq_goodput, seq_wall
+    );
+
+    // Joint: co-explore both tenants over the shared inventory, then
+    // serve every joint candidate through the shared-bank engine.
+    let t5 = Instant::now();
+    let jex = ExploreRequest::chain().tenants(set.clone()).run_tenants(&msys);
+    let joint_explore_s = t5.elapsed().as_secs_f64();
+    println!(
+        "joint exploration: {} candidates ({} feasible) in {}",
+        jex.candidates.len(),
+        jex.candidates.iter().filter(|c| c.feasible()).count(),
+        common::fmt(joint_explore_s),
+    );
+    let mt_jobs = default_jobs();
+    let ranked = sim::evaluate_tenants(&jex, &msys, mt_requests, &quiet, &mcfg, mt_jobs);
+    let ranked_serial = sim::evaluate_tenants(&jex, &msys, mt_requests, &quiet, &mcfg, 1);
+    let digest = |r: &[sim::RankedJoint]| -> Vec<(usize, u64)> {
+        r.iter().map(|x| (x.index, x.report.fingerprint())).collect()
+    };
+    assert_eq!(
+        digest(&ranked),
+        digest(&ranked_serial),
+        "multi-tenant ranking changed under --jobs {mt_jobs}"
+    );
+    let bestj = ranked.first().expect("a joint candidate");
+    print!("{}", sim::render_tenant_ranking(&ranked));
+    print!("{}", bestj.report.render());
+    let joint_gain = 100.0 * (bestj.aggregate_goodput - seq_goodput) / seq_goodput;
+    println!(
+        "joint '{}' {:.1} i/s vs sequential {:.1} i/s ({joint_gain:+.1}%)",
+        bestj.label, bestj.aggregate_goodput, seq_goodput
+    );
+    assert!(
+        bestj.aggregate_goodput > seq_goodput,
+        "joint co-scheduling ({:.1} i/s) did not beat sequential per-tenant serving ({:.1} i/s)",
+        bestj.aggregate_goodput,
+        seq_goodput
+    );
+
+    // Fairness sweep over the winning joint candidate.
+    let cand = &jex.candidates[bestj.index];
+    println!("{:>12} {:>13} {:>10} {:>10}", "policy", "agg goodput", "p99 a", "p99 b");
+    let mut fair_rows = Vec::new();
+    for policy in [
+        FairnessPolicy::Fifo,
+        FairnessPolicy::PriorityWeighted,
+        FairnessPolicy::TenantRoundRobin,
+    ] {
+        let traffic: Vec<sim::TenantTraffic> = cand
+            .tenants
+            .iter()
+            .map(|t| sim::TenantTraffic {
+                spec: t.spec.clone(),
+                deployment: Deployment::from_candidate(&t.metrics, &msys),
+                requests: mt_requests,
+            })
+            .collect();
+        let r = sim::simulate_tenants(&traffic, policy, &mcfg, &quiet, true);
+        println!(
+            "{:>12} {:>9.1} i/s {:>10} {:>10}",
+            policy.name(),
+            r.aggregate_goodput(),
+            common::fmt(r.tenants[0].p99_s),
+            common::fmt(r.tenants[1].p99_s),
+        );
+        fair_rows.push(obj(vec![
+            ("policy", Json::from(policy.name())),
+            ("aggregate_goodput", Json::from(r.aggregate_goodput())),
+            ("p99_a_s", Json::from(r.tenants[0].p99_s)),
+            ("p99_b_s", Json::from(r.tenants[1].p99_s)),
+            ("fingerprint", Json::from(format!("{:016x}", r.fingerprint()))),
+        ]));
+    }
+
+    common::write_bench_json(
+        "multitenant",
+        &obj(vec![
+            ("bench", Json::from("serving/multitenant")),
+            ("fast_mode", Json::from(fast)),
+            ("nodes", Json::from(16usize)),
+            ("requests_per_tenant", Json::from(mt_requests)),
+            ("tenants", Json::Arr(vec![Json::from(pair[0]), Json::from(pair[1])])),
+            ("rates", Json::Arr(rates.iter().map(|&r| Json::from(r)).collect())),
+            ("solo_a_label", Json::from(solo[0].label.as_str())),
+            ("solo_b_label", Json::from(solo[1].label.as_str())),
+            ("sequential_goodput", Json::from(seq_goodput)),
+            ("joint_label", Json::from(bestj.label.as_str())),
+            ("joint_goodput", Json::from(bestj.aggregate_goodput)),
+            ("joint_gain_pct", Json::from(joint_gain)),
+            ("joint_explore_s", Json::from(joint_explore_s)),
+            ("joint_candidates", Json::from(jex.candidates.len())),
+            ("fairness_sweep", Json::Arr(fair_rows)),
         ]),
     );
 }

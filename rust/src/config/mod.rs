@@ -139,6 +139,9 @@ pub struct ServingCfg {
     pub batch_wait_s: f64,
     /// Bounded per-stage queue depth.
     pub queue_depth: usize,
+    /// Tenant-selection policy for shared multi-tenant server banks
+    /// (`sim::simulate_tenants`). Single-tenant serving never reads it.
+    pub fairness: FairnessPolicy,
 }
 
 impl Default for ServingCfg {
@@ -151,7 +154,135 @@ impl Default for ServingCfg {
             max_batch: batch.max_batch,
             batch_wait_s: batch.max_wait.as_secs_f64(),
             queue_depth: 64,
+            fairness: FairnessPolicy::default(),
         }
+    }
+}
+
+/// How a shared multi-tenant server bank picks the next tenant queue to
+/// serve when a server frees up (`sim::simulate_tenants`). Batches are
+/// always single-tenant; the policy only chooses *whose* queue forms
+/// the next batch, so every policy is deterministic and work-conserving
+/// (a server never idles while any tenant has queued work).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FairnessPolicy {
+    /// Serve the tenant whose head-of-queue request arrived earliest
+    /// (global FIFO across tenants; ties to the lowest tenant index).
+    #[default]
+    Fifo,
+    /// Serve the non-empty queue of the highest-priority tenant
+    /// (`TenantSpec::priority`; ties broken as FIFO). Strict priority:
+    /// a high-priority tenant can starve a low-priority one.
+    PriorityWeighted,
+    /// Cycle a per-bank cursor over tenants, skipping empty queues —
+    /// equal batch slots regardless of priority or arrival order.
+    TenantRoundRobin,
+}
+
+impl FairnessPolicy {
+    /// Parse a CLI/TOML spelling (`fifo` | `priority` | `round-robin`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fifo" => Some(FairnessPolicy::Fifo),
+            "priority" | "priority-weighted" => Some(FairnessPolicy::PriorityWeighted),
+            "round-robin" | "rr" | "tenant-round-robin" => Some(FairnessPolicy::TenantRoundRobin),
+            _ => None,
+        }
+    }
+
+    /// Canonical spelling (round-trips through [`Self::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            FairnessPolicy::Fifo => "fifo",
+            FairnessPolicy::PriorityWeighted => "priority",
+            FairnessPolicy::TenantRoundRobin => "round-robin",
+        }
+    }
+}
+
+/// One tenant of a multi-tenant co-scheduling problem: a zoo model plus
+/// its offered load, deadline and scheduling weight. Parsed from
+/// `[[tenants]]` TOML tables or built from `--tenants` CLI flags.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    /// Zoo model name (accepted by `zoo::build`); doubles as the
+    /// tenant's display name.
+    pub model: String,
+    /// Offered arrival rate (requests/s) — the tenant's Definition-4
+    /// throughput requirement in the joint evaluator and its Poisson
+    /// rate in the multi-tenant simulator.
+    pub rate: f64,
+    /// Optional end-to-end deadline (s); completions beyond it count
+    /// against the tenant's goodput.
+    pub slo_s: Option<f64>,
+    /// Scheduling weight for [`FairnessPolicy::PriorityWeighted`] and
+    /// the joint favorite selection (higher = more important).
+    pub priority: f64,
+}
+
+impl TenantSpec {
+    /// A tenant with the default load profile: 50 req/s, no deadline,
+    /// priority 1.
+    pub fn new(model: &str) -> Self {
+        TenantSpec { model: model.to_string(), rate: 50.0, slo_s: None, priority: 1.0 }
+    }
+}
+
+/// The tenant roster of one joint exploration/serving problem, plus the
+/// shared-bank fairness policy. Accepted by
+/// `explorer::ExploreRequest::tenants` and `sim::simulate_tenants`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TenantSet {
+    /// The tenants, in declaration order (order is part of the
+    /// determinism contract: genome layout, RNG streams and reports all
+    /// index tenants by this order).
+    pub tenants: Vec<TenantSpec>,
+    /// Tenant-selection policy for shared server banks.
+    pub fairness: FairnessPolicy,
+}
+
+impl TenantSet {
+    /// Build from a comma-separated model list (`--tenants a,b,c`) with
+    /// default per-tenant load profiles.
+    pub fn from_names(csv: &str) -> Result<Self, String> {
+        let tenants: Vec<TenantSpec> = csv
+            .split(',')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(TenantSpec::new)
+            .collect();
+        let set = TenantSet { tenants, fairness: FairnessPolicy::default() };
+        set.validate()?;
+        Ok(set)
+    }
+
+    /// Structural validation: at least one tenant, positive finite
+    /// rates/priorities, positive deadlines. Model names are resolved
+    /// later (`zoo::build`), where the error can list the catalog.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.tenants.is_empty() {
+            return Err("tenant set is empty".into());
+        }
+        for (i, t) in self.tenants.iter().enumerate() {
+            if t.model.is_empty() {
+                return Err(format!("tenant {i}: empty model name"));
+            }
+            if !(t.rate > 0.0 && t.rate.is_finite()) {
+                return Err(format!("tenant {i} ({}): rate {} must be positive", t.model, t.rate));
+            }
+            if !(t.priority > 0.0 && t.priority.is_finite()) {
+                return Err(format!(
+                    "tenant {i} ({}): priority {} must be positive",
+                    t.model, t.priority
+                ));
+            }
+            if let Some(s) = t.slo_s {
+                if !(s > 0.0 && s.is_finite()) {
+                    return Err(format!("tenant {i} ({}): slo {s} must be positive", t.model));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -258,6 +389,12 @@ pub struct SystemConfig {
     /// reproduces the unreplicated explorer bit-for-bit; `Some` opens
     /// the replication axis of the genome (see [`ReplicationCfg`]).
     pub replication: Option<ReplicationCfg>,
+    /// Multi-tenant roster (`[[tenants]]` TOML tables / `--tenants`).
+    /// Empty (the default) keeps every request single-tenant and
+    /// bit-identical to the pre-tenant code paths; non-empty rosters
+    /// are consumed by `ExploreRequest::tenants` via
+    /// `SystemConfig::tenant_set`.
+    pub tenants: Vec<TenantSpec>,
     /// Seed for every stochastic component of the DSE.
     pub seed: u64,
     /// Observability sinks and (when active) the live metrics/span
@@ -305,6 +442,7 @@ impl SystemConfig {
             adaptive: AdaptiveCfg::default(),
             cache_dir: None,
             replication: None,
+            tenants: Vec::new(),
             seed: DSE_SEED,
             obs: Default::default(),
             jobs: 1,
@@ -355,6 +493,13 @@ impl SystemConfig {
             Metric::Throughput,
         ];
         cfg
+    }
+
+    /// The configured tenant roster paired with the serving-section
+    /// fairness policy — what `ExploreRequest::tenants` and the
+    /// multi-tenant simulator consume. Empty roster = single-tenant.
+    pub fn tenant_set(&self) -> TenantSet {
+        TenantSet { tenants: self.tenants.clone(), fairness: self.serving.fairness }
     }
 
     /// Load from a TOML file; unspecified sections fall back to the
@@ -462,6 +607,10 @@ impl SystemConfig {
                 }
                 cfg.serving.queue_depth = d;
             }
+            if let Some(f) = s.get("fairness").as_str() {
+                cfg.serving.fairness = FairnessPolicy::parse(f)
+                    .ok_or_else(|| format!("bad serving.fairness '{f}' (fifo|priority|round-robin)"))?;
+            }
         }
         let a = doc.get("adaptive");
         if let Json::Obj(_) = a {
@@ -504,6 +653,26 @@ impl SystemConfig {
             let repl = ReplicationCfg { inventory };
             repl.validate(cfg.platforms.len())?;
             cfg.replication = Some(repl);
+        }
+        if let Some(ts) = doc.get("tenants").as_arr() {
+            cfg.tenants = ts
+                .iter()
+                .enumerate()
+                .map(|(i, t)| {
+                    let model = t
+                        .get("model")
+                        .as_str()
+                        .ok_or_else(|| format!("tenant {i}: missing 'model'"))?
+                        .to_string();
+                    Ok(TenantSpec {
+                        model,
+                        rate: t.get("rate").as_f64().unwrap_or(50.0),
+                        slo_s: t.get("slo_ms").as_f64().map(|ms| ms * 1e-3),
+                        priority: t.get("priority").as_f64().unwrap_or(1.0),
+                    })
+                })
+                .collect::<Result<Vec<_>, String>>()?;
+            cfg.tenant_set().validate()?;
         }
         let o = doc.get("obs");
         if let Json::Obj(_) = o {
@@ -810,6 +979,63 @@ weight = 2.0
         }
         assert_eq!(ReplicationCfg::uniform(3, 4).inventory, vec![4, 4, 4]);
         assert!(ReplicationCfg::uniform(2, 0).inventory.iter().all(|&r| r == 1));
+    }
+
+    #[test]
+    fn tenants_section_parses_and_validates() {
+        let doc = tomlite::parse(
+            "[serving]\nfairness = \"priority\"\n\n[[tenants]]\nmodel = \"squeezenet1_1\"\nrate = 120.0\nslo_ms = 40.0\npriority = 2.0\n\n[[tenants]]\nmodel = \"tiny_cnn\"\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        let set = cfg.tenant_set();
+        assert_eq!(set.fairness, FairnessPolicy::PriorityWeighted);
+        assert_eq!(set.tenants.len(), 2);
+        assert_eq!(set.tenants[0].model, "squeezenet1_1");
+        assert_eq!(set.tenants[0].rate, 120.0);
+        assert_eq!(set.tenants[0].slo_s, Some(0.04));
+        assert_eq!(set.tenants[0].priority, 2.0);
+        // Second tenant takes the default load profile.
+        assert_eq!(set.tenants[1], TenantSpec::new("tiny_cnn"));
+        // Default system: empty roster, single-tenant serving.
+        assert!(SystemConfig::paper_two_platform().tenants.is_empty());
+
+        for bad in [
+            "[[tenants]]\nrate = 5.0\n",
+            "[[tenants]]\nmodel = \"tiny_cnn\"\nrate = -1.0\n",
+            "[[tenants]]\nmodel = \"tiny_cnn\"\nslo_ms = 0.0\n",
+            "[[tenants]]\nmodel = \"tiny_cnn\"\npriority = 0.0\n",
+            "[serving]\nfairness = \"lottery\"\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn fairness_policy_parse_roundtrip() {
+        for p in [
+            FairnessPolicy::Fifo,
+            FairnessPolicy::PriorityWeighted,
+            FairnessPolicy::TenantRoundRobin,
+        ] {
+            assert_eq!(FairnessPolicy::parse(p.name()), Some(p));
+        }
+        assert_eq!(FairnessPolicy::parse("rr"), Some(FairnessPolicy::TenantRoundRobin));
+        assert_eq!(FairnessPolicy::parse("lottery"), None);
+        assert_eq!(FairnessPolicy::default(), FairnessPolicy::Fifo);
+    }
+
+    #[test]
+    fn tenant_set_from_names_and_validation() {
+        let set = TenantSet::from_names("squeezenet1_1, tiny_cnn").unwrap();
+        assert_eq!(set.tenants.len(), 2);
+        assert_eq!(set.tenants[1].model, "tiny_cnn");
+        assert!(set.validate().is_ok());
+        assert!(TenantSet::from_names("").is_err());
+        let mut bad = set.clone();
+        bad.tenants[0].rate = f64::INFINITY;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

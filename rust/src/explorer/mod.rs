@@ -31,6 +31,7 @@ pub mod reference;
 mod request;
 mod scratch;
 mod stagecache;
+mod tenants;
 
 use crate::accuracy::{self, ModelAccuracy};
 use crate::config::{Metric, SystemConfig};
@@ -53,6 +54,7 @@ pub use dag::{sweep_dag_front, SweepStats};
 pub use request::{ExploreMode, ExploreRequest, Explorer};
 pub use scratch::EvalScratch;
 pub use stagecache::{StageCache, StageCost};
+pub use tenants::{JointCandidate, JointExploration, TenantOutcome};
 
 /// Key-domain tag of chain interior-segment memory entries in the
 /// stage cache (only `memory_bytes` is meaningful for these).

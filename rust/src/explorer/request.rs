@@ -48,8 +48,8 @@
 //! assert!(ex.favorite.is_some());
 //! ```
 
-use super::{dag, multi, Exploration};
-use crate::config::{ReplicationCfg, SystemConfig};
+use super::{dag, multi, tenants, Exploration, JointExploration};
+use crate::config::{ReplicationCfg, SystemConfig, TenantSet};
 use crate::graph::Graph;
 use crate::hw::CostCache;
 use std::sync::Arc;
@@ -82,6 +82,7 @@ pub struct ExploreRequest {
     cache: Option<Arc<CostCache>>,
     jobs: Option<usize>,
     replication: Option<ReplicationCfg>,
+    tenants: Option<TenantSet>,
 }
 
 impl ExploreRequest {
@@ -125,6 +126,41 @@ impl ExploreRequest {
     pub fn replication(mut self, cfg: ReplicationCfg) -> Self {
         self.replication = Some(cfg);
         self
+    }
+
+    /// Co-schedule a multi-tenant roster instead of a single model
+    /// (overrides the `[[tenants]]` section of the [`SystemConfig`] if
+    /// both are set). Only [`ExploreRequest::run_tenants`] reads it —
+    /// [`ExploreRequest::run`] / [`ExploreRequest::run_many`] stay
+    /// single-tenant and bit-identical to pre-tenant releases.
+    pub fn tenants(mut self, set: TenantSet) -> Self {
+        self.tenants = Some(set);
+        self
+    }
+
+    /// Execute the joint multi-tenant exploration: every roster model's
+    /// layers are co-assigned to the shared platforms under additive
+    /// memory, joint inventory/link capacity and per-tenant
+    /// Definition-4 rate requirements (see [`super::tenants`]). The
+    /// roster comes from [`ExploreRequest::tenants`], falling back to
+    /// `sys.tenant_set()`.
+    ///
+    /// # Panics
+    ///
+    /// Panics when the effective roster is empty or invalid, a tenant
+    /// model is not in the zoo, or the system/replication config is
+    /// invalid — the same contract as [`Explorer::run`].
+    pub fn run_tenants(&self, sys: &SystemConfig) -> JointExploration {
+        let set = self.tenants.clone().unwrap_or_else(|| sys.tenant_set());
+        let mut effective = sys.clone();
+        if let Some(jobs) = self.jobs {
+            effective.jobs = jobs;
+        }
+        if self.replication.is_some() {
+            effective.replication = self.replication.clone();
+        }
+        let cache = self.cache.clone().unwrap_or_else(|| Arc::new(CostCache::new()));
+        tenants::explore_tenants_impl(&set, &effective, cache)
     }
 
     /// Execute for one model. See [`Explorer::run`].

@@ -1,0 +1,660 @@
+//! Joint multi-tenant exploration: co-schedule N zoo models onto one
+//! shared platform chain (§ beyond the paper — the multi-application
+//! setting its robotics/AD motivation actually deploys).
+//!
+//! The genome concatenates every tenant's chain-cut genes (`k - 1` per
+//! tenant, exactly the single-tenant [`super::multi`] layout), followed
+//! — on replicated systems — by every tenant's per-platform
+//! replica-count genes. Each tenant's slice is evaluated by its own
+//! [`PlanEvaluator`] (all evaluators share one layer-cost cache), and
+//! the *joint* feasibility terms are layered on top:
+//!
+//! * **additive per-platform memory** — on an unreplicated system all
+//!   tenants co-reside on each platform node, so Definition 3 becomes
+//!   `Σ_t mem(t, j) ≤ cap(j)` per platform `j`;
+//! * **joint inventory** — on a replicated system tenants claim
+//!   *disjoint* node subsets, so `Σ_t replicas(t, j) ≤ inventory(j)`
+//!   (per-node Definition 3 stays inside each tenant's evaluation);
+//! * **compute contention** — on a shared (unreplicated) node, tenant
+//!   `t`'s attainable service rate on platform `j` shrinks by the
+//!   utilization the *other* tenants demand:
+//!   `eff(t) = min_j (1 − Σ_{s≠t} rate(s)·L(s,j)) / L(t,j)`, floored at
+//!   0 and capped by the tenant's own Definition-4 throughput;
+//! * **shared wire** — the chain's physical link carries every tenant's
+//!   cut traffic: `Σ_t required_bps(link_bytes(t), rate(t))` must fit
+//!   the link bandwidth;
+//! * **per-tenant Definition-4 requirement** — `eff(t) < rate(t)` is a
+//!   constraint violation, per tenant.
+//!
+//! Objectives (minimized): worst-tenant latency, total energy, and
+//! negated worst-tenant headroom `min_t eff(t)/rate(t)`. All
+//! single-tenant entry points are untouched — an empty roster never
+//! reaches this module, so pre-tenant results stay bit-identical.
+
+use super::dag::label_fp;
+use super::{CandidateMetrics, EvalScratch, ExplorationTiming, LeanMetrics, PlanEvaluator};
+use crate::config::{SystemConfig, TenantSet, TenantSpec};
+use crate::graph::Graph;
+use crate::hw::CostCache;
+use crate::link::LinkModel;
+use crate::nsga2::{self, Eval, Nsga2Cfg, Problem};
+use crate::util::hash::Fnv64;
+use std::sync::Arc;
+use std::time::Instant;
+
+/// One tenant's slice of a [`JointCandidate`]: its spec, its surfaced
+/// single-tenant metrics, and its contention-adjusted attainable rate.
+#[derive(Debug, Clone)]
+pub struct TenantOutcome {
+    /// The tenant this outcome belongs to.
+    pub spec: TenantSpec,
+    /// The tenant's own schedule metrics (plan included — consumed by
+    /// `sim::simulate_tenants` exactly like a single-tenant candidate).
+    pub metrics: CandidateMetrics,
+    /// Attainable steady-state rate (req/s) after shared-platform
+    /// contention — `≤ metrics.throughput`, and required to be
+    /// `≥ spec.rate` for joint feasibility.
+    pub effective_rate: f64,
+}
+
+/// One point of the joint front: every tenant's schedule plus the
+/// co-scheduling aggregates.
+#[derive(Debug, Clone)]
+pub struct JointCandidate {
+    /// Per-tenant outcomes, in roster order.
+    pub tenants: Vec<TenantOutcome>,
+    /// Worst-tenant end-to-end latency (s).
+    pub latency_s: f64,
+    /// Total energy per one inference of *every* tenant (J).
+    pub energy_j: f64,
+    /// Worst-tenant headroom `min_t effective_rate(t) / rate(t)`
+    /// (≥ 1 ⇔ every tenant meets its offered load).
+    pub headroom: f64,
+    /// Joint constraint-violation magnitude; 0 = feasible.
+    pub violation: f64,
+    /// Human-readable description of each violated joint constraint.
+    pub violations: Vec<String>,
+    /// Display label: `model: schedule` joined with ` | `.
+    pub label: String,
+}
+
+impl JointCandidate {
+    /// True when every per-tenant and joint constraint holds.
+    pub fn feasible(&self) -> bool {
+        self.violation == 0.0
+    }
+}
+
+/// Result of a joint multi-tenant exploration.
+#[derive(Debug, Clone)]
+pub struct JointExploration {
+    /// The roster explored (order = genome/report order).
+    pub set: TenantSet,
+    /// Deduplicated joint front (NSGA-II survivors).
+    pub candidates: Vec<JointCandidate>,
+    /// Priority-weighted favorite: the feasible candidate maximizing
+    /// `Σ_t priority(t) · min(effective_rate(t), rate(t))`.
+    pub favorite: Option<usize>,
+    /// Wall-time breakdown (shared shape with single-tenant runs).
+    pub timing: ExplorationTiming,
+}
+
+impl JointExploration {
+    /// Stable FNV-1a digest over every externally observable quantity —
+    /// the determinism-matrix tests compare this across `--jobs` values
+    /// and repeat runs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_u64(self.candidates.len() as u64);
+        for c in &self.candidates {
+            h.write_bytes(c.label.as_bytes());
+            h.write_f64(c.latency_s);
+            h.write_f64(c.energy_j);
+            h.write_f64(c.headroom);
+            h.write_f64(c.violation);
+            for t in &c.tenants {
+                h.write_f64(t.effective_rate);
+                h.write_f64(t.metrics.latency_s);
+                h.write_f64(t.metrics.energy_j);
+                h.write_f64(t.metrics.throughput);
+                h.write_u64(t.metrics.partitions as u64);
+                for &p in &t.metrics.positions {
+                    h.write_usize(p);
+                }
+            }
+        }
+        h.write_u64(self.favorite.map_or(u64::MAX, |f| f as u64));
+        h.finish()
+    }
+
+    /// Indices worth serving: feasible candidates (or, if none are, the
+    /// whole front), in candidate order.
+    pub fn serving_candidates(&self) -> Vec<usize> {
+        let feasible: Vec<usize> =
+            (0..self.candidates.len()).filter(|&i| self.candidates[i].feasible()).collect();
+        if feasible.is_empty() {
+            (0..self.candidates.len()).collect()
+        } else {
+            feasible
+        }
+    }
+}
+
+/// Joint feasibility terms computed identically on the lean (GA) and
+/// surfaced (materialization) paths: per-tenant effective rates plus
+/// the joint violation magnitude.
+struct JointTerms {
+    eff: Vec<f64>,
+    violation: f64,
+}
+
+/// Compute the cross-tenant terms from per-tenant evaluation state.
+/// `per[t]` must hold tenant `t`'s scratch as left by its chain eval
+/// (per-platform `segs`/`seg_latency`/`memory_bytes`), and `leans[t]`
+/// its lean metrics. `surface` collects human-readable messages.
+#[allow(clippy::too_many_arguments)]
+fn joint_terms(
+    specs: &[TenantSpec],
+    per: &[EvalScratch],
+    leans: &[LeanMetrics],
+    caps: &[u64],
+    inventory: Option<&[usize]>,
+    replicas_of: impl Fn(usize, usize) -> usize,
+    link: &LinkModel,
+    mut surface: Option<&mut Vec<String>>,
+) -> JointTerms {
+    let t_count = specs.len();
+    let k = caps.len();
+    let mut violation = 0.0f64;
+
+    // Additive per-platform memory (shared node) or joint inventory
+    // (disjoint node subsets), depending on the replication axis.
+    for j in 0..k {
+        match inventory {
+            None => {
+                let total: u64 = per.iter().map(|s| s.memory_bytes[j]).sum();
+                if total > caps[j] {
+                    if let Some(v) = surface.as_deref_mut() {
+                        v.push(format!(
+                            "platform {j}: tenant memory sum {total} > {}",
+                            caps[j]
+                        ));
+                    }
+                    violation += (total - caps[j]) as f64 / caps[j] as f64;
+                }
+            }
+            Some(inv) => {
+                let claimed: usize = (0..t_count)
+                    .filter(|&t| !per[t].segs[j].is_empty())
+                    .map(|t| replicas_of(t, j))
+                    .sum();
+                if claimed > inv[j] {
+                    if let Some(v) = surface.as_deref_mut() {
+                        v.push(format!(
+                            "platform {j}: tenant replicas {claimed} > inventory {}",
+                            inv[j]
+                        ));
+                    }
+                    violation += (claimed - inv[j]) as f64 / inv[j] as f64;
+                }
+            }
+        }
+    }
+
+    // Shared wire: every tenant's cut traffic rides the same link.
+    let req_bps: f64 = (0..t_count)
+        .map(|t| LinkModel::required_bps(leans[t].link_bytes, specs[t].rate))
+        .sum();
+    if req_bps > link.bandwidth_bps {
+        if let Some(v) = surface.as_deref_mut() {
+            v.push(format!(
+                "joint link demand {:.1} Mbit/s > {:.1}",
+                req_bps / 1e6,
+                link.bandwidth_bps / 1e6
+            ));
+        }
+        violation += (req_bps - link.bandwidth_bps) / link.bandwidth_bps;
+    }
+
+    // Contention-adjusted per-tenant rates. With disjoint replica
+    // claims (inventory mode) there is no cross-tenant compute
+    // contention; on a shared node the other tenants' demanded
+    // utilization shrinks what is left for tenant t.
+    let mut eff = Vec::with_capacity(t_count);
+    for t in 0..t_count {
+        let mut e = leans[t].throughput;
+        if inventory.is_none() {
+            for j in 0..k {
+                let l_tj = per[t].seg_latency[j];
+                if per[t].segs[j].is_empty() || l_tj <= 0.0 {
+                    continue;
+                }
+                let others: f64 = (0..t_count)
+                    .filter(|&s| s != t)
+                    .map(|s| {
+                        if per[s].segs[j].is_empty() {
+                            0.0
+                        } else {
+                            specs[s].rate * per[s].seg_latency[j]
+                        }
+                    })
+                    .sum();
+                e = e.min((1.0 - others).max(0.0) / l_tj);
+            }
+        }
+        if e < specs[t].rate {
+            if let Some(v) = surface.as_deref_mut() {
+                v.push(format!(
+                    "tenant {} rate {:.2} < required {:.2}",
+                    specs[t].model, e, specs[t].rate
+                ));
+            }
+            violation += (specs[t].rate - e) / specs[t].rate;
+        }
+        eff.push(e);
+    }
+    JointTerms { eff, violation }
+}
+
+/// Per-worker scratch of the joint GA: one [`EvalScratch`] per tenant
+/// plus the decode buffers.
+pub struct JointScratch {
+    per: Vec<EvalScratch>,
+    leans: Vec<LeanMetrics>,
+    positions: Vec<usize>,
+    replicas: Vec<usize>,
+}
+
+struct TenantProblem<'a, 'b> {
+    evs: &'a [PlanEvaluator<'b>],
+    specs: &'a [TenantSpec],
+    /// Cut genes per tenant (`platforms - 1`).
+    num_cuts: usize,
+    /// Schedule length per tenant (cut-gene bound).
+    lens: Vec<usize>,
+    /// Per-platform memory caps (additive check).
+    caps: Vec<u64>,
+    inventory: Option<Vec<usize>>,
+    link: LinkModel,
+}
+
+impl TenantProblem<'_, '_> {
+    fn t_count(&self) -> usize {
+        self.specs.len()
+    }
+
+    fn k(&self) -> usize {
+        self.caps.len()
+    }
+
+    /// Start of the replica-gene block (end of all cut genes).
+    fn rep_base(&self) -> usize {
+        self.t_count() * self.num_cuts
+    }
+}
+
+impl Problem for TenantProblem<'_, '_> {
+    type Scratch = JointScratch;
+
+    fn num_vars(&self) -> usize {
+        self.rep_base() + self.inventory.as_ref().map_or(0, |_| self.t_count() * self.k())
+    }
+
+    fn num_objectives(&self) -> usize {
+        3
+    }
+
+    fn bounds(&self, i: usize) -> (i64, i64) {
+        if i < self.rep_base() {
+            let t = i / self.num_cuts;
+            (0, (self.lens[t] - 1) as i64)
+        } else {
+            let j = (i - self.rep_base()) % self.k();
+            (1, self.inventory.as_ref().expect("replica gene without inventory")[j] as i64)
+        }
+    }
+
+    fn repair(&self, vars: &mut [i64]) {
+        for t in 0..self.t_count() {
+            vars[t * self.num_cuts..(t + 1) * self.num_cuts].sort_unstable();
+        }
+    }
+
+    fn make_scratch(&self) -> JointScratch {
+        JointScratch {
+            per: (0..self.t_count()).map(|_| EvalScratch::new()).collect(),
+            leans: Vec::with_capacity(self.t_count()),
+            positions: Vec::with_capacity(self.num_cuts),
+            replicas: Vec::with_capacity(self.k()),
+        }
+    }
+
+    fn evaluate(&self, vars: &[i64], scratch: &mut JointScratch) -> Eval {
+        let t_count = self.t_count();
+        let k = self.k();
+        scratch.leans.clear();
+        let mut violation = 0.0f64;
+        let mut lat_max = 0.0f64;
+        let mut energy = 0.0f64;
+        for t in 0..t_count {
+            let cut_vars = &vars[t * self.num_cuts..(t + 1) * self.num_cuts];
+            scratch.positions.clear();
+            scratch.positions.extend(cut_vars.iter().map(|&v| v as usize));
+            let m = if self.inventory.is_some() {
+                let base = self.rep_base() + t * k;
+                scratch.replicas.clear();
+                scratch.replicas.extend(vars[base..base + k].iter().map(|&v| v as usize));
+                self.evs[t].evaluate_replicated_lean(
+                    &scratch.positions,
+                    &scratch.replicas,
+                    &mut scratch.per[t],
+                )
+            } else {
+                self.evs[t].evaluate_lean(&scratch.positions, &mut scratch.per[t])
+            };
+            violation += m.violation;
+            lat_max = lat_max.max(m.latency_s);
+            energy += m.energy_j;
+            scratch.leans.push(m);
+        }
+        let terms = joint_terms(
+            self.specs,
+            &scratch.per,
+            &scratch.leans,
+            &self.caps,
+            self.inventory.as_deref(),
+            |t, j| {
+                let base = self.rep_base() + t * k;
+                (vars[base + j] as usize).max(1)
+            },
+            &self.link,
+            None,
+        );
+        violation += terms.violation;
+        let headroom = (0..t_count)
+            .map(|t| terms.eff[t] / self.specs[t].rate)
+            .fold(f64::INFINITY, f64::min);
+        if violation == 0.0 {
+            Eval::feasible(vec![lat_max, energy, -headroom])
+        } else {
+            Eval::infeasible(3, violation)
+        }
+    }
+}
+
+/// The joint NSGA-II search behind `ExploreRequest::tenants(..)`.
+/// Builds one graph + evaluator per tenant (shared layer-cost cache),
+/// co-optimizes all tenants' cut (and replica) genes against the joint
+/// feasibility model, and materializes the deduplicated front.
+///
+/// # Panics
+///
+/// Panics when the roster is invalid, a tenant's model is not in the
+/// zoo, or the system has fewer than two platforms — the same contract
+/// as `Explorer::run`.
+pub(crate) fn explore_tenants_impl(
+    set: &TenantSet,
+    sys: &SystemConfig,
+    cache: Arc<CostCache>,
+) -> JointExploration {
+    let total0 = Instant::now();
+    if let Err(e) = set.validate() {
+        panic!("invalid tenant set: {e}");
+    }
+    assert!(sys.platforms.len() >= 2, "need at least two platforms");
+    if let Some(rep) = &sys.replication {
+        if let Err(e) = rep.validate(sys.platforms.len()) {
+            panic!("invalid replication config: {e}");
+        }
+    }
+    let graphs: Vec<Graph> = set
+        .tenants
+        .iter()
+        .map(|t| {
+            crate::zoo::build(&t.model).unwrap_or_else(|| {
+                panic!("unknown tenant model '{}' (known: {:?})", t.model, crate::zoo::names())
+            })
+        })
+        .collect();
+    let evs: Vec<PlanEvaluator> = graphs
+        .iter()
+        .map(|g| PlanEvaluator::with_cache(g, sys, Arc::clone(&cache)))
+        .collect();
+    let jobs = sys.jobs.max(1);
+    let obs = sys.obs.registry();
+    let k = sys.platforms.len();
+
+    let problem = TenantProblem {
+        evs: &evs,
+        specs: &set.tenants,
+        num_cuts: k - 1,
+        lens: evs.iter().map(|e| e.order.len()).collect(),
+        caps: sys.platforms.iter().map(|p| p.memory_bytes).collect(),
+        inventory: sys.replication.as_ref().map(|r| r.inventory.clone()),
+        link: sys.link.clone(),
+    };
+    // Budget scales with the *joint* problem size, like the chain search.
+    let total_layers: usize = graphs.iter().map(Graph::len).sum();
+    let mut cfg = Nsga2Cfg::for_layers(total_layers * k / 2, sys.seed);
+    cfg.mutation_p = 0.3;
+    let nsga0 = crate::obs::mark(obs);
+    let t2 = Instant::now();
+    let front = nsga2::optimize_par_obs(&problem, &cfg, jobs, obs.map(|a| a.as_ref()));
+    let nsga_s = t2.elapsed().as_secs_f64();
+    if let Some(reg) = obs {
+        reg.wall_span("nsga-ii joint tenant search", 0, nsga0);
+        reg.counter("explorer.tenant_requests").inc();
+    }
+
+    // Materialize the front: surfaced per-tenant metrics + joint terms
+    // (identical arithmetic to the lean path), deduplicated by the
+    // tenants' combined label fingerprint.
+    let t_count = set.tenants.len();
+    let mut scratch = problem.make_scratch();
+    let mut candidates: Vec<JointCandidate> = Vec::new();
+    let mut seen = std::collections::BTreeSet::new();
+    for s in &front {
+        let mut metrics: Vec<CandidateMetrics> = Vec::with_capacity(t_count);
+        scratch.leans.clear();
+        for t in 0..t_count {
+            let cut_vars = &s.vars[t * (k - 1)..(t + 1) * (k - 1)];
+            let positions: Vec<usize> = cut_vars.iter().map(|&v| v as usize).collect();
+            let m = if problem.inventory.is_some() {
+                let base = problem.rep_base() + t * k;
+                let replicas: Vec<usize> =
+                    s.vars[base..base + k].iter().map(|&v| v as usize).collect();
+                evs[t].evaluate_replicated_in(&positions, &replicas, &mut scratch.per[t])
+            } else {
+                evs[t].evaluate_in(&positions, &mut scratch.per[t])
+            };
+            scratch.leans.push(LeanMetrics {
+                latency_s: m.latency_s,
+                energy_j: m.energy_j,
+                throughput: m.throughput,
+                top1: m.top1,
+                link_bytes: m.link_bytes,
+                memory_peak: m.memory_bytes.iter().copied().max().unwrap_or(0),
+                violation: m.violation,
+            });
+            metrics.push(m);
+        }
+        let mut fp = Fnv64::new();
+        for m in &metrics {
+            fp.write_u64(label_fp(&m.label, m.partitions));
+        }
+        if !seen.insert(fp.finish()) {
+            continue;
+        }
+        let mut violations: Vec<String> = Vec::new();
+        let terms = joint_terms(
+            &set.tenants,
+            &scratch.per,
+            &scratch.leans,
+            &problem.caps,
+            problem.inventory.as_deref(),
+            |t, j| {
+                let base = problem.rep_base() + t * k;
+                (s.vars[base + j] as usize).max(1)
+            },
+            &sys.link,
+            Some(&mut violations),
+        );
+        let per_tenant_violation: f64 = metrics.iter().map(|m| m.violation).sum();
+        for m in &metrics {
+            violations.extend(m.violations.iter().cloned());
+        }
+        let latency_s = metrics.iter().map(|m| m.latency_s).fold(0.0, f64::max);
+        let energy_j = metrics.iter().map(|m| m.energy_j).sum();
+        let headroom = (0..t_count)
+            .map(|t| terms.eff[t] / set.tenants[t].rate)
+            .fold(f64::INFINITY, f64::min);
+        let label = set
+            .tenants
+            .iter()
+            .zip(&metrics)
+            .map(|(t, m)| format!("{}: {}", t.model, m.label))
+            .collect::<Vec<_>>()
+            .join(" | ");
+        candidates.push(JointCandidate {
+            tenants: set
+                .tenants
+                .iter()
+                .zip(metrics)
+                .zip(&terms.eff)
+                .map(|((spec, m), &e)| TenantOutcome {
+                    spec: spec.clone(),
+                    metrics: m,
+                    effective_rate: e,
+                })
+                .collect(),
+            latency_s,
+            energy_j,
+            headroom,
+            violation: per_tenant_violation + terms.violation,
+            violations,
+            label,
+        });
+    }
+
+    // Priority-weighted favorite over feasible joint candidates.
+    let favorite = candidates
+        .iter()
+        .enumerate()
+        .filter(|(_, c)| c.feasible())
+        .map(|(i, c)| {
+            let score: f64 = c
+                .tenants
+                .iter()
+                .map(|t| t.spec.priority * t.effective_rate.min(t.spec.rate))
+                .sum();
+            (i, score)
+        })
+        .fold(None::<(usize, f64)>, |best, (i, score)| match best {
+            Some((_, bs)) if bs >= score => best,
+            _ => Some((i, score)),
+        })
+        .map(|(i, _)| i);
+
+    JointExploration {
+        set: set.clone(),
+        candidates,
+        favorite,
+        timing: ExplorationTiming {
+            graph_s: 0.0,
+            hw_eval_s: evs.iter().map(|e| e.hw_eval_s).sum(),
+            candidates_s: 0.0,
+            nsga_s,
+            total_s: total0.elapsed().as_secs_f64(),
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ReplicationCfg, TenantSet, TenantSpec};
+    use crate::explorer::ExploreRequest;
+
+    fn quick_sys() -> SystemConfig {
+        let mut sys = SystemConfig::paper_two_platform();
+        sys.search.victory = 5;
+        sys.search.max_samples = 50;
+        sys
+    }
+
+    fn tiny_pair(rate_a: f64, rate_b: f64) -> TenantSet {
+        TenantSet {
+            tenants: vec![
+                TenantSpec { rate: rate_a, ..TenantSpec::new("tiny_cnn") },
+                TenantSpec { rate: rate_b, priority: 2.0, ..TenantSpec::new("squeezenet1_1") },
+            ],
+            ..TenantSet::default()
+        }
+    }
+
+    #[test]
+    fn joint_front_surfaces_every_tenant() {
+        let sys = quick_sys();
+        let ex = ExploreRequest::chain().tenants(tiny_pair(20.0, 10.0)).run_tenants(&sys);
+        assert!(!ex.candidates.is_empty());
+        for c in &ex.candidates {
+            assert_eq!(c.tenants.len(), 2);
+            assert!(c.label.contains("tiny_cnn:") && c.label.contains("squeezenet1_1:"));
+            for t in &c.tenants {
+                assert!(!t.metrics.plan.is_empty(), "{}: missing plan", c.label);
+                assert!(
+                    t.effective_rate <= t.metrics.throughput + 1e-9,
+                    "{}: contention raised a tenant's rate",
+                    c.label
+                );
+            }
+            assert!(c.latency_s >= c.tenants.iter().map(|t| t.metrics.latency_s).fold(0.0, f64::max) - 1e-12);
+        }
+        if let Some(f) = ex.favorite {
+            assert!(ex.candidates[f].feasible());
+        }
+    }
+
+    #[test]
+    fn contention_limits_shared_node_rates() {
+        // Two tenants at a combined load no shared node can meet: the
+        // joint front must mark such schedules infeasible rather than
+        // pretending both tenants get their single-tenant throughput.
+        let sys = quick_sys();
+        let ex = ExploreRequest::chain().tenants(tiny_pair(1e7, 1e7)).run_tenants(&sys);
+        assert!(!ex.candidates.is_empty());
+        assert!(
+            ex.candidates.iter().all(|c| !c.feasible()),
+            "an impossible load was declared feasible"
+        );
+        assert!(ex.favorite.is_none());
+    }
+
+    #[test]
+    fn replicated_joint_exploration_respects_shared_inventory() {
+        let mut sys = quick_sys();
+        sys.replication = Some(ReplicationCfg { inventory: vec![4, 4] });
+        let ex = ExploreRequest::chain().tenants(tiny_pair(50.0, 20.0)).run_tenants(&sys);
+        assert!(!ex.candidates.is_empty());
+        for c in ex.candidates.iter().filter(|c| c.feasible()) {
+            for j in 0..2 {
+                let claimed: usize = c
+                    .tenants
+                    .iter()
+                    .flat_map(|t| &t.metrics.plan)
+                    .filter(|s| s.platform == j)
+                    .map(|s| s.replicas)
+                    .sum();
+                assert!(claimed <= 4, "{}: {claimed} replicas on platform {j}", c.label);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "unknown tenant model")]
+    fn unknown_model_panics_with_catalog() {
+        let sys = quick_sys();
+        let set = TenantSet::from_names("alexnet").unwrap();
+        let _ = ExploreRequest::chain().tenants(set).run_tenants(&sys);
+    }
+}

@@ -16,7 +16,7 @@
 //!                   Pareto front at millions-of-requests scale
 //!   * `report`    — regenerate every paper figure/table into reports/
 
-use partir::config::SystemConfig;
+use partir::config::{FairnessPolicy, SystemConfig, TenantSet};
 use partir::coordinator::{
     run_pipeline, simulated_specs_from_plan, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec,
 };
@@ -70,6 +70,8 @@ fn print_usage() {
          \x20 simulate   discrete-event serving simulation of the explored Pareto front\n\
          \x20            (scenario presets: steady | burst | diurnal | degraded | failover, or a TOML file;\n\
          \x20            --adaptive: live re-partitioning under drift and node loss)\n\
+         \x20 explore/simulate --tenants a,b,c   multi-tenant co-scheduling: joint DSE over shared\n\
+         \x20            inventory, then shared-cluster serving (--fairness fifo|priority|round-robin)\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
          OBSERVABILITY (explore, chain, simulate, report):\n\
          \x20 --trace-out FILE    Chrome/Perfetto trace (wall + virtual clock spans)\n\
@@ -240,6 +242,38 @@ fn jobs_arg(args: &Args) -> anyhow::Result<usize> {
         .max(1))
 }
 
+/// `--tenants a,b,c` (+ `--fairness`) or the config file's `[[tenants]]`
+/// roster: the multi-tenant co-scheduling entry point. `Ok(None)` means
+/// the command runs its ordinary single-tenant path.
+fn tenant_set_arg(args: &Args, sys: &SystemConfig) -> anyhow::Result<Option<TenantSet>> {
+    let mut set = match args.get("tenants") {
+        Some(csv) => TenantSet::from_names(csv).map_err(anyhow::Error::msg)?,
+        None if !sys.tenants.is_empty() => sys.tenant_set(),
+        None => {
+            anyhow::ensure!(
+                args.get("fairness").is_none(),
+                "--fairness needs --tenants (or a [[tenants]] config section)"
+            );
+            return Ok(None);
+        }
+    };
+    if let Some(f) = args.get("fairness") {
+        set.fairness = FairnessPolicy::parse(f).ok_or_else(|| {
+            anyhow::anyhow!("bad --fairness '{f}' (fifo | priority | round-robin)")
+        })?;
+    }
+    for t in &set.tenants {
+        anyhow::ensure!(
+            zoo::build(&t.model).is_some(),
+            "unknown tenant model '{}'; try one of {:?}",
+            t.model,
+            zoo::names()
+        );
+    }
+    set.validate().map_err(anyhow::Error::msg)?;
+    Ok(Some(set))
+}
+
 fn build_model(args: &Args) -> anyhow::Result<partir::graph::Graph> {
     let name = args.get("model").unwrap_or("resnet50");
     zoo::build(name)
@@ -275,6 +309,8 @@ fn explore_cmd() -> Command {
         .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
         .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
         .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
+        .opt("tenants", None, "co-schedule these zoo models jointly (comma-separated; multi-tenant DSE)")
+        .opt("fairness", None, "multi-tenant batching policy: fifo | priority | round-robin")
         .opt("trace-out", None, "write a Chrome/Perfetto trace of the exploration here")
         .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
@@ -282,9 +318,37 @@ fn explore_cmd() -> Command {
         .flag("fast", "smaller mapper search budget")
 }
 
+/// `explore --tenants` / `simulate --tenants` share this front half:
+/// run the joint NSGA-II co-scheduling DSE and print the joint front
+/// (`--model` and its default are ignored — the roster names the models).
+fn run_joint_exploration(
+    sys: &SystemConfig,
+    set: TenantSet,
+) -> anyhow::Result<partir::explorer::JointExploration> {
+    let cache = open_cache(sys);
+    let ex = ExploreRequest::chain()
+        .with_cache(Arc::clone(&cache))
+        .tenants(set)
+        .run_tenants(sys);
+    persist_cache(sys, &cache);
+    if let Some(rep) = &sys.replication {
+        println!("replication inventory (nodes per platform slot): {:?}", rep.inventory);
+    }
+    print!("{}", report::render_joint(&ex));
+    Ok(ex)
+}
+
 fn cmd_explore(args: &Args) -> anyhow::Result<()> {
-    let g = build_model(args)?;
     let sys = load_sys(args)?;
+    if let Some(set) = tenant_set_arg(args, &sys)? {
+        run_joint_exploration(&sys, set)?;
+        if args.get("out").is_some() {
+            eprintln!("note: --out is ignored with --tenants; use `simulate --tenants --out`");
+        }
+        finish_obs(&sys.obs)?;
+        return Ok(());
+    }
+    let g = build_model(args)?;
     anyhow::ensure!(
         sys.platforms.len() == 2,
         "explore needs a 2-platform config; use `chain` for longer chains"
@@ -604,6 +668,8 @@ fn simulate_cmd() -> Command {
     .opt("cache-dir", None, "persist the layer-cost cache here (cross-run reuse)")
     .opt("cluster", None, "use the mixed EYR/SMB cluster preset with this many nodes (2..=64)")
     .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
+    .opt("tenants", None, "co-schedule these zoo models jointly and serve them on the shared cluster (comma-separated)")
+    .opt("fairness", None, "multi-tenant batching policy: fifo | priority | round-robin")
     .opt("epoch-ms", None, "adaptive control-epoch length in ms (overrides [adaptive] epoch_ms)")
     .opt("hysteresis", None, "unhealthy epochs before the adaptive controller migrates (>= 1)")
     .opt("trace-out", None, "write a Chrome/Perfetto trace here (--adaptive adds migration spans)")
@@ -625,6 +691,62 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     if !args.flag("full-search") {
         sys.search.victory = 20;
         sys.search.max_samples = 200;
+    }
+
+    // Multi-tenant: joint co-scheduling DSE, then shared-cluster serving
+    // of every joint candidate. Arrival rates and SLOs are per tenant
+    // (from the roster); a named scenario contributes only its fault
+    // windows, and `--slo-ms` fills in tenants without their own SLO.
+    if let Some(mut set) = tenant_set_arg(args, &sys)? {
+        anyhow::ensure!(
+            !args.flag("adaptive"),
+            "--adaptive is not supported with --tenants yet"
+        );
+        if let Some(ms) = args.get_f64("slo-ms").map_err(anyhow::Error::msg)? {
+            for t in &mut set.tenants {
+                t.slo_s.get_or_insert(ms * 1e-3);
+            }
+        }
+        let requests =
+            args.get_usize("requests").map_err(anyhow::Error::msg)?.unwrap_or(100_000);
+        let scenario_arg = args.get("scenario").unwrap();
+        let scenario = if Scenario::builtin_names().contains(&scenario_arg) {
+            let sum_rate: f64 = set.tenants.iter().map(|t| t.rate).sum();
+            Scenario::by_name(scenario_arg, requests, sum_rate).unwrap()
+        } else {
+            Scenario::from_toml_file(Path::new(scenario_arg))
+                .map_err(|e| anyhow::anyhow!("scenario '{scenario_arg}': {e}"))?
+        };
+        scenario
+            .validate(Some(sys.platforms.len()))
+            .map_err(|e| anyhow::anyhow!("scenario '{}': {e}", scenario.name))?;
+        let ex = run_joint_exploration(&sys, set)?;
+        let cfg = SimCfg::from_system(&sys);
+        let t0 = std::time::Instant::now();
+        let ranked =
+            sim::evaluate_tenants(&ex, &sys, requests, &scenario, &cfg, sys.jobs.max(1));
+        println!(
+            "\nscenario '{}': {} requests per tenant, {} joint candidates simulated in {}\n",
+            scenario.name,
+            requests,
+            ranked.len(),
+            fmt_time_s(t0.elapsed().as_secs_f64()),
+        );
+        print!("{}", sim::render_tenant_ranking(&ranked));
+        if let Some(best) = ranked.first() {
+            print!("\n{}", best.report.render());
+        }
+        let mut h = partir::util::hash::Fnv64::new();
+        for r in &ranked {
+            h.write_u64(r.report.fingerprint());
+        }
+        println!("ranking fingerprint: {:016x}", h.finish());
+        if let Some(out) = args.get("out") {
+            report::tenant_sim_csv(&ranked).write_file(Path::new(out))?;
+            println!("wrote {out}");
+        }
+        finish_obs(&sys.obs)?;
+        return Ok(());
     }
 
     // 1. Explore: the candidate set the simulator ranks. `--dag` widens

@@ -194,10 +194,13 @@ pub fn throughput_gain(ex: &Exploration) -> Option<(String, f64)> {
 }
 
 /// Simulated-serving ranking: one row per candidate evaluated by
-/// `sim::evaluate_front` under a traffic scenario.
+/// `sim::evaluate_front` under a traffic scenario. The `tenant` column
+/// is `-` here — single-tenant rows share the schema with
+/// [`tenant_sim_csv`] so downstream plots can concatenate both.
 pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
     let mut csv = Csv::new(&[
         "label",
+        "tenant",
         "partitions",
         "goodput_ips",
         "throughput_ips",
@@ -212,6 +215,7 @@ pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
     for r in ranked {
         csv.row(&[
             r.label.clone(),
+            "-".to_string(),
             r.partitions.to_string(),
             num(r.goodput),
             num(r.throughput),
@@ -225,6 +229,123 @@ pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
         ]);
     }
     csv
+}
+
+/// Multi-tenant serving ranking: one row per (joint candidate, tenant)
+/// pair from `sim::evaluate_tenants`, same column schema as [`sim_csv`]
+/// with the tenant name filled in (plus one `*` aggregate row per
+/// candidate).
+pub fn tenant_sim_csv(ranked: &[crate::sim::RankedJoint]) -> Csv {
+    let mut csv = Csv::new(&[
+        "label",
+        "tenant",
+        "partitions",
+        "goodput_ips",
+        "throughput_ips",
+        "p50_ms",
+        "p99_ms",
+        "completed",
+        "dropped",
+        "slo_violations",
+        "energy_j",
+        "fingerprint",
+    ]);
+    for r in ranked {
+        csv.row(&[
+            r.label.clone(),
+            "*".to_string(),
+            r.report.tenants.len().to_string(),
+            num(r.report.aggregate_goodput()),
+            num(r.report.aggregate_throughput()),
+            String::new(),
+            String::new(),
+            r.report.tenants.iter().map(|t| t.completed).sum::<u64>().to_string(),
+            r.report.tenants.iter().map(|t| t.dropped).sum::<u64>().to_string(),
+            r.report.tenants.iter().map(|t| t.slo_violations).sum::<u64>().to_string(),
+            num(r.report.energy_j),
+            format!("{:016x}", r.report.fingerprint()),
+        ]);
+        for t in &r.report.tenants {
+            csv.row(&[
+                r.label.clone(),
+                t.name.clone(),
+                String::new(),
+                num(t.goodput),
+                num(t.throughput),
+                num(t.p50_s * 1e3),
+                num(t.p99_s * 1e3),
+                t.completed.to_string(),
+                t.dropped.to_string(),
+                t.slo_violations.to_string(),
+                num(t.energy_j),
+                String::new(),
+            ]);
+        }
+    }
+    csv
+}
+
+/// Human-readable joint-front summary for `--tenants` runs: the roster,
+/// then one block per joint candidate listing every tenant's schedule
+/// and contention-adjusted attainable rate.
+pub fn render_joint(ex: &crate::explorer::JointExploration) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "joint exploration — {} tenant(s), {} candidates, fairness {}\n",
+        ex.set.tenants.len(),
+        ex.candidates.len(),
+        ex.set.fairness.name()
+    ));
+    for t in &ex.set.tenants {
+        out.push_str(&format!(
+            "  tenant {:<16} rate {:>8.1} req/s  priority {:>4.1}{}\n",
+            t.model,
+            t.rate,
+            t.priority,
+            t.slo_s.map(|s| format!("  slo {}", fmt_time_s(s))).unwrap_or_default()
+        ));
+    }
+    out.push_str(&format!(
+        "timing: hw-eval {} candidates {} nsga {} total {}\n",
+        fmt_time_s(ex.timing.hw_eval_s),
+        fmt_time_s(ex.timing.candidates_s),
+        fmt_time_s(ex.timing.nsga_s),
+        fmt_time_s(ex.timing.total_s)
+    ));
+    for (i, c) in ex.candidates.iter().enumerate() {
+        let mut flags = String::new();
+        if ex.favorite == Some(i) {
+            flags.push('*');
+        }
+        if !c.feasible() {
+            flags.push('!');
+        }
+        out.push_str(&format!(
+            "\n[{i}]{flags} worst latency {} — energy/round {} — headroom {:.2}\n",
+            fmt_time_s(c.latency_s),
+            fmt_energy_j(c.energy_j),
+            c.headroom
+        ));
+        for t in &c.tenants {
+            out.push_str(&format!(
+                "    {:<16} {:<24} attainable {:>9} (asks {:>8.1}/s)\n",
+                t.spec.model,
+                t.metrics.label,
+                fmt_throughput(t.effective_rate),
+                t.spec.rate
+            ));
+        }
+        for v in &c.violations {
+            out.push_str(&format!("    ! {v}\n"));
+        }
+    }
+    if let Some(f) = ex.favorite {
+        out.push_str(&format!(
+            "\nfavorite (priority-weighted attained rate): [{f}] {}\n",
+            ex.candidates[f].label
+        ));
+    }
+    out
 }
 
 /// Pareto metric columns used when exporting fronts of arbitrary metric
@@ -316,8 +437,47 @@ mod tests {
         let csv = sim_csv(&ranked);
         assert_eq!(csv.len(), 1);
         let text = csv.to_string();
-        assert!(text.starts_with("label,partitions,goodput_ips"));
-        assert!(text.contains("split,2,900,950,4,12,9000,1000,500,12.5,00000000deadbeef"));
+        assert!(text.starts_with("label,tenant,partitions,goodput_ips"));
+        assert!(text.contains("split,-,2,900,950,4,12,9000,1000,500,12.5,00000000deadbeef"));
+    }
+
+    #[test]
+    fn tenant_sim_csv_has_aggregate_and_per_tenant_rows() {
+        use crate::config::FairnessPolicy;
+        use crate::sim::{MultiSimReport, RankedJoint, TenantReport};
+        let tenant = |name: &str, goodput: f64| TenantReport {
+            name: name.into(),
+            completed: 100,
+            dropped: 0,
+            slo_violations: 5,
+            goodput,
+            throughput: goodput + 10.0,
+            p50_s: 0.002,
+            p99_s: 0.009,
+            energy_j: 3.25,
+            latencies_s: Vec::new(),
+        };
+        let ranked = vec![RankedJoint {
+            index: 0,
+            label: "a: cut@3 | b: cut@7".into(),
+            feasible: true,
+            aggregate_goodput: 130.0,
+            report: MultiSimReport {
+                fairness: FairnessPolicy::Fifo,
+                tenants: vec![tenant("a", 80.0), tenant("b", 50.0)],
+                wall_s: 1.0,
+                energy_j: 6.5,
+                events: 400,
+            },
+        }];
+        let csv = tenant_sim_csv(&ranked);
+        // One aggregate row plus one row per tenant.
+        assert_eq!(csv.len(), 3);
+        let text = csv.to_string();
+        assert!(text.starts_with("label,tenant,partitions,goodput_ips"));
+        assert!(text.contains(",*,2,130,"));
+        assert!(text.contains(",a,,80,90,2,9,100,0,5,3.25,"));
+        assert!(text.contains(",b,,50,60,"));
     }
 
     #[test]

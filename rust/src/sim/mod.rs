@@ -34,6 +34,13 @@
 //!   partitions from `explorer::dag`) and a join stage waits for every
 //!   copy before serving — a request dropped on one branch is accounted
 //!   once and its surviving copies are discarded at their next hop;
+//! * [`simulate_tenants`] interleaves several tenants' deployments
+//!   through *shared* per-platform server banks: per-(tenant, stage)
+//!   bounded queues, single-tenant greedy batches, per-tenant Poisson
+//!   streams and SLO accounting, and a
+//!   [`FairnessPolicy`](crate::config::FairnessPolicy) deciding which
+//!   tenant a freed server picks up — the serving half of the joint
+//!   multi-tenant exploration (`explorer::JointExploration`);
 //! * a stage with [`StageModel::replicas`] ` > 1` is a **replica bank**:
 //!   identical servers, each with its own bounded queue, batch timer and
 //!   link port, fed by the configured [`DispatchPolicy`] (round-robin or
@@ -55,6 +62,7 @@ mod adaptive;
 mod engine;
 mod evaluate;
 mod scenario;
+mod tenants;
 
 pub use adaptive::{
     candidate_pool, compare_adaptive, simulate_adaptive, simulate_adaptive_obs,
@@ -62,6 +70,10 @@ pub use adaptive::{
 };
 pub use evaluate::{best_gain_over_single, evaluate_front, render_ranking, RankedCandidate};
 pub use scenario::{Arrivals, FaultWindow, NodeLoss, Scenario, Slowdown};
+pub use tenants::{
+    evaluate_tenants, render_tenant_ranking, simulate_tenants, MultiSimReport, RankedJoint,
+    TenantReport, TenantTraffic,
+};
 
 use crate::config::SystemConfig;
 use crate::coordinator::{BatchPolicy, PipelineReport};

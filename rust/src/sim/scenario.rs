@@ -399,6 +399,23 @@ impl Scenario {
             window(&format!("node_loss[{i}]"), w.from_s, w.to_s)?;
             platform_ok(&format!("node_loss[{i}]"), w.platform)?;
         }
+        // Same-platform node-loss windows must not overlap: the engine
+        // drains the node once per window open, so two live windows on
+        // one platform would compose silently into an ill-defined
+        // revival time. Half-open semantics make touching windows
+        // (`[1, 2)` + `[2, 3)`) legal. Slowdowns still compose —
+        // multiplicative factors are well-defined, losses are not.
+        for (i, a) in self.node_loss.iter().enumerate() {
+            for (j, b) in self.node_loss.iter().enumerate().skip(i + 1) {
+                if a.platform == b.platform && a.from_s < b.to_s && b.from_s < a.to_s {
+                    return Err(format!(
+                        "node_loss[{i}] and node_loss[{j}]: overlapping windows \
+                         [{}, {}) and [{}, {}) on platform {}",
+                        a.from_s, a.to_s, b.from_s, b.to_s, a.platform
+                    ));
+                }
+            }
+        }
         Ok(())
     }
 
@@ -676,6 +693,46 @@ to_s = 9.0
         sc.slowdowns.clear();
         sc.node_loss = vec![NodeLoss { platform: 5, from_s: 0.0, to_s: 1.0 }];
         assert!(sc.validate(Some(2)).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_overlapping_node_loss_on_one_platform() {
+        let mut sc = Scenario::steady(100, 1000.0);
+        // Plain overlap on one platform: rejected.
+        sc.node_loss = vec![
+            NodeLoss { platform: 0, from_s: 1.0, to_s: 3.0 },
+            NodeLoss { platform: 0, from_s: 2.0, to_s: 4.0 },
+        ];
+        let err = sc.validate(None).unwrap_err();
+        assert!(err.contains("overlapping"), "{err}");
+        // Containment counts as overlap, regardless of declaration order.
+        sc.node_loss = vec![
+            NodeLoss { platform: 1, from_s: 2.0, to_s: 3.0 },
+            NodeLoss { platform: 1, from_s: 1.0, to_s: 4.0 },
+        ];
+        assert!(sc.validate(None).is_err());
+        // Same windows on different platforms: fine.
+        sc.node_loss = vec![
+            NodeLoss { platform: 0, from_s: 1.0, to_s: 3.0 },
+            NodeLoss { platform: 1, from_s: 2.0, to_s: 4.0 },
+        ];
+        assert!(sc.validate(None).is_ok());
+        // Touching half-open windows [1,2) + [2,3): fine — to_s is
+        // exclusive, so the node revives exactly when the next loss
+        // begins.
+        sc.node_loss = vec![
+            NodeLoss { platform: 0, from_s: 1.0, to_s: 2.0 },
+            NodeLoss { platform: 0, from_s: 2.0, to_s: 3.0 },
+        ];
+        assert!(sc.validate(None).is_ok());
+        // Overlapping *slowdowns* still compose (multiplicative factors
+        // are well-defined — engine tests rely on it).
+        sc.node_loss.clear();
+        sc.slowdowns = vec![
+            Slowdown { platform: 0, from_s: 1.0, to_s: 3.0, factor: 2.0 },
+            Slowdown { platform: 0, from_s: 2.0, to_s: 4.0, factor: 3.0 },
+        ];
+        assert!(sc.validate(None).is_ok());
     }
 
     #[test]

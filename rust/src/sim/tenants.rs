@@ -1,0 +1,892 @@
+//! Multi-tenant serving: interleave N tenants' arrival streams through
+//! *shared* platform server banks with per-tenant SLO accounting and a
+//! configurable [`FairnessPolicy`].
+//!
+//! Model (a deliberate simplification of the single-tenant engine,
+//! sharing its clock, window and link semantics):
+//!
+//! * every **platform** is a server bank shared by all tenants — one
+//!   server on unreplicated systems (the tenants co-reside on the
+//!   node), the sum of the tenants' claimed replicas on replicated
+//!   ones. The bank is work-conserving: any free server serves any
+//!   tenant's queue, so capacity one tenant leaves idle is capacity
+//!   another tenant uses;
+//! * each (tenant, stage) pair owns a bounded FIFO queue
+//!   (`SimCfg::queue_depth`); arrivals and mid-pipeline deliveries to
+//!   a full queue drop the request;
+//! * batches are **single-tenant** and greedy: when a server frees,
+//!   the fairness policy picks one queue and up to
+//!   `BatchPolicy::max_batch` of its items start immediately (no
+//!   batch-wait timers — work conservation beats batching delay in a
+//!   contended bank). Service takes `base + per_item × n`, scaled by
+//!   every [`Slowdown`](super::Slowdown) window containing the batch
+//!   start (half-open `[from, to)`, multiplicative composition), then
+//!   the stage's link transfers are serialized into the server;
+//! * [`NodeLoss`](super::NodeLoss) windows park the bank: no batch
+//!   starts while dark, queued work waits (the single-tenant engine
+//!   drops it — here the roster's other platforms keep draining), and
+//!   service resumes exactly at the window's exclusive end;
+//! * arrivals are per-tenant Poisson streams at `TenantSpec::rate`,
+//!   each drawn from its own PCG32 stream keyed by the tenant's roster
+//!   index, merged by `(time, insertion sequence)` — bit-identical
+//!   regardless of worker count or evaluation order.
+//!
+//! [`evaluate_tenants`] fans a joint exploration's serving candidates
+//! over workers exactly like [`super::evaluate_front`], ranking by
+//! aggregate goodput.
+
+use super::engine::{in_window, s_to_ns};
+use super::{Deployment, Scenario, SimCfg};
+use crate::config::{FairnessPolicy, SystemConfig, TenantSpec};
+use crate::explorer::JointExploration;
+use crate::util::hash::Fnv64;
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg32;
+use crate::util::stats::percentile;
+use std::cmp::Ordering;
+use std::collections::{BinaryHeap, VecDeque};
+
+/// Stream-id base for per-tenant arrival processes (stable forever,
+/// like `STREAM_ARRIVALS`): tenant `t` draws from stream `base + t`.
+const STREAM_TENANT_ARRIVALS: u64 = 0x51A7_0100;
+
+/// One tenant's contribution to a shared-cluster run: who it is, the
+/// deployment realizing its slice of a joint candidate, and how many
+/// requests to generate.
+#[derive(Debug, Clone)]
+pub struct TenantTraffic {
+    /// Rate / SLO / priority (the SLO and priority drive accounting
+    /// and the [`FairnessPolicy`]; the rate drives the Poisson stream).
+    pub spec: TenantSpec,
+    /// The tenant's pipeline — typically
+    /// [`Deployment::from_candidate`] on a
+    /// [`TenantOutcome::metrics`](crate::explorer::TenantOutcome).
+    pub deployment: Deployment,
+    /// Arrivals to generate for this tenant.
+    pub requests: usize,
+}
+
+/// Per-tenant accounting of one multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct TenantReport {
+    /// Tenant model name (from the spec).
+    pub name: String,
+    /// Requests served end to end.
+    pub completed: u64,
+    /// Requests dropped at a full queue (any stage).
+    pub dropped: u64,
+    /// Completions that missed the tenant's SLO.
+    pub slo_violations: u64,
+    /// Within-SLO completions per virtual second.
+    pub goodput: f64,
+    /// Completions per virtual second.
+    pub throughput: f64,
+    /// Median end-to-end latency (s); 0 when nothing completed.
+    pub p50_s: f64,
+    /// 99th-percentile end-to-end latency (s); 0 when nothing completed.
+    pub p99_s: f64,
+    /// Compute + link energy charged to this tenant's batches (J).
+    pub energy_j: f64,
+    /// Per-completion latencies (s), completion order — consumed by the
+    /// fingerprint and by percentile-hungry callers.
+    pub latencies_s: Vec<f64>,
+}
+
+/// Result of one shared-cluster multi-tenant run.
+#[derive(Debug, Clone)]
+pub struct MultiSimReport {
+    /// The fairness policy the bank scheduler ran.
+    pub fairness: FairnessPolicy,
+    /// Per-tenant accounting, roster order.
+    pub tenants: Vec<TenantReport>,
+    /// Virtual span of the run (s): the latest event timestamp.
+    pub wall_s: f64,
+    /// Total energy across tenants (J).
+    pub energy_j: f64,
+    /// Events processed (arrivals + batch completions + wakes).
+    pub events: u64,
+}
+
+impl MultiSimReport {
+    /// Sum of per-tenant goodputs — the joint serving objective the
+    /// bench's joint-vs-sequential gate compares.
+    pub fn aggregate_goodput(&self) -> f64 {
+        self.tenants.iter().map(|t| t.goodput).sum()
+    }
+
+    /// Sum of per-tenant throughputs.
+    pub fn aggregate_throughput(&self) -> f64 {
+        self.tenants.iter().map(|t| t.throughput).sum()
+    }
+
+    /// Stable FNV-1a digest over every externally observable quantity —
+    /// the determinism-matrix tests compare this across `--jobs` values
+    /// and repeat runs.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_bytes(self.fairness.name().as_bytes());
+        h.write_u64(self.tenants.len() as u64);
+        for t in &self.tenants {
+            h.write_bytes(t.name.as_bytes());
+            h.write_u64(t.completed);
+            h.write_u64(t.dropped);
+            h.write_u64(t.slo_violations);
+            h.write_f64(t.energy_j);
+            h.write_u64(t.latencies_s.len() as u64);
+            for &l in &t.latencies_s {
+                h.write_f64(l);
+            }
+        }
+        h.write_f64(self.wall_s);
+        h.write_u64(self.events);
+        h.finish()
+    }
+
+    /// Human-readable per-tenant table.
+    pub fn render(&self) -> String {
+        use crate::util::units::{fmt_energy_j, fmt_throughput, fmt_time_s};
+        let mut out = format!(
+            "multi-tenant [{}]: {:.3}s virtual, {} events, aggregate goodput {}\n",
+            self.fairness.name(),
+            self.wall_s,
+            self.events,
+            fmt_throughput(self.aggregate_goodput()),
+        );
+        for t in &self.tenants {
+            out.push_str(&format!(
+                "  {:<16} done {:>6} drop {:>5} slo-miss {:>5} goodput {} p50 {} p99 {} energy {}\n",
+                t.name,
+                t.completed,
+                t.dropped,
+                t.slo_violations,
+                fmt_throughput(t.goodput),
+                fmt_time_s(t.p50_s),
+                fmt_time_s(t.p99_s),
+                fmt_energy_j(t.energy_j),
+            ));
+        }
+        out
+    }
+}
+
+/// An in-flight request copy: original arrival time plus the time it
+/// entered its current queue (what FIFO ordering keys on).
+#[derive(Debug, Clone, Copy)]
+struct Item {
+    t0: u64,
+    enq: u64,
+}
+
+/// A platform's shared server bank.
+struct Bank {
+    /// Server slots (1 on unreplicated systems).
+    free: usize,
+    /// `(tenant, stage)` pairs resident on this platform, sorted.
+    stages: Vec<(usize, usize)>,
+    /// Distinct tenants among `stages`, sorted — the round-robin ring.
+    ring: Vec<usize>,
+    /// Round-robin cursor into `ring`.
+    cursor: usize,
+    /// Pending wake time while the node-loss window parks the bank.
+    wake_at: Option<u64>,
+}
+
+enum Kind {
+    Arrive { tenant: usize },
+    Done { platform: usize, tenant: usize, stage: usize, items: Vec<Item> },
+    Wake { platform: usize },
+}
+
+struct Ev {
+    t: u64,
+    seq: u64,
+    kind: Kind,
+}
+
+impl PartialEq for Ev {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Ev {}
+impl PartialOrd for Ev {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Ev {
+    /// Reversed (time, seq) so `BinaryHeap` pops the earliest event;
+    /// the sequence number makes simultaneous events deterministic.
+    fn cmp(&self, other: &Self) -> Ordering {
+        other.t.cmp(&self.t).then(other.seq.cmp(&self.seq))
+    }
+}
+
+struct Acct {
+    completed: u64,
+    dropped: u64,
+    slo_violations: u64,
+    in_slo: u64,
+    energy_j: f64,
+    lat_s: Vec<f64>,
+}
+
+struct Engine<'a> {
+    traffic: &'a [TenantTraffic],
+    fairness: FairnessPolicy,
+    cfg: &'a SimCfg,
+    scenario: &'a Scenario,
+    /// `next[t][s]` = downstream stage of tenant `t`'s stage `s`.
+    next: Vec<Vec<Option<usize>>>,
+    queues: Vec<Vec<VecDeque<Item>>>,
+    banks: Vec<Bank>,
+    heap: BinaryHeap<Ev>,
+    seq: u64,
+    events: u64,
+    horizon: u64,
+    acct: Vec<Acct>,
+}
+
+impl Engine<'_> {
+    fn push(&mut self, t: u64, kind: Kind) {
+        let seq = self.seq;
+        self.seq += 1;
+        self.heap.push(Ev { t, seq, kind });
+    }
+
+    /// Product of the slowdown factors whose half-open windows contain
+    /// `t` on platform `p` (overlapping slowdowns compose, as in the
+    /// single-tenant engine).
+    fn slow_factor(&self, p: usize, t: u64) -> f64 {
+        self.scenario
+            .slowdowns
+            .iter()
+            .filter(|w| w.platform == p && in_window(t, s_to_ns(w.from_s), s_to_ns(w.to_s)))
+            .map(|w| w.factor)
+            .product()
+    }
+
+    /// Link-degradation factor at transfer start `t`.
+    fn link_factor(&self, t: u64) -> f64 {
+        self.scenario
+            .link_faults
+            .iter()
+            .filter(|w| in_window(t, s_to_ns(w.from_s), s_to_ns(w.to_s)))
+            .map(|w| w.factor)
+            .product()
+    }
+
+    /// End of the node-loss window containing `t` on platform `p`, if
+    /// the bank is dark right now. `[from, to)`: at exactly `to` the
+    /// bank serves again (validated windows never overlap, so one
+    /// window decides).
+    fn dark_until(&self, p: usize, t: u64) -> Option<u64> {
+        self.scenario
+            .node_loss
+            .iter()
+            .find(|w| w.platform == p && in_window(t, s_to_ns(w.from_s), s_to_ns(w.to_s)))
+            .map(|w| s_to_ns(w.to_s))
+    }
+
+    fn enqueue(&mut self, tenant: usize, stage: usize, item: Item) {
+        let q = &mut self.queues[tenant][stage];
+        if q.len() >= self.cfg.queue_depth {
+            self.acct[tenant].dropped += 1;
+        } else {
+            q.push_back(item);
+        }
+    }
+
+    /// The fairness policy's queue choice on platform `p`, plus the
+    /// round-robin ring's next cursor. Pure so the caller keeps the
+    /// borrows straight.
+    fn pick(&self, p: usize) -> Option<((usize, usize), usize)> {
+        let bank = &self.banks[p];
+        // FIFO key: earliest head-of-queue entry time, ties broken by
+        // the sorted (tenant, stage) identity — total and deterministic.
+        let head = |t: usize, s: usize| self.queues[t][s].front().map(|i| (i.enq, t, s));
+        let fifo_best = |cands: &mut dyn Iterator<Item = (usize, usize)>| {
+            cands.filter_map(|(t, s)| head(t, s)).min().map(|(_, t, s)| (t, s))
+        };
+        match self.fairness {
+            FairnessPolicy::Fifo => {
+                fifo_best(&mut bank.stages.iter().copied()).map(|x| (x, bank.cursor))
+            }
+            FairnessPolicy::PriorityWeighted => bank
+                .stages
+                .iter()
+                .copied()
+                .filter_map(|(t, s)| head(t, s).map(|k| (t, s, k)))
+                .min_by(|a, b| {
+                    let (pa, pb) = (self.traffic[a.0].spec.priority, self.traffic[b.0].spec.priority);
+                    pb.partial_cmp(&pa).unwrap_or(Ordering::Equal).then(a.2.cmp(&b.2))
+                })
+                .map(|(t, s, _)| ((t, s), bank.cursor)),
+            FairnessPolicy::TenantRoundRobin => {
+                let k = bank.ring.len();
+                for off in 0..k {
+                    let ti = (bank.cursor + off) % k;
+                    let tenant = bank.ring[ti];
+                    let got = fifo_best(
+                        &mut bank.stages.iter().copied().filter(|&(t, _)| t == tenant),
+                    );
+                    if let Some(x) = got {
+                        return Some((x, (ti + 1) % k));
+                    }
+                }
+                None
+            }
+        }
+    }
+
+    /// Start batches on platform `p` until its servers or its queues
+    /// run out (or a node-loss window parks the bank).
+    fn dispatch(&mut self, p: usize, now: u64) {
+        loop {
+            if self.banks[p].free == 0 {
+                return;
+            }
+            let Some(((tenant, stage), cursor)) = self.pick(p) else { return };
+            // Park only when work is actually pending — a wake for an
+            // idle bank would stretch the virtual span for nothing.
+            if let Some(until) = self.dark_until(p, now) {
+                if self.banks[p].wake_at != Some(until) {
+                    self.banks[p].wake_at = Some(until);
+                    self.push(until, Kind::Wake { platform: p });
+                }
+                return;
+            }
+            self.banks[p].cursor = cursor;
+            let max_b = self.cfg.batch.max_batch.max(1);
+            let q = &mut self.queues[tenant][stage];
+            let n = q.len().min(max_b);
+            let items: Vec<Item> = q.drain(..n).collect();
+            let dep = &self.traffic[tenant].deployment;
+            let st = &dep.stages[stage];
+            let service_s = (st.base_s + st.per_item_s * n as f64) * self.slow_factor(p, now);
+            let t_link = now + s_to_ns(service_s);
+            let mut link_s = 0.0f64;
+            let mut energy = st.energy_per_item_j * n as f64;
+            for e in &dep.edges[stage] {
+                let bytes = e.bytes_per_item * n as u64;
+                link_s += e.hops as f64 * dep.link.latency_s(bytes) * self.link_factor(t_link);
+                energy += e.hops as f64 * dep.link.energy_j(bytes);
+            }
+            self.acct[tenant].energy_j += energy;
+            self.banks[p].free -= 1;
+            self.push(t_link + s_to_ns(link_s), Kind::Done { platform: p, tenant, stage, items });
+        }
+    }
+
+    fn complete(&mut self, tenant: usize, item: Item, now: u64) {
+        let lat_ns = now - item.t0;
+        let a = &mut self.acct[tenant];
+        a.completed += 1;
+        a.lat_s.push(lat_ns as f64 * 1e-9);
+        match self.traffic[tenant].spec.slo_s {
+            Some(slo) if lat_ns > s_to_ns(slo) => a.slo_violations += 1,
+            _ => a.in_slo += 1,
+        }
+    }
+
+    fn run(mut self) -> MultiSimReport {
+        // Pre-expand every tenant's Poisson arrivals on this thread, in
+        // roster order — the only randomness in the run.
+        let traffic = self.traffic;
+        for (t, tr) in traffic.iter().enumerate() {
+            let mut rng = Pcg32::new(self.cfg.seed, STREAM_TENANT_ARRIVALS + t as u64);
+            let rate = tr.spec.rate;
+            let mut at = 0.0f64;
+            for _ in 0..tr.requests {
+                at += -(1.0 - rng.gen_f64()).ln() / rate;
+                self.push(s_to_ns(at), Kind::Arrive { tenant: t });
+            }
+        }
+        while let Some(ev) = self.heap.pop() {
+            self.events += 1;
+            self.horizon = self.horizon.max(ev.t);
+            match ev.kind {
+                Kind::Arrive { tenant } => {
+                    self.enqueue(tenant, 0, Item { t0: ev.t, enq: ev.t });
+                    let p = self.traffic[tenant].deployment.stages[0].platform;
+                    self.dispatch(p, ev.t);
+                }
+                Kind::Done { platform, tenant, stage, items } => {
+                    self.banks[platform].free += 1;
+                    match self.next[tenant][stage] {
+                        Some(ns) => {
+                            for it in items {
+                                self.enqueue(tenant, ns, Item { t0: it.t0, enq: ev.t });
+                            }
+                            let np = self.traffic[tenant].deployment.stages[ns].platform;
+                            self.dispatch(np, ev.t);
+                        }
+                        None => {
+                            for it in items {
+                                self.complete(tenant, it, ev.t);
+                            }
+                        }
+                    }
+                    self.dispatch(platform, ev.t);
+                }
+                Kind::Wake { platform } => {
+                    self.banks[platform].wake_at = None;
+                    self.dispatch(platform, ev.t);
+                }
+            }
+        }
+        let wall_s = (self.horizon as f64 * 1e-9).max(1e-12);
+        let tenants = self
+            .traffic
+            .iter()
+            .zip(self.acct)
+            .map(|(tr, a)| TenantReport {
+                name: tr.spec.model.clone(),
+                completed: a.completed,
+                dropped: a.dropped,
+                slo_violations: a.slo_violations,
+                goodput: a.in_slo as f64 / wall_s,
+                throughput: a.completed as f64 / wall_s,
+                p50_s: if a.lat_s.is_empty() { 0.0 } else { percentile(&a.lat_s, 50.0) },
+                p99_s: if a.lat_s.is_empty() { 0.0 } else { percentile(&a.lat_s, 99.0) },
+                energy_j: a.energy_j,
+                latencies_s: a.lat_s,
+            })
+            .collect::<Vec<_>>();
+        MultiSimReport {
+            fairness: self.fairness,
+            energy_j: tenants.iter().map(|t| t.energy_j).sum(),
+            tenants,
+            wall_s,
+            events: self.events,
+        }
+    }
+}
+
+/// Run N tenants' traffic through shared platform banks on one virtual
+/// clock. `replicated` sizes the banks: `false` = one server per
+/// platform (co-resident tenants on one node), `true` = the sum of the
+/// resident stages' replica counts (disjoint node claims pooled into a
+/// work-conserving bank). The scenario contributes only its fault
+/// windows — arrivals and deadlines are per tenant, from each
+/// [`TenantSpec`].
+///
+/// Deployments must be chains (at most one downstream edge per stage)
+/// — exactly what the joint tenant explorer emits.
+///
+/// # Panics
+///
+/// Panics on an empty roster, a non-chain deployment, or a
+/// non-positive tenant rate.
+pub fn simulate_tenants(
+    traffic: &[TenantTraffic],
+    fairness: FairnessPolicy,
+    cfg: &SimCfg,
+    scenario: &Scenario,
+    replicated: bool,
+) -> MultiSimReport {
+    assert!(!traffic.is_empty(), "empty tenant roster");
+    let mut next: Vec<Vec<Option<usize>>> = Vec::with_capacity(traffic.len());
+    let mut platforms = 0usize;
+    for tr in traffic {
+        assert!(
+            tr.spec.rate > 0.0 && tr.spec.rate.is_finite(),
+            "tenant {}: non-positive rate",
+            tr.spec.model
+        );
+        let dep = &tr.deployment;
+        let mut nx = Vec::with_capacity(dep.stages.len());
+        for (s, edges) in dep.edges.iter().enumerate() {
+            let downstream: Vec<usize> = edges.iter().filter_map(|e| e.to).collect();
+            assert!(
+                downstream.len() <= 1,
+                "tenant {}: stage {s} forks — multi-tenant serving takes chain deployments",
+                tr.spec.model
+            );
+            nx.push(downstream.first().copied());
+        }
+        next.push(nx);
+        platforms = platforms.max(dep.stages.iter().map(|s| s.platform + 1).max().unwrap_or(0));
+    }
+    let mut banks: Vec<Bank> = (0..platforms)
+        .map(|_| Bank { free: 0, stages: Vec::new(), ring: Vec::new(), cursor: 0, wake_at: None })
+        .collect();
+    for (t, tr) in traffic.iter().enumerate() {
+        for (s, st) in tr.deployment.stages.iter().enumerate() {
+            let b = &mut banks[st.platform];
+            b.stages.push((t, s));
+            if replicated {
+                b.free += st.replicas.max(1);
+            }
+            if !b.ring.contains(&t) {
+                b.ring.push(t);
+            }
+        }
+    }
+    for b in &mut banks {
+        b.stages.sort_unstable();
+        b.ring.sort_unstable();
+        if !replicated {
+            b.free = 1;
+        }
+    }
+    Engine {
+        traffic,
+        fairness,
+        cfg,
+        scenario,
+        next,
+        queues: traffic
+            .iter()
+            .map(|tr| vec![VecDeque::new(); tr.deployment.stages.len()])
+            .collect(),
+        banks,
+        heap: BinaryHeap::new(),
+        seq: 0,
+        events: 0,
+        horizon: 0,
+        acct: traffic
+            .iter()
+            .map(|_| Acct {
+                completed: 0,
+                dropped: 0,
+                slo_violations: 0,
+                in_slo: 0,
+                energy_j: 0.0,
+                lat_s: Vec::new(),
+            })
+            .collect(),
+    }
+    .run()
+}
+
+/// One joint candidate's simulated serving outcome, for ranking.
+#[derive(Debug, Clone)]
+pub struct RankedJoint {
+    /// Index into `JointExploration::candidates`.
+    pub index: usize,
+    /// The joint candidate's label.
+    pub label: String,
+    /// Whether the candidate was jointly feasible at exploration time.
+    pub feasible: bool,
+    /// Sum of per-tenant goodputs under simulation.
+    pub aggregate_goodput: f64,
+    /// The full multi-tenant run report.
+    pub report: MultiSimReport,
+}
+
+/// Simulate every serving candidate of a joint exploration through the
+/// shared-cluster engine and rank by aggregate goodput (ties: aggregate
+/// throughput, then candidate index). Candidates fan out over `jobs`
+/// workers; per-candidate runs are independent and seeded per tenant,
+/// so the ranking is bit-identical for every `jobs` value.
+pub fn evaluate_tenants(
+    ex: &JointExploration,
+    sys: &SystemConfig,
+    requests_per_tenant: usize,
+    scenario: &Scenario,
+    cfg: &SimCfg,
+    jobs: usize,
+) -> Vec<RankedJoint> {
+    if let Err(e) = scenario.validate(Some(sys.platforms.len())) {
+        panic!("invalid scenario for this system: {e}");
+    }
+    let idxs = ex.serving_candidates();
+    let fairness = ex.set.fairness;
+    let replicated = sys.replication.is_some();
+    let mut ranked = par_map(jobs.max(1), &idxs, |&i| {
+        let c = &ex.candidates[i];
+        let traffic: Vec<TenantTraffic> = c
+            .tenants
+            .iter()
+            .map(|t| TenantTraffic {
+                spec: t.spec.clone(),
+                deployment: Deployment::from_candidate(&t.metrics, sys),
+                requests: requests_per_tenant,
+            })
+            .collect();
+        let report = simulate_tenants(&traffic, fairness, cfg, scenario, replicated);
+        RankedJoint {
+            index: i,
+            label: c.label.clone(),
+            feasible: c.feasible(),
+            aggregate_goodput: report.aggregate_goodput(),
+            report,
+        }
+    });
+    ranked.sort_by(|a, b| {
+        b.aggregate_goodput
+            .total_cmp(&a.aggregate_goodput)
+            .then(b.report.aggregate_throughput().total_cmp(&a.report.aggregate_throughput()))
+            .then(a.index.cmp(&b.index))
+    });
+    ranked
+}
+
+/// Pretty table of a multi-tenant ranking for CLI output.
+pub fn render_tenant_ranking(ranked: &[RankedJoint]) -> String {
+    let mut out = String::from("rank  agg-goodput  feasible  candidate\n");
+    for (i, r) in ranked.iter().enumerate() {
+        out.push_str(&format!(
+            "{:>4}  {:>11.1}  {:>8}  [{}] {}\n",
+            i + 1,
+            r.aggregate_goodput,
+            if r.feasible { "yes" } else { "no" },
+            r.index,
+            r.label,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TenantSpec;
+    use crate::sim::NodeLoss;
+
+    fn spec(name: &str, rate: f64, slo_s: Option<f64>, priority: f64) -> TenantSpec {
+        TenantSpec { rate, slo_s, priority, ..TenantSpec::new(name) }
+    }
+
+    /// Two chain tenants sharing platforms 0 and 1.
+    fn pair(rate_a: f64, rate_b: f64, per_item_s: f64, requests: usize) -> Vec<TenantTraffic> {
+        vec![
+            TenantTraffic {
+                spec: spec("a", rate_a, None, 1.0),
+                deployment: Deployment::synthetic("a", &[per_item_s, per_item_s], 1460),
+                requests,
+            },
+            TenantTraffic {
+                spec: spec("b", rate_b, None, 1.0),
+                deployment: Deployment::synthetic("b", &[per_item_s, per_item_s], 1460),
+                requests,
+            },
+        ]
+    }
+
+    fn quiet() -> Scenario {
+        Scenario::steady(1, 1.0) // arrivals/deadline unused by the engine
+    }
+
+    #[test]
+    fn light_load_completes_everything_for_every_policy() {
+        for fairness in
+            [FairnessPolicy::Fifo, FairnessPolicy::PriorityWeighted, FairnessPolicy::TenantRoundRobin]
+        {
+            let tr = pair(50.0, 50.0, 0.0005, 200);
+            let r = simulate_tenants(&tr, fairness, &SimCfg::default(), &quiet(), false);
+            for t in &r.tenants {
+                assert_eq!(t.completed, 200, "[{}] {} incomplete", fairness.name(), t.name);
+                assert_eq!(t.dropped, 0);
+                assert!(t.goodput > 0.0 && t.p50_s > 0.0);
+            }
+            assert!(r.aggregate_goodput() >= r.tenants[0].goodput);
+        }
+    }
+
+    #[test]
+    fn reruns_are_bit_identical() {
+        let tr = pair(400.0, 300.0, 0.002, 500);
+        let cfg = SimCfg::default();
+        let a = simulate_tenants(&tr, FairnessPolicy::Fifo, &cfg, &quiet(), false);
+        let b = simulate_tenants(&tr, FairnessPolicy::Fifo, &cfg, &quiet(), false);
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        // A different seed moves the arrivals.
+        let mut cfg2 = cfg;
+        cfg2.seed = 99;
+        let c = simulate_tenants(&tr, FairnessPolicy::Fifo, &cfg2, &quiet(), false);
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn priority_weighted_serves_the_high_priority_tenant_first() {
+        // One contended single-stage bank, tenant b at 10x priority:
+        // under PriorityWeighted b's median latency must beat a's, and
+        // must beat b's own median under plain FIFO.
+        let mk = |prio_b: f64| {
+            vec![
+                TenantTraffic {
+                    spec: spec("a", 400.0, None, 1.0),
+                    deployment: Deployment::synthetic("a", &[0.004], 0),
+                    requests: 400,
+                },
+                TenantTraffic {
+                    spec: spec("b", 400.0, None, prio_b),
+                    deployment: Deployment::synthetic("b", &[0.004], 0),
+                    requests: 400,
+                },
+            ]
+        };
+        let cfg = SimCfg::default();
+        let pw =
+            simulate_tenants(&mk(10.0), FairnessPolicy::PriorityWeighted, &cfg, &quiet(), false);
+        let fifo = simulate_tenants(&mk(10.0), FairnessPolicy::Fifo, &cfg, &quiet(), false);
+        assert!(
+            pw.tenants[1].p50_s < pw.tenants[0].p50_s,
+            "priority tenant not favored: b p50 {} vs a p50 {}",
+            pw.tenants[1].p50_s,
+            pw.tenants[0].p50_s
+        );
+        assert!(
+            pw.tenants[1].p50_s < fifo.tenants[1].p50_s,
+            "priority did not improve b over FIFO"
+        );
+    }
+
+    #[test]
+    fn round_robin_keeps_a_flooded_tenant_from_starving_the_other() {
+        // Tenant a floods the bank (10x the arrivals); round-robin must
+        // keep b's median latency below what FIFO ordering gives it.
+        let mk = || {
+            vec![
+                TenantTraffic {
+                    spec: spec("a", 2000.0, None, 1.0),
+                    deployment: Deployment::synthetic("a", &[0.004], 0),
+                    requests: 1000,
+                },
+                TenantTraffic {
+                    spec: spec("b", 100.0, None, 1.0),
+                    deployment: Deployment::synthetic("b", &[0.004], 0),
+                    requests: 100,
+                },
+            ]
+        };
+        let cfg = SimCfg { queue_depth: 4096, ..SimCfg::default() };
+        let rr = simulate_tenants(&mk(), FairnessPolicy::TenantRoundRobin, &cfg, &quiet(), false);
+        let fifo = simulate_tenants(&mk(), FairnessPolicy::Fifo, &cfg, &quiet(), false);
+        assert!(rr.tenants[1].completed > 0);
+        assert!(
+            rr.tenants[1].p50_s < fifo.tenants[1].p50_s,
+            "round-robin did not protect the light tenant: rr {} vs fifo {}",
+            rr.tenants[1].p50_s,
+            fifo.tenants[1].p50_s
+        );
+    }
+
+    #[test]
+    fn slo_accounting_is_per_tenant() {
+        // Same pipelines, but only tenant a carries a (brutal) SLO:
+        // all its completions violate, b's never do.
+        let tr = vec![
+            TenantTraffic {
+                spec: spec("a", 100.0, Some(1e-9), 1.0),
+                deployment: Deployment::synthetic("a", &[0.002], 0),
+                requests: 50,
+            },
+            TenantTraffic {
+                spec: spec("b", 100.0, None, 1.0),
+                deployment: Deployment::synthetic("b", &[0.002], 0),
+                requests: 50,
+            },
+        ];
+        let r = simulate_tenants(&tr, FairnessPolicy::Fifo, &SimCfg::default(), &quiet(), false);
+        assert_eq!(r.tenants[0].slo_violations, r.tenants[0].completed);
+        assert_eq!(r.tenants[0].goodput, 0.0);
+        assert_eq!(r.tenants[1].slo_violations, 0);
+        assert!(r.tenants[1].goodput > 0.0);
+    }
+
+    #[test]
+    fn node_loss_boundary_is_half_open_under_interleaving() {
+        // Both tenants' single request arrives well inside the dark
+        // window [0, 0.5): the bank must stay parked until *exactly*
+        // 0.5, then serve both queued batches back to back — so the
+        // virtual span is 0.5 + 2 x 1 ms on the nose. A second,
+        // touching window [0.5+2ms, ...) would not affect these
+        // batches: starts at to_s are live (to_s is exclusive).
+        let mk = |scenario: &Scenario| {
+            let tr = vec![
+                TenantTraffic {
+                    spec: spec("a", 1000.0, None, 1.0),
+                    deployment: Deployment::synthetic("a", &[0.001], 0),
+                    requests: 1,
+                },
+                TenantTraffic {
+                    spec: spec("b", 1000.0, None, 1.0),
+                    deployment: Deployment::synthetic("b", &[0.001], 0),
+                    requests: 1,
+                },
+            ];
+            simulate_tenants(&tr, FairnessPolicy::Fifo, &SimCfg::default(), scenario, false)
+        };
+        let mut sc = quiet();
+        sc.node_loss = vec![NodeLoss { platform: 0, from_s: 0.0, to_s: 0.5 }];
+        sc.validate(None).unwrap();
+        let r = mk(&sc);
+        assert_eq!(r.tenants.iter().map(|t| t.completed).sum::<u64>(), 2);
+        assert!(
+            (r.wall_s - 0.502).abs() < 1e-9,
+            "bank did not resume exactly at the window end: wall {}",
+            r.wall_s
+        );
+        // Touching second window starting at the revival instant of the
+        // backlog drain: both batches started at 0.5 and 0.501, so a
+        // dark window [0.502, 1.0) changes nothing.
+        sc.node_loss.push(NodeLoss { platform: 0, from_s: 0.502, to_s: 1.0 });
+        sc.validate(None).unwrap();
+        let r2 = mk(&sc);
+        assert!((r2.wall_s - 0.502).abs() < 1e-9, "exclusive end not honored: {}", r2.wall_s);
+    }
+
+    #[test]
+    fn slowdown_windows_stretch_contended_service() {
+        let mk = |sc: &Scenario| {
+            simulate_tenants(
+                &pair(200.0, 200.0, 0.002, 300),
+                FairnessPolicy::Fifo,
+                &SimCfg::default(),
+                sc,
+                false,
+            )
+        };
+        let base = mk(&quiet());
+        let mut sc = quiet();
+        sc.slowdowns =
+            vec![crate::sim::Slowdown { platform: 0, from_s: 0.0, to_s: 1e6, factor: 4.0 }];
+        let slow = mk(&sc);
+        assert!(
+            slow.wall_s > base.wall_s,
+            "slowdown had no effect: {} vs {}",
+            slow.wall_s,
+            base.wall_s
+        );
+        assert!(slow.tenants[0].p99_s > base.tenants[0].p99_s);
+    }
+
+    #[test]
+    fn replicated_banks_pool_capacity_across_tenants() {
+        // Same roster, but each tenant claims 2 replicas per platform:
+        // the pooled bank must finish the backlog in less virtual time
+        // than the single shared node.
+        let mk = |replicated: bool| {
+            let mut tr = pair(1000.0, 1000.0, 0.002, 400);
+            if replicated {
+                for t in &mut tr {
+                    t.deployment = t.deployment.clone().replicate_stage(0, 2).replicate_stage(1, 2);
+                }
+            }
+            let cfg = SimCfg { queue_depth: 4096, ..SimCfg::default() };
+            simulate_tenants(&tr, FairnessPolicy::Fifo, &cfg, &quiet(), replicated)
+        };
+        let shared = mk(false);
+        let pooled = mk(true);
+        assert!(
+            pooled.wall_s < shared.wall_s,
+            "pooled replicas not faster: {} vs {}",
+            pooled.wall_s,
+            shared.wall_s
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "chain deployments")]
+    fn forked_deployments_are_rejected() {
+        let tr = vec![TenantTraffic {
+            spec: spec("a", 100.0, None, 1.0),
+            deployment: Deployment::synthetic_fork_join("a", 0.001, &[0.001, 0.001], 0.001, 64),
+            requests: 1,
+        }];
+        let _ = simulate_tenants(&tr, FairnessPolicy::Fifo, &SimCfg::default(), &quiet(), false);
+    }
+}

@@ -1,0 +1,206 @@
+//! Cross-subsystem invariant suite: property tests over randomly
+//! generated chains and DAGs that pin down the structural contracts the
+//! explorer, evaluator, and simulator all lean on.
+//!
+//! Each property is seeded through [`partir::testkit::property`], so a
+//! reported failure names a replayable case index — no time-derived
+//! randomness anywhere. The suite must stay green regardless of the
+//! `--jobs` setting used elsewhere in the process; the final property
+//! checks that directly by comparing `par_map` at 1 and 4 workers.
+
+use partir::graph::partition::{
+    assignment_chain_positions_into, is_convex, is_monotone, repair_monotone, segments,
+    DagPartition,
+};
+use partir::graph::topo::{positions, topo_sort, TieBreak};
+use partir::graph::{Act, Graph, LayerKind, NodeId};
+use partir::memory::subset_memory_bytes;
+use partir::testkit::{property, Gen};
+use partir::util::parallel::par_map;
+use partir::util::rng::Pcg32;
+
+/// Materialize a random predecessor structure from [`Gen::dag`] into a
+/// graph IR instance: node 0 is the sensor input, multi-input nodes
+/// become `Add` (shape-preserving), single-input nodes become ReLU.
+fn graph_from_preds(preds: &[Vec<usize>]) -> Graph {
+    let mut g = Graph::new("invariant");
+    let x = g.input(2, 4, 4);
+    let mut ids = vec![x];
+    for v in 1..preds.len() {
+        let inputs: Vec<NodeId> = preds[v].iter().map(|&p| ids[p]).collect();
+        let id = if inputs.len() >= 2 {
+            g.add(LayerKind::Add, &inputs)
+        } else {
+            g.add(LayerKind::Activation(Act::Relu), &inputs)
+        };
+        ids.push(id);
+    }
+    g
+}
+
+/// A branch-free chain of `n_layers` ReLUs behind the input.
+fn chain(n_layers: usize) -> Graph {
+    let mut g = Graph::new("chain");
+    let mut prev = g.input(4, 8, 8);
+    for _ in 0..n_layers {
+        prev = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+    }
+    g
+}
+
+#[test]
+fn repair_monotone_is_idempotent_and_pins_the_input() {
+    property("repair_monotone idempotence", 150, |rng| {
+        let n = Gen::usize_in(rng, 2..40);
+        let k = Gen::usize_in(rng, 1..6);
+        let g = graph_from_preds(&Gen::dag(rng, n, 0.15));
+        let mut assign: Vec<usize> = (0..n).map(|_| Gen::usize_in(rng, 0..k)).collect();
+        repair_monotone(&g, &mut assign);
+        assert_eq!(assign[0], 0, "input not pinned to platform 0");
+        assert!(is_monotone(&g, &assign), "repair left a non-monotone edge");
+        let mut again = assign.clone();
+        repair_monotone(&g, &mut again);
+        assert_eq!(assign, again, "repair is not idempotent");
+        // Already-valid assignments are fixed points, not merely mapped
+        // to some other valid point.
+        let mut valid = assign.clone();
+        repair_monotone(&g, &mut valid);
+        assert_eq!(valid, assign);
+    });
+}
+
+#[test]
+fn repaired_assignments_are_convex_and_partition_every_layer() {
+    property("repair implies convexity", 150, |rng| {
+        let n = Gen::usize_in(rng, 2..40);
+        let k = Gen::usize_in(rng, 1..6);
+        let g = graph_from_preds(&Gen::dag(rng, n, 0.2));
+        let mut assign: Vec<usize> = (0..n).map(|_| Gen::usize_in(rng, 0..k)).collect();
+        repair_monotone(&g, &mut assign);
+        assert!(is_convex(&g, &assign), "monotone assignment not convex");
+        // The induced stage partition is total: every layer lands in
+        // exactly one stage and stage platforms ascend.
+        let dp = DagPartition::from_assignment(&g, &assign, k).expect("repair output rejected");
+        let total: usize = dp.stages.iter().map(|s| s.members.len()).sum();
+        assert_eq!(total, g.len(), "stages do not tile the graph");
+        assert!(
+            dp.stages.windows(2).all(|w| w[0].platform < w[1].platform),
+            "stages out of platform order"
+        );
+    });
+}
+
+#[test]
+fn chain_positions_roundtrip_through_contiguous_assignments() {
+    property("chain-positions roundtrip", 150, |rng| {
+        let layers = Gen::usize_in(rng, 1..30);
+        let g = chain(layers);
+        let len = g.len();
+        let k = Gen::usize_in(rng, 2..6);
+        // Non-decreasing cut positions, each `< len - 1` (the `segments`
+        // contract); duplicates encode idle platforms.
+        let mut cuts: Vec<usize> = if len >= 2 {
+            (0..k - 1).map(|_| Gen::usize_in(rng, 0..len - 1)).collect()
+        } else {
+            Vec::new()
+        };
+        cuts.sort_unstable();
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let segs = segments(len, &cuts);
+        // segments() drops empty ranges, so rebuild the platform of each
+        // schedule position from the cut vector directly: platform j owns
+        // positions in (cuts[j-1], cuts[j]].
+        let mut assign = vec![0usize; len];
+        for (p, slot) in assign.iter_mut().enumerate() {
+            let mut platform = 0;
+            for &c in &cuts {
+                if p > c {
+                    platform += 1;
+                }
+            }
+            *slot = platform;
+        }
+        // On a chain the deterministic order is the identity, so the
+        // assignment is monotone by construction.
+        assert!(is_monotone(&g, &assign));
+        let pos = positions(&order, len);
+        let mut bounds = Vec::new();
+        let mut out = Vec::new();
+        let ok = assignment_chain_positions_into(&assign, &pos, k, &mut bounds, &mut out);
+        assert!(ok, "contiguous assignment judged non-chain");
+        assert_eq!(out, cuts, "cut positions did not roundtrip");
+        // The segment view agrees with the assignment view.
+        let covered: usize = segs.iter().map(|s| s.len()).sum();
+        assert_eq!(covered, len);
+        // And the high-level DagPartition wrapper reports the same.
+        let dp = DagPartition::from_assignment(&g, &assign, k).unwrap();
+        assert_eq!(dp.as_chain_positions(&order, k), Some(cuts));
+    });
+}
+
+#[test]
+fn branch_parallel_assignments_never_claim_chain_form() {
+    property("branch splits are not chains", 100, |rng| {
+        // A diamond with the two middle branches on different platforms
+        // is the canonical non-chain shape; embed one at a random depth.
+        let stem = Gen::usize_in(rng, 0..8);
+        let mut g = Graph::new("diamond");
+        let mut prev = g.input(2, 4, 4);
+        for _ in 0..stem {
+            prev = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+        }
+        let b = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+        let c = g.add(LayerKind::Activation(Act::Relu), &[prev]);
+        let join = g.add(LayerKind::Add, &[b, c]);
+        g.add(LayerKind::GlobalAvgPool, &[join]);
+        let mut assign = vec![0usize; g.len()];
+        assign[b.0] = 1;
+        assign[join.0] = 1;
+        assign[g.len() - 1] = 1;
+        assert!(is_monotone(&g, &assign));
+        let order = topo_sort(&g, TieBreak::Deterministic);
+        let dp = DagPartition::from_assignment(&g, &assign, 2).unwrap();
+        assert!(
+            dp.is_branch_parallel(&order, 2),
+            "b-on-1 / c-on-0 split misreported as a chain cut"
+        );
+    });
+}
+
+#[test]
+fn subset_memory_dominates_every_member_layer() {
+    property("subset memory >= per-layer max", 150, |rng| {
+        let n = Gen::usize_in(rng, 2..40);
+        let g = graph_from_preds(&Gen::dag(rng, n, 0.15));
+        let mut r = Pcg32::seeded(Gen::usize_in(rng, 0..1 << 30) as u64);
+        let order = topo_sort(&g, TieBreak::Random(&mut r));
+        let bits = *[4u32, 8, 16, 32].get(Gen::usize_in(rng, 0..4)).unwrap();
+        // Random non-empty member-position subset.
+        let mut members: Vec<usize> =
+            (0..n).filter(|_| Gen::usize_in(rng, 0..3) == 0).collect();
+        if members.is_empty() {
+            members.push(Gen::usize_in(rng, 0..n));
+        }
+        let whole = subset_memory_bytes(&g, &order, &members, bits);
+        for &p in &members {
+            let single = subset_memory_bytes(&g, &order, &[p], bits);
+            assert!(
+                whole >= single,
+                "subset {whole} B < member {p} alone {single} B (bits {bits})"
+            );
+        }
+        // Wider quantization widths never shrink the footprint.
+        assert!(subset_memory_bytes(&g, &order, &members, 32) >= whole);
+    });
+}
+
+#[test]
+fn par_map_is_jobs_invariant() {
+    property("par_map jobs identity", 50, |rng| {
+        let xs = Gen::vec_f64(rng, 1..64, -100.0, 100.0);
+        let f = |x: &f64| (x * 1.5).sin().to_bits();
+        let one = par_map(1, &xs, f);
+        let four = par_map(4, &xs, f);
+        assert_eq!(one, four, "worker count changed par_map output");
+    });
+}

@@ -1,0 +1,111 @@
+//! Multi-tenant determinism matrix: joint exploration and shared-cluster
+//! serving must be bit-identical across `--jobs 1/2/4` and across repeat
+//! runs, and single-tenant requests must be untouched by the tenant
+//! machinery (same worker-count identity they had before it existed).
+
+use partir::config::{SystemConfig, TenantSet, TenantSpec};
+use partir::explorer::{Exploration, ExploreRequest};
+use partir::sim::{evaluate_tenants, Scenario, SimCfg};
+use partir::util::hash::Fnv64;
+use partir::zoo;
+
+fn quick_sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 5;
+    sys.search.max_samples = 50;
+    sys
+}
+
+fn roster() -> TenantSet {
+    TenantSet {
+        tenants: vec![
+            TenantSpec { rate: 20.0, ..TenantSpec::new("tiny_cnn") },
+            TenantSpec { rate: 10.0, priority: 2.0, ..TenantSpec::new("squeezenet1_1") },
+        ],
+        ..TenantSet::default()
+    }
+}
+
+#[test]
+fn joint_exploration_is_bit_identical_across_jobs_and_reruns() {
+    let sys = quick_sys();
+    let set = roster();
+    let fp = |jobs: usize| {
+        ExploreRequest::chain().tenants(set.clone()).jobs(jobs).run_tenants(&sys).fingerprint()
+    };
+    let one = fp(1);
+    assert_eq!(one, fp(2), "--jobs 2 changed the joint front");
+    assert_eq!(one, fp(4), "--jobs 4 changed the joint front");
+    assert_eq!(one, fp(1), "repeat run changed the joint front");
+}
+
+#[test]
+fn tenant_serving_evaluation_is_bit_identical_across_jobs_and_reruns() {
+    let sys = quick_sys();
+    let ex = ExploreRequest::chain().tenants(roster()).run_tenants(&sys);
+    assert!(!ex.candidates.is_empty(), "no joint candidates to serve");
+    let sc = Scenario::steady(200, 30.0);
+    let cfg = SimCfg { seed: 11, ..SimCfg::from_system(&sys) };
+    let fp = |jobs: usize| -> Vec<(usize, u64)> {
+        evaluate_tenants(&ex, &sys, 200, &sc, &cfg, jobs)
+            .iter()
+            .map(|r| (r.index, r.report.fingerprint()))
+            .collect()
+    };
+    let one = fp(1);
+    assert_eq!(one, fp(2), "--jobs 2 changed the serving ranking");
+    assert_eq!(one, fp(4), "--jobs 4 changed the serving ranking");
+    assert_eq!(one, fp(1), "repeat evaluation changed the serving ranking");
+}
+
+/// Digest every externally observable field of a single-tenant
+/// exploration (the pre-existing result type has no fingerprint of its
+/// own; the guard below needs exact equality, not spot checks).
+fn exploration_fp(ex: &Exploration) -> u64 {
+    let mut h = Fnv64::new();
+    h.write_bytes(ex.model.as_bytes());
+    h.write_u64(ex.candidates.len() as u64);
+    for c in &ex.candidates {
+        h.write_bytes(c.label.as_bytes());
+        h.write_f64(c.latency_s);
+        h.write_f64(c.energy_j);
+        h.write_f64(c.throughput);
+        h.write_f64(c.top1);
+        h.write_u64(c.link_bytes);
+        h.write_f64(c.violation);
+        h.write_u64(c.partitions as u64);
+        for &p in &c.positions {
+            h.write_usize(p);
+        }
+        for &m in &c.memory_bytes {
+            h.write_u64(m);
+        }
+    }
+    for &i in ex.pareto.iter().chain(&ex.nsga_front) {
+        h.write_usize(i);
+    }
+    h.write_u64(ex.favorite.map_or(u64::MAX, |f| f as u64));
+    h.finish()
+}
+
+#[test]
+fn single_tenant_requests_are_unaffected_by_the_tenant_machinery() {
+    let sys = quick_sys();
+    let g = zoo::build("squeezenet1_1").unwrap();
+    // A request that never mentions tenants must produce the same
+    // exploration whether or not a roster exists in the config, at any
+    // worker count.
+    let base = exploration_fp(&ExploreRequest::chain().jobs(1).run(&g, &sys));
+    assert_eq!(
+        base,
+        exploration_fp(&ExploreRequest::chain().jobs(4).run(&g, &sys)),
+        "--jobs changed the single-tenant exploration"
+    );
+    let mut with_roster = sys.clone();
+    with_roster.tenants = roster().tenants;
+    assert_eq!(
+        base,
+        exploration_fp(&ExploreRequest::chain().jobs(1).run(&g, &with_roster)),
+        "a configured [[tenants]] roster leaked into single-tenant runs"
+    );
+}

@@ -315,6 +315,51 @@ impl Default for AdaptiveCfg {
     }
 }
 
+/// Fault-ensemble robustness-scoring settings, consumed by
+/// `sim::chaos::score_robustness` (opt-in via `ExploreRequest::chaos`
+/// or `partir simulate --chaos`). TOML section `[chaos]` with keys
+/// `ensemble`, `faults`, `cvar_q`, `slo_band`, `epoch_ms`, `requests`,
+/// `rate`; the `--ensemble`/`--faults` CLI flags override the file.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosCfg {
+    /// Generated ensemble members. `0` is a legal no-op: scoring
+    /// reduces to the fault-free baseline run.
+    pub ensemble: usize,
+    /// Platforms crashed together in the k-node-crash and rack-loss
+    /// catalog entries (clamped to the inventory size at generation).
+    pub faults: usize,
+    /// CVaR tail quantile `q` in `(0, 1]`: the robustness score
+    /// averages the worst `ceil(q * members)` goodputs.
+    pub cvar_q: f64,
+    /// Recovery band as a fraction of fault-free goodput in `(0, 1]`:
+    /// a post-fault epoch counts as recovered once its goodput
+    /// re-enters `slo_band * baseline`.
+    pub slo_band: f64,
+    /// Epoch length (s) for time-to-recover scoring, on the virtual
+    /// clock (same grid semantics as `AdaptiveCfg::epoch_s`).
+    pub epoch_s: f64,
+    /// Requests per member run when the robustness stage synthesizes
+    /// its own scenario (`ExploreRequest::chaos`).
+    pub requests: usize,
+    /// Arrival rate (req/s) for the synthesized scenario; `0` = derive
+    /// from the front (1.5x the best candidate's analytic throughput).
+    pub rate: f64,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        Self {
+            ensemble: 16,
+            faults: 2,
+            cvar_q: 0.25,
+            slo_band: 0.8,
+            epoch_s: 0.2,
+            requests: 20_000,
+            rate: 0.0,
+        }
+    }
+}
+
 /// Per-platform replica inventory for cluster-scale DSE (the edge-cluster
 /// extension: Parthasarathy & Krishnamachari partition a DNN *and*
 /// replicate its bottleneck stages across the cluster's nodes).
@@ -380,6 +425,10 @@ pub struct SystemConfig {
     pub serving: ServingCfg,
     /// Adaptive-serving controller settings (`--adaptive`).
     pub adaptive: AdaptiveCfg,
+    /// Fault-ensemble robustness-scoring settings (`--chaos`,
+    /// `ExploreRequest::chaos`). Carried unconditionally — the stage
+    /// itself is opt-in.
+    pub chaos: ChaosCfg,
     /// Directory for the persistent layer-cost cache (`costcache_v1.json`,
     /// see `hw::CostCache::{save_to, load_from}`). `None` = in-memory
     /// only. Repeated sweeps under the same search settings become pure
@@ -440,6 +489,7 @@ impl SystemConfig {
             qat: false,
             serving: ServingCfg::default(),
             adaptive: AdaptiveCfg::default(),
+            chaos: ChaosCfg::default(),
             cache_dir: None,
             replication: None,
             tenants: Vec::new(),
@@ -634,6 +684,48 @@ impl SystemConfig {
             }
             if let Some(p) = a.get("probe_after").as_usize() {
                 cfg.adaptive.probe_after = p;
+            }
+        }
+        let c = doc.get("chaos");
+        if let Json::Obj(_) = c {
+            if let Some(n) = c.get("ensemble").as_usize() {
+                cfg.chaos.ensemble = n;
+            }
+            if let Some(k) = c.get("faults").as_usize() {
+                if k == 0 {
+                    return Err("chaos.faults must be at least 1".into());
+                }
+                cfg.chaos.faults = k;
+            }
+            if let Some(q) = c.get("cvar_q").as_f64() {
+                if !q.is_finite() || q <= 0.0 || q > 1.0 {
+                    return Err(format!("chaos.cvar_q {q} must be in (0, 1]"));
+                }
+                cfg.chaos.cvar_q = q;
+            }
+            if let Some(b) = c.get("slo_band").as_f64() {
+                if !b.is_finite() || b <= 0.0 || b > 1.0 {
+                    return Err(format!("chaos.slo_band {b} must be in (0, 1]"));
+                }
+                cfg.chaos.slo_band = b;
+            }
+            if let Some(e) = c.get("epoch_ms").as_f64() {
+                if !e.is_finite() || e <= 0.0 {
+                    return Err(format!("chaos.epoch_ms {e} must be > 0"));
+                }
+                cfg.chaos.epoch_s = e * 1e-3;
+            }
+            if let Some(r) = c.get("requests").as_usize() {
+                if r == 0 {
+                    return Err("chaos.requests must be at least 1".into());
+                }
+                cfg.chaos.requests = r;
+            }
+            if let Some(r) = c.get("rate").as_f64() {
+                if !r.is_finite() || r < 0.0 {
+                    return Err(format!("chaos.rate {r} must be >= 0"));
+                }
+                cfg.chaos.rate = r;
             }
         }
         if let Json::Obj(_) = doc.get("replication") {
@@ -892,6 +984,43 @@ weight = 2.0
             "[adaptive]\nepoch_ms = -5\n",
             "[adaptive]\nhysteresis = 0\n",
             "[adaptive]\nimprove_factor = 0.5\n",
+        ] {
+            let doc = tomlite::parse(bad).unwrap();
+            assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");
+        }
+    }
+
+    #[test]
+    fn chaos_section_parses_and_validates() {
+        let doc = tomlite::parse(
+            "[chaos]\nensemble = 8\nfaults = 3\ncvar_q = 0.5\nslo_band = 0.9\nepoch_ms = 100\nrequests = 5000\nrate = 800.0\n",
+        )
+        .unwrap();
+        let cfg = SystemConfig::from_json(&doc).unwrap();
+        assert_eq!(cfg.chaos.ensemble, 8);
+        assert_eq!(cfg.chaos.faults, 3);
+        assert!((cfg.chaos.cvar_q - 0.5).abs() < 1e-12);
+        assert!((cfg.chaos.slo_band - 0.9).abs() < 1e-12);
+        assert!((cfg.chaos.epoch_s - 0.1).abs() < 1e-12);
+        assert_eq!(cfg.chaos.requests, 5000);
+        assert!((cfg.chaos.rate - 800.0).abs() < 1e-12);
+        // Defaults when absent; an empty ensemble is legal (no-op).
+        let d = SystemConfig::paper_two_platform().chaos;
+        assert_eq!(d, ChaosCfg::default());
+        assert_eq!(d.ensemble, 16);
+        assert_eq!(d.faults, 2);
+        let doc = tomlite::parse("[chaos]\nensemble = 0\n").unwrap();
+        assert_eq!(SystemConfig::from_json(&doc).unwrap().chaos.ensemble, 0);
+        // Degenerate values rejected.
+        for bad in [
+            "[chaos]\nfaults = 0\n",
+            "[chaos]\ncvar_q = 0\n",
+            "[chaos]\ncvar_q = 1.5\n",
+            "[chaos]\nslo_band = 0\n",
+            "[chaos]\nslo_band = 2.0\n",
+            "[chaos]\nepoch_ms = 0\n",
+            "[chaos]\nrequests = 0\n",
+            "[chaos]\nrate = -1.0\n",
         ] {
             let doc = tomlite::parse(bad).unwrap();
             assert!(SystemConfig::from_json(&doc).is_err(), "accepted: {bad}");

@@ -143,6 +143,26 @@ pub struct CandidateMetrics {
     pub violation: f64,
     /// Human-readable description of each violated constraint.
     pub violations: Vec<String>,
+    /// Simulated fault-ensemble robustness (worst/mean/CVaR goodput +
+    /// recovery), filled by the opt-in `ExploreRequest::chaos` stage;
+    /// `None` when the candidate was never ensemble-scored.
+    pub robustness: Option<RobustMetrics>,
+}
+
+/// Fault-ensemble robustness summary attached to a candidate by
+/// `sim::chaos::score_robustness` (the analytic metrics stay untouched;
+/// these are *simulated under faults*).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustMetrics {
+    /// Lowest goodput across all ensemble members (req/s).
+    pub worst_goodput: f64,
+    /// Mean goodput across ensemble members (req/s).
+    pub mean_goodput: f64,
+    /// CVaR@q tail goodput: mean of the worst `ceil(q*N)` members.
+    pub cvar_goodput: f64,
+    /// Worst time-to-recover across members: epochs after the last
+    /// fault clears until goodput re-enters the SLO band.
+    pub ttr_epochs: u64,
 }
 
 impl CandidateMetrics {
@@ -310,6 +330,11 @@ pub struct Exploration {
     pub nsga_front: Vec<usize>,
     /// Definition-2 favorite among feasible candidates.
     pub favorite: Option<usize>,
+    /// Ensemble-ranked robustness favorite among the serving
+    /// candidates (`ExploreRequest::chaos`): the candidate with the
+    /// best worst-case goodput under the fault ensemble. `None` until
+    /// the opt-in robustness stage runs.
+    pub robust_favorite: Option<usize>,
     /// Wall-time breakdown of the phases.
     pub timing: ExplorationTiming,
 }
@@ -668,6 +693,7 @@ impl<'a> PlanEvaluator<'a> {
             assign: None,
             violation: lean.violation,
             violations: std::mem::take(&mut scratch.violations),
+            robustness: None,
         }
     }
 
@@ -1080,6 +1106,7 @@ impl<'a> PlanEvaluator<'a> {
                     assign: Some(assign.to_vec()),
                     violation: lean.violation,
                     violations: std::mem::take(&mut scratch.violations),
+                    robustness: None,
                 }
             }
         }
@@ -1965,6 +1992,7 @@ pub(crate) fn explore_two_platform_with(ev: &PlanEvaluator, graph_s: f64) -> Exp
         pareto,
         nsga_front,
         favorite,
+        robust_favorite: None,
         timing: ExplorationTiming {
             graph_s,
             hw_eval_s: ev.hw_eval_s,

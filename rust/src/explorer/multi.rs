@@ -177,6 +177,7 @@ pub(crate) fn explore_chain_with(ev: &PlanEvaluator) -> Exploration {
         pareto,
         nsga_front,
         favorite,
+        robust_favorite: None,
         timing: ExplorationTiming {
             graph_s: 0.0,
             hw_eval_s: ev.hw_eval_s,

@@ -266,6 +266,7 @@ impl<'a, 'b> DagReference<'a, 'b> {
             assign: Some(dp.assign),
             violation,
             violations,
+            robustness: None,
         }
     }
 }

@@ -48,8 +48,8 @@
 //! assert!(ex.favorite.is_some());
 //! ```
 
-use super::{dag, multi, tenants, Exploration, JointExploration};
-use crate::config::{ReplicationCfg, SystemConfig, TenantSet};
+use super::{dag, multi, tenants, Exploration, JointExploration, RobustMetrics};
+use crate::config::{ChaosCfg, ReplicationCfg, SystemConfig, TenantSet};
 use crate::graph::Graph;
 use crate::hw::CostCache;
 use std::sync::Arc;
@@ -83,6 +83,7 @@ pub struct ExploreRequest {
     jobs: Option<usize>,
     replication: Option<ReplicationCfg>,
     tenants: Option<TenantSet>,
+    chaos: Option<ChaosCfg>,
 }
 
 impl ExploreRequest {
@@ -135,6 +136,20 @@ impl ExploreRequest {
     /// single-tenant and bit-identical to pre-tenant releases.
     pub fn tenants(mut self, set: TenantSet) -> Self {
         self.tenants = Some(set);
+        self
+    }
+
+    /// Score the explored serving set against a seeded fault ensemble
+    /// after the search finishes (`sim::score_robustness`): every
+    /// serving candidate gains
+    /// [`CandidateMetrics::robustness`](super::CandidateMetrics) and
+    /// the exploration gains
+    /// [`Exploration::robust_favorite`](super::Exploration) — the plan
+    /// that wins on worst-case goodput over the ensemble, surfaced
+    /// alongside the throughput favorite. Opt-in: requests without this
+    /// knob are bit-identical to pre-chaos releases.
+    pub fn chaos(mut self, cfg: ChaosCfg) -> Self {
+        self.chaos = Some(cfg);
         self
     }
 
@@ -211,19 +226,47 @@ impl Explorer {
         let cache = req.cache.clone().unwrap_or_else(|| Arc::new(CostCache::new()));
         let mode = req.mode;
         let t0 = crate::obs::mark(effective.obs.registry());
-        let out = multi::explore_pool(graphs, &effective, cache, move |g, sys, cache| match mode {
-            ExploreMode::Dag => dag::explore_dag_impl(g, sys, cache),
-            ExploreMode::Chain if sys.platforms.len() == 2 && sys.replication.is_none() => {
-                super::explore_two_platform_impl(g, sys, cache)
+        let mut out =
+            multi::explore_pool(graphs, &effective, cache, move |g, sys, cache| match mode {
+                ExploreMode::Dag => dag::explore_dag_impl(g, sys, cache),
+                ExploreMode::Chain if sys.platforms.len() == 2 && sys.replication.is_none() => {
+                    super::explore_two_platform_impl(g, sys, cache)
+                }
+                ExploreMode::Chain => multi::explore_chain_impl(g, sys, cache),
+            });
+        if let Some(ccfg) = &req.chaos {
+            for ex in &mut out {
+                apply_chaos(ex, &effective, ccfg);
             }
-            ExploreMode::Chain => multi::explore_chain_impl(g, sys, cache),
-        });
+        }
         if let Some(reg) = effective.obs.registry() {
             reg.wall_span(format!("explore request ({} model(s))", graphs.len()), 0, t0);
             reg.counter("explorer.requests").inc();
         }
         out
     }
+}
+
+/// The post-exploration robustness stage (`ExploreRequest::chaos`):
+/// score the serving set against the seeded fault ensemble and fold
+/// the distilled metrics back onto the exploration. Purely additive —
+/// fronts, favorites and candidate metrics other than `robustness` are
+/// untouched, so chaos-enabled runs stay bit-identical to plain ones on
+/// everything the DSE determinism tests compare.
+fn apply_chaos(ex: &mut Exploration, sys: &SystemConfig, ccfg: &ChaosCfg) {
+    use crate::sim::{chaos_base_scenario, score_robustness, SimCfg};
+    let base = chaos_base_scenario(ex, ccfg);
+    let cfg = SimCfg::from_system(sys);
+    let rep = score_robustness(ex, sys, &base, &cfg, ccfg, sys.jobs.max(1));
+    for s in &rep.scores {
+        ex.candidates[s.candidate].robustness = Some(RobustMetrics {
+            worst_goodput: s.worst_goodput,
+            mean_goodput: s.mean_goodput,
+            cvar_goodput: s.cvar_goodput,
+            ttr_epochs: s.ttr_epochs,
+        });
+    }
+    ex.robust_favorite = rep.robust_favorite;
 }
 
 #[cfg(test)]
@@ -313,6 +356,40 @@ mod tests {
             for s in &c.plan {
                 let cap = [3usize, 1][s.platform];
                 assert!(s.replicas <= cap, "{}: over inventory", c.label);
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_request_scores_the_serving_set_and_stays_additive() {
+        let g = zoo::tiny_cnn(10);
+        let sys = quick_sys();
+        let ccfg =
+            crate::config::ChaosCfg { ensemble: 4, requests: 2000, ..Default::default() };
+        let plain = ExploreRequest::chain().run(&g, &sys);
+        let ex = ExploreRequest::chain().chaos(ccfg).run(&g, &sys);
+        // Additive: fronts, favorite and per-candidate metrics move not
+        // one bit; only the robustness columns appear.
+        assert_eq!(ex.pareto, plain.pareto);
+        assert_eq!(ex.nsga_front, plain.nsga_front);
+        assert_eq!(ex.favorite, plain.favorite);
+        assert!(plain.robust_favorite.is_none(), "chaos must be opt-in");
+        for (a, b) in ex.candidates.iter().zip(&plain.candidates) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.latency_s.to_bits(), b.latency_s.to_bits());
+            assert_eq!(a.throughput.to_bits(), b.throughput.to_bits());
+        }
+        let rf = ex.robust_favorite.expect("chaos request surfaced no robust favorite");
+        let serving = ex.serving_candidates();
+        assert!(serving.contains(&rf), "robust favorite outside the serving set");
+        for &i in &serving {
+            let r = ex.candidates[i].robustness.expect("serving candidate unscored");
+            assert!(r.worst_goodput <= r.cvar_goodput + 1e-12);
+            assert!(r.cvar_goodput <= r.mean_goodput + 1e-12);
+        }
+        for (i, c) in ex.candidates.iter().enumerate() {
+            if !serving.contains(&i) {
+                assert!(c.robustness.is_none(), "non-serving candidate scored");
             }
         }
     }

@@ -16,11 +16,11 @@
 //!                   Pareto front at millions-of-requests scale
 //!   * `report`    — regenerate every paper figure/table into reports/
 
-use partir::config::{FairnessPolicy, SystemConfig, TenantSet};
+use partir::config::{ChaosCfg, FairnessPolicy, SystemConfig, TenantSet};
 use partir::coordinator::{
     run_pipeline, simulated_specs_from_plan, BatchPolicy, PipelineCfg, StageComputeSpec, StageSpec,
 };
-use partir::explorer::{multi, ExploreRequest};
+use partir::explorer::{multi, Exploration, ExploreRequest};
 use partir::graph::topo::{topo_sort, TieBreak};
 use partir::hw::{CacheLoad, CostCache, HwEvaluator};
 use partir::report;
@@ -69,7 +69,9 @@ fn print_usage() {
          \x20 pipeline   run partitioned inference on AOT artifacts (--model: explored plan on simulated stages)\n\
          \x20 simulate   discrete-event serving simulation of the explored Pareto front\n\
          \x20            (scenario presets: steady | burst | diurnal | degraded | failover, or a TOML file;\n\
-         \x20            --adaptive: live re-partitioning under drift and node loss)\n\
+         \x20            --adaptive: live re-partitioning under drift and node loss;\n\
+         \x20            --chaos on|PRESET [--faults K --ensemble N]: fault-ensemble robustness\n\
+         \x20            scoring — worst-case/CVaR goodput and a robust favorite)\n\
          \x20 explore/simulate --tenants a,b,c   multi-tenant co-scheduling: joint DSE over shared\n\
          \x20            inventory, then shared-cluster serving (--fairness fifo|priority|round-robin)\n\
          \x20 report     regenerate all paper figures into reports/\n\n\
@@ -274,6 +276,84 @@ fn tenant_set_arg(args: &Args, sys: &SystemConfig) -> anyhow::Result<Option<Tena
     Ok(Some(set))
 }
 
+/// `--chaos on|PRESET` (+ `--faults`, `--ensemble`): fault-ensemble
+/// robustness scoring. CLI flags beat the config file's `[chaos]`
+/// section key-by-key; `--faults`/`--ensemble` without `--chaos` is an
+/// error rather than a silent no-op. `Ok(None)` means chaos scoring is
+/// off for this run.
+fn chaos_cfg_arg(args: &Args, sys: &SystemConfig) -> anyhow::Result<Option<(String, ChaosCfg)>> {
+    let Some(preset) = args.get("chaos") else {
+        anyhow::ensure!(
+            args.get("faults").is_none() && args.get("ensemble").is_none(),
+            "--faults/--ensemble need --chaos"
+        );
+        return Ok(None);
+    };
+    anyhow::ensure!(
+        preset == "on" || Scenario::builtin_names().contains(&preset),
+        "bad --chaos '{preset}' (use 'on' or a scenario preset: {})",
+        Scenario::builtin_names().join(" | ")
+    );
+    let mut ccfg = sys.chaos;
+    if let Some(k) = args.get_usize("faults").map_err(anyhow::Error::msg)? {
+        anyhow::ensure!(k >= 1, "--faults must be at least 1");
+        ccfg.faults = k;
+    }
+    if let Some(n) = args.get_usize("ensemble").map_err(anyhow::Error::msg)? {
+        ccfg.ensemble = n;
+    }
+    Ok(Some((preset.to_string(), ccfg)))
+}
+
+/// The scenario a `simulate --chaos` ensemble expands: `on` derives a
+/// steady overload base from the explored front (same rule as
+/// `ExploreRequest::chaos`); a preset name builds that preset at the
+/// chaos request count, so every fault catalog composes with every
+/// traffic shape. `--slo-ms` carries over so goodput means the same
+/// thing in the ranking and in the robustness table.
+fn chaos_base(
+    preset: &str,
+    ccfg: &ChaosCfg,
+    ex: &Exploration,
+    deadline_s: Option<f64>,
+    platforms: usize,
+) -> anyhow::Result<Scenario> {
+    let mut base = if preset == "on" {
+        sim::chaos_base_scenario(ex, ccfg)
+    } else {
+        let rate = if ccfg.rate > 0.0 {
+            ccfg.rate
+        } else {
+            let best = ex.candidates.iter().map(|c| c.throughput).fold(0.0f64, f64::max);
+            if best > 0.0 && best.is_finite() {
+                1.5 * best
+            } else {
+                1000.0
+            }
+        };
+        Scenario::by_name(preset, ccfg.requests.max(1), rate).unwrap()
+    };
+    base.deadline_s = deadline_s.or(base.deadline_s);
+    base.validate(Some(platforms))
+        .map_err(|e| anyhow::anyhow!("chaos base '{}': {e}", base.name))?;
+    Ok(base)
+}
+
+/// `--adaptive --tenants` is rejected with a named error (not silently
+/// ignored): the adaptive controller re-partitions one model's serving
+/// plan and has no notion of a shared roster yet. Tracked in ROADMAP.md
+/// under "Deepen multi-tenant co-scheduling" ("adaptive serving for
+/// tenant rosters").
+fn reject_adaptive_tenants(adaptive: bool, tenants: bool) -> anyhow::Result<()> {
+    anyhow::ensure!(
+        !(adaptive && tenants),
+        "--adaptive cannot be combined with --tenants: the adaptive controller serves a \
+         single model's plan; multi-tenant adaptive serving is an open item in ROADMAP.md \
+         (\"Deepen multi-tenant co-scheduling\")"
+    );
+    Ok(())
+}
+
 fn build_model(args: &Args) -> anyhow::Result<partir::graph::Graph> {
     let name = args.get("model").unwrap_or("resnet50");
     zoo::build(name)
@@ -311,6 +391,9 @@ fn explore_cmd() -> Command {
         .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
         .opt("tenants", None, "co-schedule these zoo models jointly (comma-separated; multi-tenant DSE)")
         .opt("fairness", None, "multi-tenant batching policy: fifo | priority | round-robin")
+        .opt("chaos", None, "score fault-ensemble robustness over the serving set and surface the robust favorite (value: on)")
+        .opt("faults", None, "faults per ensemble member: k-node crash width / rack size (default: [chaos] faults)")
+        .opt("ensemble", None, "fault-ensemble members to expand (default: [chaos] ensemble; 0 = baseline only)")
         .opt("trace-out", None, "write a Chrome/Perfetto trace of the exploration here")
         .opt("metrics-out", None, "write a metrics snapshot here (.csv or .json)")
         .flag("dag", "also search convex DAG partitions (branch-parallel stages across platforms)")
@@ -340,7 +423,13 @@ fn run_joint_exploration(
 
 fn cmd_explore(args: &Args) -> anyhow::Result<()> {
     let sys = load_sys(args)?;
+    let chaos = chaos_cfg_arg(args, &sys)?;
     if let Some(set) = tenant_set_arg(args, &sys)? {
+        anyhow::ensure!(
+            chaos.is_none(),
+            "--chaos is not supported with --tenants yet (robustness scoring covers \
+             single-model serving sets)"
+        );
         run_joint_exploration(&sys, set)?;
         if args.get("out").is_some() {
             eprintln!("note: --out is ignored with --tenants; use `simulate --tenants --out`");
@@ -354,7 +443,15 @@ fn cmd_explore(args: &Args) -> anyhow::Result<()> {
         "explore needs a 2-platform config; use `chain` for longer chains"
     );
     let cache = open_cache(&sys);
-    let req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    let mut req = if args.flag("dag") { ExploreRequest::dag() } else { ExploreRequest::chain() };
+    if let Some((preset, ccfg)) = &chaos {
+        anyhow::ensure!(
+            preset == "on",
+            "explore scores robustness against a derived steady base — use `--chaos on` \
+             (scenario presets select the ensemble base under `simulate --chaos`)"
+        );
+        req = req.chaos(*ccfg);
+    }
     let ex = req.with_cache(Arc::clone(&cache)).run(&g, &sys);
     persist_cache(&sys, &cache);
     if let Some(rep) = &sys.replication {
@@ -670,6 +767,9 @@ fn simulate_cmd() -> Command {
     .opt("replicas", None, "search per-stage replication, up to N nodes per platform slot")
     .opt("tenants", None, "co-schedule these zoo models jointly and serve them on the shared cluster (comma-separated)")
     .opt("fairness", None, "multi-tenant batching policy: fifo | priority | round-robin")
+    .opt("chaos", None, "score fault-ensemble robustness: 'on' (derived steady base) or a scenario preset as the ensemble base; composes with --adaptive")
+    .opt("faults", None, "faults per ensemble member: k-node crash width / rack size (default: [chaos] faults)")
+    .opt("ensemble", None, "fault-ensemble members to expand (default: [chaos] ensemble; 0 = baseline only)")
     .opt("epoch-ms", None, "adaptive control-epoch length in ms (overrides [adaptive] epoch_ms)")
     .opt("hysteresis", None, "unhealthy epochs before the adaptive controller migrates (>= 1)")
     .opt("trace-out", None, "write a Chrome/Perfetto trace here (--adaptive adds migration spans)")
@@ -697,10 +797,13 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
     // of every joint candidate. Arrival rates and SLOs are per tenant
     // (from the roster); a named scenario contributes only its fault
     // windows, and `--slo-ms` fills in tenants without their own SLO.
+    let chaos = chaos_cfg_arg(args, &sys)?;
     if let Some(mut set) = tenant_set_arg(args, &sys)? {
+        reject_adaptive_tenants(args.flag("adaptive"), true)?;
         anyhow::ensure!(
-            !args.flag("adaptive"),
-            "--adaptive is not supported with --tenants yet"
+            chaos.is_none(),
+            "--chaos is not supported with --tenants yet (robustness scoring covers \
+             single-model serving sets)"
         );
         if let Some(ms) = args.get_f64("slo-ms").map_err(anyhow::Error::msg)? {
             for t in &mut set.tenants {
@@ -817,6 +920,56 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
             anyhow::ensure!(h >= 1, "--hysteresis must be at least 1");
             sys.adaptive.hysteresis = h;
         }
+        // --adaptive --chaos: run the static/adaptive/oracle three-way
+        // comparison under every ensemble member instead of one
+        // scenario — does the controller's win survive the whole fault
+        // distribution?
+        if let Some((preset, ccfg)) = &chaos {
+            let cfg = SimCfg::from_system(&sys);
+            let base =
+                chaos_base(preset, ccfg, &ex, scenario.deadline_s, sys.platforms.len())?;
+            let ensemble =
+                sim::FaultEnsemble::generate(&base, ccfg, sys.platforms.len(), cfg.seed);
+            let t0 = std::time::Instant::now();
+            let cmps = sim::compare_adaptive_ensemble(
+                &ex,
+                &sys,
+                &ensemble,
+                &cfg,
+                &sys.adaptive,
+                sys.jobs.max(1),
+            );
+            println!(
+                "model {} — chaos base '{}': {} ensemble member(s), {} fault(s)/member, \
+                 adaptive three-way comparison in {}\n",
+                ex.model,
+                base.name,
+                ensemble.members.len(),
+                ccfg.faults,
+                fmt_time_s(t0.elapsed().as_secs_f64()),
+            );
+            println!(
+                "{:<34} {:>12} {:>12} {:>12} {:>6}",
+                "member", "static", "adaptive", "oracle", "moves"
+            );
+            let mut h = partir::util::hash::Fnv64::new();
+            for (m, c) in ensemble.members.iter().zip(&cmps) {
+                println!(
+                    "{:<34} {:>12} {:>12} {:>12} {:>6}",
+                    m.label,
+                    partir::util::units::fmt_throughput(c.static_report.goodput),
+                    partir::util::units::fmt_throughput(c.adaptive.report.goodput),
+                    partir::util::units::fmt_throughput(c.oracle.report.goodput),
+                    c.adaptive.migrations.len(),
+                );
+                h.write_u64(c.static_report.fingerprint());
+                h.write_u64(c.adaptive.fingerprint());
+                h.write_u64(c.oracle.fingerprint());
+            }
+            println!("ensemble fingerprint: {:016x}", h.finish());
+            finish_obs(&sys.obs)?;
+            return Ok(());
+        }
         let cfg = SimCfg::from_system(&sys);
         let t0 = std::time::Instant::now();
         let cmp =
@@ -867,6 +1020,22 @@ fn cmd_simulate(args: &Args) -> anyhow::Result<()> {
         h.write_u64(r.fingerprint);
     }
     println!("ranking fingerprint: {:016x}", h.finish());
+    // 4. Chaos: expand the fault ensemble over the serving set and rank
+    // by worst-case goodput next to the throughput ranking above.
+    if let Some((preset, ccfg)) = &chaos {
+        let base = chaos_base(preset, ccfg, &ex, scenario.deadline_s, sys.platforms.len())?;
+        let t0 = std::time::Instant::now();
+        let rep = sim::score_robustness(&ex, &sys, &base, &cfg, ccfg, sys.jobs.max(1));
+        println!(
+            "\nchaos base '{}': {} ensemble member(s), {} fault(s)/member, scored in {}",
+            base.name,
+            ccfg.ensemble,
+            ccfg.faults,
+            fmt_time_s(t0.elapsed().as_secs_f64()),
+        );
+        print!("{}", rep.render());
+        println!("robustness fingerprint: {:016x}", rep.fingerprint());
+    }
     if let Some(out) = args.get("out") {
         report::sim_csv(&ranked).write_file(Path::new(out))?;
         println!("wrote {out}");
@@ -902,4 +1071,59 @@ fn cmd_report(args: &Args) -> anyhow::Result<()> {
         &obs,
     )?;
     finish_obs(&obs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(cmd: Command, raw: &[&str]) -> Args {
+        let raw: Vec<String> = raw.iter().map(|s| s.to_string()).collect();
+        cmd.parse(&raw).expect("flags parse")
+    }
+
+    #[test]
+    fn adaptive_with_tenants_is_a_named_cli_error() {
+        // The rejection sits on the parsed-args path: the exact flag
+        // combination a user would type must produce an error naming
+        // both flags and pointing at the ROADMAP item.
+        let args =
+            parse(simulate_cmd(), &["--tenants", "squeezenet1_1,vgg16", "--adaptive"]);
+        assert!(args.flag("adaptive"));
+        let err = reject_adaptive_tenants(args.flag("adaptive"), args.get("tenants").is_some())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("--adaptive"), "error must name --adaptive: {err}");
+        assert!(err.contains("--tenants"), "error must name --tenants: {err}");
+        assert!(err.contains("ROADMAP.md"), "error must point at the roadmap: {err}");
+        // Either flag alone stays legal.
+        assert!(reject_adaptive_tenants(true, false).is_ok());
+        assert!(reject_adaptive_tenants(false, true).is_ok());
+    }
+
+    #[test]
+    fn chaos_flags_override_the_config_section() {
+        let sys = SystemConfig::paper_two_platform();
+        let args = parse(simulate_cmd(), &["--chaos", "on", "--faults", "3", "--ensemble", "8"]);
+        let (preset, ccfg) = chaos_cfg_arg(&args, &sys).unwrap().expect("chaos is on");
+        assert_eq!(preset, "on");
+        assert_eq!(ccfg.faults, 3);
+        assert_eq!(ccfg.ensemble, 8);
+        // Untouched keys keep the [chaos] section's values.
+        assert_eq!(ccfg.cvar_q, sys.chaos.cvar_q);
+
+        // A scenario preset is a legal base; garbage is not.
+        let args = parse(simulate_cmd(), &["--chaos", "degraded"]);
+        let (preset, _) = chaos_cfg_arg(&args, &sys).unwrap().unwrap();
+        assert_eq!(preset, "degraded");
+        let args = parse(simulate_cmd(), &["--chaos", "nope"]);
+        assert!(chaos_cfg_arg(&args, &sys).is_err());
+
+        // --faults/--ensemble without --chaos is an error, not a no-op.
+        let args = parse(simulate_cmd(), &["--faults", "2"]);
+        assert!(chaos_cfg_arg(&args, &sys).is_err());
+        // And no chaos flags at all means scoring stays off.
+        let args = parse(simulate_cmd(), &[]);
+        assert!(chaos_cfg_arg(&args, &sys).unwrap().is_none());
+    }
 }

@@ -29,8 +29,24 @@ pub fn fig2_csv(ex: &Exploration) -> Csv {
         "pareto",
         "favorite",
         "mode",
+        "robust_favorite",
+        "robust_worst_ips",
+        "robust_mean_ips",
+        "robust_cvar_ips",
+        "robust_ttr_epochs",
     ]);
     for (i, c) in ex.candidates.iter().enumerate() {
+        // Robustness columns stay empty for unscored candidates
+        // (chaos scoring is opt-in and covers the serving set only).
+        let (worst, mean, cvar, ttr) = match c.robustness {
+            Some(r) => (
+                num(r.worst_goodput),
+                num(r.mean_goodput),
+                num(r.cvar_goodput),
+                r.ttr_epochs.to_string(),
+            ),
+            None => Default::default(),
+        };
         csv.row(&[
             c.label.clone(),
             c.positions.first().map(|p| p.to_string()).unwrap_or_default(),
@@ -46,6 +62,11 @@ pub fn fig2_csv(ex: &Exploration) -> Csv {
             ex.pareto.contains(&i).to_string(),
             (ex.favorite == Some(i)).to_string(),
             candidate_mode(c).to_string(),
+            (ex.robust_favorite == Some(i)).to_string(),
+            worst,
+            mean,
+            cvar,
+            ttr,
         ]);
     }
     csv
@@ -141,6 +162,9 @@ pub fn render_exploration(ex: &Exploration, sys: &SystemConfig) -> String {
         if ex.favorite == Some(i) {
             flags.push('*');
         }
+        if ex.robust_favorite == Some(i) {
+            flags.push('R');
+        }
         if c.branch_parallel() {
             flags.push('D');
         }
@@ -169,6 +193,21 @@ pub fn render_exploration(ex: &Exploration, sys: &SystemConfig) -> String {
                 .join("+"),
             f.label
         ));
+    }
+    if let Some(r) = ex.robust_favorite {
+        let c = &ex.candidates[r];
+        match c.robustness {
+            Some(m) => out.push_str(&format!(
+                "robust favorite (worst-case goodput over the fault ensemble): {} \
+                 (worst {}, cvar {}, mean {}, ttr {} epoch(s))\n",
+                c.label,
+                fmt_throughput(m.worst_goodput),
+                fmt_throughput(m.cvar_goodput),
+                fmt_throughput(m.mean_goodput),
+                m.ttr_epochs,
+            )),
+            None => out.push_str(&format!("robust favorite: {}\n", c.label)),
+        }
     }
     out
 }
@@ -208,6 +247,9 @@ pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
         "p99_ms",
         "completed",
         "dropped",
+        "dropped_queue_full",
+        "dropped_node_down",
+        "dropped_slo_expired",
         "slo_violations",
         "energy_j",
         "fingerprint",
@@ -223,6 +265,9 @@ pub fn sim_csv(ranked: &[crate::sim::RankedCandidate]) -> Csv {
             num(r.p99_s * 1e3),
             r.completed.to_string(),
             r.dropped.to_string(),
+            r.dropped_queue_full.to_string(),
+            r.dropped_node_down.to_string(),
+            r.dropped_slo_expired.to_string(),
             r.slo_violations.to_string(),
             num(r.energy_j),
             format!("{:016x}", r.fingerprint),
@@ -246,6 +291,9 @@ pub fn tenant_sim_csv(ranked: &[crate::sim::RankedJoint]) -> Csv {
         "p99_ms",
         "completed",
         "dropped",
+        "dropped_queue_full",
+        "dropped_node_down",
+        "dropped_slo_expired",
         "slo_violations",
         "energy_j",
         "fingerprint",
@@ -261,6 +309,11 @@ pub fn tenant_sim_csv(ranked: &[crate::sim::RankedJoint]) -> Csv {
             String::new(),
             r.report.tenants.iter().map(|t| t.completed).sum::<u64>().to_string(),
             r.report.tenants.iter().map(|t| t.dropped).sum::<u64>().to_string(),
+            // The shared-bank tenant simulator keeps per-tenant totals
+            // only — the by-cause split exists on single-tenant rows.
+            String::new(),
+            String::new(),
+            String::new(),
             r.report.tenants.iter().map(|t| t.slo_violations).sum::<u64>().to_string(),
             num(r.report.energy_j),
             format!("{:016x}", r.report.fingerprint()),
@@ -276,6 +329,9 @@ pub fn tenant_sim_csv(ranked: &[crate::sim::RankedJoint]) -> Csv {
                 num(t.p99_s * 1e3),
                 t.completed.to_string(),
                 t.dropped.to_string(),
+                String::new(),
+                String::new(),
+                String::new(),
                 t.slo_violations.to_string(),
                 num(t.energy_j),
                 String::new(),
@@ -392,6 +448,59 @@ mod tests {
     }
 
     #[test]
+    fn fig2_csv_robustness_columns_fill_for_scored_candidates_only() {
+        use crate::explorer::RobustMetrics;
+        let (mut ex, _) = quick_ex();
+        let fav = ex.favorite.expect("quick exploration has a favorite");
+        ex.candidates[fav].robustness = Some(RobustMetrics {
+            worst_goodput: 640.0,
+            mean_goodput: 810.0,
+            cvar_goodput: 700.0,
+            ttr_epochs: 3,
+        });
+        ex.robust_favorite = Some(fav);
+        let csv = fig2_csv(&ex);
+        let text = csv.to_string();
+        assert!(
+            text.lines().next().unwrap().ends_with(
+                "robust_favorite,robust_worst_ips,robust_mean_ips,robust_cvar_ips,robust_ttr_epochs"
+            ),
+            "robustness columns missing from the header"
+        );
+        // The scored favorite carries its metrics and the true flag …
+        assert!(text.contains(",true,640,810,700,3"), "scored row missing values:\n{text}");
+        // … every unscored candidate keeps all five cells empty.
+        let empty_tail = text.lines().skip(1).filter(|l| l.ends_with(",false,,,,")).count();
+        assert_eq!(empty_tail, ex.candidates.len() - 1, "unscored rows should stay empty");
+    }
+
+    #[test]
+    fn render_exploration_mentions_robust_favorite_when_scored() {
+        use crate::explorer::RobustMetrics;
+        let (mut ex, sys) = quick_ex();
+        // Unscored exploration: no robust-favorite line, no R flag.
+        let plain = render_exploration(&ex, &sys);
+        assert!(!plain.contains("robust favorite"));
+        let fav = ex.favorite.expect("quick exploration has a favorite");
+        ex.candidates[fav].robustness = Some(RobustMetrics {
+            worst_goodput: 640.0,
+            mean_goodput: 810.0,
+            cvar_goodput: 700.0,
+            ttr_epochs: 3,
+        });
+        ex.robust_favorite = Some(fav);
+        let text = render_exploration(&ex, &sys);
+        assert!(text.contains("robust favorite (worst-case goodput over the fault ensemble)"));
+        assert!(text.contains(&ex.candidates[fav].label));
+        assert!(text.contains("ttr 3 epoch(s)"));
+        let flagged = text
+            .lines()
+            .find(|l| l.starts_with(&ex.candidates[fav].label))
+            .expect("favorite row rendered");
+        assert!(flagged.contains('R'), "robust favorite row missing the R flag: {flagged}");
+    }
+
+    #[test]
     fn fig3_memory_monotone_params() {
         let g = zoo::vgg16(1000);
         let csv = fig3_csv(&g, 16, 16);
@@ -430,6 +539,9 @@ mod tests {
             p99_s: 0.012,
             completed: 9000,
             dropped: 1000,
+            dropped_queue_full: 800,
+            dropped_node_down: 150,
+            dropped_slo_expired: 50,
             slo_violations: 500,
             energy_j: 12.5,
             fingerprint: 0xdead_beef,
@@ -438,7 +550,8 @@ mod tests {
         assert_eq!(csv.len(), 1);
         let text = csv.to_string();
         assert!(text.starts_with("label,tenant,partitions,goodput_ips"));
-        assert!(text.contains("split,-,2,900,950,4,12,9000,1000,500,12.5,00000000deadbeef"));
+        assert!(text
+            .contains("split,-,2,900,950,4,12,9000,1000,800,150,50,500,12.5,00000000deadbeef"));
     }
 
     #[test]
@@ -476,7 +589,7 @@ mod tests {
         let text = csv.to_string();
         assert!(text.starts_with("label,tenant,partitions,goodput_ips"));
         assert!(text.contains(",*,2,130,"));
-        assert!(text.contains(",a,,80,90,2,9,100,0,5,3.25,"));
+        assert!(text.contains(",a,,80,90,2,9,100,0,,,,5,3.25,"));
         assert!(text.contains(",b,,50,60,"));
     }
 

@@ -507,6 +507,7 @@ pub fn simulate_adaptive_obs(
     let mut energy_j = 0.0;
     let mut events = 0u64;
     let mut last_ns = 0u64;
+    let mut drops = [0u64; 3];
 
     let sim_obs = |dep: &Deployment| reg.map(|r| SimObs::new(r, dep.stages.len(), true));
     let mut eng = Engine::new(
@@ -535,6 +536,9 @@ pub fn simulate_adaptive_obs(
             energy_j += out.energy_j;
             events += out.events;
             last_ns = last_ns.max(out.last_ns);
+            for (acc, d) in drops.iter_mut().zip(out.drops) {
+                *acc += d;
+            }
             let weights = weight_bytes(&pool[cur], &pool[tgt]);
             let activations = activation_bytes(&deps[cur], &backlog);
             let bytes = weights + activations;
@@ -594,6 +598,9 @@ pub fn simulate_adaptive_obs(
     energy_j += out.energy_j;
     events += out.events;
     last_ns = last_ns.max(out.last_ns);
+    for (acc, d) in drops.iter_mut().zip(out.drops) {
+        *acc += d;
+    }
     debug_assert_eq!(
         completions.len(),
         n,
@@ -613,6 +620,7 @@ pub fn simulate_adaptive_obs(
             energy_j,
             events,
             scenario.deadline_s,
+            drops,
         ),
         epochs,
         migrations,

@@ -1,0 +1,983 @@
+//! Fault-ensemble robustness scoring — the chaos harness.
+//!
+//! A single fault preset answers "how does this plan behave under *one*
+//! cocktail of faults"; a deployment decision needs the distribution.
+//! This module expands a seeded catalog of fault archetypes into a
+//! [`FaultEnsemble`] — N concrete scenario variants layered on top of
+//! any base [`Scenario`] — and replays every serving candidate through
+//! all of them, distilling the runs into tail-aware robustness metrics:
+//!
+//! * **worst-case goodput** — the floor over the ensemble (primary
+//!   ranking key: a plan is as good as its worst day);
+//! * **mean-under-fault goodput** — the expectation over members;
+//! * **CVaR@q goodput** — the mean of the worst `q`-quantile of
+//!   members, the standard tail-risk summary between the two;
+//! * **time-to-recover** — control epochs after the last fault clears
+//!   until per-epoch goodput re-enters the SLO band
+//!   (`slo_band ×` the candidate's fault-free goodput).
+//!
+//! Determinism contract (same as everywhere else in the simulator):
+//! every random draw happens in a per-member PCG32 stream keyed by the
+//! stable member id ([`STREAM_CHAOS`]` + id`), never by evaluation
+//! order, and the fan-out runs through `par_map` — so the ensemble, the
+//! scores and the [`RobustnessReport::fingerprint`] are bit-identical
+//! across `--jobs` values and reruns (`tests/chaos.rs` pins this).
+//!
+//! Generated node-loss windows are kept disjoint from the base
+//! scenario's (and each other's) same-platform windows via
+//! [`windows_overlap`] — losses do not compose (see
+//! `Scenario::validate`) — while generated slowdown/link windows may
+//! overlap base windows and compose multiplicatively, exactly like
+//! hand-written scenarios.
+
+use super::adaptive::{compare_adaptive, AdaptiveComparison};
+use super::engine::{self, s_to_ns};
+use super::scenario::windows_overlap;
+use super::{Arrivals, Deployment, FaultWindow, NodeLoss, Scenario, SimCfg, SimReport, Slowdown};
+use crate::config::{AdaptiveCfg, ChaosCfg, SystemConfig};
+use crate::explorer::Exploration;
+use crate::util::hash::Fnv64;
+use crate::util::parallel::par_map;
+use crate::util::rng::Pcg32;
+
+/// Stream id for ensemble-member fault generation (stable forever —
+/// part of the reproducibility contract, next to `STREAM_ARRIVALS`).
+const STREAM_CHAOS: u64 = 0x51A7_0002;
+
+/// Fault archetypes the generator cycles through, one per ensemble
+/// member (`member id % 6`). Six kinds, so any ensemble of ≥ 6 members
+/// covers the full catalog.
+const KINDS: usize = 6;
+
+/// One generated ensemble member: the base scenario plus this member's
+/// injected fault windows.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnsembleMember {
+    /// Stable member id (the RNG stream key — never reassigned).
+    pub id: u64,
+    /// Human-readable fault description, e.g. `crash(p2)` or
+    /// `rack(p1..p2)`.
+    pub label: String,
+    /// The concrete scenario this member replays: a clone of the base
+    /// with the generated windows appended (arrival process untouched,
+    /// so every member shares the base's arrival trace).
+    pub scenario: Scenario,
+}
+
+/// A seeded ensemble of fault scenarios over one base [`Scenario`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEnsemble {
+    /// Generated members, in id order. Empty for `ensemble = 0` (the
+    /// legal no-op: scoring reduces to the fault-free baseline).
+    pub members: Vec<EnsembleMember>,
+}
+
+impl FaultEnsemble {
+    /// Expand `ccfg.ensemble` members over `base` for a system with
+    /// `platforms` hardware slots. Pure function of the arguments: the
+    /// same `(base, ccfg, platforms, seed)` always yields the same
+    /// ensemble, member by member, window by window.
+    ///
+    /// Catalog (member `id % 6`):
+    /// 0. single-node crash — one platform dark mid-run;
+    /// 1. k-node crash — `ccfg.faults` distinct platforms, each with
+    ///    its own staggered loss window;
+    /// 2. per-platform slowdown — one platform ×2–6 for a window;
+    /// 3. link degradation — the shared link ×4–12 for a window;
+    /// 4. link flap — two short ×6–12 windows in quick succession;
+    /// 5. correlated rack loss — a contiguous block of `ccfg.faults`
+    ///    platforms dark over one shared window.
+    ///
+    /// Every window closes by 80% of the estimated trace span, so each
+    /// member keeps a fault-free recovery tail for the time-to-recover
+    /// metric. A node-loss draw that cannot find a window disjoint from
+    /// existing same-platform losses after a bounded number of retries
+    /// is skipped (deterministically) rather than composed illegally.
+    ///
+    /// Panics if `base` fails validation against `platforms`.
+    pub fn generate(base: &Scenario, ccfg: &ChaosCfg, platforms: usize, seed: u64) -> Self {
+        assert!(platforms > 0, "fault ensemble needs at least one platform");
+        if let Err(e) = base.validate(Some(platforms)) {
+            panic!("invalid base scenario '{}': {e}", base.name);
+        }
+        let span = span_estimate_s(base);
+        let members = (0..ccfg.ensemble)
+            .map(|m| {
+                let mut rng = Pcg32::new(seed, STREAM_CHAOS.wrapping_add(m as u64));
+                let mut sc = base.clone();
+                let label = inject(&mut sc, &mut rng, m % KINDS, ccfg, platforms, span);
+                sc.name = format!("{}+m{m:02}:{label}", base.name);
+                debug_assert!(
+                    sc.validate(Some(platforms)).is_ok(),
+                    "generated member '{}' failed validation",
+                    sc.name
+                );
+                EnsembleMember { id: m as u64, label, scenario: sc }
+            })
+            .collect();
+        FaultEnsemble { members }
+    }
+}
+
+/// Inject one member's faults into `sc`; returns the member label.
+fn inject(
+    sc: &mut Scenario,
+    rng: &mut Pcg32,
+    kind: usize,
+    ccfg: &ChaosCfg,
+    platforms: usize,
+    span: f64,
+) -> String {
+    let k = ccfg.faults.clamp(1, platforms);
+    match kind {
+        0 => {
+            // Single-node crash.
+            let p = rng.gen_usize(0, platforms);
+            let placed = place_loss(sc, rng, p, span);
+            format!("crash(p{p}){}", if placed { "" } else { "!" })
+        }
+        1 => {
+            // k-node crash: distinct platforms, staggered windows.
+            let mut slots: Vec<usize> = (0..platforms).collect();
+            rng.shuffle(&mut slots);
+            slots.truncate(k);
+            slots.sort_unstable();
+            for &p in &slots {
+                place_loss(sc, rng, p, span);
+            }
+            let names: Vec<String> = slots.iter().map(|p| format!("p{p}")).collect();
+            format!("crash-k{k}({})", names.join(","))
+        }
+        2 => {
+            // Per-platform slowdown.
+            let p = rng.gen_usize(0, platforms);
+            let factor = 2.0 + 4.0 * rng.gen_f64();
+            let (from_s, to_s) = draw_window(rng, span);
+            sc.slowdowns.push(Slowdown { platform: p, from_s, to_s, factor });
+            format!("slow(p{p} x{factor:.1})")
+        }
+        3 => {
+            // Link degradation.
+            let factor = 4.0 + 8.0 * rng.gen_f64();
+            let (from_s, to_s) = draw_window(rng, span);
+            sc.link_faults.push(FaultWindow { from_s, to_s, factor });
+            format!("link(x{factor:.1})")
+        }
+        4 => {
+            // Link flap: two short windows in quick succession.
+            let factor = 6.0 + 6.0 * rng.gen_f64();
+            let from1 = (0.10 + 0.30 * rng.gen_f64()) * span;
+            let len = (0.02 + 0.03 * rng.gen_f64()) * span;
+            let gap = (0.02 + 0.08 * rng.gen_f64()) * span;
+            sc.link_faults.push(FaultWindow { from_s: from1, to_s: from1 + len, factor });
+            let from2 = from1 + len + gap;
+            sc.link_faults.push(FaultWindow { from_s: from2, to_s: from2 + len, factor });
+            format!("flap(x{factor:.1})")
+        }
+        _ => {
+            // Correlated rack loss: contiguous platform block, one
+            // shared window (disjoint from every block member's
+            // existing losses, or the draw retries).
+            let start = rng.gen_usize(0, platforms - k + 1);
+            let block: Vec<usize> = (start..start + k).collect();
+            let mut placed = false;
+            for _ in 0..8 {
+                let (from_s, to_s) = draw_window(rng, span);
+                let clash = sc.node_loss.iter().any(|w| {
+                    block.contains(&w.platform)
+                        && windows_overlap(w.from_s, w.to_s, from_s, to_s)
+                });
+                if !clash {
+                    for &p in &block {
+                        sc.node_loss.push(NodeLoss { platform: p, from_s, to_s });
+                    }
+                    placed = true;
+                    break;
+                }
+            }
+            format!(
+                "rack(p{start}..p{}){}",
+                start + k - 1,
+                if placed { "" } else { "!" }
+            )
+        }
+    }
+}
+
+/// Draw a fault window inside `[0.10, 0.70) × span`: start in
+/// `[0.10, 0.55)`, length in `[0.05, 0.15)` — every window clears with
+/// at least 30% of the span left as recovery tail.
+fn draw_window(rng: &mut Pcg32, span: f64) -> (f64, f64) {
+    let from = (0.10 + 0.45 * rng.gen_f64()) * span;
+    let len = (0.05 + 0.10 * rng.gen_f64()) * span;
+    (from, from + len)
+}
+
+/// Append a node-loss window for `platform` disjoint from its existing
+/// windows ([`windows_overlap`] — losses do not compose). Bounded
+/// retries keep the draw count finite and deterministic; a crowded
+/// platform deterministically skips instead of composing.
+fn place_loss(sc: &mut Scenario, rng: &mut Pcg32, platform: usize, span: f64) -> bool {
+    for _ in 0..8 {
+        let (from_s, to_s) = draw_window(rng, span);
+        let clash = sc
+            .node_loss
+            .iter()
+            .any(|w| w.platform == platform && windows_overlap(w.from_s, w.to_s, from_s, to_s));
+        if !clash {
+            sc.node_loss.push(NodeLoss { platform, from_s, to_s });
+            return true;
+        }
+    }
+    false
+}
+
+/// Estimated trace span in virtual seconds — where the generator
+/// places fault windows. Exact for Poisson/replay; mean-rate
+/// approximations for the modulated processes.
+fn span_estimate_s(sc: &Scenario) -> f64 {
+    let est = match &sc.arrivals {
+        Arrivals::Poisson { rate } => sc.requests as f64 / rate.max(1e-9),
+        Arrivals::Burst { base_rate, burst_rate, period_s: _, burst_fraction } => {
+            let mean = burst_fraction * burst_rate + (1.0 - burst_fraction) * base_rate;
+            sc.requests as f64 / mean.max(1e-9)
+        }
+        Arrivals::Diurnal { base_rate, peak_rate, .. } => {
+            sc.requests as f64 / (0.5 * (base_rate + peak_rate)).max(1e-9)
+        }
+        Arrivals::Replay { times_s } => times_s.last().copied().unwrap_or(0.0),
+    };
+    est.max(1e-6)
+}
+
+/// One candidate's run under one ensemble member.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemberScore {
+    /// Ensemble member id.
+    pub member: u64,
+    /// Member fault label (`EnsembleMember::label`).
+    pub label: String,
+    /// Goodput under this member's faults.
+    pub goodput: f64,
+    /// Control epochs after the member's last fault clears until
+    /// per-epoch goodput re-enters the SLO band (0 for fault-free
+    /// members — nothing to recover from).
+    pub recovery_epochs: u64,
+    /// `SimReport::fingerprint` of the underlying run.
+    pub fingerprint: u64,
+}
+
+/// One serving candidate's robustness distillation over the ensemble.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustnessScore {
+    /// Index into `Exploration::candidates`.
+    pub candidate: usize,
+    /// Candidate label.
+    pub label: String,
+    /// Fault-free goodput (the SLO-band anchor for recovery).
+    pub baseline_goodput: f64,
+    /// Fingerprint of the fault-free run — with an empty ensemble this
+    /// is exactly the plain `simulate` fingerprint.
+    pub baseline_fingerprint: u64,
+    /// Minimum goodput over the ensemble (primary ranking key).
+    pub worst_goodput: f64,
+    /// Mean goodput over the ensemble.
+    pub mean_goodput: f64,
+    /// Mean of the worst `⌈q·M⌉` members' goodputs (CVaR@q).
+    pub cvar_goodput: f64,
+    /// Worst time-to-recover over the ensemble (control epochs).
+    pub ttr_epochs: u64,
+    /// Per-member runs, in member-id order.
+    pub members: Vec<MemberScore>,
+}
+
+/// The full robustness ranking over an exploration's serving set.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RobustnessReport {
+    /// Base scenario name the ensemble was layered on.
+    pub base: String,
+    /// Every serving candidate's score, ranked best-first by
+    /// (worst, mean, CVaR) goodput with candidate index as the final
+    /// deterministic tie-break. Nothing is dropped: the ranking is a
+    /// permutation of `Exploration::serving_candidates`.
+    pub scores: Vec<RobustnessScore>,
+    /// Candidate index of the top-ranked (most robust) plan.
+    pub robust_favorite: Option<usize>,
+}
+
+impl RobustnessReport {
+    /// The top-ranked score (when any candidate was scored).
+    pub fn favorite_score(&self) -> Option<&RobustnessScore> {
+        self.scores.first()
+    }
+
+    /// Find a candidate's score by exploration index.
+    pub fn score_of(&self, candidate: usize) -> Option<&RobustnessScore> {
+        self.scores.iter().find(|s| s.candidate == candidate)
+    }
+
+    /// Stable FNV-1a digest over every externally observable quantity —
+    /// the cheap `--jobs`/rerun bit-identity check, like
+    /// `SimReport::fingerprint`.
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = Fnv64::new();
+        h.write_bytes(self.base.as_bytes());
+        h.write_u64(self.scores.len() as u64);
+        for s in &self.scores {
+            h.write_usize(s.candidate);
+            h.write_bytes(s.label.as_bytes());
+            h.write_f64(s.baseline_goodput);
+            h.write_u64(s.baseline_fingerprint);
+            h.write_f64(s.worst_goodput);
+            h.write_f64(s.mean_goodput);
+            h.write_f64(s.cvar_goodput);
+            h.write_u64(s.ttr_epochs);
+            h.write_u64(s.members.len() as u64);
+            for m in &s.members {
+                h.write_u64(m.member);
+                h.write_bytes(m.label.as_bytes());
+                h.write_f64(m.goodput);
+                h.write_u64(m.recovery_epochs);
+                h.write_u64(m.fingerprint);
+            }
+        }
+        h.write_u64(self.robust_favorite.map_or(u64::MAX, |c| c as u64));
+        h.finish()
+    }
+
+    /// Aligned ranking table for the CLI.
+    pub fn render(&self) -> String {
+        use crate::util::units::fmt_throughput;
+        let mut out = format!(
+            "robustness over '{}' ({} member(s))\n{:<16} {:>13} {:>13} {:>13} {:>13} {:>5}\n",
+            self.base,
+            self.scores.first().map_or(0, |s| s.members.len()),
+            "point",
+            "worst",
+            "cvar",
+            "mean",
+            "baseline",
+            "ttr"
+        );
+        for s in &self.scores {
+            out.push_str(&format!(
+                "{:<16} {:>13} {:>13} {:>13} {:>13} {:>5}\n",
+                s.label,
+                fmt_throughput(s.worst_goodput),
+                fmt_throughput(s.cvar_goodput),
+                fmt_throughput(s.mean_goodput),
+                fmt_throughput(s.baseline_goodput),
+                s.ttr_epochs,
+            ));
+        }
+        if let Some(f) = self.favorite_score() {
+            out.push_str(&format!("robust favorite: {}\n", f.label));
+        }
+        out
+    }
+}
+
+/// Generate the ensemble from `ccfg` and score the exploration's
+/// serving set — the one-call entry point (`ExploreRequest::chaos`,
+/// the CLI `--chaos` path). See [`score_robustness_with`].
+pub fn score_robustness(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    base: &Scenario,
+    cfg: &SimCfg,
+    ccfg: &ChaosCfg,
+    jobs: usize,
+) -> RobustnessReport {
+    let ensemble = FaultEnsemble::generate(base, ccfg, sys.platforms.len(), cfg.seed);
+    score_robustness_with(ex, sys, base, &ensemble, cfg, ccfg, jobs)
+}
+
+/// Score every serving candidate against a caller-supplied ensemble.
+///
+/// Two `par_map` fan-outs: fault-free baselines per candidate (the SLO
+/// anchor), then the full candidate × member grid — each cell an
+/// independent epoch-stepped engine run, pure in its inputs, so the
+/// report is bit-identical for every `jobs` value. All serving
+/// candidates are kept: re-ranking is a permutation, never a filter.
+///
+/// Panics on an invalid base scenario or a degenerate `ccfg`
+/// (`cvar_q`/`slo_band` outside `(0, 1]`, non-positive `epoch_s`).
+pub fn score_robustness_with(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    base: &Scenario,
+    ensemble: &FaultEnsemble,
+    cfg: &SimCfg,
+    ccfg: &ChaosCfg,
+    jobs: usize,
+) -> RobustnessReport {
+    if let Err(e) = base.validate(Some(sys.platforms.len())) {
+        panic!("invalid scenario '{}': {e}", base.name);
+    }
+    assert!(
+        ccfg.cvar_q > 0.0 && ccfg.cvar_q <= 1.0,
+        "cvar_q {} must be in (0, 1]",
+        ccfg.cvar_q
+    );
+    assert!(
+        ccfg.slo_band > 0.0 && ccfg.slo_band <= 1.0,
+        "slo_band {} must be in (0, 1]",
+        ccfg.slo_band
+    );
+    assert!(ccfg.epoch_s > 0.0, "epoch_s {} must be positive", ccfg.epoch_s);
+
+    let idx = ex.serving_candidates();
+    let nm = ensemble.members.len();
+    // One arrival trace shared by every run: members only add fault
+    // windows, never touch the arrival process, so the expansion is
+    // identical across the whole grid.
+    let arrivals = base.arrival_times_ns(cfg.seed);
+    let epoch_ns = s_to_ns(ccfg.epoch_s).max(1);
+    let reg = sys.obs.registry();
+    let t0 = crate::obs::mark(reg);
+
+    // Stage 1: fault-free baselines (goodput anchor + fingerprint).
+    let baselines: Vec<SimReport> = par_map(jobs.max(1), &idx, |&i| {
+        let dep = Deployment::from_candidate(&ex.candidates[i], sys);
+        engine::run_with_arrivals(&dep, cfg, base, &arrivals)
+    });
+
+    // Stage 2: the candidate × member grid, flattened row-major so
+    // results land by (candidate, member) index.
+    let pairs: Vec<(usize, usize)> =
+        (0..idx.len()).flat_map(|c| (0..nm).map(move |m| (c, m))).collect();
+    let runs: Vec<(SimReport, u64)> = par_map(jobs.max(1), &pairs, |&(c, m)| {
+        let dep = Deployment::from_candidate(&ex.candidates[idx[c]], sys);
+        run_member(
+            &dep,
+            cfg,
+            &ensemble.members[m].scenario,
+            &arrivals,
+            epoch_ns,
+            baselines[c].goodput,
+            ccfg.slo_band,
+        )
+    });
+
+    let mut scores: Vec<RobustnessScore> = idx
+        .iter()
+        .enumerate()
+        .map(|(c, &i)| {
+            let baseline = &baselines[c];
+            let members: Vec<MemberScore> = ensemble
+                .members
+                .iter()
+                .enumerate()
+                .map(|(m, mem)| {
+                    let (rep, ttr) = &runs[c * nm + m];
+                    MemberScore {
+                        member: mem.id,
+                        label: mem.label.clone(),
+                        goodput: rep.goodput,
+                        recovery_epochs: *ttr,
+                        fingerprint: rep.fingerprint(),
+                    }
+                })
+                .collect();
+            let (worst, mean, cvar, ttr) = if members.is_empty() {
+                // Empty ensemble: the no-op reduction to the baseline.
+                (baseline.goodput, baseline.goodput, baseline.goodput, 0)
+            } else {
+                let mut g: Vec<f64> = members.iter().map(|s| s.goodput).collect();
+                g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+                let worst = g[0];
+                let mean = g.iter().sum::<f64>() / g.len() as f64;
+                let k = ((ccfg.cvar_q * g.len() as f64).ceil() as usize).clamp(1, g.len());
+                let cvar = g[..k].iter().sum::<f64>() / k as f64;
+                let ttr = members.iter().map(|s| s.recovery_epochs).max().unwrap();
+                (worst, mean, cvar, ttr)
+            };
+            RobustnessScore {
+                candidate: i,
+                label: ex.candidates[i].label.clone(),
+                baseline_goodput: baseline.goodput,
+                baseline_fingerprint: baseline.fingerprint(),
+                worst_goodput: worst,
+                mean_goodput: mean,
+                cvar_goodput: cvar,
+                ttr_epochs: ttr,
+                members,
+            }
+        })
+        .collect();
+    scores.sort_by(|a, b| {
+        b.worst_goodput
+            .partial_cmp(&a.worst_goodput)
+            .unwrap()
+            .then(b.mean_goodput.partial_cmp(&a.mean_goodput).unwrap())
+            .then(b.cvar_goodput.partial_cmp(&a.cvar_goodput).unwrap())
+            .then(a.candidate.cmp(&b.candidate))
+    });
+    let robust_favorite = scores.first().map(|s| s.candidate);
+    if let Some(r) = reg {
+        r.counter("chaos.candidates_scored").add(idx.len() as u64);
+        r.counter("chaos.member_runs").add(pairs.len() as u64);
+        r.wall_span(
+            format!("score robustness ({} candidate(s) x {nm} member(s))", idx.len()),
+            0,
+            t0,
+        );
+    }
+    RobustnessReport { base: base.name.clone(), scores, robust_favorite }
+}
+
+/// One epoch-stepped member run: the report plus the time-to-recover.
+/// Epoch stepping replays the exact one-shot event stream (the engine's
+/// chunked-stepping identity), so the returned fingerprint matches a
+/// plain `simulate` of the same member scenario.
+fn run_member(
+    dep: &Deployment,
+    cfg: &SimCfg,
+    sc: &Scenario,
+    arrivals: &[u64],
+    epoch_ns: u64,
+    baseline_goodput: f64,
+    slo_band: f64,
+) -> (SimReport, u64) {
+    let mut eng = engine::Engine::new(
+        dep,
+        cfg,
+        sc,
+        arrivals,
+        0,
+        0,
+        vec![false; arrivals.len()],
+        &[],
+        None,
+    );
+    // Per-epoch (end_ns, completed, slo_miss) — the TTR raw material.
+    let mut epochs: Vec<(u64, u64, u64)> = Vec::new();
+    let mut t = epoch_ns;
+    while !eng.idle() {
+        eng.step_until(t);
+        let o = eng.take_epoch();
+        epochs.push((t, o.completed, o.slo_miss));
+        t += epoch_ns;
+    }
+    let out = eng.finish();
+    let report = engine::assemble_report(
+        out.completions,
+        out.stages,
+        out.last_ns,
+        out.energy_j,
+        out.events,
+        sc.deadline_s,
+        out.drops,
+    );
+    let ttr = recovery_epochs(sc, &epochs, epoch_ns, baseline_goodput, slo_band);
+    (report, ttr)
+}
+
+/// Count control epochs after the scenario's last fault window clears
+/// until per-epoch goodput re-enters the SLO band (`slo_band ×` the
+/// fault-free goodput, scaled to the epoch length). A scenario with no
+/// fault windows recovers in 0 epochs by definition; a run that never
+/// re-enters the band scores its full post-clear epoch count.
+fn recovery_epochs(
+    sc: &Scenario,
+    epochs: &[(u64, u64, u64)],
+    epoch_ns: u64,
+    baseline_goodput: f64,
+    slo_band: f64,
+) -> u64 {
+    let last_clear_s = sc
+        .slowdowns
+        .iter()
+        .map(|w| w.to_s)
+        .chain(sc.link_faults.iter().map(|w| w.to_s))
+        .chain(sc.node_loss.iter().map(|w| w.to_s))
+        .fold(f64::NEG_INFINITY, f64::max);
+    if !last_clear_s.is_finite() {
+        return 0;
+    }
+    let clear_ns = s_to_ns(last_clear_s);
+    let target = slo_band * baseline_goodput * (epoch_ns as f64 * 1e-9);
+    let mut ttr = 0u64;
+    for &(end_ns, completed, slo_miss) in epochs {
+        // Only epochs lying entirely after the last window's close
+        // count: an epoch straddling the clear instant still contains
+        // faulted service.
+        if end_ns - epoch_ns < clear_ns {
+            continue;
+        }
+        if completed.saturating_sub(slo_miss) as f64 >= target {
+            return ttr;
+        }
+        ttr += 1;
+    }
+    ttr
+}
+
+/// Derive the base scenario for `ExploreRequest::chaos` / `--chaos`
+/// from the chaos config: steady Poisson traffic (the ensemble supplies
+/// the faults) at `ccfg.rate`, or — when `rate = 0` — at 1.5× the best
+/// candidate's analytic throughput, stressing every plan past its
+/// ceiling so fault impact separates them.
+pub fn chaos_base_scenario(ex: &Exploration, ccfg: &ChaosCfg) -> Scenario {
+    let rate = if ccfg.rate > 0.0 {
+        ccfg.rate
+    } else {
+        let best = ex.candidates.iter().map(|c| c.throughput).fold(0.0f64, f64::max);
+        if best > 0.0 && best.is_finite() {
+            1.5 * best
+        } else {
+            1000.0
+        }
+    };
+    let mut sc = Scenario::steady(ccfg.requests.max(1), rate);
+    sc.name = "chaos-base".into();
+    sc
+}
+
+/// Run the static/adaptive/oracle three-way comparison under every
+/// ensemble member — "does the adaptive controller's win survive the
+/// whole fault distribution, not just one preset". Results land in
+/// member-id order; each member's comparison runs with `jobs = 1`
+/// inside (the fan-out is across members) against a de-instrumented
+/// system clone, because `compare_adaptive` records its hysteresis run
+/// into `sys.obs` and concurrent members would interleave on shared
+/// lanes.
+pub fn compare_adaptive_ensemble(
+    ex: &Exploration,
+    sys: &SystemConfig,
+    ensemble: &FaultEnsemble,
+    cfg: &SimCfg,
+    acfg: &AdaptiveCfg,
+    jobs: usize,
+) -> Vec<AdaptiveComparison> {
+    let mut quiet = sys.clone();
+    quiet.obs = Default::default();
+    par_map(jobs.max(1), &ensemble.members, |m| {
+        compare_adaptive(ex, &quiet, &m.scenario, cfg, acfg, 1)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::{CandidateMetrics, ExplorationTiming, PlanEdge, StagePlan};
+
+    /// The `sim/evaluate.rs` toy fixture: a balanced two-platform split
+    /// vs the two single-platform references.
+    fn toy_exploration() -> Exploration {
+        let single = |platform: usize, label: &str, lat: f64| CandidateMetrics {
+            positions: vec![if platform == 0 { 9 } else { 0 }],
+            label: label.to_string(),
+            latency_s: lat,
+            energy_j: 1.0,
+            throughput: 1.0 / lat,
+            top1: 70.0,
+            memory_bytes: vec![0, 0],
+            link_bytes: 0,
+            partitions: 1,
+            plan: vec![StagePlan {
+                platform,
+                latency_s: lat,
+                energy_j: 1.0,
+                out_bytes: 0,
+                out_hops: 0,
+                edges: Vec::new(),
+                replicas: 1,
+            }],
+            assign: None,
+            violation: 0.0,
+            violations: Vec::new(),
+            robustness: None,
+        };
+        let split = CandidateMetrics {
+            positions: vec![4],
+            label: "split".into(),
+            latency_s: 0.002,
+            energy_j: 1.0,
+            throughput: 1000.0,
+            top1: 70.0,
+            memory_bytes: vec![0, 0],
+            link_bytes: 1460,
+            partitions: 2,
+            plan: vec![
+                StagePlan {
+                    platform: 0,
+                    latency_s: 0.001,
+                    energy_j: 0.5,
+                    out_bytes: 1460,
+                    out_hops: 1,
+                    edges: vec![PlanEdge { to: Some(1), bytes: 1460, hops: 1 }],
+                    replicas: 1,
+                },
+                StagePlan {
+                    platform: 1,
+                    latency_s: 0.001,
+                    energy_j: 0.5,
+                    out_bytes: 0,
+                    out_hops: 0,
+                    edges: Vec::new(),
+                    replicas: 1,
+                },
+            ],
+            assign: None,
+            violation: 0.0,
+            violations: Vec::new(),
+            robustness: None,
+        };
+        Exploration {
+            model: "toy".into(),
+            candidates: vec![single(0, "all-on-A", 0.002), single(1, "all-on-B", 0.0025), split],
+            pareto: vec![2],
+            nsga_front: vec![2],
+            favorite: Some(2),
+            robust_favorite: None,
+            timing: ExplorationTiming::default(),
+        }
+    }
+
+    fn quick_ccfg(ensemble: usize) -> ChaosCfg {
+        ChaosCfg { ensemble, requests: 0, ..ChaosCfg::default() }
+    }
+
+    #[test]
+    fn ensemble_generation_is_deterministic_and_valid() {
+        let base = Scenario::steady(4000, 1000.0);
+        let ccfg = quick_ccfg(12);
+        let a = FaultEnsemble::generate(&base, &ccfg, 4, 7);
+        let b = FaultEnsemble::generate(&base, &ccfg, 4, 7);
+        assert_eq!(a, b, "same inputs must generate the same ensemble");
+        assert_eq!(a.members.len(), 12);
+        let span = 4000.0 / 1000.0;
+        for m in &a.members {
+            assert!(m.scenario.validate(Some(4)).is_ok(), "member '{}' invalid", m.scenario.name);
+            // Recovery tail: every window clears by 80% of the span.
+            let last = m
+                .scenario
+                .slowdowns
+                .iter()
+                .map(|w| w.to_s)
+                .chain(m.scenario.link_faults.iter().map(|w| w.to_s))
+                .chain(m.scenario.node_loss.iter().map(|w| w.to_s))
+                .fold(0.0f64, f64::max);
+            assert!(last <= 0.8 * span + 1e-9, "member '{}' clears at {last}", m.label);
+            // Arrival process untouched: one trace serves the grid.
+            assert_eq!(m.scenario.arrivals, base.arrivals);
+            assert_eq!(m.scenario.requests, base.requests);
+        }
+        // A different seed moves the windows.
+        let c = FaultEnsemble::generate(&base, &ccfg, 4, 8);
+        assert_ne!(a, c, "seed must steer the generator");
+        // The catalog cycles: 12 members over 6 kinds cover each twice.
+        assert!(a.members.iter().any(|m| m.label.starts_with("crash(p")));
+        assert!(a.members.iter().any(|m| m.label.starts_with("crash-k")));
+        assert!(a.members.iter().any(|m| m.label.starts_with("slow(")));
+        assert!(a.members.iter().any(|m| m.label.starts_with("link(")));
+        assert!(a.members.iter().any(|m| m.label.starts_with("flap(")));
+        assert!(a.members.iter().any(|m| m.label.starts_with("rack(")));
+    }
+
+    #[test]
+    fn ensemble_composes_with_fault_presets() {
+        // Layering on a base that already carries every fault kind must
+        // stay valid: node-loss injection dodges the preset's windows.
+        let base = Scenario::chaos(4000, 1000.0);
+        let ens = FaultEnsemble::generate(&base, &quick_ccfg(12), 2, 3);
+        for m in &ens.members {
+            assert!(m.scenario.validate(Some(2)).is_ok(), "member '{}' invalid", m.scenario.name);
+            assert!(m.scenario.slowdowns.len() >= base.slowdowns.len());
+            assert!(m.scenario.link_faults.len() >= base.link_faults.len());
+        }
+    }
+
+    #[test]
+    fn k_crash_hits_distinct_platforms_and_rack_is_contiguous() {
+        let base = Scenario::steady(2000, 1000.0);
+        let ccfg = ChaosCfg { ensemble: 12, faults: 3, requests: 0, ..ChaosCfg::default() };
+        let ens = FaultEnsemble::generate(&base, &ccfg, 5, 11);
+        for m in &ens.members {
+            if m.id % 6 == 1 {
+                // k-node crash: one loss window per distinct platform.
+                let mut ps: Vec<usize> =
+                    m.scenario.node_loss.iter().map(|w| w.platform).collect();
+                ps.sort_unstable();
+                ps.dedup();
+                assert!(ps.len() >= 2, "k-crash '{}' hit {ps:?}", m.label);
+            }
+            if m.id % 6 == 5 && !m.label.ends_with('!') {
+                // Rack loss: contiguous platform block, one shared window.
+                let ws = &m.scenario.node_loss;
+                assert_eq!(ws.len(), 3, "rack '{}'", m.label);
+                let mut ps: Vec<usize> = ws.iter().map(|w| w.platform).collect();
+                ps.sort_unstable();
+                assert!(ps.windows(2).all(|p| p[1] == p[0] + 1), "not contiguous: {ps:?}");
+                assert!(ws.iter().all(|w| w.from_s == ws[0].from_s && w.to_s == ws[0].to_s));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_ensemble_reduces_to_plain_sim() {
+        let ex = toy_exploration();
+        let sys = crate::config::SystemConfig::paper_two_platform();
+        let base = Scenario::steady(3000, 1500.0);
+        let cfg = SimCfg { seed: 5, ..Default::default() };
+        let rep = score_robustness(&ex, &sys, &base, &cfg, &quick_ccfg(0), 1);
+        assert_eq!(rep.scores.len(), 3, "all serving candidates kept");
+        for s in &rep.scores {
+            assert!(s.members.is_empty());
+            assert_eq!(s.worst_goodput, s.baseline_goodput);
+            assert_eq!(s.mean_goodput, s.baseline_goodput);
+            assert_eq!(s.cvar_goodput, s.baseline_goodput);
+            assert_eq!(s.ttr_epochs, 0);
+            // The baseline fingerprint IS the plain simulate fingerprint.
+            let dep = Deployment::from_candidate(&ex.candidates[s.candidate], &sys);
+            let plain = super::super::simulate(&dep, &cfg, &base);
+            assert_eq!(s.baseline_fingerprint, plain.fingerprint());
+        }
+        // With no faults the robust ranking follows baseline goodput.
+        assert_eq!(rep.robust_favorite, Some(2), "split wins fault-free overload");
+    }
+
+    #[test]
+    fn tail_metrics_are_ordered_and_cvar_is_monotone_in_q() {
+        let ex = toy_exploration();
+        let sys = crate::config::SystemConfig::paper_two_platform();
+        let base = Scenario::steady(3000, 1500.0);
+        let cfg = SimCfg { seed: 5, ..Default::default() };
+        let q25 = ChaosCfg { ensemble: 6, cvar_q: 0.25, requests: 0, ..ChaosCfg::default() };
+        let q50 = ChaosCfg { cvar_q: 0.5, ..q25 };
+        let q100 = ChaosCfg { cvar_q: 1.0, ..q25 };
+        let r25 = score_robustness(&ex, &sys, &base, &cfg, &q25, 2);
+        let r50 = score_robustness(&ex, &sys, &base, &cfg, &q50, 2);
+        let r100 = score_robustness(&ex, &sys, &base, &cfg, &q100, 2);
+        for s in &r25.scores {
+            assert!(s.worst_goodput <= s.cvar_goodput + 1e-12);
+            assert!(s.cvar_goodput <= s.mean_goodput + 1e-12);
+            let c50 = r50.score_of(s.candidate).unwrap();
+            let c100 = r100.score_of(s.candidate).unwrap();
+            // CVaR grows toward the mean as q widens the tail.
+            assert!(s.cvar_goodput <= c50.cvar_goodput + 1e-12);
+            assert!(c50.cvar_goodput <= c100.cvar_goodput + 1e-12);
+            assert!(
+                (c100.cvar_goodput - c100.mean_goodput).abs() < 1e-9,
+                "CVaR@1.0 must equal the mean"
+            );
+        }
+    }
+
+    #[test]
+    fn scoring_is_bit_identical_across_jobs_and_reruns() {
+        let ex = toy_exploration();
+        let sys = crate::config::SystemConfig::paper_two_platform();
+        let base = Scenario::steady(2000, 1500.0);
+        let cfg = SimCfg { seed: 9, ..Default::default() };
+        let ccfg = quick_ccfg(6);
+        let a = score_robustness(&ex, &sys, &base, &cfg, &ccfg, 1);
+        let b = score_robustness(&ex, &sys, &base, &cfg, &ccfg, 4);
+        let c = score_robustness(&ex, &sys, &base, &cfg, &ccfg, 1);
+        assert_eq!(a.fingerprint(), b.fingerprint(), "--jobs moved the report");
+        assert_eq!(a.fingerprint(), c.fingerprint(), "rerun moved the report");
+        assert_eq!(a, b);
+        assert!(!a.render().contains("NaN"));
+    }
+
+    #[test]
+    fn recovery_epochs_counts_post_clear_epochs_only() {
+        // Hand-built epoch stream: faults clear at 1.0 s; epochs are
+        // 0.2 s. Target band: 0.8 × 100/s × 0.2 s = 16 completions.
+        let mut sc = Scenario::steady(100, 100.0);
+        sc.node_loss = vec![NodeLoss { platform: 0, from_s: 0.5, to_s: 1.0 }];
+        let epoch_ns = s_to_ns(0.2);
+        let mk = |end_s: f64, completed: u64| (s_to_ns(end_s), completed, 0u64);
+        // Epochs ending 0.2..1.0 straddle/precede the clear: ignored.
+        // Post-clear: 5 at (1.2), 10 at (1.4), 16 at (1.6) → 2 epochs.
+        let epochs = vec![
+            mk(0.2, 20),
+            mk(0.4, 20),
+            mk(0.6, 0),
+            mk(0.8, 0),
+            mk(1.0, 0),
+            mk(1.2, 5),
+            mk(1.4, 10),
+            mk(1.6, 16),
+        ];
+        assert_eq!(recovery_epochs(&sc, &epochs, epoch_ns, 100.0, 0.8), 2);
+        // Never re-entering the band scores the full post-clear count.
+        let never = vec![mk(1.2, 5), mk(1.4, 5), mk(1.6, 5)];
+        assert_eq!(recovery_epochs(&sc, &never, epoch_ns, 100.0, 0.8), 3);
+        // Fault-free scenario: nothing to recover from.
+        sc.node_loss.clear();
+        assert_eq!(recovery_epochs(&sc, &epochs, epoch_ns, 100.0, 0.8), 0);
+    }
+
+    #[test]
+    fn degradation_aware_ranking_prefers_the_robust_plan() {
+        // Under a 16-member ensemble the split (touching both
+        // platforms) is exposed to every crash; a single-platform plan
+        // dodges half of them. The robust favorite must dominate on
+        // worst-case goodput — and the report keeps every serving
+        // candidate (re-ranking is a permutation, not a filter).
+        let ex = toy_exploration();
+        let sys = crate::config::SystemConfig::paper_two_platform();
+        let base = Scenario::steady(4000, 700.0);
+        let cfg = SimCfg { seed: 3, ..Default::default() };
+        let rep = score_robustness(&ex, &sys, &base, &cfg, &quick_ccfg(16), 4);
+        assert_eq!(rep.scores.len(), 3);
+        let mut kept: Vec<usize> = rep.scores.iter().map(|s| s.candidate).collect();
+        kept.sort_unstable();
+        assert_eq!(kept, vec![0, 1, 2], "a serving candidate was dropped");
+        let fav = rep.favorite_score().unwrap();
+        assert_eq!(rep.robust_favorite, Some(fav.candidate));
+        for s in &rep.scores[1..] {
+            assert!(
+                fav.worst_goodput >= s.worst_goodput,
+                "favorite {} (worst {}) beaten by {} (worst {})",
+                fav.label,
+                fav.worst_goodput,
+                s.label,
+                s.worst_goodput
+            );
+        }
+        // Member runs carry real fingerprints and recovery numbers.
+        for s in &rep.scores {
+            assert_eq!(s.members.len(), 16);
+            assert!(s.members.iter().all(|m| m.fingerprint != 0));
+        }
+    }
+
+    #[test]
+    fn chaos_base_scenario_derives_rate_from_the_front() {
+        let ex = toy_exploration();
+        let ccfg = ChaosCfg { requests: 5000, rate: 0.0, ..ChaosCfg::default() };
+        let sc = chaos_base_scenario(&ex, &ccfg);
+        assert_eq!(sc.requests, 5000);
+        // Best analytic throughput is the split's 1000/s → 1500/s.
+        assert_eq!(sc.arrivals, Arrivals::Poisson { rate: 1500.0 });
+        let explicit = ChaosCfg { rate: 800.0, ..ccfg };
+        let sc = chaos_base_scenario(&ex, &explicit);
+        assert_eq!(sc.arrivals, Arrivals::Poisson { rate: 800.0 });
+    }
+
+    #[test]
+    fn adaptive_comparison_runs_across_the_ensemble() {
+        let ex = toy_exploration();
+        let sys = crate::config::SystemConfig::paper_two_platform();
+        let base = Scenario::steady(3000, 300.0);
+        let cfg = SimCfg { seed: 7, ..Default::default() };
+        let acfg = AdaptiveCfg { improve_factor: 1.1, ..AdaptiveCfg::default() };
+        let ens = FaultEnsemble::generate(&base, &quick_ccfg(4), 2, 7);
+        let a = compare_adaptive_ensemble(&ex, &sys, &ens, &cfg, &acfg, 1);
+        let b = compare_adaptive_ensemble(&ex, &sys, &ens, &cfg, &acfg, 4);
+        assert_eq!(a.len(), 4);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(
+                x.adaptive.fingerprint(),
+                y.adaptive.fingerprint(),
+                "--jobs moved an ensemble member's adaptive run"
+            );
+            assert_eq!(x.static_report.fingerprint(), y.static_report.fingerprint());
+            // The controller never does worse than standing still.
+            assert!(x.adaptive.report.goodput >= 0.0);
+        }
+    }
+}

@@ -133,6 +133,22 @@ pub(crate) struct EpochObs {
     pub(crate) slo_miss: u64,
 }
 
+/// Why a request left the system as a drop. The discriminant doubles
+/// as the index into the engine's `drops` accumulator (and the
+/// `SimReport::dropped_*` fields), so the three causes always sum to
+/// the total drop count.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum DropCause {
+    /// Shed at a full bounded queue while still inside the deadline.
+    QueueFull = 0,
+    /// Lost to a dark platform (node-loss window) while still inside
+    /// the deadline.
+    NodeDown = 1,
+    /// Already past the SLO deadline at the instant it dropped — the
+    /// request was dead on arrival regardless of the mechanical cause.
+    SloExpired = 2,
+}
+
 /// Everything a finished (or aborted) engine regime hands back:
 /// terminal accounting plus the `done`/`next` cursors a successor
 /// regime resumes from.
@@ -145,6 +161,9 @@ pub(crate) struct RegimeOutput {
     pub(crate) last_ns: u64,
     pub(crate) done: Vec<bool>,
     pub(crate) next: usize,
+    /// Drops by cause, indexed by [`DropCause`]; sums to the total
+    /// number of `ok == false` completions this regime produced.
+    pub(crate) drops: [u64; 3],
 }
 
 /// Pre-fetched metric cells for one stage, resolved once at engine
@@ -258,6 +277,8 @@ pub(crate) struct Engine<'a> {
     ep_completed: u64,
     ep_dropped: u64,
     ep_slo_miss: u64,
+    /// Whole-regime drops by cause, indexed by [`DropCause`].
+    drops: [u64; 3],
     /// Write-only observability sidecar (`None` = fully uninstrumented;
     /// the hooks compile to a branch on a `None` discriminant).
     obs: Option<SimObs>,
@@ -297,10 +318,20 @@ impl<'a> Engine<'a> {
 
     /// A request leaves the system as a drop at stage `s`. No-op if a
     /// sibling copy already left (fork branches share the `done` flag).
-    fn drop_req(&mut self, s: usize, req: Req, t: u64) {
+    ///
+    /// `cause` records the mechanical reason — but when a deadline is
+    /// configured and the request is already past it at `t`, the cause
+    /// is overridden to [`DropCause::SloExpired`]: the request was
+    /// SLO-dead whether or not a queue or node happened to kill it.
+    fn drop_req(&mut self, s: usize, req: Req, t: u64, cause: DropCause) {
         if self.done[req.id as usize] {
             return;
         }
+        let cause = match self.deadline_ns {
+            Some(d) if t - req.submit_ns > d => DropCause::SloExpired,
+            _ => cause,
+        };
+        self.drops[cause as usize] += 1;
         self.last_ns = self.last_ns.max(t);
         self.stages[s].dropped += 1;
         self.done[req.id as usize] = true;
@@ -381,7 +412,7 @@ impl<'a> Engine<'a> {
         if self.node_dead(s, t) {
             // The whole replica bank is dark: the delivery is lost on
             // arrival, exactly like a full queue sheds load.
-            self.drop_req(s, req, t);
+            self.drop_req(s, req, t, DropCause::NodeDown);
             return;
         }
         let r = self.route(s);
@@ -390,7 +421,7 @@ impl<'a> Engine<'a> {
             // request leaving the system, so it advances the wall.
             // Copies still in flight on sibling branches are discarded
             // at their next hop via the `done` flag.
-            self.drop_req(s, req, t);
+            self.drop_req(s, req, t, DropCause::QueueFull);
             return;
         }
         self.stages[s].servers[r].queue.push_back(req);
@@ -552,7 +583,7 @@ impl<'a> Engine<'a> {
                     let mut victims: Vec<Req> = srv.queue.drain(..).collect();
                     victims.extend(srv.in_flight.drain(..));
                     for req in victims {
-                        self.drop_req(stage, req, e.at);
+                        self.drop_req(stage, req, e.at, DropCause::NodeDown);
                     }
                 }
             }
@@ -678,6 +709,7 @@ impl<'a> Engine<'a> {
             last_ns: self.last_ns,
             done: self.done,
             next: self.next,
+            drops: self.drops,
         }
     }
 }
@@ -814,6 +846,7 @@ impl<'a> Engine<'a> {
             ep_completed: 0,
             ep_dropped: 0,
             ep_slo_miss: 0,
+            drops: [0; 3],
             obs,
         };
         for (at, stage) in downs {
@@ -890,12 +923,16 @@ pub(crate) fn run_with_arrivals_obs(
         out.energy_j,
         out.events,
         scenario.deadline_s,
+        out.drops,
     )
 }
 
 /// Fold terminal accounting into a [`SimReport`] — shared by the
 /// single-regime path above and the adaptive runner's multi-regime
 /// aggregation, so both compute goodput/SLO numbers identically.
+/// `drops` is the by-cause breakdown (indexed by [`DropCause`]); its
+/// sum must equal the number of `ok == false` completions.
+#[allow(clippy::too_many_arguments)]
 pub(crate) fn assemble_report(
     mut completions: Vec<Completion>,
     stages: Vec<StageStats>,
@@ -903,11 +940,17 @@ pub(crate) fn assemble_report(
     energy_j: f64,
     events: u64,
     deadline_s: Option<f64>,
+    drops: [u64; 3],
 ) -> SimReport {
     completions.sort_by_key(|c| c.id);
     let deadline_ns = deadline_s.map(s_to_ns);
     let completed: u64 = completions.iter().filter(|c| c.ok).count() as u64;
     let dropped = completions.len() as u64 - completed;
+    debug_assert_eq!(
+        drops.iter().sum::<u64>(),
+        dropped,
+        "drop causes must sum to the total drop count"
+    );
     let slo_violations = match deadline_ns {
         Some(d) => completions
             .iter()
@@ -928,6 +971,9 @@ pub(crate) fn assemble_report(
     SimReport {
         pipeline: PipelineReport { completions, wall, stages },
         dropped,
+        dropped_queue_full: drops[DropCause::QueueFull as usize],
+        dropped_node_down: drops[DropCause::NodeDown as usize],
+        dropped_slo_expired: drops[DropCause::SloExpired as usize],
         slo_violations,
         goodput,
         energy_j,
@@ -1190,6 +1236,61 @@ mod tests {
     }
 
     #[test]
+    fn drop_causes_sum_to_total_across_mechanisms() {
+        // Queue-full: 10x overload against a depth-16 queue, no
+        // deadline — every drop is mechanical shedding.
+        let dep = Deployment::synthetic("qf", &[0.005], 0);
+        let r = simulate(&dep, &cfg(1, 100, 16), &Scenario::steady(3000, 2000.0));
+        assert!(r.dropped_queue_full > 0, "overload produced no queue-full drops");
+        assert_eq!(r.dropped_node_down, 0);
+        assert_eq!(r.dropped_slo_expired, 0);
+        assert_eq!(
+            r.dropped_queue_full + r.dropped_node_down + r.dropped_slo_expired,
+            r.dropped
+        );
+
+        // Node-down: a mid-run loss window, load well under capacity —
+        // every drop is the dark platform's doing.
+        let dep = Deployment::synthetic("nd", &[0.001], 0);
+        let mut sc = Scenario::steady(2000, 500.0);
+        sc.node_loss.push(crate::sim::NodeLoss { platform: 0, from_s: 1.0, to_s: 2.0 });
+        let r = simulate(&dep, &cfg(4, 200, 256), &sc);
+        assert!(r.dropped_node_down > 0, "loss window produced no node-down drops");
+        assert_eq!(r.dropped_queue_full, 0);
+        assert_eq!(
+            r.dropped_queue_full + r.dropped_node_down + r.dropped_slo_expired,
+            r.dropped
+        );
+    }
+
+    #[test]
+    fn deadline_reclassifies_late_drops_as_slo_expired() {
+        // Ten co-arriving requests on a 0.1 s/item server, 0.15 s
+        // deadline, node dark from 0.25 s. Two complete (0.1, 0.2);
+        // the eight victims drained at the window edge have been in
+        // the system 0.25 s — already SLO-dead, so they classify as
+        // slo-expired, not node-down. A fresh arrival at 0.3 s (age 0)
+        // dropped on delivery is the genuine node-down case.
+        let dep = Deployment::synthetic("slo-drop", &[0.1], 0);
+        let mut sc = Scenario::replay(vec![0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.3]);
+        sc.deadline_s = Some(0.15);
+        sc.node_loss.push(crate::sim::NodeLoss { platform: 0, from_s: 0.25, to_s: 10.0 });
+        let r = simulate(&dep, &cfg(1, 0, 64), &sc);
+        assert_eq!(r.pipeline.completed(), 2);
+        assert_eq!(r.dropped, 9);
+        assert_eq!(r.dropped_slo_expired, 8, "drained victims were past the deadline");
+        assert_eq!(r.dropped_node_down, 1, "fresh delivery into the window");
+        assert_eq!(r.dropped_queue_full, 0);
+        // Without the deadline the same nine drops are all node-down.
+        let mut bare = sc.clone();
+        bare.deadline_s = None;
+        let b = simulate(&dep, &cfg(1, 0, 64), &bare);
+        assert_eq!(b.dropped, 9);
+        assert_eq!(b.dropped_node_down, 9);
+        assert_eq!(b.dropped_slo_expired, 0);
+    }
+
+    #[test]
     fn chunked_stepping_matches_single_run() {
         // Driving the engine in 50 ms epochs (draining epoch stats at
         // every edge) must replay the exact event stream of the
@@ -1219,6 +1320,7 @@ mod tests {
             out.energy_j,
             out.events,
             sc.deadline_s,
+            out.drops,
         );
         assert_eq!(one.fingerprint(), rep.fingerprint(), "epoch stepping perturbed the run");
         assert_eq!(one.events, rep.events);

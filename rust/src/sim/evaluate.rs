@@ -33,8 +33,14 @@ pub struct RankedCandidate {
     pub p99_s: f64,
     /// Requests served successfully.
     pub completed: u64,
-    /// Requests shed at full queues.
+    /// Requests dropped, all causes (= the sum of the three splits).
     pub dropped: u64,
+    /// Drops shed at a full bounded queue (inside the deadline).
+    pub dropped_queue_full: u64,
+    /// Drops lost to a dark platform (inside the deadline).
+    pub dropped_node_down: u64,
+    /// Drops that were already past the SLO deadline when they died.
+    pub dropped_slo_expired: u64,
     /// Completions that missed the scenario deadline.
     pub slo_violations: u64,
     /// Total simulated energy (compute + wire).
@@ -86,6 +92,9 @@ pub fn evaluate_front(
             p99_s: r.pipeline.latency_percentile(99.0),
             completed: r.pipeline.completed() as u64,
             dropped: r.dropped,
+            dropped_queue_full: r.dropped_queue_full,
+            dropped_node_down: r.dropped_node_down,
+            dropped_slo_expired: r.dropped_slo_expired,
             slo_violations: r.slo_violations,
             energy_j: r.energy_j,
             fingerprint: r.fingerprint(),
@@ -178,6 +187,7 @@ mod tests {
             assign: None,
             violation: 0.0,
             violations: Vec::new(),
+            robustness: None,
         };
         let split = CandidateMetrics {
             positions: vec![4],
@@ -212,6 +222,7 @@ mod tests {
             assign: None,
             violation: 0.0,
             violations: Vec::new(),
+            robustness: None,
         };
         Exploration {
             model: "toy".into(),
@@ -219,6 +230,7 @@ mod tests {
             pareto: vec![2],
             nsga_front: vec![2],
             favorite: Some(2),
+            robust_favorite: None,
             timing: ExplorationTiming::default(),
         }
     }

@@ -41,6 +41,12 @@
 //!   [`FairnessPolicy`](crate::config::FairnessPolicy) deciding which
 //!   tenant a freed server picks up — the serving half of the joint
 //!   multi-tenant exploration (`explorer::JointExploration`);
+//! * the chaos harness ([`FaultEnsemble`], [`score_robustness`])
+//!   expands a seeded catalog of fault archetypes into an ensemble of
+//!   scenario variants and replays every serving candidate through all
+//!   of them, distilling worst-case / mean / CVaR tail goodput and
+//!   time-to-recover into a [`RobustnessReport`] that re-ranks the
+//!   front by degradation behaviour;
 //! * a stage with [`StageModel::replicas`] ` > 1` is a **replica bank**:
 //!   identical servers, each with its own bounded queue, batch timer and
 //!   link port, fed by the configured [`DispatchPolicy`] (round-robin or
@@ -59,6 +65,7 @@
 //! `par_map`, so `--jobs` never changes a single bit of the output.
 
 mod adaptive;
+mod chaos;
 mod engine;
 mod evaluate;
 mod scenario;
@@ -68,8 +75,12 @@ pub use adaptive::{
     candidate_pool, compare_adaptive, simulate_adaptive, simulate_adaptive_obs,
     AdaptiveComparison, AdaptiveReport, ControllerMode, Migration, PoolCandidate, PoolStage,
 };
+pub use chaos::{
+    chaos_base_scenario, compare_adaptive_ensemble, score_robustness, score_robustness_with,
+    EnsembleMember, FaultEnsemble, MemberScore, RobustnessReport, RobustnessScore,
+};
 pub use evaluate::{best_gain_over_single, evaluate_front, render_ranking, RankedCandidate};
-pub use scenario::{Arrivals, FaultWindow, NodeLoss, Scenario, Slowdown};
+pub use scenario::{windows_overlap, Arrivals, FaultWindow, NodeLoss, Scenario, Slowdown};
 pub use tenants::{
     evaluate_tenants, render_tenant_ranking, simulate_tenants, MultiSimReport, RankedJoint,
     TenantReport, TenantTraffic,
@@ -364,8 +375,22 @@ impl Default for SimCfg {
 pub struct SimReport {
     /// The coordinator-shaped run report (completions, wall, stages).
     pub pipeline: PipelineReport,
-    /// Requests dropped at a full queue (also `ok = false` completions).
+    /// Requests dropped, all causes (also `ok = false` completions).
+    /// Always equals the sum of the three `dropped_*` cause counters
+    /// (the conservation identity `tests` pin).
     pub dropped: u64,
+    /// Drops shed at a full bounded queue while the request was still
+    /// inside its deadline — the backpressure cause ("shedding").
+    pub dropped_queue_full: u64,
+    /// Drops on a dark platform (delivery to, or drain of, a replica
+    /// bank inside a node-loss window) while still inside the deadline
+    /// — the failure cause ("dying").
+    pub dropped_node_down: u64,
+    /// Drops of requests whose deadline had already expired at drop
+    /// time, regardless of mechanism — work that was dead on arrival
+    /// at the drop site. Structurally zero when the scenario has no
+    /// deadline.
+    pub dropped_slo_expired: u64,
     /// Completions that finished after the scenario's deadline.
     pub slo_violations: u64,
     /// Within-deadline completions per virtual second (= throughput
@@ -404,6 +429,9 @@ impl SimReport {
             h.write_u64(s.failures);
         }
         h.write_u64(self.dropped);
+        h.write_u64(self.dropped_queue_full);
+        h.write_u64(self.dropped_node_down);
+        h.write_u64(self.dropped_slo_expired);
         h.write_u64(self.slo_violations);
         h.write_f64(self.energy_j);
         h.write_u64(self.events);
@@ -416,9 +444,13 @@ impl SimReport {
         use crate::util::units::{fmt_energy_j, fmt_throughput};
         let mut out = self.pipeline.render();
         out.push_str(&format!(
-            "sim: {} events, {} dropped, {} SLO violations, goodput {}, energy {}\n",
+            "sim: {} events, {} dropped (queue-full {}, node-down {}, slo-expired {}), \
+             {} SLO violations, goodput {}, energy {}\n",
             self.events,
             self.dropped,
+            self.dropped_queue_full,
+            self.dropped_node_down,
+            self.dropped_slo_expired,
             self.slo_violations,
             fmt_throughput(self.goodput),
             fmt_energy_j(self.energy_j),

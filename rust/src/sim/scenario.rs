@@ -40,6 +40,13 @@ pub enum Arrivals {
 /// stage index: degradation follows the physical node, so it keeps
 /// affecting the same hardware after the adaptive controller swaps to
 /// a deployment that partitions the model differently.
+///
+/// **Composition rule:** overlapping windows on the same platform are
+/// legal and compose *multiplicatively* — a batch starting while `k`
+/// windows are open pays the product of their factors, independent of
+/// declaration order. Touching half-open windows (`[1, 2)` + `[2, 3)`)
+/// never compose: `to_s` is exclusive, so at `t = 2` only the second
+/// window applies.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Slowdown {
     /// Affected platform slot (matches `StageModel::platform`).
@@ -54,6 +61,12 @@ pub struct Slowdown {
 
 /// A transient link fault: transfer times are multiplied by `factor`
 /// for transfers starting in the half-open window `[from_s, to_s)`.
+///
+/// **Composition rule:** overlapping windows compose *multiplicatively*
+/// on the shared link, exactly like [`Slowdown`] windows on one
+/// platform — a transfer starting while `k` windows are open pays the
+/// product of their factors, independent of declaration order; touching
+/// half-open windows never compose.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FaultWindow {
     /// Window start (virtual seconds).
@@ -70,6 +83,11 @@ pub struct FaultWindow {
 /// addressed to it during the window are dropped on arrival. At
 /// `to_s` the node is back (half-open interval, like every other
 /// fault window).
+///
+/// Unlike [`Slowdown`]/[`FaultWindow`] factors, losses do **not**
+/// compose: two live windows on one platform would make the revival
+/// time ill-defined, so [`Scenario::validate`] rejects same-platform
+/// overlap (touching half-open windows remain legal).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct NodeLoss {
     /// Affected platform slot (matches `StageModel::platform`).
@@ -200,6 +218,35 @@ impl Scenario {
         .checked()
     }
 
+    /// Steady traffic under a representative fault cocktail — the base
+    /// scenario of the fault-ensemble harness (`sim::chaos`): platform
+    /// 0 slows 2.5x early, the link flaps twice (two short 8x windows)
+    /// mid-run, and platform 1's bank goes dark for `[0.55, 0.7)` of
+    /// the trace span. Every fault clears by 70% of the span, leaving a
+    /// fault-free tail for time-to-recover measurement. Needs at least
+    /// two platforms.
+    pub fn chaos(requests: usize, rate: f64) -> Self {
+        let span = requests as f64 / rate.max(1e-9);
+        Scenario {
+            name: "chaos".into(),
+            requests,
+            arrivals: Arrivals::Poisson { rate },
+            deadline_s: None,
+            slowdowns: vec![Slowdown {
+                platform: 0,
+                from_s: 0.10 * span,
+                to_s: 0.30 * span,
+                factor: 2.5,
+            }],
+            link_faults: vec![
+                FaultWindow { from_s: 0.35 * span, to_s: 0.40 * span, factor: 8.0 },
+                FaultWindow { from_s: 0.45 * span, to_s: 0.50 * span, factor: 8.0 },
+            ],
+            node_loss: vec![NodeLoss { platform: 1, from_s: 0.55 * span, to_s: 0.70 * span }],
+        }
+        .checked()
+    }
+
     /// Replay an explicit trace.
     pub fn replay(mut times_s: Vec<f64>) -> Self {
         times_s.sort_by(|a, b| a.partial_cmp(b).unwrap());
@@ -224,13 +271,14 @@ impl Scenario {
             "diurnal" => Self::diurnal(requests, 0.25 * rate, rate),
             "degraded" => Self::degraded(requests, rate),
             "failover" => Self::failover(requests, rate),
+            "chaos" => Self::chaos(requests, rate),
             _ => return None,
         })
     }
 
     /// Names accepted by [`Scenario::by_name`] (the CLI presets).
     pub fn builtin_names() -> &'static [&'static str] {
-        &["steady", "burst", "diurnal", "degraded", "failover"]
+        &["steady", "burst", "diurnal", "degraded", "failover", "chaos"]
     }
 
     /// Load from a TOML file (see `from_json` for the schema).
@@ -342,6 +390,16 @@ impl Scenario {
     /// load and on every preset constructor; callers that resolve a
     /// scenario against a concrete system should re-validate with
     /// `Some(platform_count)`.
+    ///
+    /// **Overlap rules**, uniform half-open semantics for every window
+    /// kind ([`windows_overlap`]): same-platform `[[node_loss]]`
+    /// windows must not overlap (losses don't compose — rejected);
+    /// same-platform `[[slowdown]]` and link `[[link_fault]]` windows
+    /// *may* overlap, because multiplicative factors compose
+    /// order-independently (the documented composition rule on
+    /// [`Slowdown`]/[`FaultWindow`]). Touching windows (`[1, 2)` +
+    /// `[2, 3)`) never count as overlapping for any kind: `to_s` is
+    /// exclusive, matching the engine's `in_window`.
     pub fn validate(&self, platforms: Option<usize>) -> Result<(), String> {
         let window = |what: &str, from: f64, to: f64| -> Result<(), String> {
             if !(from.is_finite() && from >= 0.0) {
@@ -403,11 +461,14 @@ impl Scenario {
         // drains the node once per window open, so two live windows on
         // one platform would compose silently into an ill-defined
         // revival time. Half-open semantics make touching windows
-        // (`[1, 2)` + `[2, 3)`) legal. Slowdowns still compose —
-        // multiplicative factors are well-defined, losses are not.
+        // (`[1, 2)` + `[2, 3)`) legal. Slowdown and link-fault windows
+        // still compose — multiplicative factors are well-defined,
+        // losses are not (see the struct-level composition rustdoc).
         for (i, a) in self.node_loss.iter().enumerate() {
             for (j, b) in self.node_loss.iter().enumerate().skip(i + 1) {
-                if a.platform == b.platform && a.from_s < b.to_s && b.from_s < a.to_s {
+                if a.platform == b.platform
+                    && windows_overlap(a.from_s, a.to_s, b.from_s, b.to_s)
+                {
                     return Err(format!(
                         "node_loss[{i}] and node_loss[{j}]: overlapping windows \
                          [{}, {}) and [{}, {}) on platform {}",
@@ -471,6 +532,17 @@ impl Scenario {
         debug_assert!(out.windows(2).all(|w| w[0] <= w[1]), "arrival trace unsorted");
         out
     }
+}
+
+/// True when the half-open windows `[a_from, a_to)` and `[b_from,
+/// b_to)` share at least one instant. Touching windows (`[1, 2)` +
+/// `[2, 3)`) do **not** overlap: `to` is exclusive, matching the
+/// engine's `in_window` — the one boundary rule every fault kind
+/// (slowdown, link fault, node loss) shares. The fault-ensemble
+/// generator (`sim::chaos`) reuses it to keep generated node-loss
+/// windows disjoint from the base scenario's.
+pub fn windows_overlap(a_from: f64, a_to: f64, b_from: f64, b_to: f64) -> bool {
+    a_from < b_to && b_from < a_to
 }
 
 fn positive(v: f64, what: &str) -> Result<f64, String> {
@@ -733,6 +805,65 @@ to_s = 9.0
             Slowdown { platform: 0, from_s: 2.0, to_s: 4.0, factor: 3.0 },
         ];
         assert!(sc.validate(None).is_ok());
+    }
+
+    #[test]
+    fn window_overlap_is_half_open_for_every_fault_kind() {
+        // The shared predicate: touching half-open windows never
+        // overlap; any shared instant does.
+        assert!(!windows_overlap(1.0, 2.0, 2.0, 3.0), "touching [1,2)+[2,3)");
+        assert!(!windows_overlap(2.0, 3.0, 1.0, 2.0), "order-independent adjacency");
+        assert!(windows_overlap(1.0, 3.0, 2.0, 4.0));
+        assert!(windows_overlap(1.0, 4.0, 2.0, 3.0), "containment overlaps");
+        assert!(!windows_overlap(1.0, 1.0, 0.0, 5.0), "empty [1,1) overlaps nothing");
+
+        // Adjacency composes to "legal" uniformly: touching windows of
+        // every kind validate, on the same platform / the shared link.
+        let mut sc = Scenario::steady(100, 1000.0);
+        sc.slowdowns = vec![
+            Slowdown { platform: 0, from_s: 1.0, to_s: 2.0, factor: 2.0 },
+            Slowdown { platform: 0, from_s: 2.0, to_s: 3.0, factor: 3.0 },
+        ];
+        sc.link_faults = vec![
+            FaultWindow { from_s: 4.0, to_s: 5.0, factor: 2.0 },
+            FaultWindow { from_s: 5.0, to_s: 6.0, factor: 2.0 },
+        ];
+        sc.node_loss = vec![
+            NodeLoss { platform: 1, from_s: 7.0, to_s: 8.0 },
+            NodeLoss { platform: 1, from_s: 8.0, to_s: 9.0 },
+        ];
+        assert!(sc.validate(None).is_ok(), "{:?}", sc.validate(None));
+
+        // Overlapping factor windows stay legal (they compose
+        // multiplicatively — the documented rule); overlapping losses
+        // on one platform stay rejected.
+        sc.slowdowns[1].from_s = 1.5;
+        sc.link_faults[1].from_s = 4.5;
+        assert!(sc.validate(None).is_ok());
+        sc.node_loss[1].from_s = 7.5;
+        assert!(sc.validate(None).unwrap_err().contains("overlapping"));
+    }
+
+    #[test]
+    fn chaos_preset_mixes_all_fault_kinds_and_clears_early() {
+        let sc = Scenario::by_name("chaos", 1000, 100.0).unwrap();
+        let span = 1000.0 / 100.0;
+        assert_eq!(sc.slowdowns.len(), 1);
+        assert_eq!(sc.link_faults.len(), 2, "link flap = two windows");
+        assert_eq!(sc.node_loss.len(), 1);
+        assert_eq!(sc.node_loss[0].platform, 1, "loss hits the second slot");
+        // Every fault clears by 70% of the span: the recovery tail the
+        // time-to-recover metric measures against.
+        let last_clear = sc
+            .slowdowns
+            .iter()
+            .map(|w| w.to_s)
+            .chain(sc.link_faults.iter().map(|w| w.to_s))
+            .chain(sc.node_loss.iter().map(|w| w.to_s))
+            .fold(0.0f64, f64::max);
+        assert!(last_clear <= 0.7 * span + 1e-9, "faults clear at {last_clear}");
+        assert!(sc.validate(Some(2)).is_ok());
+        assert!(Scenario::builtin_names().contains(&"chaos"));
     }
 
     #[test]

@@ -43,6 +43,7 @@ fn single(platform: usize, label: &str, lat: f64) -> CandidateMetrics {
         assign: None,
         violation: 0.0,
         violations: Vec::new(),
+        robustness: None,
     }
 }
 
@@ -80,6 +81,7 @@ fn toy_exploration() -> Exploration {
         assign: None,
         violation: 0.0,
         violations: Vec::new(),
+        robustness: None,
     };
     Exploration {
         model: "toy".into(),
@@ -87,6 +89,7 @@ fn toy_exploration() -> Exploration {
         pareto: vec![2],
         nsga_front: vec![2],
         favorite: Some(2),
+        robust_favorite: None,
         timing: ExplorationTiming::default(),
     }
 }

@@ -1,0 +1,197 @@
+//! Fault-ensemble robustness gate (PR 10 acceptance): the chaos
+//! harness must be a pure function of `(exploration, base scenario,
+//! chaos config, seed)` — bit-identical across `--jobs` values and
+//! reruns — and its scoring must degrade gracefully at the edges: an
+//! empty ensemble reduces every aggregate to the plain simulation, a
+//! fault-free member recovers in zero epochs with the exact baseline
+//! fingerprint (the epoch-stepped engine replays the one-shot event
+//! stream), CVaR tightens monotonically in `q`, and re-ranking is a
+//! permutation of the serving set — it never drops a Pareto member.
+
+use partir::config::{AdaptiveCfg, ChaosCfg, SystemConfig};
+use partir::explorer::{Exploration, ExploreRequest};
+use partir::sim::{
+    chaos_base_scenario, compare_adaptive_ensemble, score_robustness, score_robustness_with,
+    simulate, Deployment, EnsembleMember, FaultEnsemble, SimCfg,
+};
+use partir::util::hash::Fnv64;
+use partir::zoo;
+
+fn quick_sys() -> SystemConfig {
+    let mut sys = SystemConfig::paper_two_platform();
+    sys.search.victory = 10;
+    sys.search.max_samples = 100;
+    sys
+}
+
+fn quick_ex(sys: &SystemConfig) -> Exploration {
+    ExploreRequest::chain().run(&zoo::tiny_cnn(10), sys)
+}
+
+/// Small ensembles over short traces: the gate is about determinism and
+/// ordering, not statistical power.
+fn ccfg(ensemble: usize) -> ChaosCfg {
+    ChaosCfg { ensemble, requests: 3000, ..ChaosCfg::default() }
+}
+
+#[test]
+fn scoring_is_bit_identical_across_jobs_and_reruns() {
+    let sys = quick_sys();
+    let ex = quick_ex(&sys);
+    let base = chaos_base_scenario(&ex, &ccfg(6));
+    let cfg = SimCfg { seed: 11, ..Default::default() };
+    // Generation first: per-member streams make the expansion a pure
+    // function of (base, ccfg, platforms, seed).
+    let a = FaultEnsemble::generate(&base, &ccfg(6), sys.platforms.len(), cfg.seed);
+    let b = FaultEnsemble::generate(&base, &ccfg(6), sys.platforms.len(), cfg.seed);
+    assert_eq!(a, b, "ensemble generation must be rerun-stable");
+    // Then the full report, across the worker grid and a rerun.
+    let fps: Vec<u64> = [1usize, 2, 4]
+        .iter()
+        .map(|&j| score_robustness(&ex, &sys, &base, &cfg, &ccfg(6), j).fingerprint())
+        .collect();
+    assert_eq!(fps[0], fps[1], "jobs=2 moved the robustness report");
+    assert_eq!(fps[0], fps[2], "jobs=4 moved the robustness report");
+    let again = score_robustness(&ex, &sys, &base, &cfg, &ccfg(6), 1).fingerprint();
+    assert_eq!(fps[0], again, "rerun moved the robustness report");
+}
+
+#[test]
+fn empty_ensemble_reduces_to_the_plain_simulation() {
+    let sys = quick_sys();
+    let ex = quick_ex(&sys);
+    let base = chaos_base_scenario(&ex, &ccfg(0));
+    let cfg = SimCfg { seed: 3, ..Default::default() };
+    let rep = score_robustness(&ex, &sys, &base, &cfg, &ccfg(0), 2);
+    assert_eq!(rep.scores.len(), ex.serving_candidates().len());
+    assert!(rep.robust_favorite.is_some(), "the no-op report still picks a favorite");
+    for s in &rep.scores {
+        // Every aggregate collapses onto the fault-free baseline …
+        assert_eq!(s.worst_goodput.to_bits(), s.baseline_goodput.to_bits());
+        assert_eq!(s.mean_goodput.to_bits(), s.baseline_goodput.to_bits());
+        assert_eq!(s.cvar_goodput.to_bits(), s.baseline_goodput.to_bits());
+        assert_eq!(s.ttr_epochs, 0);
+        assert!(s.members.is_empty());
+        // … and the baseline IS the plain simulation, bit for bit.
+        let dep = Deployment::from_candidate(&ex.candidates[s.candidate], &sys);
+        let plain = simulate(&dep, &cfg, &base);
+        assert_eq!(
+            s.baseline_fingerprint,
+            plain.fingerprint(),
+            "candidate '{}' baseline diverged from simulate()",
+            s.label
+        );
+    }
+}
+
+#[test]
+fn fault_free_members_recover_in_zero_epochs_with_the_baseline_fingerprint() {
+    let sys = quick_sys();
+    let ex = quick_ex(&sys);
+    let base = chaos_base_scenario(&ex, &ccfg(0));
+    let cfg = SimCfg { seed: 5, ..Default::default() };
+    // One hand-built member with no fault windows at all: TTR is 0 by
+    // definition, and the epoch-stepped run must replay the one-shot
+    // event stream exactly (the engine's chunked-stepping identity).
+    let ensemble = FaultEnsemble {
+        members: vec![EnsembleMember { id: 0, label: "clean".into(), scenario: base.clone() }],
+    };
+    let rep = score_robustness_with(&ex, &sys, &base, &ensemble, &cfg, &ccfg(0), 2);
+    for s in &rep.scores {
+        assert_eq!(s.ttr_epochs, 0, "fault-free member must not need recovery");
+        for m in &s.members {
+            assert_eq!(m.recovery_epochs, 0);
+            assert_eq!(m.goodput.to_bits(), s.baseline_goodput.to_bits());
+            assert_eq!(
+                m.fingerprint, s.baseline_fingerprint,
+                "epoch-stepped member run diverged from the one-shot baseline"
+            );
+        }
+    }
+}
+
+#[test]
+fn cvar_is_monotone_in_q_and_bounded_by_worst_and_mean() {
+    let sys = quick_sys();
+    let ex = quick_ex(&sys);
+    let base = chaos_base_scenario(&ex, &ccfg(8));
+    let cfg = SimCfg { seed: 17, ..Default::default() };
+    let at_q = |q: f64| {
+        let c = ChaosCfg { cvar_q: q, ..ccfg(8) };
+        score_robustness(&ex, &sys, &base, &cfg, &c, 2)
+    };
+    let (q25, q50, q100) = (at_q(0.25), at_q(0.5), at_q(1.0));
+    for s in &q25.scores {
+        assert!(s.worst_goodput <= s.cvar_goodput, "{}: worst above CVaR", s.label);
+        assert!(s.cvar_goodput <= s.mean_goodput, "{}: CVaR above mean", s.label);
+        let s50 = q50.score_of(s.candidate).unwrap();
+        let s100 = q100.score_of(s.candidate).unwrap();
+        // Averaging over a larger tail can only raise the estimate.
+        assert!(s.cvar_goodput <= s50.cvar_goodput, "{}: CVaR fell from q=.25 to .5", s.label);
+        assert!(s50.cvar_goodput <= s100.cvar_goodput, "{}: CVaR fell from q=.5 to 1", s.label);
+        // CVaR over the whole ensemble IS the mean.
+        assert_eq!(s100.cvar_goodput.to_bits(), s100.mean_goodput.to_bits());
+        // q only changes the aggregation, never the member runs.
+        assert_eq!(s.worst_goodput.to_bits(), s100.worst_goodput.to_bits());
+        assert_eq!(s.ttr_epochs, s100.ttr_epochs);
+    }
+}
+
+#[test]
+fn chaos_request_reranks_without_dropping_serving_candidates() {
+    let sys = quick_sys();
+    let g = zoo::tiny_cnn(10);
+    let plain = ExploreRequest::chain().run(&g, &sys);
+    let chaotic = ExploreRequest::chain()
+        .chaos(ChaosCfg { ensemble: 4, requests: 2000, ..ChaosCfg::default() })
+        .run(&g, &sys);
+    // The chaos stage is additive: fronts and favorite are untouched.
+    assert_eq!(plain.pareto, chaotic.pareto);
+    assert_eq!(plain.nsga_front, chaotic.nsga_front);
+    assert_eq!(plain.favorite, chaotic.favorite);
+    assert_eq!(plain.robust_favorite, None);
+    // Re-ranking covers the full serving set — a permutation, not a
+    // filter — so every Pareto member keeps a robustness score.
+    let serving = chaotic.serving_candidates();
+    let rf = chaotic.robust_favorite.expect("chaos run must surface a robust favorite");
+    assert!(serving.contains(&rf), "robust favorite left the serving set");
+    for &i in &serving {
+        assert!(
+            chaotic.candidates[i].robustness.is_some(),
+            "serving candidate '{}' lost its score",
+            chaotic.candidates[i].label
+        );
+    }
+    for &p in &chaotic.pareto {
+        assert!(serving.contains(&p), "Pareto member {p} dropped from the serving set");
+    }
+    for (i, c) in chaotic.candidates.iter().enumerate() {
+        if !serving.contains(&i) {
+            assert!(c.robustness.is_none(), "non-serving candidate '{}' scored", c.label);
+        }
+    }
+}
+
+#[test]
+fn adaptive_ensemble_comparison_is_bit_identical_across_jobs() {
+    let sys = quick_sys();
+    let ex = quick_ex(&sys);
+    let base = chaos_base_scenario(&ex, &ChaosCfg { requests: 4000, ..ChaosCfg::default() });
+    let cfg = SimCfg { seed: 9, ..Default::default() };
+    let ensemble = FaultEnsemble::generate(&base, &ccfg(4), sys.platforms.len(), cfg.seed);
+    let acfg = AdaptiveCfg::default();
+    let fp = |jobs: usize| {
+        let cmps = compare_adaptive_ensemble(&ex, &sys, &ensemble, &cfg, &acfg, jobs);
+        assert_eq!(cmps.len(), ensemble.members.len());
+        let mut h = Fnv64::new();
+        for c in &cmps {
+            h.write_u64(c.static_report.fingerprint());
+            h.write_u64(c.adaptive.fingerprint());
+            h.write_u64(c.oracle.fingerprint());
+        }
+        h.finish()
+    };
+    let one = fp(1);
+    assert_eq!(one, fp(2), "jobs=2 moved the adaptive ensemble comparison");
+    assert_eq!(one, fp(4), "jobs=4 moved the adaptive ensemble comparison");
+}

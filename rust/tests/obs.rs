@@ -66,6 +66,7 @@ fn single(platform: usize, label: &str, lat: f64) -> CandidateMetrics {
         assign: None,
         violation: 0.0,
         violations: Vec::new(),
+        robustness: None,
     }
 }
 
@@ -103,6 +104,7 @@ fn toy_exploration() -> Exploration {
         assign: None,
         violation: 0.0,
         violations: Vec::new(),
+        robustness: None,
     };
     Exploration {
         model: "toy".into(),
@@ -110,6 +112,7 @@ fn toy_exploration() -> Exploration {
         pareto: vec![2],
         nsga_front: vec![2],
         favorite: Some(2),
+        robust_favorite: None,
         timing: ExplorationTiming::default(),
     }
 }
